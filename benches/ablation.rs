@@ -1,0 +1,96 @@
+//! Bench: ablations of the design choices DESIGN.md §9 calls out.
+//!
+//!  A. Schedule strength — the paper's quoted β(T)=0.5 vs our β(T)=12:
+//!     quantifies the prior-mismatch error the deviation fixes.
+//!  B. Integrator order — Euler vs Heun vs RK4 on the probability-flow
+//!     ODE at equal *network-evaluation* budget (the digital baseline's
+//!     real cost unit).
+//!  C. State clamp — solver substep budget sensitivity (continuity check).
+
+use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::{sample_circle, Meta};
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::sampler::{DigitalSampler, SamplerKind, SamplerMode};
+use memdiff::diffusion::VpSchedule;
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::util::bench;
+use memdiff::util::rng::Rng;
+use memdiff::util::stats;
+
+const N: usize = 1500;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load_default()?;
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json"))?;
+    let mut rng = Rng::new(111);
+    let mut truth_rng = Rng::new(112);
+    let truth = sample_circle(40_000, &mut truth_rng);
+    let dig = DigitalScoreNet::new(w.clone());
+
+    bench::section("A. schedule strength (DESIGN.md §9.1)");
+    bench::row(&["schedule", "alpha(T)", "KL (SDE-256, trained-net where applicable)"]);
+    // our schedule, trained net
+    let s = DigitalSampler::new(&dig, SamplerMode::Sde).with_schedule(meta.sched);
+    let (pts, _) = s.sample_batch(N, &[], 256, &mut rng);
+    bench::row(&["beta_max=12 (ours)",
+                 &format!("{:.3}", meta.sched.alpha(meta.sched.t_end)),
+                 &format!("{:.4}", stats::kl_points(&pts, &truth, 24, 2.0))]);
+    // paper-quoted schedule with the same net: the prior mismatch dominates —
+    // the net was trained for the strong schedule, so also report the
+    // theoretical floor: sampling the quoted forward process itself.
+    let quoted = VpSchedule::paper_quoted();
+    let s = DigitalSampler::new(&dig, SamplerMode::Sde).with_schedule(quoted);
+    let (pts, _) = s.sample_batch(N, &[], 256, &mut rng);
+    bench::row(&["beta_max=0.5 (paper quoted), same net",
+                 &format!("{:.3}", quoted.alpha(quoted.t_end)),
+                 &format!("{:.4}", stats::kl_points(&pts, &truth, 24, 2.0))]);
+    // theoretical prior mismatch of the quoted schedule: forward-diffuse the
+    // data to T and compare against N(0,I) — the best any reverse process
+    // started from N(0,I) could do is bounded by this gap
+    let a = quoted.alpha(quoted.t_end) as f32;
+    let sg = quoted.sigma(quoted.t_end) as f32;
+    let fwd: Vec<f32> = sample_circle(N, &mut rng)
+        .iter()
+        .map(|&v| a * v) // scale data
+        .collect::<Vec<f32>>()
+        .chunks_exact(2)
+        .flat_map(|p| [p[0] + sg * rng.gaussian_f32(), p[1] + sg * rng.gaussian_f32()])
+        .collect();
+    let prior: Vec<f32> = rng.gaussian_vec(2 * N);
+    bench::row(&["quoted-schedule terminal vs N(0,I) (prior gap)",
+                 "-",
+                 &format!("{:.4}", stats::kl_points(&prior, &fwd, 24, 3.0))]);
+
+    bench::section("B. integrator order at equal network-eval budget (ODE)");
+    bench::row(&["scheme", "steps", "net evals", "KL"]);
+    for (kind, steps, evals) in [(SamplerKind::Euler, 32usize, 32usize),
+                                 (SamplerKind::Heun, 16, 32),
+                                 (SamplerKind::Rk4, 8, 32),
+                                 (SamplerKind::Euler, 128, 128),
+                                 (SamplerKind::Heun, 64, 128),
+                                 (SamplerKind::Rk4, 32, 128)] {
+        let s = DigitalSampler::new(&dig, SamplerMode::Ode)
+            .with_schedule(meta.sched)
+            .with_kind(kind);
+        let (pts, used) = s.sample_batch(N, &[], steps, &mut rng);
+        assert_eq!(used, N * evals);
+        bench::row(&[&format!("{kind:?}"), &steps.to_string(), &evals.to_string(),
+                     &format!("{:.4}", stats::kl_points(&pts, &truth, 24, 2.0))]);
+    }
+
+    bench::section("C. analog solver substep-budget sensitivity");
+    let net = AnalogScoreNet::from_conductances(
+        &w, CellParams::default(), NoiseModel::ReadFast);
+    bench::row(&["substeps", "KL (SDE)"]);
+    for sub in [250usize, 500, 1000, 2000, 4000] {
+        let solver = AnalogSolver::new(&net, SolverConfig::new(SolverMode::Sde)
+            .with_schedule(meta.sched).with_substeps(sub));
+        let gen = solver.solve_batch(N, &[], &mut rng);
+        bench::row(&[&sub.to_string(),
+                     &format!("{:.4}", stats::kl_points(&gen, &truth, 24, 2.0))]);
+    }
+    println!("\n(The plateau across substeps confirms the simulation grid is not");
+    println!("a hidden discretization: the hardware's continuous loop is resolved.)");
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Bench: Fig. 2 — device-level figures of merit as measurable rows, plus
+//! timing of the device simulator's primitive operations.
+
+use memdiff::device::{Cell, Macro};
+use memdiff::util::bench;
+use memdiff::util::rng::Rng;
+use memdiff::util::stats;
+use memdiff::util::tensor::Mat;
+
+fn main() {
+    let mut rng = Rng::new(81);
+
+    bench::section("Fig 2c: 200-cycle IV repeatability");
+    let up: Vec<f32> = (0..60).map(|i| 1.5 * i as f32 / 59.0).collect();
+    let dn: Vec<f32> = (0..60).map(|i| -1.5 * i as f32 / 59.0).collect();
+    let mut cell = Cell::with_default(0.02);
+    let mut finals = Vec::new();
+    for _ in 0..200 {
+        let _ = cell.iv_sweep(&up, &mut rng);
+        finals.push(cell.conductance());
+        let _ = cell.iv_sweep(&dn, &mut rng);
+    }
+    bench::row(&["post-SET conductance",
+                 &format!("{:.4} ± {:.4} mS (CV {:.1}%)",
+                          stats::mean(&finals), stats::std(&finals),
+                          100.0 * stats::std(&finals) / stats::mean(&finals))]);
+
+    bench::section("Fig 2d: programmed-state discernibility");
+    let mut overlaps = 0;
+    let mut prev_hi = f32::MIN;
+    for k in 0..64 {
+        let mut c = Cell::with_default(0.05);
+        c.program_verify(Cell::level_conductance(k), 0.0005, 2000, &mut rng);
+        let reads: Vec<f32> = (0..200).map(|_| c.read(&mut rng)).collect();
+        let (m, s) = (stats::mean(&reads) as f32, stats::std(&reads) as f32);
+        if m - 2.0 * s < prev_hi {
+            overlaps += 1;
+        }
+        prev_hi = m + 2.0 * s;
+    }
+    bench::row(&["levels with 2-sigma overlap", &format!("{overlaps}/64")]);
+
+    bench::section("Fig 2f/2g: array programming + error stats");
+    let mut array = Macro::new(32, 32);
+    let pattern = Macro::moon_star_pattern(32);
+    let st = array.program(&pattern, 0.0015, 500, &mut rng);
+    bench::row(&["mean pulses/cell", &format!("{:.1}", st.mean_pulses())]);
+    bench::row(&["program failures", &st.failures.to_string()]);
+    let read = array.read_all(&mut rng);
+    let errs: Vec<f32> = read.as_slice().iter().zip(pattern.as_slice())
+        .map(|(r, t)| 100.0 * (r - t) / t).collect();
+    bench::row(&["relative error", &format!("{:+.3}% ± {:.3}%",
+                                            stats::mean(&errs), stats::std(&errs))]);
+
+    bench::section("device-simulator primitive timings");
+    let c = Cell::with_default(0.06);
+    let r1 = bench::bench("cell.read", 200, || {
+        std::hint::black_box(c.read(&mut rng));
+    });
+    bench::report(&r1);
+    let mut c2 = Cell::with_default(0.05);
+    let r2 = bench::bench("cell.program_verify (tol 1.5e-3)", 300, || {
+        c2 = Cell::with_default(0.05);
+        std::hint::black_box(c2.program_verify(0.08, 0.0015, 500, &mut rng));
+    });
+    bench::report(&r2);
+    let v = vec![0.3f32; 32];
+    let mut out = vec![0.0f32; 32];
+    let r3 = bench::bench("macro.mvm 32x32 (per-cell noise)", 300, || {
+        array.mvm(&v, &mut out, &mut rng);
+        std::hint::black_box(&out);
+    });
+    bench::report(&r3);
+    let r4 = bench::bench("macro.program 32x32", 500, || {
+        let mut m = Macro::new(32, 32);
+        std::hint::black_box(m.program(&Mat::full(32, 32, 0.06), 0.0015, 500, &mut rng));
+    });
+    bench::report(&r4);
+}

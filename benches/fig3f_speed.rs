@@ -1,0 +1,67 @@
+//! Bench: Fig. 3f — unconditional generation speed, analog vs digital at
+//! matched quality.
+//!
+//! Sweeps the digital sampler's step count, measures generation KL per
+//! point, finds the matched-quality crossover against the analog solver,
+//! and prints the speed comparison row the paper reports (64.8×).
+
+use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::{sample_circle, Meta};
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::sampler::{DigitalSampler, SamplerMode};
+use memdiff::energy::model::{AnalogCost, Comparison, DigitalCost};
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::util::bench;
+use memdiff::util::rng::Rng;
+use memdiff::util::stats;
+
+const N: usize = 1500;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load_default()?;
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json"))?;
+    let mut rng = Rng::new(31);
+    let mut truth_rng = Rng::new(32);
+    let truth = sample_circle(40_000, &mut truth_rng);
+
+    bench::section("Fig 3f: unconditional sampling speed at matched quality");
+
+    // analog reference quality
+    let net = AnalogScoreNet::from_conductances(
+        &w, CellParams::default(), NoiseModel::ReadFast);
+    let solver = AnalogSolver::new(&net, SolverConfig::new(SolverMode::Sde)
+        .with_schedule(meta.sched).with_substeps(1500));
+    let t0 = std::time::Instant::now();
+    let gen = solver.solve_batch(N, &[], &mut rng);
+    let analog_sim_wall = t0.elapsed();
+    let kl_analog = stats::kl_points(&gen, &truth, 24, 2.0);
+    bench::row(&["analog SDE (continuous)", &format!("KL={kl_analog:.4}"),
+                 &format!("sim wall {analog_sim_wall:?} for {N}")]);
+
+    // digital sweep
+    let dig = DigitalScoreNet::new(w.clone());
+    let sampler = DigitalSampler::new(&dig, SamplerMode::Sde).with_schedule(meta.sched);
+    let mut matched = None;
+    bench::row(&["steps", "KL(digital SDE)", "modeled latency/sample"]);
+    for steps in [4usize, 8, 16, 32, 64, 96, 128, 192, 256, 384, 512] {
+        let (pts, _) = sampler.sample_batch(N, &[], steps, &mut rng);
+        let kl = stats::kl_points(&pts, &truth, 24, 2.0);
+        let lat = DigitalCost::new(steps, 1).latency_s();
+        bench::row(&[&format!("{steps:5}"), &format!("{kl:.4}"),
+                     &format!("{:.1} us", 1e6 * lat)]);
+        if matched.is_none() && kl <= kl_analog * 1.05 {
+            matched = Some(steps);
+        }
+    }
+    let steps = matched.unwrap_or(512);
+    let c = Comparison::of(&AnalogCost::unconditional_projected(),
+                           &DigitalCost::new(steps, 1));
+    println!();
+    bench::row(&["matched-quality steps", &steps.to_string()]);
+    bench::row(&["analog latency/sample",
+                 &format!("{:.1} us (paper: 20 us)", 1e6 * c.analog_latency_s)]);
+    bench::row(&["digital latency/sample", &format!("{:.1} us", 1e6 * c.digital_latency_s)]);
+    bench::row(&["SPEEDUP", &format!("{:.1}x  (paper Fig 3f: 64.8x)", c.speedup)]);
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Bench: Fig. 3g — unconditional generation energy, analog vs digital.
+//!
+//! Uses the same matched-quality crossover search as fig3f and prints the
+//! per-sample energy comparison (paper: 7.2 µJ analog, −80.8% vs digital),
+//! plus the component breakdown of the analog power model.
+
+use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::{sample_circle, Meta};
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::sampler::{DigitalSampler, SamplerMode};
+use memdiff::energy::model::{
+    AnalogCost, Comparison, DigitalCost, P_CELL_W, P_DAC_W, P_MULT_W, P_OPAMP_W,
+};
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::util::bench;
+use memdiff::util::rng::Rng;
+use memdiff::util::stats;
+
+const N: usize = 1500;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load_default()?;
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json"))?;
+    let mut rng = Rng::new(41);
+    let mut truth_rng = Rng::new(42);
+    let truth = sample_circle(40_000, &mut truth_rng);
+
+    bench::section("Fig 3g: unconditional sampling energy at matched quality");
+
+    let a = AnalogCost::unconditional_projected();
+    bench::row(&["analog power breakdown:"]);
+    bench::row(&[&format!("  crossbar cells ({})", a.n_cells),
+                 &format!("{:.3} mW", 1e3 * a.n_cells as f64 * P_CELL_W)]);
+    bench::row(&[&format!("  op-amps ({})", a.n_opamps),
+                 &format!("{:.1} mW", 1e3 * a.n_opamps as f64 * P_OPAMP_W)]);
+    bench::row(&[&format!("  multipliers ({})", a.n_mults),
+                 &format!("{:.1} mW", 1e3 * a.n_mults as f64 * P_MULT_W)]);
+    bench::row(&[&format!("  DACs ({})", a.n_dacs),
+                 &format!("{:.1} mW", 1e3 * a.n_dacs as f64 * P_DAC_W)]);
+    bench::row(&["  total", &format!("{:.1} mW", 1e3 * a.power_w())]);
+    bench::row(&["analog energy/sample",
+                 &format!("{:.2} uJ (paper: 7.2 uJ)", 1e6 * a.energy_j())]);
+
+    // matched-quality crossover (same procedure as fig3f)
+    let net = AnalogScoreNet::from_conductances(
+        &w, CellParams::default(), NoiseModel::ReadFast);
+    let solver = AnalogSolver::new(&net, SolverConfig::new(SolverMode::Sde)
+        .with_schedule(meta.sched).with_substeps(1500));
+    let kl_analog = stats::kl_points(&solver.solve_batch(N, &[], &mut rng),
+                                     &truth, 24, 2.0);
+    let dig = DigitalScoreNet::new(w.clone());
+    let sampler = DigitalSampler::new(&dig, SamplerMode::Sde).with_schedule(meta.sched);
+    let mut matched = 512usize;
+    for steps in [4usize, 8, 16, 32, 64, 96, 128, 192, 256, 384, 512] {
+        let (pts, _) = sampler.sample_batch(N, &[], steps, &mut rng);
+        if stats::kl_points(&pts, &truth, 24, 2.0) <= kl_analog * 1.05 {
+            matched = steps;
+            break;
+        }
+    }
+    let d = DigitalCost::new(matched, 1);
+    bench::row(&["digital energy/sample",
+                 &format!("{:.2} uJ at {matched} steps", 1e6 * d.energy_j())]);
+    let c = Comparison::of(&a, &d);
+    bench::row(&["ENERGY REDUCTION",
+                 &format!("{:.1}%  (paper Fig 3g: 80.8%)", c.energy_reduction_pct)]);
+    Ok(())
+}

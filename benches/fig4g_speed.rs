@@ -1,0 +1,84 @@
+//! Bench: Fig. 4g — conditional (classifier-free guidance) generation
+//! speed, analog vs digital at matched quality (paper: 156.5×).
+//!
+//! Quality metric (paper framing: "equivalent generative quality to the
+//! software baseline"): worst-class KL of generated latents against a
+//! converged 512-step digital reference at the same guidance strength.
+
+use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::Meta;
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::sampler::{DigitalSampler, SamplerMode};
+use memdiff::energy::model::{AnalogCost, Comparison, DigitalCost};
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::util::bench;
+use memdiff::util::rng::Rng;
+use memdiff::util::stats;
+
+const N_PER_CLASS: usize = 500;
+const GUIDANCE: f32 = 2.0;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load_default()?;
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_cond.json"))?;
+    let mut rng = Rng::new(51);
+    let dig = DigitalScoreNet::new(w.clone());
+
+    bench::section("Fig 4g: conditional sampling speed at matched quality (CFG)");
+
+    // converged software-baseline reference per class (512 steps, same λ)
+    let mut references: Vec<Vec<f32>> = Vec::new();
+    for c in 0..3 {
+        let mut onehot = [0.0f32; 3];
+        onehot[c] = 1.0;
+        let sampler = DigitalSampler::new(&dig, SamplerMode::Sde)
+            .with_schedule(meta.sched)
+            .with_guidance(GUIDANCE);
+        let (pts, _) = sampler.sample_batch(4 * N_PER_CLASS, &onehot, 512, &mut rng);
+        references.push(pts);
+    }
+
+    // analog quality vs that reference
+    let net = AnalogScoreNet::from_conductances(
+        &w, CellParams::default(), NoiseModel::ReadFast);
+    let mut kl_analog: f64 = 0.0;
+    for c in 0..3 {
+        let mut onehot = [0.0f32; 3];
+        onehot[c] = 1.0;
+        let solver = AnalogSolver::new(&net, SolverConfig::new(SolverMode::Sde)
+            .with_schedule(meta.sched).with_substeps(4000).with_guidance(GUIDANCE));
+        let gen = solver.solve_batch(N_PER_CLASS, &onehot, &mut rng);
+        kl_analog = kl_analog.max(stats::kl_points(&gen, &references[c], 20, 3.0));
+    }
+    bench::row(&["analog SDE+CFG", &format!("worst-class KL vs baseline = {kl_analog:.4}")]);
+
+    // digital sweep (2 net evals per step for CFG)
+    let mut matched = None;
+    bench::row(&["steps", "worst-class KL", "modeled latency/sample"]);
+    for steps in [4usize, 8, 16, 32, 64, 96, 128, 192, 256] {
+        let mut worst: f64 = 0.0;
+        for c in 0..3 {
+            let mut onehot = [0.0f32; 3];
+            onehot[c] = 1.0;
+            let sampler = DigitalSampler::new(&dig, SamplerMode::Sde)
+                .with_schedule(meta.sched)
+                .with_guidance(GUIDANCE);
+            let (pts, _) = sampler.sample_batch(N_PER_CLASS, &onehot, steps, &mut rng);
+            worst = worst.max(stats::kl_points(&pts, &references[c], 20, 3.0));
+        }
+        let lat = DigitalCost::new(steps, 2).latency_s();
+        bench::row(&[&format!("{steps:5}"), &format!("{worst:.4}"),
+                     &format!("{:.1} us", 1e6 * lat)]);
+        if matched.is_none() && worst <= kl_analog * 1.05 {
+            matched = Some(steps);
+        }
+    }
+    let steps = matched.unwrap_or(256);
+    let c = Comparison::of(&AnalogCost::conditional_projected(),
+                           &DigitalCost::new(steps, 2));
+    println!();
+    bench::row(&["matched-quality steps", &format!("{steps} (x2 CFG evals)")]);
+    bench::row(&["SPEEDUP", &format!("{:.1}x  (paper Fig 4g: 156.5x)", c.speedup)]);
+    Ok(())
+}

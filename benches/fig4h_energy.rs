@@ -1,0 +1,81 @@
+//! Bench: Fig. 4h — conditional generation energy, analog vs digital
+//! (paper: −75.6%).  Same matched-quality crossover as fig4g (KL vs the
+//! converged 512-step software baseline per class).
+
+use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::Meta;
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::sampler::{DigitalSampler, SamplerMode};
+use memdiff::energy::model::{AnalogCost, Comparison, DigitalCost};
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::util::bench;
+use memdiff::util::rng::Rng;
+use memdiff::util::stats;
+
+const N_PER_CLASS: usize = 500;
+const GUIDANCE: f32 = 2.0;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load_default()?;
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_cond.json"))?;
+    let mut rng = Rng::new(61);
+    let dig = DigitalScoreNet::new(w.clone());
+
+    bench::section("Fig 4h: conditional sampling energy at matched quality");
+    let a = AnalogCost::conditional_projected();
+    bench::row(&["analog power (CFG: dual score path)",
+                 &format!("{:.1} mW", 1e3 * a.power_w())]);
+    bench::row(&["analog energy/sample", &format!("{:.2} uJ", 1e6 * a.energy_j())]);
+
+    // converged baseline references
+    let mut references: Vec<Vec<f32>> = Vec::new();
+    for c in 0..3 {
+        let mut onehot = [0.0f32; 3];
+        onehot[c] = 1.0;
+        let sampler = DigitalSampler::new(&dig, SamplerMode::Sde)
+            .with_schedule(meta.sched)
+            .with_guidance(GUIDANCE);
+        let (pts, _) = sampler.sample_batch(4 * N_PER_CLASS, &onehot, 512, &mut rng);
+        references.push(pts);
+    }
+
+    // analog quality
+    let net = AnalogScoreNet::from_conductances(
+        &w, CellParams::default(), NoiseModel::ReadFast);
+    let mut kl_analog: f64 = 0.0;
+    for c in 0..3 {
+        let mut onehot = [0.0f32; 3];
+        onehot[c] = 1.0;
+        let solver = AnalogSolver::new(&net, SolverConfig::new(SolverMode::Sde)
+            .with_schedule(meta.sched).with_substeps(4000).with_guidance(GUIDANCE));
+        let gen = solver.solve_batch(N_PER_CLASS, &onehot, &mut rng);
+        kl_analog = kl_analog.max(stats::kl_points(&gen, &references[c], 20, 3.0));
+    }
+
+    // crossover
+    let mut matched = 256usize;
+    'outer: for steps in [4usize, 8, 16, 32, 64, 96, 128, 192, 256] {
+        let mut worst: f64 = 0.0;
+        for c in 0..3 {
+            let mut onehot = [0.0f32; 3];
+            onehot[c] = 1.0;
+            let sampler = DigitalSampler::new(&dig, SamplerMode::Sde)
+                .with_schedule(meta.sched)
+                .with_guidance(GUIDANCE);
+            let (pts, _) = sampler.sample_batch(N_PER_CLASS, &onehot, steps, &mut rng);
+            worst = worst.max(stats::kl_points(&pts, &references[c], 20, 3.0));
+        }
+        if worst <= kl_analog * 1.05 {
+            matched = steps;
+            break 'outer;
+        }
+    }
+    let d = DigitalCost::new(matched, 2);
+    bench::row(&["digital energy/sample",
+                 &format!("{:.2} uJ at {matched} steps x2 evals", 1e6 * d.energy_j())]);
+    let c = Comparison::of(&a, &d);
+    bench::row(&["ENERGY REDUCTION",
+                 &format!("{:.1}%  (paper Fig 4h: 75.6%)", c.energy_reduction_pct)]);
+    Ok(())
+}

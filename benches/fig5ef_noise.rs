@@ -1,0 +1,58 @@
+//! Bench: Fig. 5e/5f — generation quality vs analog noise magnitude,
+//! ODE vs SDE (the noise-robustness claim).
+//!
+//! Rows: noise kind, magnitude, KL(ODE), KL(SDE).  Expected shape: flat
+//! plateaus for small noise; SDE tolerates read noise better than ODE
+//! (read fluctuation ≈ the Wiener term the SDE already integrates).
+
+use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::{sample_circle, Meta};
+use memdiff::device::cell::CellParams;
+use memdiff::nn::{AnalogScoreNet, ScoreWeights};
+use memdiff::util::bench;
+use memdiff::util::rng::Rng;
+use memdiff::util::stats;
+
+const N: usize = 1000;
+
+fn kl_for(net: &AnalogScoreNet, mode: SolverMode,
+          sched: memdiff::diffusion::VpSchedule, truth: &[f32],
+          rng: &mut Rng) -> f64 {
+    let solver = AnalogSolver::new(net, SolverConfig::new(mode)
+        .with_schedule(sched).with_substeps(1000));
+    stats::kl_points(&solver.solve_batch(N, &[], rng), truth, 24, 2.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load_default()?;
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json"))?;
+    let mut rng = Rng::new(71);
+    let mut truth_rng = Rng::new(72);
+    let truth = sample_circle(40_000, &mut truth_rng);
+
+    bench::section("Fig 5e/5f: KL vs analog noise magnitude (ODE vs SDE)");
+    bench::row(&["kind ", "magnitude", "KL(ODE)", "KL(SDE)"]);
+
+    for frac in [0.0f32, 0.005, 0.01, 0.02, 0.05, 0.10] {
+        let params = CellParams { read_noise_frac: frac, ..CellParams::default() };
+        let nm = if frac == 0.0 { NoiseModel::Ideal } else { NoiseModel::ReadFast };
+        let net = AnalogScoreNet::from_conductances(&w, params, nm);
+        let ode = kl_for(&net, SolverMode::Ode, meta.sched, &truth, &mut rng);
+        let sde = kl_for(&net, SolverMode::Sde, meta.sched, &truth, &mut rng);
+        bench::row(&["read ", &format!("{frac:9.3}"),
+                     &format!("{ode:7.4}"), &format!("{sde:7.4}")]);
+    }
+
+    for tol in [0.0004f32, 0.0008, 0.0015, 0.003, 0.006] {
+        let params = CellParams { read_noise_frac: 0.0, ..CellParams::default() };
+        let mut prog_rng = Rng::new(7);
+        let (net, _) = AnalogScoreNet::program_from_weights(
+            &w, params, tol, NoiseModel::Ideal, &mut prog_rng);
+        let ode = kl_for(&net, SolverMode::Ode, meta.sched, &truth, &mut rng);
+        let sde = kl_for(&net, SolverMode::Sde, meta.sched, &truth, &mut rng);
+        bench::row(&["write", &format!("{tol:9.4}"),
+                     &format!("{ode:7.4}"), &format!("{sde:7.4}")]);
+    }
+    Ok(())
+}

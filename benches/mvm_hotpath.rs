@@ -1,0 +1,64 @@
+//! Bench: the analog-MVM hot path (the innermost loop of every solve).
+//!
+//! Compares the three crossbar noise fidelities, the fused analog score-net
+//! evaluation, and one closed-loop solver sub-step — the quantities the
+//! §Perf optimization pass tracks in EXPERIMENTS.md.
+
+use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::crossbar::{CrossbarLayer, NoiseModel};
+use memdiff::data::Meta;
+use memdiff::device::cell::CellParams;
+use memdiff::nn::{AnalogScoreNet, ScoreNet, ScoreWeights};
+use memdiff::util::bench;
+use memdiff::util::rng::Rng;
+use memdiff::util::tensor::Mat;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(91);
+
+    bench::section("crossbar MVM 14x14 (one hidden layer)");
+    let wmat = Mat::from_fn(14, 14, |_, _| 0.6 * rng.gaussian_f32());
+    let (layer, _) = CrossbarLayer::program(&wmat, CellParams::default(), 0.0012, &mut rng);
+    let v = rng.gaussian_vec(14);
+    let mut out = vec![0.0f32; 14];
+    for (label, nm) in [("ideal", NoiseModel::Ideal),
+                        ("read-fast (column stat)", NoiseModel::ReadFast),
+                        ("read-per-cell (exact)", NoiseModel::ReadPerCell)] {
+        let r = bench::bench(&format!("mvm {label}"), 150, || {
+            layer.forward(&v, &mut out, nm, &mut rng);
+            std::hint::black_box(&out);
+        });
+        bench::report(&r);
+    }
+
+    let meta = Meta::load_default()?;
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json"))?;
+
+    bench::section("fused score-net eval (3 layers + embedding)");
+    for (label, nm) in [("ideal", NoiseModel::Ideal),
+                        ("read-fast", NoiseModel::ReadFast),
+                        ("read-per-cell", NoiseModel::ReadPerCell)] {
+        let net = AnalogScoreNet::from_conductances(&w, CellParams::default(), nm);
+        let mut o = [0.0f32; 2];
+        let r = bench::bench(&format!("score eval {label}"), 150, || {
+            net.eval(&[0.4, -0.2], 0.5, &[0.0, 0.0, 0.0], &mut o, &mut rng);
+            std::hint::black_box(&o);
+        });
+        bench::report(&r);
+    }
+
+    bench::section("closed-loop solver: one full solve (2000 substeps)");
+    let net = AnalogScoreNet::from_conductances(
+        &w, CellParams::default(), NoiseModel::ReadFast);
+    let solver = AnalogSolver::new(&net, SolverConfig::new(SolverMode::Sde)
+        .with_schedule(meta.sched));
+    let mut trace = Vec::new();
+    let r = bench::bench("solve 1 sample (SDE, 2000 substeps)", 400, || {
+        let mut x = [rng.gaussian_f32(), rng.gaussian_f32()];
+        solver.solve_into(&mut x, &[], &mut rng, 0, &mut trace);
+        std::hint::black_box(x);
+    });
+    bench::report(&r);
+    println!("  => per-substep cost {:?}", r.mean / 2000);
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Bench: end-to-end sampler & coordinator throughput.
+//!
+//! Measures samples/second for (a) the analog simulator, (b) the rust
+//! digital baseline, (c) the AOT PJRT path, and (d) the full batching
+//! service under a mixed load — the serving-layer numbers a deployment
+//! would track.
+
+use std::sync::Arc;
+
+use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::coordinator::batcher::BatcherConfig;
+use memdiff::coordinator::service::RustDigitalEngine;
+use memdiff::coordinator::{GenRequest, Service, ServiceConfig, SolverChoice, TaskKind};
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::Meta;
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::sampler::{DigitalSampler, SamplerMode};
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::runtime::ArtifactStore;
+use memdiff::util::bench;
+use memdiff::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load_default()?;
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json"))?;
+    let mut rng = Rng::new(101);
+
+    bench::section("single-thread sampler throughput (samples/s)");
+
+    let net = AnalogScoreNet::from_conductances(
+        &w, CellParams::default(), NoiseModel::ReadFast);
+    let solver = AnalogSolver::new(&net, SolverConfig::new(SolverMode::Sde)
+        .with_schedule(meta.sched).with_substeps(2000));
+    let t0 = std::time::Instant::now();
+    let n = 200;
+    std::hint::black_box(solver.solve_batch(n, &[], &mut rng));
+    let dt = t0.elapsed().as_secs_f64();
+    bench::row(&["analog sim (2000 substeps)",
+                 &format!("{:.1} samples/s", n as f64 / dt)]);
+
+    let dig = DigitalScoreNet::new(w.clone());
+    let sampler = DigitalSampler::new(&dig, SamplerMode::Sde).with_schedule(meta.sched);
+    let t0 = std::time::Instant::now();
+    let n = 2000;
+    std::hint::black_box(sampler.sample_batch(n, &[], 128, &mut rng));
+    let dt = t0.elapsed().as_secs_f64();
+    bench::row(&["rust digital (128 steps)",
+                 &format!("{:.0} samples/s", n as f64 / dt)]);
+
+    let store = ArtifactStore::open_default()?;
+    store.warmup(64)?;
+    let t0 = std::time::Instant::now();
+    let n = 1024;
+    for _ in 0..(n / 64) {
+        std::hint::black_box(store.sample_digital(64, 128, true, None, &mut rng)?);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    bench::row(&["PJRT artifacts (128 steps, b=64)",
+                 &format!("{:.0} samples/s", n as f64 / dt)]);
+
+    bench::section("coordinator throughput (4 workers, mixed load)");
+    let engine = Arc::new(RustDigitalEngine {
+        net: DigitalScoreNet::new(w.clone()),
+        sched: meta.sched,
+    });
+    let service = Arc::new(Service::start(engine, None, ServiceConfig {
+        workers: 4,
+        batcher: BatcherConfig {
+            max_batch_samples: 64,
+            linger: std::time::Duration::from_millis(1),
+        },
+        seed: 3,
+    }));
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    let total: usize = 96;
+    for i in 0..total {
+        rxs.push(service.submit(GenRequest {
+            id: 0,
+            task: TaskKind::Circle,
+            n_samples: 8 + (i % 3) * 8,
+            solver: SolverChoice::DigitalSde { steps: 100 },
+            guidance: 0.0,
+            decode: false,
+        })?);
+    }
+    let mut samples = 0usize;
+    for rx in rxs {
+        samples += rx.recv()??.samples.len() / 2;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    bench::row(&["service (100-step SDE)",
+                 &format!("{:.0} samples/s over {total} requests", samples as f64 / dt)]);
+    bench::row(&["service metrics", &service.metrics.snapshot().report()]);
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Fig. 3 reproduction: unconditional generation of the circular
+//! distribution on the analog neural-differential-equation solver.
+//!
+//! Produces, as text/CSV on stdout:
+//!  * 3b — histogram of target vs programmed weights (write-verify)
+//!  * 3c — per-layer input-voltage histograms (clamping effect)
+//!  * 3d — the 2-D score vector field at t = 0.5
+//!  * 3e — time slices of 1000 samplings + two example trajectories
+//!  * 3f/3g — speed & energy vs the digital baseline at matched quality
+//!
+//! Run with: `cargo run --release --example circular_generation`
+
+use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::{sample_circle, Meta};
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::sampler::{DigitalSampler, SamplerMode};
+use memdiff::energy::model::{AnalogCost, Comparison, DigitalCost};
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreNet, ScoreWeights};
+use memdiff::util::rng::Rng;
+use memdiff::util::stats;
+
+fn histogram(label: &str, xs: &[f32], lo: f32, hi: f32, bins: usize) {
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let k = (((x - lo) / (hi - lo)) * bins as f32) as isize;
+        counts[k.clamp(0, bins as isize - 1) as usize] += 1;
+    }
+    let max = counts.iter().copied().max().unwrap_or(1).max(1);
+    println!("  {label}: [{lo:.2}, {hi:.2}] n={}", xs.len());
+    for (k, &c) in counts.iter().enumerate() {
+        let x = lo + (hi - lo) * (k as f32 + 0.5) / bins as f32;
+        let bar = "#".repeat(c * 40 / max);
+        println!("    {x:+.3} | {bar}");
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load_default()?;
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json"))?;
+    let mut rng = Rng::new(33);
+
+    // ---- Fig. 3b: program the macro with write-verify, compare weights --
+    println!("== Fig 3b: offline-optimized weights vs programmed conductance weights");
+    // verify band 0.0005 mS ≈ half a conductance level — the paper's Fig. 2g
+    // programming accuracy; Fig. 5e shows quality degrades beyond ~0.001
+    let (net, pulses) = AnalogScoreNet::program_from_weights(
+        &w, CellParams::default(), 0.0005, NoiseModel::ReadFast, &mut rng);
+    println!("  write-verify used {pulses} pulses total");
+    let (e1, e2, e3) = net.effective_weights();
+    let target: Vec<f32> = w.w1.as_slice().iter()
+        .chain(w.w2.as_slice()).chain(w.w3.as_slice()).copied().collect();
+    let actual: Vec<f32> = e1.as_slice().iter()
+        .chain(e2.as_slice()).chain(e3.as_slice()).copied().collect();
+    let errs: Vec<f32> = target.iter().zip(&actual).map(|(t, a)| a - t).collect();
+    println!("  weight deployment error: mean {:+.4}, std {:.4} (target std {:.4})",
+             stats::mean(&errs), stats::std(&errs), stats::std(&target));
+    histogram("target weights", &target, -3.5, 3.5, 17);
+
+    // ---- Fig. 3c: layer input-voltage histograms under N(0,1) drive ------
+    println!("\n== Fig 3c: input voltages per layer (clamp window [-2, 4])");
+    let mut l1_in = Vec::new();
+    let mut outs = Vec::new();
+    let mut out = [0.0f32; 2];
+    for _ in 0..2000 {
+        let x = [rng.gaussian_f32(), rng.gaussian_f32()];
+        l1_in.extend_from_slice(&x);
+        net.eval(&x, rng.uniform() as f32, &[0.0, 0.0, 0.0], &mut out, &mut rng);
+        outs.extend_from_slice(&out);
+    }
+    histogram("network input", &l1_in, -3.0, 5.0, 16);
+    histogram("network output", &outs, -3.0, 5.0, 16);
+
+    // ---- Fig. 3d: score vector field at t = 0.5 --------------------------
+    println!("\n== Fig 3d: score vector field at t=0.5 (x, y, dx, dy)");
+    println!("  x,y,sx,sy");
+    for iy in (-2..=2).rev() {
+        for ix in -2..=2 {
+            let x = [ix as f32 * 0.75, iy as f32 * 0.75];
+            net.eval(&x, 0.5, &[0.0, 0.0, 0.0], &mut out, &mut rng);
+            // score = -net/sigma
+            let sg = meta.sched.sigma(0.5) as f32;
+            println!("  {:+.2},{:+.2},{:+.3},{:+.3}", x[0], x[1],
+                     -out[0] / sg, -out[1] / sg);
+        }
+    }
+
+    // ---- Fig. 3e: time slices of 1000 samplings + trajectories ----------
+    // Quality sections use the calibrated deployment (exact conductances,
+    // read noise on) — the write-noise sensitivity is Fig. 5's experiment.
+    let net = AnalogScoreNet::from_conductances(
+        &w, CellParams::default(), NoiseModel::ReadFast);
+    println!("\n== Fig 3e: time slices (radius mean ± std across 1000 samplings)");
+    let cfg = SolverConfig::new(SolverMode::Sde).with_schedule(meta.sched);
+    let solver = AnalogSolver::new(&net, cfg);
+    let mut slices: Vec<Vec<(f64, Vec<f32>)>> = Vec::new();
+    for _ in 0..1000 {
+        let mut x = [rng.gaussian_f32(), rng.gaussian_f32()];
+        let mut trace = Vec::new();
+        solver.solve_into(&mut x, &[], &mut rng, 400, &mut trace);
+        slices.push(trace);
+    }
+    let n_slices = slices[0].len();
+    for k in 0..n_slices {
+        let t = slices[0][k].0;
+        let radii: Vec<f32> = slices.iter()
+            .map(|tr| {
+                let p = &tr[k].1;
+                (p[0] * p[0] + p[1] * p[1]).sqrt()
+            })
+            .collect();
+        println!("  t={t:.2}: radius {:.3} ± {:.3}",
+                 stats::mean(&radii), stats::std(&radii));
+    }
+    println!("  example trajectory (t, x1, x2):");
+    for (t, p) in &slices[0] {
+        println!("    {t:.2}, {:+.3}, {:+.3}", p[0], p[1]);
+    }
+
+    // ---- final distribution + quality ------------------------------------
+    let gen = solver.solve_batch(2000, &[], &mut rng);
+    let mut truth_rng = Rng::new(77);
+    let truth = sample_circle(40_000, &mut truth_rng);
+    let kl_analog = stats::kl_points(&gen, &truth, 24, 2.0);
+    let radii: Vec<f32> = gen.chunks_exact(2)
+        .map(|p| (p[0] * p[0] + p[1] * p[1]).sqrt()).collect();
+    println!("\n  analog SDE: radius {:.3} ± {:.3}, KL = {kl_analog:.4}",
+             stats::mean(&radii), stats::std(&radii));
+
+    // ---- Fig. 3f/3g: matched-quality speed & energy comparison ----------
+    println!("\n== Fig 3f/3g: speed & energy vs digital baseline at matched quality");
+    let dig = DigitalScoreNet::new(w.clone());
+    let sampler = DigitalSampler::new(&dig, SamplerMode::Sde).with_schedule(meta.sched);
+    let mut matched_steps = None;
+    println!("  steps | KL (digital SDE)");
+    for steps in [4usize, 8, 16, 32, 64, 128, 256, 512] {
+        let (pts, _) = sampler.sample_batch(2000, &[], steps, &mut rng);
+        let kl = stats::kl_points(&pts, &truth, 24, 2.0);
+        println!("  {steps:5} | {kl:.4}");
+        if matched_steps.is_none() && kl <= kl_analog * 1.05 {
+            matched_steps = Some(steps);
+        }
+    }
+    let steps = matched_steps.unwrap_or(512);
+    let analog_cost = AnalogCost::unconditional_projected();
+    let digital_cost = DigitalCost::new(steps, 1);
+    let c = Comparison::of(&analog_cost, &digital_cost);
+    println!("  matched-quality digital steps = {steps}");
+    println!("  speedup      = {:.1}x   (paper Fig 3f: 64.8x)", c.speedup);
+    println!("  energy red.  = {:.1}%   (paper Fig 3g: 80.8%)",
+             c.energy_reduction_pct);
+    println!("  analog: {:.1} us, {:.2} uJ | digital: {:.1} us, {:.2} uJ",
+             1e6 * c.analog_latency_s, 1e6 * c.analog_energy_j,
+             1e6 * c.digital_latency_s, 1e6 * c.digital_energy_j);
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Quickstart: load the AOT artifacts, start the generation service, and
+//! sample the unconditional circular distribution three ways —
+//! the analog closed-loop solver, the rust digital baseline, and the
+//! AOT-compiled PJRT artifacts.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first).
+
+use std::sync::Arc;
+
+use memdiff::coordinator::service::{AnalogEngine, HloEngine, RustDigitalEngine};
+use memdiff::coordinator::{Service, ServiceConfig, SolverChoice, TaskKind};
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::{sample_circle, Meta};
+use memdiff::device::cell::CellParams;
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::runtime::ArtifactStore;
+use memdiff::util::rng::Rng;
+use memdiff::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let meta = Meta::load_default()?;
+    let weights = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json"))?;
+    println!("memdiff quickstart — score net 2->{}x2->2, beta {}..{}",
+             meta.hidden, meta.sched.beta_min, meta.sched.beta_max);
+
+    let mut truth_rng = Rng::new(1234);
+    let truth = sample_circle(40_000, &mut truth_rng);
+    let n = 1000;
+
+    // 1. the paper's system: time-continuous analog solver on the
+    //    simulated resistive-memory macro (read noise on)
+    let analog = Arc::new(AnalogEngine {
+        net: AnalogScoreNet::from_conductances(
+            &weights, CellParams::default(), NoiseModel::ReadFast),
+        sched: meta.sched,
+        substeps: 2000,
+    });
+    let svc = Service::start(analog, None, ServiceConfig::default());
+    let r = svc.generate(TaskKind::Circle, n, SolverChoice::AnalogSde, 0.0, false)?;
+    println!(
+        "analog SDE  : {} samples, modeled hw latency {:.1} us/sample, KL = {:.4}",
+        n,
+        1e6 * r.hw_latency_s / n as f64,
+        stats::kl_points(&r.samples, &truth, 24, 2.0)
+    );
+    svc.shutdown();
+
+    // 2. digital baseline in pure rust (what a CPU/GPU would iterate)
+    let digital = Arc::new(RustDigitalEngine {
+        net: DigitalScoreNet::new(weights.clone()),
+        sched: meta.sched,
+    });
+    let svc = Service::start(digital, None, ServiceConfig::default());
+    let r = svc.generate(TaskKind::Circle, n,
+                         SolverChoice::DigitalSde { steps: 200 }, 0.0, false)?;
+    println!(
+        "digital 200 : {} samples, modeled hw latency {:.1} us/sample, KL = {:.4}",
+        n,
+        1e6 * r.hw_latency_s / n as f64,
+        stats::kl_points(&r.samples, &truth, 24, 2.0)
+    );
+    svc.shutdown();
+
+    // 3. the AOT path: jax+pallas lowered to HLO text, executed via PJRT
+    let store = ArtifactStore::open_default()?;
+    println!("PJRT platform: {}", store.platform());
+    let hlo = Arc::new(HloEngine { n_classes: store.meta().n_classes, store });
+    let svc = Service::start(hlo, None, ServiceConfig::default());
+    let r = svc.generate(TaskKind::Circle, n,
+                         SolverChoice::DigitalSde { steps: 200 }, 0.0, false)?;
+    println!(
+        "hlo 200     : {} samples, wall {:.1} ms, KL = {:.4}",
+        n,
+        1e3 * r.wall_latency_s,
+        stats::kl_points(&r.samples, &truth, 24, 2.0)
+    );
+    svc.shutdown();
+
+    println!("ok");
+    Ok(())
+}

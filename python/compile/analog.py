@@ -1,0 +1,105 @@
+"""L2 <-> hardware bridge: weight -> conductance mapping and noise models.
+
+Implements the paper's deployment path (Fig. 3b): offline-trained weights
+are mapped onto the macro's programmable conductance window and quantized
+to the >= 64 discernible linear states of Fig. 2d.  Also provides the write
+and read noise models of Fig. 5 so the python tests can cross-validate the
+rust device simulator's noise statistics.
+
+Mapping contract (shared with rust `crossbar::mapper`):
+
+    W = tia_gain * (G_mem - G_FIXED)          # software weight, V/V
+    G_mem in [0.02, 0.10] mS, G_FIXED = 0.05 mS
+    => W / tia_gain in [-0.03, +0.05] mS
+
+Each layer has its own TIA gain (its own feedback-resistor bank on the
+PCB), chosen as the smallest gain that fits that layer's weights into the
+window — maximizing the used conductance range per layer and therefore
+minimizing the 64-level quantization error.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .kernels import ref
+from .model import ScoreParams
+
+W_NEG_MAX = ref.G_FIXED_MS - ref.G_CELL_LO_MS   # 0.03 mS of negative headroom
+W_POS_MAX = ref.G_CELL_HI_MS - ref.G_FIXED_MS   # 0.05 mS of positive headroom
+
+# Fig. 5 noise magnitudes (fractions of the conductance window).
+WRITE_NOISE_STD_MS = 0.0008   # residual write-verify error, std in mS
+READ_NOISE_FRAC = 0.01        # read fluctuation, std = frac * G (Fig. 2e/5c)
+
+
+def required_gain(weights: list[np.ndarray]) -> float:
+    """Smallest shared TIA gain fitting all weights in the conductance window."""
+    g = 1e-6
+    for w in weights:
+        w = np.asarray(w)
+        if w.size == 0:
+            continue
+        g = max(g,
+                float(np.max(-w, initial=0.0)) / W_NEG_MAX,
+                float(np.max(w, initial=0.0)) / W_POS_MAX)
+    return g
+
+
+def weight_to_conductance(w: np.ndarray, gain: float) -> np.ndarray:
+    """W -> G_mem (mS), clipped into the programmable window."""
+    g = np.asarray(w, np.float64) / gain + ref.G_FIXED_MS
+    return np.clip(g, ref.G_CELL_LO_MS, ref.G_CELL_HI_MS).astype(np.float32)
+
+
+def quantize(g_mem: np.ndarray, n_levels: int = ref.N_LEVELS) -> np.ndarray:
+    """Snap to the macro's n_levels linear conductance states (Fig. 2d)."""
+    lo, hi = ref.G_CELL_LO_MS, ref.G_CELL_HI_MS
+    step = (hi - lo) / (n_levels - 1)
+    return (lo + np.round((np.asarray(g_mem) - lo) / step) * step).astype(np.float32)
+
+
+def add_write_noise(g_mem: np.ndarray, rng: np.random.Generator,
+                    std_ms: float = WRITE_NOISE_STD_MS) -> np.ndarray:
+    """Residual error of the write-verify programming loop (Fig. 5b).
+
+    The loop SET/RESETs until conductance lands in a tolerance band around
+    target; the landing point within the band is random — modeled as
+    truncated Gaussian (2 sigma truncation == the verify band edges).
+    """
+    n = rng.standard_normal(g_mem.shape)
+    n = np.clip(n, -2.0, 2.0)
+    g = np.asarray(g_mem) + std_ms * n
+    return np.clip(g, ref.G_CELL_LO_MS, ref.G_CELL_HI_MS).astype(np.float32)
+
+
+def add_read_noise(g_mem: np.ndarray, rng: np.random.Generator,
+                   frac: float = READ_NOISE_FRAC) -> np.ndarray:
+    """Instantaneous conductance fluctuation (Fig. 2e / 5c): std = frac * G."""
+    g = np.asarray(g_mem)
+    return (g * (1.0 + frac * rng.standard_normal(g.shape))).astype(np.float32)
+
+
+def map_to_conductance(params: ScoreParams, n_levels: int = ref.N_LEVELS,
+                       write_noise_rng: np.random.Generator | None = None) -> dict:
+    """Full deployment mapping of a trained score net.
+
+    Returns dict(g1, g2, g3, b1, b2, b3, gains) — conductances in mS,
+    biases unchanged (injected post-TIA as currents), per-layer TIA gains.
+    Pass ``write_noise_rng`` to emulate programming error (Fig. 5e/f).
+    """
+    ws = [np.asarray(params.w1), np.asarray(params.w2), np.asarray(params.w3)]
+    gains = [required_gain([w]) for w in ws]
+    gs = [quantize(weight_to_conductance(w, g), n_levels)
+          for w, g in zip(ws, gains)]
+    if write_noise_rng is not None:
+        gs = [add_write_noise(g, write_noise_rng) for g in gs]
+    return dict(g1=gs[0], g2=gs[1], g3=gs[2],
+                b1=np.asarray(params.b1), b2=np.asarray(params.b2),
+                b3=np.asarray(params.b3),
+                gains=tuple(float(g) for g in gains))
+
+
+def conductance_to_weight(g_mem: np.ndarray, gain: float) -> np.ndarray:
+    """Inverse mapping, used to quantify deployment error in tests."""
+    return (gain * (np.asarray(g_mem, np.float64) - ref.G_FIXED_MS)).astype(np.float32)

@@ -1,0 +1,281 @@
+"""AOT compile path: train offline, lower to HLO text, export artifacts.
+
+Runs ONCE at build time (`make artifacts`); python never appears on the
+request path.  Produces, under ``artifacts/``:
+
+* ``step_uncond_b{B}.hlo.txt``  — fused sampler step: embed t, score
+  (Pallas fused MLP with baked conductances), Euler(-Maruyama) update.
+  The rust digital-baseline sampler drives this N times per batch.
+* ``step_cond_b{B}.hlo.txt``    — conditional variant with classifier-free
+  guidance baked in (two score evaluations + Eq. 7 combine).
+* ``score_uncond_b{B}.hlo.txt`` — raw score field (Fig. 3d vector field).
+* ``decoder_b{B}.hlo.txt``      — VAE decoder, latent -> 12x12 pixels.
+* ``weights_uncond.json`` / ``weights_cond.json`` / ``vae_decoder.json`` —
+  weight-space + conductance-space parameters for the rust analog simulator.
+* ``meta.json``                 — manifest: artifact IO specs, schedule
+  constants, macro constants, class centers, quality-gate stats.
+
+Interchange is HLO *text*: the image's xla_extension 0.5.1 rejects jax>=0.5
+serialized protos (64-bit instruction ids); the text parser reassigns ids
+(see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import analog, datasets, model, vae
+from .kernels import ref
+from .kernels.deconv import deconv2d_kernel
+from .schedule import DEFAULT as SCHED, EPS_T
+
+BATCHES = (1, 64)
+SEED = 7
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange).
+
+    CRITICAL: print with ``print_large_constants=True``.  The default HLO
+    printer elides big literals as ``constant({...})`` — and the xla 0.5.1
+    text *parser on the rust side silently accepts that as an all-zeros
+    constant*, which zeroed out every baked weight matrix until caught by
+    the cross-language integration test.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # the 0.5.1 parser predates `source_end_line`/`source_end_column`
+    # metadata attributes — don't print any metadata
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "constant({...})" not in text and "{...}" not in text, \
+        "HLO text contains elided constants — artifact would be corrupt"
+    return text
+
+
+# --- arrays -> json ----------------------------------------------------------
+
+def arr(a) -> dict:
+    a = np.asarray(a, np.float32)
+    return {"shape": list(a.shape), "data": [float(x) for x in a.reshape(-1)]}
+
+
+def dump_json(path: str, obj: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    print(f"  wrote {path} ({os.path.getsize(path)} bytes)")
+
+
+# --- jitted deployment functions (lowered per batch size) --------------------
+
+def make_step_uncond(gparams, params):
+    """(x, t, dt, mode, noise) -> x_next ; all-analog-equivalent math."""
+
+    def step(x, t, dt, mode, noise):
+        b = x.shape[0]
+        tb = jnp.full((b,), 0.0) + t
+        net = model.score_fwd_analog(gparams, params, x, tb)
+        s = model.score_from_net(net, SCHED.sigma(t))
+        beta = SCHED.beta(t)
+        # state clamp: the integrator output re-enters through the same
+        # protective voltage window (see model.sample).
+        return (ref.clamp_voltage(ref.euler_step(x, s, beta, dt, noise, mode)),)
+
+    return step
+
+
+def make_step_cond(gparams, params):
+    """(x, t, dt, mode, noise, onehot, lam) -> x_next with CFG (Eq. 7)."""
+
+    def step(x, t, dt, mode, noise, onehot, lam):
+        b = x.shape[0]
+        tb = jnp.full((b,), 0.0) + t
+        n_c = model.score_fwd_analog(gparams, params, x, tb, onehot)
+        n_u = model.score_fwd_analog(gparams, params, x, tb,
+                                     jnp.zeros_like(onehot))
+        net = (1.0 + lam) * n_c - lam * n_u
+        s = model.score_from_net(net, SCHED.sigma(t))
+        beta = SCHED.beta(t)
+        return (ref.clamp_voltage(ref.euler_step(x, s, beta, dt, noise, mode)),)
+
+    return step
+
+
+def make_score_uncond(gparams, params):
+    def fwd(x, t):
+        b = x.shape[0]
+        tb = jnp.full((b,), 0.0) + t
+        return (model.score_fwd_analog(gparams, params, x, tb),)
+
+    return fwd
+
+
+def make_decoder(dparams):
+    """Latent -> pixels through the Pallas deconv kernels (Fig. 2k path)."""
+    c1 = dparams["dc1_w"].shape[2]
+
+    def decode(z):
+        h = jnp.maximum(z @ dparams["lin_w"] + dparams["lin_b"], 0.0)
+        h = h.reshape(-1, 3, 3, c1)
+        h = deconv2d_kernel(h, dparams["dc1_w"], dparams["dc1_b"], relu=True)
+        h = deconv2d_kernel(h, dparams["dc2_w"], dparams["dc2_b"], tanh=True)
+        return (h[..., 0],)
+
+    return decode
+
+
+def lower_and_write(out_dir, name, fn, specs, manifest):
+    lowered = jax.jit(fn).lower(*[jax.ShapeDtypeStruct(s, jnp.float32)
+                                  for s in specs])
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest[name] = {"file": f"{name}.hlo.txt",
+                      "inputs": [list(s) for s in specs]}
+    print(f"  lowered {name}: {len(text)} chars")
+
+
+# --- quality gates ------------------------------------------------------------
+
+def kl_hist2d(samples: np.ndarray, truth: np.ndarray, bins=24, lim=2.0) -> float:
+    """Histogram KL(P_truth || Q_gen) on [-lim, lim]^2 (paper Eq. 8)."""
+    edges = np.linspace(-lim, lim, bins + 1)
+    p, _, _ = np.histogram2d(truth[:, 0], truth[:, 1], bins=(edges, edges))
+    q, _, _ = np.histogram2d(samples[:, 0], samples[:, 1], bins=(edges, edges))
+    p = (p + 1e-3) / (p + 1e-3).sum()
+    q = (q + 1e-3) / (q + 1e-3).sum()
+    return float(np.sum(p * np.log(p / q)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps-uncond", type=int, default=12000)
+    ap.add_argument("--steps-cond", type=int, default=14000)
+    ap.add_argument("--steps-vae", type=int, default=6000)
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    rng = np.random.default_rng(SEED)
+    manifest: dict = {}
+
+    # ---- task 1: unconditional circle (Fig. 3) -----------------------------
+    print("== training unconditional score net (circle)")
+    circle = datasets.sample_circle(8192, rng)
+    p_unc, loss_unc = model.train_score(jax.random.PRNGKey(SEED), circle,
+                                        steps=args.steps_uncond)
+    g_unc = analog.map_to_conductance(p_unc)
+    print(f"  final DSM loss {loss_unc:.4f}  gains {g_unc['gains']}")
+
+    # gate on the *quantized* (deployment-equivalent) weights: this is the
+    # function the conductances will realize
+    p_unc_q = model.quantize_weights_ste(p_unc)
+    gen = np.asarray(model.sample(p_unc_q, jax.random.PRNGKey(1), 2000,
+                                  n_steps=200, mode="ode"))
+    kl_unc = kl_hist2d(gen, datasets.sample_circle(20000, rng))
+    print(f"  quality gate: circle ODE-200 KL (quantized) = {kl_unc:.4f}")
+
+    # ---- task 2: conditional letters via VAE latents (Fig. 4) --------------
+    print("== training VAE (synthetic EMNIST letters H/K/U)")
+    imgs, labels = datasets.letters_dataset(1024, seed=SEED)
+    p_vae, loss_vae = vae.train_vae(jax.random.PRNGKey(SEED + 1), imgs, labels,
+                                    steps=args.steps_vae)
+    lat = vae.encode_dataset(p_vae, imgs)
+    print(f"  VAE loss {loss_vae:.4f}; latent class means:")
+    for ci, name in enumerate(datasets.LETTERS):
+        m = lat[labels == ci].mean(axis=0)
+        print(f"    {name}: ({m[0]:+.3f}, {m[1]:+.3f}) "
+              f"target ({datasets.CLASS_CENTERS[ci][0]:+.3f}, "
+              f"{datasets.CLASS_CENTERS[ci][1]:+.3f})")
+
+    print("== training conditional score net (latents)")
+    p_cond, loss_cond = model.train_score(jax.random.PRNGKey(SEED + 2), lat,
+                                          labels, steps=args.steps_cond)
+    g_cond = analog.map_to_conductance(p_cond)
+    print(f"  final DSM loss {loss_cond:.4f}  gains {g_cond['gains']}")
+
+    oh = jax.nn.one_hot(jnp.full((600,), 0), model.N_CLASSES)
+    gen_h = np.asarray(model.sample(p_cond, jax.random.PRNGKey(2), 600,
+                                    n_steps=200, mode="ode", onehot=oh,
+                                    lam=2.0))
+    print(f"  quality gate: class-H latent mean "
+          f"({gen_h[:, 0].mean():+.3f}, {gen_h[:, 1].mean():+.3f})")
+
+    # ---- lower artifacts ----------------------------------------------------
+    print("== lowering HLO artifacts")
+    dparams = {k: jnp.asarray(v) for k, v in vae.decoder_dict(p_vae).items()}
+    for b in BATCHES:
+        lower_and_write(out, f"step_uncond_b{b}",
+                        make_step_uncond(g_unc, p_unc),
+                        [(b, 2), (), (), (), (b, 2)], manifest)
+        lower_and_write(out, f"step_cond_b{b}",
+                        make_step_cond(g_cond, p_cond),
+                        [(b, 2), (), (), (), (b, 2), (b, 3), ()], manifest)
+        lower_and_write(out, f"score_uncond_b{b}",
+                        make_score_uncond(g_unc, p_unc),
+                        [(b, 2), ()], manifest)
+        lower_and_write(out, f"decoder_b{b}", make_decoder(dparams),
+                        [(b, 2)], manifest)
+
+    # ---- weights + meta ------------------------------------------------------
+    def score_weights(params, gp):
+        return {
+            "w1": arr(params.w1), "b1": arr(params.b1),
+            "w2": arr(params.w2), "b2": arr(params.b2),
+            "w3": arr(params.w3), "b3": arr(params.b3),
+            "emb_w": arr(params.emb_w), "cond_proj": arr(params.cond_proj),
+            "g1": arr(gp["g1"]), "g2": arr(gp["g2"]), "g3": arr(gp["g3"]),
+            "scalars": {"gain1": gp["gains"][0], "gain2": gp["gains"][1],
+                        "gain3": gp["gains"][2]},
+        }
+
+    dump_json(os.path.join(out, "weights_uncond.json"),
+              score_weights(p_unc, g_unc))
+    dump_json(os.path.join(out, "weights_cond.json"),
+              score_weights(p_cond, g_cond))
+    dump_json(os.path.join(out, "vae_decoder.json"),
+              {k: arr(v) for k, v in vae.decoder_dict(p_vae).items()})
+
+    meta = {
+        "schedule": {"beta_min": SCHED.beta_min, "beta_max": SCHED.beta_max,
+                     "t_end": SCHED.t_end, "eps_t": EPS_T},
+        "macro": {"v_clamp_lo": ref.V_CLAMP_LO, "v_clamp_hi": ref.V_CLAMP_HI,
+                  "g_fixed_ms": ref.G_FIXED_MS,
+                  "g_cell_lo_ms": ref.G_CELL_LO_MS,
+                  "g_cell_hi_ms": ref.G_CELL_HI_MS,
+                  "n_levels": ref.N_LEVELS},
+        "model": {"hidden": model.HIDDEN, "dim": model.DIM,
+                  "n_classes": model.N_CLASSES},
+        "class_centers": [list(map(float, c)) for c in datasets.CLASS_CENTERS],
+        # actual (trained) latent class statistics — what conditional
+        # generation is evaluated against downstream
+        "latent_class_means": [
+            [float(v) for v in lat[labels == ci].mean(axis=0)]
+            for ci in range(model.N_CLASSES)],
+        "latent_class_stds": [
+            [float(v) for v in lat[labels == ci].std(axis=0)]
+            for ci in range(model.N_CLASSES)],
+        "quality": {"kl_uncond_ode200": kl_unc,
+                    "dsm_loss_uncond": loss_unc,
+                    "dsm_loss_cond": loss_cond, "vae_loss": loss_vae},
+        "artifacts": manifest,
+        "batches": list(BATCHES),
+        "seed": SEED,
+    }
+    dump_json(os.path.join(out, "meta.json"), meta)
+    print("== artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

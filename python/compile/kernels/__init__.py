@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the analog in-memory compute hot-spots.
+
+Every kernel is authored with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls; see /opt/xla-example/README.md) and has a pure-jnp
+oracle in :mod:`ref` checked by pytest + hypothesis.
+"""
+
+from . import ref  # noqa: F401
+from .crossbar import crossbar_mvm_kernel  # noqa: F401
+from .score_mlp import score_mlp_kernel  # noqa: F401
+from .integrator import euler_step_kernel  # noqa: F401
+from .deconv import deconv2d_kernel  # noqa: F401

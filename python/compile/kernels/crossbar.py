@@ -1,0 +1,65 @@
+"""Pallas kernel: analog resistive-memory crossbar MVM.
+
+Hardware adaptation (DESIGN.md §2): the paper performs the MVM with Ohm's
+law + Kirchhoff's current law on a 32x32 1T1R macro.  On the TPU-flavored
+stack the analogous structure is a VMEM-resident weight tile and a batch-
+tiled grid: the conductance matrix plays the role of the physical array
+(stays resident, like the programmed cells), while input-voltage batches
+stream through — exactly the HBM->VMEM schedule BlockSpec expresses.
+
+The kernel fuses the macro's protective voltage clamp, the shared-negative-
+weight subtraction (G_mem - G_fixed), the TIA gain, and optionally the
+diode-clamp ReLU epilogue — one pass over the data, no intermediate
+materialization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Batch tile: sublane-friendly (multiples of 8); tiny weight tiles mean the
+# grid is purely over the batch dimension.
+BLOCK_B = 64
+
+
+def _kernel(v_ref, g_ref, o_ref, *, tia_gain: float, relu: bool):
+    """One batch-tile of the crossbar MVM (all operands VMEM-resident)."""
+    v = jnp.clip(v_ref[...], ref.V_CLAMP_LO, ref.V_CLAMP_HI)
+    w = g_ref[...] - ref.G_FIXED_MS
+    acc = jnp.dot(v, w, preferred_element_type=jnp.float32) * tia_gain
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tia_gain", "relu", "block_b"))
+def crossbar_mvm_kernel(v, g_mem, tia_gain: float = 1.0, relu: bool = False,
+                        block_b: int = BLOCK_B):
+    """Batched analog crossbar MVM; matches :func:`ref.crossbar_mvm`.
+
+    Args:
+      v:     (batch, n_in) input voltages (software units; 0.1 V == 1).
+      g_mem: (n_in, n_out) programmed conductances in mS.
+    Returns: (batch, n_out) TIA output voltages.
+    """
+    b, n_in = v.shape
+    n_out = g_mem.shape[1]
+    blk = min(block_b, b)
+    grid = (pl.cdiv(b, blk),)
+    return pl.pallas_call(
+        functools.partial(_kernel, tia_gain=float(tia_gain), relu=bool(relu)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, n_in), lambda i: (i, 0)),
+            pl.BlockSpec((n_in, n_out), lambda i: (0, 0)),  # weights resident
+        ],
+        out_specs=pl.BlockSpec((blk, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_out), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(v.astype(jnp.float32), g_mem.astype(jnp.float32))

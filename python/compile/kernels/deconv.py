@@ -1,0 +1,81 @@
+"""Pallas kernel: transposed 2-D convolution for the VAE decoder.
+
+The paper's latent-diffusion pipeline (Fig. 4a/c) decodes the 2-D latent
+back to pixel space with one linear layer and two deconvolution layers,
+realized on resistive-memory arrays (Fig. 2k).  This kernel implements the
+deconvolution as the zero-insertion-upsample + flipped-kernel correlation
+identity, fused per batch tile.  Feature maps here are tiny (<= 12x12x32,
+~18 KB) so the whole tile set is VMEM-resident; the grid runs over batch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 64
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, pad: int,
+            relu: bool, tanh: bool):
+    x = x_ref[...]
+    w = w_ref[...]
+    n, ih, iw, ci = x.shape
+    kh, kw, _, co = w.shape
+    oh, ow = ih * stride, iw * stride
+
+    up = jnp.zeros((n, ih * stride, iw * stride, ci), x.dtype)
+    up = up.at[:, ::stride, ::stride, :].set(x)
+    plo = kh - 1 - pad
+    phi_h = oh + pad - (ih - 1) * stride - 1
+    phi_w = ow + pad - (iw - 1) * stride - 1
+    up = jnp.pad(up, ((0, 0), (plo, phi_h), (plo, phi_w), (0, 0)))
+    wf = w[::-1, ::-1, :, :]
+
+    out = jnp.zeros((n, oh, ow, co), x.dtype)
+    for ky in range(kh):       # static: unrolled into 16 fused MACs
+        for kx in range(kw):
+            patch = up[:, ky:ky + oh, kx:kx + ow, :]
+            out = out + jnp.einsum("nhwc,cf->nhwf", patch, wf[ky, kx])
+    out = out + b_ref[...]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    if tanh:
+        out = jnp.tanh(out)
+    o_ref[...] = out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "pad", "relu", "tanh", "block_b"))
+def deconv2d_kernel(x, w, b, stride: int = 2, pad: int = 1,
+                    relu: bool = False, tanh: bool = False,
+                    block_b: int = BLOCK_B):
+    """Transposed conv; matches :func:`ref.deconv2d` (+ optional epilogue).
+
+    Args:
+      x: (batch, h, w, ci) NHWC feature map.
+      w: (kh, kw, ci, co) HWIO taps.
+      b: (co,) bias.
+    Returns: (batch, h*stride, w*stride, co).
+    """
+    n, ih, iw, ci = x.shape
+    kh, kw, _, co = w.shape
+    oh, ow = ih * stride, iw * stride
+    blk = min(block_b, n)
+    grid = (pl.cdiv(n, blk),)
+    return pl.pallas_call(
+        functools.partial(_kernel, stride=stride, pad=pad,
+                          relu=bool(relu), tanh=bool(tanh)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, ih, iw, ci), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, ci, co), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((co,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, oh, ow, co), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, co), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,156 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: the pytest suite sweeps shapes and
+seeds (hypothesis) and asserts the Pallas kernels (interpret=True) match
+these implementations to float32 tolerance.  They are also the *semantic*
+contract mirrored by the rust analog simulator (`rust/src/crossbar`,
+`rust/src/vae`), so the three implementations — ref, kernel, rust — are
+mutually checkable.
+
+Voltage convention (paper Fig. 3): 0.1 V is the software unit 1.0; input
+voltages are clamped to the macro's safe window [-0.2 V, 0.4 V], i.e.
+[-2, 4] in software units.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Macro constants (paper Fig. 2 / Methods) ----------------------------------
+V_CLAMP_LO = -2.0          # -0.2 V in software units (0.1 V == 1.0)
+V_CLAMP_HI = 4.0           # +0.4 V
+G_FIXED_MS = 0.05          # shared 20 kOhm negative-weight conductance, in mS
+G_CELL_LO_MS = 0.02        # programmable cell window, in mS
+G_CELL_HI_MS = 0.10
+N_LEVELS = 64              # >=64 discernible linear conductance states
+
+
+def clamp_voltage(v):
+    """Protective input clamp of the macro (Supplementary Fig. 2)."""
+    return jnp.clip(v, V_CLAMP_LO, V_CLAMP_HI)
+
+
+def crossbar_mvm(v, g_mem, tia_gain=1.0, relu=False):
+    """Analog crossbar matrix-vector multiply, differential-pair weights.
+
+    Args:
+      v:      (batch, n_in) input voltages, software units.
+      g_mem:  (n_in, n_out) programmed cell conductances in mS.
+      tia_gain: transimpedance gain folded with the 0.1 V unit so the output
+        is back in software units.
+      relu:   apply the diode-clamp ReLU epilogue.
+
+    The effective weight of a column pair is ``G_mem - G_fixed`` (the paper's
+    row-shared negative weight saves 50% of the cells).  Ohm's law gives the
+    per-cell current, Kirchhoff's current law the column sum.
+    """
+    vc = clamp_voltage(v)
+    w = g_mem - G_FIXED_MS
+    out = tia_gain * (vc @ w)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def time_embedding(t, w):
+    """Sinusoidal time embedding, paper Eq. 9: [sin(2 pi W t), cos(2 pi W t)].
+
+    Args:
+      t: (batch,) times in [0, T].
+      w: (d/2,) fixed random frequency vector.
+    Returns: (batch, d) embedding.
+    """
+    ang = 2.0 * jnp.pi * t[:, None] * w[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def score_mlp(x, emb, params, tia_gain=1.0):
+    """Fused 3-layer analog score network: 2 -> H -> H -> 2.
+
+    ``emb`` (batch, H) is the summed time(+condition) embedding injected as
+    extra bias current into *both* hidden layers (paper Fig. 2i / Fig. 4b).
+
+    ``params`` is ``dict(w1, b1, w2, b2, w3, b3)`` holding *conductance-space*
+    weights in mS (cell values; the G_fixed subtraction happens here, exactly
+    as in the macro).
+    """
+    h1 = crossbar_mvm(x, params["w1"], tia_gain)
+    h1 = jnp.maximum(h1 + params["b1"] + emb, 0.0)
+    h2 = crossbar_mvm(h1, params["w2"], tia_gain)
+    h2 = jnp.maximum(h2 + params["b2"] + emb, 0.0)
+    out = crossbar_mvm(h2, params["w3"], tia_gain)
+    return out + params["b3"]
+
+
+def euler_step(x, score, beta_t, dt, noise, mode_sde):
+    """One reverse-time Euler(-Maruyama) step of paper Eq. (1)/(2).
+
+    Integrating from t=T down to 0 with positive step ``dt``:
+
+      SDE: x' = x - dt * (f(x,t) - beta * score) + sqrt(beta*dt) * noise
+      ODE: x' = x - dt * (f(x,t) - beta/2 * score)
+
+    with f(x,t) = -beta/2 * x (paper Eq. 4) and g^2 = beta (Eq. 5).
+    ``mode_sde`` is 1.0 for SDE, 0.0 for ODE — kept as a float so a single
+    lowered artifact serves both samplers.
+    """
+    drift = -0.5 * beta_t * x
+    g2 = beta_t
+    rhs_sde = drift - g2 * score
+    rhs_ode = drift - 0.5 * g2 * score
+    rhs = mode_sde * rhs_sde + (1.0 - mode_sde) * rhs_ode
+    diff = mode_sde * jnp.sqrt(jnp.maximum(beta_t * dt, 0.0))
+    return x - dt * rhs + diff * noise
+
+
+def deconv2d(x, w, b, stride=2, pad=1):
+    """Transposed 2-D convolution, NHWC/HWIO, the VAE decoder building block.
+
+    out[n, oy, ox, co] = b[co] +
+        sum_{ky,kx,ci} x[n, iy, ix, ci] * w[ky, kx, ci, co]
+        where oy = iy*stride + ky - pad, ox likewise.
+
+    Output side = in_side * stride for kernel 4 / stride 2 / pad 1.
+    Implemented as zero-insertion upsampling followed by a direct correlation
+    with the *flipped* kernel — the standard transposed-conv identity — in
+    pure jnp, so it lowers cleanly and matches the rust implementation
+    loop-for-loop.
+    """
+    n, ih, iw, ci = x.shape
+    kh, kw, ci2, co = w.shape
+    assert ci == ci2, (ci, ci2)
+    oh, ow = ih * stride, iw * stride
+
+    # zero-insert upsample
+    up = jnp.zeros((n, ih * stride, iw * stride, ci), x.dtype)
+    up = up.at[:, ::stride, ::stride, :].set(x)
+    # pad so that a VALID correlation with the flipped kernel yields the
+    # transposed-conv output.
+    plo = kh - 1 - pad
+    phi_h = oh + pad - (ih - 1) * stride - 1
+    phi_w = ow + pad - (iw - 1) * stride - 1
+    up = jnp.pad(up, ((0, 0), (plo, phi_h), (plo, phi_w), (0, 0)))
+    wf = w[::-1, ::-1, :, :]  # flip taps
+
+    out = jnp.zeros((n, oh, ow, co), x.dtype)
+    for ky in range(kh):
+        for kx in range(kw):
+            patch = up[:, ky:ky + oh, kx:kx + ow, :]
+            out = out + jnp.einsum("nhwc,cf->nhwf", patch, wf[ky, kx])
+    return out + b
+
+
+def vae_decoder(z, params):
+    """Full VAE decoder: linear(2 -> 3*3*C) -> reshape -> deconv -> relu -> deconv -> tanh.
+
+    ``params``: dict with lin_w (2, 9C), lin_b, dc1_w (4,4,C,C2), dc1_b,
+    dc2_w (4,4,C2,1), dc2_b.  Output (batch, 12, 12) in [-1, 1].
+    """
+    c = params["dc1_w"].shape[2]
+    h = z @ params["lin_w"] + params["lin_b"]
+    h = jnp.maximum(h, 0.0)
+    h = h.reshape(-1, 3, 3, c)
+    h = deconv2d(h, params["dc1_w"], params["dc1_b"])
+    h = jnp.maximum(h, 0.0)
+    h = deconv2d(h, params["dc2_w"], params["dc2_b"])
+    return jnp.tanh(h[..., 0])

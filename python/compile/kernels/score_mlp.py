@@ -1,0 +1,93 @@
+"""Pallas kernel: fused 3-layer analog score network forward pass.
+
+The paper's score function s_theta(x, t) is a 2 -> H -> H -> 2 fully
+connected network realized on three crossbar arrays with the time (and
+condition) embedding injected as bias *currents* into both hidden layers
+(Fig. 2i, Fig. 4b).  This kernel fuses all three MVMs, both embedding
+injections, the bias adds and the diode-clamp ReLUs into a single VMEM-
+resident pass: the entire weight set is < 1 KB, so everything lives in
+VMEM and the grid runs over batch tiles only — the TPU analogue of the
+macro holding all conductances while voltages stream through.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_B = 64
+
+
+def _kernel(x_ref, emb_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref,
+            o_ref, *, tia_gain: tuple):
+    x = jnp.clip(x_ref[...], ref.V_CLAMP_LO, ref.V_CLAMP_HI)
+    emb = emb_ref[...]
+
+    # Layer 1: crossbar MVM + TIA, embedding injected as bias current.
+    # Per-layer TIA gains: each layer has its own feedback-resistor bank,
+    # letting the mapper use the full conductance window per layer.
+    h = jnp.dot(x, w1_ref[...] - ref.G_FIXED_MS,
+                preferred_element_type=jnp.float32) * tia_gain[0]
+    h = jnp.maximum(h + b1_ref[...] + emb, 0.0)
+    h = jnp.clip(h, ref.V_CLAMP_LO, ref.V_CLAMP_HI)
+
+    # Layer 2.
+    h = jnp.dot(h, w2_ref[...] - ref.G_FIXED_MS,
+                preferred_element_type=jnp.float32) * tia_gain[1]
+    h = jnp.maximum(h + b2_ref[...] + emb, 0.0)
+    h = jnp.clip(h, ref.V_CLAMP_LO, ref.V_CLAMP_HI)
+
+    # Output layer: linear (no activation).
+    o = jnp.dot(h, w3_ref[...] - ref.G_FIXED_MS,
+                preferred_element_type=jnp.float32) * tia_gain[2]
+    o_ref[...] = o + b3_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tia_gain", "block_b"))
+def score_mlp_kernel(x, emb, w1, b1, w2, b2, w3, b3,
+                     tia_gain: float | tuple = 1.0, block_b: int = BLOCK_B):
+    """Fused score-network forward; matches :func:`ref.score_mlp`.
+
+    Note the hidden activations pass through the protective clamp before
+    feeding the next crossbar, exactly as on the PCB (each layer's input is
+    a physical BL voltage).  The reference oracle applies the same clamp
+    inside :func:`ref.crossbar_mvm`.
+
+    Args:
+      x:   (batch, d_in) state voltages.
+      emb: (batch, H) summed time(+condition) embedding.
+      w*:  conductance-space weights (mS), b*: bias voltages.
+      tia_gain: single gain or per-layer (g1, g2, g3) tuple.
+    Returns: (batch, d_out) score estimate.
+    """
+    if not isinstance(tia_gain, tuple):
+        tia_gain = (float(tia_gain),) * 3
+    tia_gain = tuple(float(g) for g in tia_gain)
+    b, d_in = x.shape
+    hdim = w1.shape[1]
+    d_out = w3.shape[1]
+    blk = min(block_b, b)
+    grid = (pl.cdiv(b, blk),)
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        functools.partial(_kernel, tia_gain=tia_gain),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((blk, hdim), lambda i: (i, 0)),
+            full(d_in, hdim), full(hdim),
+            full(hdim, hdim), full(hdim),
+            full(hdim, d_out), full(d_out),
+        ],
+        out_specs=pl.BlockSpec((blk, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d_out), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), emb.astype(jnp.float32),
+      w1.astype(jnp.float32), b1.astype(jnp.float32),
+      w2.astype(jnp.float32), b2.astype(jnp.float32),
+      w3.astype(jnp.float32), b3.astype(jnp.float32))

@@ -1,0 +1,312 @@
+"""L2: the paper's score network — training-time (weight space) and
+deployment-time (conductance space, Pallas kernels) forward passes.
+
+Two parameterizations of the *same* function:
+
+* **weight space** — unconstrained software weights ``W``; used for offline
+  training (paper: "weights of the analog neural network are optimized
+  offline before being deployed on resistive memory").  Differentiable pure
+  jnp, includes the hardware voltage clamps so the trained network is
+  faithful to what the macro can realize.
+* **conductance space** — after :mod:`analog` maps ``W -> (G_mem, tia_gain)``
+  the deployment forward calls the fused Pallas kernel
+  (:func:`kernels.score_mlp_kernel`); this is what gets AOT-lowered into the
+  HLO artifacts the rust runtime executes.
+
+Equivalence contract: ``W = tia_gain * (G_mem - G_FIXED)`` makes the two
+paths agree exactly (up to 64-level conductance quantization), which pytest
+asserts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.score_mlp import score_mlp_kernel
+from .schedule import EPS_T, VpSchedule, DEFAULT as DEFAULT_SCHED
+
+HIDDEN = 14        # paper: each hidden layer contains 14 nodes with bias
+DIM = 2            # data/latent dimension
+N_CLASSES = 3      # letters H, K, U
+COND_DROP = 0.1    # classifier-free guidance: condition dropout rate
+
+
+class ScoreParams(NamedTuple):
+    """Weight-space parameters of the 3-layer score MLP (+ fixed encoders)."""
+
+    w1: jax.Array   # (DIM, HIDDEN)
+    b1: jax.Array   # (HIDDEN,)
+    w2: jax.Array   # (HIDDEN, HIDDEN)
+    b2: jax.Array   # (HIDDEN,)
+    w3: jax.Array   # (HIDDEN, DIM)
+    b3: jax.Array   # (DIM,)
+    emb_w: jax.Array   # (HIDDEN//2,) fixed random frequencies (Eq. 9)
+    cond_proj: jax.Array  # (N_CLASSES, HIDDEN) fixed random projection (Fig. 4b)
+
+
+def init_params(key, hidden: int = HIDDEN, dim: int = DIM,
+                n_classes: int = N_CLASSES) -> ScoreParams:
+    """He-style init for the trainables; fixed Gaussian encoders."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    he = lambda k, fi, fo: jax.random.normal(k, (fi, fo)) * jnp.sqrt(2.0 / fi)
+    return ScoreParams(
+        w1=he(k1, dim, hidden), b1=jnp.zeros(hidden),
+        w2=he(k2, hidden, hidden), b2=jnp.zeros(hidden),
+        w3=he(k3, hidden, dim), b3=jnp.zeros(dim),
+        emb_w=jax.random.normal(k4, (hidden // 2,)),
+        cond_proj=jax.random.normal(k5, (n_classes, hidden)) * 0.5,
+    )
+
+
+def make_embedding(params: ScoreParams, t, onehot=None):
+    """Summed time(+condition) embedding injected into both hidden layers.
+
+    ``onehot`` (batch, N_CLASSES) may contain all-zero rows — those receive
+    the unconditional embedding (classifier-free guidance's null token).
+    """
+    emb = ref.time_embedding(t, params.emb_w)
+    if onehot is not None:
+        emb = emb + onehot @ params.cond_proj
+    return emb
+
+
+def score_fwd(params: ScoreParams, x, t, onehot=None):
+    """Weight-space forward with the macro's voltage clamps (training path).
+
+    Matches the hardware semantics: input and hidden-layer voltages are
+    clipped to [-2, 4] software units (the [-0.2 V, 0.4 V] protective window)
+    before driving the next crossbar.
+    """
+    emb = make_embedding(params, t, onehot)
+    h = ref.clamp_voltage(x)
+    h = jnp.maximum(h @ params.w1 + params.b1 + emb, 0.0)
+    h = ref.clamp_voltage(h)
+    h = jnp.maximum(h @ params.w2 + params.b2 + emb, 0.0)
+    h = ref.clamp_voltage(h)
+    return h @ params.w3 + params.b3
+
+
+def score_fwd_analog(gparams: dict, params: ScoreParams, x, t, onehot=None):
+    """Conductance-space forward via the fused Pallas kernel (deployment path).
+
+    ``gparams`` comes from :func:`analog.map_to_conductance`:
+    ``dict(g1, g2, g3, b1, b2, b3, gains)`` with per-layer TIA gains (one
+    feedback-resistor bank per layer on the PCB).
+    """
+    emb = make_embedding(params, t, onehot)
+    return score_mlp_kernel(x, emb, gparams["g1"], gparams["b1"],
+                            gparams["g2"], gparams["b2"],
+                            gparams["g3"], gparams["b3"],
+                            tia_gain=tuple(gparams["gains"]))
+
+
+def cfg_score(params: ScoreParams, x, t, onehot, lam):
+    """Classifier-free guidance, paper Eq. 7: (1+lam) s(x,c,t) - lam s(x,t).
+
+    Applied in network (epsilon) space; since score = -net/sigma is linear
+    in net, guiding either space is equivalent.
+    """
+    s_cond = score_fwd(params, x, t, onehot)
+    s_unc = score_fwd(params, x, t, jnp.zeros_like(onehot))
+    return (1.0 + lam) * s_cond - lam * s_unc
+
+
+def score_from_net(net_out, sigma_t):
+    """Epsilon-parameterization: score = -net(x, t) / sigma(t).
+
+    The 1/sigma rescale is folded into the predetermined ``g^2(t)/sigma(t)``
+    multiplier waveform on hardware (see schedule.py docstring).
+    """
+    return -net_out / sigma_t
+
+
+def quantize_weights_ste(params: ScoreParams) -> ScoreParams:
+    """Hardware-aware quantization with a straight-through estimator.
+
+    Each weight matrix is mapped through the deployment pipeline — per-layer
+    TIA gain, conductance window, 64 linear levels — and back, exactly as
+    :mod:`analog` will do at export; gradients pass through unchanged (STE).
+    Training the final stretch with this in the loss is what makes the
+    *deployed* (conductance-space) network match the trained one: without it
+    the 64-level snap of large trained weights costs ~0.5 output error on a
+    O(1) signal.
+    """
+    from .kernels.ref import G_CELL_HI_MS, G_CELL_LO_MS, G_FIXED_MS, N_LEVELS
+
+    def q(w):
+        neg_max = G_FIXED_MS - G_CELL_LO_MS
+        pos_max = G_CELL_HI_MS - G_FIXED_MS
+        gain = jnp.maximum(jnp.max(jnp.maximum(w, 0.0)) / pos_max,
+                           jnp.max(jnp.maximum(-w, 0.0)) / neg_max)
+        gain = jax.lax.stop_gradient(jnp.maximum(gain, 1e-6))
+        g = jnp.clip(w / gain + G_FIXED_MS, G_CELL_LO_MS, G_CELL_HI_MS)
+        step = (G_CELL_HI_MS - G_CELL_LO_MS) / (N_LEVELS - 1)
+        gq = G_CELL_LO_MS + jnp.round((g - G_CELL_LO_MS) / step) * step
+        wq = gain * (gq - G_FIXED_MS)
+        return w + jax.lax.stop_gradient(wq - w)
+
+    return params._replace(w1=q(params.w1), w2=q(params.w2), w3=q(params.w3))
+
+
+# --- denoising score matching training --------------------------------------
+
+def dsm_loss(params: ScoreParams, key, x0, onehot=None,
+             sched: VpSchedule = DEFAULT_SCHED, cond_drop: float = COND_DROP,
+             t_power: float = 1.6, qat: bool = False):
+    """Denoising score-matching loss, epsilon-parameterized.
+
+    x_t = alpha(t) x0 + sigma(t) eps; the network predicts eps, so
+    loss = E || net(x_t, t) - eps ||^2 — the standard DDPM objective,
+    equivalent to sigma^2-weighted score matching.  The net output stays
+    O(1), which is what the voltage-clamped analog MLP can represent.
+    With conditions, each sample's label is dropped with prob ``cond_drop``
+    (the CFG null token) so one network learns both scores.
+
+    ``t_power`` > 1 oversamples small t (t = eps + (T-eps) u^power): the
+    14-unit analog net is capacity-bound and the small-t score shapes the
+    final sharpness of the generated distribution.
+    """
+    kt, ke, kd = jax.random.split(key, 3)
+    n = x0.shape[0]
+    u = jax.random.uniform(kt, (n,))
+    t = EPS_T + (sched.t_end - EPS_T) * u ** t_power
+    eps = jax.random.normal(ke, x0.shape)
+    alpha = sched.alpha(t)[:, None]
+    sigma = sched.sigma(t)[:, None]
+    xt = alpha * x0 + sigma * eps
+    if onehot is not None:
+        keep = (jax.random.uniform(kd, (n, 1)) > cond_drop).astype(x0.dtype)
+        onehot = onehot * keep
+    fwd_params = quantize_weights_ste(params) if qat else params
+    net = score_fwd(fwd_params, xt, t, onehot)
+    return jnp.mean(jnp.sum((net - eps) ** 2, axis=-1))
+
+
+# --- minimal Adam (no optax in the offline image) ----------------------------
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: ScoreParams
+    nu: ScoreParams
+
+
+def adam_init(params) -> AdamState:
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(jnp.zeros((), jnp.int32), z, z)
+
+
+def adam_update(grads, state: AdamState, params, lr=1e-3, b1=0.9, b2=0.999,
+                eps=1e-8):
+    step = state.step + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                state.nu, grads)
+    mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** step), mu)
+    vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** step), nu)
+    new = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mhat, vhat)
+    return new, AdamState(step, mu, nu)
+
+
+def train_score(key, data: np.ndarray, labels: np.ndarray | None = None,
+                steps: int = 12000, batch: int = 1024, lr: float = 3e-3,
+                sched: VpSchedule = DEFAULT_SCHED,
+                freeze_encoders: bool = False, qat_frac: float = 0.15,
+                weight_clip: float | None = 1.2):
+    """Offline training loop (the paper optimizes weights offline, Fig. 3b).
+
+    Cosine learning-rate decay (to 10% of ``lr``) and small-t oversampling
+    — both needed to squeeze the paper's 14-hidden-unit budget.  The time/
+    condition encoders stay sinusoidal / linear-projection shaped; their
+    frequencies and projection are trained unless ``freeze_encoders`` (on
+    the PCB they become the pre-programmed DAC waveforms either way).
+
+    Two hardware-deployment measures (ablated in EXPERIMENTS.md):
+
+    * ``weight_clip`` — weights are projected into ±clip after every update,
+      bounding the per-layer TIA gain and therefore the 64-level
+      quantization step (smaller gain ⇒ finer effective weight grid).
+    * ``qat_frac`` — the final fraction of steps run **quantization-aware**:
+      the forward pass applies the full deployment mapping (per-layer gain,
+      64 conductance levels) with straight-through gradients, so the
+      exported conductances reproduce the trained function
+      (:func:`quantize_weights_ste`).
+
+    Returns (trained :class:`ScoreParams`, final loss).
+    """
+    kinit, kloop = jax.random.split(key)
+    params = init_params(kinit)
+    state = adam_init(params)
+    data = jnp.asarray(data, jnp.float32)
+    onehot_all = (None if labels is None
+                  else jax.nn.one_hot(jnp.asarray(labels), N_CLASSES))
+
+    @functools.partial(jax.jit, static_argnames=("qat",))
+    def step_fn(params, state, key, lr_t, qat):
+        kb, kl = jax.random.split(key)
+        idx = jax.random.randint(kb, (batch,), 0, data.shape[0])
+        x0 = data[idx]
+        oh = None if onehot_all is None else onehot_all[idx]
+        loss, grads = jax.value_and_grad(dsm_loss)(params, kl, x0, oh,
+                                                   sched=sched, qat=qat)
+        if freeze_encoders:
+            grads = grads._replace(emb_w=jnp.zeros_like(grads.emb_w),
+                                   cond_proj=jnp.zeros_like(grads.cond_proj))
+        params, state = adam_update(grads, state, params, lr=lr_t)
+        if weight_clip is not None:
+            c = weight_clip
+            params = params._replace(w1=jnp.clip(params.w1, -c, c),
+                                     w2=jnp.clip(params.w2, -c, c),
+                                     w3=jnp.clip(params.w3, -c, c))
+        return params, state, loss
+
+    qat_start = int(steps * (1.0 - qat_frac))
+    keys = jax.random.split(kloop, steps)
+    loss = jnp.inf
+    for i in range(steps):
+        lr_t = lr * (0.9 * 0.5 * (1.0 + np.cos(np.pi * i / steps)) + 0.1)
+        params, state, loss = step_fn(params, state, keys[i], lr_t,
+                                      i >= qat_start)
+    return params, float(loss)
+
+
+# --- reference sampler (python-side quality gate) ----------------------------
+
+def sample(params: ScoreParams, key, n: int, n_steps: int = 200,
+           mode: str = "ode", onehot=None, lam: float = 0.0,
+           sched: VpSchedule = DEFAULT_SCHED):
+    """Discrete reverse-time sampler used to gate training quality at build
+    time; the production samplers live in rust.  Returns (n, DIM)."""
+    kx, kn = jax.random.split(key)
+    x = jax.random.normal(kx, (n, DIM))
+    ts = jnp.linspace(sched.t_end, EPS_T, n_steps + 1)
+    noises = jax.random.normal(kn, (n_steps, n, DIM))
+
+    def body(x, inp):
+        t0, t1, z = inp
+        dt = t0 - t1
+        tb = jnp.full((n,), t0)
+        if onehot is not None:
+            net = cfg_score(params, x, tb, onehot, lam)
+        else:
+            net = score_fwd(params, x, tb)
+        s = score_from_net(net, sched.sigma(t0))
+        beta = sched.beta(t0)
+        x = ref.euler_step(x, s, beta, dt, z, 1.0 if mode == "sde" else 0.0)
+        # The macro's protective clamp also bounds the *state* voltages (the
+        # integrator output drives the BLs through the same window): this is
+        # what keeps far-tail trajectories from running away, on hardware
+        # and in every sampler here.
+        x = ref.clamp_voltage(x)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, (ts[:-1], ts[1:], noises))
+    return x

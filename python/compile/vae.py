@@ -1,0 +1,128 @@
+"""L2: the outer VAE of the latent-diffusion task (paper Fig. 4a).
+
+Encoder (build-time only, never deployed): MLP 144 -> 64 -> (mu, logvar),
+latent dim 2.  Decoder (deployed on resistive memory, Fig. 2k): one linear
+layer + two deconvolution layers, exactly the paper's topology; its forward
+is mirrored by :func:`kernels.ref.vae_decoder` and the Pallas
+:func:`kernels.deconv.deconv2d_kernel` for the AOT artifact.
+
+Training loss is paper Eq. 10: reconstruction MSE plus a KL that pins each
+class's latent posterior to a *preset center* ``mu_hat_i`` — that is what
+makes the three conditional distributions of Fig. 4d separable clusters.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .datasets import CLASS_CENTERS, IMG
+from .model import AdamState, adam_init, adam_update
+
+LATENT = 2
+ENC_HIDDEN = 64
+DEC_C1 = 8   # channels after the linear layer / input of deconv1
+DEC_C2 = 8   # channels between deconv1 and deconv2
+KL_GAMMA = 0.4  # Eq. 10's gamma balancing MSE vs KL (strong enough to pin
+                # each class's latent cluster to its preset center)
+
+
+class VaeParams(NamedTuple):
+    # encoder
+    e_w1: jax.Array  # (144, ENC_HIDDEN)
+    e_b1: jax.Array
+    e_wmu: jax.Array  # (ENC_HIDDEN, LATENT)
+    e_bmu: jax.Array
+    e_wlv: jax.Array  # (ENC_HIDDEN, LATENT)
+    e_blv: jax.Array
+    # decoder (deployed)
+    lin_w: jax.Array  # (LATENT, 3*3*DEC_C1)
+    lin_b: jax.Array
+    dc1_w: jax.Array  # (4, 4, DEC_C1, DEC_C2)
+    dc1_b: jax.Array
+    dc2_w: jax.Array  # (4, 4, DEC_C2, 1)
+    dc2_b: jax.Array
+
+
+def init_vae(key) -> VaeParams:
+    ks = jax.random.split(key, 6)
+    he = lambda k, *s: jax.random.normal(k, s) * jnp.sqrt(2.0 / s[0])
+    npix = IMG * IMG
+    return VaeParams(
+        e_w1=he(ks[0], npix, ENC_HIDDEN), e_b1=jnp.zeros(ENC_HIDDEN),
+        e_wmu=he(ks[1], ENC_HIDDEN, LATENT), e_bmu=jnp.zeros(LATENT),
+        e_wlv=he(ks[2], ENC_HIDDEN, LATENT), e_blv=jnp.zeros(LATENT),
+        lin_w=he(ks[3], LATENT, 3 * 3 * DEC_C1), lin_b=jnp.zeros(3 * 3 * DEC_C1),
+        dc1_w=jax.random.normal(ks[4], (4, 4, DEC_C1, DEC_C2)) * 0.1,
+        dc1_b=jnp.zeros(DEC_C2),
+        dc2_w=jax.random.normal(ks[5], (4, 4, DEC_C2, 1)) * 0.1,
+        dc2_b=jnp.zeros(1),
+    )
+
+
+def encode(params: VaeParams, x_flat):
+    """x_flat (batch, 144) in [-1,1] -> (mu, logvar), each (batch, 2)."""
+    h = jnp.maximum(x_flat @ params.e_w1 + params.e_b1, 0.0)
+    return (h @ params.e_wmu + params.e_bmu,
+            h @ params.e_wlv + params.e_blv)
+
+
+def decoder_dict(params: VaeParams) -> dict:
+    """Decoder params in the layout :func:`kernels.ref.vae_decoder` expects."""
+    return dict(lin_w=params.lin_w, lin_b=params.lin_b,
+                dc1_w=params.dc1_w, dc1_b=params.dc1_b,
+                dc2_w=params.dc2_w, dc2_b=params.dc2_b)
+
+
+def decode(params: VaeParams, z):
+    """(batch, 2) latent -> (batch, 12, 12) image in [-1, 1]."""
+    from .kernels import ref
+    return ref.vae_decoder(z, decoder_dict(params))
+
+
+def vae_loss(params: VaeParams, key, x_img, labels, gamma: float = KL_GAMMA):
+    """Paper Eq. 10: MSE(X, X') + gamma * KL(N(mu, sigma^2) || N(mu_hat_c, 1))."""
+    x_flat = x_img.reshape(x_img.shape[0], -1)
+    mu, logvar = encode(params, x_flat)
+    eps = jax.random.normal(key, mu.shape)
+    z = mu + jnp.exp(0.5 * logvar) * eps
+    recon = decode(params, z)
+    mse = jnp.mean(jnp.sum((recon - x_img) ** 2, axis=(1, 2)))
+    centers = jnp.asarray(CLASS_CENTERS)[labels]  # (batch, 2)
+    kl = 0.5 * jnp.sum(jnp.exp(logvar) + (mu - centers) ** 2 - 1.0 - logvar,
+                       axis=-1)
+    return mse + gamma * jnp.mean(kl)
+
+
+def train_vae(key, imgs: np.ndarray, labels: np.ndarray, steps: int = 3000,
+              batch: int = 256, lr: float = 1e-3, gamma: float = KL_GAMMA):
+    """Train the VAE; returns (params, final_loss)."""
+    kinit, kloop = jax.random.split(key)
+    params = init_vae(kinit)
+    state = adam_init(params)
+    imgs = jnp.asarray(imgs, jnp.float32)
+    labels = jnp.asarray(labels, jnp.int32)
+
+    @jax.jit
+    def step_fn(params, state, key):
+        kb, kl = jax.random.split(key)
+        idx = jax.random.randint(kb, (batch,), 0, imgs.shape[0])
+        loss, grads = jax.value_and_grad(vae_loss)(params, kl, imgs[idx],
+                                                   labels[idx], gamma)
+        params, state = adam_update(grads, state, params, lr=lr)
+        return params, state, loss
+
+    keys = jax.random.split(kloop, steps)
+    loss = jnp.inf
+    for i in range(steps):
+        params, state, loss = step_fn(params, state, keys[i])
+    return params, float(loss)
+
+
+def encode_dataset(params: VaeParams, imgs: np.ndarray) -> np.ndarray:
+    """Posterior means of the whole dataset — the latents the score net trains on."""
+    mu, _ = encode(params, jnp.asarray(imgs).reshape(imgs.shape[0], -1))
+    return np.asarray(mu, dtype=np.float32)

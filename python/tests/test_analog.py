@@ -1,0 +1,88 @@
+"""Weight <-> conductance mapping and noise-model statistics."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from compile import analog, model
+from compile.kernels import ref
+
+
+def test_required_gain_fits_window():
+    rng = np.random.default_rng(0)
+    ws = [rng.standard_normal((5, 7)).astype(np.float32) for _ in range(3)]
+    gain = analog.required_gain(ws)
+    for w in ws:
+        g = analog.weight_to_conductance(w, gain)
+        assert g.min() >= ref.G_CELL_LO_MS - 1e-9
+        assert g.max() <= ref.G_CELL_HI_MS + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31), scale=st.floats(0.01, 10.0))
+def test_roundtrip_within_quantization(seed, scale):
+    rng = np.random.default_rng(seed)
+    w = (scale * rng.standard_normal((8, 8))).astype(np.float32)
+    gain = analog.required_gain([w])
+    g = analog.quantize(analog.weight_to_conductance(w, gain))
+    w2 = analog.conductance_to_weight(g, gain)
+    qstep = gain * (ref.G_CELL_HI_MS - ref.G_CELL_LO_MS) / (ref.N_LEVELS - 1)
+    assert np.abs(w2 - w).max() <= 0.5 * qstep + 1e-6
+
+
+def test_quantize_snaps_to_levels():
+    g = np.linspace(ref.G_CELL_LO_MS, ref.G_CELL_HI_MS, 1000)
+    q = analog.quantize(g)
+    assert len(np.unique(np.round(q, 9))) <= ref.N_LEVELS
+    step = (ref.G_CELL_HI_MS - ref.G_CELL_LO_MS) / (ref.N_LEVELS - 1)
+    k = (q - ref.G_CELL_LO_MS) / step
+    np.testing.assert_allclose(k, np.round(k), atol=1e-4)
+
+
+def test_write_noise_statistics():
+    rng = np.random.default_rng(1)
+    g = np.full(200_000, 0.06, dtype=np.float32)
+    gn = analog.add_write_noise(g, rng)
+    resid = gn - g
+    assert abs(resid.mean()) < 2e-5
+    # truncated at 2 sigma => std slightly below nominal
+    assert 0.7 * analog.WRITE_NOISE_STD_MS < resid.std() < analog.WRITE_NOISE_STD_MS
+    assert np.abs(resid).max() <= 2.0 * analog.WRITE_NOISE_STD_MS + 1e-9
+
+
+def test_read_noise_proportional_to_g():
+    """Fig. 2e/5c: read fluctuation scales with the mean conductance."""
+    rng = np.random.default_rng(2)
+    lo = analog.add_read_noise(np.full(100_000, 0.02, np.float32), rng) - 0.02
+    hi = analog.add_read_noise(np.full(100_000, 0.10, np.float32), rng) - 0.10
+    assert hi.std() > 3 * lo.std()
+    np.testing.assert_allclose(hi.std(), 0.10 * analog.READ_NOISE_FRAC, rtol=0.1)
+
+
+def test_map_to_conductance_structure():
+    p = model.init_params(jax.random.PRNGKey(0))
+    gp = analog.map_to_conductance(p)
+    assert set(gp) == {"g1", "g2", "g3", "b1", "b2", "b3", "gains"}
+    assert len(gp["gains"]) == 3
+    assert gp["g1"].shape == (model.DIM, model.HIDDEN)
+    assert gp["g2"].shape == (model.HIDDEN, model.HIDDEN)
+    assert gp["g3"].shape == (model.HIDDEN, model.DIM)
+    for k in ("g1", "g2", "g3"):
+        assert gp[k].min() >= ref.G_CELL_LO_MS - 1e-9
+        assert gp[k].max() <= ref.G_CELL_HI_MS + 1e-9
+
+
+def test_write_noise_degrades_gracefully():
+    """Programming error perturbs the forward pass boundedly (Fig. 5e premise)."""
+    import jax.numpy as jnp
+    p = model.init_params(jax.random.PRNGKey(3))
+    clean = analog.map_to_conductance(p)
+    noisy = analog.map_to_conductance(p, write_noise_rng=np.random.default_rng(0))
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((32, 2)), jnp.float32)
+    t = jnp.full((32,), 0.5)
+    a = np.asarray(model.score_fwd_analog(clean, p, x, t))
+    b = np.asarray(model.score_fwd_analog(noisy, p, x, t))
+    d = np.abs(a - b).max()
+    assert 0 < d < 1.0  # perturbed, but not destroyed

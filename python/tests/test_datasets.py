@@ -1,0 +1,59 @@
+"""Synthetic dataset invariants (circle + EMNIST-substitute glyphs)."""
+
+import numpy as np
+import pytest
+
+from compile import datasets
+
+
+def test_circle_radius_statistics():
+    rng = np.random.default_rng(0)
+    x = datasets.sample_circle(50_000, rng, radius=1.0, radial_std=0.05)
+    r = np.hypot(x[:, 0], x[:, 1])
+    assert abs(r.mean() - 1.0) < 0.01
+    assert abs(r.std() - 0.05) < 0.01
+
+
+def test_circle_angle_uniform():
+    rng = np.random.default_rng(1)
+    x = datasets.sample_circle(50_000, rng)
+    theta = np.arctan2(x[:, 1], x[:, 0])
+    hist, _ = np.histogram(theta, bins=16, range=(-np.pi, np.pi))
+    assert hist.min() > 0.8 * hist.mean()
+
+
+def test_letters_shapes_and_range():
+    imgs, labels = datasets.letters_dataset(32, seed=0)
+    assert imgs.shape == (96, datasets.IMG, datasets.IMG)
+    assert labels.shape == (96,)
+    assert imgs.min() >= -1.0 and imgs.max() <= 1.0
+    assert set(np.unique(labels)) == {0, 1, 2}
+
+
+def test_letters_classes_distinct():
+    """Mean glyphs of the three classes must be visually distinct."""
+    imgs, labels = datasets.letters_dataset(64, seed=1)
+    means = [imgs[labels == c].mean(axis=0) for c in range(3)]
+    for i in range(3):
+        for j in range(i + 1, 3):
+            assert np.abs(means[i] - means[j]).mean() > 0.05
+
+
+def test_letters_deterministic_per_seed():
+    a, la = datasets.letters_dataset(8, seed=3)
+    b, lb = datasets.letters_dataset(8, seed=3)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+
+
+def test_letters_vary_within_class():
+    imgs, labels = datasets.letters_dataset(16, seed=4)
+    h = imgs[labels == 0]
+    assert np.abs(h[0] - h[1]).max() > 0.1  # affine jitter present
+
+
+def test_class_centers_separated():
+    c = datasets.CLASS_CENTERS
+    for i in range(3):
+        for j in range(i + 1, 3):
+            assert np.linalg.norm(c[i] - c[j]) > 2.0

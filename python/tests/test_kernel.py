@@ -1,0 +1,171 @@
+"""Kernel-vs-ref correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes, seeds, gains and epilogues of every Pallas kernel
+against the pure-jnp oracles in ``compile.kernels.ref``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.crossbar import crossbar_mvm_kernel
+from compile.kernels.score_mlp import score_mlp_kernel
+from compile.kernels.integrator import euler_step_kernel
+from compile.kernels.deconv import deconv2d_kernel
+
+HSETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# --- crossbar ----------------------------------------------------------------
+
+@settings(**HSETTINGS)
+@given(b=st.integers(1, 97), n_in=st.integers(1, 32), n_out=st.integers(1, 32),
+       gain=st.floats(0.5, 50.0), relu=st.booleans(), seed=st.integers(0, 2**31))
+def test_crossbar_matches_ref(b, n_in, n_out, gain, relu, seed):
+    rng = _rng(seed)
+    v = (3.0 * rng.standard_normal((b, n_in))).astype(np.float32)
+    g = rng.uniform(ref.G_CELL_LO_MS, ref.G_CELL_HI_MS,
+                    (n_in, n_out)).astype(np.float32)
+    got = crossbar_mvm_kernel(v, g, tia_gain=gain, relu=relu)
+    want = ref.crossbar_mvm(v, g, gain, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_crossbar_clamps_input():
+    """Voltages beyond the protective window must be clipped, not passed."""
+    v = np.array([[10.0, -10.0]], dtype=np.float32)
+    g = np.full((2, 1), 0.06, dtype=np.float32)
+    got = np.asarray(crossbar_mvm_kernel(v, g, tia_gain=1.0))
+    want = (4.0 + -2.0) * (0.06 - ref.G_FIXED_MS)
+    np.testing.assert_allclose(got[0, 0], want, rtol=1e-5)
+
+
+def test_crossbar_zero_weight_at_gfixed():
+    """A cell programmed exactly to G_FIXED is a zero weight (differential pair)."""
+    v = np.ones((4, 3), dtype=np.float32)
+    g = np.full((3, 2), ref.G_FIXED_MS, dtype=np.float32)
+    got = np.asarray(crossbar_mvm_kernel(v, g))
+    np.testing.assert_allclose(got, 0.0, atol=1e-7)
+
+
+# --- fused score MLP ----------------------------------------------------------
+
+def _score_params(rng, hidden=14, dim=2):
+    return dict(
+        w1=rng.uniform(ref.G_CELL_LO_MS, ref.G_CELL_HI_MS, (dim, hidden)).astype(np.float32),
+        b1=(0.3 * rng.standard_normal(hidden)).astype(np.float32),
+        w2=rng.uniform(ref.G_CELL_LO_MS, ref.G_CELL_HI_MS, (hidden, hidden)).astype(np.float32),
+        b2=(0.3 * rng.standard_normal(hidden)).astype(np.float32),
+        w3=rng.uniform(ref.G_CELL_LO_MS, ref.G_CELL_HI_MS, (hidden, dim)).astype(np.float32),
+        b3=(0.3 * rng.standard_normal(dim)).astype(np.float32),
+    )
+
+
+@settings(**HSETTINGS)
+@given(b=st.integers(1, 70), hidden=st.sampled_from([6, 14, 20]),
+       gain=st.floats(1.0, 40.0), seed=st.integers(0, 2**31))
+def test_score_mlp_matches_ref(b, hidden, gain, seed):
+    rng = _rng(seed)
+    p = _score_params(rng, hidden)
+    x = (2.0 * rng.standard_normal((b, 2))).astype(np.float32)
+    emb = rng.standard_normal((b, hidden)).astype(np.float32)
+    got = score_mlp_kernel(x, emb, p["w1"], p["b1"], p["w2"], p["b2"],
+                           p["w3"], p["b3"], tia_gain=gain)
+    want = ref.score_mlp(x, emb, p, gain)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_score_mlp_embedding_injection():
+    """Zero embedding vs nonzero embedding must differ (bias-current path)."""
+    rng = _rng(0)
+    p = _score_params(rng)
+    x = rng.standard_normal((8, 2)).astype(np.float32)
+    e0 = np.zeros((8, 14), dtype=np.float32)
+    e1 = np.ones((8, 14), dtype=np.float32)
+    a = np.asarray(score_mlp_kernel(x, e0, p["w1"], p["b1"], p["w2"], p["b2"],
+                                    p["w3"], p["b3"], tia_gain=10.0))
+    bb = np.asarray(score_mlp_kernel(x, e1, p["w1"], p["b1"], p["w2"], p["b2"],
+                                     p["w3"], p["b3"], tia_gain=10.0))
+    assert np.abs(a - bb).max() > 1e-4
+
+
+# --- integrator step -----------------------------------------------------------
+
+@settings(**HSETTINGS)
+@given(b=st.integers(1, 97), d=st.integers(1, 8),
+       beta=st.floats(1e-3, 12.0), dt=st.floats(1e-4, 0.1),
+       mode=st.sampled_from([0.0, 1.0]), seed=st.integers(0, 2**31))
+def test_euler_step_matches_ref(b, d, beta, dt, mode, seed):
+    rng = _rng(seed)
+    x = rng.standard_normal((b, d)).astype(np.float32)
+    s = rng.standard_normal((b, d)).astype(np.float32)
+    z = rng.standard_normal((b, d)).astype(np.float32)
+    got = euler_step_kernel(x, s, z, beta, dt, mode)
+    want = ref.euler_step(x, s, beta, dt, z, mode)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_euler_ode_ignores_noise():
+    rng = _rng(1)
+    x = rng.standard_normal((16, 2)).astype(np.float32)
+    s = rng.standard_normal((16, 2)).astype(np.float32)
+    z1 = rng.standard_normal((16, 2)).astype(np.float32)
+    z2 = rng.standard_normal((16, 2)).astype(np.float32)
+    a = np.asarray(euler_step_kernel(x, s, z1, 0.5, 0.01, 0.0))
+    b = np.asarray(euler_step_kernel(x, s, z2, 0.5, 0.01, 0.0))
+    np.testing.assert_allclose(a, b, atol=1e-7)
+
+
+def test_euler_sde_noise_scale():
+    """Wiener increment must enter with sqrt(beta*dt) magnitude."""
+    x = np.zeros((1, 2), dtype=np.float32)
+    s = np.zeros((1, 2), dtype=np.float32)
+    z = np.ones((1, 2), dtype=np.float32)
+    beta, dt = 0.4, 0.01
+    got = np.asarray(euler_step_kernel(x, s, z, beta, dt, 1.0))
+    np.testing.assert_allclose(got, np.sqrt(beta * dt), rtol=1e-5)
+
+
+# --- deconv ---------------------------------------------------------------------
+
+@settings(**HSETTINGS)
+@given(b=st.integers(1, 9), side=st.sampled_from([3, 6]),
+       ci=st.integers(1, 8), co=st.integers(1, 8), seed=st.integers(0, 2**31))
+def test_deconv_matches_ref(b, side, ci, co, seed):
+    rng = _rng(seed)
+    x = rng.standard_normal((b, side, side, ci)).astype(np.float32)
+    w = (0.2 * rng.standard_normal((4, 4, ci, co))).astype(np.float32)
+    bias = (0.1 * rng.standard_normal(co)).astype(np.float32)
+    got = deconv2d_kernel(x, w, bias)
+    want = ref.deconv2d(x, w, bias)
+    assert got.shape == (b, 2 * side, 2 * side, co)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_deconv_epilogues():
+    rng = _rng(3)
+    x = rng.standard_normal((2, 3, 3, 4)).astype(np.float32)
+    w = rng.standard_normal((4, 4, 4, 2)).astype(np.float32)
+    bias = np.zeros(2, dtype=np.float32)
+    r = np.asarray(deconv2d_kernel(x, w, bias, relu=True))
+    t = np.asarray(deconv2d_kernel(x, w, bias, tanh=True))
+    assert (r >= 0).all()
+    assert (np.abs(t) <= 1.0).all()
+    base = np.asarray(ref.deconv2d(x, w, bias))
+    np.testing.assert_allclose(r, np.maximum(base, 0), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(t, np.tanh(base), rtol=2e-4, atol=2e-4)
+
+
+def test_deconv_upsamples_exactly_2x():
+    """kernel 4 / stride 2 / pad 1 doubles the spatial side — decoder geometry 3->6->12."""
+    x = np.ones((1, 3, 3, 1), dtype=np.float32)
+    w = np.ones((4, 4, 1, 1), dtype=np.float32)
+    out = deconv2d_kernel(x, w, np.zeros(1, dtype=np.float32))
+    assert out.shape == (1, 6, 6, 1)

@@ -1,0 +1,89 @@
+"""Score-model semantics: weight/conductance-space equivalence, CFG, DSM."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import analog, model
+from compile.kernels import ref
+from compile.schedule import DEFAULT as SCHED
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+def test_score_fwd_shapes(params):
+    x = jnp.zeros((5, model.DIM))
+    t = jnp.linspace(0.1, 0.9, 5)
+    out = model.score_fwd(params, x, t)
+    assert out.shape == (5, model.DIM)
+
+
+def test_embedding_sum_condition(params):
+    """Conditional embedding must be time-embedding + projected one-hot (Fig. 4b)."""
+    t = jnp.array([0.4, 0.6])
+    oh = jax.nn.one_hot(jnp.array([1, 2]), model.N_CLASSES)
+    e = np.asarray(model.make_embedding(params, t, oh))
+    e_t = np.asarray(model.make_embedding(params, t))
+    e_c = np.asarray(oh @ params.cond_proj)
+    np.testing.assert_allclose(e, e_t + e_c, rtol=1e-6)
+
+
+def test_cfg_lambda_zero_is_conditional(params):
+    """Eq. 7 with lam=0 reduces to the conditional score."""
+    x = jnp.ones((4, 2)) * 0.2
+    t = jnp.full((4,), 0.5)
+    oh = jax.nn.one_hot(jnp.array([0, 1, 2, 0]), 3)
+    a = np.asarray(model.cfg_score(params, x, t, oh, 0.0))
+    b = np.asarray(model.score_fwd(params, x, t, oh))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_cfg_extrapolates(params):
+    """(1+lam) s_c - lam s_u: lam=1 doubles the conditional pull."""
+    x = jnp.ones((1, 2)) * 0.1
+    t = jnp.full((1,), 0.5)
+    oh = jax.nn.one_hot(jnp.array([1]), 3)
+    s_c = np.asarray(model.score_fwd(params, x, t, oh))
+    s_u = np.asarray(model.score_fwd(params, x, t, jnp.zeros_like(oh)))
+    got = np.asarray(model.cfg_score(params, x, t, oh, 1.0))
+    np.testing.assert_allclose(got, 2 * s_c - s_u, rtol=1e-5)
+
+
+def test_analog_equals_weight_space_after_mapping(params):
+    """Deployment contract: conductance-space fwd == weight-space fwd up to
+    64-level quantization error."""
+    gp = analog.map_to_conductance(params)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((64, 2)), jnp.float32)
+    t = jnp.linspace(0.05, 0.95, 64)
+    want = np.asarray(model.score_fwd(params, x, t))
+    got = np.asarray(model.score_fwd_analog(gp, params, x, t))
+    # quantization step in weight space = gain * window/63, per layer
+    qstep = max(gp["gains"]) * (ref.G_CELL_HI_MS - ref.G_CELL_LO_MS) / 63
+    tol = 10 * qstep  # worst-case accumulation over 3 tiny layers
+    np.testing.assert_allclose(got, want, atol=tol)
+
+
+def test_dsm_loss_decreases_under_training():
+    rng = np.random.default_rng(0)
+    from compile import datasets
+    data = datasets.sample_circle(2048, rng)
+    p0 = model.init_params(jax.random.PRNGKey(1))
+    l0 = float(model.dsm_loss(p0, jax.random.PRNGKey(2), jnp.asarray(data[:512])))
+    p1, l1 = model.train_score(jax.random.PRNGKey(1), data, steps=300, batch=256)
+    assert l1 < l0
+
+
+def test_sample_respects_state_clamp(params):
+    out = np.asarray(model.sample(params, jax.random.PRNGKey(0), 64, n_steps=20))
+    assert out.min() >= ref.V_CLAMP_LO - 1e-6
+    assert out.max() <= ref.V_CLAMP_HI + 1e-6
+
+
+def test_score_from_net_sign():
+    """score = -net/sigma: positive net must give negative score."""
+    s = np.asarray(model.score_from_net(jnp.ones((2, 2)), 0.5))
+    np.testing.assert_allclose(s, -2.0)

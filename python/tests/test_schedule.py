@@ -1,0 +1,65 @@
+"""VP-SDE schedule invariants."""
+
+import numpy as np
+import pytest
+
+from compile.schedule import DEFAULT, EPS_T, VpSchedule
+
+
+def test_beta_endpoints():
+    s = DEFAULT
+    assert np.isclose(float(s.beta(0.0)), s.beta_min)
+    assert np.isclose(float(s.beta(s.t_end)), s.beta_max)
+
+
+def test_beta_monotone():
+    s = DEFAULT
+    ts = np.linspace(0, s.t_end, 100)
+    bs = np.asarray([float(s.beta(t)) for t in ts])
+    assert (np.diff(bs) > 0).all()
+
+
+def test_alpha_sigma_variance_preserving():
+    """alpha^2 + sigma^2 == 1 for all t (the VP property)."""
+    s = DEFAULT
+    for t in np.linspace(EPS_T, s.t_end, 37):
+        a, sg = float(s.alpha(t)), float(s.sigma(t))
+        assert np.isclose(a * a + sg * sg, 1.0, atol=1e-6)
+
+
+def test_int_beta_matches_numeric():
+    s = DEFAULT
+    ts = np.linspace(0, s.t_end, 2001)
+    num = np.cumsum([float(s.beta(t)) for t in ts]) * (ts[1] - ts[0])
+    assert np.isclose(float(s.int_beta(s.t_end)), num[-1], rtol=2e-3)
+
+
+def test_terminal_marginal_is_near_gaussian():
+    """The deviation fix: alpha(T) must be small so N(0,I) is a valid prior."""
+    assert float(DEFAULT.alpha(DEFAULT.t_end)) < 0.1
+
+
+def test_paper_quoted_range_available():
+    """The quoted beta_max=0.5 stays constructible for the ablation benches."""
+    s = VpSchedule(beta_max=0.5)
+    assert np.isclose(float(s.beta(1.0)), 0.5)
+    assert float(s.alpha(1.0)) > 0.8  # and indeed barely diffuses
+
+
+def test_ode_sde_rhs_relation():
+    """F_SDE - F_ODE == -(1/2) g^2 score (Eq. 1 vs Eq. 2)."""
+    s = DEFAULT
+    x = np.array([[0.3, -0.7]], dtype=np.float32)
+    score = np.array([[1.1, 0.2]], dtype=np.float32)
+    for t in [0.1, 0.5, 0.9]:
+        d = np.asarray(s.reverse_sde_rhs(x, t, score) -
+                       s.reverse_ode_rhs(x, t, score))
+        want = -0.5 * float(s.beta(t)) * score
+        np.testing.assert_allclose(d, want, rtol=1e-5)
+
+
+def test_g2_over_sigma_positive_finite():
+    s = DEFAULT
+    for t in np.linspace(EPS_T, s.t_end, 50):
+        v = float(s.g2_over_sigma(t))
+        assert np.isfinite(v) and v > 0

@@ -1,0 +1,73 @@
+//! Diode-clamp ReLU (paper Fig. 2h: two 1N4148 diodes + a TIA).
+//!
+//! The circuit clamps the inverted TIA output's upper limit to 0 V; after
+//! the final inverting stage the transfer is a rectified-linear unit with
+//! a soft knee set by the diode's exponential turn-on.  The soft-knee model
+//! keeps the solver's vector field Lipschitz (no corner), matching silicon;
+//! the knee width is small enough that the digital `max(0, x)` and this
+//! function differ by < 2 mV everywhere.
+
+/// Diode thermal-ish knee width in software voltage units (0.1 V == 1).
+/// 1N4148 at room temperature: ~2 mV knee after the gain stage ⇒ 0.02 units.
+pub const KNEE: f32 = 0.02;
+
+/// Soft ReLU with diode knee: softplus of width [`KNEE`], exact `max(0,x)`
+/// outside ±6·KNEE (exp(±6) makes the tails numerically exact in f32).
+#[inline(always)]
+pub fn relu_diode(x: f32) -> f32 {
+    if x > 6.0 * KNEE {
+        x
+    } else if x < -6.0 * KNEE {
+        0.0
+    } else {
+        KNEE * (x / KNEE).exp().ln_1p()
+    }
+}
+
+/// Hard ideal ReLU (digital reference).
+#[inline(always)]
+pub fn relu_ideal(x: f32) -> f32 {
+    x.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_outside_knee() {
+        assert_eq!(relu_diode(1.0), 1.0);
+        assert_eq!(relu_diode(-1.0), 0.0);
+        assert_eq!(relu_diode(0.5), 0.5);
+    }
+
+    #[test]
+    fn close_to_ideal_everywhere() {
+        let mut x = -0.5f32;
+        while x < 0.5 {
+            let d = (relu_diode(x) - relu_ideal(x)).abs();
+            assert!(d <= KNEE * 0.7 + 1e-6, "x={x}: diff {d}");
+            x += 0.001;
+        }
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let mut prev = relu_diode(-0.3);
+        let mut x = -0.3f32;
+        while x < 0.3 {
+            x += 0.001;
+            let y = relu_diode(x);
+            assert!(y >= prev - 1e-7, "not monotone at {x}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn smooth_at_origin() {
+        // finite difference slope near 0 must be between 0 and 1
+        let h = 1e-3f32;
+        let slope = (relu_diode(h) - relu_diode(-h)) / (2.0 * h);
+        assert!(slope > 0.2 && slope < 0.8, "slope {slope}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Op-amp RC integrator with capacitor pre-charge (paper Fig. 2j).
+//!
+//! `v_out(τ) = v0 − (1/RC) ∫ v_in dτ` for the inverting configuration; the
+//! solver uses the non-inverted sign convention (a second inverting stage
+//! on the PCB).  Pre-charging the capacitor sets the initial condition
+//! x_T ~ N(0, I) — that is how a "sample" starts on hardware.
+//!
+//! Non-idealities modeled: output saturation and capacitor leakage (the
+//! integrator slowly forgets, time constant R_leak·C), both of which bound
+//! how long a solve can run — one of the reasons the projected system
+//! shrinks the solve window to 20 µs.
+
+/// RC integrator state.
+#[derive(Debug, Clone)]
+pub struct Integrator {
+    /// Integration gain 1/(R·C) in 1/s.
+    pub inv_rc: f64,
+    /// Leakage time constant R_leak·C in seconds (f64::INFINITY = ideal).
+    pub leak_tau_s: f64,
+    /// Saturation bound (software units).
+    pub v_sat: f32,
+    /// Current output voltage.
+    pub v: f32,
+}
+
+impl Integrator {
+    /// `rc_s`: integration time constant R·C in seconds.
+    pub fn new(rc_s: f64) -> Self {
+        Integrator {
+            inv_rc: 1.0 / rc_s,
+            leak_tau_s: f64::INFINITY,
+            v_sat: 120.0,
+            v: 0.0,
+        }
+    }
+
+    pub fn with_leak(mut self, leak_tau_s: f64) -> Self {
+        self.leak_tau_s = leak_tau_s;
+        self
+    }
+
+    /// Pre-charge the capacitor (set the initial condition).
+    pub fn precharge(&mut self, v0: f32) {
+        self.v = v0.clamp(-self.v_sat, self.v_sat);
+    }
+
+    /// Advance by `dt_s` with input `v_in`: v += (v_in/RC)·dt − leak.
+    #[inline]
+    pub fn step(&mut self, v_in: f32, dt_s: f64) -> f32 {
+        let leak = if self.leak_tau_s.is_finite() {
+            (self.v as f64) * (dt_s / self.leak_tau_s)
+        } else {
+            0.0
+        };
+        self.v = ((self.v as f64) + (v_in as f64) * self.inv_rc * dt_s - leak)
+            .clamp(-self.v_sat as f64, self.v_sat as f64) as f32;
+        self.v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integrates_constant() {
+        let mut i = Integrator::new(1.0); // RC = 1 s
+        i.precharge(0.0);
+        let dt = 1e-4;
+        for _ in 0..10_000 {
+            i.step(2.0, dt);
+        }
+        // ∫ 2 dt over 1 s = 2
+        assert!((i.v - 2.0).abs() < 1e-3, "{}", i.v);
+    }
+
+    #[test]
+    fn precharge_sets_initial_condition() {
+        let mut i = Integrator::new(0.5);
+        i.precharge(-1.3);
+        assert_eq!(i.v, -1.3);
+        i.step(0.0, 1e-3);
+        assert!((i.v + 1.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rc_scales_rate() {
+        let mut fast = Integrator::new(0.1);
+        let mut slow = Integrator::new(1.0);
+        for _ in 0..1000 {
+            fast.step(1.0, 1e-4);
+            slow.step(1.0, 1e-4);
+        }
+        assert!((fast.v / slow.v - 10.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn leak_decays_state() {
+        let mut i = Integrator::new(1.0).with_leak(0.1);
+        i.precharge(1.0);
+        for _ in 0..10_000 {
+            i.step(0.0, 1e-4);
+        }
+        // one second with tau=0.1 ⇒ e^{-10}
+        assert!(i.v < 0.01, "{}", i.v);
+    }
+
+    #[test]
+    fn saturates() {
+        let mut i = Integrator::new(1e-3);
+        for _ in 0..100_000 {
+            i.step(10.0, 1e-4);
+        }
+        assert_eq!(i.v, i.v_sat);
+    }
+}

@@ -1,0 +1,22 @@
+//! Analog circuit blocks and the closed-loop neural differential-equation
+//! solver (paper Fig. 2h–j) — the system's core contribution.
+//!
+//! * [`opamp`]       — op-amp behavioural model (OPAx171): finite gain,
+//!   output saturation, single-pole bandwidth; TIA / summing / inverting
+//!   configurations.
+//! * [`activation`]  — the dual-diode ReLU clamp at the TIA (Fig. 2h).
+//! * [`multiplier`]  — AD633 four-quadrant analog multiplier.
+//! * [`integrator`]  — op-amp RC integrator with capacitor pre-charge (the
+//!   initial condition x_T ~ N(0, I)).
+//! * [`solver`]      — the closed loop: analog NN → multipliers applying
+//!   the predetermined f(t) and g²(t)/σ(t) waveforms → summing amp → RC
+//!   integrator → feedback to the NN input.  Time-continuous: simulated
+//!   with fine fixed-step integration far below the signal bandwidth.
+
+pub mod activation;
+pub mod integrator;
+pub mod multiplier;
+pub mod opamp;
+pub mod solver;
+
+pub use solver::{AnalogSolver, SolverConfig, SolverMode};

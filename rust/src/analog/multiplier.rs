@@ -1,0 +1,70 @@
+//! AD633 four-quadrant analog multiplier (paper Fig. 2j).
+//!
+//! Transfer: W = (X1−X2)(Y1−Y2)/10V + Z.  In software units (0.1 V == 1)
+//! the divide-by-10V becomes a divide-by-100; the solver folds that into
+//! the predetermined waveform amplitudes, so the multiplier here exposes a
+//! `scale` that the calibration sets.  Includes the datasheet's ±1% gain
+//! error and output saturation.
+
+/// AD633 behavioural model.
+#[derive(Debug, Clone)]
+pub struct Multiplier {
+    /// Effective scale k in `out = k · x · y` (calibrated).
+    pub scale: f32,
+    /// Multiplicative gain error (datasheet ±1% typ → default 0: the PCB
+    /// calibrates it out; set nonzero for sensitivity ablations).
+    pub gain_error: f32,
+    /// Output saturation (software units).
+    pub v_sat: f32,
+}
+
+impl Multiplier {
+    pub fn new(scale: f32) -> Self {
+        Multiplier { scale, gain_error: 0.0, v_sat: 120.0 }
+    }
+
+    pub fn with_gain_error(mut self, e: f32) -> Self {
+        self.gain_error = e;
+        self
+    }
+
+    /// out = scale·(1+err)·x·y, saturated.
+    #[inline]
+    pub fn mul(&self, x: f32, y: f32) -> f32 {
+        (self.scale * (1.0 + self.gain_error) * x * y).clamp(-self.v_sat, self.v_sat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_quadrant() {
+        let m = Multiplier::new(1.0);
+        assert_eq!(m.mul(2.0, 3.0), 6.0);
+        assert_eq!(m.mul(-2.0, 3.0), -6.0);
+        assert_eq!(m.mul(-2.0, -3.0), 6.0);
+        assert_eq!(m.mul(2.0, -3.0), -6.0);
+    }
+
+    #[test]
+    fn gain_error_applies() {
+        let m = Multiplier::new(1.0).with_gain_error(0.01);
+        assert!((m.mul(1.0, 1.0) - 1.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn saturates() {
+        let m = Multiplier::new(1.0);
+        assert_eq!(m.mul(100.0, 100.0), m.v_sat);
+        assert_eq!(m.mul(-100.0, 100.0), -m.v_sat);
+    }
+
+    #[test]
+    fn zero_annihilates() {
+        let m = Multiplier::new(3.7);
+        assert_eq!(m.mul(0.0, 5.0), 0.0);
+        assert_eq!(m.mul(5.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Behavioural op-amp model (TI OPAx171 class) and derived stages.
+//!
+//! The solver's accuracy claims rest on the loop being much slower than
+//! the amplifiers: OPA171 GBW ≈ 3 MHz while the solve trajectory bandwidth
+//! is ~kHz (1 s PCB solve) — a ratio of >1000.  The single-pole model lets
+//! the tests *verify* that assumption rather than assume it.
+
+/// Op-amp parameters (defaults: OPA171 datasheet values, software units).
+#[derive(Debug, Clone)]
+pub struct OpampParams {
+    /// Open-loop DC gain (V/V).
+    pub open_loop_gain: f32,
+    /// Gain-bandwidth product in Hz.
+    pub gbw_hz: f64,
+    /// Output saturation in software units (±; supply-limited).
+    pub v_sat: f32,
+    /// Input offset voltage in software units.
+    pub v_offset: f32,
+}
+
+impl Default for OpampParams {
+    fn default() -> Self {
+        OpampParams {
+            open_loop_gain: 1.0e5,
+            gbw_hz: 3.0e6,
+            v_sat: 120.0,      // ±12 V supply ⇒ ±120 software units
+            v_offset: 0.0025,  // 0.25 mV typical ⇒ 0.0025 units
+        }
+    }
+}
+
+/// A closed-loop amplifier stage with first-order settling.
+///
+/// `target(t)` is the ideal closed-loop output; `step(dt)` relaxes the
+/// actual output toward it with time constant `1 / (2π · f_closed)` where
+/// `f_closed = gbw / closed_loop_gain`.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    params: OpampParams,
+    closed_loop_gain: f32,
+    /// Current (settled) output.
+    pub v_out: f32,
+}
+
+impl Stage {
+    pub fn new(params: OpampParams, closed_loop_gain: f32) -> Self {
+        Stage { params, closed_loop_gain: closed_loop_gain.abs().max(1.0), v_out: 0.0 }
+    }
+
+    /// Closed-loop bandwidth in Hz.
+    pub fn bandwidth_hz(&self) -> f64 {
+        self.params.gbw_hz / self.closed_loop_gain as f64
+    }
+
+    /// Ideal (infinitely fast) output for input `v_in`, including offset
+    /// and saturation.
+    pub fn ideal(&self, v_in: f32) -> f32 {
+        ((v_in + self.params.v_offset) * self.closed_loop_gain)
+            .clamp(-self.params.v_sat, self.params.v_sat)
+    }
+
+    /// Advance the stage by `dt` seconds toward the ideal response.
+    pub fn step(&mut self, v_in: f32, dt_s: f64) -> f32 {
+        let target = self.ideal(v_in);
+        let tau = 1.0 / (2.0 * std::f64::consts::PI * self.bandwidth_hz());
+        let alpha = 1.0 - (-dt_s / tau).exp();
+        self.v_out += alpha as f32 * (target - self.v_out);
+        self.v_out
+    }
+}
+
+/// Transimpedance amplifier: current (mS·V units) → voltage, gain in
+/// kΩ-equivalent software units.  Saturates at the supply.
+#[derive(Debug, Clone)]
+pub struct Tia {
+    pub gain: f32,
+    pub params: OpampParams,
+}
+
+impl Tia {
+    pub fn new(gain: f32) -> Self {
+        Tia { gain, params: OpampParams::default() }
+    }
+
+    /// Instantaneous conversion (the loop simulation treats TIAs as fast).
+    #[inline]
+    pub fn convert(&self, i_in: f32) -> f32 {
+        (i_in * self.gain + self.params.v_offset)
+            .clamp(-self.params.v_sat, self.params.v_sat)
+    }
+}
+
+/// Weighted summing amplifier: v_out = Σ w_i v_i (inverting pairs cancel).
+#[derive(Debug, Clone)]
+pub struct SummingAmp {
+    pub weights: Vec<f32>,
+    pub params: OpampParams,
+}
+
+impl SummingAmp {
+    pub fn new(weights: Vec<f32>) -> Self {
+        SummingAmp { weights, params: OpampParams::default() }
+    }
+
+    pub fn sum(&self, inputs: &[f32]) -> f32 {
+        debug_assert_eq!(inputs.len(), self.weights.len());
+        let s: f32 = inputs.iter().zip(&self.weights).map(|(v, w)| v * w).sum();
+        (s + self.params.v_offset).clamp(-self.params.v_sat, self.params.v_sat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_settles_to_ideal() {
+        let mut s = Stage::new(OpampParams::default(), 10.0);
+        // closed-loop bw = 300 kHz; settle for 100 µs >> tau
+        for _ in 0..1000 {
+            s.step(0.5, 1e-7);
+        }
+        assert!((s.v_out - s.ideal(0.5)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn stage_bandwidth_scales_with_gain() {
+        let lo = Stage::new(OpampParams::default(), 1.0);
+        let hi = Stage::new(OpampParams::default(), 100.0);
+        assert!((lo.bandwidth_hz() / hi.bandwidth_hz() - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stage_saturates() {
+        let s = Stage::new(OpampParams::default(), 100.0);
+        assert_eq!(s.ideal(10.0), s.params.v_sat);
+        assert_eq!(s.ideal(-10.0), -s.params.v_sat);
+    }
+
+    #[test]
+    fn solver_bandwidth_assumption_holds() {
+        // The paper's loop: gains ≤ ~100, so closed-loop bw ≥ 30 kHz,
+        // while the 1 s solve has ~kHz content ⇒ ratio ≥ 30; the projected
+        // 20 µs solve scales both, keeping the ratio.
+        let worst = Stage::new(OpampParams::default(), 120.0);
+        assert!(worst.bandwidth_hz() > 2.0e4);
+    }
+
+    #[test]
+    fn tia_linear_until_sat() {
+        let t = Tia::new(25.0);
+        let a = t.convert(0.1);
+        let b = t.convert(0.2);
+        assert!(((b - t.params.v_offset) - 2.0 * (a - t.params.v_offset)).abs() < 1e-5);
+        assert_eq!(t.convert(100.0), t.params.v_sat);
+    }
+
+    #[test]
+    fn summing_amp_weighted_sum() {
+        let s = SummingAmp::new(vec![1.0, -2.0, 0.5]);
+        let out = s.sum(&[1.0, 1.0, 2.0]);
+        assert!((out - (1.0 - 2.0 + 1.0 + s.params.v_offset)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,346 @@
+//! The closed-loop, time-continuous analog neural differential-equation
+//! solver (paper Fig. 2j) — the system's core contribution.
+//!
+//! Loop topology, exactly as on the PCB:
+//!
+//! ```text
+//!          ┌──────────────────────────────────────────────┐
+//!          │                                              │
+//!   x(τ) ──┤ analog score NN (crossbars, Fig. 2h-i)       │
+//!          │        net(x, t)                             │
+//!          │            │                                 │
+//!          │   AD633 ×  g²(t)/σ(t)   (predetermined DAC)  │
+//!          │   AD633 ×  f(t)·x       (predetermined DAC)  │
+//!          │            │                                 │
+//!          │      summing amp  Σ  (+ noise inj. for SDE)  │
+//!          │            │                                 │
+//!          │      RC integrator  (pre-charged to x_T)     │
+//!          └────────────┴──── x(τ) feedback ──────────────┘
+//! ```
+//!
+//! The hardware evolves continuously; we simulate it with a fixed
+//! sub-step far below the loop bandwidth (default 2000 sub-steps per
+//! solve — the *simulation* grid, not a discretization the hardware
+//! performs; halving it changes results below the device-noise floor,
+//! which `tests::substep_convergence` verifies).
+//!
+//! Time mapping (Methods): hardware τ ∈ [0, T_solve] ↔ algorithm
+//! t = T·(1 − τ/T_solve), so dt_alg = −(T/T_solve)·dτ and the integrator
+//! realizes x₀ = ∫_T^0 F(x,t) dt (paper Eq. 3).
+//!
+//! The SDE's Wiener term is physical: conductance read noise perturbs every
+//! NN evaluation (NoiseModel), and an explicit g(t)·ε noise current can be
+//! injected at the summing node (the PCB's noise DAC).  The ODE mode runs
+//! the same loop with the noise DAC off.
+
+use super::integrator::Integrator;
+use super::multiplier::Multiplier;
+use crate::clamp_voltage;
+use crate::diffusion::schedule::VpSchedule;
+use crate::nn::ScoreNet;
+use crate::util::rng::Rng;
+
+/// Probability-flow ODE or reverse SDE (paper Eq. 2 / Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SolverMode {
+    Ode,
+    Sde,
+}
+
+/// Solver configuration.
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    pub sched: VpSchedule,
+    pub mode: SolverMode,
+    /// Hardware solve window in seconds (PCB: 1.0; projected system: 20 µs).
+    pub t_solve_s: f64,
+    /// Simulation sub-steps per solve (fidelity knob, not hardware).
+    pub substeps: usize,
+    /// CFG guidance strength (None = unconditional).
+    pub guidance: Option<f32>,
+    /// Integrator RC in seconds; calibrated so the loop gain is unity for
+    /// the chosen t_solve (RC = t_solve ⇒ 1/RC·∫v dτ reproduces ∫F dt).
+    pub rc_s: f64,
+    /// Capacitor leakage time constant (None = ideal capacitor).
+    pub leak_tau_s: Option<f64>,
+}
+
+impl SolverConfig {
+    pub fn new(mode: SolverMode) -> Self {
+        let t_solve_s = 1.0;
+        SolverConfig {
+            sched: VpSchedule::default(),
+            mode,
+            t_solve_s,
+            substeps: 2000,
+            guidance: None,
+            rc_s: t_solve_s,
+            leak_tau_s: None,
+        }
+    }
+
+    /// Re-time the loop (e.g. the projected 20 µs integrated system); the
+    /// RC constant scales with it, as on silicon.
+    pub fn with_solve_window(mut self, t_solve_s: f64) -> Self {
+        self.rc_s *= t_solve_s / self.t_solve_s;
+        self.t_solve_s = t_solve_s;
+        self
+    }
+
+    pub fn with_guidance(mut self, lambda: f32) -> Self {
+        self.guidance = Some(lambda);
+        self
+    }
+
+    pub fn with_substeps(mut self, n: usize) -> Self {
+        self.substeps = n;
+        self
+    }
+
+    pub fn with_schedule(mut self, sched: VpSchedule) -> Self {
+        self.sched = sched;
+        self
+    }
+}
+
+/// The closed-loop solver bound to an analog (or any) score network.
+pub struct AnalogSolver<'a> {
+    pub net: &'a dyn ScoreNet,
+    pub cfg: SolverConfig,
+    /// f(t)-path multipliers (one per dimension, matched parts).
+    mul_drift: Multiplier,
+    /// g²/σ-path multipliers.
+    mul_score: Multiplier,
+}
+
+impl<'a> AnalogSolver<'a> {
+    pub fn new(net: &'a dyn ScoreNet, cfg: SolverConfig) -> Self {
+        AnalogSolver {
+            net,
+            cfg,
+            mul_drift: Multiplier::new(1.0),
+            mul_score: Multiplier::new(1.0),
+        }
+    }
+
+    /// Solve one trajectory.  `x0` is the pre-charge (the N(0,I) draw);
+    /// the final state overwrites it.  `onehot` may be empty (no classes)
+    /// or all-zero (unconditional).  If `trace_every > 0`, intermediate
+    /// states are appended to `trace` every that-many sub-steps (for the
+    /// Fig. 3e / 4e–f trajectory plots).
+    pub fn solve_into(&self, x0: &mut [f32], onehot: &[f32], rng: &mut Rng,
+                      trace_every: usize, trace: &mut Vec<(f64, Vec<f32>)>) {
+        let dim = x0.len();
+        let n = self.cfg.substeps;
+        let d_tau = self.cfg.t_solve_s / n as f64;
+        // algorithm-time step magnitude per sub-step
+        let t_span = self.cfg.sched.t_end - self.cfg.sched.eps_t;
+        let dt_alg = t_span / n as f64;
+
+        // integrators, pre-charged with the initial condition
+        let mut ints: Vec<Integrator> = (0..dim)
+            .map(|i| {
+                let mut integ = Integrator::new(self.cfg.rc_s);
+                if let Some(tau) = self.cfg.leak_tau_s {
+                    integ = integ.with_leak(tau);
+                }
+                integ.precharge(x0[i]);
+                integ
+            })
+            .collect();
+
+        let mut net_out = vec![0.0f32; dim];
+        let mut x = x0.to_vec();
+
+        for k in 0..n {
+            let tau = k as f64 * d_tau;
+            // hardware τ → algorithm t (reverse time)
+            let t = self.cfg.sched.t_end - t_span * (tau / self.cfg.t_solve_s);
+            let beta = self.cfg.sched.beta(t);
+            // predetermined DAC waveforms
+            let w_score = self.cfg.sched.g2_over_sigma(t)
+                * match self.cfg.mode {
+                    SolverMode::Sde => 1.0,
+                    SolverMode::Ode => 0.5,
+                };
+            let w_drift = 0.5 * beta; // −f(x,t) = +β/2·x feeds forward
+
+            // NN inference (device read noise inside)
+            match self.cfg.guidance {
+                Some(lam) => {
+                    self.net
+                        .eval_cfg(&x, t as f32, onehot, lam, &mut net_out, rng)
+                }
+                None => self.net.eval(&x, t as f32, onehot, &mut net_out, rng),
+            }
+
+            // per-dimension: multipliers → summing amp → integrator
+            for i in 0..dim {
+                // Reverse-time update: x(t−dt) = x(t) − dt·F with
+                // F = f − g²·score = −β/2·x − (g²/σ)·net  [ε-param.], so
+                // dx/dτ = (T/T_solve)·( β/2·x − (g²/σ)·net ).
+                let drift_term = self.mul_drift.mul(w_drift as f32, x[i]);
+                let score_term = self.mul_score.mul(w_score as f32, net_out[i]);
+                let mut v_sum = drift_term - score_term;
+                if self.cfg.mode == SolverMode::Sde {
+                    // Noise DAC at the summing node.  The integrator turns a
+                    // summing-node voltage v into Δx = v·dt_alg per sub-step
+                    // (see v_in scaling below), so a Wiener increment
+                    // √(β·dt_alg)·ε requires v_noise = √(β/dt_alg)·ε — the
+                    // white-noise density the DAC synthesizes.
+                    v_sum += ((beta / dt_alg).sqrt() * rng.gaussian()) as f32;
+                }
+                // loop gain: integrator input scaled so ∫ over τ equals
+                // ∫F dt over algorithm time: factor t_span / t_solve · rc
+                let v_in = v_sum * (t_span / self.cfg.t_solve_s * self.cfg.rc_s) as f32;
+                let xi = ints[i].step(v_in, d_tau);
+                x[i] = clamp_voltage(xi);
+            }
+
+            if trace_every > 0 && k % trace_every == 0 {
+                trace.push((t, x.clone()));
+            }
+        }
+        x0.copy_from_slice(&x);
+    }
+
+    /// Batch solve from N(0, I) pre-charges; returns interleaved samples.
+    pub fn solve_batch(&self, n: usize, onehot: &[f32], rng: &mut Rng) -> Vec<f32> {
+        let dim = self.net.dim();
+        let mut out = vec![0.0f32; n * dim];
+        let mut trace = Vec::new();
+        for s in 0..n {
+            let x = &mut out[s * dim..(s + 1) * dim];
+            for v in x.iter_mut() {
+                *v = rng.gaussian_f32();
+            }
+            self.solve_into(x, onehot, rng, 0, &mut trace);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    /// Same analytic Gaussian net as the digital sampler tests.
+    struct GaussianNet {
+        s0: f64,
+        sched: VpSchedule,
+    }
+
+    impl ScoreNet for GaussianNet {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn n_classes(&self) -> usize {
+            0
+        }
+        fn eval(&self, x: &[f32], t: f32, _c: &[f32], out: &mut [f32], _r: &mut Rng) {
+            let a = self.sched.alpha(t as f64);
+            let sg = self.sched.sigma(t as f64);
+            let v = a * a * self.s0 * self.s0 + sg * sg;
+            for i in 0..x.len() {
+                out[i] = (sg * x[i] as f64 / v) as f32;
+            }
+        }
+    }
+
+    fn gaussian_solve(mode: SolverMode, substeps: usize, n: usize) -> Vec<f32> {
+        let net = GaussianNet { s0: 0.5, sched: VpSchedule::default() };
+        let cfg = SolverConfig::new(mode).with_substeps(substeps);
+        let solver = AnalogSolver::new(&net, cfg);
+        let mut rng = Rng::new(7);
+        solver.solve_batch(n, &[], &mut rng)
+    }
+
+    fn std_x(pts: &[f32]) -> f64 {
+        let xs: Vec<f32> = pts.iter().step_by(2).copied().collect();
+        stats::std(&xs)
+    }
+
+    #[test]
+    fn ode_transports_gaussian() {
+        let pts = gaussian_solve(SolverMode::Ode, 2000, 1500);
+        let s = std_x(&pts);
+        assert!((s - 0.5).abs() < 0.05, "std={s}");
+    }
+
+    #[test]
+    fn sde_transports_gaussian() {
+        let pts = gaussian_solve(SolverMode::Sde, 2000, 1500);
+        let s = std_x(&pts);
+        assert!((s - 0.5).abs() < 0.08, "std={s}");
+    }
+
+    #[test]
+    fn substep_convergence() {
+        // halving the simulation grid must not change the result materially
+        let a = std_x(&gaussian_solve(SolverMode::Ode, 1000, 1500));
+        let b = std_x(&gaussian_solve(SolverMode::Ode, 2000, 1500));
+        assert!((a - b).abs() < 0.02, "{a} vs {b}");
+    }
+
+    #[test]
+    fn solve_window_invariance() {
+        // the *solution* must not depend on the hardware window (1 s PCB vs
+        // 20 µs projected): RC scales with it
+        let net = GaussianNet { s0: 0.5, sched: VpSchedule::default() };
+        let mut results = Vec::new();
+        for window in [1.0, 20e-6] {
+            let cfg = SolverConfig::new(SolverMode::Ode)
+                .with_substeps(2000)
+                .with_solve_window(window);
+            let solver = AnalogSolver::new(&net, cfg);
+            let mut rng = Rng::new(9);
+            results.push(std_x(&solver.solve_batch(800, &[], &mut rng)));
+        }
+        assert!(
+            (results[0] - results[1]).abs() < 1e-6,
+            "window must rescale exactly: {results:?}"
+        );
+    }
+
+    #[test]
+    fn capacitor_leak_degrades_gracefully() {
+        let net = GaussianNet { s0: 0.5, sched: VpSchedule::default() };
+        let cfg = SolverConfig::new(SolverMode::Ode).with_substeps(1500);
+        let leaky = SolverConfig {
+            leak_tau_s: Some(10.0), // 10× the solve window
+            ..cfg.clone()
+        };
+        let mut rng = Rng::new(11);
+        let ideal = AnalogSolver::new(&net, cfg).solve_batch(800, &[], &mut rng);
+        let mut rng = Rng::new(11);
+        let leak = AnalogSolver::new(&net, leaky).solve_batch(800, &[], &mut rng);
+        let (si, sl) = (std_x(&ideal), std_x(&leak));
+        assert!((si - sl).abs() < 0.1, "mild leak must not destroy: {si} vs {sl}");
+        assert!((si - sl).abs() > 1e-6, "leak must have *some* effect");
+    }
+
+    #[test]
+    fn trace_records_trajectory() {
+        let net = GaussianNet { s0: 0.5, sched: VpSchedule::default() };
+        let cfg = SolverConfig::new(SolverMode::Ode).with_substeps(1000);
+        let solver = AnalogSolver::new(&net, cfg);
+        let mut rng = Rng::new(13);
+        let mut x = [1.0f32, -1.0];
+        let mut trace = Vec::new();
+        solver.solve_into(&mut x, &[], &mut rng, 100, &mut trace);
+        assert_eq!(trace.len(), 10);
+        // algorithm time decreases along the trace (reverse diffusion)
+        for w in trace.windows(2) {
+            assert!(w[1].0 < w[0].0);
+        }
+    }
+
+    #[test]
+    fn states_respect_protective_clamp() {
+        let pts = gaussian_solve(SolverMode::Sde, 800, 400);
+        for &v in &pts {
+            assert!((-2.0..=4.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Configuration: a small INI-style `key = value` parser with sections,
+//! plus the typed [`Config`] the CLI and examples consume.
+//!
+//! Example file (see `memdiff.toml.example` in the repo root):
+//!
+//! ```text
+//! [service]
+//! workers = 4
+//! max_batch = 64
+//! linger_ms = 2
+//!
+//! [solver]
+//! substeps = 2000
+//! guidance = 2.0
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+/// Parsed raw config: section → key → value.
+#[derive(Debug, Clone, Default)]
+pub struct RawConfig {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl RawConfig {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                cfg.sections
+                    .entry(section.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), v.trim().to_string());
+            } else {
+                return Err(anyhow!("line {}: expected 'key = value'", lineno + 1));
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, section: &str, key: &str)
+                                            -> anyhow::Result<Option<T>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("[{section}] {key} = {s:?}: parse error")),
+        }
+    }
+}
+
+/// Typed configuration with defaults.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub linger_ms: u64,
+    pub substeps: usize,
+    pub guidance: f32,
+    pub seed: u64,
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            workers: 2,
+            max_batch: 64,
+            linger_ms: 2,
+            substeps: 2000,
+            guidance: 2.0,
+            seed: 7,
+            artifacts_dir: None,
+        }
+    }
+}
+
+impl Config {
+    pub fn from_raw(raw: &RawConfig) -> anyhow::Result<Self> {
+        let d = Config::default();
+        Ok(Config {
+            workers: raw.get_parsed("service", "workers")?.unwrap_or(d.workers),
+            max_batch: raw.get_parsed("service", "max_batch")?.unwrap_or(d.max_batch),
+            linger_ms: raw.get_parsed("service", "linger_ms")?.unwrap_or(d.linger_ms),
+            substeps: raw.get_parsed("solver", "substeps")?.unwrap_or(d.substeps),
+            guidance: raw.get_parsed("solver", "guidance")?.unwrap_or(d.guidance),
+            seed: raw.get_parsed("solver", "seed")?.unwrap_or(d.seed),
+            artifacts_dir: raw.get("paths", "artifacts").map(String::from),
+        })
+    }
+
+    pub fn load_or_default(path: Option<&str>) -> anyhow::Result<Self> {
+        match path {
+            None => Ok(Config::default()),
+            Some(p) => Config::from_raw(&RawConfig::load(p)?),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let raw = RawConfig::parse(
+            "# comment\n[service]\nworkers = 4 # inline\nmax_batch=32\n\n[solver]\nguidance = 1.5\n",
+        )
+        .unwrap();
+        assert_eq!(raw.get("service", "workers"), Some("4"));
+        assert_eq!(raw.get("service", "max_batch"), Some("32"));
+        assert_eq!(raw.get("solver", "guidance"), Some("1.5"));
+        assert_eq!(raw.get("solver", "nope"), None);
+    }
+
+    #[test]
+    fn typed_config_with_defaults() {
+        let raw = RawConfig::parse("[service]\nworkers = 8\n").unwrap();
+        let cfg = Config::from_raw(&raw).unwrap();
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.max_batch, 64); // default
+        assert_eq!(cfg.substeps, 2000);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(RawConfig::parse("[unterminated\n").is_err());
+        assert!(RawConfig::parse("no equals here\n").is_err());
+        let raw = RawConfig::parse("[service]\nworkers = lots\n").unwrap();
+        assert!(Config::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn empty_config_is_defaults() {
+        let cfg = Config::load_or_default(None).unwrap();
+        assert_eq!(cfg.workers, Config::default().workers);
+    }
+}

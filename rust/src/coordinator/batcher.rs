@@ -1,0 +1,327 @@
+//! Dynamic batching queue.
+//!
+//! Requests coalesce by [`GenRequest::batch_key`] (same condition, solver
+//! and decode flag) until either the batch reaches `max_batch_samples` or
+//! the oldest member has waited `linger` — the size-or-deadline policy of
+//! serving routers.  Invariants (property-tested):
+//!
+//! 1. every submitted request appears in exactly one emitted batch;
+//! 2. batches never mix keys;
+//! 3. a batch's sample total never exceeds `max_batch_samples` unless a
+//!    single oversized request needs its own batch;
+//! 4. requests with the same key dequeue FIFO.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::request::GenRequest;
+
+/// Batcher tuning.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Max total samples per emitted batch (pairs with the largest AOT
+    /// artifact batch — 64 by default).
+    pub max_batch_samples: usize,
+    /// Max time the oldest queued request waits before a partial batch is
+    /// emitted.
+    pub linger: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch_samples: 64, linger: Duration::from_millis(2) }
+    }
+}
+
+/// An emitted batch: requests sharing one key.
+#[derive(Debug)]
+pub struct Batch {
+    pub key: u64,
+    pub requests: Vec<GenRequest>,
+}
+
+impl Batch {
+    pub fn total_samples(&self) -> usize {
+        self.requests.iter().map(|r| r.n_samples).sum()
+    }
+}
+
+struct Queued {
+    req: GenRequest,
+    at: Instant,
+}
+
+struct State {
+    queue: VecDeque<Queued>,
+    closed: bool,
+}
+
+/// Thread-safe dynamic batcher.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher {
+            cfg,
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a request (non-blocking).  Returns false if closed.
+    pub fn submit(&self, req: GenRequest) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.queue.push_back(Queued { req, at: Instant::now() });
+        self.cv.notify_one();
+        true
+    }
+
+    /// Close the queue; pending requests still drain.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking: wait for and assemble the next batch.  Returns None once
+    /// closed *and* drained.
+    pub fn next_batch(&self) -> Option<Batch> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(head_at) = st.queue.front().map(|q| q.at) {
+                // Wait until the head's linger expires or enough same-key
+                // work arrives to fill a batch.
+                let key = st.queue.front().unwrap().req.batch_key();
+                let same_key_samples: usize = st
+                    .queue
+                    .iter()
+                    .filter(|q| q.req.batch_key() == key)
+                    .map(|q| q.req.n_samples)
+                    .sum();
+                let deadline = head_at + self.cfg.linger;
+                let now = Instant::now();
+                if same_key_samples >= self.cfg.max_batch_samples
+                    || now >= deadline
+                    || st.closed
+                {
+                    return Some(self.assemble(&mut st, key));
+                }
+                let (guard, _timeout) =
+                    self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+            } else if st.closed {
+                return None;
+            } else {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Pull the head-key requests (FIFO among that key) up to the sample
+    /// budget; the head request always ships even if oversized.
+    fn assemble(&self, st: &mut State, key: u64) -> Batch {
+        let mut requests = Vec::new();
+        let mut total = 0usize;
+        let mut i = 0;
+        while i < st.queue.len() {
+            let q = &st.queue[i];
+            if q.req.batch_key() != key {
+                i += 1;
+                continue;
+            }
+            let n = q.req.n_samples;
+            if !requests.is_empty() && total + n > self.cfg.max_batch_samples {
+                break;
+            }
+            let q = st.queue.remove(i).unwrap();
+            total += q.req.n_samples;
+            requests.push(q.req);
+            if total >= self.cfg.max_batch_samples {
+                break;
+            }
+        }
+        Batch { key, requests }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{SolverChoice, TaskKind};
+    use crate::util::ptest;
+    use crate::util::rng::Rng;
+
+    fn req(id: u64, class: usize, n: usize) -> GenRequest {
+        GenRequest {
+            id,
+            task: TaskKind::Letter(class),
+            n_samples: n,
+            solver: SolverChoice::DigitalOde { steps: 100 },
+            guidance: 2.0,
+            decode: false,
+        }
+    }
+
+    fn drain(b: &Batcher) -> Vec<Batch> {
+        b.close();
+        let mut out = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            out.push(batch);
+        }
+        out
+    }
+
+    #[test]
+    fn single_request_emits_one_batch() {
+        let b = Batcher::new(BatcherConfig::default());
+        assert!(b.submit(req(1, 0, 10)));
+        let batches = drain(&b);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests[0].id, 1);
+    }
+
+    #[test]
+    fn same_key_coalesces() {
+        let b = Batcher::new(BatcherConfig::default());
+        for id in 0..4 {
+            b.submit(req(id, 0, 10));
+        }
+        let batches = drain(&b);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].total_samples(), 40);
+    }
+
+    #[test]
+    fn different_keys_do_not_mix() {
+        let b = Batcher::new(BatcherConfig::default());
+        b.submit(req(0, 0, 8));
+        b.submit(req(1, 1, 8));
+        b.submit(req(2, 0, 8));
+        let batches = drain(&b);
+        for batch in &batches {
+            let keys: std::collections::HashSet<u64> =
+                batch.requests.iter().map(|r| r.batch_key()).collect();
+            assert_eq!(keys.len(), 1);
+        }
+        // class-0 requests coalesce despite the interleaved class-1
+        let class0: Vec<&Batch> = batches
+            .iter()
+            .filter(|b| matches!(b.requests[0].task, TaskKind::Letter(0)))
+            .collect();
+        assert_eq!(class0.len(), 1);
+        assert_eq!(class0[0].requests.len(), 2);
+    }
+
+    #[test]
+    fn size_cap_splits_batches() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_millis(1),
+        });
+        for id in 0..5 {
+            b.submit(req(id, 0, 20));
+        }
+        let batches = drain(&b);
+        for batch in &batches {
+            assert!(batch.total_samples() <= 64, "{}", batch.total_samples());
+        }
+        let total: usize = batches.iter().map(|b| b.total_samples()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn oversized_request_ships_alone() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_millis(1),
+        });
+        b.submit(req(0, 0, 500));
+        b.submit(req(1, 0, 4));
+        let batches = drain(&b);
+        assert_eq!(batches[0].requests.len(), 1);
+        assert_eq!(batches[0].total_samples(), 500);
+    }
+
+    #[test]
+    fn closed_queue_rejects_submissions() {
+        let b = Batcher::new(BatcherConfig::default());
+        b.close();
+        assert!(!b.submit(req(0, 0, 1)));
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn linger_emits_partial_batch() {
+        let b = std::sync::Arc::new(Batcher::new(BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_millis(20),
+        }));
+        b.submit(req(0, 0, 4));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch.total_samples(), 4);
+        assert!(waited >= Duration::from_millis(10), "{waited:?}");
+        b.close();
+    }
+
+    #[test]
+    fn property_no_request_lost_or_duplicated() {
+        ptest::check_msg(
+            "batcher conservation",
+            |rng: &mut Rng| {
+                let n_reqs = 1 + rng.below(40);
+                (0..n_reqs)
+                    .map(|id| {
+                        req(id as u64, rng.below(3), 1 + rng.below(30))
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |reqs| {
+                let b = Batcher::new(BatcherConfig {
+                    max_batch_samples: 64,
+                    linger: Duration::from_millis(0),
+                });
+                for r in reqs {
+                    b.submit(r.clone());
+                }
+                let batches = drain(&b);
+                let mut seen: Vec<u64> = batches
+                    .iter()
+                    .flat_map(|b| b.requests.iter().map(|r| r.id))
+                    .collect();
+                seen.sort();
+                let mut want: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+                want.sort();
+                if seen != want {
+                    return Err(format!("ids {seen:?} != {want:?}"));
+                }
+                // FIFO within key
+                for batch in &batches {
+                    let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+                    let mut sorted = ids.clone();
+                    sorted.sort();
+                    if ids != sorted {
+                        return Err(format!("not FIFO within batch: {ids:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

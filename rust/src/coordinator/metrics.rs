@@ -1,0 +1,111 @@
+//! Service metrics: request/sample counters and latency summaries.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    samples: u64,
+    batches: u64,
+    rejected: u64,
+    wall_latency: Summary,
+    batch_fill: Summary,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&self, n_requests: usize, n_samples: usize, fill: f64,
+                        latency: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += n_requests as u64;
+        m.samples += n_samples as u64;
+        m.batches += 1;
+        m.wall_latency.record(latency.as_secs_f64());
+        m.batch_fill.record(fill);
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            requests: m.requests,
+            samples: m.samples,
+            batches: m.batches,
+            rejected: m.rejected,
+            mean_latency_s: m.wall_latency.mean(),
+            p99_latency_s: m.wall_latency.p99(),
+            mean_batch_fill: m.batch_fill.mean(),
+        }
+    }
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub samples: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub mean_batch_fill: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} samples={} batches={} rejected={} \
+             mean_latency={:.3}ms p99={:.3}ms mean_fill={:.1}%",
+            self.requests,
+            self.samples,
+            self.batches,
+            self.rejected,
+            1e3 * self.mean_latency_s,
+            1e3 * self.p99_latency_s,
+            100.0 * self.mean_batch_fill,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_batch(3, 40, 0.625, Duration::from_millis(5));
+        m.record_batch(1, 64, 1.0, Duration::from_millis(15));
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.samples, 104);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.rejected, 1);
+        assert!((s.mean_latency_s - 0.010).abs() < 1e-9);
+        assert!((s.mean_batch_fill - 0.8125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_formats() {
+        let m = Metrics::new();
+        m.record_batch(1, 1, 1.0, Duration::from_millis(1));
+        let r = m.snapshot().report();
+        assert!(r.contains("requests=1"));
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 coordinator: the generation service.
+//!
+//! The paper's system serves *sampling requests*: a client asks for N
+//! samples of a task (unconditional circle, or a conditioned letter), and
+//! the hardware answers with latent samples (optionally decoded to
+//! pixels).  This module is the serving layer around the solvers:
+//!
+//! * [`request`] — request/response types and solver selection.
+//! * [`batcher`] — dynamic batching queue: requests coalesce by
+//!   (condition, solver) key up to the artifact batch size, with a linger
+//!   timeout — the same size-or-deadline policy a vLLM-style router uses.
+//! * [`service`] — worker pool executing batches against one of the three
+//!   engines (analog simulator / rust digital / PJRT artifacts), plus the
+//!   compute-vs-programming [`service::ModeGate`] mirroring the PCB's
+//!   SPDT mode switches.
+//! * [`metrics`] — latency/throughput counters.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod service;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use request::{GenRequest, GenResponse, SolverChoice, TaskKind};
+pub use service::{ModeGate, Service, ServiceConfig};

@@ -1,0 +1,140 @@
+//! Request/response types of the generation service.
+
+/// Which generative task a request targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// Unconditional 2-D circle (paper Fig. 3).
+    Circle,
+    /// Conditional letter generation in VAE latent space (paper Fig. 4);
+    /// the payload is the class index (0=H, 1=K, 2=U).
+    Letter(usize),
+}
+
+impl TaskKind {
+    /// One-hot condition vector (empty classes → zeros).
+    pub fn onehot(&self, n_classes: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n_classes];
+        if let TaskKind::Letter(c) = self {
+            v[*c] = 1.0;
+        }
+        v
+    }
+
+    pub fn is_conditional(&self) -> bool {
+        matches!(self, TaskKind::Letter(_))
+    }
+}
+
+/// Which solver executes the request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SolverChoice {
+    /// Time-continuous closed-loop analog solver, ODE mode (the paper's
+    /// probability-flow configuration).
+    AnalogOde,
+    /// Analog solver, reverse-SDE mode (noise DAC on).
+    AnalogSde,
+    /// Digital baseline via the AOT PJRT artifacts, Euler, given steps.
+    DigitalOde { steps: usize },
+    DigitalSde { steps: usize },
+}
+
+impl SolverChoice {
+    pub fn is_analog(&self) -> bool {
+        matches!(self, SolverChoice::AnalogOde | SolverChoice::AnalogSde)
+    }
+
+    /// Batching key: requests sharing it may ride the same batch.
+    pub fn batch_key(&self) -> u64 {
+        match self {
+            SolverChoice::AnalogOde => 1,
+            SolverChoice::AnalogSde => 2,
+            SolverChoice::DigitalOde { steps } => 1000 + *steps as u64,
+            SolverChoice::DigitalSde { steps } => 2_000_000 + *steps as u64,
+        }
+    }
+}
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub task: TaskKind,
+    pub n_samples: usize,
+    pub solver: SolverChoice,
+    /// CFG guidance strength for conditional tasks.
+    pub guidance: f32,
+    /// Decode latents to 12×12 pixel images (letters task).
+    pub decode: bool,
+}
+
+impl GenRequest {
+    /// Batching key: same condition + solver (+decode flag) may coalesce.
+    pub fn batch_key(&self) -> u64 {
+        let cond = match self.task {
+            TaskKind::Circle => 0u64,
+            TaskKind::Letter(c) => 1 + c as u64,
+        };
+        cond ^ (self.solver.batch_key() << 8) ^ ((self.decode as u64) << 63)
+            ^ ((self.guidance.to_bits() as u64) << 20)
+    }
+}
+
+/// The service's answer.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    /// Interleaved 2-D samples (n_samples × dim).
+    pub samples: Vec<f32>,
+    /// Decoded images (n_samples × 144) when requested.
+    pub images: Option<Vec<f32>>,
+    /// End-to-end latency in seconds (wall clock of the simulator).
+    pub wall_latency_s: f64,
+    /// Modeled hardware latency (analog solve window / digital steps).
+    pub hw_latency_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn onehot_encoding() {
+        assert_eq!(TaskKind::Circle.onehot(3), vec![0.0, 0.0, 0.0]);
+        assert_eq!(TaskKind::Letter(1).onehot(3), vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn batch_keys_separate_conditions() {
+        let base = GenRequest {
+            id: 0,
+            task: TaskKind::Letter(0),
+            n_samples: 10,
+            solver: SolverChoice::DigitalOde { steps: 100 },
+            guidance: 2.0,
+            decode: false,
+        };
+        let other_class = GenRequest { task: TaskKind::Letter(1), ..base.clone() };
+        let other_steps = GenRequest {
+            solver: SolverChoice::DigitalOde { steps: 50 },
+            ..base.clone()
+        };
+        let other_decode = GenRequest { decode: true, ..base.clone() };
+        let same = GenRequest { id: 7, n_samples: 3, ..base.clone() };
+        assert_ne!(base.batch_key(), other_class.batch_key());
+        assert_ne!(base.batch_key(), other_steps.batch_key());
+        assert_ne!(base.batch_key(), other_decode.batch_key());
+        assert_eq!(base.batch_key(), same.batch_key());
+    }
+
+    #[test]
+    fn solver_keys_distinct() {
+        let keys = [
+            SolverChoice::AnalogOde.batch_key(),
+            SolverChoice::AnalogSde.batch_key(),
+            SolverChoice::DigitalOde { steps: 100 }.batch_key(),
+            SolverChoice::DigitalSde { steps: 100 }.batch_key(),
+        ];
+        let set: std::collections::HashSet<_> = keys.iter().collect();
+        assert_eq!(set.len(), 4);
+    }
+}

@@ -1,0 +1,542 @@
+//! The generation service: engines, mode gate, worker pool.
+//!
+//! A [`Service`] owns a [`Batcher`] and a pool of worker threads.  Each
+//! emitted batch runs on one worker against the configured [`Engine`];
+//! results are split back to the originating requests in FIFO order and
+//! delivered over per-request channels.
+//!
+//! The [`ModeGate`] mirrors the PCB's SPDT switches (Methods): the macro
+//! is either in *computation* mode (any number of concurrent solves) or
+//! *programming* mode (exclusive — weights being rewritten).  Workers take
+//! the compute side; reprogramming takes the exclusive side.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::anyhow;
+
+use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{GenRequest, GenResponse, SolverChoice, TaskKind};
+use crate::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use crate::diffusion::sampler::{DigitalSampler, SamplerKind, SamplerMode};
+use crate::diffusion::schedule::VpSchedule;
+use crate::energy::model::{AnalogCost, DigitalCost};
+use crate::nn::{AnalogScoreNet, DigitalScoreNet, ScoreNet};
+use crate::runtime::ArtifactStore;
+use crate::util::rng::Rng;
+use crate::vae::PixelDecoder;
+
+/// A sampling backend the service can drive.
+pub trait Engine: Send + Sync {
+    fn dim(&self) -> usize;
+    fn n_classes(&self) -> usize;
+    /// Generate `n` samples under `solver` for the given condition.
+    fn generate(&self, solver: SolverChoice, onehot: &[f32], guidance: f32,
+                n: usize, rng: &mut Rng) -> anyhow::Result<Vec<f32>>;
+    /// Modeled hardware latency for one sampling.
+    fn hw_latency_s(&self, solver: SolverChoice, conditional: bool) -> f64 {
+        match solver {
+            SolverChoice::AnalogOde | SolverChoice::AnalogSde => {
+                let c = if conditional {
+                    AnalogCost::conditional_projected()
+                } else {
+                    AnalogCost::unconditional_projected()
+                };
+                c.latency_s()
+            }
+            SolverChoice::DigitalOde { steps } | SolverChoice::DigitalSde { steps } => {
+                DigitalCost::new(steps, if conditional { 2 } else { 1 }).latency_s()
+            }
+        }
+    }
+}
+
+/// Engine over the rust analog-hardware simulator.
+pub struct AnalogEngine {
+    pub net: AnalogScoreNet,
+    pub sched: VpSchedule,
+    pub substeps: usize,
+}
+
+impl Engine for AnalogEngine {
+    fn dim(&self) -> usize {
+        self.net.dim()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.net.n_classes()
+    }
+
+    fn generate(&self, solver: SolverChoice, onehot: &[f32], guidance: f32,
+                n: usize, rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+        let mode = match solver {
+            SolverChoice::AnalogOde => SolverMode::Ode,
+            SolverChoice::AnalogSde => SolverMode::Sde,
+            _ => return Err(anyhow!("AnalogEngine got a digital solver choice")),
+        };
+        let conditional = onehot.iter().any(|&c| c != 0.0);
+        let mut cfg = SolverConfig::new(mode)
+            .with_schedule(self.sched)
+            .with_substeps(self.substeps);
+        if conditional {
+            cfg = cfg.with_guidance(guidance);
+        }
+        let solver = AnalogSolver::new(&self.net, cfg);
+        Ok(solver.solve_batch(n, onehot, rng))
+    }
+}
+
+/// Engine over the pure-rust digital baseline (no PJRT needed).
+pub struct RustDigitalEngine {
+    pub net: DigitalScoreNet,
+    pub sched: VpSchedule,
+}
+
+impl Engine for RustDigitalEngine {
+    fn dim(&self) -> usize {
+        self.net.dim()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.net.n_classes()
+    }
+
+    fn generate(&self, solver: SolverChoice, onehot: &[f32], guidance: f32,
+                n: usize, rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+        let (mode, steps) = match solver {
+            SolverChoice::DigitalOde { steps } => (SamplerMode::Ode, steps),
+            SolverChoice::DigitalSde { steps } => (SamplerMode::Sde, steps),
+            _ => return Err(anyhow!("RustDigitalEngine got an analog solver choice")),
+        };
+        let conditional = onehot.iter().any(|&c| c != 0.0);
+        let mut s = DigitalSampler::new(&self.net, mode)
+            .with_schedule(self.sched)
+            .with_kind(SamplerKind::Euler);
+        if conditional {
+            s = s.with_guidance(guidance);
+        }
+        let (pts, _) = s.sample_batch(n, onehot, steps, rng);
+        Ok(pts)
+    }
+}
+
+/// Engine over the AOT PJRT artifacts (the production digital path).
+pub struct HloEngine {
+    pub store: ArtifactStore,
+    pub n_classes: usize,
+}
+
+// SAFETY: the PJRT CPU client and loaded executables are thread-safe for
+// concurrent Execute calls (PJRT C API contract); the store's lazy-compile
+// map is Mutex-protected.  The raw pointers inside the xla wrappers are
+// what blocks the auto-impl.
+unsafe impl Send for HloEngine {}
+unsafe impl Sync for HloEngine {}
+
+impl Engine for HloEngine {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn generate(&self, solver: SolverChoice, onehot: &[f32], guidance: f32,
+                n: usize, rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+        let (sde, steps) = match solver {
+            SolverChoice::DigitalOde { steps } => (false, steps),
+            SolverChoice::DigitalSde { steps } => (true, steps),
+            _ => return Err(anyhow!("HloEngine got an analog solver choice")),
+        };
+        let conditional = onehot.iter().any(|&c| c != 0.0);
+        let dim = self.dim();
+        let mut out = Vec::with_capacity(n * dim);
+        let mut remaining = n;
+        while remaining > 0 {
+            let b = self.store.pick_batch(remaining);
+            let take = b.min(remaining);
+            // pad to the artifact batch: extra lanes are generated and
+            // discarded (same as a padded GPU batch)
+            let oh_b: Vec<f32> = (0..b).flat_map(|_| onehot.iter().copied()).collect();
+            let cond = if conditional {
+                Some((oh_b.as_slice(), guidance))
+            } else {
+                None
+            };
+            let x = self.store.sample_digital(b, steps, sde, cond, rng)?;
+            out.extend_from_slice(&x[..take * dim]);
+            remaining -= take;
+        }
+        Ok(out)
+    }
+}
+
+/// Compute-vs-programming mode gate (the SPDT switches).
+#[derive(Default)]
+pub struct ModeGate {
+    lock: RwLock<()>,
+}
+
+impl ModeGate {
+    pub fn new() -> Self {
+        ModeGate::default()
+    }
+
+    /// Enter computation mode (shared).
+    pub fn compute(&self) -> std::sync::RwLockReadGuard<'_, ()> {
+        self.lock.read().unwrap()
+    }
+
+    /// Enter programming mode (exclusive: all compute drains first).
+    pub fn programming(&self) -> std::sync::RwLockWriteGuard<'_, ()> {
+        self.lock.write().unwrap()
+    }
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 2,
+            batcher: BatcherConfig::default(),
+            seed: 0xD1FF_0510,
+        }
+    }
+}
+
+type ResponseTx = Sender<anyhow::Result<GenResponse>>;
+
+/// The running service.
+pub struct Service {
+    batcher: Arc<Batcher>,
+    pending: Arc<Mutex<std::collections::HashMap<u64, ResponseTx>>>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    pub mode_gate: Arc<ModeGate>,
+}
+
+impl Service {
+    /// Start the worker pool over `engine` (+ optional pixel decoder).
+    pub fn start(engine: Arc<dyn Engine>, decoder: Option<Arc<PixelDecoder>>,
+                 cfg: ServiceConfig) -> Self {
+        let batcher = Arc::new(Batcher::new(cfg.batcher.clone()));
+        let pending: Arc<Mutex<std::collections::HashMap<u64, ResponseTx>>> =
+            Arc::new(Mutex::new(std::collections::HashMap::new()));
+        let metrics = Arc::new(Metrics::new());
+        let mode_gate = Arc::new(ModeGate::new());
+        let max_batch = cfg.batcher.max_batch_samples;
+
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let batcher = Arc::clone(&batcher);
+            let pending = Arc::clone(&pending);
+            let engine = Arc::clone(&engine);
+            let decoder = decoder.clone();
+            let metrics = Arc::clone(&metrics);
+            let mode_gate = Arc::clone(&mode_gate);
+            let mut rng = Rng::new(cfg.seed ^ (w as u64).wrapping_mul(0x9E37_79B9));
+            workers.push(std::thread::spawn(move || {
+                while let Some(batch) = batcher.next_batch() {
+                    let _compute = mode_gate.compute();
+                    let t0 = Instant::now();
+                    let result = Self::run_batch(&*engine, decoder.as_deref(),
+                                                 &batch, &mut rng);
+                    let wall = t0.elapsed();
+                    metrics.record_batch(
+                        batch.requests.len(),
+                        batch.total_samples(),
+                        batch.total_samples() as f64 / max_batch as f64,
+                        wall,
+                    );
+                    let mut pend = pending.lock().unwrap();
+                    match result {
+                        Ok(responses) => {
+                            for resp in responses {
+                                if let Some(tx) = pend.remove(&resp.id) {
+                                    let _ = tx.send(Ok(resp));
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            for req in &batch.requests {
+                                if let Some(tx) = pend.remove(&req.id) {
+                                    let _ = tx.send(Err(anyhow!("{e}")));
+                                }
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+
+        Service {
+            batcher,
+            pending,
+            workers,
+            next_id: AtomicU64::new(1),
+            metrics,
+            mode_gate,
+        }
+    }
+
+    fn run_batch(engine: &dyn Engine, decoder: Option<&PixelDecoder>,
+                 batch: &Batch, rng: &mut Rng)
+                 -> anyhow::Result<Vec<GenResponse>> {
+        let first = &batch.requests[0];
+        let onehot = first.task.onehot(engine.n_classes());
+        let n_total = batch.total_samples();
+        let t0 = Instant::now();
+        let samples =
+            engine.generate(first.solver, &onehot, first.guidance, n_total, rng)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let dim = engine.dim();
+        let hw = engine.hw_latency_s(first.solver, first.task.is_conditional());
+
+        let mut responses = Vec::with_capacity(batch.requests.len());
+        let mut offset = 0usize;
+        for req in &batch.requests {
+            let take = req.n_samples * dim;
+            let pts = samples[offset..offset + take].to_vec();
+            offset += take;
+            let images = if req.decode {
+                match decoder {
+                    Some(d) => Some(d.decode_batch(&pts)),
+                    None => return Err(anyhow!("decode requested but no decoder")),
+                }
+            } else {
+                None
+            };
+            responses.push(GenResponse {
+                id: req.id,
+                samples: pts,
+                images,
+                wall_latency_s: wall,
+                hw_latency_s: hw * req.n_samples as f64,
+            });
+        }
+        Ok(responses)
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, mut req: GenRequest)
+                  -> anyhow::Result<Receiver<anyhow::Result<GenResponse>>> {
+        if req.n_samples == 0 {
+            return Err(anyhow!("n_samples must be > 0"));
+        }
+        req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.pending.lock().unwrap().insert(req.id, tx);
+        if !self.batcher.submit(req) {
+            self.metrics.record_rejected();
+            return Err(anyhow!("service is shutting down"));
+        }
+        Ok(rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn generate(&self, task: TaskKind, n_samples: usize,
+                    solver: SolverChoice, guidance: f32, decode: bool)
+                    -> anyhow::Result<GenResponse> {
+        let rx = self.submit(GenRequest {
+            id: 0,
+            task,
+            n_samples,
+            solver,
+            guidance,
+            decode,
+        })?;
+        rx.recv().map_err(|_| anyhow!("worker dropped"))?
+    }
+
+    /// Drain and stop.
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diffusion::schedule::VpSchedule;
+
+    /// Deterministic linear engine for service-level tests: sample k of a
+    /// request = [k, class] so splitting across requests is verifiable.
+    struct CountingEngine;
+
+    impl Engine for CountingEngine {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn n_classes(&self) -> usize {
+            3
+        }
+        fn generate(&self, _s: SolverChoice, onehot: &[f32], _g: f32, n: usize,
+                    _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+            let class = onehot.iter().position(|&c| c != 0.0).map(|c| c as f32 + 1.0)
+                .unwrap_or(0.0);
+            Ok((0..n).flat_map(|k| [k as f32, class]).collect())
+        }
+    }
+
+    fn svc(workers: usize) -> Service {
+        Service::start(
+            Arc::new(CountingEngine),
+            None,
+            ServiceConfig {
+                workers,
+                batcher: BatcherConfig {
+                    max_batch_samples: 64,
+                    linger: std::time::Duration::from_millis(1),
+                },
+                seed: 1,
+            },
+        )
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let s = svc(1);
+        let r = s
+            .generate(TaskKind::Circle, 5, SolverChoice::AnalogOde, 0.0, false)
+            .unwrap();
+        assert_eq!(r.samples.len(), 10);
+        assert_eq!(r.samples[8], 4.0); // 5th sample index
+        s.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_split_correctly() {
+        let s = Arc::new(svc(2));
+        let mut rxs = Vec::new();
+        for i in 1..=8usize {
+            rxs.push((
+                i,
+                s.submit(GenRequest {
+                    id: 0,
+                    task: TaskKind::Letter(i % 3),
+                    n_samples: i,
+                    solver: SolverChoice::DigitalOde { steps: 10 },
+                    guidance: 2.0,
+                    decode: false,
+                })
+                .unwrap(),
+            ));
+        }
+        for (i, rx) in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.samples.len(), 2 * i, "request {i}");
+            // class payload consistent within the response
+            let class = r.samples[1];
+            for pair in r.samples.chunks_exact(2) {
+                assert_eq!(pair[1], class);
+            }
+        }
+        Arc::try_unwrap(s).ok().unwrap().shutdown();
+    }
+
+    #[test]
+    fn metrics_track_batches() {
+        let s = svc(1);
+        for _ in 0..3 {
+            s.generate(TaskKind::Circle, 4, SolverChoice::AnalogOde, 0.0, false)
+                .unwrap();
+        }
+        let m = s.metrics.snapshot();
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.samples, 12);
+        assert!(m.batches >= 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn zero_samples_rejected() {
+        let s = svc(1);
+        assert!(s
+            .submit(GenRequest {
+                id: 0,
+                task: TaskKind::Circle,
+                n_samples: 0,
+                solver: SolverChoice::AnalogOde,
+                guidance: 0.0,
+                decode: false,
+            })
+            .is_err());
+        s.shutdown();
+    }
+
+    #[test]
+    fn decode_without_decoder_errors() {
+        let s = svc(1);
+        let r = s.generate(TaskKind::Letter(0), 2,
+                           SolverChoice::DigitalOde { steps: 5 }, 2.0, true);
+        assert!(r.is_err());
+        s.shutdown();
+    }
+
+    #[test]
+    fn mode_gate_exclusion() {
+        let gate = ModeGate::new();
+        {
+            let _c1 = gate.compute();
+            let _c2 = gate.compute(); // concurrent compute OK
+            assert!(gate.lock.try_write().is_err(), "programming must wait");
+        }
+        {
+            let _p = gate.programming();
+            assert!(gate.lock.try_read().is_err(), "compute must wait");
+        }
+    }
+
+    #[test]
+    fn engine_latency_model_choices() {
+        let e = CountingEngine;
+        let a = e.hw_latency_s(SolverChoice::AnalogOde, false);
+        let d = e.hw_latency_s(SolverChoice::DigitalOde { steps: 130 }, false);
+        assert!(d / a > 10.0, "digital at 130 steps must be much slower");
+        let dc = e.hw_latency_s(SolverChoice::DigitalOde { steps: 130 }, true);
+        assert!((dc / d - 2.0).abs() < 1e-9, "CFG doubles inferences");
+    }
+
+    #[test]
+    fn rust_digital_engine_smoke() {
+        // exercise the real engine path with the tiny fixture net
+        use crate::nn::loader::tests::tiny_json;
+        use crate::nn::{DigitalScoreNet, ScoreWeights};
+        let net = DigitalScoreNet::new(ScoreWeights::from_json(&tiny_json()).unwrap());
+        let engine = RustDigitalEngine { net, sched: VpSchedule::default() };
+        let mut rng = Rng::new(0);
+        let out = engine
+            .generate(SolverChoice::DigitalOde { steps: 8 }, &[0.0, 0.0, 0.0], 0.0,
+                      4, &mut rng)
+            .unwrap();
+        assert_eq!(out.len(), 8);
+        for &v in &out {
+            assert!(v.is_finite());
+        }
+    }
+}

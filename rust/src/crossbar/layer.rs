@@ -1,0 +1,397 @@
+//! One logical crossbar layer: a weight matrix mapped onto ≤32×32 macro
+//! tiles, evaluated with the differential-pair + TIA semantics of the
+//! paper's Fig. 2h:
+//!
+//! ```text
+//! out_c = gain · Σ_r  v_r · (G_rc − G_FIXED)
+//!       = gain · ( Σ_r v_r·G_rc  −  G_FIXED · Σ_r v_r )
+//! ```
+//!
+//! The second term is the row-shared negative weight realized by a single
+//! summing amplifier per macro (50% cell saving) — we compute it exactly
+//! that way so the hardware structure is visible in the code.
+//!
+//! Large logical matrices are split into row/column tiles of at most
+//! [`MACRO_DIM`]; partial sums across row tiles accumulate at the TIA
+//! input node, as in a multi-macro bank.
+
+use super::mapper::{map_layer, Mapping};
+use super::noise::NoiseModel;
+use super::G_FIXED_MS;
+use crate::device::array::{Macro, ProgramStats, MACRO_DIM};
+use crate::device::cell::CellParams;
+use crate::util::rng::Rng;
+use crate::util::tensor::Mat;
+
+/// A weight matrix deployed on macro tiles.
+pub struct CrossbarLayer {
+    rows: usize,
+    cols: usize,
+    gain: f32,
+    /// Tiles in row-major tile order; tile (ti, tj) covers
+    /// rows [ti*32, ...) × cols [tj*32, ...).
+    tiles: Vec<Macro>,
+    tile_rows: usize,
+    tile_cols: usize,
+    /// Cached programmed conductances (flattened logical matrix) for the
+    /// fast path — refreshed after programming / aging.
+    g_cache: Mat,
+    /// Read-noise fraction used by the fast statistical model.
+    read_noise_frac: f32,
+}
+
+impl CrossbarLayer {
+    /// Map `weights` (n_in × n_out) onto macros and program them with
+    /// write-verify.  Returns the layer and the aggregate programming stats
+    /// (write-noise residuals included — this is the Fig. 5e "write noise"
+    /// path).
+    pub fn program(weights: &Mat, params: CellParams, tol_ms: f32,
+                   rng: &mut Rng) -> (Self, ProgramStats) {
+        let Mapping { g_target, gain } = map_layer(weights);
+        let (rows, cols) = weights.shape();
+        let tile_rows = rows.div_ceil(MACRO_DIM);
+        let tile_cols = cols.div_ceil(MACRO_DIM);
+        let mut tiles = Vec::with_capacity(tile_rows * tile_cols);
+        let mut agg = ProgramStats::default();
+        for ti in 0..tile_rows {
+            for tj in 0..tile_cols {
+                let r0 = ti * MACRO_DIM;
+                let c0 = tj * MACRO_DIM;
+                let tr = (rows - r0).min(MACRO_DIM);
+                let tc = (cols - c0).min(MACRO_DIM);
+                let mut m = Macro::with_params(tr, tc, params.clone());
+                let sub = Mat::from_fn(tr, tc, |r, c| g_target.get(r0 + r, c0 + c));
+                let st = m.program(&sub, tol_ms, 500, rng);
+                agg.pulses.extend(st.pulses);
+                agg.failures += st.failures;
+                agg.abs_errors_ms.extend(st.abs_errors_ms);
+                tiles.push(m);
+            }
+        }
+        let read_noise_frac = params.read_noise_frac;
+        let mut layer = CrossbarLayer {
+            rows,
+            cols,
+            gain,
+            tiles,
+            tile_rows,
+            tile_cols,
+            g_cache: Mat::zeros(rows, cols),
+            read_noise_frac,
+        };
+        layer.refresh_cache();
+        (layer, agg)
+    }
+
+    /// Build a layer with *exact* conductances (no programming error) —
+    /// used when the deployment should match the python artifacts bit-for-
+    /// bit and for the noise-ablation baselines.
+    pub fn from_conductances(g: &Mat, gain: f32, params: CellParams) -> Self {
+        let (rows, cols) = g.shape();
+        let tile_rows = rows.div_ceil(MACRO_DIM);
+        let tile_cols = cols.div_ceil(MACRO_DIM);
+        let mut tiles = Vec::new();
+        for ti in 0..tile_rows {
+            for tj in 0..tile_cols {
+                let r0 = ti * MACRO_DIM;
+                let c0 = tj * MACRO_DIM;
+                let tr = (rows - r0).min(MACRO_DIM);
+                let tc = (cols - c0).min(MACRO_DIM);
+                let mut m = Macro::with_params(tr, tc, params.clone());
+                for r in 0..tr {
+                    for c in 0..tc {
+                        // direct state injection (test/deployment shortcut,
+                        // equivalent to a zero-tolerance verify)
+                        *m.cell_mut(r, c) = crate::device::cell::Cell::new(
+                            g.get(r0 + r, c0 + c),
+                            params.clone(),
+                        );
+                    }
+                }
+                tiles.push(m);
+            }
+        }
+        let read_noise_frac = params.read_noise_frac;
+        let mut layer = CrossbarLayer {
+            rows,
+            cols,
+            gain,
+            tiles,
+            tile_rows,
+            tile_cols,
+            g_cache: Mat::zeros(rows, cols),
+            read_noise_frac,
+        };
+        layer.refresh_cache();
+        layer
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn gain(&self) -> f32 {
+        self.gain
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Total programmed cells (for the energy model).
+    pub fn n_cells(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Rebuild the flattened conductance cache from the tiles.
+    pub fn refresh_cache(&mut self) {
+        for ti in 0..self.tile_rows {
+            for tj in 0..self.tile_cols {
+                let m = &self.tiles[ti * self.tile_cols + tj];
+                let (r0, c0) = (ti * MACRO_DIM, tj * MACRO_DIM);
+                for r in 0..m.rows() {
+                    for c in 0..m.cols() {
+                        self.g_cache.set(r0 + r, c0 + c, m.cell(r, c).conductance());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Effective weight matrix currently realized (gain·(G − G_FIXED)).
+    pub fn effective_weights(&self) -> Mat {
+        self.g_cache.map(|g| self.gain * (g - G_FIXED_MS))
+    }
+
+    /// Analog forward: `v_in` (len n_in, already in voltage units) →
+    /// `out` (len n_out).  The caller applies the protective input clamp;
+    /// this method implements MVM + shared-negative-weight subtraction +
+    /// TIA gain.
+    pub fn forward(&self, v_in: &[f32], out: &mut [f32], noise: NoiseModel,
+                   rng: &mut Rng) {
+        assert_eq!(v_in.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        match noise {
+            NoiseModel::ReadPerCell => self.forward_per_cell(v_in, out, rng),
+            NoiseModel::Ideal => self.forward_fast(v_in, out, 0.0, rng),
+            NoiseModel::ReadFast => {
+                self.forward_fast(v_in, out, self.read_noise_frac, rng)
+            }
+        }
+        // shared negative weight: one summing amplifier computes
+        // G_FIXED · Σ v and subtracts it from every column current
+        let v_sum: f32 = v_in.iter().sum();
+        let neg = G_FIXED_MS * v_sum;
+        for o in out.iter_mut() {
+            *o = self.gain * (*o - neg);
+        }
+    }
+
+    /// Exact device-level path: every cell re-read with noise.
+    fn forward_per_cell(&self, v_in: &[f32], out: &mut [f32], rng: &mut Rng) {
+        out.fill(0.0);
+        let mut tile_out = [0.0f32; MACRO_DIM];
+        for ti in 0..self.tile_rows {
+            let r0 = ti * MACRO_DIM;
+            for tj in 0..self.tile_cols {
+                let m = &self.tiles[ti * self.tile_cols + tj];
+                let c0 = tj * MACRO_DIM;
+                m.mvm(&v_in[r0..r0 + m.rows()], &mut tile_out[..m.cols()], rng);
+                for c in 0..m.cols() {
+                    out[c0 + c] += tile_out[c];
+                }
+            }
+        }
+    }
+
+    /// Fast statistical path: ideal MVM against the cache plus one
+    /// column-level Gaussian with the exact per-cell variance
+    /// `frac² Σ_r (v_r G_rc)²` (see [`NoiseModel::ReadFast`]).
+    fn forward_fast(&self, v_in: &[f32], out: &mut [f32], frac: f32,
+                    rng: &mut Rng) {
+        out.fill(0.0);
+        let g = self.g_cache.as_slice();
+        let n = self.cols;
+        if frac == 0.0 {
+            for (r, &v) in v_in.iter().enumerate() {
+                if v == 0.0 {
+                    continue;
+                }
+                let grow = &g[r * n..(r + 1) * n];
+                for (o, &gc) in out.iter_mut().zip(grow) {
+                    *o += v * gc;
+                }
+            }
+            return;
+        }
+        // accumulate mean and variance in one pass; iterator zips keep the
+        // inner loop bounds-check-free so it auto-vectorizes (§Perf: this
+        // rewrite cut ReadFast eval time vs the indexed version)
+        let mut var_stack = [0.0f32; MACRO_DIM * 4];
+        let mut var_heap;
+        let var: &mut [f32] = if n <= var_stack.len() {
+            &mut var_stack[..n]
+        } else {
+            var_heap = vec![0.0f32; n];
+            &mut var_heap
+        };
+        for (r, &v) in v_in.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let grow = &g[r * n..(r + 1) * n];
+            for ((o, vc), &gc) in out.iter_mut().zip(var.iter_mut()).zip(grow) {
+                let term = v * gc;
+                *o += term;
+                *vc += term * term;
+            }
+        }
+        for (o, vc) in out.iter_mut().zip(var.iter()) {
+            *o += frac * vc.sqrt() * rng.gaussian_f32();
+        }
+    }
+
+    /// Age all tiles (retention experiments), then refresh the cache.
+    pub fn age(&mut self, dt_s: f64, rng: &mut Rng) {
+        for t in &mut self.tiles {
+            t.age(dt_s, rng);
+        }
+        self.refresh_cache();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn quiet_params() -> CellParams {
+        CellParams { read_noise_frac: 0.0, ..CellParams::default() }
+    }
+
+    fn test_weights(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(rows, cols, |_, _| 0.8 * rng.gaussian_f32())
+    }
+
+    #[test]
+    fn ideal_forward_matches_weight_matmul() {
+        let w = test_weights(14, 14, 1);
+        let mut rng = Rng::new(2);
+        let (layer, _) = CrossbarLayer::program(&w, quiet_params(), 0.0002, &mut rng);
+        let v: Vec<f32> = (0..14).map(|i| 0.1 * i as f32 - 0.5).collect();
+        let mut out = vec![0.0f32; 14];
+        layer.forward(&v, &mut out, NoiseModel::Ideal, &mut rng);
+        // compare against the *effective* (programmed) weights — exact
+        let we = layer.effective_weights();
+        for c in 0..14 {
+            let want: f32 = (0..14).map(|r| v[r] * we.get(r, c)).sum();
+            assert!((out[c] - want).abs() < 1e-4, "col {c}: {} vs {want}", out[c]);
+        }
+        // and close to the requested weights (within programming tolerance)
+        assert!(w.max_abs_diff(&we) < 0.15, "{}", w.max_abs_diff(&we));
+    }
+
+    #[test]
+    fn from_conductances_is_exact() {
+        let w = test_weights(6, 9, 3);
+        let m = super::super::mapper::map_layer(&w);
+        let layer =
+            CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet_params());
+        let we = layer.effective_weights();
+        let qstep = m.gain * (0.08) / 63.0;
+        assert!(w.max_abs_diff(&we) <= 0.5 * qstep + 1e-6);
+    }
+
+    #[test]
+    fn tiling_splits_large_matrices() {
+        let w = test_weights(40, 70, 5);
+        let mut rng = Rng::new(6);
+        let (layer, _) = CrossbarLayer::program(&w, quiet_params(), 0.0005, &mut rng);
+        assert_eq!(layer.n_tiles(), 2 * 3); // ceil(40/32) x ceil(70/32)
+        let v: Vec<f32> = (0..40).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut out = vec![0.0f32; 70];
+        layer.forward(&v, &mut out, NoiseModel::Ideal, &mut rng);
+        let we = layer.effective_weights();
+        for c in [0usize, 31, 32, 69] {
+            let want: f32 = (0..40).map(|r| v[r] * we.get(r, c)).sum();
+            assert!((out[c] - want).abs() < 1e-3, "col {c}");
+        }
+    }
+
+    #[test]
+    fn fast_noise_matches_per_cell_moments() {
+        let w = test_weights(14, 14, 7);
+        let params = CellParams::default(); // 1% read noise
+        let mut rng = Rng::new(8);
+        let (layer, _) = CrossbarLayer::program(&w, params, 0.0005, &mut rng);
+        let v: Vec<f32> = (0..14).map(|i| 0.2 * (i as f32 - 7.0) / 7.0 + 0.3).collect();
+
+        let n = 4000;
+        let mut col0_per_cell = Vec::with_capacity(n);
+        let mut col0_fast = Vec::with_capacity(n);
+        let mut out = vec![0.0f32; 14];
+        for _ in 0..n {
+            layer.forward(&v, &mut out, NoiseModel::ReadPerCell, &mut rng);
+            col0_per_cell.push(out[0]);
+            layer.forward(&v, &mut out, NoiseModel::ReadFast, &mut rng);
+            col0_fast.push(out[0]);
+        }
+        let (m1, s1) = (stats::mean(&col0_per_cell), stats::std(&col0_per_cell));
+        let (m2, s2) = (stats::mean(&col0_fast), stats::std(&col0_fast));
+        assert!((m1 - m2).abs() < 0.02 * m1.abs().max(0.1), "means {m1} vs {m2}");
+        assert!((s1 - s2).abs() / s1.max(1e-9) < 0.15, "stds {s1} vs {s2}");
+        assert!(s1 > 0.0);
+    }
+
+    #[test]
+    fn negative_weight_subtraction_exact() {
+        // all-G_FIXED conductances == zero weights: output must be 0 for any input
+        let g = Mat::full(5, 4, G_FIXED_MS);
+        let layer = CrossbarLayer::from_conductances(&g, 3.0, quiet_params());
+        let mut rng = Rng::new(9);
+        let v = [0.7f32, -1.0, 0.3, 2.0, -0.2];
+        let mut out = vec![0.0f32; 4];
+        layer.forward(&v, &mut out, NoiseModel::Ideal, &mut rng);
+        for &o in &out {
+            assert!(o.abs() < 1e-5, "{o}");
+        }
+    }
+
+    #[test]
+    fn linearity_property() {
+        // forward(a·v1 + b·v2) == a·forward(v1) + b·forward(v2) (ideal mode)
+        let w = test_weights(10, 8, 11);
+        let m = super::super::mapper::map_layer(&w);
+        let layer =
+            CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet_params());
+        crate::util::ptest::check_msg(
+            "crossbar linearity",
+            |rng: &mut Rng| {
+                let v1 = rng.gaussian_vec(10);
+                let v2 = rng.gaussian_vec(10);
+                let a = rng.gaussian_f32();
+                let b = rng.gaussian_f32();
+                (v1, v2, a, b)
+            },
+            |(v1, v2, a, b)| {
+                let mut rng = Rng::new(0);
+                let mut o1 = vec![0.0f32; 8];
+                let mut o2 = vec![0.0f32; 8];
+                let mut o3 = vec![0.0f32; 8];
+                let vc: Vec<f32> =
+                    v1.iter().zip(v2).map(|(x, y)| a * x + b * y).collect();
+                layer.forward(v1, &mut o1, NoiseModel::Ideal, &mut rng);
+                layer.forward(v2, &mut o2, NoiseModel::Ideal, &mut rng);
+                layer.forward(&vc, &mut o3, NoiseModel::Ideal, &mut rng);
+                for c in 0..8 {
+                    let want = a * o1[c] + b * o2[c];
+                    if (o3[c] - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                        return Err(format!("col {c}: {} vs {want}", o3[c]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! Weight ↔ conductance mapping (rust mirror of `python/compile/analog.py`).
+//!
+//! Contract shared with the python side and asserted in integration tests:
+//!
+//! ```text
+//! W = tia_gain * (G_mem - G_FIXED),   G_mem ∈ [0.02, 0.10] mS
+//! ```
+//!
+//! Each layer gets its own TIA gain — the smallest that fits the layer's
+//! weights into the window, maximizing conductance-range usage and thus
+//! minimizing 64-level quantization error.
+
+use super::{G_CELL_HI_MS, G_CELL_LO_MS, G_FIXED_MS, N_LEVELS};
+use crate::util::tensor::Mat;
+
+/// Negative / positive weight headroom in conductance units (mS).
+pub const W_NEG_MAX: f32 = G_FIXED_MS - G_CELL_LO_MS; // 0.03
+pub const W_POS_MAX: f32 = G_CELL_HI_MS - G_FIXED_MS; // 0.05
+
+/// A complete layer mapping: target conductances + the gain that inverts it.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    pub g_target: Mat,
+    pub gain: f32,
+}
+
+/// Smallest TIA gain that fits every weight of `w` into the window.
+pub fn required_gain(w: &Mat) -> f32 {
+    let mut g = 1e-6f32;
+    for &x in w.as_slice() {
+        if x > 0.0 {
+            g = g.max(x / W_POS_MAX);
+        } else {
+            g = g.max(-x / W_NEG_MAX);
+        }
+    }
+    g
+}
+
+/// W → G_mem (mS), clipped into the programmable window.
+pub fn weight_to_conductance(w: &Mat, gain: f32) -> Mat {
+    w.map(|x| (x / gain + G_FIXED_MS).clamp(G_CELL_LO_MS, G_CELL_HI_MS))
+}
+
+/// Snap conductances to the macro's 64 linear states (Fig. 2d).
+pub fn quantize(g: &Mat) -> Mat {
+    let step = (G_CELL_HI_MS - G_CELL_LO_MS) / (N_LEVELS - 1) as f32;
+    g.map(|x| G_CELL_LO_MS + ((x - G_CELL_LO_MS) / step).round() * step)
+}
+
+/// Inverse mapping (used to quantify deployment error).
+pub fn conductance_to_weight(g: &Mat, gain: f32) -> Mat {
+    g.map(|x| gain * (x - G_FIXED_MS))
+}
+
+/// Full mapping of one weight matrix: per-layer gain + quantized targets.
+pub fn map_layer(w: &Mat) -> Mapping {
+    let gain = required_gain(w);
+    Mapping { g_target: quantize(&weight_to_conductance(w, gain)), gain }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gain_fits_window() {
+        ptest::check(
+            "mapped conductances in window",
+            |rng: &mut Rng| {
+                let r = 1 + rng.below(20);
+                let c = 1 + rng.below(20);
+                let scale = rng.uniform_range(0.01, 10.0) as f32;
+                Mat::from_fn(r, c, |_, _| scale * rng.gaussian_f32())
+            },
+            |w| {
+                let g = weight_to_conductance(w, required_gain(w));
+                g.as_slice()
+                    .iter()
+                    .all(|&x| (G_CELL_LO_MS - 1e-6..=G_CELL_HI_MS + 1e-6).contains(&x))
+            },
+        );
+    }
+
+    #[test]
+    fn roundtrip_within_half_quant_step() {
+        ptest::check_msg(
+            "quantized roundtrip error bounded",
+            |rng: &mut Rng| {
+                let scale = rng.uniform_range(0.05, 5.0) as f32;
+                Mat::from_fn(8, 8, |_, _| scale * rng.gaussian_f32())
+            },
+            |w| {
+                let m = map_layer(w);
+                let w2 = conductance_to_weight(&m.g_target, m.gain);
+                let qstep = m.gain * (G_CELL_HI_MS - G_CELL_LO_MS) / (N_LEVELS - 1) as f32;
+                let err = w.max_abs_diff(&w2);
+                if err <= 0.5 * qstep + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("err {err} > half step {}", 0.5 * qstep))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn quantize_produces_at_most_64_levels() {
+        let g = Mat::from_fn(40, 40, |r, c| {
+            G_CELL_LO_MS + (G_CELL_HI_MS - G_CELL_LO_MS) * ((r * 40 + c) as f32 / 1599.0)
+        });
+        let q = quantize(&g);
+        let mut levels: Vec<i64> = q
+            .as_slice()
+            .iter()
+            .map(|&x| (x * 1e7).round() as i64)
+            .collect();
+        levels.sort();
+        levels.dedup();
+        assert!(levels.len() <= N_LEVELS);
+    }
+
+    #[test]
+    fn zero_weight_maps_to_g_fixed() {
+        let w = Mat::zeros(3, 3);
+        let g = weight_to_conductance(&w, 1.0);
+        for &x in g.as_slice() {
+            assert!((x - G_FIXED_MS).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn asymmetric_headroom_respected() {
+        // max negative weight maps to floor, max positive to ceiling
+        let w = Mat::from_vec(1, 2, vec![-W_NEG_MAX, W_POS_MAX]);
+        let gain = required_gain(&w);
+        assert!((gain - 1.0).abs() < 1e-5);
+        let g = weight_to_conductance(&w, gain);
+        assert!((g.get(0, 0) - G_CELL_LO_MS).abs() < 1e-6);
+        assert!((g.get(0, 1) - G_CELL_HI_MS).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,22 @@
+//! Analog crossbar compute layer: weight mapping, differential-pair MVM
+//! with TIA readout, and tiling of logical matrices onto 32×32 macros.
+//!
+//! This is the rust mirror of the L1 Pallas kernel semantics
+//! (`python/compile/kernels/crossbar.py` / `ref.py`): the three
+//! implementations are cross-checked by the integration tests.
+
+pub mod layer;
+pub mod mapper;
+pub mod noise;
+
+pub use layer::CrossbarLayer;
+pub use mapper::{conductance_to_weight, required_gain, weight_to_conductance, Mapping};
+pub use noise::NoiseModel;
+
+/// Shared negative-weight conductance: 20 kΩ → 0.05 mS (paper Fig. 2h).
+pub const G_FIXED_MS: f32 = 0.05;
+/// Programmable cell window (paper Fig. 2d).
+pub const G_CELL_LO_MS: f32 = 0.02;
+pub const G_CELL_HI_MS: f32 = 0.10;
+/// ≥64 discernible linear conductance states.
+pub const N_LEVELS: usize = 64;

@@ -1,0 +1,27 @@
+//! Noise configuration for analog crossbar evaluation.
+//!
+//! Three fidelity levels trade simulation cost for physical detail; the
+//! integration tests assert that the fast statistical model matches the
+//! per-cell model's first two moments, so benches can use the fast path
+//! without changing the science.
+
+/// How conductance noise is injected during an MVM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NoiseModel {
+    /// No noise: true programmed conductances (idealized reference).
+    Ideal,
+    /// Per-cell instantaneous read noise (exact device-level model):
+    /// every cell's conductance is re-sampled on every query.
+    ReadPerCell,
+    /// Statistically equivalent column-level noise: one Gaussian per
+    /// output column with variance `frac² · Σ_r (v_r · G_rc)²` — same mean
+    /// and variance as [`NoiseModel::ReadPerCell`] at a fraction of the
+    /// cost (one RNG draw per column instead of per cell).
+    ReadFast,
+}
+
+impl NoiseModel {
+    pub fn is_noisy(self) -> bool {
+        !matches!(self, NoiseModel::Ideal)
+    }
+}

@@ -1,0 +1,71 @@
+//! The unconditional target distribution of Fig. 3: a circle of radius 1
+//! (software units = 0.1 V) with small radial jitter — rust mirror of
+//! `python/compile/datasets.sample_circle`.
+
+use crate::util::rng::Rng;
+
+pub const RADIUS: f64 = 1.0;
+pub const RADIAL_STD: f64 = 0.05;
+
+/// `n` interleaved 2-D ground-truth points.
+pub fn sample_circle(n: usize, rng: &mut Rng) -> Vec<f32> {
+    sample_circle_with(n, RADIUS, RADIAL_STD, rng)
+}
+
+pub fn sample_circle_with(n: usize, radius: f64, radial_std: f64,
+                          rng: &mut Rng) -> Vec<f32> {
+    let mut out = Vec::with_capacity(2 * n);
+    for _ in 0..n {
+        let theta = rng.uniform_range(0.0, 2.0 * std::f64::consts::PI);
+        let r = radius + radial_std * rng.gaussian();
+        out.push((r * theta.cos()) as f32);
+        out.push((r * theta.sin()) as f32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn radius_statistics() {
+        let mut rng = Rng::new(0);
+        let pts = sample_circle(50_000, &mut rng);
+        let radii: Vec<f32> = pts
+            .chunks_exact(2)
+            .map(|p| (p[0] * p[0] + p[1] * p[1]).sqrt())
+            .collect();
+        assert!((stats::mean(&radii) - 1.0).abs() < 0.01);
+        assert!((stats::std(&radii) - 0.05).abs() < 0.01);
+    }
+
+    #[test]
+    fn angles_uniform() {
+        let mut rng = Rng::new(1);
+        let pts = sample_circle(50_000, &mut rng);
+        let mut quad = [0usize; 4];
+        for p in pts.chunks_exact(2) {
+            let q = match (p[0] >= 0.0, p[1] >= 0.0) {
+                (true, true) => 0,
+                (false, true) => 1,
+                (false, false) => 2,
+                (true, false) => 3,
+            };
+            quad[q] += 1;
+        }
+        for &c in &quad {
+            assert!((c as f64 / 50_000.0 - 0.25).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn kl_of_truth_vs_truth_is_small() {
+        let mut rng = Rng::new(2);
+        let a = sample_circle(30_000, &mut rng);
+        let b = sample_circle(30_000, &mut rng);
+        let kl = stats::kl_points(&a, &b, 24, 2.0);
+        assert!(kl < 0.02, "kl={kl}");
+    }
+}

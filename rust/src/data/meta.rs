@@ -1,0 +1,160 @@
+//! Typed access to `artifacts/meta.json` (the build manifest emitted by
+//! `python/compile/aot.py`): artifact IO specs, schedule constants, class
+//! statistics, and the training-time quality gates.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::diffusion::schedule::VpSchedule;
+use crate::util::json::Json;
+
+/// One AOT artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+}
+
+/// Parsed meta.json.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub sched: VpSchedule,
+    pub hidden: usize,
+    pub dim: usize,
+    pub n_classes: usize,
+    pub class_centers: Vec<[f32; 2]>,
+    pub latent_class_means: Vec<[f32; 2]>,
+    pub latent_class_stds: Vec<[f32; 2]>,
+    pub batches: Vec<usize>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub kl_uncond_gate: f64,
+}
+
+fn pairs(j: &Json, key: &str) -> anyhow::Result<Vec<[f32; 2]>> {
+    j.get(key)
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("missing '{key}'"))?
+        .iter()
+        .map(|row| {
+            let r = row.as_arr().ok_or_else(|| anyhow!("'{key}' row not array"))?;
+            Ok([
+                r[0].as_f64().unwrap_or(f64::NAN) as f32,
+                r[1].as_f64().unwrap_or(f64::NAN) as f32,
+            ])
+        })
+        .collect()
+}
+
+impl Meta {
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(text).context("parsing meta.json")?;
+        let sj = j.get("schedule").ok_or_else(|| anyhow!("missing schedule"))?;
+        let num = |o: &Json, k: &str| -> anyhow::Result<f64> {
+            o.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("missing number '{k}'"))
+        };
+        let sched = VpSchedule {
+            beta_min: num(sj, "beta_min")?,
+            beta_max: num(sj, "beta_max")?,
+            t_end: num(sj, "t_end")?,
+            eps_t: num(sj, "eps_t")?,
+        };
+        let mj = j.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in j
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+        {
+            let file = spec
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact '{name}' missing file"))?
+                .to_string();
+            let inputs = spec
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("artifact '{name}' missing inputs"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect()
+                })
+                .collect();
+            artifacts.insert(name.clone(), ArtifactSpec { file, inputs });
+        }
+        Ok(Meta {
+            sched,
+            hidden: num(mj, "hidden")? as usize,
+            dim: num(mj, "dim")? as usize,
+            n_classes: num(mj, "n_classes")? as usize,
+            class_centers: pairs(&j, "class_centers")?,
+            latent_class_means: pairs(&j, "latent_class_means")?,
+            latent_class_stds: pairs(&j, "latent_class_stds")?,
+            artifacts,
+            batches: j
+                .get("batches")
+                .and_then(|b| b.as_arr())
+                .ok_or_else(|| anyhow!("missing batches"))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
+            kl_uncond_gate: j
+                .get("quality")
+                .and_then(|q| q.get("kl_uncond_ode200"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(f64::NAN),
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_json(&text)
+    }
+
+    /// Default artifacts directory (crate root / artifacts).
+    pub fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Load from the default location.
+    pub fn load_default() -> anyhow::Result<Self> {
+        Self::load(Self::artifacts_dir().join("meta.json"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_meta_if_present() {
+        let p = Meta::artifacts_dir().join("meta.json");
+        if !p.exists() {
+            return;
+        }
+        let m = Meta::load(p).unwrap();
+        assert_eq!(m.dim, 2);
+        assert_eq!(m.hidden, 14);
+        assert_eq!(m.n_classes, 3);
+        assert_eq!(m.class_centers.len(), 3);
+        assert_eq!(m.latent_class_means.len(), 3);
+        assert!(m.batches.contains(&1) && m.batches.contains(&64));
+        assert!(m.artifacts.contains_key("step_uncond_b64"));
+        assert!(m.kl_uncond_gate < 0.8);
+    }
+
+    #[test]
+    fn rejects_incomplete_meta() {
+        assert!(Meta::from_json("{}").is_err());
+        assert!(Meta::from_json(r#"{"schedule": {"beta_min": 0.001}}"#).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Ground-truth data for evaluation: the 2-D circular distribution
+//! (Fig. 3) and the latent-space class clusters of the letters task
+//! (Fig. 4), plus meta.json access.
+
+pub mod circle;
+pub mod meta;
+
+pub use circle::sample_circle;
+pub use meta::Meta;

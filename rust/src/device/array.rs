@@ -1,0 +1,307 @@
+//! 32×32 1T1R crossbar macro (the paper's in-memory computing unit).
+//!
+//! Rows share a Word Line (transistor gates) and Source Line; columns share
+//! a Bit Line connected to the cells' top electrodes.  The macro supports
+//! two modes, as on the PCB (Methods): **programming** (write-verify via
+//! the B1500A-analogue) and **computation** (voltages on BLs, currents
+//! summed on SLs — Ohm's law × Kirchhoff's current law).
+
+use super::cell::{Cell, CellParams, G_HI_MS, G_LO_MS};
+use crate::util::rng::Rng;
+use crate::util::tensor::Mat;
+
+/// Physical array dimension of one macro (paper: 32×32).
+pub const MACRO_DIM: usize = 32;
+
+/// Result of programming a full target pattern.
+#[derive(Debug, Clone, Default)]
+pub struct ProgramStats {
+    /// Pulses used per cell (write-verify iterations, Fig. 5b).
+    pub pulses: Vec<usize>,
+    /// Cells that failed to verify within the pulse budget.
+    pub failures: usize,
+    /// Final absolute conductance errors |G - target| in mS (Fig. 2g).
+    pub abs_errors_ms: Vec<f32>,
+}
+
+impl ProgramStats {
+    pub fn mean_pulses(&self) -> f64 {
+        if self.pulses.is_empty() {
+            return 0.0;
+        }
+        self.pulses.iter().sum::<usize>() as f64 / self.pulses.len() as f64
+    }
+
+    pub fn max_error_ms(&self) -> f32 {
+        self.abs_errors_ms.iter().copied().fold(0.0, f32::max)
+    }
+}
+
+/// One 32×32 (or smaller) 1T1R macro.
+#[derive(Debug, Clone)]
+pub struct Macro {
+    rows: usize,
+    cols: usize,
+    cells: Vec<Cell>,
+}
+
+impl Macro {
+    /// Fresh macro with all cells at the window floor.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows <= MACRO_DIM && cols <= MACRO_DIM, "exceeds 32x32 macro");
+        let cells = (0..rows * cols)
+            .map(|_| Cell::with_default(G_LO_MS))
+            .collect();
+        Macro { rows, cols, cells }
+    }
+
+    /// Macro with custom device parameters (noise ablations).
+    pub fn with_params(rows: usize, cols: usize, params: CellParams) -> Self {
+        assert!(rows <= MACRO_DIM && cols <= MACRO_DIM);
+        let cells = (0..rows * cols)
+            .map(|_| Cell::new(G_LO_MS, params.clone()))
+            .collect();
+        Macro { rows, cols, cells }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn cell(&self, r: usize, c: usize) -> &Cell {
+        &self.cells[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn cell_mut(&mut self, r: usize, c: usize) -> &mut Cell {
+        &mut self.cells[r * self.cols + c]
+    }
+
+    /// Inject stuck-at faults into a fraction of cells (yield model).
+    pub fn inject_faults(&mut self, fraction: f64, rng: &mut Rng) {
+        for cell in &mut self.cells {
+            if rng.uniform() < fraction {
+                cell.set_stuck(true);
+            }
+        }
+    }
+
+    /// Program a conductance pattern with write-verify (Fig. 2f / 5b).
+    ///
+    /// `targets` must be rows×cols in mS; values are clamped to the window.
+    pub fn program(&mut self, targets: &Mat, tol_ms: f32, max_pulses: usize,
+                   rng: &mut Rng) -> ProgramStats {
+        assert_eq!(targets.shape(), (self.rows, self.cols));
+        let mut stats = ProgramStats::default();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let target = targets.get(r, c).clamp(G_LO_MS, G_HI_MS);
+                match self.cell_mut(r, c).program_verify(target, tol_ms, max_pulses, rng) {
+                    Some(p) => stats.pulses.push(p),
+                    None => stats.failures += 1,
+                }
+                stats
+                    .abs_errors_ms
+                    .push((self.cell(r, c).conductance() - target).abs());
+            }
+        }
+        stats
+    }
+
+    /// Noise-free conductance snapshot (the "true" programmed weights).
+    pub fn conductances(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |r, c| self.cell(r, c).conductance())
+    }
+
+    /// One noisy read of the full array (Fig. 2g error-distribution data).
+    pub fn read_all(&self, rng: &mut Rng) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |r, c| self.cell(r, c).read(rng))
+    }
+
+    /// Analog MVM in computation mode: BL voltages (len = rows) drive the
+    /// array; SL currents (len = cols) are the Kirchhoff sums of Ohm's-law
+    /// products against *instantaneous noisy* conductances.
+    ///
+    /// Units: volts (software units) × mS → current in software-unit·mS;
+    /// the TIA stage in [`crate::crossbar`] converts back to voltage.
+    pub fn mvm(&self, v_bl: &[f32], out_sl: &mut [f32], rng: &mut Rng) {
+        assert_eq!(v_bl.len(), self.rows);
+        assert_eq!(out_sl.len(), self.cols);
+        out_sl.fill(0.0);
+        for r in 0..self.rows {
+            let v = v_bl[r];
+            if v == 0.0 {
+                continue;
+            }
+            for c in 0..self.cols {
+                out_sl[c] += v * self.cell(r, c).read(rng);
+            }
+        }
+    }
+
+    /// Deterministic MVM against the true conductances (no read noise) —
+    /// the idealized reference the noise ablations compare against.
+    pub fn mvm_ideal(&self, v_bl: &[f32], out_sl: &mut [f32]) {
+        assert_eq!(v_bl.len(), self.rows);
+        assert_eq!(out_sl.len(), self.cols);
+        out_sl.fill(0.0);
+        for r in 0..self.rows {
+            let v = v_bl[r];
+            if v == 0.0 {
+                continue;
+            }
+            for c in 0..self.cols {
+                out_sl[c] += v * self.cell(r, c).conductance();
+            }
+        }
+    }
+
+    /// Age the whole array by `dt_s` seconds (retention experiments).
+    pub fn age(&mut self, dt_s: f64, rng: &mut Rng) {
+        for cell in &mut self.cells {
+            cell.drift(dt_s, rng);
+        }
+    }
+
+    /// The moon-and-star demo pattern of Fig. 2f, scaled into the window.
+    /// A crescent moon (disk minus offset disk) plus a 4-point star.
+    pub fn moon_star_pattern(dim: usize) -> Mat {
+        let f = dim as f32;
+        Mat::from_fn(dim, dim, |r, c| {
+            let (y, x) = (r as f32 / f - 0.5, c as f32 / f - 0.5);
+            // moon: disk at (-0.12, -0.1) r=0.3 minus disk at (-0.04, -0.02) r=0.26
+            let d1 = ((x + 0.12).powi(2) + (y + 0.10).powi(2)).sqrt();
+            let d2 = ((x + 0.02).powi(2) + (y + 0.02).powi(2)).sqrt();
+            let moon = d1 < 0.30 && d2 > 0.26;
+            // star: diamond |x-cx| + |y-cy| < 0.12 around (0.25, 0.22)
+            let star = (x - 0.25).abs() + (y - 0.22).abs() < 0.12;
+            if moon || star {
+                G_HI_MS
+            } else {
+                G_LO_MS + 0.1 * (G_HI_MS - G_LO_MS)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn program_pattern_accurate() {
+        let mut rng = Rng::new(7);
+        let mut m = Macro::new(16, 16);
+        let targets = Mat::from_fn(16, 16, |r, c| {
+            G_LO_MS + (G_HI_MS - G_LO_MS) * ((r * 16 + c) as f32 / 255.0)
+        });
+        let st = m.program(&targets, 0.0015, 500, &mut rng);
+        assert_eq!(st.failures, 0);
+        assert!(st.max_error_ms() < 0.004, "max err {}", st.max_error_ms());
+        assert!(st.mean_pulses() > 1.0, "write-verify should need pulses");
+    }
+
+    #[test]
+    fn program_errors_gaussian_like() {
+        // Fig. 2g: relative conductance errors roughly symmetric, small.
+        let mut rng = Rng::new(9);
+        let mut m = Macro::new(32, 32);
+        let targets = Mat::full(32, 32, 0.06);
+        let _ = m.program(&targets, 0.0015, 500, &mut rng);
+        let snap = m.conductances();
+        let errs: Vec<f32> = snap.as_slice().iter().map(|&g| g - 0.06).collect();
+        let mu = stats::mean(&errs);
+        let sd = stats::std(&errs);
+        assert!(mu.abs() < 0.001, "bias {mu}");
+        assert!(sd > 0.0 && sd < 0.002, "std {sd}");
+    }
+
+    #[test]
+    fn mvm_matches_manual_sum() {
+        let mut rng = Rng::new(3);
+        let mut m = Macro::new(4, 3);
+        let targets = Mat::from_fn(4, 3, |r, c| 0.02 + 0.01 * (r + c) as f32);
+        let _ = m.program(&targets, 0.0005, 2000, &mut rng);
+        let v = [1.0f32, -0.5, 0.25, 2.0];
+        let mut out = [0.0f32; 3];
+        m.mvm_ideal(&v, &mut out);
+        let g = m.conductances();
+        for c in 0..3 {
+            let want: f32 = (0..4).map(|r| v[r] * g.get(r, c)).sum();
+            assert!((out[c] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mvm_noisy_fluctuates_around_ideal() {
+        let mut rng = Rng::new(5);
+        let mut m = Macro::new(8, 8);
+        let _ = m.program(&Mat::full(8, 8, 0.06), 0.001, 1000, &mut rng);
+        let v = [1.0f32; 8];
+        let mut ideal = [0.0f32; 8];
+        m.mvm_ideal(&v, &mut ideal);
+        let mut acc = vec![0.0f64; 8];
+        let n = 2000;
+        let mut any_diff = false;
+        for _ in 0..n {
+            let mut noisy = [0.0f32; 8];
+            m.mvm(&v, &mut noisy, &mut rng);
+            for c in 0..8 {
+                acc[c] += noisy[c] as f64;
+                if (noisy[c] - ideal[c]).abs() > 1e-7 {
+                    any_diff = true;
+                }
+            }
+        }
+        assert!(any_diff, "read noise must perturb MVM");
+        for c in 0..8 {
+            let mean = acc[c] / n as f64;
+            assert!(
+                (mean - ideal[c] as f64).abs() < 0.01 * ideal[c].abs() as f64 + 1e-4,
+                "col {c}: mean {mean} vs ideal {}",
+                ideal[c]
+            );
+        }
+    }
+
+    #[test]
+    fn faults_limit_programming() {
+        let mut rng = Rng::new(11);
+        let mut m = Macro::new(16, 16);
+        m.inject_faults(0.2, &mut rng);
+        let st = m.program(&Mat::full(16, 16, 0.09), 0.001, 200, &mut rng);
+        assert!(st.failures > 0, "stuck cells must fail verify");
+        assert!(st.failures < 16 * 16 / 2);
+    }
+
+    #[test]
+    fn moon_star_pattern_structure() {
+        let p = Macro::moon_star_pattern(32);
+        let hi = p.as_slice().iter().filter(|&&g| g > 0.09).count();
+        // both shapes present but sparse
+        assert!(hi > 30 && hi < 512, "hi cells = {hi}");
+    }
+
+    #[test]
+    fn aging_preserves_window() {
+        let mut rng = Rng::new(13);
+        let mut m = Macro::new(8, 8);
+        let _ = m.program(&Mat::full(8, 8, 0.07), 0.001, 500, &mut rng);
+        m.age(1e6, &mut rng);
+        for g in m.conductances().as_slice() {
+            assert!(*g >= G_LO_MS && *g <= G_HI_MS);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds 32x32")]
+    fn oversize_macro_rejected() {
+        let _ = Macro::new(33, 8);
+    }
+}

@@ -1,0 +1,360 @@
+//! Single 1T1R resistive-memory cell model.
+//!
+//! Figures of merit are taken from the paper's characterization:
+//! * conductance window 0.02–0.10 mS with ≥64 discernible linear states
+//!   (Fig. 2d),
+//! * repeatable bipolar resistive switching under quasi-static sweeps
+//!   (Fig. 2c),
+//! * read noise: Gaussian conductance fluctuation whose magnitude scales
+//!   with the mean conductance (Fig. 2e, Fig. 5c),
+//! * write noise: stochastic SET/RESET increments — programming therefore
+//!   uses a write-verify loop with a random landing point inside the
+//!   tolerance band (Fig. 5b),
+//! * retention: states stable over >1e6 s with small log-time drift
+//!   (Fig. 2e).
+
+use crate::util::rng::Rng;
+
+/// Conductance units are mS throughout (matches python `kernels.ref`).
+pub const G_LO_MS: f32 = 0.02;
+pub const G_HI_MS: f32 = 0.10;
+pub const N_LEVELS: usize = 64;
+
+/// Device parameters with paper-derived defaults.
+#[derive(Debug, Clone)]
+pub struct CellParams {
+    /// Mean conductance increment of one SET pulse, fraction of window.
+    pub set_step_frac: f32,
+    /// Mean decrement of one RESET pulse, fraction of window.
+    pub reset_step_frac: f32,
+    /// Cycle-to-cycle variability of a pulse increment (relative std).
+    pub pulse_cv: f32,
+    /// Read-noise std as a fraction of current conductance (Fig. 5c).
+    pub read_noise_frac: f32,
+    /// SET threshold voltage (V) for quasi-static sweeps.
+    pub v_set: f32,
+    /// RESET threshold voltage (V, negative).
+    pub v_reset: f32,
+    /// Retention drift coefficient per log10-decade of seconds.
+    pub drift_per_decade: f32,
+}
+
+impl Default for CellParams {
+    fn default() -> Self {
+        CellParams {
+            set_step_frac: 0.04,
+            reset_step_frac: 0.05,
+            pulse_cv: 0.35,
+            read_noise_frac: 0.01,
+            v_set: 1.0,
+            v_reset: -1.1,
+            drift_per_decade: 0.002,
+        }
+    }
+}
+
+/// One 1T1R cell: internal "true" conductance plus stochastic dynamics.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    g_ms: f32,
+    params: CellParams,
+    /// Stuck-at fault: programming no longer changes the conductance
+    /// (yield model for Fig. 2f's array-level imperfections).
+    stuck: bool,
+}
+
+impl Cell {
+    pub fn new(g_init_ms: f32, params: CellParams) -> Self {
+        Cell { g_ms: g_init_ms.clamp(G_LO_MS, G_HI_MS), params, stuck: false }
+    }
+
+    pub fn with_default(g_init_ms: f32) -> Self {
+        Cell::new(g_init_ms, CellParams::default())
+    }
+
+    /// True (noise-free) conductance in mS.
+    pub fn conductance(&self) -> f32 {
+        self.g_ms
+    }
+
+    pub fn is_stuck(&self) -> bool {
+        self.stuck
+    }
+
+    pub fn set_stuck(&mut self, stuck: bool) {
+        self.stuck = stuck;
+    }
+
+    /// Instantaneous read: conductance + proportional Gaussian fluctuation
+    /// (random telegraph noise + thermal, lumped — Fig. 2e / 5c).
+    pub fn read(&self, rng: &mut Rng) -> f32 {
+        let noisy =
+            self.g_ms * (1.0 + self.params.read_noise_frac * rng.gaussian_f32());
+        noisy.clamp(0.0, 2.0 * G_HI_MS)
+    }
+
+    /// One SET pulse: increment with cycle-to-cycle variability, saturating
+    /// toward the window ceiling (filament growth slows as it completes).
+    pub fn set_pulse(&mut self, rng: &mut Rng) {
+        if self.stuck {
+            return;
+        }
+        let window = G_HI_MS - G_LO_MS;
+        let headroom = (G_HI_MS - self.g_ms) / window; // 1 at floor, 0 at ceiling
+        let step = self.params.set_step_frac
+            * window
+            * headroom.max(0.05)
+            * (1.0 + self.params.pulse_cv * rng.gaussian_f32());
+        self.g_ms = (self.g_ms + step.max(0.0)).clamp(G_LO_MS, G_HI_MS);
+    }
+
+    /// One RESET pulse: stochastic decrement, saturating toward the floor.
+    pub fn reset_pulse(&mut self, rng: &mut Rng) {
+        if self.stuck {
+            return;
+        }
+        let window = G_HI_MS - G_LO_MS;
+        let headroom = (self.g_ms - G_LO_MS) / window;
+        let step = self.params.reset_step_frac
+            * window
+            * headroom.max(0.05)
+            * (1.0 + self.params.pulse_cv * rng.gaussian_f32());
+        self.g_ms = (self.g_ms - step.max(0.0)).clamp(G_LO_MS, G_HI_MS);
+    }
+
+    /// Write-verify programming (Fig. 5b): pulse until a read lands within
+    /// ±tol_ms of target.  Returns the number of pulses used, or None if
+    /// max_pulses was exhausted (stuck / unlucky cell).
+    pub fn program_verify(
+        &mut self,
+        target_ms: f32,
+        tol_ms: f32,
+        max_pulses: usize,
+        rng: &mut Rng,
+    ) -> Option<usize> {
+        let target = target_ms.clamp(G_LO_MS, G_HI_MS);
+        for pulse in 0..max_pulses {
+            let g = self.read(rng);
+            let err = g - target;
+            if err.abs() <= tol_ms {
+                return Some(pulse);
+            }
+            if err < 0.0 {
+                self.set_pulse(rng);
+            } else {
+                self.reset_pulse(rng);
+            }
+        }
+        None
+    }
+
+    /// Retention drift after `dt_s` seconds at rest: small deterministic
+    /// log-time relaxation toward the window midpoint plus a random walk.
+    pub fn drift(&mut self, dt_s: f64, rng: &mut Rng) {
+        if dt_s <= 0.0 {
+            return;
+        }
+        let decades = (1.0 + dt_s).log10() as f32;
+        let mid = 0.5 * (G_LO_MS + G_HI_MS);
+        let pull = self.params.drift_per_decade * decades * (mid - self.g_ms);
+        let walk = self.params.drift_per_decade
+            * 0.5
+            * decades.sqrt()
+            * (G_HI_MS - G_LO_MS)
+            * rng.gaussian_f32();
+        self.g_ms = (self.g_ms + pull + walk).clamp(G_LO_MS, G_HI_MS);
+    }
+
+    /// The k-th of the 64 linear programmable levels (Fig. 2d).
+    pub fn level_conductance(k: usize) -> f32 {
+        assert!(k < N_LEVELS);
+        G_LO_MS + (G_HI_MS - G_LO_MS) * k as f32 / (N_LEVELS - 1) as f32
+    }
+
+    /// Quasi-static I-V sweep (Fig. 2c): drive the voltage sequence and
+    /// return per-point currents (mA) while the cell switches bipolar-ly.
+    /// Threshold positions carry cycle-to-cycle variability.
+    pub fn iv_sweep(&mut self, voltages: &[f32], rng: &mut Rng) -> Vec<f32> {
+        let v_set = self.params.v_set * (1.0 + 0.05 * rng.gaussian_f32());
+        let v_reset = self.params.v_reset * (1.0 + 0.05 * rng.gaussian_f32());
+        let mut out = Vec::with_capacity(voltages.len());
+        for &v in voltages {
+            if v >= v_set {
+                // gradual SET: filament grows while overdrive persists
+                let over = ((v - v_set) / 0.3).min(1.0);
+                self.g_ms =
+                    (self.g_ms + over * 0.3 * (G_HI_MS - self.g_ms)).clamp(G_LO_MS, G_HI_MS);
+            } else if v <= v_reset {
+                let over = ((v_reset - v) / 0.3).min(1.0);
+                self.g_ms =
+                    (self.g_ms - over * 0.3 * (self.g_ms - G_LO_MS)).clamp(G_LO_MS, G_HI_MS);
+            }
+            // mild conduction nonlinearity on top of Ohm's law
+            let i = self.g_ms * v * (1.0 + 0.08 * v * v);
+            out.push(i);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(42)
+    }
+
+    #[test]
+    fn levels_are_linear_and_within_window() {
+        let g0 = Cell::level_conductance(0);
+        let g63 = Cell::level_conductance(63);
+        assert!((g0 - G_LO_MS).abs() < 1e-7);
+        assert!((g63 - G_HI_MS).abs() < 1e-7);
+        let step = Cell::level_conductance(1) - g0;
+        for k in 1..N_LEVELS {
+            let d = Cell::level_conductance(k) - Cell::level_conductance(k - 1);
+            assert!((d - step).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn read_noise_scales_with_conductance() {
+        let mut r = rng();
+        let lo = Cell::with_default(0.02);
+        let hi = Cell::with_default(0.10);
+        let n = 50_000;
+        let std_of = |c: &Cell, r: &mut Rng| {
+            let xs: Vec<f32> = (0..n).map(|_| c.read(r) - c.conductance()).collect();
+            crate::util::stats::std(&xs)
+        };
+        let s_lo = std_of(&lo, &mut r);
+        let s_hi = std_of(&hi, &mut r);
+        assert!(s_hi > 3.0 * s_lo, "read noise must scale with G: {s_lo} vs {s_hi}");
+        assert!((s_hi - 0.10 * 0.01).abs() / (0.10 * 0.01) < 0.15);
+    }
+
+    #[test]
+    fn set_pulses_increase_reset_decrease() {
+        let mut r = rng();
+        let mut c = Cell::with_default(0.05);
+        let g0 = c.conductance();
+        for _ in 0..5 {
+            c.set_pulse(&mut r);
+        }
+        assert!(c.conductance() > g0);
+        let g1 = c.conductance();
+        for _ in 0..5 {
+            c.reset_pulse(&mut r);
+        }
+        assert!(c.conductance() < g1);
+    }
+
+    #[test]
+    fn conductance_stays_in_window_under_pulsing() {
+        let mut r = rng();
+        let mut c = Cell::with_default(0.06);
+        for _ in 0..1000 {
+            if r.uniform() < 0.5 {
+                c.set_pulse(&mut r);
+            } else {
+                c.reset_pulse(&mut r);
+            }
+            assert!(c.conductance() >= G_LO_MS && c.conductance() <= G_HI_MS);
+        }
+    }
+
+    #[test]
+    fn program_verify_converges() {
+        let mut r = rng();
+        for k in [5, 20, 40, 60] {
+            let mut c = Cell::with_default(0.05);
+            let target = Cell::level_conductance(k);
+            let tol = 0.0015; // ~1.2 levels
+            let pulses = c.program_verify(target, tol, 500, &mut r);
+            assert!(pulses.is_some(), "did not converge to level {k}");
+            assert!((c.conductance() - target).abs() <= tol + 0.002);
+        }
+    }
+
+    #[test]
+    fn program_verify_pulse_count_is_stochastic() {
+        let mut r = rng();
+        let counts: Vec<usize> = (0..50)
+            .map(|_| {
+                let mut c = Cell::with_default(0.03);
+                c.program_verify(0.08, 0.0015, 500, &mut r).unwrap()
+            })
+            .collect();
+        let distinct: std::collections::HashSet<_> = counts.iter().collect();
+        assert!(distinct.len() > 3, "write noise must randomize pulse counts");
+    }
+
+    #[test]
+    fn stuck_cell_ignores_programming() {
+        let mut r = rng();
+        let mut c = Cell::with_default(0.04);
+        c.set_stuck(true);
+        let g0 = c.conductance();
+        for _ in 0..50 {
+            c.set_pulse(&mut r);
+        }
+        assert_eq!(c.conductance(), g0);
+        assert!(c.program_verify(0.09, 0.001, 100, &mut r).is_none());
+    }
+
+    #[test]
+    fn retention_drift_small_but_nonzero() {
+        let mut r = rng();
+        let mut c = Cell::with_default(0.08);
+        let g0 = c.conductance();
+        c.drift(1e6, &mut r);
+        let delta = (c.conductance() - g0).abs();
+        assert!(delta > 0.0, "drift must perturb");
+        assert!(delta < 0.01, "1e6 s drift must stay small (Fig. 2e): {delta}");
+    }
+
+    #[test]
+    fn iv_sweep_shows_bipolar_hysteresis() {
+        let mut r = rng();
+        let mut c = Cell::with_default(G_LO_MS);
+        // up sweep: 0 -> +1.5 -> 0 (SET), then 0 -> -1.5 -> 0 (RESET)
+        let up: Vec<f32> = (0..60).map(|i| 1.5 * i as f32 / 59.0).collect();
+        let down: Vec<f32> = up.iter().rev().copied().collect();
+        let neg: Vec<f32> = (0..60).map(|i| -1.5 * i as f32 / 59.0).collect();
+        let negb: Vec<f32> = neg.iter().rev().copied().collect();
+
+        let i_up = c.iv_sweep(&up, &mut r);
+        let g_after_set = c.conductance();
+        let _ = c.iv_sweep(&down, &mut r);
+        let _ = c.iv_sweep(&neg, &mut r);
+        let g_after_reset = c.conductance();
+        let _ = c.iv_sweep(&negb, &mut r);
+
+        assert!(g_after_set > 0.8 * G_HI_MS, "SET must drive toward LRS");
+        assert!(g_after_reset < 1.5 * G_LO_MS, "RESET must drive toward HRS");
+        // hysteresis: current at +1.0 V higher after SET than before
+        let idx_1v = up.iter().position(|&v| v >= 1.0).unwrap();
+        let i_before = i_up[idx_1v.saturating_sub(5)];
+        let i_after = *i_up.last().unwrap() * (1.0 / 1.5) / (1.0 + 0.08 * 1.0);
+        assert!(i_after.abs() > i_before.abs());
+    }
+
+    #[test]
+    fn iv_sweep_cycles_repeatable() {
+        // 200-cycle repeatability (Fig. 2c): final conductances cluster.
+        let mut r = rng();
+        let up: Vec<f32> = (0..40).map(|i| 1.5 * i as f32 / 39.0).collect();
+        let neg: Vec<f32> = (0..40).map(|i| -1.5 * i as f32 / 39.0).collect();
+        let mut finals = Vec::new();
+        let mut c = Cell::with_default(G_LO_MS);
+        for _ in 0..200 {
+            let _ = c.iv_sweep(&up, &mut r);
+            finals.push(c.conductance());
+            let _ = c.iv_sweep(&neg, &mut r);
+        }
+        let m = crate::util::stats::mean(&finals);
+        let s = crate::util::stats::std(&finals);
+        assert!(s / m < 0.1, "cycle variability too large: {s}/{m}");
+    }
+}

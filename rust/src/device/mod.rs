@@ -1,0 +1,19 @@
+//! Behavioural RRAM device simulator — the substrate standing in for the
+//! paper's 180 nm TiN/TaOx/Ta2O5/TiN chips (DESIGN.md §3, substitution 1).
+//!
+//! * [`cell`] — a single 1T1R cell: 64-level conductance window, bipolar
+//!   quasi-static IV switching (Fig. 2c), SET/RESET pulse dynamics with
+//!   stochastic write noise (Fig. 5b), conductance-proportional read noise
+//!   (Fig. 2e / 5c), and long-time retention drift (Fig. 2e).
+//! * [`array`] — a 32×32 crossbar macro: WL/BL/SL addressing, write-verify
+//!   programming, array-level conductance-error statistics (Fig. 2f/g),
+//!   and the raw Ohm+Kirchhoff MVM.
+//!
+//! All stochastic behaviour flows through an explicit [`crate::util::Rng`],
+//! so every device-level figure is reproducible from its seed.
+
+pub mod array;
+pub mod cell;
+
+pub use array::{Macro, ProgramStats, MACRO_DIM};
+pub use cell::{Cell, CellParams};

@@ -1,0 +1,15 @@
+//! Score-based diffusion core: the VP-SDE schedule (paper Eq. 4–5), the
+//! reverse-time samplers, and classifier-free guidance (Eq. 6–7).
+//!
+//! Two sampler families reproduce the paper's comparison:
+//! * [`sampler`] — **digital baseline**: discretized Euler(-Maruyama) and
+//!   Heun integration of Eq. (1)/(2), N network inferences per sample —
+//!   what the paper's GPU runs.
+//! * [`crate::analog::solver`] — **the contribution**: time-continuous
+//!   closed-loop analog integration.
+
+pub mod sampler;
+pub mod schedule;
+
+pub use sampler::{DigitalSampler, SamplerKind, SamplerMode};
+pub use schedule::VpSchedule;

@@ -1,0 +1,359 @@
+//! Digital baseline samplers: discretized reverse-time integration of the
+//! paper's Eq. (1)/(2) — N score-network inferences per sample, exactly
+//! what the compared GPU runs.  Sweeping N against generation quality
+//! produces the Fig. 3f / 4g speed-vs-quality trade-off.
+//!
+//! Update rules (positive step `dt`, integrating t: T → ε):
+//!
+//! ```text
+//! score s = −net(x,t)/σ(t)                       (ε-parameterization)
+//! SDE : x' = x − dt·(f(x,t) − β·s) + √(β·dt)·z,  z ~ N(0,I)
+//! ODE : x' = x − dt·(f(x,t) − β/2·s)
+//! ```
+//!
+//! followed by the protective state clamp — identical semantics to the
+//! python `ref.euler_step` + clamp, and to the AOT `step_*` artifacts.
+
+use super::schedule::VpSchedule;
+use crate::clamp_voltage;
+use crate::nn::ScoreNet;
+use crate::util::rng::Rng;
+
+/// Time-stepping scheme.  Heun and RK4 upgrade the probability-flow ODE
+/// only; for the SDE they degrade to Euler–Maruyama (strong order 1/2 is
+/// the noise-limited ceiling for this driver anyway).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplerKind {
+    Euler,
+    Heun,
+    Rk4,
+}
+
+/// Reverse SDE (Eq. 1) or probability-flow ODE (Eq. 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplerMode {
+    Sde,
+    Ode,
+}
+
+/// A digital sampler bound to a score network.
+pub struct DigitalSampler<'a> {
+    pub net: &'a dyn ScoreNet,
+    pub sched: VpSchedule,
+    pub kind: SamplerKind,
+    pub mode: SamplerMode,
+    /// CFG guidance strength λ; None = unconditional evaluation.
+    pub guidance: Option<f32>,
+}
+
+impl<'a> DigitalSampler<'a> {
+    pub fn new(net: &'a dyn ScoreNet, mode: SamplerMode) -> Self {
+        DigitalSampler {
+            net,
+            sched: VpSchedule::default(),
+            kind: SamplerKind::Euler,
+            mode,
+            guidance: None,
+        }
+    }
+
+    pub fn with_kind(mut self, kind: SamplerKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    pub fn with_guidance(mut self, lambda: f32) -> Self {
+        self.guidance = Some(lambda);
+        self
+    }
+
+    pub fn with_schedule(mut self, sched: VpSchedule) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    #[inline]
+    fn net_eval(&self, x: &[f32], t: f64, onehot: &[f32], out: &mut [f32],
+                rng: &mut Rng) {
+        match self.guidance {
+            Some(lam) => self.net.eval_cfg(x, t as f32, onehot, lam, out, rng),
+            None => self.net.eval(x, t as f32, onehot, out, rng),
+        }
+    }
+
+    /// Reverse-time drift F(x,t) with the ε-parameterized score.
+    #[inline]
+    fn rhs(&self, x: &[f32], net_out: &[f32], t: f64, out: &mut [f32]) {
+        let beta = self.sched.beta(t);
+        let sigma = self.sched.sigma(t);
+        // score = −net/σ; SDE uses β·score, ODE β/2·score
+        let score_coeff = match self.mode {
+            SamplerMode::Sde => beta / sigma,
+            SamplerMode::Ode => 0.5 * beta / sigma,
+        };
+        for i in 0..x.len() {
+            let drift = -0.5 * beta * x[i] as f64;
+            out[i] = (drift + score_coeff * net_out[i] as f64) as f32;
+        }
+    }
+
+    /// Generate one sample of dimension `dim` with `n_steps` integration
+    /// steps.  `onehot` selects the condition (empty or all-zero =
+    /// unconditional).  Returns the final state; `x` doubles as the
+    /// initial condition buffer (pass N(0,I) noise).
+    pub fn sample_into(&self, x: &mut [f32], onehot: &[f32], n_steps: usize,
+                       rng: &mut Rng) {
+        let dim = x.len();
+        let (dt, ts) = self.sched.reverse_grid(n_steps);
+        let mut net_out = vec![0.0f32; dim];
+        let mut rhs = vec![0.0f32; dim];
+        let mut rhs2 = vec![0.0f32; dim];
+        let mut x_pred = vec![0.0f32; dim];
+
+        let mut k2 = vec![0.0f32; dim];
+        let mut k3 = vec![0.0f32; dim];
+        let mut k4 = vec![0.0f32; dim];
+
+        for &t in &ts {
+            self.net_eval(x, t, onehot, &mut net_out, rng);
+            self.rhs(x, &net_out, t, &mut rhs);
+            match (self.kind, self.mode) {
+                (SamplerKind::Euler, _)
+                | (SamplerKind::Heun, SamplerMode::Sde)
+                | (SamplerKind::Rk4, SamplerMode::Sde) => {
+                    // Euler(-Maruyama); Heun degenerates to Euler for SDE
+                    let diff = match self.mode {
+                        SamplerMode::Sde => (self.sched.beta(t) * dt).sqrt(),
+                        SamplerMode::Ode => 0.0,
+                    };
+                    for i in 0..dim {
+                        let z = if diff > 0.0 { rng.gaussian_f32() } else { 0.0 };
+                        x[i] = clamp_voltage(
+                            x[i] - (dt as f32) * rhs[i] + (diff as f32) * z,
+                        );
+                    }
+                }
+                (SamplerKind::Heun, SamplerMode::Ode) => {
+                    let t1 = (t - dt).max(self.sched.eps_t);
+                    for i in 0..dim {
+                        x_pred[i] = clamp_voltage(x[i] - (dt as f32) * rhs[i]);
+                    }
+                    self.net_eval(&x_pred, t1, onehot, &mut net_out, rng);
+                    self.rhs(&x_pred, &net_out, t1, &mut rhs2);
+                    for i in 0..dim {
+                        x[i] = clamp_voltage(
+                            x[i] - (dt as f32) * 0.5 * (rhs[i] + rhs2[i]),
+                        );
+                    }
+                }
+                (SamplerKind::Rk4, SamplerMode::Ode) => {
+                    // classical RK4 on the reverse-time ODE (negative step)
+                    let h = -(dt as f32);
+                    let tm = (t - 0.5 * dt).max(self.sched.eps_t);
+                    let t1 = (t - dt).max(self.sched.eps_t);
+                    // k2 at midpoint using k1 = rhs
+                    for i in 0..dim {
+                        x_pred[i] = clamp_voltage(x[i] + 0.5 * h * rhs[i]);
+                    }
+                    self.net_eval(&x_pred, tm, onehot, &mut net_out, rng);
+                    self.rhs(&x_pred, &net_out, tm, &mut k2);
+                    // k3 at midpoint using k2
+                    for i in 0..dim {
+                        x_pred[i] = clamp_voltage(x[i] + 0.5 * h * k2[i]);
+                    }
+                    self.net_eval(&x_pred, tm, onehot, &mut net_out, rng);
+                    self.rhs(&x_pred, &net_out, tm, &mut k3);
+                    // k4 at endpoint using k3
+                    for i in 0..dim {
+                        x_pred[i] = clamp_voltage(x[i] + h * k3[i]);
+                    }
+                    self.net_eval(&x_pred, t1, onehot, &mut net_out, rng);
+                    self.rhs(&x_pred, &net_out, t1, &mut k4);
+                    for i in 0..dim {
+                        x[i] = clamp_voltage(
+                            x[i] + h / 6.0
+                                * (rhs[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Generate `n` samples from N(0,I) priors; returns interleaved points
+    /// (n × dim flattened) and the number of network inferences used.
+    pub fn sample_batch(&self, n: usize, onehot: &[f32], n_steps: usize,
+                        rng: &mut Rng) -> (Vec<f32>, usize) {
+        let dim = self.net.dim();
+        let mut out = vec![0.0f32; n * dim];
+        for s in 0..n {
+            let x = &mut out[s * dim..(s + 1) * dim];
+            for v in x.iter_mut() {
+                *v = rng.gaussian_f32();
+            }
+            self.sample_into(x, onehot, n_steps, rng);
+        }
+        let evals_per_step = match (self.kind, self.mode) {
+            (SamplerKind::Heun, SamplerMode::Ode) => 2,
+            (SamplerKind::Rk4, SamplerMode::Ode) => 4,
+            _ => 1,
+        } * if self.guidance.is_some() { 2 } else { 1 };
+        (out, n * n_steps * evals_per_step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    /// Analytic Gaussian score net: data x0 ~ N(0, s0² I) ⇒
+    /// net(x,t) = σ(t)·x / (α²s0² + σ²)  (ε-parameterization of the
+    /// closed-form score).  Lets sampler tests run without training.
+    struct GaussianNet {
+        s0: f64,
+        sched: VpSchedule,
+    }
+
+    impl ScoreNet for GaussianNet {
+        fn dim(&self) -> usize {
+            2
+        }
+
+        fn n_classes(&self) -> usize {
+            0
+        }
+
+        fn eval(&self, x: &[f32], t: f32, _onehot: &[f32], out: &mut [f32],
+                _rng: &mut Rng) {
+            let a = self.sched.alpha(t as f64);
+            let sg = self.sched.sigma(t as f64);
+            let v = a * a * self.s0 * self.s0 + sg * sg;
+            for i in 0..x.len() {
+                out[i] = (sg * x[i] as f64 / v) as f32;
+            }
+        }
+    }
+
+    fn run(mode: SamplerMode, kind: SamplerKind, steps: usize, n: usize) -> Vec<f32> {
+        let net = GaussianNet { s0: 0.5, sched: VpSchedule::default() };
+        let sampler = DigitalSampler::new(&net, mode).with_kind(kind);
+        let mut rng = Rng::new(42);
+        let (pts, _) = sampler.sample_batch(n, &[], steps, &mut rng);
+        pts
+    }
+
+    fn std2(pts: &[f32]) -> (f64, f64) {
+        let xs: Vec<f32> = pts.iter().step_by(2).copied().collect();
+        let ys: Vec<f32> = pts.iter().skip(1).step_by(2).copied().collect();
+        (stats::std(&xs), stats::std(&ys))
+    }
+
+    #[test]
+    fn ode_euler_transports_gaussian() {
+        let pts = run(SamplerMode::Ode, SamplerKind::Euler, 200, 2000);
+        let (sx, sy) = std2(&pts);
+        assert!((sx - 0.5).abs() < 0.05, "sx={sx}");
+        assert!((sy - 0.5).abs() < 0.05, "sy={sy}");
+    }
+
+    #[test]
+    fn sde_euler_transports_gaussian() {
+        let pts = run(SamplerMode::Sde, SamplerKind::Euler, 400, 2000);
+        let (sx, sy) = std2(&pts);
+        assert!((sx - 0.5).abs() < 0.07, "sx={sx}");
+        assert!((sy - 0.5).abs() < 0.07, "sy={sy}");
+    }
+
+    #[test]
+    fn heun_ode_more_accurate_than_euler_at_few_steps() {
+        let target = 0.5;
+        let e = run(SamplerMode::Ode, SamplerKind::Euler, 8, 3000);
+        let h = run(SamplerMode::Ode, SamplerKind::Heun, 8, 3000);
+        let (se, _) = std2(&e);
+        let (sh, _) = std2(&h);
+        assert!(
+            (sh - target).abs() <= (se - target).abs() + 0.005,
+            "heun {sh} vs euler {se}"
+        );
+    }
+
+    #[test]
+    fn quality_improves_with_steps() {
+        // SDE discretization error is O(sqrt(dt)) — visible at 2 steps,
+        // gone at 256 (the ODE variant converges too fast to resolve
+        // against the finite-sample noise floor of ~0.01).
+        let errs: Vec<f64> = [2usize, 8, 64, 256]
+            .iter()
+            .map(|&s| {
+                let pts = run(SamplerMode::Sde, SamplerKind::Euler, s, 4000);
+                let (sx, _) = std2(&pts);
+                (sx - 0.5).abs()
+            })
+            .collect();
+        assert!(errs[0] > 0.03, "2-step SDE must be visibly wrong: {errs:?}");
+        assert!(
+            errs[3] < errs[0],
+            "error must shrink with steps: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn rk4_ode_transports_gaussian() {
+        let pts = run(SamplerMode::Ode, SamplerKind::Rk4, 16, 3000);
+        let (sx, sy) = std2(&pts);
+        assert!((sx - 0.5).abs() < 0.04, "sx={sx}");
+        assert!((sy - 0.5).abs() < 0.04, "sy={sy}");
+    }
+
+    #[test]
+    fn rk4_accurate_at_very_few_steps() {
+        // On this smooth analytic ODE even Euler sits near the sampling
+        // noise floor at 4 steps, so "beats Euler" is not testable here;
+        // assert 4-step RK4 is already within the floor instead.
+        let r = run(SamplerMode::Ode, SamplerKind::Rk4, 4, 3000);
+        let (sr, _) = std2(&r);
+        assert!((sr - 0.5).abs() < 0.05, "rk4 4-step std {sr}");
+    }
+
+    #[test]
+    fn rk4_sde_degrades_to_euler() {
+        // identical RNG stream => identical samples
+        let a = run(SamplerMode::Sde, SamplerKind::Rk4, 20, 10);
+        let b = run(SamplerMode::Sde, SamplerKind::Euler, 20, 10);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn inference_count_accounting() {
+        let net = GaussianNet { s0: 0.5, sched: VpSchedule::default() };
+        let mut rng = Rng::new(0);
+        let s = DigitalSampler::new(&net, SamplerMode::Ode);
+        let (_, evals) = s.sample_batch(3, &[], 10, &mut rng);
+        assert_eq!(evals, 30);
+        let s = DigitalSampler::new(&net, SamplerMode::Ode).with_kind(SamplerKind::Heun);
+        let (_, evals) = s.sample_batch(3, &[], 10, &mut rng);
+        assert_eq!(evals, 60);
+        let s = DigitalSampler::new(&net, SamplerMode::Ode).with_kind(SamplerKind::Rk4);
+        let (_, evals) = s.sample_batch(3, &[], 10, &mut rng);
+        assert_eq!(evals, 120);
+        let s = DigitalSampler::new(&net, SamplerMode::Sde).with_guidance(2.0);
+        let (_, evals) = s.sample_batch(3, &[], 10, &mut rng);
+        assert_eq!(evals, 60);
+    }
+
+    #[test]
+    fn state_stays_clamped() {
+        let pts = run(SamplerMode::Sde, SamplerKind::Euler, 50, 500);
+        for &v in &pts {
+            assert!((-2.0..=4.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(SamplerMode::Sde, SamplerKind::Euler, 20, 10);
+        let b = run(SamplerMode::Sde, SamplerKind::Euler, 20, 10);
+        assert_eq!(a, b);
+    }
+}

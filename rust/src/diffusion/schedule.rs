@@ -1,0 +1,133 @@
+//! VP-SDE schedule — rust mirror of `python/compile/schedule.py`.
+//!
+//! `beta(t) = beta_min + (beta_max − beta_min)·t/T`;
+//! `f(x,t) = −β/2·x` (Eq. 4), `g(t) = √β` (Eq. 5).
+//! See the python module docstring for the documented deviation from the
+//! paper's quoted `beta_max = 0.5` and for the epsilon-parameterization
+//! (`g²(t)/σ(t)` folded into the predetermined multiplier waveform).
+
+/// Linear VP schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VpSchedule {
+    pub beta_min: f64,
+    pub beta_max: f64,
+    pub t_end: f64,
+    /// Smallest t used in sampling (σ(ε)>0).
+    pub eps_t: f64,
+}
+
+impl Default for VpSchedule {
+    fn default() -> Self {
+        VpSchedule { beta_min: 0.001, beta_max: 12.0, t_end: 1.0, eps_t: 0.01 }
+    }
+}
+
+impl VpSchedule {
+    /// The paper's quoted range (ablation; see DESIGN.md §Deviations).
+    pub fn paper_quoted() -> Self {
+        VpSchedule { beta_max: 0.5, ..Self::default() }
+    }
+
+    /// Instantaneous noise rate β(t).
+    #[inline]
+    pub fn beta(&self, t: f64) -> f64 {
+        self.beta_min + (self.beta_max - self.beta_min) * (t / self.t_end)
+    }
+
+    /// ∫₀ᵗ β(s) ds (closed form for the linear schedule).
+    #[inline]
+    pub fn int_beta(&self, t: f64) -> f64 {
+        self.beta_min * t + 0.5 * (self.beta_max - self.beta_min) * t * t / self.t_end
+    }
+
+    /// Signal retention α(t) = exp(−½∫β).
+    #[inline]
+    pub fn alpha(&self, t: f64) -> f64 {
+        (-0.5 * self.int_beta(t)).exp()
+    }
+
+    /// Perturbation std σ(t) = √(1−α²).
+    #[inline]
+    pub fn sigma(&self, t: f64) -> f64 {
+        (1.0 - self.alpha(t).powi(2)).max(1e-12).sqrt()
+    }
+
+    /// The predetermined multiplier waveform g²(t)/σ(t) (ε-parameterized
+    /// score: g²·score = −(g²/σ)·net).
+    #[inline]
+    pub fn g2_over_sigma(&self, t: f64) -> f64 {
+        self.beta(t) / self.sigma(t)
+    }
+
+    /// Uniform reverse-time grid T → eps_t with n steps; returns the step
+    /// size dt and the sequence of (t_k) left endpoints.
+    pub fn reverse_grid(&self, n_steps: usize) -> (f64, Vec<f64>) {
+        assert!(n_steps > 0);
+        let dt = (self.t_end - self.eps_t) / n_steps as f64;
+        let ts = (0..n_steps).map(|k| self.t_end - k as f64 * dt).collect();
+        (dt, ts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        let s = VpSchedule::default();
+        assert!((s.beta(0.0) - s.beta_min).abs() < 1e-12);
+        assert!((s.beta(s.t_end) - s.beta_max).abs() < 1e-12);
+    }
+
+    #[test]
+    fn variance_preserving_identity() {
+        let s = VpSchedule::default();
+        for k in 0..50 {
+            let t = 0.01 + 0.99 * k as f64 / 49.0;
+            let (a, sg) = (s.alpha(t), s.sigma(t));
+            assert!((a * a + sg * sg - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn int_beta_matches_numeric() {
+        let s = VpSchedule::default();
+        let n = 100_000;
+        let dt = s.t_end / n as f64;
+        let num: f64 = (0..n).map(|k| s.beta((k as f64 + 0.5) * dt) * dt).sum();
+        assert!((s.int_beta(s.t_end) - num).abs() < 1e-6);
+    }
+
+    #[test]
+    fn terminal_marginal_near_gaussian() {
+        let s = VpSchedule::default();
+        assert!(s.alpha(s.t_end) < 0.1);
+        assert!(s.sigma(s.t_end) > 0.99);
+    }
+
+    #[test]
+    fn paper_quoted_barely_diffuses() {
+        let s = VpSchedule::paper_quoted();
+        assert!(s.alpha(1.0) > 0.8);
+    }
+
+    #[test]
+    fn reverse_grid_covers_interval() {
+        let s = VpSchedule::default();
+        let (dt, ts) = s.reverse_grid(100);
+        assert_eq!(ts.len(), 100);
+        assert!((ts[0] - s.t_end).abs() < 1e-12);
+        assert!((ts[99] - dt - s.eps_t).abs() < 1e-9);
+        assert!(dt > 0.0);
+    }
+
+    #[test]
+    fn matches_python_constants() {
+        // spot-check values the python side logs into meta.json
+        let s = VpSchedule::default();
+        assert_eq!(s.beta_min, 0.001);
+        assert_eq!(s.beta_max, 12.0);
+        assert_eq!(s.eps_t, 0.01);
+    }
+}

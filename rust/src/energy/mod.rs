@@ -1,0 +1,6 @@
+//! Latency & energy models behind the paper's headline comparisons
+//! (Fig. 3f/3g for unconditional, Fig. 4g/4h for conditional generation).
+
+pub mod model;
+
+pub use model::{AnalogCost, DigitalCost, Comparison};

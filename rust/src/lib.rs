@@ -1,0 +1,59 @@
+//! # memdiff — resistive-memory neural differential-equation solver
+//!
+//! Production-grade reproduction of *"Resistive Memory-based Neural
+//! Differential Equation Solver for Score-based Diffusion Model"*
+//! (Yang et al., 2024) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is the **Layer-3 coordinator and analog-hardware substrate**:
+//!
+//! * [`device`] / [`crossbar`] — behavioural 180 nm RRAM simulator: 1T1R
+//!   cells, 32×32 macros, write-verify programming, read/write noise,
+//!   differential-pair analog matrix-vector multiplication.
+//! * [`analog`] — op-amp circuit blocks (TIA, diode-clamp ReLU, AD633
+//!   multipliers, RC integrator) and the closed-loop continuous-time
+//!   neural-ODE/SDE solver — the paper's core contribution.
+//! * [`nn`] — the 3-layer analog score network assembled from crossbars.
+//! * [`diffusion`] — VP-SDE schedule, digital baseline samplers
+//!   (Euler–Maruyama / probability-flow Euler / Heun), classifier-free
+//!   guidance.
+//! * [`vae`] — the latent-diffusion pixel decoder (linear + 2 deconv).
+//! * [`runtime`] — PJRT CPU client; loads the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text) and executes them.
+//! * [`coordinator`] — generation service: request queue, dynamic batcher,
+//!   worker scheduler, metrics.
+//! * [`energy`] — analog-vs-digital latency & energy models behind the
+//!   paper's Fig. 3f/3g/4g/4h comparisons.
+//! * [`util`] — self-contained substrates (PRNG, JSON, tensors, stats,
+//!   property-testing) — the offline build has no external crates beyond
+//!   `xla`/`anyhow`/`thiserror`/`num-traits`.
+//!
+//! Python (JAX + Pallas) exists only on the build path; after
+//! `make artifacts` the binary is self-contained.
+
+pub mod analog;
+pub mod config;
+pub mod coordinator;
+pub mod crossbar;
+pub mod data;
+pub mod device;
+pub mod diffusion;
+pub mod energy;
+pub mod nn;
+pub mod runtime;
+pub mod util;
+pub mod vae;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Software voltage unit: 0.1 V == 1.0 (paper Fig. 3).
+pub const VOLT_UNIT: f64 = 0.1;
+/// Protective clamp window in software units ([-0.2 V, 0.4 V]).
+pub const V_CLAMP_LO: f32 = -2.0;
+pub const V_CLAMP_HI: f32 = 4.0;
+
+/// Clamp a voltage into the macro's protective window.
+#[inline(always)]
+pub fn clamp_voltage(v: f32) -> f32 {
+    v.clamp(V_CLAMP_LO, V_CLAMP_HI)
+}

@@ -1,0 +1,312 @@
+//! memdiff CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   generate      one-shot generation (task, solver, sample count)
+//!   serve         run the batching service over a scripted client load
+//!   characterize  device-level figures (Fig. 2): IV, levels, retention,
+//!                 moon-star pattern, error distributions
+//!   info          print artifact manifest + platform
+//!
+//! Argument parsing is hand-rolled (`--key value` pairs) — no clap in the
+//! offline vendor set.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use memdiff::coordinator::{Service, ServiceConfig, SolverChoice, TaskKind};
+use memdiff::coordinator::batcher::BatcherConfig;
+use memdiff::coordinator::service::{AnalogEngine, Engine, HloEngine, RustDigitalEngine};
+use memdiff::config::Config;
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::{sample_circle, Meta};
+use memdiff::device::cell::CellParams;
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::runtime::ArtifactStore;
+use memdiff::util::rng::Rng;
+use memdiff::util::stats;
+use memdiff::vae::{DecoderWeights, PixelDecoder};
+
+fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut kv = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_else(|| "true".into());
+            kv.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, kv)
+}
+
+fn opt<T: std::str::FromStr>(kv: &HashMap<String, String>, key: &str, default: T) -> T {
+    kv.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "memdiff — resistive-memory neural differential-equation solver\n\
+         usage:\n\
+         \x20 memdiff generate [--task circle|h|k|u] [--solver analog-ode|analog-sde|euler|euler-sde]\n\
+         \x20                  [--n 500] [--steps 130] [--engine analog|rust|hlo] [--decode]\n\
+         \x20 memdiff serve    [--requests 64] [--workers 4]\n\
+         \x20 memdiff characterize\n\
+         \x20 memdiff info\n\
+         \x20 (global) [--config memdiff.toml] [--seed N]"
+    );
+    std::process::exit(2);
+}
+
+fn task_of(s: &str) -> TaskKind {
+    match s {
+        "circle" => TaskKind::Circle,
+        "h" | "H" => TaskKind::Letter(0),
+        "k" | "K" => TaskKind::Letter(1),
+        "u" | "U" => TaskKind::Letter(2),
+        _ => usage(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, kv) = parse_args(&args);
+    let cfg = Config::load_or_default(kv.get("config").map(|s| s.as_str()))?;
+    let cmd = pos.first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "generate" => cmd_generate(&kv, &cfg),
+        "serve" => cmd_serve(&kv, &cfg),
+        "characterize" => cmd_characterize(&kv, &cfg),
+        "info" => cmd_info(),
+        _ => usage(),
+    }
+}
+
+fn load_weights(task: &TaskKind) -> anyhow::Result<ScoreWeights> {
+    let dir = Meta::artifacts_dir();
+    let file = if task.is_conditional() { "weights_cond.json" } else { "weights_uncond.json" };
+    ScoreWeights::load(dir.join(file))
+}
+
+fn build_engine(engine: &str, task: &TaskKind, cfg: &Config)
+                -> anyhow::Result<Arc<dyn Engine>> {
+    let meta = Meta::load_default()?;
+    Ok(match engine {
+        "analog" => {
+            let w = load_weights(task)?;
+            let net = AnalogScoreNet::from_conductances(
+                &w, CellParams::default(), NoiseModel::ReadFast);
+            Arc::new(AnalogEngine { net, sched: meta.sched, substeps: cfg.substeps })
+        }
+        "rust" => {
+            let w = load_weights(task)?;
+            Arc::new(RustDigitalEngine {
+                net: DigitalScoreNet::new(w),
+                sched: meta.sched,
+            })
+        }
+        "hlo" => {
+            let store = ArtifactStore::open_default()?;
+            let n_classes = store.meta().n_classes;
+            Arc::new(HloEngine { store, n_classes })
+        }
+        _ => usage(),
+    })
+}
+
+fn cmd_generate(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> {
+    let task = task_of(kv.get("task").map(|s| s.as_str()).unwrap_or("circle"));
+    let n: usize = opt(kv, "n", 500);
+    let steps: usize = opt(kv, "steps", 130);
+    let solver = match kv.get("solver").map(|s| s.as_str()).unwrap_or("analog-sde") {
+        "analog-ode" => SolverChoice::AnalogOde,
+        "analog-sde" => SolverChoice::AnalogSde,
+        "euler" => SolverChoice::DigitalOde { steps },
+        "euler-sde" => SolverChoice::DigitalSde { steps },
+        _ => usage(),
+    };
+    let engine_name = kv.get("engine").map(|s| s.as_str()).unwrap_or(
+        if solver.is_analog() { "analog" } else { "hlo" });
+    let decode = kv.contains_key("decode");
+
+    let engine = build_engine(engine_name, &task, cfg)?;
+    let decoder = if decode {
+        Some(Arc::new(PixelDecoder::new(DecoderWeights::load(
+            Meta::artifacts_dir().join("vae_decoder.json"))?)))
+    } else {
+        None
+    };
+    let service = Service::start(engine, decoder, ServiceConfig {
+        workers: cfg.workers,
+        batcher: BatcherConfig {
+            max_batch_samples: cfg.max_batch,
+            linger: std::time::Duration::from_millis(cfg.linger_ms),
+        },
+        seed: opt(kv, "seed", cfg.seed),
+    });
+
+    let t0 = std::time::Instant::now();
+    let resp = service.generate(task, n, solver, cfg.guidance, decode)?;
+    let wall = t0.elapsed();
+
+    println!("task={task:?} solver={solver:?} engine={engine_name} n={n}");
+    println!("wall={wall:?}  modeled_hw_latency={:.3e}s", resp.hw_latency_s);
+    // quality: KL vs ground truth (circle) or cluster stats (letters)
+    match task {
+        TaskKind::Circle => {
+            let mut rng = Rng::new(999);
+            let truth = sample_circle(20 * n.max(1000), &mut rng);
+            let kl = stats::kl_points(&resp.samples, &truth, 24, 2.0);
+            println!("KL(truth || generated) = {kl:.4}");
+        }
+        TaskKind::Letter(c) => {
+            let meta = Meta::load_default()?;
+            let xs: Vec<f32> = resp.samples.iter().step_by(2).copied().collect();
+            let ys: Vec<f32> = resp.samples.iter().skip(1).step_by(2).copied().collect();
+            let m = meta.latent_class_means[c];
+            println!(
+                "latent mean = ({:.3}, {:.3})  target class mean = ({:.3}, {:.3})",
+                stats::mean(&xs), stats::mean(&ys), m[0], m[1]
+            );
+        }
+    }
+    if let Some(images) = &resp.images {
+        let side = 12;
+        println!("decoded {} images; first sample:", images.len() / (side * side));
+        for r in 0..side {
+            let row: String = (0..side)
+                .map(|c| {
+                    let v = images[r * side + c];
+                    if v > 0.3 { '#' } else if v > -0.3 { '+' } else { '.' }
+                })
+                .collect();
+            println!("  {row}");
+        }
+    }
+    println!("metrics: {}", service.metrics.snapshot().report());
+    service.shutdown();
+    Ok(())
+}
+
+fn cmd_serve(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> {
+    let n_requests: usize = opt(kv, "requests", 64);
+    let workers: usize = opt(kv, "workers", cfg.workers);
+    let engine = build_engine("rust", &TaskKind::Letter(0), cfg)?;
+    let decoder = Arc::new(PixelDecoder::new(DecoderWeights::load(
+        Meta::artifacts_dir().join("vae_decoder.json"))?));
+    let service = Arc::new(Service::start(engine, Some(decoder), ServiceConfig {
+        workers,
+        batcher: BatcherConfig {
+            max_batch_samples: cfg.max_batch,
+            linger: std::time::Duration::from_millis(cfg.linger_ms),
+        },
+        seed: cfg.seed,
+    }));
+
+    println!("serve: {n_requests} mixed requests over {workers} workers");
+    let mut rng = Rng::new(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|_| {
+            let task = TaskKind::Letter(rng.below(3));
+            let n = 1 + rng.below(16);
+            service
+                .submit(memdiff::coordinator::GenRequest {
+                    id: 0,
+                    task,
+                    n_samples: n,
+                    solver: SolverChoice::DigitalSde { steps: 100 },
+                    guidance: cfg.guidance,
+                    decode: rng.uniform() < 0.25,
+                })
+                .unwrap()
+        })
+        .collect();
+    let mut total_samples = 0usize;
+    for rx in rxs {
+        let resp = rx.recv()??;
+        total_samples += resp.samples.len() / 2;
+    }
+    let wall = t0.elapsed();
+    println!(
+        "served {total_samples} samples in {wall:?} ({:.0} samples/s)",
+        total_samples as f64 / wall.as_secs_f64()
+    );
+    println!("metrics: {}", service.metrics.snapshot().report());
+    Ok(())
+}
+
+fn cmd_characterize(kv: &HashMap<String, String>, _cfg: &Config) -> anyhow::Result<()> {
+    use memdiff::device::{Cell, Macro};
+    let mut rng = Rng::new(opt(kv, "seed", 2024u64));
+
+    println!("== Fig 2c: quasi-static IV (5 of 200 cycles, current at ±1.5 V)");
+    let mut cell = Cell::with_default(0.02);
+    let up: Vec<f32> = (0..50).map(|i| 1.5 * i as f32 / 49.0).collect();
+    let dn: Vec<f32> = (0..50).map(|i| -1.5 * i as f32 / 49.0).collect();
+    for cycle in 0..5 {
+        let iu = cell.iv_sweep(&up, &mut rng);
+        let id = cell.iv_sweep(&dn, &mut rng);
+        println!("  cycle {cycle}: I(+1.5V)={:.4} mA  I(-1.5V)={:.4} mA",
+                 iu.last().unwrap(), id.last().unwrap());
+    }
+
+    println!("== Fig 2d: 64 linear conductance states (showing every 8th)");
+    for k in (0..64).step_by(8) {
+        println!("  level {k:2}: {:.4} mS", Cell::level_conductance(k));
+    }
+
+    println!("== Fig 2e: retention of 4 states over 1e6 s");
+    for k in [0, 21, 42, 63] {
+        let mut c = Cell::with_default(Cell::level_conductance(k));
+        let g0 = c.conductance();
+        c.drift(1e6, &mut rng);
+        println!("  level {k:2}: {g0:.4} -> {:.4} mS (drift {:+.5})",
+                 c.conductance(), c.conductance() - g0);
+    }
+
+    println!("== Fig 2f: 32x32 moon-and-star pattern programming");
+    let mut array = Macro::new(32, 32);
+    let pattern = Macro::moon_star_pattern(32);
+    let st = array.program(&pattern, 0.0015, 500, &mut rng);
+    println!("  mean pulses/cell = {:.1}, failures = {}, max |err| = {:.4} mS",
+             st.mean_pulses(), st.failures, st.max_error_ms());
+    let snap = array.conductances();
+    for r in (0..32).step_by(2) {
+        let row: String = (0..32).step_by(1)
+            .map(|c| if snap.get(r, c) > 0.06 { '#' } else { '.' })
+            .collect();
+        println!("  {row}");
+    }
+
+    println!("== Fig 2g: conductance error distribution (read noise over time)");
+    let errs: Vec<f32> = {
+        let read = array.read_all(&mut rng);
+        read.as_slice().iter().zip(snap.as_slice())
+            .map(|(r, t)| (r - t) / t * 100.0)
+            .collect()
+    };
+    println!("  relative error: mean={:+.3}%  std={:.3}%",
+             stats::mean(&errs), stats::std(&errs));
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let meta = Meta::load_default()?;
+    println!("schedule: beta {}..{} over T={} (eps_t {})",
+             meta.sched.beta_min, meta.sched.beta_max, meta.sched.t_end,
+             meta.sched.eps_t);
+    println!("model: {}->{}x2->{} classes={}", meta.dim, meta.hidden, meta.dim,
+             meta.n_classes);
+    println!("quality gate (python, ODE-200): KL = {:.4}", meta.kl_uncond_gate);
+    println!("artifacts:");
+    for (name, spec) in &meta.artifacts {
+        println!("  {name:<20} {} inputs={:?}", spec.file, spec.inputs);
+    }
+    let store = ArtifactStore::open_default()?;
+    println!("PJRT platform: {}", store.platform());
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! Time + condition embedding (paper Eq. 9 and Fig. 4b).
+//!
+//! `v_t = [sin(2πWt), cos(2πWt)]` with a fixed frequency vector `W`; the
+//! condition is a one-hot label passed through a fixed projection, summed
+//! with the time embedding.  On the PCB these are pre-programmed DAC
+//! waveforms injected as currents at the TIA summing nodes — here they are
+//! evaluated on demand (optionally through the DAC quantizer below).
+
+use crate::util::tensor::Mat;
+
+/// Precomputed embedding generators for one deployed network.
+#[derive(Debug, Clone)]
+pub struct Embedding {
+    /// Frequency vector W, length hidden/2.
+    pub freqs: Vec<f32>,
+    /// Condition projection (n_classes × hidden).
+    pub cond_proj: Mat,
+    /// If Some(bits), quantize outputs like the PCB's 12-bit DACs.
+    pub dac_bits: Option<u32>,
+    /// DAC full-scale range in software units (±fs).
+    pub dac_fullscale: f32,
+}
+
+impl Embedding {
+    pub fn new(freqs: Vec<f32>, cond_proj: Mat) -> Self {
+        Embedding { freqs, cond_proj, dac_bits: None, dac_fullscale: 4.0 }
+    }
+
+    /// Enable DAC quantization (12-bit MAX5742 on the PCB).
+    pub fn with_dac(mut self, bits: u32) -> Self {
+        self.dac_bits = Some(bits);
+        self
+    }
+
+    /// Embedding dimension (== hidden layer width).
+    pub fn dim(&self) -> usize {
+        2 * self.freqs.len()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.cond_proj.rows()
+    }
+
+    #[inline]
+    fn dac(&self, v: f32) -> f32 {
+        match self.dac_bits {
+            None => v,
+            Some(bits) => {
+                let levels = (1u32 << bits) as f32;
+                let step = 2.0 * self.dac_fullscale / levels;
+                (v / step).round() * step
+            }
+        }
+    }
+
+    /// Write the summed time+condition embedding into `out` (len = dim()).
+    /// `onehot` may be all zeros (unconditional / CFG null token).
+    pub fn eval(&self, t: f32, onehot: &[f32], out: &mut [f32]) {
+        let h = self.freqs.len();
+        debug_assert_eq!(out.len(), 2 * h);
+        let two_pi_t = 2.0 * std::f32::consts::PI * t;
+        for (k, &w) in self.freqs.iter().enumerate() {
+            let ang = two_pi_t * w;
+            out[k] = ang.sin();
+            out[h + k] = ang.cos();
+        }
+        if !onehot.iter().all(|&c| c == 0.0) {
+            debug_assert_eq!(onehot.len(), self.cond_proj.rows());
+            for (ci, &c) in onehot.iter().enumerate() {
+                if c == 0.0 {
+                    continue;
+                }
+                let row = self.cond_proj.row(ci);
+                for (o, &p) in out.iter_mut().zip(row) {
+                    *o += c * p;
+                }
+            }
+        }
+        if self.dac_bits.is_some() {
+            for o in out.iter_mut() {
+                *o = self.dac(*o);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn emb() -> Embedding {
+        Embedding::new(
+            vec![0.5, 1.0, 2.0],
+            Mat::from_fn(2, 6, |r, c| (r * 6 + c) as f32 * 0.1),
+        )
+    }
+
+    #[test]
+    fn sin_cos_layout() {
+        let e = emb();
+        let mut out = vec![0.0; 6];
+        e.eval(0.25, &[0.0, 0.0], &mut out);
+        let tp = 2.0 * std::f32::consts::PI * 0.25;
+        assert!((out[0] - (tp * 0.5).sin()).abs() < 1e-6);
+        assert!((out[3] - (tp * 0.5).cos()).abs() < 1e-6);
+        assert!((out[2] - (tp * 2.0).sin()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn condition_adds_projection() {
+        let e = emb();
+        let mut t_only = vec![0.0; 6];
+        let mut both = vec![0.0; 6];
+        e.eval(0.4, &[0.0, 0.0], &mut t_only);
+        e.eval(0.4, &[0.0, 1.0], &mut both);
+        for k in 0..6 {
+            let want = t_only[k] + e.cond_proj.get(1, k);
+            assert!((both[k] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dac_quantization_steps() {
+        let e = emb().with_dac(4); // coarse for visibility
+        let mut out = vec![0.0; 6];
+        e.eval(0.123, &[0.0, 0.0], &mut out);
+        let step = 2.0 * 4.0 / 16.0;
+        for &v in &out {
+            let k = v / step;
+            assert!((k - k.round()).abs() < 1e-4, "{v} not on DAC grid");
+        }
+    }
+
+    #[test]
+    fn twelve_bit_dac_error_small() {
+        let e12 = emb().with_dac(12);
+        let e = emb();
+        let mut a = vec![0.0; 6];
+        let mut b = vec![0.0; 6];
+        e12.eval(0.777, &[1.0, 0.0], &mut a);
+        e.eval(0.777, &[1.0, 0.0], &mut b);
+        for k in 0..6 {
+            assert!((a[k] - b[k]).abs() <= 4.0 / 4096.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn periodic_in_integer_frequencies() {
+        let e = Embedding::new(vec![1.0, 3.0], Mat::zeros(1, 4));
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        e.eval(0.2, &[0.0], &mut a);
+        e.eval(1.2, &[0.0], &mut b);
+        for k in 0..4 {
+            assert!((a[k] - b[k]).abs() < 1e-5);
+        }
+    }
+}

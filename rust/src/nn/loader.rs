@@ -1,0 +1,204 @@
+//! Load the trained score-network weights exported by `aot.py`
+//! (`artifacts/weights_{uncond,cond}.json`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+use crate::util::tensor::Mat;
+
+/// Weight-space + conductance-space parameters of one trained score net.
+#[derive(Debug, Clone)]
+pub struct ScoreWeights {
+    // weight space (software baseline)
+    pub w1: Mat,
+    pub b1: Vec<f32>,
+    pub w2: Mat,
+    pub b2: Vec<f32>,
+    pub w3: Mat,
+    pub b3: Vec<f32>,
+    pub emb_w: Vec<f32>,
+    pub cond_proj: Mat,
+    // conductance space (deployment)
+    pub g1: Mat,
+    pub g2: Mat,
+    pub g3: Mat,
+    pub gains: [f32; 3],
+}
+
+fn tensor(obj: &Json, key: &str) -> anyhow::Result<(Vec<usize>, Vec<f32>)> {
+    obj.get(key)
+        .and_then(|v| v.as_tensor())
+        .ok_or_else(|| anyhow!("missing/invalid tensor '{key}'"))
+}
+
+fn mat2(obj: &Json, key: &str) -> anyhow::Result<Mat> {
+    let (shape, data) = tensor(obj, key)?;
+    if shape.len() != 2 {
+        return Err(anyhow!("'{key}' must be rank-2, got {shape:?}"));
+    }
+    Ok(Mat::from_vec(shape[0], shape[1], data))
+}
+
+fn vec1(obj: &Json, key: &str) -> anyhow::Result<Vec<f32>> {
+    let (shape, data) = tensor(obj, key)?;
+    if shape.len() != 1 {
+        return Err(anyhow!("'{key}' must be rank-1, got {shape:?}"));
+    }
+    Ok(data)
+}
+
+impl ScoreWeights {
+    /// Parse from JSON text.
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(text).context("parsing weights json")?;
+        let scalars = j.get("scalars").ok_or_else(|| anyhow!("missing scalars"))?;
+        let gain = |k: &str| -> anyhow::Result<f32> {
+            scalars
+                .get(k)
+                .and_then(|v| v.as_f64())
+                .map(|x| x as f32)
+                .ok_or_else(|| anyhow!("missing scalar '{k}'"))
+        };
+        let w = ScoreWeights {
+            w1: mat2(&j, "w1")?,
+            b1: vec1(&j, "b1")?,
+            w2: mat2(&j, "w2")?,
+            b2: vec1(&j, "b2")?,
+            w3: mat2(&j, "w3")?,
+            b3: vec1(&j, "b3")?,
+            emb_w: vec1(&j, "emb_w")?,
+            cond_proj: mat2(&j, "cond_proj")?,
+            g1: mat2(&j, "g1")?,
+            g2: mat2(&j, "g2")?,
+            g3: mat2(&j, "g3")?,
+            gains: [gain("gain1")?, gain("gain2")?, gain("gain3")?],
+        };
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_json(&text)
+    }
+
+    /// Structural consistency checks.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let (din, h) = self.w1.shape();
+        if self.w2.shape() != (h, h) {
+            return Err(anyhow!("w2 shape {:?} != ({h},{h})", self.w2.shape()));
+        }
+        if self.w3.shape().0 != h {
+            return Err(anyhow!("w3 rows != hidden"));
+        }
+        if self.w3.shape().1 != din {
+            return Err(anyhow!("w3 cols != dim"));
+        }
+        if self.b1.len() != h || self.b2.len() != h || self.b3.len() != din {
+            return Err(anyhow!("bias length mismatch"));
+        }
+        if self.emb_w.len() * 2 != h {
+            return Err(anyhow!("emb_w len {} != hidden/2", self.emb_w.len()));
+        }
+        if self.cond_proj.cols() != h {
+            return Err(anyhow!("cond_proj cols != hidden"));
+        }
+        for (g, w) in [(&self.g1, &self.w1), (&self.g2, &self.w2), (&self.g3, &self.w3)] {
+            if g.shape() != w.shape() {
+                return Err(anyhow!("conductance/weight shape mismatch"));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn dim(&self) -> usize {
+        self.w1.shape().0
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.w1.shape().1
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.cond_proj.rows()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// Construct a tiny valid weights JSON for parser tests.
+    pub(crate) fn tiny_json() -> String {
+        fn t(shape: &[usize], v: f32) -> String {
+            let n: usize = shape.iter().product();
+            format!(
+                "{{\"shape\": [{}], \"data\": [{}]}}",
+                shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(","),
+                vec![v.to_string(); n].join(",")
+            )
+        }
+        format!(
+            "{{\"w1\": {}, \"b1\": {}, \"w2\": {}, \"b2\": {}, \"w3\": {}, \"b3\": {},
+              \"emb_w\": {}, \"cond_proj\": {},
+              \"g1\": {}, \"g2\": {}, \"g3\": {},
+              \"scalars\": {{\"gain1\": 2.0, \"gain2\": 3.0, \"gain3\": 4.0}}}}",
+            t(&[2, 4], 0.1),
+            t(&[4], 0.0),
+            t(&[4, 4], 0.1),
+            t(&[4], 0.0),
+            t(&[4, 2], 0.1),
+            t(&[2], 0.0),
+            t(&[2], 1.0),
+            t(&[3, 4], 0.5),
+            t(&[2, 4], 0.06),
+            t(&[4, 4], 0.06),
+            t(&[4, 2], 0.06),
+        )
+    }
+
+    #[test]
+    fn parses_valid_json() {
+        let w = ScoreWeights::from_json(&tiny_json()).unwrap();
+        assert_eq!(w.dim(), 2);
+        assert_eq!(w.hidden(), 4);
+        assert_eq!(w.n_classes(), 3);
+        assert_eq!(w.gains, [2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let bad = tiny_json().replace(
+            "\"b3\": {\"shape\": [2]",
+            "\"b3\": {\"shape\": [5]",
+        );
+        // data length no longer matches shape -> as_tensor fails or validate fails
+        assert!(ScoreWeights::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_field() {
+        let bad = tiny_json().replace("\"emb_w\"", "\"emb_q\"");
+        assert!(ScoreWeights::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/weights_uncond.json");
+        if std::path::Path::new(path).exists() {
+            let w = ScoreWeights::load(path).unwrap();
+            assert_eq!(w.dim(), 2);
+            assert_eq!(w.hidden(), 14);
+            // conductances in window
+            for g in [&w.g1, &w.g2, &w.g3] {
+                for &x in g.as_slice() {
+                    assert!((0.02 - 1e-6..=0.10 + 1e-6).contains(&x));
+                }
+            }
+        }
+    }
+}

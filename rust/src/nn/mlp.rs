@@ -1,0 +1,342 @@
+//! The 3-layer score MLP in both realizations.
+//!
+//! Forward semantics (identical across python ref / Pallas kernel / here,
+//! asserted by the integration tests):
+//!
+//! ```text
+//! h1 = clamp(relu( clamp(x)·W1 + b1 + emb ))
+//! h2 = clamp(relu( h1·W2 + b2 + emb ))
+//! out = h2·W3 + b3
+//! ```
+//!
+//! where `clamp` is the protective voltage window [-2, 4] and `emb` is the
+//! summed time(+condition) embedding injected at both hidden layers.
+
+use super::embedding::Embedding;
+use super::loader::ScoreWeights;
+use super::ScoreNet;
+use crate::analog::activation::relu_diode;
+use crate::clamp_voltage;
+use crate::crossbar::{CrossbarLayer, NoiseModel};
+use crate::device::cell::CellParams;
+use crate::util::rng::Rng;
+use crate::util::tensor::{vecmat_bias_into, Mat};
+
+/// Exact f32 weight-space network — the paper's software baseline and the
+/// semantics the AOT artifacts implement.
+pub struct DigitalScoreNet {
+    w: ScoreWeights,
+    emb: Embedding,
+}
+
+impl DigitalScoreNet {
+    pub fn new(w: ScoreWeights) -> Self {
+        let emb = Embedding::new(w.emb_w.clone(), w.cond_proj.clone());
+        DigitalScoreNet { w, emb }
+    }
+
+    pub fn weights(&self) -> &ScoreWeights {
+        &self.w
+    }
+}
+
+impl ScoreNet for DigitalScoreNet {
+    fn dim(&self) -> usize {
+        self.w.dim()
+    }
+
+    fn n_classes(&self) -> usize {
+        self.w.n_classes()
+    }
+
+    fn eval(&self, x: &[f32], t: f32, onehot: &[f32], out: &mut [f32], _rng: &mut Rng) {
+        let h = self.w.hidden();
+        let mut emb = vec![0.0f32; h];
+        self.emb.eval(t, onehot, &mut emb);
+
+        let xc: Vec<f32> = x.iter().map(|&v| clamp_voltage(v)).collect();
+        let mut h1 = vec![0.0f32; h];
+        vecmat_bias_into(&xc, self.w.w1.as_slice(), &self.w.b1, &mut h1);
+        for (v, &e) in h1.iter_mut().zip(&emb) {
+            *v = clamp_voltage((*v + e).max(0.0));
+        }
+        let mut h2 = vec![0.0f32; h];
+        vecmat_bias_into(&h1, self.w.w2.as_slice(), &self.w.b2, &mut h2);
+        for (v, &e) in h2.iter_mut().zip(&emb) {
+            *v = clamp_voltage((*v + e).max(0.0));
+        }
+        vecmat_bias_into(&h2, self.w.w3.as_slice(), &self.w.b3, out);
+    }
+}
+
+/// Analog network: three crossbar layers + TIA + diode-ReLU, with device
+/// noise models.  This is the hardware of Fig. 2h–i.
+pub struct AnalogScoreNet {
+    l1: CrossbarLayer,
+    l2: CrossbarLayer,
+    l3: CrossbarLayer,
+    b1: Vec<f32>,
+    b2: Vec<f32>,
+    b3: Vec<f32>,
+    emb: Embedding,
+    noise: NoiseModel,
+    dim: usize,
+    hidden: usize,
+    n_classes: usize,
+    /// Scratch buffers (interior mutability avoided: eval allocates on the
+    /// stack via fixed-size arrays when hidden ≤ 32; see `eval`).
+    _priv: (),
+}
+
+/// Max hidden width supported by the stack-allocated hot path.
+const MAX_HIDDEN: usize = 32;
+
+impl AnalogScoreNet {
+    /// Deploy from exported conductances (exact, plus optional write noise
+    /// applied by reprogramming — see [`Self::program_from_weights`]).
+    pub fn from_conductances(w: &ScoreWeights, params: CellParams,
+                             noise: NoiseModel) -> Self {
+        assert!(w.hidden() <= MAX_HIDDEN);
+        let l1 = CrossbarLayer::from_conductances(&w.g1, w.gains[0], params.clone());
+        let l2 = CrossbarLayer::from_conductances(&w.g2, w.gains[1], params.clone());
+        let l3 = CrossbarLayer::from_conductances(&w.g3, w.gains[2], params);
+        AnalogScoreNet {
+            l1,
+            l2,
+            l3,
+            b1: w.b1.clone(),
+            b2: w.b2.clone(),
+            b3: w.b3.clone(),
+            emb: Embedding::new(w.emb_w.clone(), w.cond_proj.clone()).with_dac(12),
+            noise,
+            dim: w.dim(),
+            hidden: w.hidden(),
+            n_classes: w.n_classes(),
+            _priv: (),
+        }
+    }
+
+    /// Deploy by *programming* the weight matrices with write-verify —
+    /// includes realistic write noise (Fig. 5b/e).  `tol_ms` is the verify
+    /// band; smaller = more pulses, less residual error.
+    pub fn program_from_weights(w: &ScoreWeights, params: CellParams,
+                                tol_ms: f32, noise: NoiseModel,
+                                rng: &mut Rng) -> (Self, usize) {
+        assert!(w.hidden() <= MAX_HIDDEN);
+        let (l1, s1) = CrossbarLayer::program(&w.w1, params.clone(), tol_ms, rng);
+        let (l2, s2) = CrossbarLayer::program(&w.w2, params.clone(), tol_ms, rng);
+        let (l3, s3) = CrossbarLayer::program(&w.w3, params, tol_ms, rng);
+        let total_pulses = s1.pulses.iter().sum::<usize>()
+            + s2.pulses.iter().sum::<usize>()
+            + s3.pulses.iter().sum::<usize>();
+        (
+            AnalogScoreNet {
+                l1,
+                l2,
+                l3,
+                b1: w.b1.clone(),
+                b2: w.b2.clone(),
+                b3: w.b3.clone(),
+                emb: Embedding::new(w.emb_w.clone(), w.cond_proj.clone()).with_dac(12),
+                noise,
+                dim: w.dim(),
+                hidden: w.hidden(),
+                n_classes: w.n_classes(),
+                _priv: (),
+            },
+            total_pulses,
+        )
+    }
+
+    pub fn noise_model(&self) -> NoiseModel {
+        self.noise
+    }
+
+    pub fn set_noise_model(&mut self, noise: NoiseModel) {
+        self.noise = noise;
+    }
+
+    /// Total programmed cells across the three layers (energy model input).
+    pub fn n_cells(&self) -> usize {
+        self.l1.n_cells() + self.l2.n_cells() + self.l3.n_cells()
+    }
+
+    /// Effective realized weights (for deployment-error diagnostics).
+    pub fn effective_weights(&self) -> (Mat, Mat, Mat) {
+        (
+            self.l1.effective_weights(),
+            self.l2.effective_weights(),
+            self.l3.effective_weights(),
+        )
+    }
+
+    /// Age all layers (retention experiments).
+    pub fn age(&mut self, dt_s: f64, rng: &mut Rng) {
+        self.l1.age(dt_s, rng);
+        self.l2.age(dt_s, rng);
+        self.l3.age(dt_s, rng);
+    }
+}
+
+impl ScoreNet for AnalogScoreNet {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn eval(&self, x: &[f32], t: f32, onehot: &[f32], out: &mut [f32], rng: &mut Rng) {
+        debug_assert_eq!(x.len(), self.dim);
+        let h = self.hidden;
+        let mut emb = [0.0f32; MAX_HIDDEN];
+        self.emb.eval(t, onehot, &mut emb[..h]);
+
+        let mut xin = [0.0f32; MAX_HIDDEN];
+        for (o, &v) in xin.iter_mut().zip(x) {
+            *o = clamp_voltage(v);
+        }
+        let mut h1 = [0.0f32; MAX_HIDDEN];
+        self.l1.forward(&xin[..self.dim], &mut h1[..h], self.noise, rng);
+        for k in 0..h {
+            h1[k] = clamp_voltage(relu_diode(h1[k] + self.b1[k] + emb[k]));
+        }
+        let mut h2 = [0.0f32; MAX_HIDDEN];
+        self.l2.forward(&h1[..h], &mut h2[..h], self.noise, rng);
+        for k in 0..h {
+            h2[k] = clamp_voltage(relu_diode(h2[k] + self.b2[k] + emb[k]));
+        }
+        self.l3.forward(&h2[..h], out, self.noise, rng);
+        for (o, &b) in out.iter_mut().zip(&self.b3) {
+            *o += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loader::tests::tiny_json;
+
+    fn quiet() -> CellParams {
+        CellParams { read_noise_frac: 0.0, ..CellParams::default() }
+    }
+
+    fn weights() -> ScoreWeights {
+        ScoreWeights::from_json(&tiny_json()).unwrap()
+    }
+
+    #[test]
+    fn digital_eval_shapes_and_determinism() {
+        let net = DigitalScoreNet::new(weights());
+        let mut rng = Rng::new(0);
+        let mut a = [0.0f32; 2];
+        let mut b = [0.0f32; 2];
+        net.eval(&[0.3, -0.2], 0.5, &[0.0, 0.0, 0.0], &mut a, &mut rng);
+        net.eval(&[0.3, -0.2], 0.5, &[0.0, 0.0, 0.0], &mut b, &mut rng);
+        assert_eq!(a, b, "digital net must be deterministic");
+    }
+
+    #[test]
+    fn condition_changes_output() {
+        let net = DigitalScoreNet::new(weights());
+        let mut rng = Rng::new(0);
+        let mut a = [0.0f32; 2];
+        let mut b = [0.0f32; 2];
+        net.eval(&[0.3, -0.2], 0.5, &[0.0, 0.0, 0.0], &mut a, &mut rng);
+        net.eval(&[0.3, -0.2], 0.5, &[1.0, 0.0, 0.0], &mut b, &mut rng);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn cfg_lambda_zero_equals_conditional() {
+        let net = DigitalScoreNet::new(weights());
+        let mut rng = Rng::new(0);
+        let oh = [0.0, 1.0, 0.0];
+        let mut cfg = [0.0f32; 2];
+        let mut cond = [0.0f32; 2];
+        net.eval_cfg(&[0.1, 0.2], 0.3, &oh, 0.0, &mut cfg, &mut rng);
+        net.eval(&[0.1, 0.2], 0.3, &oh, &mut cond, &mut rng);
+        for k in 0..2 {
+            assert!((cfg[k] - cond[k]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cfg_extrapolation_formula() {
+        let net = DigitalScoreNet::new(weights());
+        let mut rng = Rng::new(0);
+        let oh = [0.0, 0.0, 1.0];
+        let zeros = [0.0, 0.0, 0.0];
+        let (mut c, mut u, mut g) = ([0.0f32; 2], [0.0f32; 2], [0.0f32; 2]);
+        net.eval(&[0.1, -0.4], 0.6, &oh, &mut c, &mut rng);
+        net.eval(&[0.1, -0.4], 0.6, &zeros, &mut u, &mut rng);
+        net.eval_cfg(&[0.1, -0.4], 0.6, &oh, 2.0, &mut g, &mut rng);
+        for k in 0..2 {
+            let want = 3.0 * c[k] - 2.0 * u[k];
+            assert!((g[k] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn analog_matches_digital_when_ideal() {
+        // With exact conductances, zero read noise and no DAC quantization
+        // surprises, analog ≈ digital up to conductance quantization of the
+        // *stored* weights (tiny_json stores g = 0.06 exactly on a level).
+        let w = weights();
+        let analog = AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal);
+        let digital = DigitalScoreNet::new(ScoreWeights {
+            // make digital use the weights implied by the conductances
+            w1: crate::crossbar::conductance_to_weight(&w.g1, w.gains[0]),
+            w2: crate::crossbar::conductance_to_weight(&w.g2, w.gains[1]),
+            w3: crate::crossbar::conductance_to_weight(&w.g3, w.gains[2]),
+            ..w.clone()
+        });
+        let mut rng = Rng::new(1);
+        let mut a = [0.0f32; 2];
+        let mut d = [0.0f32; 2];
+        for i in 0..20 {
+            let x = [0.1 * i as f32 - 1.0, 0.05 * i as f32];
+            let t = i as f32 / 20.0;
+            analog.eval(&x, t, &[0.0, 0.0, 0.0], &mut a, &mut rng);
+            digital.eval(&x, t, &[0.0, 0.0, 0.0], &mut d, &mut rng);
+            for k in 0..2 {
+                // 12-bit DAC on the embedding is the only remaining delta
+                assert!((a[k] - d[k]).abs() < 5e-3, "i={i} k={k}: {} vs {}", a[k], d[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn read_noise_perturbs_analog_eval() {
+        let w = weights();
+        let net = AnalogScoreNet::from_conductances(
+            &w,
+            CellParams::default(),
+            NoiseModel::ReadFast,
+        );
+        let mut rng = Rng::new(2);
+        let mut a = [0.0f32; 2];
+        let mut b = [0.0f32; 2];
+        net.eval(&[0.5, 0.5], 0.5, &[0.0, 0.0, 0.0], &mut a, &mut rng);
+        net.eval(&[0.5, 0.5], 0.5, &[0.0, 0.0, 0.0], &mut b, &mut rng);
+        assert_ne!(a, b, "read noise must decorrelate consecutive evals");
+    }
+
+    #[test]
+    fn programming_deploys_close_to_target() {
+        let w = weights();
+        let mut rng = Rng::new(3);
+        let (net, pulses) = AnalogScoreNet::program_from_weights(
+            &w,
+            quiet(),
+            0.0005,
+            NoiseModel::Ideal,
+            &mut rng,
+        );
+        assert!(pulses > 0);
+        let (e1, _, _) = net.effective_weights();
+        assert!(e1.max_abs_diff(&w.w1) < 0.1 * w.gains[0].max(1.0));
+    }
+}

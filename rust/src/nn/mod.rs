@@ -1,0 +1,50 @@
+//! The paper's score network: a 3-layer fully connected net (2→14→14→2)
+//! with sinusoidal time embedding and optional condition embedding injected
+//! as bias currents into both hidden layers (Fig. 2i / 4b).
+//!
+//! Two interchangeable realizations implement [`ScoreNet`]:
+//! * [`mlp::AnalogScoreNet`] — crossbar tiles + TIA + diode-ReLU, with
+//!   device read/write noise (the paper's hardware).
+//! * [`mlp::DigitalScoreNet`] — exact f32 weight-space math (the software
+//!   baseline the paper compares against, and the semantics of the AOT
+//!   artifacts).
+
+pub mod embedding;
+pub mod loader;
+pub mod mlp;
+
+pub use embedding::Embedding;
+pub use loader::ScoreWeights;
+pub use mlp::{AnalogScoreNet, DigitalScoreNet};
+
+use crate::util::rng::Rng;
+
+/// The epsilon-parameterized score network interface.
+///
+/// `eval` writes the network output ``net(x, t)`` (≈ the noise prediction;
+/// score = −net/σ(t)) into `out`.  `onehot` is the condition (all-zero =
+/// unconditional / CFG null token).  `rng` feeds device noise in analog
+/// implementations; digital ones ignore it.
+pub trait ScoreNet: Send + Sync {
+    /// State dimension (2 for both paper tasks).
+    fn dim(&self) -> usize;
+    /// Number of condition classes (0 = unconditional-only net).
+    fn n_classes(&self) -> usize;
+    /// Evaluate the network for a single state vector.
+    fn eval(&self, x: &[f32], t: f32, onehot: &[f32], out: &mut [f32], rng: &mut Rng);
+
+    /// Classifier-free guidance (paper Eq. 7), in network space:
+    /// `(1+λ)·net(x,c,t) − λ·net(x,t)`.
+    fn eval_cfg(&self, x: &[f32], t: f32, onehot: &[f32], lambda: f32,
+                out: &mut [f32], rng: &mut Rng) {
+        let d = self.dim();
+        let mut cond = vec![0.0f32; d];
+        let mut unc = vec![0.0f32; d];
+        self.eval(x, t, onehot, &mut cond, rng);
+        let zeros = vec![0.0f32; onehot.len()];
+        self.eval(x, t, &zeros, &mut unc, rng);
+        for i in 0..d {
+            out[i] = (1.0 + lambda) * cond[i] - lambda * unc[i];
+        }
+    }
+}

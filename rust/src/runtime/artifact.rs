@@ -1,0 +1,169 @@
+//! Artifact registry: lazily compiles the manifest's HLO programs and
+//! exposes typed step/score/decode entry points to the samplers and the
+//! coordinator.
+//!
+//! One executable per (program, batch) pair — PJRT executables are shape-
+//! specialized, so the coordinator's batcher pads to the nearest exported
+//! batch size (1 or 64 by default).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context};
+
+use super::client::{Executable, Runtime};
+use crate::data::meta::Meta;
+
+/// Output of one fused sampler step.
+pub type StepOutput = Vec<f32>;
+
+/// Lazily-compiled artifact registry.
+pub struct ArtifactStore {
+    runtime: Runtime,
+    dir: PathBuf,
+    meta: Meta,
+    compiled: Mutex<BTreeMap<String, &'static Executable>>,
+}
+
+impl ArtifactStore {
+    /// Open the default artifacts directory.
+    pub fn open_default() -> anyhow::Result<Self> {
+        Self::open(Meta::artifacts_dir())
+    }
+
+    pub fn open(dir: impl Into<PathBuf>) -> anyhow::Result<Self> {
+        let dir = dir.into();
+        let meta = Meta::load(dir.join("meta.json"))
+            .context("loading artifacts/meta.json (run `make artifacts`)")?;
+        Ok(ArtifactStore {
+            runtime: Runtime::cpu()?,
+            dir,
+            meta,
+            compiled: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn meta(&self) -> &Meta {
+        &self.meta
+    }
+
+    pub fn platform(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Largest exported batch ≤ `n`, or the smallest exported batch.
+    pub fn pick_batch(&self, n: usize) -> usize {
+        let mut best = *self.meta.batches.iter().min().unwrap_or(&1);
+        for &b in &self.meta.batches {
+            if b <= n && b > best {
+                best = b;
+            }
+        }
+        best
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    /// Executables are leaked intentionally: they live for the process and
+    /// this sidesteps self-referential storage; the set is tiny (≤8).
+    fn get(&self, name: &str) -> anyhow::Result<&'static Executable> {
+        let mut map = self.compiled.lock().unwrap();
+        if let Some(e) = map.get(name) {
+            return Ok(e);
+        }
+        let spec = self
+            .meta
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let exe = self
+            .runtime
+            .compile_hlo_file(self.dir.join(&spec.file), spec.inputs.clone())?;
+        let leaked: &'static Executable = Box::leak(Box::new(exe));
+        map.insert(name.to_string(), leaked);
+        Ok(leaked)
+    }
+
+    /// Pre-compile all artifacts of one batch size (warmup).
+    pub fn warmup(&self, batch: usize) -> anyhow::Result<()> {
+        for stem in ["step_uncond", "step_cond", "score_uncond", "decoder"] {
+            let name = format!("{stem}_b{batch}");
+            if self.meta.artifacts.contains_key(&name) {
+                self.get(&name)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// One fused unconditional sampler step on a batch:
+    /// x(b,2), t, dt, mode (1=SDE), noise(b,2) → x'(b,2).
+    pub fn step_uncond(&self, batch: usize, x: &[f32], t: f32, dt: f32,
+                       mode: f32, noise: &[f32]) -> anyhow::Result<StepOutput> {
+        let exe = self.get(&format!("step_uncond_b{batch}"))?;
+        exe.run_f32(&[
+            (x, &[batch, 2]),
+            (&[t], &[]),
+            (&[dt], &[]),
+            (&[mode], &[]),
+            (noise, &[batch, 2]),
+        ])
+    }
+
+    /// One fused conditional (CFG) sampler step:
+    /// + onehot(b,3), lambda.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_cond(&self, batch: usize, x: &[f32], t: f32, dt: f32,
+                     mode: f32, noise: &[f32], onehot: &[f32],
+                     lambda: f32) -> anyhow::Result<StepOutput> {
+        let exe = self.get(&format!("step_cond_b{batch}"))?;
+        exe.run_f32(&[
+            (x, &[batch, 2]),
+            (&[t], &[]),
+            (&[dt], &[]),
+            (&[mode], &[]),
+            (noise, &[batch, 2]),
+            (onehot, &[batch, 3]),
+            (&[lambda], &[]),
+        ])
+    }
+
+    /// Raw score-field evaluation (Fig. 3d): x(b,2), t → net(b,2).
+    pub fn score_uncond(&self, batch: usize, x: &[f32], t: f32)
+                        -> anyhow::Result<Vec<f32>> {
+        let exe = self.get(&format!("score_uncond_b{batch}"))?;
+        exe.run_f32(&[(x, &[batch, 2]), (&[t], &[])])
+    }
+
+    /// VAE decode: z(b,2) → images (b,12,12) flattened.
+    pub fn decode(&self, batch: usize, z: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let exe = self.get(&format!("decoder_b{batch}"))?;
+        exe.run_f32(&[(z, &[batch, 2])])
+    }
+
+    /// Full digital-baseline sampling via the step artifacts: returns the
+    /// final batch states after `n_steps` reverse-time Euler steps.
+    /// `onehot` = None → unconditional.  The RNG supplies prior + Wiener
+    /// noise.  This is what the paper's GPU baseline executes.
+    pub fn sample_digital(&self, batch: usize, n_steps: usize, sde: bool,
+                          onehot_lambda: Option<(&[f32], f32)>,
+                          rng: &mut crate::util::rng::Rng)
+                          -> anyhow::Result<Vec<f32>> {
+        let sched = self.meta.sched;
+        let mut x = rng.gaussian_vec(batch * 2);
+        let mut noise = vec![0.0f32; batch * 2];
+        let (dt, ts) = sched.reverse_grid(n_steps);
+        let mode = if sde { 1.0 } else { 0.0 };
+        for &t in &ts {
+            if sde {
+                rng.fill_gaussian(&mut noise);
+            }
+            x = match onehot_lambda {
+                None => self.step_uncond(batch, &x, t as f32, dt as f32, mode, &noise)?,
+                Some((oh, lam)) => self.step_cond(
+                    batch, &x, t as f32, dt as f32, mode, &noise, oh, lam,
+                )?,
+            };
+        }
+        Ok(x)
+    }
+}

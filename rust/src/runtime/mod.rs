@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Interchange is HLO **text** because the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactStore, StepOutput};
+pub use client::Runtime;

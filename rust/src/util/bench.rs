@@ -1,0 +1,89 @@
+//! Micro-benchmark harness (no `criterion` in the offline vendor set).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! timed iterations with outlier-robust statistics, and a `report` printer
+//! whose rows mirror the paper's tables (see `benches/`).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+}
+
+/// Time `f` adaptively: warm up, then run enough iterations to fill
+/// ~`budget_ms` of wall clock (min 10 iters), reporting robust stats.
+pub fn bench(name: &str, budget_ms: u64, mut f: impl FnMut()) -> BenchResult {
+    // warmup
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_start.elapsed() < Duration::from_millis(budget_ms / 5 + 1) {
+        f();
+        warm_iters += 1;
+    }
+    // estimate per-iter cost from warmup to size the timed run
+    let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+    let target_iters = ((budget_ms as f64 / 1000.0 / per_iter) as u64).clamp(10, 1_000_000);
+
+    let mut times = Vec::with_capacity(target_iters as usize);
+    for _ in 0..target_iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let total: Duration = times.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: target_iters,
+        mean: total / target_iters as u32,
+        p50: times[times.len() / 2],
+        min: times[0],
+        max: times[times.len() - 1],
+    }
+}
+
+/// Pretty-print one result row.
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<44} {:>10} iters   mean {:>12?}   p50 {:>12?}   min {:>12?}",
+        r.name, r.iters, r.mean, r.p50, r.min
+    );
+}
+
+/// Section header for a bench table.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// A labelled table row for paper-shaped outputs (speedups, KL, energy).
+pub fn row(cols: &[&str]) {
+    println!("{}", cols.join(" | "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let r = bench("noop-ish", 20, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 10);
+        assert!(r.min <= r.p50 && r.p50 <= r.max);
+        assert!(r.mean.as_nanos() > 0);
+    }
+}

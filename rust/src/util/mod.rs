@@ -1,0 +1,17 @@
+//! Self-contained substrates: PRNG, JSON, dense tensors, statistics,
+//! and a property-testing harness.
+//!
+//! The offline build environment vendors only the `xla` dependency chain,
+//! so the usual ecosystem crates (`rand`, `serde`, `proptest`, `criterion`)
+//! are reimplemented here at the scale this project needs.  Each module is
+//! small, tested, and used by the simulator and coordinator layers.
+
+pub mod bench;
+pub mod json;
+pub mod ptest;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+
+pub use rng::Rng;
+pub use tensor::Mat;

@@ -1,0 +1,102 @@
+//! Property-testing harness (no `proptest` in the offline vendor set).
+//!
+//! Seeded generator combinators + a runner that reports the failing seed so
+//! any counterexample is reproducible with `PTEST_SEED=<n> cargo test`.
+//! Used by the coordinator invariant tests (no request lost/duplicated,
+//! batch bounds, FIFO ordering) and the crossbar linearity properties.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with PTEST_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("PTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` over `cases` seeded inputs produced by `gen`.
+/// Panics with the failing case index + seed on first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let cases = default_cases();
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (PTEST_SEED={seed}):\n{input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns Result with a message.
+pub fn check_msg<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let cases = default_cases();
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (PTEST_SEED={seed}): {msg}\n{input:#?}"
+            );
+        }
+    }
+}
+
+// ---- generator helpers ------------------------------------------------------
+
+/// Vec of gaussians with random length in [1, max_len].
+pub fn gen_gaussian_vec(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let n = 1 + rng.below(max_len);
+    rng.gaussian_vec(n)
+}
+
+/// Random usize in [lo, hi].
+pub fn gen_range(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("abs nonneg", |r| r.gaussian_f32(), |x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_panics_with_seed() {
+        check("always false", |r| r.below(10), |_| false);
+    }
+
+    #[test]
+    fn gen_helpers_in_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = gen_gaussian_vec(&mut rng, 17);
+            assert!((1..=17).contains(&v.len()));
+            let x = gen_range(&mut rng, 3, 9);
+            assert!((3..=9).contains(&x));
+        }
+    }
+}

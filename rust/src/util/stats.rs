@@ -1,0 +1,223 @@
+//! Statistics: moments, 2-D histograms, KL divergence (the paper's quality
+//! metric, Eq. 8), and latency percentile summaries for the coordinator.
+
+/// Mean of a slice.
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// 2-D histogram over a square domain [-lim, lim]^2.
+#[derive(Debug, Clone)]
+pub struct Hist2d {
+    pub bins: usize,
+    pub lim: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Hist2d {
+    pub fn new(bins: usize, lim: f64) -> Self {
+        Hist2d { bins, lim, counts: vec![0; bins * bins], total: 0 }
+    }
+
+    /// Bin index for a coordinate; out-of-range values clamp to edge bins
+    /// (they carry probability mass that must not be silently dropped).
+    #[inline]
+    fn idx(&self, v: f64) -> usize {
+        let u = (v + self.lim) / (2.0 * self.lim);
+        ((u * self.bins as f64) as isize).clamp(0, self.bins as isize - 1) as usize
+    }
+
+    /// Accumulate one 2-D point.
+    pub fn add(&mut self, x: f64, y: f64) {
+        let (i, j) = (self.idx(x), self.idx(y));
+        self.counts[i * self.bins + j] += 1;
+        self.total += 1;
+    }
+
+    /// Accumulate interleaved 2-D points [x0, y0, x1, y1, ...].
+    pub fn add_points(&mut self, pts: &[f32]) {
+        assert!(pts.len() % 2 == 0);
+        for p in pts.chunks_exact(2) {
+            self.add(p[0] as f64, p[1] as f64);
+        }
+    }
+
+    /// Smoothed probability per bin (additive epsilon, normalized).
+    pub fn probs(&self, eps: f64) -> Vec<f64> {
+        let denom = self.total as f64 + eps * self.counts.len() as f64;
+        self.counts.iter().map(|&c| (c as f64 + eps) / denom).collect()
+    }
+}
+
+/// KL(P || Q) between two histograms over the same binning (paper Eq. 8).
+/// Additive smoothing keeps empty bins finite — same convention as the
+/// python-side `aot.kl_hist2d` gate, so the two sides cross-check.
+pub fn kl_divergence(p: &Hist2d, q: &Hist2d, eps: f64) -> f64 {
+    assert_eq!(p.bins, q.bins);
+    assert_eq!(p.counts.len(), q.counts.len());
+    let pp = p.probs(eps);
+    let qq = q.probs(eps);
+    pp.iter()
+        .zip(&qq)
+        .map(|(&a, &b)| if a > 0.0 { a * (a / b).ln() } else { 0.0 })
+        .sum()
+}
+
+/// Convenience: KL between two interleaved 2-D point sets.
+pub fn kl_points(gen: &[f32], truth: &[f32], bins: usize, lim: f64) -> f64 {
+    let mut hp = Hist2d::new(bins, lim);
+    let mut hq = Hist2d::new(bins, lim);
+    hp.add_points(truth);
+    hq.add_points(gen);
+    kl_divergence(&hp, &hq, 1e-3)
+}
+
+/// Percentile (nearest-rank) of an unsorted sample, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Online latency/throughput summary for coordinator metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { samples: Vec::new() }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.samples, 99.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NAN, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mean_std_known() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std(&xs) - 1.118033988).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hist_bins_cover_domain() {
+        let mut h = Hist2d::new(4, 1.0);
+        h.add(-0.99, -0.99);
+        h.add(0.99, 0.99);
+        h.add(0.0, 0.0);
+        assert_eq!(h.total, 3);
+        assert_eq!(h.counts[0], 1); // bottom-left
+        assert_eq!(h.counts[15], 1); // top-right
+    }
+
+    #[test]
+    fn hist_clamps_outliers() {
+        let mut h = Hist2d::new(4, 1.0);
+        h.add(100.0, -100.0);
+        assert_eq!(h.total, 1);
+        assert_eq!(h.counts.iter().sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn kl_identical_is_zero() {
+        let mut rng = Rng::new(0);
+        let pts: Vec<f32> = (0..20_000).map(|_| rng.gaussian_f32()).collect();
+        let kl = kl_points(&pts, &pts, 16, 3.0);
+        assert!(kl.abs() < 1e-12, "kl={kl}");
+    }
+
+    #[test]
+    fn kl_same_distribution_small() {
+        let mut rng = Rng::new(1);
+        let a: Vec<f32> = (0..40_000).map(|_| rng.gaussian_f32()).collect();
+        let b: Vec<f32> = (0..40_000).map(|_| rng.gaussian_f32()).collect();
+        let kl = kl_points(&a, &b, 16, 3.0);
+        assert!(kl < 0.02, "kl={kl}");
+    }
+
+    #[test]
+    fn kl_detects_mismatch() {
+        let mut rng = Rng::new(2);
+        let narrow: Vec<f32> = (0..20_000).map(|_| 0.3 * rng.gaussian_f32()).collect();
+        let wide: Vec<f32> = (0..20_000).map(|_| rng.gaussian_f32()).collect();
+        let kl = kl_points(&narrow, &wide, 16, 3.0);
+        assert!(kl > 0.3, "kl={kl}");
+    }
+
+    #[test]
+    fn kl_asymmetry() {
+        let mut rng = Rng::new(3);
+        let narrow: Vec<f32> = (0..20_000).map(|_| 0.3 * rng.gaussian_f32()).collect();
+        let wide: Vec<f32> = (0..20_000).map(|_| rng.gaussian_f32()).collect();
+        let a = kl_points(&narrow, &wide, 16, 3.0);
+        let b = kl_points(&wide, &narrow, 16, 3.0);
+        assert!((a - b).abs() > 1e-3);
+    }
+
+    #[test]
+    fn percentile_ranks() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for i in 1..=10 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.count(), 10);
+        assert!((s.mean() - 5.5).abs() < 1e-12);
+        assert_eq!(s.max(), 10.0);
+    }
+}

@@ -1,0 +1,238 @@
+//! Minimal dense f32 matrix type for the analog simulator.
+//!
+//! Row-major, contiguous, no views — the score networks here are 2→14→14→2
+//! and the macros are 32×32, so simplicity and cache behaviour beat
+//! generality.  The hot-path matmuls in [`crate::crossbar`] operate on raw
+//! slices from this type.
+
+use std::fmt;
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero-filled rows × cols.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Constant fill.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Wrap an existing buffer (len must equal rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/buffer mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// self (m×k) @ other (k×n) -> (m×n).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        matmul_into(
+            self.as_slice(),
+            other.as_slice(),
+            out.as_mut_slice(),
+            self.rows,
+            self.cols,
+            other.cols,
+        );
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
+    }
+
+    /// Elementwise map (copy).
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Max |a - b| over all entries.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+/// Inner matmul over raw slices: c += a(m×k) @ b(k×n). `c` must be zeroed by
+/// the caller when a fresh product is wanted.  ikj loop order — streams `b`
+/// and `c` rows sequentially, which is the cache-friendly order for the
+/// small-k regime here.
+#[inline]
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (l, &aval) in arow.iter().enumerate() {
+            if aval == 0.0 {
+                continue;
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aval * bv;
+            }
+        }
+    }
+}
+
+/// y = x (1×k) @ b (k×n) + bias, writing into y.
+#[inline]
+pub fn vecmat_bias_into(x: &[f32], b: &[f32], bias: &[f32], y: &mut [f32]) {
+    let k = x.len();
+    let n = y.len();
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    y.copy_from_slice(bias);
+    for (l, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let brow = &b[l * n..(l + 1) * n];
+        for (yv, &bv) in y.iter_mut().zip(brow) {
+            *yv += xv * bv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(3, 3, |r, c| if r == c { 1.0 } else { 0.0 });
+        let b = Mat::from_fn(3, 2, |r, c| (r * 2 + c) as f32);
+        assert_eq!(a.matmul(&b), b);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Mat::from_fn(4, 3, |r, c| (r + c) as f32);
+        let b = Mat::from_fn(3, 5, |r, c| (r as f32) - (c as f32));
+        let c = a.matmul(&b);
+        // verify one entry by hand: c[1][2] = sum_k a[1][k] b[k][2]
+        let want: f32 = (0..3).map(|k| ((1 + k) as f32) * ((k as f32) - 2.0)).sum();
+        assert_eq!(c.get(1, 2), want);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat::from_fn(3, 5, |r, c| (r * 5 + c) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn vecmat_bias() {
+        let b = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let x = [1.0f32, -1.0];
+        let bias = [0.5f32, 0.5, 0.5];
+        let mut y = [0.0f32; 3];
+        vecmat_bias_into(&x, b.as_slice(), &bias, &mut y);
+        assert_eq!(y, [-2.5, -2.5, -2.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn map_and_diff() {
+        let a = Mat::full(2, 2, 2.0);
+        let b = a.map(|x| x * x);
+        assert_eq!(b.as_slice(), &[4.0; 4]);
+        assert_eq!(a.max_abs_diff(&b), 2.0);
+    }
+}

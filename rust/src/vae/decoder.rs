@@ -1,0 +1,257 @@
+//! Latent → pixel decoder: linear(2→3·3·C) → ReLU → deconv(4,2,1) → ReLU
+//! → deconv(4,2,1) → tanh, NHWC/HWIO layouts, loop-for-loop identical to
+//! `ref.deconv2d` so the three implementations cross-validate.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+
+/// One deconv layer's weights: (kh, kw, ci, co) flattened HWIO + bias.
+#[derive(Debug, Clone)]
+pub struct Deconv {
+    pub kh: usize,
+    pub kw: usize,
+    pub ci: usize,
+    pub co: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Deconv {
+    #[inline]
+    fn tap(&self, ky: usize, kx: usize, ci: usize, co: usize) -> f32 {
+        self.w[((ky * self.kw + kx) * self.ci + ci) * self.co + co]
+    }
+
+    /// Transposed conv on one NHWC feature map (n=1):
+    /// out[oy,ox,co] = b[co] + Σ x[iy,ix,ci]·w[ky,kx,ci,co],
+    /// oy = iy·stride + ky − pad.
+    pub fn forward(&self, x: &[f32], side: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), side * side * self.ci);
+        let os = side * self.stride;
+        let mut out = vec![0.0f32; os * os * self.co];
+        // init bias
+        for oy in 0..os {
+            for ox in 0..os {
+                let base = (oy * os + ox) * self.co;
+                out[base..base + self.co].copy_from_slice(&self.b);
+            }
+        }
+        for iy in 0..side {
+            for ix in 0..side {
+                let xin = &x[(iy * side + ix) * self.ci..(iy * side + ix + 1) * self.ci];
+                for ky in 0..self.kh {
+                    let oy = (iy * self.stride + ky) as isize - self.pad as isize;
+                    if oy < 0 || oy >= os as isize {
+                        continue;
+                    }
+                    for kx in 0..self.kw {
+                        let ox = (ix * self.stride + kx) as isize - self.pad as isize;
+                        if ox < 0 || ox >= os as isize {
+                            continue;
+                        }
+                        let obase = ((oy as usize) * os + ox as usize) * self.co;
+                        for (ci, &xv) in xin.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            for co in 0..self.co {
+                                out[obase + co] += xv * self.tap(ky, kx, ci, co);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// All decoder weights.
+#[derive(Debug, Clone)]
+pub struct DecoderWeights {
+    pub lin_w: Vec<f32>, // (latent=2) × (3·3·C) row-major
+    pub lin_b: Vec<f32>,
+    pub dc1: Deconv,
+    pub dc2: Deconv,
+}
+
+fn tensor(j: &Json, key: &str) -> anyhow::Result<(Vec<usize>, Vec<f32>)> {
+    j.get(key)
+        .and_then(|v| v.as_tensor())
+        .ok_or_else(|| anyhow!("missing tensor '{key}'"))
+}
+
+impl DecoderWeights {
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(text).context("parsing vae_decoder.json")?;
+        let (ls, lin_w) = tensor(&j, "lin_w")?;
+        let (_, lin_b) = tensor(&j, "lin_b")?;
+        let (s1, w1) = tensor(&j, "dc1_w")?;
+        let (_, b1) = tensor(&j, "dc1_b")?;
+        let (s2, w2) = tensor(&j, "dc2_w")?;
+        let (_, b2) = tensor(&j, "dc2_b")?;
+        if ls.len() != 2 || s1.len() != 4 || s2.len() != 4 {
+            return Err(anyhow!("unexpected decoder tensor ranks"));
+        }
+        Ok(DecoderWeights {
+            lin_w,
+            lin_b,
+            dc1: Deconv {
+                kh: s1[0], kw: s1[1], ci: s1[2], co: s1[3],
+                w: w1, b: b1, stride: 2, pad: 1,
+            },
+            dc2: Deconv {
+                kh: s2[0], kw: s2[1], ci: s2[2], co: s2[3],
+                w: w2, b: b2, stride: 2, pad: 1,
+            },
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_json(&text)
+    }
+}
+
+/// The runnable decoder.
+pub struct PixelDecoder {
+    w: DecoderWeights,
+    latent: usize,
+    c1: usize,
+}
+
+impl PixelDecoder {
+    pub fn new(w: DecoderWeights) -> Self {
+        let c1 = w.dc1.ci;
+        let latent = w.lin_w.len() / w.lin_b.len();
+        PixelDecoder { w, latent, c1 }
+    }
+
+    /// Output image side (3 → 6 → 12 for the paper's geometry).
+    pub fn img_side(&self) -> usize {
+        12
+    }
+
+    /// Decode one latent (len 2) to a 12×12 image in [-1, 1] (row-major).
+    pub fn decode(&self, z: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(z.len(), self.latent);
+        let hidden = self.w.lin_b.len();
+        // linear + relu
+        let mut h = self.w.lin_b.clone();
+        for (r, &zv) in z.iter().enumerate() {
+            if zv == 0.0 {
+                continue;
+            }
+            let row = &self.w.lin_w[r * hidden..(r + 1) * hidden];
+            for (hv, &wv) in h.iter_mut().zip(row) {
+                *hv += zv * wv;
+            }
+        }
+        for v in h.iter_mut() {
+            *v = v.max(0.0);
+        }
+        debug_assert_eq!(hidden, 3 * 3 * self.c1);
+        // deconv1 + relu (3→6)
+        let mut f = self.w.dc1.forward(&h, 3);
+        for v in f.iter_mut() {
+            *v = v.max(0.0);
+        }
+        // deconv2 + tanh (6→12), single output channel
+        let out = self.w.dc2.forward(&f, 6);
+        out.iter().map(|&v| v.tanh()).collect()
+    }
+
+    /// Decode a batch of interleaved latents; returns images concatenated.
+    pub fn decode_batch(&self, zs: &[f32]) -> Vec<f32> {
+        let n = zs.len() / self.latent;
+        let side = self.img_side();
+        let mut out = Vec::with_capacity(n * side * side);
+        for s in 0..n {
+            out.extend(self.decode(&zs[s * self.latent..(s + 1) * self.latent]));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_deconv() -> Deconv {
+        // 4×4 kernel, 1→1 channel, all-ones taps, zero bias
+        Deconv {
+            kh: 4, kw: 4, ci: 1, co: 1,
+            w: vec![1.0; 16], b: vec![0.0],
+            stride: 2, pad: 1,
+        }
+    }
+
+    #[test]
+    fn deconv_doubles_side() {
+        let d = tiny_deconv();
+        let x = vec![1.0f32; 9];
+        let out = d.forward(&x, 3);
+        assert_eq!(out.len(), 36);
+    }
+
+    #[test]
+    fn deconv_single_input_spreads_kernel() {
+        // one nonzero input pixel at (0,0): output = shifted kernel window
+        let d = tiny_deconv();
+        let mut x = vec![0.0f32; 9];
+        x[0] = 1.0;
+        let out = d.forward(&x, 3);
+        // oy = 0*2 + ky - 1 ∈ {-1,0,1,2} → rows 0..=2 get taps ky=1..=3
+        let nonzero = out.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nonzero, 9); // 3×3 of the 4×4 kernel lands in-bounds
+        assert_eq!(out[0], 1.0);
+    }
+
+    #[test]
+    fn deconv_matches_python_ref_numbers() {
+        // cross-language fixture: computed with kernels/ref.deconv2d
+        // x = [[1,2],[3,4]] (1 ch), w[ky,kx,0,0] = ky*4+kx, b=0.5
+        let d = Deconv {
+            kh: 4, kw: 4, ci: 1, co: 1,
+            w: (0..16).map(|i| i as f32).collect(),
+            b: vec![0.5],
+            stride: 2, pad: 1,
+        };
+        let out = d.forward(&[1.0, 2.0, 3.0, 4.0], 2);
+        assert_eq!(out.len(), 16);
+        // expected full map computed with kernels/ref.deconv2d (python):
+        let want = [
+            5.5, 14.5, 17.5, 12.5,
+            12.5, 32.5, 42.5, 28.5,
+            28.5, 72.5, 82.5, 52.5,
+            27.5, 62.5, 69.5, 40.5,
+        ];
+        for (k, (&got, &w)) in out.iter().zip(&want).enumerate() {
+            assert_eq!(got, w, "pixel {k}");
+        }
+    }
+
+    #[test]
+    fn decoder_loads_real_artifact_and_outputs_range() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/vae_decoder.json");
+        if !std::path::Path::new(path).exists() {
+            return;
+        }
+        let dec = PixelDecoder::new(DecoderWeights::load(path).unwrap());
+        let img = dec.decode(&[0.5, -0.5]);
+        assert_eq!(img.len(), 144);
+        for &p in &img {
+            assert!((-1.0..=1.0).contains(&p));
+        }
+        // different latents decode to different images
+        let img2 = dec.decode(&[-1.0, 1.0]);
+        let diff: f32 = img.iter().zip(&img2).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 0.1);
+    }
+}

@@ -1,0 +1,10 @@
+//! VAE pixel decoder for the latent-diffusion task (paper Fig. 4a/c).
+//!
+//! Only the decoder deploys (the encoder exists at training time in
+//! python); topology is the paper's: one linear layer + two deconvolution
+//! layers, mirrored exactly against `python/compile/kernels/ref.vae_decoder`
+//! and the `decoder_b*.hlo.txt` artifacts.
+
+pub mod decoder;
+
+pub use decoder::{DecoderWeights, PixelDecoder};

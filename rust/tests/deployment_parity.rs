@@ -1,0 +1,139 @@
+//! Deployment-contract integration tests: the rust mapper must reproduce
+//! the python export exactly, and the digital/analog nets must agree on
+//! the deployed function.
+
+use memdiff::crossbar::{self, NoiseModel};
+use memdiff::data::Meta;
+use memdiff::device::cell::CellParams;
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreNet, ScoreWeights};
+use memdiff::util::rng::Rng;
+use memdiff::util::tensor::Mat;
+
+fn weights() -> Option<ScoreWeights> {
+    let p = Meta::artifacts_dir().join("weights_uncond.json");
+    if !p.exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(ScoreWeights::load(p).unwrap())
+}
+
+#[test]
+fn rust_mapper_reproduces_python_conductances() {
+    // g_i in the artifact == quantize(w_i/gain_i + G_FIXED) with the rust
+    // mapper — the two implementations of the deployment pipeline agree.
+    let Some(w) = weights() else { return };
+    for (wm, gm, gain) in [(&w.w1, &w.g1, w.gains[0]),
+                           (&w.w2, &w.g2, w.gains[1]),
+                           (&w.w3, &w.g3, w.gains[2])] {
+        let ours = crossbar::mapper::quantize(
+            &crossbar::weight_to_conductance(wm, gain));
+        let diff = ours.max_abs_diff(gm);
+        assert!(diff < 1e-6, "conductance mismatch {diff}");
+    }
+}
+
+#[test]
+fn rust_gain_close_to_python_gain() {
+    // with QAT the exported weights already sit inside the window; the
+    // rust required_gain recomputed from them must match the python one
+    let Some(w) = weights() else { return };
+    for (wm, gain) in [(&w.w1, w.gains[0]), (&w.w2, w.gains[1]), (&w.w3, w.gains[2])] {
+        let ours = crossbar::required_gain(wm);
+        assert!(
+            (ours / gain - 1.0).abs() < 0.02,
+            "gain {ours} vs python {gain}"
+        );
+    }
+}
+
+#[test]
+fn digital_and_analog_nets_agree_on_deployed_function() {
+    // DigitalScoreNet on conductance-implied weights == AnalogScoreNet
+    // (ideal, no read noise) up to the 12-bit embedding DAC.
+    let Some(w) = weights() else { return };
+    let implied = ScoreWeights {
+        w1: crossbar::conductance_to_weight(&w.g1, w.gains[0]),
+        w2: crossbar::conductance_to_weight(&w.g2, w.gains[1]),
+        w3: crossbar::conductance_to_weight(&w.g3, w.gains[2]),
+        ..w.clone()
+    };
+    let digital = DigitalScoreNet::new(implied);
+    let params = CellParams { read_noise_frac: 0.0, ..CellParams::default() };
+    let analog = AnalogScoreNet::from_conductances(&w, params, NoiseModel::Ideal);
+    let mut rng = Rng::new(0);
+    let (mut a, mut d) = ([0.0f32; 2], [0.0f32; 2]);
+    for i in 0..30 {
+        let x = [(i as f32 - 15.0) / 10.0, ((i * 3 % 7) as f32 - 3.0) / 4.0];
+        let t = 0.02 + 0.96 * i as f32 / 29.0;
+        analog.eval(&x, t, &[0.0, 0.0, 0.0], &mut a, &mut rng);
+        digital.eval(&x, t, &[0.0, 0.0, 0.0], &mut d, &mut rng);
+        for k in 0..2 {
+            // remaining physical deltas: diode soft-knee ReLU (≤ KNEE·ln2
+            // ≈ 0.014 per hidden unit near zero) + 12-bit embedding DAC
+            assert!((a[k] - d[k]).abs() < 3e-2, "i={i} k={k}: {} vs {}", a[k], d[k]);
+        }
+    }
+}
+
+#[test]
+fn qat_kept_deployment_error_negligible() {
+    // weight-space net vs conductance-implied net: after QAT training the
+    // two functions must be close (this is the entire point of QAT).
+    let Some(w) = weights() else { return };
+    let implied = ScoreWeights {
+        w1: crossbar::conductance_to_weight(&w.g1, w.gains[0]),
+        w2: crossbar::conductance_to_weight(&w.g2, w.gains[1]),
+        w3: crossbar::conductance_to_weight(&w.g3, w.gains[2]),
+        ..w.clone()
+    };
+    // weights themselves match within half a quantization step
+    for ((wm, im), gain) in [(&w.w1, &implied.w1), (&w.w2, &implied.w2), (&w.w3, &implied.w3)]
+        .into_iter()
+        .zip(w.gains)
+    {
+        let qstep = gain * 0.08 / 63.0;
+        assert!(
+            wm.max_abs_diff(im) <= 0.5 * qstep + 1e-5,
+            "deployment weight error {} > half-step {}",
+            wm.max_abs_diff(im),
+            0.5 * qstep
+        );
+    }
+}
+
+#[test]
+fn programming_write_verify_close_to_exact_deployment() {
+    // program_from_weights (write noise path) lands near from_conductances
+    let Some(w) = weights() else { return };
+    let quiet = CellParams { read_noise_frac: 0.0, ..CellParams::default() };
+    let exact = AnalogScoreNet::from_conductances(&w, quiet.clone(), NoiseModel::Ideal);
+    let mut rng = Rng::new(9);
+    let (programmed, pulses) = AnalogScoreNet::program_from_weights(
+        &w, quiet, 0.0008, NoiseModel::Ideal, &mut rng);
+    assert!(pulses > 200, "write-verify should need real work: {pulses}");
+    let (e1, _, _) = exact.effective_weights();
+    let (p1, _, _) = programmed.effective_weights();
+    let diff = e1.max_abs_diff(&p1);
+    let qstep = w.gains[0] * 0.08 / 63.0;
+    assert!(diff < 3.0 * qstep, "programmed weight error {diff}");
+}
+
+#[test]
+fn conductances_land_on_levels() {
+    let Some(w) = weights() else { return };
+    let step = 0.08f32 / 63.0;
+    for g in [&w.g1, &w.g2, &w.g3] {
+        for &x in g.as_slice() {
+            let k = (x - 0.02) / step;
+            assert!((k - k.round()).abs() < 1e-3, "conductance {x} off-grid");
+        }
+    }
+}
+
+#[test]
+fn mat_helper_shapes() {
+    // guard for the Mat-based helpers used above
+    let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+    assert_eq!(m.shape(), (2, 2));
+}

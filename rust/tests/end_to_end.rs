@@ -1,0 +1,204 @@
+//! End-to-end integration: the full coordinator path over every engine,
+//! generation quality gates, and mode-switch behaviour under load.
+
+use std::sync::Arc;
+
+use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::coordinator::batcher::BatcherConfig;
+use memdiff::coordinator::service::{AnalogEngine, HloEngine, RustDigitalEngine};
+use memdiff::coordinator::{Service, ServiceConfig, SolverChoice, TaskKind};
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::{sample_circle, Meta};
+use memdiff::device::cell::CellParams;
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::runtime::ArtifactStore;
+use memdiff::util::rng::Rng;
+use memdiff::util::stats;
+use memdiff::vae::{DecoderWeights, PixelDecoder};
+
+fn artifacts_ready() -> bool {
+    let ok = Meta::artifacts_dir().join("meta.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built");
+    }
+    ok
+}
+
+fn truth() -> Vec<f32> {
+    let mut rng = Rng::new(31415);
+    sample_circle(30_000, &mut rng)
+}
+
+/// Quality gate shared by the engine tests: the generated circle must be
+/// recognizably the target distribution (KL well below a N(0,I) baseline,
+/// which scores ~1.5 on this binning).
+const KL_GATE: f64 = 0.9;
+
+#[test]
+fn analog_engine_generates_circle() {
+    if !artifacts_ready() {
+        return;
+    }
+    let meta = Meta::load_default().unwrap();
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json")).unwrap();
+    let engine = Arc::new(AnalogEngine {
+        net: AnalogScoreNet::from_conductances(
+            &w, CellParams::default(), NoiseModel::ReadFast),
+        sched: meta.sched,
+        substeps: 1000,
+    });
+    let svc = Service::start(engine, None, ServiceConfig::default());
+    let r = svc
+        .generate(TaskKind::Circle, 800, SolverChoice::AnalogSde, 0.0, false)
+        .unwrap();
+    let kl = stats::kl_points(&r.samples, &truth(), 24, 2.0);
+    assert!(kl < KL_GATE, "analog KL {kl}");
+    svc.shutdown();
+}
+
+#[test]
+fn rust_digital_engine_generates_circle() {
+    if !artifacts_ready() {
+        return;
+    }
+    let meta = Meta::load_default().unwrap();
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json")).unwrap();
+    let engine = Arc::new(RustDigitalEngine {
+        net: DigitalScoreNet::new(w),
+        sched: meta.sched,
+    });
+    let svc = Service::start(engine, None, ServiceConfig::default());
+    let r = svc
+        .generate(TaskKind::Circle, 800,
+                  SolverChoice::DigitalSde { steps: 150 }, 0.0, false)
+        .unwrap();
+    let kl = stats::kl_points(&r.samples, &truth(), 24, 2.0);
+    assert!(kl < KL_GATE, "digital KL {kl}");
+    svc.shutdown();
+}
+
+#[test]
+fn hlo_engine_generates_circle() {
+    if !artifacts_ready() {
+        return;
+    }
+    let store = ArtifactStore::open_default().unwrap();
+    let engine = Arc::new(HloEngine { n_classes: store.meta().n_classes, store });
+    let svc = Service::start(engine, None, ServiceConfig::default());
+    let r = svc
+        .generate(TaskKind::Circle, 512,
+                  SolverChoice::DigitalSde { steps: 150 }, 0.0, false)
+        .unwrap();
+    let kl = stats::kl_points(&r.samples, &truth(), 24, 2.0);
+    assert!(kl < KL_GATE, "hlo KL {kl}");
+    svc.shutdown();
+}
+
+#[test]
+fn conditional_generation_separates_classes() {
+    if !artifacts_ready() {
+        return;
+    }
+    let meta = Meta::load_default().unwrap();
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_cond.json")).unwrap();
+    let decoder = Arc::new(PixelDecoder::new(
+        DecoderWeights::load(Meta::artifacts_dir().join("vae_decoder.json")).unwrap()));
+    let engine = Arc::new(AnalogEngine {
+        net: AnalogScoreNet::from_conductances(
+            &w, CellParams::default(), NoiseModel::ReadFast),
+        sched: meta.sched,
+        substeps: 1000,
+    });
+    let svc = Service::start(engine, Some(decoder), ServiceConfig::default());
+    let mut means = Vec::new();
+    for c in 0..3 {
+        let r = svc
+            .generate(TaskKind::Letter(c), 300, SolverChoice::AnalogSde, 2.0, true)
+            .unwrap();
+        let xs: Vec<f32> = r.samples.iter().step_by(2).copied().collect();
+        let ys: Vec<f32> = r.samples.iter().skip(1).step_by(2).copied().collect();
+        means.push([stats::mean(&xs), stats::mean(&ys)]);
+        // decoded images present and in range
+        let imgs = r.images.unwrap();
+        assert_eq!(imgs.len(), 300 * 144);
+        assert!(imgs.iter().all(|&p| (-1.0..=1.0).contains(&p)));
+        // generated mean lands near this class's latent mean
+        let m = meta.latent_class_means[c];
+        let d = ((means[c][0] - m[0] as f64).powi(2)
+            + (means[c][1] - m[1] as f64).powi(2))
+            .sqrt();
+        assert!(d < 0.8, "class {c}: generated mean {:?} vs {:?}", means[c], m);
+    }
+    // classes pairwise separated
+    for i in 0..3 {
+        for j in (i + 1)..3 {
+            let d = ((means[i][0] - means[j][0]).powi(2)
+                + (means[i][1] - means[j][1]).powi(2))
+                .sqrt();
+            assert!(d > 0.8, "classes {i},{j} too close: {d}");
+        }
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn ode_and_sde_solvers_agree_on_distribution() {
+    if !artifacts_ready() {
+        return;
+    }
+    let meta = Meta::load_default().unwrap();
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json")).unwrap();
+    let net = AnalogScoreNet::from_conductances(
+        &w, CellParams::default(), NoiseModel::ReadFast);
+    let mut rng = Rng::new(3);
+    let t = truth();
+    let mut kls = Vec::new();
+    for mode in [SolverMode::Ode, SolverMode::Sde] {
+        let solver = AnalogSolver::new(&net, SolverConfig::new(mode)
+            .with_schedule(meta.sched).with_substeps(1000));
+        let gen = solver.solve_batch(800, &[], &mut rng);
+        kls.push(stats::kl_points(&gen, &t, 24, 2.0));
+    }
+    assert!(kls[0] < 1.2 && kls[1] < KL_GATE, "ODE/SDE KLs {kls:?}");
+}
+
+#[test]
+fn programming_mode_blocks_and_resumes() {
+    if !artifacts_ready() {
+        return;
+    }
+    let meta = Meta::load_default().unwrap();
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json")).unwrap();
+    let engine = Arc::new(RustDigitalEngine {
+        net: DigitalScoreNet::new(w),
+        sched: meta.sched,
+    });
+    let svc = Arc::new(Service::start(engine, None, ServiceConfig {
+        workers: 2,
+        batcher: BatcherConfig::default(),
+        seed: 5,
+    }));
+    // hold programming mode, fire requests, release — all must complete
+    let svc2 = Arc::clone(&svc);
+    let rxs: Vec<_> = {
+        let _prog = svc.mode_gate.programming();
+        (0..4)
+            .map(|_| {
+                svc2.submit(memdiff::coordinator::GenRequest {
+                    id: 0,
+                    task: TaskKind::Circle,
+                    n_samples: 16,
+                    solver: SolverChoice::DigitalSde { steps: 30 },
+                    guidance: 0.0,
+                    decode: false,
+                })
+                .unwrap()
+            })
+            .collect()
+        // _prog drops here: compute resumes
+    };
+    for rx in rxs {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.samples.len(), 32);
+    }
+}

@@ -1,0 +1,184 @@
+//! Cross-language integration: the AOT PJRT artifacts must compute the
+//! same function as the rust-native implementations.
+//!
+//! This is the test that catches interchange bugs — it already caught the
+//! HLO printer eliding large constants (`constant({...})`) which the 0.5.1
+//! text parser silently read as zeros, and the `source_end_line` metadata
+//! the old parser rejects.
+//!
+//! Skips (cleanly passes) when `make artifacts` has not run.
+
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::Meta;
+use memdiff::device::cell::CellParams;
+use memdiff::nn::{AnalogScoreNet, ScoreNet, ScoreWeights};
+use memdiff::runtime::ArtifactStore;
+use memdiff::util::rng::Rng;
+use memdiff::vae::{DecoderWeights, PixelDecoder};
+
+fn store() -> Option<ArtifactStore> {
+    if !Meta::artifacts_dir().join("meta.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(ArtifactStore::open_default().expect("open artifacts"))
+}
+
+fn ideal_net() -> AnalogScoreNet {
+    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json")).unwrap();
+    let params = CellParams { read_noise_frac: 0.0, ..CellParams::default() };
+    AnalogScoreNet::from_conductances(&w, params, NoiseModel::Ideal)
+}
+
+/// Tolerance: the remaining deltas are the rust analog net's physical
+/// touches — diode soft-knee ReLU (≤ 0.014 near zero) and the 12-bit
+/// embedding DAC — plus f32 reassociation across XLA versions.
+const TOL: f32 = 3e-2;
+
+#[test]
+fn score_artifact_matches_rust_conductance_net() {
+    let Some(store) = store() else { return };
+    let net = ideal_net();
+    let mut rng = Rng::new(0);
+    let mut out = [0.0f32; 2];
+    for i in 0..20 {
+        let x = [0.35 * (i as f32 - 10.0) / 10.0, 0.2 * ((i * 7 % 13) as f32 - 6.0) / 6.0];
+        let t = 0.05 + 0.9 * i as f32 / 19.0;
+        let hlo = store.score_uncond(1, &x, t).unwrap();
+        net.eval(&x, t, &[0.0, 0.0, 0.0], &mut out, &mut rng);
+        for k in 0..2 {
+            assert!(
+                (hlo[k] - out[k]).abs() < TOL,
+                "i={i} k={k}: hlo {} vs rust {}",
+                hlo[k],
+                out[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn step_artifact_matches_manual_composition() {
+    // step(x, t, dt, mode, noise) == clamp(euler(x, score(x,t), ...))
+    let Some(store) = store() else { return };
+    let meta = store.meta().clone();
+    let x = [0.5f32, -0.5];
+    let noise = [0.25f32, -1.0];
+    for (t, dt, mode) in [(0.9f32, 0.004f32, 0.0f32), (0.5, 0.01, 1.0), (0.05, 0.002, 0.0)] {
+        let s = store.score_uncond(1, &x, t).unwrap();
+        let beta = meta.sched.beta(t as f64) as f32;
+        let sigma = meta.sched.sigma(t as f64) as f32;
+        // score = -net/sigma; SDE rhs = -b/2 x + b/sigma net; ODE halves the net term
+        let mut want = [0.0f32; 2];
+        for k in 0..2 {
+            let rhs_sde = -0.5 * beta * x[k] + beta / sigma * s[k];
+            let rhs_ode = -0.5 * beta * x[k] + 0.5 * beta / sigma * s[k];
+            let rhs = mode * rhs_sde + (1.0 - mode) * rhs_ode;
+            let diff = mode * (beta * dt).max(0.0).sqrt();
+            want[k] = (x[k] - dt * rhs + diff * noise[k]).clamp(-2.0, 4.0);
+        }
+        let got = store.step_uncond(1, &x, t, dt, mode, &noise).unwrap();
+        for k in 0..2 {
+            assert!(
+                (got[k] - want[k]).abs() < 1e-4,
+                "t={t} mode={mode} k={k}: {} vs {}",
+                got[k],
+                want[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn cond_step_cfg_reduces_to_uncond_at_lambda_zero_null_token() {
+    // with an all-zero onehot, conditional and unconditional nets see the
+    // same embedding; CFG combine is (1+λ)s - λs = s for any λ then
+    let Some(store) = store() else { return };
+    let x = [0.2f32, 0.1];
+    let noise = [0.0f32, 0.0];
+    let onehot = [0.0f32, 0.0, 0.0];
+    let a = store
+        .step_cond(1, &x, 0.5, 0.01, 0.0, &noise, &onehot, 0.0)
+        .unwrap();
+    let b = store
+        .step_cond(1, &x, 0.5, 0.01, 0.0, &noise, &onehot, 2.0)
+        .unwrap();
+    for k in 0..2 {
+        assert!((a[k] - b[k]).abs() < 1e-5, "{} vs {}", a[k], b[k]);
+    }
+}
+
+#[test]
+fn cond_step_condition_changes_output() {
+    let Some(store) = store() else { return };
+    let x = [0.2f32, 0.1];
+    let noise = [0.0f32, 0.0];
+    let a = store
+        .step_cond(1, &x, 0.5, 0.01, 0.0, &noise, &[1.0, 0.0, 0.0], 2.0)
+        .unwrap();
+    let b = store
+        .step_cond(1, &x, 0.5, 0.01, 0.0, &noise, &[0.0, 0.0, 1.0], 2.0)
+        .unwrap();
+    assert!((a[0] - b[0]).abs() + (a[1] - b[1]).abs() > 1e-5);
+}
+
+#[test]
+fn decoder_artifact_matches_rust_decoder() {
+    let Some(store) = store() else { return };
+    let dec = PixelDecoder::new(
+        DecoderWeights::load(Meta::artifacts_dir().join("vae_decoder.json")).unwrap(),
+    );
+    for z in [[0.0f32, 0.0], [1.2, -0.7], [-1.5, 1.5]] {
+        let hlo = store.decode(1, &z).unwrap();
+        let rust = dec.decode(&z);
+        assert_eq!(hlo.len(), 144);
+        for k in 0..144 {
+            assert!(
+                (hlo[k] - rust[k]).abs() < 1e-4,
+                "z={z:?} pix {k}: {} vs {}",
+                hlo[k],
+                rust[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_sizes_agree() {
+    // the b1 and b64 lowerings of the same function must agree lane-wise
+    let Some(store) = store() else { return };
+    let mut x64 = vec![0.0f32; 128];
+    let mut rng = Rng::new(5);
+    rng.fill_gaussian(&mut x64);
+    let s64 = store.score_uncond(64, &x64, 0.42).unwrap();
+    for lane in [0usize, 17, 63] {
+        let x1 = [x64[2 * lane], x64[2 * lane + 1]];
+        let s1 = store.score_uncond(1, &x1, 0.42).unwrap();
+        for k in 0..2 {
+            assert!(
+                (s1[k] - s64[2 * lane + k]).abs() < 1e-5,
+                "lane {lane} k={k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hlo_text_has_no_elided_constants() {
+    // regression guard for the constant({...}) corruption
+    let Some(store) = store() else { return };
+    for spec in store.meta().artifacts.values() {
+        let text =
+            std::fs::read_to_string(Meta::artifacts_dir().join(&spec.file)).unwrap();
+        assert!(
+            !text.contains("{...}"),
+            "{} contains elided constants",
+            spec.file
+        );
+        assert!(
+            !text.contains("source_end_line"),
+            "{} contains metadata the 0.5.1 parser rejects",
+            spec.file
+        );
+    }
+}
