@@ -1,64 +1,115 @@
 //! Bench: the analog-MVM hot path (the innermost loop of every solve).
 //!
-//! Compares the three crossbar noise fidelities, the fused analog score-net
-//! evaluation, and one closed-loop solver sub-step — the quantities the
-//! §Perf optimization pass tracks in EXPERIMENTS.md.
+//! Compares the three crossbar noise fidelities in both lanes — scalar
+//! `forward` (one vector) and batched `forward_batch` (B lanes per GEMM) —
+//! plus the fused analog score-net evaluation and one closed-loop solver
+//! sub-step.  Per-MVM nanoseconds land in `BENCH_mvm.json` so the perf
+//! trajectory is tracked across PRs.
 
 use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
 use memdiff::crossbar::{CrossbarLayer, NoiseModel};
 use memdiff::data::Meta;
 use memdiff::device::cell::CellParams;
-use memdiff::nn::{AnalogScoreNet, ScoreNet, ScoreWeights};
+use memdiff::nn::{AnalogScoreNet, BatchScratch, ScoreNet, ScoreWeights};
 use memdiff::util::bench;
 use memdiff::util::rng::Rng;
 use memdiff::util::tensor::Mat;
 
+/// Lanes per batched call — the coordinator's coalescing target.
+const B: usize = 64;
+
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(91);
+    let mut json: Vec<(&str, f64)> = vec![("batch_size", B as f64)];
 
-    bench::section("crossbar MVM 14x14 (one hidden layer)");
+    bench::section("crossbar MVM 14x14, scalar vs batched (per-MVM cost)");
     let wmat = Mat::from_fn(14, 14, |_, _| 0.6 * rng.gaussian_f32());
     let (layer, _) = CrossbarLayer::program(&wmat, CellParams::default(), 0.0012, &mut rng);
     let v = rng.gaussian_vec(14);
     let mut out = vec![0.0f32; 14];
-    for (label, nm) in [("ideal", NoiseModel::Ideal),
-                        ("read-fast (column stat)", NoiseModel::ReadFast),
-                        ("read-per-cell (exact)", NoiseModel::ReadPerCell)] {
-        let r = bench::bench(&format!("mvm {label}"), 150, || {
+    let vb: Vec<f32> = (0..B).flat_map(|_| v.iter().copied()).collect();
+    let mut outb = vec![0.0f32; B * 14];
+    for (label, key_s, key_b, nm) in [
+        ("ideal", "mvm_ideal_scalar_ns", "mvm_ideal_batched_ns",
+         NoiseModel::Ideal),
+        ("read-fast", "mvm_read_fast_scalar_ns", "mvm_read_fast_batched_ns",
+         NoiseModel::ReadFast),
+        ("read-per-cell", "mvm_read_per_cell_scalar_ns",
+         "mvm_read_per_cell_batched_ns", NoiseModel::ReadPerCell),
+    ] {
+        let r = bench::bench(&format!("mvm {label} scalar"), 150, || {
             layer.forward(&v, &mut out, nm, &mut rng);
             std::hint::black_box(&out);
         });
         bench::report(&r);
-    }
-
-    let meta = Meta::load_default()?;
-    let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json"))?;
-
-    bench::section("fused score-net eval (3 layers + embedding)");
-    for (label, nm) in [("ideal", NoiseModel::Ideal),
-                        ("read-fast", NoiseModel::ReadFast),
-                        ("read-per-cell", NoiseModel::ReadPerCell)] {
-        let net = AnalogScoreNet::from_conductances(&w, CellParams::default(), nm);
-        let mut o = [0.0f32; 2];
-        let r = bench::bench(&format!("score eval {label}"), 150, || {
-            net.eval(&[0.4, -0.2], 0.5, &[0.0, 0.0, 0.0], &mut o, &mut rng);
-            std::hint::black_box(&o);
+        json.push((key_s, r.mean_ns()));
+        let rb = bench::bench(&format!("mvm {label} batched (B={B})"), 150, || {
+            layer.forward_batch(&vb, &mut outb, B, nm, &mut rng);
+            std::hint::black_box(&outb);
         });
-        bench::report(&r);
+        bench::report(&rb);
+        let per_mvm = rb.mean_ns() / B as f64;
+        println!("  => {per_mvm:.1} ns/MVM batched  ({:.2}x vs scalar)",
+                 r.mean_ns() / per_mvm);
+        json.push((key_b, per_mvm));
     }
 
-    bench::section("closed-loop solver: one full solve (2000 substeps)");
-    let net = AnalogScoreNet::from_conductances(
-        &w, CellParams::default(), NoiseModel::ReadFast);
-    let solver = AnalogSolver::new(&net, SolverConfig::new(SolverMode::Sde)
-        .with_schedule(meta.sched));
-    let mut trace = Vec::new();
-    let r = bench::bench("solve 1 sample (SDE, 2000 substeps)", 400, || {
-        let mut x = [rng.gaussian_f32(), rng.gaussian_f32()];
-        solver.solve_into(&mut x, &[], &mut rng, 0, &mut trace);
-        std::hint::black_box(x);
-    });
-    bench::report(&r);
-    println!("  => per-substep cost {:?}", r.mean / 2000);
+    match Meta::load_default().and_then(|meta| {
+        let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json"))?;
+        Ok((meta, w))
+    }) {
+        Ok((meta, w)) => {
+            bench::section("fused score-net eval, scalar vs batched (per-eval cost)");
+            for (label, key_s, key_b, nm) in [
+                ("ideal", "eval_ideal_scalar_ns", "eval_ideal_batched_ns",
+                 NoiseModel::Ideal),
+                ("read-fast", "eval_read_fast_scalar_ns",
+                 "eval_read_fast_batched_ns", NoiseModel::ReadFast),
+                ("read-per-cell", "eval_read_per_cell_scalar_ns",
+                 "eval_read_per_cell_batched_ns", NoiseModel::ReadPerCell),
+            ] {
+                let net = AnalogScoreNet::from_conductances(&w, CellParams::default(), nm);
+                let mut o = [0.0f32; 2];
+                let r = bench::bench(&format!("score eval {label} scalar"), 150, || {
+                    net.eval(&[0.4, -0.2], 0.5, &[0.0, 0.0, 0.0], &mut o, &mut rng);
+                    std::hint::black_box(&o);
+                });
+                bench::report(&r);
+                json.push((key_s, r.mean_ns()));
+                let xs: Vec<f32> = (0..B).flat_map(|_| [0.4f32, -0.2]).collect();
+                let mut ob = vec![0.0f32; B * 2];
+                let mut scratch = BatchScratch::new();
+                let rb = bench::bench(
+                    &format!("score eval {label} batched (B={B})"), 150, || {
+                        net.eval_batch(&xs, 0.5, &[0.0, 0.0, 0.0], &mut ob,
+                                       &mut scratch, &mut rng);
+                        std::hint::black_box(&ob);
+                    });
+                bench::report(&rb);
+                let per_eval = rb.mean_ns() / B as f64;
+                println!("  => {per_eval:.1} ns/eval batched  ({:.2}x vs scalar)",
+                         r.mean_ns() / per_eval);
+                json.push((key_b, per_eval));
+            }
+
+            bench::section("closed-loop solver: one full solve (2000 substeps)");
+            let net = AnalogScoreNet::from_conductances(
+                &w, CellParams::default(), NoiseModel::ReadFast);
+            let solver = AnalogSolver::new(&net, SolverConfig::new(SolverMode::Sde)
+                .with_schedule(meta.sched));
+            let mut trace = Vec::new();
+            let r = bench::bench("solve 1 sample (SDE, 2000 substeps)", 400, || {
+                let mut x = [rng.gaussian_f32(), rng.gaussian_f32()];
+                solver.solve_into(&mut x, &[], &mut rng, 0, &mut trace);
+                std::hint::black_box(x);
+            });
+            bench::report(&r);
+            println!("  => per-substep cost {:?}", r.mean / 2000);
+            json.push(("solve_scalar_ns", r.mean_ns()));
+        }
+        Err(e) => bench::row(&["score-net sections", &format!("skipped: {e}")]),
+    }
+
+    bench::write_json("BENCH_mvm.json", &json)?;
     Ok(())
 }

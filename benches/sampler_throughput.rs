@@ -3,7 +3,11 @@
 //! Measures samples/second for (a) the analog simulator, (b) the rust
 //! digital baseline, (c) the AOT PJRT path, and (d) the full batching
 //! service under a mixed load — the serving-layer numbers a deployment
-//! would track.
+//! would track.  Every engine is measured in both lanes: scalar
+//! (per-sample reference) and batched (the production matrix-matrix path
+//! the coordinator routes through), and the results land in
+//! `BENCH_sampler_throughput.json` so the perf trajectory is tracked
+//! across PRs.
 
 use std::sync::Arc;
 
@@ -20,43 +24,88 @@ use memdiff::runtime::ArtifactStore;
 use memdiff::util::bench;
 use memdiff::util::rng::Rng;
 
+/// The batch size the coordinator coalesces to (matches the largest AOT
+/// artifact batch) — the lane-comparison unit of this bench.
+const B: usize = 64;
+
 fn main() -> anyhow::Result<()> {
     let meta = Meta::load_default()?;
     let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json"))?;
     let mut rng = Rng::new(101);
 
-    bench::section("single-thread sampler throughput (samples/s)");
+    bench::section("analog solver throughput, scalar vs batched (samples/s)");
 
     let net = AnalogScoreNet::from_conductances(
         &w, CellParams::default(), NoiseModel::ReadFast);
     let solver = AnalogSolver::new(&net, SolverConfig::new(SolverMode::Sde)
         .with_schedule(meta.sched).with_substeps(2000));
     let t0 = std::time::Instant::now();
-    let n = 200;
+    let n = 192;
     std::hint::black_box(solver.solve_batch(n, &[], &mut rng));
-    let dt = t0.elapsed().as_secs_f64();
-    bench::row(&["analog sim (2000 substeps)",
-                 &format!("{:.1} samples/s", n as f64 / dt)]);
+    let analog_scalar = n as f64 / t0.elapsed().as_secs_f64();
+    bench::row(&["analog scalar (2000 substeps)",
+                 &format!("{analog_scalar:.1} samples/s")]);
+
+    let t0 = std::time::Instant::now();
+    for _ in 0..(n / B) {
+        std::hint::black_box(solver.solve_batched(B, &[], &mut rng));
+    }
+    let analog_batched = n as f64 / t0.elapsed().as_secs_f64();
+    let label = format!("analog batched (B={B})");
+    let val = format!("{analog_batched:.1} samples/s  ({:.2}x)",
+                      analog_batched / analog_scalar);
+    bench::row(&[label.as_str(), val.as_str()]);
+
+    bench::section("rust digital throughput, scalar vs batched (samples/s)");
 
     let dig = DigitalScoreNet::new(w.clone());
     let sampler = DigitalSampler::new(&dig, SamplerMode::Sde).with_schedule(meta.sched);
+    let steps = 128;
+    let reps_scalar = 16;
     let t0 = std::time::Instant::now();
-    let n = 2000;
-    std::hint::black_box(sampler.sample_batch(n, &[], 128, &mut rng));
-    let dt = t0.elapsed().as_secs_f64();
-    bench::row(&["rust digital (128 steps)",
-                 &format!("{:.0} samples/s", n as f64 / dt)]);
-
-    let store = ArtifactStore::open_default()?;
-    store.warmup(64)?;
-    let t0 = std::time::Instant::now();
-    let n = 1024;
-    for _ in 0..(n / 64) {
-        std::hint::black_box(store.sample_digital(64, 128, true, None, &mut rng)?);
+    for _ in 0..reps_scalar {
+        std::hint::black_box(sampler.sample_batch(B, &[], steps, &mut rng));
     }
-    let dt = t0.elapsed().as_secs_f64();
-    bench::row(&["PJRT artifacts (128 steps, b=64)",
-                 &format!("{:.0} samples/s", n as f64 / dt)]);
+    let digital_scalar =
+        (reps_scalar * B) as f64 / t0.elapsed().as_secs_f64();
+    let label = format!("rust digital scalar ({steps} steps, B={B})");
+    let val = format!("{digital_scalar:.0} samples/s");
+    bench::row(&[label.as_str(), val.as_str()]);
+
+    let reps_batched = 64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps_batched {
+        std::hint::black_box(sampler.sample_batched(B, &[], steps, &mut rng));
+    }
+    let digital_batched =
+        (reps_batched * B) as f64 / t0.elapsed().as_secs_f64();
+    let digital_speedup = digital_batched / digital_scalar;
+    let label = format!("rust digital batched ({steps} steps, B={B})");
+    let val = format!("{digital_batched:.0} samples/s  ({digital_speedup:.2}x)");
+    bench::row(&[label.as_str(), val.as_str()]);
+
+    // graceful: a failure here must not abort the bench (the JSON artifact
+    // below still has to be written)
+    let mut pjrt_sps = f64::NAN;
+    let mut pjrt = || -> anyhow::Result<f64> {
+        let store = ArtifactStore::open_default()?;
+        store.warmup(64)?;
+        let t0 = std::time::Instant::now();
+        let n = 1024;
+        for _ in 0..(n / 64) {
+            std::hint::black_box(
+                store.sample_digital(64, steps, true, None, &mut rng)?);
+        }
+        Ok(n as f64 / t0.elapsed().as_secs_f64())
+    };
+    match pjrt() {
+        Ok(sps) => {
+            pjrt_sps = sps;
+            bench::row(&["PJRT artifacts (128 steps, b=64)",
+                         &format!("{pjrt_sps:.0} samples/s")]);
+        }
+        Err(e) => bench::row(&["PJRT artifacts", &format!("skipped: {e}")]),
+    }
 
     bench::section("coordinator throughput (4 workers, mixed load)");
     let engine = Arc::new(RustDigitalEngine {
@@ -66,7 +115,7 @@ fn main() -> anyhow::Result<()> {
     let service = Arc::new(Service::start(engine, None, ServiceConfig {
         workers: 4,
         batcher: BatcherConfig {
-            max_batch_samples: 64,
+            max_batch_samples: B,
             linger: std::time::Duration::from_millis(1),
         },
         seed: 3,
@@ -88,9 +137,21 @@ fn main() -> anyhow::Result<()> {
     for rx in rxs {
         samples += rx.recv()??.samples.len() / 2;
     }
-    let dt = t0.elapsed().as_secs_f64();
-    bench::row(&["service (100-step SDE)",
-                 &format!("{:.0} samples/s over {total} requests", samples as f64 / dt)]);
+    let service_sps = samples as f64 / t0.elapsed().as_secs_f64();
+    bench::row(&["service (100-step SDE, batched lane)",
+                 &format!("{service_sps:.0} samples/s over {total} requests")]);
     bench::row(&["service metrics", &service.metrics.snapshot().report()]);
+
+    bench::write_json("BENCH_sampler_throughput.json", &[
+        ("batch_size", B as f64),
+        ("digital_scalar_samples_per_s", digital_scalar),
+        ("digital_batched_samples_per_s", digital_batched),
+        ("digital_batched_speedup", digital_speedup),
+        ("analog_scalar_samples_per_s", analog_scalar),
+        ("analog_batched_samples_per_s", analog_batched),
+        ("analog_batched_speedup", analog_batched / analog_scalar),
+        ("pjrt_samples_per_s", pjrt_sps),
+        ("service_samples_per_s", service_sps),
+    ])?;
     Ok(())
 }

@@ -37,7 +37,7 @@ use super::integrator::Integrator;
 use super::multiplier::Multiplier;
 use crate::clamp_voltage;
 use crate::diffusion::schedule::VpSchedule;
-use crate::nn::ScoreNet;
+use crate::nn::{BatchScratch, ScoreNet};
 use crate::util::rng::Rng;
 
 /// Probability-flow ODE or reverse SDE (paper Eq. 2 / Eq. 1).
@@ -205,6 +205,8 @@ impl<'a> AnalogSolver<'a> {
     }
 
     /// Batch solve from N(0, I) pre-charges; returns interleaved samples.
+    /// Scalar reference lane: one trajectory at a time (a physical PCB has
+    /// one loop; see [`Self::solve_batched`] for the multi-lane view).
     pub fn solve_batch(&self, n: usize, onehot: &[f32], rng: &mut Rng) -> Vec<f32> {
         let dim = self.net.dim();
         let mut out = vec![0.0f32; n * dim];
@@ -217,6 +219,85 @@ impl<'a> AnalogSolver<'a> {
             self.solve_into(x, onehot, rng, 0, &mut trace);
         }
         out
+    }
+
+    /// Batched lane: advance all `n` trajectories per sub-step, with every
+    /// NN inference a single [`ScoreNet::eval_batch`] GEMM sweep — the
+    /// simulator view of a macro bank driving n concurrent integrator
+    /// loops, which is how the projected system amortizes the crossbar
+    /// model over many generations.  Priors draw from `rng` lane-by-lane in
+    /// the same order as [`Self::solve_batch`]; the SDE noise-DAC
+    /// increments come from per-lane streams split off the base rng,
+    /// keeping lanes decorrelated and the result deterministic per
+    /// (seed, n).  In ODE mode with ideal (noise-free) evaluation this lane
+    /// is bitwise identical to the scalar lane; noisy modes agree in
+    /// distribution (parity-tested).
+    pub fn solve_batched(&self, n: usize, onehot: &[f32], rng: &mut Rng) -> Vec<f32> {
+        let dim = self.net.dim();
+        let len = n * dim;
+        let nsub = self.cfg.substeps;
+        let d_tau = self.cfg.t_solve_s / nsub as f64;
+        let t_span = self.cfg.sched.t_end - self.cfg.sched.eps_t;
+        let dt_alg = t_span / nsub as f64;
+
+        let mut x = vec![0.0f32; len];
+        for v in x.iter_mut() {
+            *v = rng.gaussian_f32();
+        }
+        let mut lane_rngs: Vec<Rng> = (0..n).map(|_| rng.split()).collect();
+
+        // one integrator bank per lane·dimension, pre-charged with priors
+        let mut ints: Vec<Integrator> = x
+            .iter()
+            .map(|&x0| {
+                let mut integ = Integrator::new(self.cfg.rc_s);
+                if let Some(tau) = self.cfg.leak_tau_s {
+                    integ = integ.with_leak(tau);
+                }
+                integ.precharge(x0);
+                integ
+            })
+            .collect();
+
+        let mut net_out = vec![0.0f32; len];
+        let mut scratch = BatchScratch::new();
+        let loop_gain = (t_span / self.cfg.t_solve_s * self.cfg.rc_s) as f32;
+
+        for k in 0..nsub {
+            let tau = k as f64 * d_tau;
+            let t = self.cfg.sched.t_end - t_span * (tau / self.cfg.t_solve_s);
+            let beta = self.cfg.sched.beta(t);
+            let w_score = self.cfg.sched.g2_over_sigma(t)
+                * match self.cfg.mode {
+                    SolverMode::Sde => 1.0,
+                    SolverMode::Ode => 0.5,
+                };
+            let w_drift = 0.5 * beta;
+
+            // one batched NN inference for all lanes
+            match self.cfg.guidance {
+                Some(lam) => self.net.eval_cfg_batch(&x, t as f32, onehot, lam,
+                                                     &mut net_out, &mut scratch,
+                                                     rng),
+                None => self.net.eval_batch(&x, t as f32, onehot, &mut net_out,
+                                            &mut scratch, rng),
+            }
+
+            for (b, lane) in lane_rngs.iter_mut().enumerate() {
+                for i in b * dim..(b + 1) * dim {
+                    let drift_term = self.mul_drift.mul(w_drift as f32, x[i]);
+                    let score_term =
+                        self.mul_score.mul(w_score as f32, net_out[i]);
+                    let mut v_sum = drift_term - score_term;
+                    if self.cfg.mode == SolverMode::Sde {
+                        v_sum += ((beta / dt_alg).sqrt() * lane.gaussian()) as f32;
+                    }
+                    let v_in = v_sum * loop_gain;
+                    x[i] = clamp_voltage(ints[i].step(v_in, d_tau));
+                }
+            }
+        }
+        x
     }
 }
 
@@ -340,6 +421,40 @@ mod tests {
     fn states_respect_protective_clamp() {
         let pts = gaussian_solve(SolverMode::Sde, 800, 400);
         for &v in &pts {
+            assert!((-2.0..=4.0).contains(&v));
+        }
+    }
+
+    fn gaussian_solve_batched(mode: SolverMode, substeps: usize, n: usize) -> Vec<f32> {
+        let net = GaussianNet { s0: 0.5, sched: VpSchedule::default() };
+        let cfg = SolverConfig::new(mode).with_substeps(substeps);
+        let solver = AnalogSolver::new(&net, cfg);
+        let mut rng = Rng::new(7);
+        solver.solve_batched(n, &[], &mut rng)
+    }
+
+    #[test]
+    fn batched_ode_bitwise_matches_scalar() {
+        // deterministic loop (ODE, noise-free net): batched lane must
+        // reproduce the per-trajectory lane exactly
+        let scalar = gaussian_solve(SolverMode::Ode, 300, 7);
+        let batched = gaussian_solve_batched(SolverMode::Ode, 300, 7);
+        assert_eq!(scalar, batched);
+    }
+
+    #[test]
+    fn batched_sde_transports_gaussian() {
+        let pts = gaussian_solve_batched(SolverMode::Sde, 2000, 1500);
+        let s = std_x(&pts);
+        assert!((s - 0.5).abs() < 0.08, "std={s}");
+    }
+
+    #[test]
+    fn batched_deterministic_and_clamped() {
+        let a = gaussian_solve_batched(SolverMode::Sde, 500, 30);
+        let b = gaussian_solve_batched(SolverMode::Sde, 500, 30);
+        assert_eq!(a, b);
+        for &v in &a {
             assert!((-2.0..=4.0).contains(&v));
         }
     }

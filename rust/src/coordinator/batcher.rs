@@ -11,7 +11,7 @@
 //!    single oversized request needs its own batch;
 //! 4. requests with the same key dequeue FIFO.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -55,6 +55,10 @@ struct Queued {
 struct State {
     queue: VecDeque<Queued>,
     closed: bool,
+    /// Running total of queued samples per batch key, maintained on
+    /// submit/assemble so `next_batch` reads the head key's fill level in
+    /// O(1) per condvar wakeup instead of rescanning the whole queue.
+    key_samples: HashMap<u64, usize>,
 }
 
 /// Thread-safe dynamic batcher.
@@ -68,7 +72,11 @@ impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Self {
         Batcher {
             cfg,
-            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                closed: false,
+                key_samples: HashMap::new(),
+            }),
             cv: Condvar::new(),
         }
     }
@@ -79,6 +87,7 @@ impl Batcher {
         if st.closed {
             return false;
         }
+        *st.key_samples.entry(req.batch_key()).or_insert(0) += req.n_samples;
         st.queue.push_back(Queued { req, at: Instant::now() });
         self.cv.notify_one();
         true
@@ -105,14 +114,11 @@ impl Batcher {
         loop {
             if let Some(head_at) = st.queue.front().map(|q| q.at) {
                 // Wait until the head's linger expires or enough same-key
-                // work arrives to fill a batch.
+                // work arrives to fill a batch.  The per-key running count
+                // makes this an O(1) lookup per wakeup.
                 let key = st.queue.front().unwrap().req.batch_key();
-                let same_key_samples: usize = st
-                    .queue
-                    .iter()
-                    .filter(|q| q.req.batch_key() == key)
-                    .map(|q| q.req.n_samples)
-                    .sum();
+                let same_key_samples: usize =
+                    st.key_samples.get(&key).copied().unwrap_or(0);
                 let deadline = head_at + self.cfg.linger;
                 let now = Instant::now();
                 if same_key_samples >= self.cfg.max_batch_samples
@@ -153,6 +159,13 @@ impl Batcher {
             requests.push(q.req);
             if total >= self.cfg.max_batch_samples {
                 break;
+            }
+        }
+        // keep the running per-key count exact
+        if let Some(cnt) = st.key_samples.get_mut(&key) {
+            *cnt = cnt.saturating_sub(total);
+            if *cnt == 0 {
+                st.key_samples.remove(&key);
             }
         }
         Batch { key, requests }
@@ -278,6 +291,40 @@ mod tests {
         assert_eq!(batch.total_samples(), 4);
         assert!(waited >= Duration::from_millis(10), "{waited:?}");
         b.close();
+    }
+
+    #[test]
+    fn key_counts_stay_exact_across_cycles() {
+        // interleave submits and pops: the running per-key count must keep
+        // matching a full queue rescan at every step
+        let b = Batcher::new(BatcherConfig {
+            max_batch_samples: 16,
+            linger: Duration::from_millis(0),
+        });
+        let mut id = 0u64;
+        for round in 0..4 {
+            for k in 0..3usize {
+                b.submit(req(id, k, 3 + round));
+                id += 1;
+            }
+            {
+                let st = b.state.lock().unwrap();
+                for (&key, &cnt) in &st.key_samples {
+                    let rescan: usize = st
+                        .queue
+                        .iter()
+                        .filter(|q| q.req.batch_key() == key)
+                        .map(|q| q.req.n_samples)
+                        .sum();
+                    assert_eq!(cnt, rescan, "key {key} round {round}");
+                }
+            }
+            let batch = b.next_batch().unwrap();
+            assert!(!batch.requests.is_empty());
+        }
+        // drain the rest; the map must end empty
+        let _ = drain(&b);
+        assert!(b.state.lock().unwrap().key_samples.is_empty());
     }
 
     #[test]

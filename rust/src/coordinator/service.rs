@@ -3,7 +3,10 @@
 //! A [`Service`] owns a [`Batcher`] and a pool of worker threads.  Each
 //! emitted batch runs on one worker against the configured [`Engine`];
 //! results are split back to the originating requests in FIFO order and
-//! delivered over per-request channels.
+//! delivered over per-request channels.  The rust engines execute each
+//! batch through the batched lane (`sample_batched` / `solve_batched`), so
+//! a coalesced 64-sample batch is one sequence of B×dim GEMMs rather than
+//! 64 independent single-vector solves — the coalescing actually pays off.
 //!
 //! The [`ModeGate`] mirrors the PCB's SPDT switches (Methods): the macro
 //! is either in *computation* mode (any number of concurrent solves) or
@@ -86,7 +89,9 @@ impl Engine for AnalogEngine {
             cfg = cfg.with_guidance(guidance);
         }
         let solver = AnalogSolver::new(&self.net, cfg);
-        Ok(solver.solve_batch(n, onehot, rng))
+        // batched lane: all n lanes advance per sub-step, so the batcher's
+        // coalescing amortizes every crossbar inference over the batch
+        Ok(solver.solve_batched(n, onehot, rng))
     }
 }
 
@@ -119,7 +124,8 @@ impl Engine for RustDigitalEngine {
         if conditional {
             s = s.with_guidance(guidance);
         }
-        let (pts, _) = s.sample_batch(n, onehot, steps, rng);
+        // batched lane: B×dim GEMMs per step instead of B vector MVMs
+        let (pts, _) = s.sample_batched(n, onehot, steps, rng);
         Ok(pts)
     }
 }

@@ -14,6 +14,23 @@
 //! Large logical matrices are split into row/column tiles of at most
 //! [`MACRO_DIM`]; partial sums across row tiles accumulate at the TIA
 //! input node, as in a multi-macro bank.
+//!
+//! ## Scalar vs batched path
+//!
+//! [`CrossbarLayer::forward`] evaluates one input vector — the
+//! hardware-faithful single-solve view.  [`CrossbarLayer::forward_batch`]
+//! evaluates B input lanes against the same conductance cache in one
+//! blocked GEMM (`Ideal`), or one fused mean+variance sweep per lane
+//! (`ReadFast`, preserving the exact per-cell `frac²·Σ(v·G)²` column
+//! moments), with the shared-negative-weight subtraction and TIA gain
+//! applied per lane afterwards.  Choose `forward` for single trajectories
+//! and device-physics studies (`ReadPerCell` always re-reads every cell and
+//! gains nothing from batching); choose `forward_batch` whenever the caller
+//! already holds B concurrent states — the serving coordinator's coalesced
+//! batches route here so the model is amortized over all lanes.  Under
+//! `Ideal` the two paths are bitwise identical per lane; under `ReadFast`
+//! they are statistically identical (same column moments, different RNG
+//! draw order) — both asserted by the batched-parity suite.
 
 use super::mapper::{map_layer, Mapping};
 use super::noise::NoiseModel;
@@ -21,7 +38,7 @@ use super::G_FIXED_MS;
 use crate::device::array::{Macro, ProgramStats, MACRO_DIM};
 use crate::device::cell::CellParams;
 use crate::util::rng::Rng;
-use crate::util::tensor::Mat;
+use crate::util::tensor::{matmul_into, Mat};
 
 /// A weight matrix deployed on macro tiles.
 pub struct CrossbarLayer {
@@ -187,6 +204,89 @@ impl CrossbarLayer {
         }
     }
 
+    /// Batched analog forward: `v_in` holds `batch` input lanes of length
+    /// `n_in` (row-major, lane-contiguous), `out` receives `batch` lanes of
+    /// length `n_out`.  One GEMM against the conductance cache (`Ideal`) or
+    /// one fused mean+variance sweep per lane (`ReadFast`), followed by the
+    /// batched shared-negative-weight subtraction — the single summing
+    /// amplifier per macro serves every lane, so its `G_FIXED·Σv` term is
+    /// computed per lane from the same cached conductances.
+    /// `ReadPerCell` falls back to the exact per-lane device walk.
+    pub fn forward_batch(&self, v_in: &[f32], out: &mut [f32], batch: usize,
+                         noise: NoiseModel, rng: &mut Rng) {
+        assert_eq!(v_in.len(), batch * self.rows);
+        assert_eq!(out.len(), batch * self.cols);
+        if noise == NoiseModel::ReadPerCell {
+            // exact device path: no GEMM to amortize, every cell re-reads
+            for (vrow, orow) in v_in
+                .chunks_exact(self.rows)
+                .zip(out.chunks_exact_mut(self.cols))
+            {
+                self.forward(vrow, orow, noise, rng);
+            }
+            return;
+        }
+        let frac = match noise {
+            NoiseModel::Ideal => 0.0,
+            NoiseModel::ReadFast => self.read_noise_frac,
+            NoiseModel::ReadPerCell => unreachable!(),
+        };
+        self.forward_fast_batch(v_in, out, batch, frac, rng);
+        // batched shared negative weight + TIA gain, per lane (same float
+        // ops as the scalar epilogue so Ideal stays bitwise equal)
+        for (vrow, orow) in v_in
+            .chunks_exact(self.rows)
+            .zip(out.chunks_exact_mut(self.cols))
+        {
+            let v_sum: f32 = vrow.iter().sum();
+            let neg = G_FIXED_MS * v_sum;
+            for o in orow.iter_mut() {
+                *o = self.gain * (*o - neg);
+            }
+        }
+    }
+
+    /// Batched statistical path: one blocked GEMM when noise-free, or a
+    /// fused per-lane mean+variance sweep reproducing the scalar
+    /// [`Self::forward_fast`] moments (one column Gaussian per lane).
+    fn forward_fast_batch(&self, v_in: &[f32], out: &mut [f32], batch: usize,
+                          frac: f32, rng: &mut Rng) {
+        out.fill(0.0);
+        let g = self.g_cache.as_slice();
+        let (k, n) = (self.rows, self.cols);
+        if frac == 0.0 {
+            matmul_into(v_in, g, out, batch, k, n);
+            return;
+        }
+        let mut var_stack = [0.0f32; MACRO_DIM * 4];
+        let mut var_heap = Vec::new();
+        let var: &mut [f32] = if n <= var_stack.len() {
+            &mut var_stack[..n]
+        } else {
+            var_heap.resize(n, 0.0);
+            &mut var_heap
+        };
+        for (vrow, orow) in v_in.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+            var.fill(0.0);
+            for (r, &v) in vrow.iter().enumerate() {
+                if v == 0.0 {
+                    continue;
+                }
+                let grow = &g[r * n..(r + 1) * n];
+                for ((o, vc), &gc) in
+                    orow.iter_mut().zip(var.iter_mut()).zip(grow)
+                {
+                    let term = v * gc;
+                    *o += term;
+                    *vc += term * term;
+                }
+            }
+            for (o, vc) in orow.iter_mut().zip(var.iter()) {
+                *o += frac * vc.sqrt() * rng.gaussian_f32();
+            }
+        }
+    }
+
     /// Exact device-level path: every cell re-read with noise.
     fn forward_per_cell(&self, v_in: &[f32], out: &mut [f32], rng: &mut Rng) {
         out.fill(0.0);
@@ -207,6 +307,10 @@ impl CrossbarLayer {
     /// Fast statistical path: ideal MVM against the cache plus one
     /// column-level Gaussian with the exact per-cell variance
     /// `frac² Σ_r (v_r G_rc)²` (see [`NoiseModel::ReadFast`]).
+    ///
+    /// Intentionally NOT implemented as `forward_fast_batch(.., 1, ..)`:
+    /// the scalar and batched lanes stay independent implementations so
+    /// the parity suite cross-checks one against the other.
     fn forward_fast(&self, v_in: &[f32], out: &mut [f32], frac: f32,
                     rng: &mut Rng) {
         out.fill(0.0);
@@ -342,6 +446,79 @@ mod tests {
         assert!((m1 - m2).abs() < 0.02 * m1.abs().max(0.1), "means {m1} vs {m2}");
         assert!((s1 - s2).abs() / s1.max(1e-9) < 0.15, "stds {s1} vs {s2}");
         assert!(s1 > 0.0);
+    }
+
+    #[test]
+    fn forward_batch_matches_scalar_bitwise_when_ideal() {
+        let w = test_weights(14, 14, 21);
+        let m = super::super::mapper::map_layer(&w);
+        let layer =
+            CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet_params());
+        let batch = 6;
+        let mut rng = Rng::new(22);
+        let v: Vec<f32> = (0..batch * 14).map(|_| rng.gaussian_f32()).collect();
+        let mut batched = vec![0.0f32; batch * 14];
+        layer.forward_batch(&v, &mut batched, batch, NoiseModel::Ideal, &mut rng);
+        let mut scalar = vec![0.0f32; 14];
+        for b in 0..batch {
+            layer.forward(&v[b * 14..(b + 1) * 14], &mut scalar,
+                          NoiseModel::Ideal, &mut rng);
+            assert_eq!(&batched[b * 14..(b + 1) * 14], scalar.as_slice(),
+                       "lane {b}");
+        }
+    }
+
+    #[test]
+    fn forward_batch_read_fast_matches_scalar_moments() {
+        let w = test_weights(14, 14, 23);
+        let params = CellParams::default(); // 1% read noise
+        let mut rng = Rng::new(24);
+        let (layer, _) = CrossbarLayer::program(&w, params, 0.0005, &mut rng);
+        let v: Vec<f32> = (0..14).map(|i| 0.15 * (i as f32 - 7.0) / 7.0 + 0.2).collect();
+        let batch = 8;
+        let vb: Vec<f32> = (0..batch).flat_map(|_| v.iter().copied()).collect();
+
+        let trials = 600;
+        let mut col0_scalar = Vec::with_capacity(trials * batch);
+        let mut col0_batch = Vec::with_capacity(trials * batch);
+        let mut out = vec![0.0f32; 14];
+        let mut outb = vec![0.0f32; batch * 14];
+        for _ in 0..trials {
+            for _ in 0..batch {
+                layer.forward(&v, &mut out, NoiseModel::ReadFast, &mut rng);
+                col0_scalar.push(out[0]);
+            }
+            layer.forward_batch(&vb, &mut outb, batch, NoiseModel::ReadFast,
+                                &mut rng);
+            for b in 0..batch {
+                col0_batch.push(outb[b * 14]);
+            }
+        }
+        let (m1, s1) = (stats::mean(&col0_scalar), stats::std(&col0_scalar));
+        let (m2, s2) = (stats::mean(&col0_batch), stats::std(&col0_batch));
+        assert!((m1 - m2).abs() < 0.02 * m1.abs().max(0.1), "means {m1} vs {m2}");
+        assert!((s1 - s2).abs() / s1.max(1e-9) < 0.15, "stds {s1} vs {s2}");
+        assert!(s1 > 0.0);
+    }
+
+    #[test]
+    fn forward_batch_per_cell_falls_back_per_lane() {
+        let w = test_weights(10, 8, 25);
+        let mut rng = Rng::new(26);
+        let (layer, _) = CrossbarLayer::program(&w, quiet_params(), 0.0005, &mut rng);
+        let batch = 3;
+        let v: Vec<f32> = (0..batch * 10).map(|_| rng.gaussian_f32()).collect();
+        let mut batched = vec![0.0f32; batch * 8];
+        // quiet params ⇒ per-cell path is deterministic, so the fallback
+        // must equal the scalar walk exactly
+        layer.forward_batch(&v, &mut batched, batch, NoiseModel::ReadPerCell,
+                            &mut rng);
+        let mut scalar = vec![0.0f32; 8];
+        for b in 0..batch {
+            layer.forward(&v[b * 10..(b + 1) * 10], &mut scalar,
+                          NoiseModel::ReadPerCell, &mut rng);
+            assert_eq!(&batched[b * 8..(b + 1) * 8], scalar.as_slice());
+        }
     }
 
     #[test]

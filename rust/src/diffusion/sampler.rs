@@ -13,11 +13,27 @@
 //!
 //! followed by the protective state clamp — identical semantics to the
 //! python `ref.euler_step` + clamp, and to the AOT `step_*` artifacts.
+//!
+//! ## Scalar vs batched path
+//!
+//! [`DigitalSampler::sample_into`] / [`DigitalSampler::sample_batch`] are
+//! the per-sample reference lane: one trajectory at a time, N tiny
+//! single-vector MVMs per step.  [`DigitalSampler::sample_batched`] is the
+//! production lane: it advances all B states per timestep through
+//! [`ScoreNet::eval_batch`] (B×dim GEMMs, embedding shared across lanes,
+//! zero per-step allocation) with per-lane RNG streams split from the base
+//! seed, so each lane's noise depends only on the seed and its lane index —
+//! deterministic and independent of how requests were coalesced.  The
+//! engines behind the serving coordinator route through the batched lane;
+//! use the scalar lane for single-trajectory studies and as the parity
+//! oracle.  In ODE mode (no Wiener draws) the two lanes are bitwise
+//! identical; in SDE mode they agree in distribution (parity-tested).
 
 use super::schedule::VpSchedule;
 use crate::clamp_voltage;
-use crate::nn::ScoreNet;
+use crate::nn::{BatchScratch, ScoreNet};
 use crate::util::rng::Rng;
+use crate::util::tensor::scratch_slice;
 
 /// Time-stepping scheme.  Heun and RK4 upgrade the probability-flow ODE
 /// only; for the SDE they degrade to Euler–Maruyama (strong order 1/2 is
@@ -97,26 +113,69 @@ impl<'a> DigitalSampler<'a> {
         }
     }
 
+    /// Batched reverse-time drift over `n` lane-contiguous states — the
+    /// same per-element float ops as [`Self::rhs`], applied to B lanes.
+    #[inline]
+    fn rhs_batch(&self, x: &[f32], net_out: &[f32], t: f64, out: &mut [f32]) {
+        let beta = self.sched.beta(t);
+        let sigma = self.sched.sigma(t);
+        let score_coeff = match self.mode {
+            SamplerMode::Sde => beta / sigma,
+            SamplerMode::Ode => 0.5 * beta / sigma,
+        };
+        for ((o, &xv), &nv) in out.iter_mut().zip(x).zip(net_out) {
+            let drift = -0.5 * beta * xv as f64;
+            *o = (drift + score_coeff * nv as f64) as f32;
+        }
+    }
+
+    #[inline]
+    fn net_eval_batch(&self, xs: &[f32], t: f64, onehot: &[f32],
+                      out: &mut [f32], scratch: &mut BatchScratch,
+                      rng: &mut Rng) {
+        match self.guidance {
+            Some(lam) => self.net.eval_cfg_batch(xs, t as f32, onehot, lam,
+                                                out, scratch, rng),
+            None => self.net.eval_batch(xs, t as f32, onehot, out, scratch, rng),
+        }
+    }
+
+    /// Score-net inferences per integration step (CFG doubles them).
+    fn evals_per_step(&self) -> usize {
+        (match (self.kind, self.mode) {
+            (SamplerKind::Heun, SamplerMode::Ode) => 2,
+            (SamplerKind::Rk4, SamplerMode::Ode) => 4,
+            _ => 1,
+        }) * if self.guidance.is_some() { 2 } else { 1 }
+    }
+
     /// Generate one sample of dimension `dim` with `n_steps` integration
     /// steps.  `onehot` selects the condition (empty or all-zero =
     /// unconditional).  Returns the final state; `x` doubles as the
     /// initial condition buffer (pass N(0,I) noise).
     pub fn sample_into(&self, x: &mut [f32], onehot: &[f32], n_steps: usize,
                        rng: &mut Rng) {
+        let mut s = StepScratch::default();
+        self.sample_into_scratch(x, onehot, n_steps, rng, &mut s);
+    }
+
+    /// Scalar stepper with caller-owned scratch (the per-sample loop of
+    /// [`Self::sample_batch`] reuses one scratch across all samples).
+    fn sample_into_scratch(&self, x: &mut [f32], onehot: &[f32],
+                           n_steps: usize, rng: &mut Rng, s: &mut StepScratch) {
         let dim = x.len();
         let (dt, ts) = self.sched.reverse_grid(n_steps);
-        let mut net_out = vec![0.0f32; dim];
-        let mut rhs = vec![0.0f32; dim];
-        let mut rhs2 = vec![0.0f32; dim];
-        let mut x_pred = vec![0.0f32; dim];
-
-        let mut k2 = vec![0.0f32; dim];
-        let mut k3 = vec![0.0f32; dim];
-        let mut k4 = vec![0.0f32; dim];
+        let net_out = scratch_slice(&mut s.net_out, dim);
+        let rhs = scratch_slice(&mut s.rhs, dim);
+        let rhs2 = scratch_slice(&mut s.rhs2, dim);
+        let x_pred = scratch_slice(&mut s.x_pred, dim);
+        let k2 = scratch_slice(&mut s.k2, dim);
+        let k3 = scratch_slice(&mut s.k3, dim);
+        let k4 = scratch_slice(&mut s.k4, dim);
 
         for &t in &ts {
-            self.net_eval(x, t, onehot, &mut net_out, rng);
-            self.rhs(x, &net_out, t, &mut rhs);
+            self.net_eval(x, t, onehot, net_out, rng);
+            self.rhs(x, net_out, t, rhs);
             match (self.kind, self.mode) {
                 (SamplerKind::Euler, _)
                 | (SamplerKind::Heun, SamplerMode::Sde)
@@ -138,8 +197,8 @@ impl<'a> DigitalSampler<'a> {
                     for i in 0..dim {
                         x_pred[i] = clamp_voltage(x[i] - (dt as f32) * rhs[i]);
                     }
-                    self.net_eval(&x_pred, t1, onehot, &mut net_out, rng);
-                    self.rhs(&x_pred, &net_out, t1, &mut rhs2);
+                    self.net_eval(x_pred, t1, onehot, net_out, rng);
+                    self.rhs(x_pred, net_out, t1, rhs2);
                     for i in 0..dim {
                         x[i] = clamp_voltage(
                             x[i] - (dt as f32) * 0.5 * (rhs[i] + rhs2[i]),
@@ -155,20 +214,20 @@ impl<'a> DigitalSampler<'a> {
                     for i in 0..dim {
                         x_pred[i] = clamp_voltage(x[i] + 0.5 * h * rhs[i]);
                     }
-                    self.net_eval(&x_pred, tm, onehot, &mut net_out, rng);
-                    self.rhs(&x_pred, &net_out, tm, &mut k2);
+                    self.net_eval(x_pred, tm, onehot, net_out, rng);
+                    self.rhs(x_pred, net_out, tm, k2);
                     // k3 at midpoint using k2
                     for i in 0..dim {
                         x_pred[i] = clamp_voltage(x[i] + 0.5 * h * k2[i]);
                     }
-                    self.net_eval(&x_pred, tm, onehot, &mut net_out, rng);
-                    self.rhs(&x_pred, &net_out, tm, &mut k3);
+                    self.net_eval(x_pred, tm, onehot, net_out, rng);
+                    self.rhs(x_pred, net_out, tm, k3);
                     // k4 at endpoint using k3
                     for i in 0..dim {
                         x_pred[i] = clamp_voltage(x[i] + h * k3[i]);
                     }
-                    self.net_eval(&x_pred, t1, onehot, &mut net_out, rng);
-                    self.rhs(&x_pred, &net_out, t1, &mut k4);
+                    self.net_eval(x_pred, t1, onehot, net_out, rng);
+                    self.rhs(x_pred, net_out, t1, k4);
                     for i in 0..dim {
                         x[i] = clamp_voltage(
                             x[i] + h / 6.0
@@ -182,24 +241,137 @@ impl<'a> DigitalSampler<'a> {
 
     /// Generate `n` samples from N(0,I) priors; returns interleaved points
     /// (n × dim flattened) and the number of network inferences used.
+    /// Scalar reference lane: one trajectory at a time.
     pub fn sample_batch(&self, n: usize, onehot: &[f32], n_steps: usize,
                         rng: &mut Rng) -> (Vec<f32>, usize) {
         let dim = self.net.dim();
         let mut out = vec![0.0f32; n * dim];
+        let mut scratch = StepScratch::default();
         for s in 0..n {
             let x = &mut out[s * dim..(s + 1) * dim];
             for v in x.iter_mut() {
                 *v = rng.gaussian_f32();
             }
-            self.sample_into(x, onehot, n_steps, rng);
+            self.sample_into_scratch(x, onehot, n_steps, rng, &mut scratch);
         }
-        let evals_per_step = match (self.kind, self.mode) {
-            (SamplerKind::Heun, SamplerMode::Ode) => 2,
-            (SamplerKind::Rk4, SamplerMode::Ode) => 4,
-            _ => 1,
-        } * if self.guidance.is_some() { 2 } else { 1 };
-        (out, n * n_steps * evals_per_step)
+        (out, n * n_steps * self.evals_per_step())
     }
+
+    /// Batched production lane: advance all `n` states per timestep through
+    /// [`ScoreNet::eval_batch`] — one B×dim GEMM sweep per inference
+    /// instead of B single-vector MVMs, embedding shared across lanes, zero
+    /// per-step allocation.  Priors draw from `rng` lane-by-lane in the
+    /// same order as [`Self::sample_batch`] (so ODE lanes are
+    /// batch-prefix-stable); Wiener increments come from per-lane streams
+    /// split off the base rng, keeping lanes decorrelated and the result
+    /// deterministic per (seed, n).  In ODE mode this lane is bitwise
+    /// identical to the scalar lane for digital nets; in SDE mode it
+    /// agrees in distribution (parity-tested).
+    pub fn sample_batched(&self, n: usize, onehot: &[f32], n_steps: usize,
+                          rng: &mut Rng) -> (Vec<f32>, usize) {
+        let dim = self.net.dim();
+        let len = n * dim;
+        let mut x = vec![0.0f32; len];
+        for v in x.iter_mut() {
+            *v = rng.gaussian_f32();
+        }
+        let mut lane_rngs: Vec<Rng> = (0..n).map(|_| rng.split()).collect();
+        let (dt, ts) = self.sched.reverse_grid(n_steps);
+        let mut s = StepScratch::default();
+        let mut scratch = BatchScratch::new();
+        let net_out = scratch_slice(&mut s.net_out, len);
+        let rhs = scratch_slice(&mut s.rhs, len);
+        let rhs2 = scratch_slice(&mut s.rhs2, len);
+        let x_pred = scratch_slice(&mut s.x_pred, len);
+        let k2 = scratch_slice(&mut s.k2, len);
+        let k3 = scratch_slice(&mut s.k3, len);
+        let k4 = scratch_slice(&mut s.k4, len);
+
+        for &t in &ts {
+            self.net_eval_batch(&x, t, onehot, net_out, &mut scratch, rng);
+            self.rhs_batch(&x, net_out, t, rhs);
+            match (self.kind, self.mode) {
+                (SamplerKind::Euler, _)
+                | (SamplerKind::Heun, SamplerMode::Sde)
+                | (SamplerKind::Rk4, SamplerMode::Sde) => {
+                    let diff = match self.mode {
+                        SamplerMode::Sde => (self.sched.beta(t) * dt).sqrt(),
+                        SamplerMode::Ode => 0.0,
+                    };
+                    for (b, lane) in lane_rngs.iter_mut().enumerate() {
+                        for i in b * dim..(b + 1) * dim {
+                            let z = if diff > 0.0 {
+                                lane.gaussian_f32()
+                            } else {
+                                0.0
+                            };
+                            x[i] = clamp_voltage(
+                                x[i] - (dt as f32) * rhs[i] + (diff as f32) * z,
+                            );
+                        }
+                    }
+                }
+                (SamplerKind::Heun, SamplerMode::Ode) => {
+                    let t1 = (t - dt).max(self.sched.eps_t);
+                    for i in 0..len {
+                        x_pred[i] = clamp_voltage(x[i] - (dt as f32) * rhs[i]);
+                    }
+                    self.net_eval_batch(x_pred, t1, onehot, net_out,
+                                        &mut scratch, rng);
+                    self.rhs_batch(x_pred, net_out, t1, rhs2);
+                    for i in 0..len {
+                        x[i] = clamp_voltage(
+                            x[i] - (dt as f32) * 0.5 * (rhs[i] + rhs2[i]),
+                        );
+                    }
+                }
+                (SamplerKind::Rk4, SamplerMode::Ode) => {
+                    let h = -(dt as f32);
+                    let tm = (t - 0.5 * dt).max(self.sched.eps_t);
+                    let t1 = (t - dt).max(self.sched.eps_t);
+                    for i in 0..len {
+                        x_pred[i] = clamp_voltage(x[i] + 0.5 * h * rhs[i]);
+                    }
+                    self.net_eval_batch(x_pred, tm, onehot, net_out,
+                                        &mut scratch, rng);
+                    self.rhs_batch(x_pred, net_out, tm, k2);
+                    for i in 0..len {
+                        x_pred[i] = clamp_voltage(x[i] + 0.5 * h * k2[i]);
+                    }
+                    self.net_eval_batch(x_pred, tm, onehot, net_out,
+                                        &mut scratch, rng);
+                    self.rhs_batch(x_pred, net_out, tm, k3);
+                    for i in 0..len {
+                        x_pred[i] = clamp_voltage(x[i] + h * k3[i]);
+                    }
+                    self.net_eval_batch(x_pred, t1, onehot, net_out,
+                                        &mut scratch, rng);
+                    self.rhs_batch(x_pred, net_out, t1, k4);
+                    for i in 0..len {
+                        x[i] = clamp_voltage(
+                            x[i] + h / 6.0
+                                * (rhs[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]),
+                        );
+                    }
+                }
+            }
+        }
+        (x, n * n_steps * self.evals_per_step())
+    }
+}
+
+/// Reusable integration scratch — hoisted out of the per-sample loop so the
+/// scalar lane allocates once per `sample_batch` call (not seven Vecs per
+/// sample) and the batched lane once per batch.
+#[derive(Debug, Default)]
+struct StepScratch {
+    net_out: Vec<f32>,
+    rhs: Vec<f32>,
+    rhs2: Vec<f32>,
+    x_pred: Vec<f32>,
+    k2: Vec<f32>,
+    k3: Vec<f32>,
+    k4: Vec<f32>,
 }
 
 #[cfg(test)]
@@ -355,5 +527,61 @@ mod tests {
         let a = run(SamplerMode::Sde, SamplerKind::Euler, 20, 10);
         let b = run(SamplerMode::Sde, SamplerKind::Euler, 20, 10);
         assert_eq!(a, b);
+    }
+
+    fn run_batched(mode: SamplerMode, kind: SamplerKind, steps: usize,
+                   n: usize) -> (Vec<f32>, usize) {
+        let net = GaussianNet { s0: 0.5, sched: VpSchedule::default() };
+        let sampler = DigitalSampler::new(&net, mode).with_kind(kind);
+        let mut rng = Rng::new(42);
+        sampler.sample_batched(n, &[], steps, &mut rng)
+    }
+
+    #[test]
+    fn batched_ode_bitwise_matches_scalar() {
+        // no Wiener draws in ODE mode ⇒ the batched lane must reproduce the
+        // scalar lane exactly, for every stepper
+        for kind in [SamplerKind::Euler, SamplerKind::Heun, SamplerKind::Rk4] {
+            let scalar = run(SamplerMode::Ode, kind, 12, 9);
+            let (batched, _) = run_batched(SamplerMode::Ode, kind, 12, 9);
+            assert_eq!(scalar, batched, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn batched_sde_transports_gaussian() {
+        let (pts, _) = run_batched(SamplerMode::Sde, SamplerKind::Euler, 400, 2000);
+        let (sx, sy) = std2(&pts);
+        assert!((sx - 0.5).abs() < 0.07, "sx={sx}");
+        assert!((sy - 0.5).abs() < 0.07, "sy={sy}");
+    }
+
+    #[test]
+    fn batched_inference_count_matches_scalar() {
+        let net = GaussianNet { s0: 0.5, sched: VpSchedule::default() };
+        for (kind, lam, want) in [
+            (SamplerKind::Euler, None, 30usize),
+            (SamplerKind::Heun, None, 60),
+            (SamplerKind::Rk4, None, 120),
+            (SamplerKind::Euler, Some(2.0), 60),
+        ] {
+            let mut s = DigitalSampler::new(&net, SamplerMode::Ode).with_kind(kind);
+            if let Some(l) = lam {
+                s = s.with_guidance(l);
+            }
+            let mut rng = Rng::new(0);
+            let (_, evals) = s.sample_batched(3, &[], 10, &mut rng);
+            assert_eq!(evals, want, "{kind:?} lam={lam:?}");
+        }
+    }
+
+    #[test]
+    fn batched_deterministic_and_clamped() {
+        let (a, _) = run_batched(SamplerMode::Sde, SamplerKind::Euler, 50, 40);
+        let (b, _) = run_batched(SamplerMode::Sde, SamplerKind::Euler, 50, 40);
+        assert_eq!(a, b);
+        for &v in &a {
+            assert!((-2.0..=4.0).contains(&v));
+        }
     }
 }

@@ -14,13 +14,13 @@
 
 use super::embedding::Embedding;
 use super::loader::ScoreWeights;
-use super::ScoreNet;
+use super::{BatchScratch, ScoreNet};
 use crate::analog::activation::relu_diode;
 use crate::clamp_voltage;
 use crate::crossbar::{CrossbarLayer, NoiseModel};
 use crate::device::cell::CellParams;
 use crate::util::rng::Rng;
-use crate::util::tensor::{vecmat_bias_into, Mat};
+use crate::util::tensor::{matmul_bias_into, scratch_slice, vecmat_bias_into, Mat};
 
 /// Exact f32 weight-space network — the paper's software baseline and the
 /// semantics the AOT artifacts implement.
@@ -51,9 +51,35 @@ impl ScoreNet for DigitalScoreNet {
 
     fn eval(&self, x: &[f32], t: f32, onehot: &[f32], out: &mut [f32], _rng: &mut Rng) {
         let h = self.w.hidden();
+        let d = self.w.dim();
+        debug_assert_eq!(x.len(), d);
+        // hot path: stack scratch (no per-eval heap traffic) whenever the
+        // network fits the macro width — true for every paper net
+        if h <= MAX_HIDDEN && d <= MAX_HIDDEN {
+            let mut emb = [0.0f32; MAX_HIDDEN];
+            self.emb.eval(t, onehot, &mut emb[..h]);
+            let mut xc = [0.0f32; MAX_HIDDEN];
+            for (o, &v) in xc.iter_mut().zip(x) {
+                *o = clamp_voltage(v);
+            }
+            let mut h1 = [0.0f32; MAX_HIDDEN];
+            vecmat_bias_into(&xc[..d], self.w.w1.as_slice(), &self.w.b1,
+                             &mut h1[..h]);
+            for (v, &e) in h1[..h].iter_mut().zip(&emb[..h]) {
+                *v = clamp_voltage((*v + e).max(0.0));
+            }
+            let mut h2 = [0.0f32; MAX_HIDDEN];
+            vecmat_bias_into(&h1[..h], self.w.w2.as_slice(), &self.w.b2,
+                             &mut h2[..h]);
+            for (v, &e) in h2[..h].iter_mut().zip(&emb[..h]) {
+                *v = clamp_voltage((*v + e).max(0.0));
+            }
+            vecmat_bias_into(&h2[..h], self.w.w3.as_slice(), &self.w.b3, out);
+            return;
+        }
+        // oversized fallback (no such net in the paper, but keep it correct)
         let mut emb = vec![0.0f32; h];
         self.emb.eval(t, onehot, &mut emb);
-
         let xc: Vec<f32> = x.iter().map(|&v| clamp_voltage(v)).collect();
         let mut h1 = vec![0.0f32; h];
         vecmat_bias_into(&xc, self.w.w1.as_slice(), &self.w.b1, &mut h1);
@@ -66,6 +92,41 @@ impl ScoreNet for DigitalScoreNet {
             *v = clamp_voltage((*v + e).max(0.0));
         }
         vecmat_bias_into(&h2, self.w.w3.as_slice(), &self.w.b3, out);
+    }
+
+    /// Native batched lane: B×d · d×h GEMMs with the embedding computed
+    /// once for all lanes.  Zero heap allocation at steady state (scratch
+    /// reused across timesteps); bitwise equal to per-lane [`Self::eval`].
+    fn eval_batch(&self, xs: &[f32], t: f32, onehot: &[f32], out: &mut [f32],
+                  scratch: &mut BatchScratch, _rng: &mut Rng) {
+        let h = self.w.hidden();
+        let d = self.w.dim();
+        debug_assert_eq!(xs.len() % d, 0);
+        debug_assert_eq!(xs.len(), out.len());
+        let batch = xs.len() / d;
+
+        let emb = scratch_slice(&mut scratch.emb, h);
+        self.emb.eval(t, onehot, emb);
+
+        let xc = scratch_slice(&mut scratch.x, batch * d);
+        for (o, &v) in xc.iter_mut().zip(xs) {
+            *o = clamp_voltage(v);
+        }
+        let h1 = scratch_slice(&mut scratch.h1, batch * h);
+        matmul_bias_into(xc, self.w.w1.as_slice(), &self.w.b1, h1, batch, d, h);
+        for row in h1.chunks_exact_mut(h) {
+            for (v, &e) in row.iter_mut().zip(emb.iter()) {
+                *v = clamp_voltage((*v + e).max(0.0));
+            }
+        }
+        let h2 = scratch_slice(&mut scratch.h2, batch * h);
+        matmul_bias_into(h1, self.w.w2.as_slice(), &self.w.b2, h2, batch, h, h);
+        for row in h2.chunks_exact_mut(h) {
+            for (v, &e) in row.iter_mut().zip(emb.iter()) {
+                *v = clamp_voltage((*v + e).max(0.0));
+            }
+        }
+        matmul_bias_into(h2, self.w.w3.as_slice(), &self.w.b3, out, batch, h, d);
     }
 }
 
@@ -212,6 +273,51 @@ impl ScoreNet for AnalogScoreNet {
             *o += b;
         }
     }
+
+    /// Native batched lane: all three crossbar layers evaluate B lanes per
+    /// GEMM ([`CrossbarLayer::forward_batch`]), with the DAC-quantized
+    /// embedding computed once for all lanes.  Ideal mode is bitwise equal
+    /// to per-lane [`Self::eval`]; noisy modes draw per lane in lane order.
+    fn eval_batch(&self, xs: &[f32], t: f32, onehot: &[f32], out: &mut [f32],
+                  scratch: &mut BatchScratch, rng: &mut Rng) {
+        let d = self.dim;
+        let h = self.hidden;
+        debug_assert_eq!(xs.len() % d, 0);
+        debug_assert_eq!(xs.len(), out.len());
+        let batch = xs.len() / d;
+
+        let emb = scratch_slice(&mut scratch.emb, h);
+        self.emb.eval(t, onehot, emb);
+
+        let xin = scratch_slice(&mut scratch.x, batch * d);
+        for (o, &v) in xin.iter_mut().zip(xs) {
+            *o = clamp_voltage(v);
+        }
+        let h1 = scratch_slice(&mut scratch.h1, batch * h);
+        self.l1.forward_batch(xin, h1, batch, self.noise, rng);
+        for row in h1.chunks_exact_mut(h) {
+            for (v, (&b, &e)) in
+                row.iter_mut().zip(self.b1.iter().zip(emb.iter()))
+            {
+                *v = clamp_voltage(relu_diode(*v + b + e));
+            }
+        }
+        let h2 = scratch_slice(&mut scratch.h2, batch * h);
+        self.l2.forward_batch(h1, h2, batch, self.noise, rng);
+        for row in h2.chunks_exact_mut(h) {
+            for (v, (&b, &e)) in
+                row.iter_mut().zip(self.b2.iter().zip(emb.iter()))
+            {
+                *v = clamp_voltage(relu_diode(*v + b + e));
+            }
+        }
+        self.l3.forward_batch(h2, out, batch, self.noise, rng);
+        for row in out.chunks_exact_mut(d) {
+            for (o, &b) in row.iter_mut().zip(self.b3.iter()) {
+                *o += b;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -322,6 +428,87 @@ mod tests {
         net.eval(&[0.5, 0.5], 0.5, &[0.0, 0.0, 0.0], &mut a, &mut rng);
         net.eval(&[0.5, 0.5], 0.5, &[0.0, 0.0, 0.0], &mut b, &mut rng);
         assert_ne!(a, b, "read noise must decorrelate consecutive evals");
+    }
+
+    #[test]
+    fn digital_eval_batch_matches_scalar_bitwise() {
+        let net = DigitalScoreNet::new(weights());
+        let mut rng = Rng::new(4);
+        let batch = 7; // exercises the 4-row block + remainder
+        let xs: Vec<f32> = (0..batch * 2).map(|i| 0.1 * i as f32 - 0.6).collect();
+        let oh = [0.0, 1.0, 0.0];
+        let mut scratch = BatchScratch::new();
+        let mut batched = vec![0.0f32; batch * 2];
+        net.eval_batch(&xs, 0.4, &oh, &mut batched, &mut scratch, &mut rng);
+        let mut scalar = [0.0f32; 2];
+        for b in 0..batch {
+            net.eval(&xs[b * 2..(b + 1) * 2], 0.4, &oh, &mut scalar, &mut rng);
+            assert_eq!(&batched[b * 2..(b + 1) * 2], scalar.as_slice(),
+                       "lane {b}");
+        }
+    }
+
+    #[test]
+    fn digital_eval_cfg_batch_matches_scalar() {
+        let net = DigitalScoreNet::new(weights());
+        let mut rng = Rng::new(5);
+        let batch = 5;
+        let xs: Vec<f32> = (0..batch * 2).map(|i| 0.07 * i as f32 - 0.3).collect();
+        let oh = [0.0, 0.0, 1.0];
+        let mut scratch = BatchScratch::new();
+        let mut batched = vec![0.0f32; batch * 2];
+        net.eval_cfg_batch(&xs, 0.6, &oh, 2.0, &mut batched, &mut scratch,
+                           &mut rng);
+        let mut scalar = [0.0f32; 2];
+        for b in 0..batch {
+            net.eval_cfg(&xs[b * 2..(b + 1) * 2], 0.6, &oh, 2.0, &mut scalar,
+                         &mut rng);
+            for k in 0..2 {
+                assert!((batched[b * 2 + k] - scalar[k]).abs() < 1e-6,
+                        "lane {b} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn analog_eval_batch_matches_scalar_bitwise_when_ideal() {
+        let w = weights();
+        let net = AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal);
+        let mut rng = Rng::new(6);
+        let batch = 6;
+        let xs: Vec<f32> = (0..batch * 2).map(|i| 0.09 * i as f32 - 0.5).collect();
+        let mut scratch = BatchScratch::new();
+        let mut batched = vec![0.0f32; batch * 2];
+        net.eval_batch(&xs, 0.3, &[0.0, 0.0, 0.0], &mut batched, &mut scratch,
+                       &mut rng);
+        let mut scalar = [0.0f32; 2];
+        for b in 0..batch {
+            net.eval(&xs[b * 2..(b + 1) * 2], 0.3, &[0.0, 0.0, 0.0],
+                     &mut scalar, &mut rng);
+            assert_eq!(&batched[b * 2..(b + 1) * 2], scalar.as_slice(),
+                       "lane {b}");
+        }
+    }
+
+    #[test]
+    fn analog_eval_batch_read_fast_decorrelates_lanes() {
+        let w = weights();
+        let net = AnalogScoreNet::from_conductances(
+            &w,
+            CellParams::default(),
+            NoiseModel::ReadFast,
+        );
+        let mut rng = Rng::new(7);
+        let batch = 4;
+        // identical inputs in every lane: read noise must still decorrelate
+        let xs: Vec<f32> = (0..batch).flat_map(|_| [0.5f32, 0.5]).collect();
+        let mut scratch = BatchScratch::new();
+        let mut out = vec![0.0f32; batch * 2];
+        net.eval_batch(&xs, 0.5, &[0.0, 0.0, 0.0], &mut out, &mut scratch,
+                       &mut rng);
+        for b in 1..batch {
+            assert_ne!(&out[..2], &out[b * 2..(b + 1) * 2], "lane {b}");
+        }
     }
 
     #[test]

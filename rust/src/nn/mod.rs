@@ -19,12 +19,51 @@ pub use mlp::{AnalogScoreNet, DigitalScoreNet};
 
 use crate::util::rng::Rng;
 
+/// Reusable scratch buffers for the batched evaluation lane.
+///
+/// One instance lives per sampler/solver invocation and is threaded through
+/// every [`ScoreNet::eval_batch`] call, so the per-timestep hot path runs
+/// with zero heap allocation once the buffers have grown to their
+/// steady-state batch size.  Buffers are grow-only and never cleared —
+/// implementations fully overwrite what they use (via
+/// [`crate::util::tensor::scratch_slice`]).
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    /// Shared time+condition embedding (length hidden) — computed once per
+    /// batched eval instead of once per lane.
+    pub emb: Vec<f32>,
+    /// Clamped input lanes (batch × dim).
+    pub x: Vec<f32>,
+    /// First hidden activations (batch × hidden).
+    pub h1: Vec<f32>,
+    /// Second hidden activations (batch × hidden).
+    pub h2: Vec<f32>,
+    /// CFG conditional branch output (batch × dim).
+    pub cond: Vec<f32>,
+    /// CFG unconditional branch output (batch × dim).
+    pub unc: Vec<f32>,
+    /// CFG null-token one-hot (n_classes).
+    pub zeros: Vec<f32>,
+}
+
+impl BatchScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// The epsilon-parameterized score network interface.
 ///
 /// `eval` writes the network output ``net(x, t)`` (≈ the noise prediction;
 /// score = −net/σ(t)) into `out`.  `onehot` is the condition (all-zero =
 /// unconditional / CFG null token).  `rng` feeds device noise in analog
 /// implementations; digital ones ignore it.
+///
+/// `eval_batch`/`eval_cfg_batch` evaluate B lane-contiguous states sharing
+/// one `(t, onehot)` — the shape the coordinator's dynamic batcher emits.
+/// The defaults fall back to per-lane `eval`; [`mlp::DigitalScoreNet`] and
+/// [`mlp::AnalogScoreNet`] override them with matrix-matrix paths that are
+/// bitwise equal to the scalar lane under ideal (noise-free) evaluation.
 pub trait ScoreNet: Send + Sync {
     /// State dimension (2 for both paper tasks).
     fn dim(&self) -> usize;
@@ -46,5 +85,50 @@ pub trait ScoreNet: Send + Sync {
         for i in 0..d {
             out[i] = (1.0 + lambda) * cond[i] - lambda * unc[i];
         }
+    }
+
+    /// Evaluate B lane-contiguous states (`xs` = batch × dim, row-major)
+    /// sharing one `(t, onehot)`.  Default: per-lane [`Self::eval`]
+    /// fallback.  Noisy implementations draw per lane in lane order from
+    /// `rng`.
+    fn eval_batch(&self, xs: &[f32], t: f32, onehot: &[f32], out: &mut [f32],
+                  scratch: &mut BatchScratch, rng: &mut Rng) {
+        let _ = scratch;
+        let d = self.dim();
+        debug_assert_eq!(xs.len() % d, 0);
+        debug_assert_eq!(xs.len(), out.len());
+        for (xrow, orow) in xs.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+            self.eval(xrow, t, onehot, orow, rng);
+        }
+    }
+
+    /// Batched classifier-free guidance: both CFG branches run through
+    /// [`Self::eval_batch`], so native batched implementations are reused.
+    #[allow(clippy::too_many_arguments)]
+    fn eval_cfg_batch(&self, xs: &[f32], t: f32, onehot: &[f32], lambda: f32,
+                      out: &mut [f32], scratch: &mut BatchScratch,
+                      rng: &mut Rng) {
+        let len = xs.len();
+        debug_assert_eq!(out.len(), len);
+        // take the CFG buffers out so `scratch` stays free for eval_batch
+        let mut cond = std::mem::take(&mut scratch.cond);
+        let mut unc = std::mem::take(&mut scratch.unc);
+        let mut zeros = std::mem::take(&mut scratch.zeros);
+        if cond.len() < len {
+            cond.resize(len, 0.0);
+        }
+        if unc.len() < len {
+            unc.resize(len, 0.0);
+        }
+        zeros.clear();
+        zeros.resize(onehot.len(), 0.0);
+        self.eval_batch(xs, t, onehot, &mut cond[..len], scratch, rng);
+        self.eval_batch(xs, t, &zeros, &mut unc[..len], scratch, rng);
+        for (o, (&c, &u)) in out.iter_mut().zip(cond.iter().zip(unc.iter())) {
+            *o = (1.0 + lambda) * c - lambda * u;
+        }
+        scratch.cond = cond;
+        scratch.unc = unc;
+        scratch.zeros = zeros;
     }
 }

@@ -73,6 +73,26 @@ pub fn row(cols: &[&str]) {
     println!("{}", cols.join(" | "));
 }
 
+/// Write a flat `{name: number}` JSON object — the machine-readable bench
+/// artifact (`BENCH_*.json`) the perf trajectory is tracked from across
+/// PRs.  Non-finite values are emitted as `null` to keep the file valid.
+pub fn write_json(path: &str, fields: &[(&str, f64)]) -> std::io::Result<()> {
+    let mut s = String::from("{\n");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        let val = if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".to_string()
+        };
+        let sep = if i + 1 == fields.len() { "" } else { "," };
+        s.push_str(&format!("  \"{k}\": {val}{sep}\n"));
+    }
+    s.push_str("}\n");
+    std::fs::write(path, s)?;
+    println!("  wrote {path}");
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,5 +105,19 @@ mod tests {
         assert!(r.iters >= 10);
         assert!(r.min <= r.p50 && r.p50 <= r.max);
         assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn write_json_emits_valid_object() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("memdiff_bench_json_test.json");
+        let path = path.to_str().unwrap();
+        write_json(path, &[("a", 1.5), ("nan", f64::NAN), ("b", 2.0)]).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        std::fs::remove_file(path).ok();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("a").and_then(|v| v.as_f64()), Some(1.5));
+        assert_eq!(parsed.get("b").and_then(|v| v.as_f64()), Some(2.0));
+        assert!(parsed.get("nan").is_some(), "null field must still parse");
     }
 }

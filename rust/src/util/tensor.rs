@@ -4,6 +4,18 @@
 //! and the macros are 32×32, so simplicity and cache behaviour beat
 //! generality.  The hot-path matmuls in [`crate::crossbar`] operate on raw
 //! slices from this type.
+//!
+//! The batched execution lane (B concurrent samples advanced per timestep)
+//! turns the per-sample vector·matrix products into B×k · k×n GEMMs:
+//! [`matmul_into`] runs a 4-row-blocked kernel so each weight row loaded
+//! from memory feeds four output lanes, [`matmul_bias_into`] fuses the
+//! per-row bias broadcast, and [`matmul_tb_into`] is the transposed-B
+//! dot-product fast path for tall-k shapes.  All inner loops are iterator
+//! zips — bounds-check-free, so they auto-vectorize.  Per-output-element
+//! accumulation order is identical to the single-vector
+//! [`vecmat_bias_into`] path, which keeps the batched lane bitwise equal to
+//! the scalar lane under `NoiseModel::Ideal` (asserted by the parity
+//! suite).
 
 use std::fmt;
 
@@ -136,12 +148,51 @@ impl fmt::Debug for Mat {
 /// the caller when a fresh product is wanted.  ikj loop order — streams `b`
 /// and `c` rows sequentially, which is the cache-friendly order for the
 /// small-k regime here.
+///
+/// Rows of `a` are processed in blocks of four, so each `b` row loaded from
+/// memory feeds four output lanes — the GEMM win of the batched execution
+/// lane (B×32 · 32×32 instead of B separate 32-vector MVMs).  The per-row
+/// accumulation order over `l` is unchanged from the single-row kernel, so
+/// each output element sees the identical float-op sequence as
+/// [`vecmat_bias_into`] minus the bias (blocked lanes add exact ±0.0 terms
+/// where the single-row kernel skips, which cannot change any sum).
 #[inline]
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    for i in 0..m {
+    let mut i = 0;
+    while i + 4 <= m {
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        let block = &mut c[i * n..(i + 4) * n];
+        let (c0, rest) = block.split_at_mut(n);
+        let (c1, rest) = rest.split_at_mut(n);
+        let (c2, c3) = rest.split_at_mut(n);
+        for l in 0..k {
+            let (v0, v1, v2, v3) = (a0[l], a1[l], a2[l], a3[l]);
+            if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                continue;
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            for ((((w0, w1), w2), w3), &bv) in c0
+                .iter_mut()
+                .zip(c1.iter_mut())
+                .zip(c2.iter_mut())
+                .zip(c3.iter_mut())
+                .zip(brow)
+            {
+                *w0 += v0 * bv;
+                *w1 += v1 * bv;
+                *w2 += v2 * bv;
+                *w3 += v3 * bv;
+            }
+        }
+        i += 4;
+    }
+    for i in i..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
         for (l, &aval) in arow.iter().enumerate() {
@@ -154,6 +205,58 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
             }
         }
     }
+}
+
+/// c = a(m×k) @ b(k×n) + bias (broadcast over rows), writing into `c`.
+/// The batched counterpart of [`vecmat_bias_into`]: every output row sees
+/// the same bias-then-accumulate float-op order as the single-vector path,
+/// so the two are bitwise interchangeable per lane.
+#[inline]
+pub fn matmul_bias_into(a: &[f32], b: &[f32], bias: &[f32], c: &mut [f32],
+                        m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(c.len(), m * n);
+    for crow in c.chunks_exact_mut(n) {
+        crow.copy_from_slice(bias);
+    }
+    matmul_into(a, b, c, m, k, n);
+}
+
+/// c = a(m×k) @ B(k×n) where `bt` stores B *transposed* (n×k): dot-product
+/// inner loop.  The fast path when B is reused across many calls with a
+/// tall k — each output element is one contiguous dot product, keeping both
+/// streams sequential.  Overwrites `c` (no accumulate).
+#[inline]
+pub fn matmul_tb_into(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(bt.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &bt[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *cv = acc;
+        }
+    }
+}
+
+/// Grow-only scratch helper for the batch lanes: ensure `buf` holds at
+/// least `len` elements and return the `len`-prefix.  Contents are NOT
+/// cleared — callers fully overwrite.  Amortizes to zero allocation once a
+/// buffer has seen its steady-state batch size.
+#[inline]
+pub fn scratch_slice(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    &mut buf[..len]
 }
 
 /// y = x (1×k) @ b (k×n) + bias, writing into y.
@@ -234,5 +337,94 @@ mod tests {
         let b = a.map(|x| x * x);
         assert_eq!(b.as_slice(), &[4.0; 4]);
         assert_eq!(a.max_abs_diff(&b), 2.0);
+    }
+
+    /// Reference single-row kernel for cross-checking the blocked path.
+    fn matmul_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for l in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + l] * b[l * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_kernel_matches_reference_all_remainders() {
+        // m = 1..9 exercises full 4-row blocks plus 0..3-row remainders
+        for m in 1..=9usize {
+            let (k, n) = (5, 6);
+            let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();
+            let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.11).cos()).collect();
+            let mut c = vec![0.0f32; m * n];
+            matmul_into(&a, &b, &mut c, m, k, n);
+            let want = matmul_ref(&a, &b, m, k, n);
+            for (got, want) in c.iter().zip(&want) {
+                assert!((got - want).abs() < 1e-5, "m={m}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_handles_zero_rows() {
+        // zero inputs in some lanes must not perturb the others
+        let (m, k, n) = (6usize, 4, 3);
+        let mut a: Vec<f32> = (0..m * k).map(|i| i as f32 * 0.1 - 1.0).collect();
+        for v in a[k..2 * k].iter_mut() {
+            *v = 0.0; // lane 1 entirely zero
+        }
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32) - 5.0).collect();
+        let mut c = vec![0.0f32; m * n];
+        matmul_into(&a, &b, &mut c, m, k, n);
+        assert_eq!(&c[n..2 * n], &[0.0, 0.0, 0.0]);
+        let want = matmul_ref(&a, &b, m, k, n);
+        for (got, want) in c.iter().zip(&want) {
+            assert!((got - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_bias_matches_per_row_vecmat() {
+        let (m, k, n) = (7usize, 4, 5);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.23).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.71).cos()).collect();
+        let bias: Vec<f32> = (0..n).map(|i| i as f32 * 0.5 - 1.0).collect();
+        let mut c = vec![0.0f32; m * n];
+        matmul_bias_into(&a, &b, &bias, &mut c, m, k, n);
+        let mut y = vec![0.0f32; n];
+        for i in 0..m {
+            vecmat_bias_into(&a[i * k..(i + 1) * k], &b, &bias, &mut y);
+            // bitwise: identical accumulation order per output element
+            assert_eq!(&c[i * n..(i + 1) * n], y.as_slice(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn transposed_b_path_matches_row_major() {
+        let a = Mat::from_fn(6, 8, |r, c| ((r * 8 + c) as f32 * 0.13).sin());
+        let b = Mat::from_fn(8, 4, |r, c| ((r * 4 + c) as f32 * 0.29).cos());
+        let bt = b.transpose();
+        let want = a.matmul(&b);
+        let mut c = vec![0.0f32; 6 * 4];
+        matmul_tb_into(a.as_slice(), bt.as_slice(), &mut c, 6, 8, 4);
+        for (got, want) in c.iter().zip(want.as_slice()) {
+            assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn scratch_slice_grows_and_reuses() {
+        let mut buf = Vec::new();
+        assert_eq!(scratch_slice(&mut buf, 4).len(), 4);
+        buf[2] = 7.0;
+        // shrink request returns prefix without reallocating or clearing
+        let s = scratch_slice(&mut buf, 2);
+        assert_eq!(s.len(), 2);
+        assert_eq!(buf.len(), 4);
+        assert_eq!(buf[2], 7.0);
+        assert_eq!(scratch_slice(&mut buf, 8).len(), 8);
     }
 }
