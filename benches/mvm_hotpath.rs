@@ -2,12 +2,15 @@
 //!
 //! Compares the three crossbar noise fidelities in both lanes — scalar
 //! `forward` (one vector) and batched `forward_batch` (B lanes per GEMM) —
-//! plus the fused analog score-net evaluation and one closed-loop solver
-//! sub-step.  Per-MVM nanoseconds land in `BENCH_mvm.json` so the perf
-//! trajectory is tracked across PRs.
+//! plus a bank-grid sweep (monolithic oracle vs `BankedCrossbarLayer` at
+//! 1×1 / 1×2 / 2×2 / 3×3 tile grids, capturing the tiling overhead), the
+//! fused analog score-net evaluation and one closed-loop solver sub-step.
+//! Per-MVM nanoseconds land in `BENCH_mvm.json` so the perf trajectory is
+//! tracked across PRs.
 
 use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
-use memdiff::crossbar::{CrossbarLayer, NoiseModel};
+use memdiff::crossbar::mapper::map_layer;
+use memdiff::crossbar::{BankedCrossbarLayer, CrossbarLayer, NoiseModel};
 use memdiff::data::Meta;
 use memdiff::device::cell::CellParams;
 use memdiff::nn::{AnalogScoreNet, BatchScratch, ScoreNet, ScoreWeights};
@@ -52,6 +55,41 @@ fn main() -> anyhow::Result<()> {
         println!("  => {per_mvm:.1} ns/MVM batched  ({:.2}x vs scalar)",
                  r.mean_ns() / per_mvm);
         json.push((key_b, per_mvm));
+    }
+
+    bench::section("bank-grid sweep: monolithic vs banked forward_batch (per-MVM cost)");
+    // square layers spanning 1×1 → 3×3 tile grids (ragged on the 40 case)
+    const GRIDS: &[(usize, &str, &str, &str)] = &[
+        (32, "1x1", "bank_1x1_mono_ns", "bank_1x1_banked_ns"),
+        (40, "2x2r", "bank_2x2r_mono_ns", "bank_2x2r_banked_ns"),
+        (64, "2x2", "bank_2x2_mono_ns", "bank_2x2_banked_ns"),
+        (96, "3x3", "bank_3x3_mono_ns", "bank_3x3_banked_ns"),
+    ];
+    for &(dim, label, key_mono, key_banked) in GRIDS {
+        let wmat = Mat::from_fn(dim, dim, |_, _| 0.5 * rng.gaussian_f32());
+        let m = map_layer(&wmat);
+        let mono = CrossbarLayer::from_conductances(&m.g_target, m.gain,
+                                                    CellParams::default());
+        let banked = BankedCrossbarLayer::from_conductances(
+            &m.g_target, m.gain, CellParams::default(), 42);
+        let vb: Vec<f32> = (0..B * dim).map(|_| rng.gaussian_f32()).collect();
+        let mut outb = vec![0.0f32; B * dim];
+        let rm = bench::bench(&format!("{label} ({dim}x{dim}) mono (B={B})"),
+                              150, || {
+            mono.forward_batch(&vb, &mut outb, B, NoiseModel::Ideal, &mut rng);
+            std::hint::black_box(&outb);
+        });
+        bench::report(&rm);
+        json.push((key_mono, rm.mean_ns() / B as f64));
+        let rb = bench::bench(&format!("{label} ({dim}x{dim}) banked (B={B})"),
+                              150, || {
+            banked.forward_batch(&vb, &mut outb, B, NoiseModel::Ideal, &mut rng);
+            std::hint::black_box(&outb);
+        });
+        bench::report(&rb);
+        json.push((key_banked, rb.mean_ns() / B as f64));
+        println!("  => {label}: banked/mono = {:.2}x ({} banks)",
+                 rb.mean_ns() / rm.mean_ns(), banked.n_banks());
     }
 
     match Meta::load_default().and_then(|meta| {

@@ -225,7 +225,10 @@ impl<'a> AnalogSolver<'a> {
     /// NN inference a single [`ScoreNet::eval_batch`] GEMM sweep — the
     /// simulator view of a macro bank driving n concurrent integrator
     /// loops, which is how the projected system amortizes the crossbar
-    /// model over many generations.  Priors draw from `rng` lane-by-lane in
+    /// model over many generations.  With a banked score net
+    /// ([`crate::crossbar::BankedCrossbarLayer`]) each sub-step is one
+    /// GEMM per bank, so nets wider than one 32×32 macro run end-to-end
+    /// through this lane unchanged.  Priors draw from `rng` lane-by-lane in
     /// the same order as [`Self::solve_batch`]; the SDE noise-DAC
     /// increments come from per-lane streams split off the base rng,
     /// keeping lanes decorrelated and the result deterministic per

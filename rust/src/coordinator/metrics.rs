@@ -1,8 +1,11 @@
-//! Service metrics: request/sample counters and latency summaries.
+//! Service metrics: request/sample counters, latency summaries, and the
+//! engine's macro-bank topology (grid shape + per-bank program/read stats,
+//! refreshed after every batch so read counters stay live).
 
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::crossbar::BankReport;
 use crate::util::stats::Summary;
 
 #[derive(Default)]
@@ -13,6 +16,7 @@ struct Inner {
     rejected: u64,
     wall_latency: Summary,
     batch_fill: Summary,
+    banking: Vec<BankReport>,
 }
 
 /// Thread-safe metrics sink.
@@ -40,6 +44,12 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// Publish the engine's bank topology + per-bank stats (the service
+    /// refreshes this after every batch so the read counters stay live).
+    pub fn set_banking(&self, banking: Vec<BankReport>) {
+        self.inner.lock().unwrap().banking = banking;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         MetricsSnapshot {
@@ -50,6 +60,7 @@ impl Metrics {
             mean_latency_s: m.wall_latency.mean(),
             p99_latency_s: m.wall_latency.p99(),
             mean_batch_fill: m.batch_fill.mean(),
+            banking: m.banking.clone(),
         }
     }
 }
@@ -64,11 +75,14 @@ pub struct MetricsSnapshot {
     pub mean_latency_s: f64,
     pub p99_latency_s: f64,
     pub mean_batch_fill: f64,
+    /// Engine bank topology, one entry per score-net layer (empty when the
+    /// engine exposes none, e.g. digital baselines).
+    pub banking: Vec<BankReport>,
 }
 
 impl MetricsSnapshot {
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} samples={} batches={} rejected={} \
              mean_latency={:.3}ms p99={:.3}ms mean_fill={:.1}%",
             self.requests,
@@ -78,7 +92,15 @@ impl MetricsSnapshot {
             1e3 * self.mean_latency_s,
             1e3 * self.p99_latency_s,
             100.0 * self.mean_batch_fill,
-        )
+        );
+        if !self.banking.is_empty() {
+            // per-layer grid summaries; '*' marks a monolithic oracle layer
+            s.push_str(" banks=");
+            let layers: Vec<String> =
+                self.banking.iter().map(|r| r.summary()).collect();
+            s.push_str(&layers.join(","));
+        }
+        s
     }
 }
 
@@ -107,5 +129,32 @@ mod tests {
         m.record_batch(1, 1, 1.0, Duration::from_millis(1));
         let r = m.snapshot().report();
         assert!(r.contains("requests=1"));
+        assert!(!r.contains("banks="), "no banking published yet");
+    }
+
+    #[test]
+    fn banking_topology_surfaces_in_report() {
+        use crate::crossbar::{BankReport, BankStat};
+        let m = Metrics::new();
+        m.set_banking(vec![BankReport {
+            layer: 0,
+            rows: 48,
+            cols: 48,
+            tile_rows: 2,
+            tile_cols: 2,
+            reads: 28,
+            banks: vec![
+                BankStat { reads: 7, ..BankStat::default() },
+                BankStat { reads: 7, ..BankStat::default() },
+                BankStat { reads: 7, ..BankStat::default() },
+                BankStat { reads: 7, ..BankStat::default() },
+            ],
+        }]);
+        let s = m.snapshot();
+        assert_eq!(s.banking.len(), 1);
+        assert_eq!(s.banking[0].n_banks(), 4);
+        assert_eq!(s.banking[0].total_reads(), 28);
+        let r = s.report();
+        assert!(r.contains("banks=L0:2x2(reads=28)"), "{r}");
     }
 }

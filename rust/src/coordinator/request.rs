@@ -91,6 +91,9 @@ pub struct GenResponse {
     pub wall_latency_s: f64,
     /// Modeled hardware latency (analog solve window / digital steps).
     pub hw_latency_s: f64,
+    /// Modeled hardware energy (J) — charges the engine's actual deployed
+    /// topology (per-macro peripherals) for analog engines.
+    pub hw_energy_j: f64,
 }
 
 #[cfg(test)]

@@ -25,6 +25,7 @@ use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, SolverChoice, TaskKind};
 use crate::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use crate::crossbar::BankReport;
 use crate::diffusion::sampler::{DigitalSampler, SamplerKind, SamplerMode};
 use crate::diffusion::schedule::VpSchedule;
 use crate::energy::model::{AnalogCost, DigitalCost};
@@ -40,20 +41,51 @@ pub trait Engine: Send + Sync {
     /// Generate `n` samples under `solver` for the given condition.
     fn generate(&self, solver: SolverChoice, onehot: &[f32], guidance: f32,
                 n: usize, rng: &mut Rng) -> anyhow::Result<Vec<f32>>;
+    /// Macro-bank topology + per-bank program/read stats, for the service
+    /// metrics.  Default: none (digital/HLO engines have no crossbars).
+    fn bank_report(&self) -> Vec<BankReport> {
+        Vec::new()
+    }
+
     /// Modeled hardware latency for one sampling.
     fn hw_latency_s(&self, solver: SolverChoice, conditional: bool) -> f64 {
-        match solver {
-            SolverChoice::AnalogOde | SolverChoice::AnalogSde => {
-                let c = if conditional {
-                    AnalogCost::conditional_projected()
-                } else {
-                    AnalogCost::unconditional_projected()
-                };
-                c.latency_s()
-            }
-            SolverChoice::DigitalOde { steps } | SolverChoice::DigitalSde { steps } => {
-                DigitalCost::new(steps, if conditional { 2 } else { 1 }).latency_s()
-            }
+        match paper_hw_cost(solver, conditional) {
+            HwCost::Analog(c) => c.latency_s(),
+            HwCost::Digital(c) => c.latency_s(),
+        }
+    }
+
+    /// Modeled hardware energy for one sampling (J).  Default: the
+    /// paper-shape cost model; engines that know their deployed topology
+    /// override this with per-macro accounting.
+    fn hw_energy_j(&self, solver: SolverChoice, conditional: bool) -> f64 {
+        match paper_hw_cost(solver, conditional) {
+            HwCost::Analog(c) => c.energy_j(),
+            HwCost::Digital(c) => c.energy_j(),
+        }
+    }
+}
+
+/// Modeled cost of one sampling under either solver family.
+pub enum HwCost {
+    Analog(AnalogCost),
+    Digital(DigitalCost),
+}
+
+/// The paper-shape cost model shared by the [`Engine`] trait defaults —
+/// one place to change, so engine overrides that only refine the analog
+/// side can delegate their digital arms here.
+pub fn paper_hw_cost(solver: SolverChoice, conditional: bool) -> HwCost {
+    match solver {
+        SolverChoice::AnalogOde | SolverChoice::AnalogSde => {
+            HwCost::Analog(if conditional {
+                AnalogCost::conditional_projected()
+            } else {
+                AnalogCost::unconditional_projected()
+            })
+        }
+        SolverChoice::DigitalOde { steps } | SolverChoice::DigitalSde { steps } => {
+            HwCost::Digital(DigitalCost::new(steps, if conditional { 2 } else { 1 }))
         }
     }
 }
@@ -72,6 +104,36 @@ impl Engine for AnalogEngine {
 
     fn n_classes(&self) -> usize {
         self.net.n_classes()
+    }
+
+    fn bank_report(&self) -> Vec<BankReport> {
+        self.net.bank_report()
+    }
+
+    /// Unlike the trait default (paper-shape counts), this charges the
+    /// engine's *actual* deployed topology: per-macro peripherals from the
+    /// net's real layer shapes and bank grids.  (Latency keeps the trait
+    /// default — the solve window is topology-independent; energy is where
+    /// banking shows up.)  Digital arms delegate to the shared
+    /// [`paper_hw_cost`] model.
+    fn hw_energy_j(&self, solver: SolverChoice, conditional: bool) -> f64 {
+        match solver {
+            SolverChoice::AnalogOde | SolverChoice::AnalogSde => {
+                let shapes = self.net.layer_shapes();
+                let c = if conditional {
+                    AnalogCost::conditional_for_layers(
+                        &shapes, self.net.dim(), self.net.n_classes(),
+                    )
+                } else {
+                    AnalogCost::projected_for_layers(&shapes, self.net.dim())
+                };
+                c.energy_j()
+            }
+            _ => match paper_hw_cost(solver, conditional) {
+                HwCost::Analog(c) => c.energy_j(),
+                HwCost::Digital(c) => c.energy_j(),
+            },
+        }
     }
 
     fn generate(&self, solver: SolverChoice, onehot: &[f32], guidance: f32,
@@ -242,6 +304,7 @@ impl Service {
         let pending: Arc<Mutex<std::collections::HashMap<u64, ResponseTx>>> =
             Arc::new(Mutex::new(std::collections::HashMap::new()));
         let metrics = Arc::new(Metrics::new());
+        metrics.set_banking(engine.bank_report());
         let mode_gate = Arc::new(ModeGate::new());
         let max_batch = cfg.batcher.max_batch_samples;
 
@@ -267,6 +330,9 @@ impl Service {
                         batch.total_samples() as f64 / max_batch as f64,
                         wall,
                     );
+                    // refresh the per-bank read counters alongside the
+                    // batch counters (topology is static, reads are live)
+                    metrics.set_banking(engine.bank_report());
                     let mut pend = pending.lock().unwrap();
                     match result {
                         Ok(responses) => {
@@ -309,7 +375,9 @@ impl Service {
             engine.generate(first.solver, &onehot, first.guidance, n_total, rng)?;
         let wall = t0.elapsed().as_secs_f64();
         let dim = engine.dim();
-        let hw = engine.hw_latency_s(first.solver, first.task.is_conditional());
+        let conditional = first.task.is_conditional();
+        let hw = engine.hw_latency_s(first.solver, conditional);
+        let hw_e = engine.hw_energy_j(first.solver, conditional);
 
         let mut responses = Vec::with_capacity(batch.requests.len());
         let mut offset = 0usize;
@@ -331,6 +399,7 @@ impl Service {
                 images,
                 wall_latency_s: wall,
                 hw_latency_s: hw * req.n_samples as f64,
+                hw_energy_j: hw_e * req.n_samples as f64,
             });
         }
         Ok(responses)

@@ -1,0 +1,880 @@
+//! Macro-bank sharding: one logical weight matrix across a grid of ≤32×32
+//! 1T1R macros ("banks"), the scaling substrate for layers wider than one
+//! physical array.
+//!
+//! The paper's in-memory computing unit is a single 32×32 macro
+//! ([`crate::device::array::Macro`]); anything larger must be *tiled*.
+//! [`BankedCrossbarLayer`] makes that tiling a first-class subsystem:
+//!
+//! * **Grid** — a `rows×cols` logical matrix becomes a
+//!   `ceil(rows/32) × ceil(cols/32)` grid of banks (ragged edge tiles keep
+//!   their true size).  Banks are stored row-major.
+//! * **Per-bank RNG streams** — every bank owns an independent noise
+//!   stream ([`crate::util::rng::Rng::split`]), so device read/write noise
+//!   is uncorrelated across physical arrays, as in multi-array resistive
+//!   memory systems (cf. arXiv:2404.09613's per-array noise).  The
+//!   streams are layer state (behind one mutex), not caller state: noisy
+//!   draws depend on the layer's own call history — deterministic per
+//!   (seed, call sequence), like a physical array whose noise keeps
+//!   evolving — and concurrent service workers serialize on the lock for
+//!   *noisy* modes only (`Ideal`, the bitwise-parity serving mode, never
+//!   touches it).
+//! * **Per-tile-column TIA gains** — partial sums flow *down a column of
+//!   tiles* in the current domain and meet one TIA bank at the bottom, so
+//!   every tile-column gets its own gain from the existing
+//!   [`super::mapper`].  When a layer is *programmed* this adapts each
+//!   column block's gain to its own weight range (finer 64-level
+//!   quantization than one global gain); when deployed
+//!   [`BankedCrossbarLayer::from_conductances`] the gain is uniform and
+//!   the banked layer is bitwise-identical to the monolithic
+//!   [`CrossbarLayer`] oracle under `Ideal` evaluation.
+//! * **Partial-sum aggregation** — `forward`/`forward_batch` run **one
+//!   GEMM per bank per step**
+//!   ([`crate::util::tensor::matmul_block_accum`]), accumulating straight
+//!   into the shared output scratch.  For a fixed output element the
+//!   accumulation order over logical rows is ascending — identical to the
+//!   monolithic fast path — which is what makes the bitwise parity hold.
+//! * **Tile-major `ReadPerCell`** — the exact device walk reads each cell
+//!   *once per call* from the bank's stream and applies it to every lane
+//!   (the B-lane burst is faster than the read-noise bandwidth, so the
+//!   fluctuation is frozen within a call), amortizing cell reads over the
+//!   batch instead of re-walking the array per lane.
+//! * **Per-bank stats** — write-verify programming aggregates
+//!   [`ProgramStats`] per bank ([`BankStat`]), and every MVM sweep bumps a
+//!   per-bank read counter; [`BankedCrossbarLayer::report`] snapshots both
+//!   for the serving metrics ([`crate::coordinator::metrics`]) and the
+//!   energy model charges peripherals per macro
+//!   ([`crate::energy::model`]).
+//!
+//! [`ScoreLayer`] is the dispatch layer the score networks build on: it
+//! auto-selects banked execution whenever a matrix exceeds [`MACRO_DIM`]
+//! and keeps the monolithic [`CrossbarLayer`] as the parity oracle
+//! (forceable either way via [`Banking`] for the parity suite).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::layer::CrossbarLayer;
+use super::mapper;
+use super::noise::NoiseModel;
+use super::G_FIXED_MS;
+use crate::device::array::{Macro, ProgramStats, MACRO_DIM};
+use crate::device::cell::{Cell, CellParams};
+use crate::util::rng::Rng;
+use crate::util::tensor::{matmul_block_accum, Mat};
+
+/// Write-verify pulse budget per cell (same as the monolithic layer).
+const PROGRAM_MAX_PULSES: usize = 500;
+
+/// Per-bank deployment + runtime statistics.
+#[derive(Debug, Clone, Default)]
+pub struct BankStat {
+    /// Grid position (tile row, tile column).
+    pub tile_row: usize,
+    pub tile_col: usize,
+    /// Physical tile size (≤ 32×32; edge tiles may be ragged).
+    pub rows: usize,
+    pub cols: usize,
+    /// TIA gain of this bank's tile-column.
+    pub gain: f32,
+    /// Mean write-verify pulses per cell (0 for direct deployment).
+    pub mean_pulses: f64,
+    /// Cells that failed to verify within the pulse budget.
+    pub failures: usize,
+    /// Max |G − target| in mS after programming.
+    pub max_error_ms: f32,
+    /// MVM sweeps served (scalar forward = 1, batched forward = B lanes).
+    pub reads: u64,
+}
+
+/// Bank topology + per-bank stats of one logical layer, as surfaced to the
+/// service metrics.  `banks` is empty for a monolithic (oracle) layer.
+#[derive(Debug, Clone, Default)]
+pub struct BankReport {
+    /// Layer index within the network.
+    pub layer: usize,
+    /// Logical matrix shape.
+    pub rows: usize,
+    pub cols: usize,
+    /// Tile grid shape.
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+    /// Layer-level MVM sweep total — live on both substrates (the
+    /// monolithic layer keeps its own counter), so the serving metrics
+    /// never show a stalled-looking zero under traffic.
+    pub reads: u64,
+    /// Per-bank stats, row-major; empty = monolithic layer.
+    pub banks: Vec<BankStat>,
+}
+
+impl BankReport {
+    pub fn n_banks(&self) -> usize {
+        self.tile_rows * self.tile_cols
+    }
+
+    pub fn is_banked(&self) -> bool {
+        !self.banks.is_empty()
+    }
+
+    pub fn total_reads(&self) -> u64 {
+        self.reads
+    }
+
+    pub fn total_failures(&self) -> usize {
+        self.banks.iter().map(|b| b.failures).sum()
+    }
+
+    /// One-line summary for the metrics report.
+    pub fn summary(&self) -> String {
+        format!(
+            "L{}:{}x{}{}(reads={})",
+            self.layer,
+            self.tile_rows,
+            self.tile_cols,
+            if self.is_banked() { "" } else { "*" },
+            self.total_reads(),
+        )
+    }
+}
+
+/// One bank: a ≤32×32 macro plus its placement and conductance cache.
+#[derive(Debug)]
+struct Bank {
+    tile: Macro,
+    /// Logical offsets of this tile's top-left cell.
+    row0: usize,
+    col0: usize,
+    /// Flattened conductance cache of this tile (refreshed after
+    /// programming / aging) — the `b` operand of the per-bank GEMM.
+    g_local: Mat,
+    /// Programming summary (reads are tracked separately, lock-free).
+    stat: BankStat,
+}
+
+/// A logical weight matrix sharded across a grid of macro banks.
+///
+/// See the module docs for the semantics; the key invariant is that under
+/// uniform gains and `Ideal` evaluation this layer is bitwise-identical to
+/// the monolithic [`CrossbarLayer`] built from the same conductances.
+pub struct BankedCrossbarLayer {
+    rows: usize,
+    cols: usize,
+    tile_rows: usize,
+    tile_cols: usize,
+    /// Banks in row-major tile order; bank (ti, tj) covers logical rows
+    /// [ti·32, …) × cols [tj·32, …).
+    banks: Vec<Bank>,
+    /// Per-tile-column TIA gains (len = tile_cols).
+    col_gains: Vec<f32>,
+    /// Flattened logical conductance view (diagnostics / effective
+    /// weights; the hot path uses the per-bank caches).
+    g_cache: Mat,
+    read_noise_frac: f32,
+    /// Per-bank noise streams (bank order).  Behind a mutex so the
+    /// `&self` compute path stays `Sync` for the serving workers.
+    streams: Mutex<Vec<Rng>>,
+    /// Per-bank MVM sweep counters.
+    reads: Vec<AtomicU64>,
+}
+
+impl BankedCrossbarLayer {
+    /// Map `weights` (n_in × n_out) onto the bank grid and program every
+    /// tile with write-verify from its own stream.  Each tile-column gets
+    /// its own TIA gain from the mapper.  Returns the layer plus the
+    /// layer-level aggregate stats (per-bank summaries are retained in the
+    /// banks and surfaced via [`Self::report`]).
+    pub fn program(weights: &Mat, params: CellParams, tol_ms: f32,
+                   rng: &mut Rng) -> (Self, ProgramStats) {
+        let (rows, cols) = weights.shape();
+        let tile_rows = rows.div_ceil(MACRO_DIM);
+        let tile_cols = cols.div_ceil(MACRO_DIM);
+
+        // per-tile-column mapping: one TIA bank per column of tiles
+        let mut col_gains = Vec::with_capacity(tile_cols);
+        let mut col_targets = Vec::with_capacity(tile_cols);
+        for tj in 0..tile_cols {
+            let c0 = tj * MACRO_DIM;
+            let bc = (cols - c0).min(MACRO_DIM);
+            let sub = Mat::from_fn(rows, bc, |r, c| weights.get(r, c0 + c));
+            let gain = mapper::required_gain(&sub);
+            col_targets
+                .push(mapper::quantize(&mapper::weight_to_conductance(&sub, gain)));
+            col_gains.push(gain);
+        }
+
+        let n_banks = tile_rows * tile_cols;
+        let mut banks = Vec::with_capacity(n_banks);
+        let mut streams = Vec::with_capacity(n_banks);
+        let mut agg = ProgramStats::default();
+        for ti in 0..tile_rows {
+            for tj in 0..tile_cols {
+                let r0 = ti * MACRO_DIM;
+                let c0 = tj * MACRO_DIM;
+                let br = (rows - r0).min(MACRO_DIM);
+                let bc = (cols - c0).min(MACRO_DIM);
+                let mut stream = rng.split(); // per-bank RNG stream
+                let mut tile = Macro::with_params(br, bc, params.clone());
+                let targets =
+                    Mat::from_fn(br, bc, |r, c| col_targets[tj].get(r0 + r, c));
+                let st = tile.program(&targets, tol_ms, PROGRAM_MAX_PULSES,
+                                      &mut stream);
+                let stat = BankStat {
+                    tile_row: ti,
+                    tile_col: tj,
+                    rows: br,
+                    cols: bc,
+                    gain: col_gains[tj],
+                    mean_pulses: st.mean_pulses(),
+                    failures: st.failures,
+                    max_error_ms: st.max_error_ms(),
+                    reads: 0,
+                };
+                agg.failures += st.failures;
+                agg.pulses.extend(st.pulses);
+                agg.abs_errors_ms.extend(st.abs_errors_ms);
+                banks.push(Bank {
+                    tile,
+                    row0: r0,
+                    col0: c0,
+                    g_local: Mat::zeros(br, bc),
+                    stat,
+                });
+                streams.push(stream);
+            }
+        }
+        let read_noise_frac = params.read_noise_frac;
+        let mut layer = BankedCrossbarLayer {
+            rows,
+            cols,
+            tile_rows,
+            tile_cols,
+            banks,
+            col_gains,
+            g_cache: Mat::zeros(rows, cols),
+            read_noise_frac,
+            streams: Mutex::new(streams),
+            reads: (0..n_banks).map(|_| AtomicU64::new(0)).collect(),
+        };
+        layer.refresh_cache();
+        (layer, agg)
+    }
+
+    /// Deploy *exact* conductances onto the bank grid with one uniform
+    /// gain — the configuration that is bitwise-identical to the
+    /// monolithic oracle under `Ideal` evaluation.  `stream_seed` seeds
+    /// the per-bank noise streams (deterministic per seed).
+    pub fn from_conductances(g: &Mat, gain: f32, params: CellParams,
+                             stream_seed: u64) -> Self {
+        let (rows, cols) = g.shape();
+        let tile_rows = rows.div_ceil(MACRO_DIM);
+        let tile_cols = cols.div_ceil(MACRO_DIM);
+        let n_banks = tile_rows * tile_cols;
+        let mut base = Rng::new(stream_seed ^ 0xBA2C_51DE_CAFE_F00D);
+        let mut banks = Vec::with_capacity(n_banks);
+        let mut streams = Vec::with_capacity(n_banks);
+        for ti in 0..tile_rows {
+            for tj in 0..tile_cols {
+                let r0 = ti * MACRO_DIM;
+                let c0 = tj * MACRO_DIM;
+                let br = (rows - r0).min(MACRO_DIM);
+                let bc = (cols - c0).min(MACRO_DIM);
+                let mut tile = Macro::with_params(br, bc, params.clone());
+                for r in 0..br {
+                    for c in 0..bc {
+                        // direct state injection (deployment shortcut,
+                        // equivalent to a zero-tolerance verify)
+                        *tile.cell_mut(r, c) =
+                            Cell::new(g.get(r0 + r, c0 + c), params.clone());
+                    }
+                }
+                banks.push(Bank {
+                    tile,
+                    row0: r0,
+                    col0: c0,
+                    g_local: Mat::zeros(br, bc),
+                    stat: BankStat {
+                        tile_row: ti,
+                        tile_col: tj,
+                        rows: br,
+                        cols: bc,
+                        gain,
+                        ..BankStat::default()
+                    },
+                });
+                streams.push(base.split());
+            }
+        }
+        let read_noise_frac = params.read_noise_frac;
+        let mut layer = BankedCrossbarLayer {
+            rows,
+            cols,
+            tile_rows,
+            tile_cols,
+            banks,
+            col_gains: vec![gain; tile_cols],
+            g_cache: Mat::zeros(rows, cols),
+            read_noise_frac,
+            streams: Mutex::new(streams),
+            reads: (0..n_banks).map(|_| AtomicU64::new(0)).collect(),
+        };
+        layer.refresh_cache();
+        layer
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Tile grid shape (tile_rows, tile_cols).
+    pub fn grid(&self) -> (usize, usize) {
+        (self.tile_rows, self.tile_cols)
+    }
+
+    pub fn n_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Total programmed cells (energy model input).
+    pub fn n_cells(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Per-tile-column TIA gains.
+    pub fn col_gains(&self) -> &[f32] {
+        &self.col_gains
+    }
+
+    /// Rebuild the per-bank and flattened conductance caches.
+    pub fn refresh_cache(&mut self) {
+        for bank in &mut self.banks {
+            let (br, bc) = (bank.tile.rows(), bank.tile.cols());
+            for r in 0..br {
+                for c in 0..bc {
+                    let gv = bank.tile.cell(r, c).conductance();
+                    bank.g_local.set(r, c, gv);
+                    self.g_cache.set(bank.row0 + r, bank.col0 + c, gv);
+                }
+            }
+        }
+    }
+
+    /// Effective realized weight matrix: per-tile-column
+    /// `gain_tj · (G − G_FIXED)`.
+    pub fn effective_weights(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |r, c| {
+            self.col_gains[c / MACRO_DIM] * (self.g_cache.get(r, c) - G_FIXED_MS)
+        })
+    }
+
+    /// Analog forward for one lane; see [`Self::forward_batch`].  Device
+    /// noise comes from the per-bank streams, so the caller `rng` is
+    /// untouched (kept for signature parity with [`CrossbarLayer`]).
+    pub fn forward(&self, v_in: &[f32], out: &mut [f32], noise: NoiseModel,
+                   rng: &mut Rng) {
+        self.forward_batch(v_in, out, 1, noise, rng);
+    }
+
+    /// Batched analog forward: `v_in` holds `batch` lane-contiguous input
+    /// rows, `out` receives `batch` output rows.  One GEMM per bank per
+    /// step (`Ideal`), a fused per-bank mean+variance sweep with one
+    /// column Gaussian per (bank, lane) from the bank's own stream
+    /// (`ReadFast`), or a tile-major exact device walk reading each cell
+    /// once per call (`ReadPerCell`).  All modes accumulate into the
+    /// shared output scratch and finish with the per-lane shared-negative-
+    /// weight + per-tile-column TIA epilogue.
+    pub fn forward_batch(&self, v_in: &[f32], out: &mut [f32], batch: usize,
+                         noise: NoiseModel, _rng: &mut Rng) {
+        assert_eq!(v_in.len(), batch * self.rows);
+        assert_eq!(out.len(), batch * self.cols);
+        out.fill(0.0);
+        match noise {
+            NoiseModel::Ideal => self.accumulate_ideal(v_in, out, batch),
+            NoiseModel::ReadFast => self.accumulate_fast(v_in, out, batch),
+            NoiseModel::ReadPerCell => self.accumulate_per_cell(v_in, out, batch),
+        }
+        for ctr in &self.reads {
+            ctr.fetch_add(batch as u64, Ordering::Relaxed);
+        }
+        // per-lane epilogue: the single summing amplifier per macro
+        // computes G_FIXED·Σv once per lane; each tile-column's TIA bank
+        // applies its own gain.  Same float-op order as the monolithic
+        // epilogue, so uniform gains stay bitwise equal.
+        for (vrow, orow) in v_in
+            .chunks_exact(self.rows)
+            .zip(out.chunks_exact_mut(self.cols))
+        {
+            let v_sum: f32 = vrow.iter().sum();
+            let neg = G_FIXED_MS * v_sum;
+            for (chunk, &gain) in
+                orow.chunks_mut(MACRO_DIM).zip(self.col_gains.iter())
+            {
+                for o in chunk.iter_mut() {
+                    *o = gain * (*o - neg);
+                }
+            }
+        }
+    }
+
+    /// One noise-free GEMM per bank, accumulated into the shared output.
+    fn accumulate_ideal(&self, v_in: &[f32], out: &mut [f32], batch: usize) {
+        for bank in &self.banks {
+            let (br, bc) = bank.g_local.shape();
+            matmul_block_accum(v_in, self.rows, bank.row0,
+                               bank.g_local.as_slice(), out, self.cols,
+                               bank.col0, batch, br, bc);
+        }
+    }
+
+    /// Fused mean+variance sweep per bank: exact per-cell column moments
+    /// `frac²·Σ_r (v·G)²` with one Gaussian per (bank, lane, column) drawn
+    /// from the bank's own stream — noise independent across physical
+    /// arrays, variances adding to the monolithic column total.
+    fn accumulate_fast(&self, v_in: &[f32], out: &mut [f32], batch: usize) {
+        let frac = self.read_noise_frac;
+        let mut streams = self.streams.lock().unwrap();
+        for (bank, stream) in self.banks.iter().zip(streams.iter_mut()) {
+            let (br, bc) = bank.g_local.shape();
+            let gl = bank.g_local.as_slice();
+            let mut var = [0.0f32; MACRO_DIM];
+            for b in 0..batch {
+                let vrow =
+                    &v_in[b * self.rows + bank.row0..b * self.rows + bank.row0 + br];
+                let orow = &mut out
+                    [b * self.cols + bank.col0..b * self.cols + bank.col0 + bc];
+                var[..bc].fill(0.0);
+                for (r, &v) in vrow.iter().enumerate() {
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let grow = &gl[r * bc..(r + 1) * bc];
+                    for ((o, vc), &gc) in
+                        orow.iter_mut().zip(var.iter_mut()).zip(grow)
+                    {
+                        let term = v * gc;
+                        *o += term;
+                        *vc += term * term;
+                    }
+                }
+                for (o, vc) in orow.iter_mut().zip(var[..bc].iter()) {
+                    *o += frac * vc.sqrt() * stream.gaussian_f32();
+                }
+            }
+        }
+    }
+
+    /// Tile-major exact device walk: each cell is read **once per call**
+    /// from its bank's stream and the draw serves every lane (the burst is
+    /// faster than the read-noise bandwidth), amortizing the walk over the
+    /// batch.  With zero read noise this is bitwise equal to the `Ideal`
+    /// path (same accumulation order).
+    fn accumulate_per_cell(&self, v_in: &[f32], out: &mut [f32], batch: usize) {
+        let mut streams = self.streams.lock().unwrap();
+        for (bank, stream) in self.banks.iter().zip(streams.iter_mut()) {
+            let (br, bc) = (bank.tile.rows(), bank.tile.cols());
+            for r in 0..br {
+                for c in 0..bc {
+                    let gv = bank.tile.cell(r, c).read(stream);
+                    for b in 0..batch {
+                        let v = v_in[b * self.rows + bank.row0 + r];
+                        if v != 0.0 {
+                            out[b * self.cols + bank.col0 + c] += v * gv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Age all banks (each from its own stream), then refresh the caches.
+    pub fn age(&mut self, dt_s: f64) {
+        let streams = self.streams.get_mut().unwrap();
+        for (bank, stream) in self.banks.iter_mut().zip(streams.iter_mut()) {
+            bank.tile.age(dt_s, stream);
+        }
+        self.refresh_cache();
+    }
+
+    /// Snapshot topology + per-bank program/read stats.
+    pub fn report(&self, layer: usize) -> BankReport {
+        let banks: Vec<BankStat> = self
+            .banks
+            .iter()
+            .zip(self.reads.iter())
+            .map(|(b, reads)| {
+                let mut s = b.stat.clone();
+                s.reads = reads.load(Ordering::Relaxed);
+                s
+            })
+            .collect();
+        BankReport {
+            layer,
+            rows: self.rows,
+            cols: self.cols,
+            tile_rows: self.tile_rows,
+            tile_cols: self.tile_cols,
+            reads: banks.iter().map(|b| b.reads).sum(),
+            banks,
+        }
+    }
+}
+
+/// Which substrate a score-net layer deploys on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Banking {
+    /// Banked whenever the matrix exceeds one macro, monolithic otherwise.
+    Auto,
+    /// Always the monolithic [`CrossbarLayer`] (the parity oracle).
+    ForceMonolithic,
+    /// Always [`BankedCrossbarLayer`] (exercises 1×1 grids too).
+    ForceBanked,
+}
+
+/// One score-net layer on either substrate.  The monolithic arm is the
+/// parity oracle; the banked arm is the scaling substrate.
+pub enum ScoreLayer {
+    Mono(CrossbarLayer),
+    Banked(BankedCrossbarLayer),
+}
+
+impl ScoreLayer {
+    /// Does a matrix of this shape exceed one 32×32 macro?
+    pub fn exceeds_macro(rows: usize, cols: usize) -> bool {
+        rows > MACRO_DIM || cols > MACRO_DIM
+    }
+
+    fn pick(banking: Banking, rows: usize, cols: usize) -> bool {
+        match banking {
+            Banking::Auto => Self::exceeds_macro(rows, cols),
+            Banking::ForceMonolithic => false,
+            Banking::ForceBanked => true,
+        }
+    }
+
+    /// Deploy exact conductances; `stream_seed` feeds the banked arm's
+    /// per-bank noise streams.
+    pub fn from_conductances(g: &Mat, gain: f32, params: CellParams,
+                             stream_seed: u64, banking: Banking) -> Self {
+        let (rows, cols) = g.shape();
+        if Self::pick(banking, rows, cols) {
+            ScoreLayer::Banked(BankedCrossbarLayer::from_conductances(
+                g, gain, params, stream_seed,
+            ))
+        } else {
+            ScoreLayer::Mono(CrossbarLayer::from_conductances(g, gain, params))
+        }
+    }
+
+    /// Program weights with write-verify on the selected substrate.
+    pub fn program(weights: &Mat, params: CellParams, tol_ms: f32,
+                   rng: &mut Rng, banking: Banking) -> (Self, ProgramStats) {
+        let (rows, cols) = weights.shape();
+        if Self::pick(banking, rows, cols) {
+            let (l, st) = BankedCrossbarLayer::program(weights, params, tol_ms, rng);
+            (ScoreLayer::Banked(l), st)
+        } else {
+            let (l, st) = CrossbarLayer::program(weights, params, tol_ms, rng);
+            (ScoreLayer::Mono(l), st)
+        }
+    }
+
+    pub fn is_banked(&self) -> bool {
+        matches!(self, ScoreLayer::Banked(_))
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            ScoreLayer::Mono(l) => l.shape(),
+            ScoreLayer::Banked(l) => l.shape(),
+        }
+    }
+
+    pub fn n_cells(&self) -> usize {
+        match self {
+            ScoreLayer::Mono(l) => l.n_cells(),
+            ScoreLayer::Banked(l) => l.n_cells(),
+        }
+    }
+
+    pub fn effective_weights(&self) -> Mat {
+        match self {
+            ScoreLayer::Mono(l) => l.effective_weights(),
+            ScoreLayer::Banked(l) => l.effective_weights(),
+        }
+    }
+
+    pub fn forward(&self, v_in: &[f32], out: &mut [f32], noise: NoiseModel,
+                   rng: &mut Rng) {
+        match self {
+            ScoreLayer::Mono(l) => l.forward(v_in, out, noise, rng),
+            ScoreLayer::Banked(l) => l.forward(v_in, out, noise, rng),
+        }
+    }
+
+    pub fn forward_batch(&self, v_in: &[f32], out: &mut [f32], batch: usize,
+                         noise: NoiseModel, rng: &mut Rng) {
+        match self {
+            ScoreLayer::Mono(l) => l.forward_batch(v_in, out, batch, noise, rng),
+            ScoreLayer::Banked(l) => l.forward_batch(v_in, out, batch, noise, rng),
+        }
+    }
+
+    /// Age the substrate; the monolithic arm draws from `rng`, the banked
+    /// arm from its per-bank streams.
+    pub fn age(&mut self, dt_s: f64, rng: &mut Rng) {
+        match self {
+            ScoreLayer::Mono(l) => l.age(dt_s, rng),
+            ScoreLayer::Banked(l) => l.age(dt_s),
+        }
+    }
+
+    /// Bank topology report; monolithic layers report their implicit grid
+    /// and layer-level read count, with no per-bank stats (`banks` empty).
+    pub fn report(&self, layer: usize) -> BankReport {
+        match self {
+            ScoreLayer::Mono(l) => {
+                let (rows, cols) = l.shape();
+                BankReport {
+                    layer,
+                    rows,
+                    cols,
+                    tile_rows: rows.div_ceil(MACRO_DIM),
+                    tile_cols: cols.div_ceil(MACRO_DIM),
+                    reads: l.reads(),
+                    banks: Vec::new(),
+                }
+            }
+            ScoreLayer::Banked(l) => l.report(layer),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn quiet() -> CellParams {
+        CellParams { read_noise_frac: 0.0, ..CellParams::default() }
+    }
+
+    fn test_weights(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(rows, cols, |_, _| 0.7 * rng.gaussian_f32())
+    }
+
+    #[test]
+    fn grid_shapes_cover_ragged_edges() {
+        let w = test_weights(40, 70, 1);
+        let mut rng = Rng::new(2);
+        let (layer, _) = BankedCrossbarLayer::program(&w, quiet(), 0.0005, &mut rng);
+        assert_eq!(layer.grid(), (2, 3));
+        assert_eq!(layer.n_banks(), 6);
+        let rep = layer.report(0);
+        assert_eq!(rep.banks.len(), 6);
+        // ragged edge tiles keep their true size
+        assert_eq!((rep.banks[5].rows, rep.banks[5].cols), (8, 6));
+        assert_eq!((rep.banks[0].rows, rep.banks[0].cols), (32, 32));
+    }
+
+    #[test]
+    fn per_column_gains_tighten_quantization() {
+        // column block 0 has small weights, block 1 large: per-tile-column
+        // gains must differ and the small block must quantize finer than a
+        // single global gain would allow
+        let mut rng = Rng::new(3);
+        let w = Mat::from_fn(8, 40, |_, c| {
+            let scale: f32 = if c < 32 { 0.05 } else { 2.0 };
+            scale * rng.gaussian_f32()
+        });
+        let (layer, _) = BankedCrossbarLayer::program(&w, quiet(), 0.0002, &mut rng);
+        let gains = layer.col_gains();
+        assert_eq!(gains.len(), 2);
+        assert!(gains[0] < 0.2 * gains[1],
+                "small block must get a much smaller gain: {gains:?}");
+        let we = layer.effective_weights();
+        // small-block deployment error stays at the small block's scale
+        let mut max_err = 0.0f32;
+        for r in 0..8 {
+            for c in 0..32 {
+                max_err = max_err.max((we.get(r, c) - w.get(r, c)).abs());
+            }
+        }
+        assert!(max_err < 0.03, "small-block error {max_err}");
+    }
+
+    #[test]
+    fn programming_aggregates_per_bank_stats() {
+        let w = test_weights(40, 40, 5);
+        let mut rng = Rng::new(6);
+        let (layer, agg) = BankedCrossbarLayer::program(&w, quiet(), 0.0012, &mut rng);
+        assert_eq!(agg.pulses.len() + agg.failures, 40 * 40);
+        let rep = layer.report(2);
+        assert_eq!(rep.layer, 2);
+        assert_eq!(rep.n_banks(), 4);
+        for b in &rep.banks {
+            assert!(b.mean_pulses > 0.0, "write-verify must pulse");
+            assert!(b.max_error_ms <= agg.max_error_ms() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn banked_matches_monolithic_bitwise_when_ideal() {
+        for (rows, cols) in [(8, 8), (16, 70), (70, 16), (40, 70)] {
+            let w = test_weights(rows, cols, 7 + rows as u64);
+            let m = mapper::map_layer(&w);
+            let mono =
+                CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet());
+            let banked = BankedCrossbarLayer::from_conductances(
+                &m.g_target, m.gain, quiet(), 11,
+            );
+            let mut rng = Rng::new(8);
+            let v: Vec<f32> = (0..rows).map(|i| (i as f32 * 0.37).sin()).collect();
+            let mut a = vec![0.0f32; cols];
+            let mut b = vec![0.0f32; cols];
+            mono.forward(&v, &mut a, NoiseModel::Ideal, &mut rng);
+            banked.forward(&v, &mut b, NoiseModel::Ideal, &mut rng);
+            assert_eq!(a, b, "{rows}x{cols} scalar");
+            let batch = 5;
+            let vb: Vec<f32> =
+                (0..batch * rows).map(|i| (i as f32 * 0.13).cos()).collect();
+            let mut ab = vec![0.0f32; batch * cols];
+            let mut bb = vec![0.0f32; batch * cols];
+            mono.forward_batch(&vb, &mut ab, batch, NoiseModel::Ideal, &mut rng);
+            banked.forward_batch(&vb, &mut bb, batch, NoiseModel::Ideal, &mut rng);
+            assert_eq!(ab, bb, "{rows}x{cols} batched");
+        }
+    }
+
+    #[test]
+    fn quiet_read_per_cell_equals_ideal() {
+        // zero read noise: the tile-major device walk must reproduce the
+        // per-bank GEMM bit for bit (same accumulation order)
+        let w = test_weights(40, 40, 9);
+        let m = mapper::map_layer(&w);
+        let layer = BankedCrossbarLayer::from_conductances(
+            &m.g_target, m.gain, quiet(), 13,
+        );
+        let mut rng = Rng::new(10);
+        let batch = 3;
+        let vb: Vec<f32> = (0..batch * 40).map(|_| rng.gaussian_f32()).collect();
+        let mut ideal = vec![0.0f32; batch * 40];
+        let mut walk = vec![0.0f32; batch * 40];
+        layer.forward_batch(&vb, &mut ideal, batch, NoiseModel::Ideal, &mut rng);
+        layer.forward_batch(&vb, &mut walk, batch, NoiseModel::ReadPerCell,
+                            &mut rng);
+        assert_eq!(ideal, walk);
+    }
+
+    #[test]
+    fn read_fast_bank_noise_matches_monolithic_moments() {
+        let w = test_weights(40, 40, 11);
+        let m = mapper::map_layer(&w);
+        let params = CellParams::default(); // 1% read noise
+        let mono = CrossbarLayer::from_conductances(&m.g_target, m.gain,
+                                                    params.clone());
+        let banked = BankedCrossbarLayer::from_conductances(
+            &m.g_target, m.gain, params, 17,
+        );
+        let v: Vec<f32> = (0..40).map(|i| 0.3 + 0.01 * i as f32).collect();
+        let n = 3000;
+        let mut rng = Rng::new(12);
+        let mut out = vec![0.0f32; 40];
+        let mut col0_mono = Vec::with_capacity(n);
+        let mut col0_bank = Vec::with_capacity(n);
+        for _ in 0..n {
+            mono.forward(&v, &mut out, NoiseModel::ReadFast, &mut rng);
+            col0_mono.push(out[0]);
+            banked.forward(&v, &mut out, NoiseModel::ReadFast, &mut rng);
+            col0_bank.push(out[0]);
+        }
+        let (m1, s1) = (stats::mean(&col0_mono), stats::std(&col0_mono));
+        let (m2, s2) = (stats::mean(&col0_bank), stats::std(&col0_bank));
+        assert!((m1 - m2).abs() < 0.02 * m1.abs().max(0.1), "means {m1} vs {m2}");
+        assert!((s1 - s2).abs() / s1.max(1e-9) < 0.15, "stds {s1} vs {s2}");
+        assert!(s1 > 0.0);
+    }
+
+    #[test]
+    fn bank_streams_decorrelate_bank_noise() {
+        // two banks in one tile-row: with identical conductances and
+        // inputs, their noisy column outputs must differ (independent
+        // per-bank streams)
+        let g = Mat::full(8, 64, 0.06);
+        let layer = BankedCrossbarLayer::from_conductances(
+            &g, 1.0, CellParams::default(), 19,
+        );
+        let mut rng = Rng::new(13);
+        let v = vec![1.0f32; 8];
+        let mut out = vec![0.0f32; 64];
+        layer.forward(&v, &mut out, NoiseModel::ReadFast, &mut rng);
+        assert_ne!(&out[..32], &out[32..],
+                   "bank noise must be independent per array");
+    }
+
+    #[test]
+    fn read_counters_track_sweeps() {
+        let g = Mat::full(8, 40, 0.06);
+        let layer = BankedCrossbarLayer::from_conductances(&g, 1.0, quiet(), 23);
+        let mut rng = Rng::new(14);
+        let v = vec![0.5f32; 8];
+        let mut out = vec![0.0f32; 40];
+        layer.forward(&v, &mut out, NoiseModel::Ideal, &mut rng);
+        let vb = vec![0.5f32; 4 * 8];
+        let mut outb = vec![0.0f32; 4 * 40];
+        layer.forward_batch(&vb, &mut outb, 4, NoiseModel::Ideal, &mut rng);
+        let rep = layer.report(0);
+        assert_eq!(rep.banks.len(), 2);
+        for b in &rep.banks {
+            assert_eq!(b.reads, 5, "1 scalar + 4 batched lanes");
+        }
+        assert_eq!(rep.total_reads(), 10);
+    }
+
+    #[test]
+    fn score_layer_auto_picks_substrate() {
+        let small = test_weights(8, 8, 15);
+        let wide = test_weights(8, 48, 16);
+        let mut rng = Rng::new(17);
+        let (l1, _) = ScoreLayer::program(&small, quiet(), 0.001, &mut rng,
+                                          Banking::Auto);
+        let (l2, _) = ScoreLayer::program(&wide, quiet(), 0.001, &mut rng,
+                                          Banking::Auto);
+        assert!(!l1.is_banked());
+        assert!(l2.is_banked());
+        assert_eq!(l2.report(1).n_banks(), 2);
+        // mono report: implicit grid, no per-bank stats, live layer reads
+        let r1 = l1.report(0);
+        assert_eq!(r1.n_banks(), 1);
+        assert!(!r1.is_banked());
+        assert_eq!(r1.total_reads(), 0);
+        let vin = [0.1f32; 8];
+        let mut out = vec![0.0f32; 8];
+        l1.forward(&vin, &mut out, NoiseModel::Ideal, &mut rng);
+        let vinb = [0.1f32; 3 * 8];
+        let mut outb = vec![0.0f32; 3 * 8];
+        l1.forward_batch(&vinb, &mut outb, 3, NoiseModel::Ideal, &mut rng);
+        assert_eq!(l1.report(0).total_reads(), 4,
+                   "monolithic read counter must stay live");
+    }
+
+    #[test]
+    fn aging_preserves_window_and_refreshes_cache() {
+        let w = test_weights(40, 40, 18);
+        let mut rng = Rng::new(19);
+        let (mut layer, _) =
+            BankedCrossbarLayer::program(&w, quiet(), 0.001, &mut rng);
+        let before = layer.effective_weights();
+        layer.age(1e6);
+        let after = layer.effective_weights();
+        assert!(before.max_abs_diff(&after) > 0.0, "drift must show in cache");
+        for tj in 0..2 {
+            let gain = layer.col_gains()[tj];
+            for r in 0..40 {
+                for c in (tj * 32)..((tj * 32 + 32).min(40)) {
+                    let wv = after.get(r, c) / gain + G_FIXED_MS;
+                    assert!((0.02 - 1e-5..=0.10 + 1e-5).contains(&wv));
+                }
+            }
+        }
+    }
+}

@@ -22,15 +22,18 @@
 //! evaluates B input lanes against the same conductance cache in one
 //! blocked GEMM (`Ideal`), or one fused mean+variance sweep per lane
 //! (`ReadFast`, preserving the exact per-cell `frac²·Σ(v·G)²` column
-//! moments), with the shared-negative-weight subtraction and TIA gain
-//! applied per lane afterwards.  Choose `forward` for single trajectories
-//! and device-physics studies (`ReadPerCell` always re-reads every cell and
-//! gains nothing from batching); choose `forward_batch` whenever the caller
-//! already holds B concurrent states — the serving coordinator's coalesced
-//! batches route here so the model is amortized over all lanes.  Under
+//! moments), or one tile-major device sweep reading each cell once per
+//! call (`ReadPerCell`), with the shared-negative-weight subtraction and
+//! TIA gain applied per lane afterwards.  Choose `forward` for single
+//! trajectories and device-physics studies; choose `forward_batch`
+//! whenever the caller already holds B concurrent states — the serving
+//! coordinator's coalesced batches route here so the model is amortized
+//! over all lanes.  Under
 //! `Ideal` the two paths are bitwise identical per lane; under `ReadFast`
 //! they are statistically identical (same column moments, different RNG
 //! draw order) — both asserted by the batched-parity suite.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::mapper::{map_layer, Mapping};
 use super::noise::NoiseModel;
@@ -55,6 +58,10 @@ pub struct CrossbarLayer {
     g_cache: Mat,
     /// Read-noise fraction used by the fast statistical model.
     read_noise_frac: f32,
+    /// MVM sweeps served (scalar forward = 1, batched forward = B lanes)
+    /// — the monolithic counterpart of the banked per-bank counters, so
+    /// the serving metrics stay live on either substrate.
+    reads: AtomicU64,
 }
 
 impl CrossbarLayer {
@@ -95,6 +102,7 @@ impl CrossbarLayer {
             tile_cols,
             g_cache: Mat::zeros(rows, cols),
             read_noise_frac,
+            reads: AtomicU64::new(0),
         };
         layer.refresh_cache();
         (layer, agg)
@@ -138,6 +146,7 @@ impl CrossbarLayer {
             tile_cols,
             g_cache: Mat::zeros(rows, cols),
             read_noise_frac,
+            reads: AtomicU64::new(0),
         };
         layer.refresh_cache();
         layer
@@ -158,6 +167,11 @@ impl CrossbarLayer {
     /// Total programmed cells (for the energy model).
     pub fn n_cells(&self) -> usize {
         self.rows * self.cols
+    }
+
+    /// MVM sweeps served so far (scalar = 1 each, batched = B lanes each).
+    pub fn reads(&self) -> u64 {
+        self.reads.load(Ordering::Relaxed)
     }
 
     /// Rebuild the flattened conductance cache from the tiles.
@@ -188,6 +202,7 @@ impl CrossbarLayer {
                    rng: &mut Rng) {
         assert_eq!(v_in.len(), self.rows);
         assert_eq!(out.len(), self.cols);
+        self.reads.fetch_add(1, Ordering::Relaxed);
         match noise {
             NoiseModel::ReadPerCell => self.forward_per_cell(v_in, out, rng),
             NoiseModel::Ideal => self.forward_fast(v_in, out, 0.0, rng),
@@ -211,27 +226,30 @@ impl CrossbarLayer {
     /// batched shared-negative-weight subtraction — the single summing
     /// amplifier per macro serves every lane, so its `G_FIXED·Σv` term is
     /// computed per lane from the same cached conductances.
-    /// `ReadPerCell` falls back to the exact per-lane device walk.
+    /// `ReadPerCell` runs the tile-major device sweep
+    /// ([`Self::forward_per_cell_batch`]): cell reads amortize over the
+    /// batch instead of re-walking the array per lane.
     pub fn forward_batch(&self, v_in: &[f32], out: &mut [f32], batch: usize,
                          noise: NoiseModel, rng: &mut Rng) {
         assert_eq!(v_in.len(), batch * self.rows);
         assert_eq!(out.len(), batch * self.cols);
-        if noise == NoiseModel::ReadPerCell {
-            // exact device path: no GEMM to amortize, every cell re-reads
-            for (vrow, orow) in v_in
-                .chunks_exact(self.rows)
-                .zip(out.chunks_exact_mut(self.cols))
-            {
-                self.forward(vrow, orow, noise, rng);
+        self.reads.fetch_add(batch as u64, Ordering::Relaxed);
+        match noise {
+            // exact device path, tile-major: every cell is read once per
+            // call and the draw serves all lanes (the B-lane burst is
+            // faster than the read-noise bandwidth, so the fluctuation is
+            // frozen within a call) — amortizes the device walk over the
+            // batch instead of re-walking the array per lane
+            NoiseModel::ReadPerCell => {
+                self.forward_per_cell_batch(v_in, out, batch, rng)
             }
-            return;
+            NoiseModel::Ideal => {
+                self.forward_fast_batch(v_in, out, batch, 0.0, rng)
+            }
+            NoiseModel::ReadFast => self.forward_fast_batch(
+                v_in, out, batch, self.read_noise_frac, rng,
+            ),
         }
-        let frac = match noise {
-            NoiseModel::Ideal => 0.0,
-            NoiseModel::ReadFast => self.read_noise_frac,
-            NoiseModel::ReadPerCell => unreachable!(),
-        };
-        self.forward_fast_batch(v_in, out, batch, frac, rng);
         // batched shared negative weight + TIA gain, per lane (same float
         // ops as the scalar epilogue so Ideal stays bitwise equal)
         for (vrow, orow) in v_in
@@ -283,6 +301,48 @@ impl CrossbarLayer {
             }
             for (o, vc) in orow.iter_mut().zip(var.iter()) {
                 *o += frac * vc.sqrt() * rng.gaussian_f32();
+            }
+        }
+    }
+
+    /// Batched exact device path, tile-major: one noisy read per cell per
+    /// call, applied to every lane.  Per-lane partial sums are buffered
+    /// per tile and then added to the output, preserving the scalar
+    /// [`Self::forward_per_cell`] per-element float-op order — so with
+    /// zero read noise the two paths agree bitwise, and with noise the
+    /// per-lane moments match (lanes share the per-call draw, which is the
+    /// frozen-fluctuation burst model).
+    fn forward_per_cell_batch(&self, v_in: &[f32], out: &mut [f32],
+                              batch: usize, rng: &mut Rng) {
+        out.fill(0.0);
+        let mut tile_acc = vec![0.0f32; batch * MACRO_DIM];
+        for ti in 0..self.tile_rows {
+            let r0 = ti * MACRO_DIM;
+            for tj in 0..self.tile_cols {
+                let m = &self.tiles[ti * self.tile_cols + tj];
+                let c0 = tj * MACRO_DIM;
+                let (tr, tc) = (m.rows(), m.cols());
+                tile_acc[..batch * tc].fill(0.0);
+                for r in 0..tr {
+                    for c in 0..tc {
+                        let gv = m.cell(r, c).read(rng);
+                        for b in 0..batch {
+                            let v = v_in[b * self.rows + r0 + r];
+                            if v != 0.0 {
+                                tile_acc[b * tc + c] += v * gv;
+                            }
+                        }
+                    }
+                }
+                for b in 0..batch {
+                    let orow =
+                        &mut out[b * self.cols + c0..b * self.cols + c0 + tc];
+                    for (o, &a) in
+                        orow.iter_mut().zip(&tile_acc[b * tc..(b + 1) * tc])
+                    {
+                        *o += a;
+                    }
+                }
             }
         }
     }
@@ -502,15 +562,15 @@ mod tests {
     }
 
     #[test]
-    fn forward_batch_per_cell_falls_back_per_lane() {
+    fn forward_batch_per_cell_tile_sweep_matches_scalar_when_quiet() {
         let w = test_weights(10, 8, 25);
         let mut rng = Rng::new(26);
         let (layer, _) = CrossbarLayer::program(&w, quiet_params(), 0.0005, &mut rng);
         let batch = 3;
         let v: Vec<f32> = (0..batch * 10).map(|_| rng.gaussian_f32()).collect();
         let mut batched = vec![0.0f32; batch * 8];
-        // quiet params ⇒ per-cell path is deterministic, so the fallback
-        // must equal the scalar walk exactly
+        // quiet params ⇒ both walks are deterministic, so the tile-major
+        // batched sweep must equal the scalar per-lane walk exactly
         layer.forward_batch(&v, &mut batched, batch, NoiseModel::ReadPerCell,
                             &mut rng);
         let mut scalar = vec![0.0f32; 8];

@@ -1,14 +1,19 @@
 //! Analog crossbar compute layer: weight mapping, differential-pair MVM
-//! with TIA readout, and tiling of logical matrices onto 32×32 macros.
+//! with TIA readout, and tiling of logical matrices onto 32×32 macros —
+//! either inside one monolithic [`CrossbarLayer`] (the parity oracle) or
+//! sharded across a grid of macro banks ([`bank::BankedCrossbarLayer`])
+//! with per-bank RNG streams and per-tile-column TIA gains.
 //!
 //! This is the rust mirror of the L1 Pallas kernel semantics
 //! (`python/compile/kernels/crossbar.py` / `ref.py`): the three
 //! implementations are cross-checked by the integration tests.
 
+pub mod bank;
 pub mod layer;
 pub mod mapper;
 pub mod noise;
 
+pub use bank::{BankReport, BankStat, BankedCrossbarLayer, Banking, ScoreLayer};
 pub use layer::CrossbarLayer;
 pub use mapper::{conductance_to_weight, required_gain, weight_to_conductance, Mapping};
 pub use noise::NoiseModel;

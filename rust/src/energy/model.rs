@@ -5,6 +5,10 @@
 //! crossbar static dissipation `Σ V²·G`, op-amp quiescent power (OPAx171
 //! class), AD633 multipliers, and DAC/driver overhead.  Energy per sample
 //! is `P_total × T_solve` with the projected `T_solve = 20 µs`.
+//! Peripheral counts are charged **per macro** from the actual bank grid
+//! ([`score_path_peripherals`]): a layer wider than one 32×32 array pays
+//! for every extra summing amplifier and row-fanout buffer its sharding
+//! ([`crate::crossbar::BankedCrossbarLayer`]) physically requires.
 //!
 //! **Digital side** — the "state-of-the-art GPU scaled to the same
 //! technology node" baseline (paper ref. 73): a per-step cost
@@ -41,6 +45,46 @@ pub const T_STEP_DIGITAL_S: f64 = 10e-6;
 /// dominates the picojoule-scale MAC energy).
 pub const E_STEP_DIGITAL_J: f64 = 288e-9;
 
+/// Per-macro peripheral inventory of a (possibly banked) score path.
+///
+/// The counts scale with the **actual bank grid** of each layer
+/// (`ceil(rows/32) × ceil(cols/32)` macros), not with one assumed macro:
+///
+/// * one TIA per physical output column — partial sums down a column of
+///   tiles meet a single TIA bank, so row-sharding adds no TIAs;
+/// * one shared-negative-weight summing amplifier **per macro** (the
+///   row-shared fixed conductance is a per-array structure);
+/// * one input buffer per extra driven copy of a row — a row that spans
+///   `tc` tile-columns must be driven into `tc` macros, and only the first
+///   copy comes free from the source, so `rows·(tc−1)` buffers per layer.
+#[derive(Debug, Clone, Default)]
+pub struct ScorePathPeripherals {
+    /// Programmed crossbar cells.
+    pub n_cells: usize,
+    /// Macros (banks) across all layers.
+    pub n_banks: usize,
+    /// Column TIAs across all layers.
+    pub n_tias: usize,
+    /// Row-fanout input buffers across all layers.
+    pub n_row_buffers: usize,
+}
+
+/// Peripheral inventory for layers of the given logical shapes, tiled on
+/// 32×32 macros exactly as [`crate::crossbar::BankedCrossbarLayer`] does.
+pub fn score_path_peripherals(shapes: &[(usize, usize)]) -> ScorePathPeripherals {
+    const MACRO_DIM: usize = crate::device::array::MACRO_DIM;
+    let mut p = ScorePathPeripherals::default();
+    for &(rows, cols) in shapes {
+        let tile_rows = rows.div_ceil(MACRO_DIM);
+        let tile_cols = cols.div_ceil(MACRO_DIM);
+        p.n_cells += rows * cols;
+        p.n_banks += tile_rows * tile_cols;
+        p.n_tias += cols;
+        p.n_row_buffers += rows * (tile_cols - 1);
+    }
+    p
+}
+
 /// Analog system cost for one sampling.
 #[derive(Debug, Clone)]
 pub struct AnalogCost {
@@ -56,19 +100,55 @@ pub struct AnalogCost {
     pub t_solve_s: f64,
 }
 
+/// The paper's score-net layer shapes (2→14→14→2).
+const PAPER_SHAPES: [(usize, usize); 3] = [(2, 14), (14, 14), (14, 2)];
+
 impl AnalogCost {
+    /// Projected system for an arbitrary (possibly banked) score path:
+    /// peripherals are charged **per macro** from the actual bank grid —
+    /// TIAs per physical column, one summing amp per bank, row-fanout
+    /// buffers for extra tile-columns — plus `dim` integrators, `dim`
+    /// output inverters, `2·dim` multipliers (f/g paths) and the
+    /// time-embedding (2) + noise (`dim`) DAC channels.
+    pub fn projected_for_layers(shapes: &[(usize, usize)], dim: usize) -> Self {
+        let p = score_path_peripherals(shapes);
+        AnalogCost {
+            n_cells: p.n_cells,
+            n_opamps: p.n_tias + p.n_banks + p.n_row_buffers + dim + dim,
+            n_mults: 2 * dim,
+            n_dacs: 2 + dim,
+            t_solve_s: T_SOLVE_PROJECTED_S,
+        }
+    }
+
+    /// Conditional (classifier-free-guidance) system for an arbitrary
+    /// score path: the score hardware is duplicated (conditional +
+    /// unconditional branches run concurrently), integrators/inverters are
+    /// shared, plus `dim` CFG combine amps and `n_classes` condition-DAC
+    /// channels.
+    pub fn conditional_for_layers(shapes: &[(usize, usize)], dim: usize,
+                                  n_classes: usize) -> Self {
+        let p = score_path_peripherals(shapes);
+        AnalogCost {
+            n_cells: 2 * p.n_cells,
+            // two score paths + shared integrators/inverters + CFG combine
+            n_opamps: 2 * (p.n_tias + p.n_banks + p.n_row_buffers)
+                + dim
+                + dim
+                + dim,
+            n_mults: 2 * dim,
+            n_dacs: 2 + dim + n_classes,
+            t_solve_s: T_SOLVE_PROJECTED_S,
+        }
+    }
+
     /// The unconditional circle system (Fig. 3): 3-layer 2→14→14→2 net.
+    /// Every layer fits one macro, so this reduces to the paper's counts:
     /// 30 TIAs (14+14+2) + 3 shared-negative-weight summing amps +
     /// 2 integrators + 2 output inverters; 4 multipliers (2 dims × f/g
     /// paths); DACs: time embedding (2 chan) + noise (2).
     pub fn unconditional_projected() -> Self {
-        AnalogCost {
-            n_cells: 2 * 14 + 14 * 14 + 14 * 2,
-            n_opamps: 30 + 3 + 2 + 2,
-            n_mults: 4,
-            n_dacs: 4,
-            t_solve_s: T_SOLVE_PROJECTED_S,
-        }
+        Self::projected_for_layers(&PAPER_SHAPES, 2)
     }
 
     /// The conditional latent-diffusion system (Fig. 4): classifier-free
@@ -76,14 +156,7 @@ impl AnalogCost {
     /// (duplicated score path on hardware), plus condition-embedding DACs
     /// and the CFG combine amps.
     pub fn conditional_projected() -> Self {
-        let u = Self::unconditional_projected();
-        AnalogCost {
-            n_cells: 2 * u.n_cells,
-            n_opamps: 2 * (30 + 3) + 2 + 2 + 2, // two score paths + combine
-            n_mults: 4,
-            n_dacs: 4 + 3, // + condition one-hot channels
-            t_solve_s: T_SOLVE_PROJECTED_S,
-        }
+        Self::conditional_for_layers(&PAPER_SHAPES, 2, 3)
     }
 
     /// Same systems at PCB timing (1 s solve) — the demonstrator numbers.
@@ -232,6 +305,35 @@ mod tests {
         let d2 = DigitalCost::new(200, 1);
         assert!((d2.latency_s() / d1.latency_s() - 2.0).abs() < 1e-12);
         assert!((d2.energy_j() / d1.energy_j() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peripherals_scale_with_bank_grid() {
+        // one-macro layers: the paper's exact counts
+        let p = score_path_peripherals(&[(2, 14), (14, 14), (14, 2)]);
+        assert_eq!(p.n_cells, 252);
+        assert_eq!(p.n_banks, 3);
+        assert_eq!(p.n_tias, 30);
+        assert_eq!(p.n_row_buffers, 0);
+
+        // a 2→64→64→2 net shards onto 2+4+2 = 8 macros
+        let shapes = [(2usize, 64usize), (64, 64), (64, 2)];
+        let w = score_path_peripherals(&shapes);
+        assert_eq!(w.n_banks, 2 + 4 + 2);
+        assert_eq!(w.n_tias, 64 + 64 + 2);
+        // row fanout: 2·(2−1) + 64·(2−1) + 64·0
+        assert_eq!(w.n_row_buffers, 2 + 64);
+        assert_eq!(w.n_cells, 2 * 64 + 64 * 64 + 64 * 2);
+
+        // the cost model charges every extra macro: more banks ⇒ more
+        // op-amps ⇒ more power than a single-macro-per-layer assumption
+        let wide = AnalogCost::projected_for_layers(&shapes, 2);
+        assert_eq!(wide.n_opamps, 130 + 8 + 66 + 2 + 2);
+        let naive = AnalogCost {
+            n_opamps: 130 + 3 + 2 + 2, // one summing amp per layer, no fanout
+            ..wide.clone()
+        };
+        assert!(wide.power_w() > naive.power_w());
     }
 
     #[test]

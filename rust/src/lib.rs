@@ -8,7 +8,8 @@
 //!
 //! * [`device`] / [`crossbar`] — behavioural 180 nm RRAM simulator: 1T1R
 //!   cells, 32×32 macros, write-verify programming, read/write noise,
-//!   differential-pair analog matrix-vector multiplication.
+//!   differential-pair analog matrix-vector multiplication, and macro-bank
+//!   sharding ([`crossbar::bank`]) for layers wider than one array.
 //! * [`analog`] — op-amp circuit blocks (TIA, diode-clamp ReLU, AD633
 //!   multipliers, RC integrator) and the closed-loop continuous-time
 //!   neural-ODE/SDE solver — the paper's core contribution.

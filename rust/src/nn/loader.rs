@@ -5,7 +5,9 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context};
 
+use crate::crossbar::mapper::map_layer;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::util::tensor::Mat;
 
 /// Weight-space + conductance-space parameters of one trained score net.
@@ -113,6 +115,40 @@ impl ScoreWeights {
             }
         }
         Ok(())
+    }
+
+    /// Synthesize a random-but-valid `dim→hidden→hidden→dim` network with
+    /// conductances produced by the real mapper, so both realizations
+    /// deploy consistently.  This is the shared fixture for benches and
+    /// the bank-sharding parity suite — `hidden` may exceed one macro
+    /// width (it must be even for the sin/cos embedding split).
+    pub fn synthetic(dim: usize, hidden: usize, n_classes: usize,
+                     seed: u64) -> Self {
+        assert!(hidden % 2 == 0, "hidden must be even (sin/cos embedding)");
+        let mut rng = Rng::new(seed);
+        let w1 = Mat::from_fn(dim, hidden, |_, _| 0.5 * rng.gaussian_f32());
+        let w2 = Mat::from_fn(hidden, hidden, |_, _| 0.25 * rng.gaussian_f32());
+        let w3 = Mat::from_fn(hidden, dim, |_, _| 0.5 * rng.gaussian_f32());
+        let m1 = map_layer(&w1);
+        let m2 = map_layer(&w2);
+        let m3 = map_layer(&w3);
+        let w = ScoreWeights {
+            b1: (0..hidden).map(|_| 0.05 * rng.gaussian_f32()).collect(),
+            b2: (0..hidden).map(|_| 0.05 * rng.gaussian_f32()).collect(),
+            b3: (0..dim).map(|_| 0.05 * rng.gaussian_f32()).collect(),
+            emb_w: (0..hidden / 2).map(|i| 0.5 * (i + 1) as f32).collect(),
+            cond_proj: Mat::from_fn(n_classes, hidden,
+                                    |_, _| 0.2 * rng.gaussian_f32()),
+            g1: m1.g_target,
+            g2: m2.g_target,
+            g3: m3.g_target,
+            gains: [m1.gain, m2.gain, m3.gain],
+            w1,
+            w2,
+            w3,
+        };
+        w.validate().expect("synthetic weights must validate");
+        w
     }
 
     pub fn dim(&self) -> usize {

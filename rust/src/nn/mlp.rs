@@ -17,7 +17,7 @@ use super::loader::ScoreWeights;
 use super::{BatchScratch, ScoreNet};
 use crate::analog::activation::relu_diode;
 use crate::clamp_voltage;
-use crate::crossbar::{CrossbarLayer, NoiseModel};
+use crate::crossbar::{BankReport, Banking, NoiseModel, ScoreLayer};
 use crate::device::cell::CellParams;
 use crate::util::rng::Rng;
 use crate::util::tensor::{matmul_bias_into, scratch_slice, vecmat_bias_into, Mat};
@@ -132,10 +132,17 @@ impl ScoreNet for DigitalScoreNet {
 
 /// Analog network: three crossbar layers + TIA + diode-ReLU, with device
 /// noise models.  This is the hardware of Fig. 2h–i.
+///
+/// Each layer deploys on a [`ScoreLayer`]: monolithic when it fits one
+/// 32×32 macro, sharded across a bank grid
+/// ([`crate::crossbar::BankedCrossbarLayer`]) when it doesn't — so nets
+/// with hidden layers wider than one macro run end-to-end.  The banking
+/// policy is overridable for the parity suite (the monolithic layer is the
+/// oracle the banked substrate is checked against).
 pub struct AnalogScoreNet {
-    l1: CrossbarLayer,
-    l2: CrossbarLayer,
-    l3: CrossbarLayer,
+    l1: ScoreLayer,
+    l2: ScoreLayer,
+    l3: ScoreLayer,
     b1: Vec<f32>,
     b2: Vec<f32>,
     b3: Vec<f32>,
@@ -152,15 +159,13 @@ pub struct AnalogScoreNet {
 /// Max hidden width supported by the stack-allocated hot path.
 const MAX_HIDDEN: usize = 32;
 
+/// Base seed for the banked layers' per-bank noise streams (xored with the
+/// layer index so the three layers decorrelate deterministically).
+const BANK_STREAM_SEED: u64 = 0x5EED_BA4C_0000_0000;
+
 impl AnalogScoreNet {
-    /// Deploy from exported conductances (exact, plus optional write noise
-    /// applied by reprogramming — see [`Self::program_from_weights`]).
-    pub fn from_conductances(w: &ScoreWeights, params: CellParams,
-                             noise: NoiseModel) -> Self {
-        assert!(w.hidden() <= MAX_HIDDEN);
-        let l1 = CrossbarLayer::from_conductances(&w.g1, w.gains[0], params.clone());
-        let l2 = CrossbarLayer::from_conductances(&w.g2, w.gains[1], params.clone());
-        let l3 = CrossbarLayer::from_conductances(&w.g3, w.gains[2], params);
+    fn assemble(w: &ScoreWeights, l1: ScoreLayer, l2: ScoreLayer,
+                l3: ScoreLayer, noise: NoiseModel) -> Self {
         AnalogScoreNet {
             l1,
             l2,
@@ -177,36 +182,53 @@ impl AnalogScoreNet {
         }
     }
 
+    /// Deploy from exported conductances (exact, plus optional write noise
+    /// applied by reprogramming — see [`Self::program_from_weights`]).
+    /// Layers wider than one macro deploy banked automatically.
+    pub fn from_conductances(w: &ScoreWeights, params: CellParams,
+                             noise: NoiseModel) -> Self {
+        Self::from_conductances_with(w, params, noise, Banking::Auto)
+    }
+
+    /// [`Self::from_conductances`] with an explicit banking policy.
+    pub fn from_conductances_with(w: &ScoreWeights, params: CellParams,
+                                  noise: NoiseModel, banking: Banking) -> Self {
+        let l = |g, gain, i: u64| {
+            ScoreLayer::from_conductances(g, gain, params.clone(),
+                                          BANK_STREAM_SEED ^ i, banking)
+        };
+        let l1 = l(&w.g1, w.gains[0], 1);
+        let l2 = l(&w.g2, w.gains[1], 2);
+        let l3 = l(&w.g3, w.gains[2], 3);
+        Self::assemble(w, l1, l2, l3, noise)
+    }
+
     /// Deploy by *programming* the weight matrices with write-verify —
     /// includes realistic write noise (Fig. 5b/e).  `tol_ms` is the verify
-    /// band; smaller = more pulses, less residual error.
+    /// band; smaller = more pulses, less residual error.  Layers wider
+    /// than one macro program banked (per-bank streams, per-tile-column
+    /// gains) automatically.
     pub fn program_from_weights(w: &ScoreWeights, params: CellParams,
                                 tol_ms: f32, noise: NoiseModel,
                                 rng: &mut Rng) -> (Self, usize) {
-        assert!(w.hidden() <= MAX_HIDDEN);
-        let (l1, s1) = CrossbarLayer::program(&w.w1, params.clone(), tol_ms, rng);
-        let (l2, s2) = CrossbarLayer::program(&w.w2, params.clone(), tol_ms, rng);
-        let (l3, s3) = CrossbarLayer::program(&w.w3, params, tol_ms, rng);
+        Self::program_from_weights_with(w, params, tol_ms, noise, rng,
+                                        Banking::Auto)
+    }
+
+    /// [`Self::program_from_weights`] with an explicit banking policy.
+    pub fn program_from_weights_with(w: &ScoreWeights, params: CellParams,
+                                     tol_ms: f32, noise: NoiseModel,
+                                     rng: &mut Rng, banking: Banking)
+                                     -> (Self, usize) {
+        let (l1, s1) =
+            ScoreLayer::program(&w.w1, params.clone(), tol_ms, rng, banking);
+        let (l2, s2) =
+            ScoreLayer::program(&w.w2, params.clone(), tol_ms, rng, banking);
+        let (l3, s3) = ScoreLayer::program(&w.w3, params, tol_ms, rng, banking);
         let total_pulses = s1.pulses.iter().sum::<usize>()
             + s2.pulses.iter().sum::<usize>()
             + s3.pulses.iter().sum::<usize>();
-        (
-            AnalogScoreNet {
-                l1,
-                l2,
-                l3,
-                b1: w.b1.clone(),
-                b2: w.b2.clone(),
-                b3: w.b3.clone(),
-                emb: Embedding::new(w.emb_w.clone(), w.cond_proj.clone()).with_dac(12),
-                noise,
-                dim: w.dim(),
-                hidden: w.hidden(),
-                n_classes: w.n_classes(),
-                _priv: (),
-            },
-            total_pulses,
-        )
+        (Self::assemble(w, l1, l2, l3, noise), total_pulses)
     }
 
     pub fn noise_model(&self) -> NoiseModel {
@@ -220,6 +242,24 @@ impl AnalogScoreNet {
     /// Total programmed cells across the three layers (energy model input).
     pub fn n_cells(&self) -> usize {
         self.l1.n_cells() + self.l2.n_cells() + self.l3.n_cells()
+    }
+
+    /// Logical (rows, cols) of the three layers — the energy model scales
+    /// per-macro peripheral counts from these.
+    pub fn layer_shapes(&self) -> [(usize, usize); 3] {
+        [self.l1.shape(), self.l2.shape(), self.l3.shape()]
+    }
+
+    /// Bank topology + per-bank program/read stats of every layer, for the
+    /// serving metrics.  Monolithic layers report their implicit grid with
+    /// no per-bank stats.
+    pub fn bank_report(&self) -> Vec<BankReport> {
+        vec![self.l1.report(0), self.l2.report(1), self.l3.report(2)]
+    }
+
+    /// True if any layer runs on the banked substrate.
+    pub fn is_banked(&self) -> bool {
+        self.l1.is_banked() || self.l2.is_banked() || self.l3.is_banked()
     }
 
     /// Effective realized weights (for deployment-error diagnostics).
@@ -251,31 +291,55 @@ impl ScoreNet for AnalogScoreNet {
     fn eval(&self, x: &[f32], t: f32, onehot: &[f32], out: &mut [f32], rng: &mut Rng) {
         debug_assert_eq!(x.len(), self.dim);
         let h = self.hidden;
-        let mut emb = [0.0f32; MAX_HIDDEN];
-        self.emb.eval(t, onehot, &mut emb[..h]);
+        if h <= MAX_HIDDEN && self.dim <= MAX_HIDDEN {
+            // hot path: stack scratch whenever the net fits one macro width
+            let mut emb = [0.0f32; MAX_HIDDEN];
+            self.emb.eval(t, onehot, &mut emb[..h]);
 
-        let mut xin = [0.0f32; MAX_HIDDEN];
-        for (o, &v) in xin.iter_mut().zip(x) {
-            *o = clamp_voltage(v);
+            let mut xin = [0.0f32; MAX_HIDDEN];
+            for (o, &v) in xin.iter_mut().zip(x) {
+                *o = clamp_voltage(v);
+            }
+            let mut h1 = [0.0f32; MAX_HIDDEN];
+            self.l1.forward(&xin[..self.dim], &mut h1[..h], self.noise, rng);
+            for k in 0..h {
+                h1[k] = clamp_voltage(relu_diode(h1[k] + self.b1[k] + emb[k]));
+            }
+            let mut h2 = [0.0f32; MAX_HIDDEN];
+            self.l2.forward(&h1[..h], &mut h2[..h], self.noise, rng);
+            for k in 0..h {
+                h2[k] = clamp_voltage(relu_diode(h2[k] + self.b2[k] + emb[k]));
+            }
+            self.l3.forward(&h2[..h], out, self.noise, rng);
+            for (o, &b) in out.iter_mut().zip(&self.b3) {
+                *o += b;
+            }
+            return;
         }
-        let mut h1 = [0.0f32; MAX_HIDDEN];
-        self.l1.forward(&xin[..self.dim], &mut h1[..h], self.noise, rng);
+        // banked-width fallback: heap scratch for nets wider than one
+        // macro (reference lane; the batched lane reuses grow-only scratch
+        // and stays zero-alloc at steady state)
+        let mut emb = vec![0.0f32; h];
+        self.emb.eval(t, onehot, &mut emb);
+        let xin: Vec<f32> = x.iter().map(|&v| clamp_voltage(v)).collect();
+        let mut h1 = vec![0.0f32; h];
+        self.l1.forward(&xin, &mut h1, self.noise, rng);
         for k in 0..h {
             h1[k] = clamp_voltage(relu_diode(h1[k] + self.b1[k] + emb[k]));
         }
-        let mut h2 = [0.0f32; MAX_HIDDEN];
-        self.l2.forward(&h1[..h], &mut h2[..h], self.noise, rng);
+        let mut h2 = vec![0.0f32; h];
+        self.l2.forward(&h1, &mut h2, self.noise, rng);
         for k in 0..h {
             h2[k] = clamp_voltage(relu_diode(h2[k] + self.b2[k] + emb[k]));
         }
-        self.l3.forward(&h2[..h], out, self.noise, rng);
+        self.l3.forward(&h2, out, self.noise, rng);
         for (o, &b) in out.iter_mut().zip(&self.b3) {
             *o += b;
         }
     }
 
     /// Native batched lane: all three crossbar layers evaluate B lanes per
-    /// GEMM ([`CrossbarLayer::forward_batch`]), with the DAC-quantized
+    /// GEMM ([`ScoreLayer::forward_batch`]), with the DAC-quantized
     /// embedding computed once for all lanes.  Ideal mode is bitwise equal
     /// to per-lane [`Self::eval`]; noisy modes draw per lane in lane order.
     fn eval_batch(&self, xs: &[f32], t: f32, onehot: &[f32], out: &mut [f32],
@@ -508,6 +572,49 @@ mod tests {
                        &mut rng);
         for b in 1..batch {
             assert_ne!(&out[..2], &out[b * 2..(b + 1) * 2], "lane {b}");
+        }
+    }
+
+    #[test]
+    fn wide_net_auto_banks_and_matches_monolithic_oracle() {
+        // hidden = 48 > MACRO_DIM: layers must shard onto bank grids and
+        // stay bitwise equal to the forced-monolithic oracle under Ideal
+        let w = ScoreWeights::synthetic(2, 48, 3, 31);
+        let banked = AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal);
+        assert!(banked.is_banked());
+        let mono = AnalogScoreNet::from_conductances_with(
+            &w, quiet(), NoiseModel::Ideal, Banking::ForceMonolithic);
+        assert!(!mono.is_banked());
+        let grids: Vec<(usize, usize)> = banked
+            .bank_report()
+            .iter()
+            .map(|r| (r.tile_rows, r.tile_cols))
+            .collect();
+        assert_eq!(grids, vec![(1, 2), (2, 2), (2, 1)]);
+
+        let mut rng = Rng::new(32);
+        let mut a = [0.0f32; 2];
+        let mut b = [0.0f32; 2];
+        for i in 0..10 {
+            let x = [0.2 * i as f32 - 1.0, 0.1 * i as f32];
+            let t = i as f32 / 10.0;
+            banked.eval(&x, t, &[0.0, 0.0, 0.0], &mut a, &mut rng);
+            mono.eval(&x, t, &[0.0, 0.0, 0.0], &mut b, &mut rng);
+            assert_eq!(a, b, "i={i}");
+        }
+        // batched lane bitwise equal to the scalar lane on the banked net
+        let batch = 5;
+        let xs: Vec<f32> = (0..batch * 2).map(|i| 0.11 * i as f32 - 0.4).collect();
+        let mut scratch = BatchScratch::new();
+        let mut outb = vec![0.0f32; batch * 2];
+        banked.eval_batch(&xs, 0.4, &[0.0, 0.0, 0.0], &mut outb, &mut scratch,
+                          &mut rng);
+        let mut s = [0.0f32; 2];
+        for lane in 0..batch {
+            banked.eval(&xs[lane * 2..(lane + 1) * 2], 0.4, &[0.0, 0.0, 0.0],
+                        &mut s, &mut rng);
+            assert_eq!(&outb[lane * 2..(lane + 1) * 2], s.as_slice(),
+                       "lane {lane}");
         }
     }
 

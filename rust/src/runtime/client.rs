@@ -1,92 +1,157 @@
 //! Thin PJRT client wrapper: compile HLO text, execute with f32 buffers.
+//!
+//! The real implementation needs the `xla` bindings crate, which exists
+//! only in the offline vendored registry.  The in-tree manifest therefore
+//! builds a **stub** by default (identical API, every entry point returns
+//! an error) so the rest of the stack — simulator, solvers, coordinator —
+//! compiles and tests everywhere.  To get the real runtime inside the
+//! vendored environment, follow the recipe in `rust/Cargo.toml`
+//! (uncomment the `xla` dependency and build with
+//! `RUSTFLAGS="--cfg pjrt_vendored"` — a cfg flag, not a cargo feature,
+//! so no feature combination can select undeclarable code).  Callers
+//! already treat runtime construction as fallible
+//! (artifact-gated tests skip when `ArtifactStore::open` fails), so the
+//! stub degrades gracefully.
 
-use std::path::Path;
+#[cfg(pjrt_vendored)]
+mod imp {
+    use std::path::Path;
 
-use anyhow::{anyhow, Context};
+    use anyhow::{anyhow, Context};
 
-/// The process-wide PJRT CPU client plus compile/execute helpers.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-/// A compiled executable with its input arity/shapes for validation.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Expected input shapes ([] = scalar).
-    pub input_shapes: Vec<Vec<usize>>,
-}
-
-impl Runtime {
-    /// Create the CPU client (one per process is plenty; cheap to share
-    /// behind an Arc in the coordinator).
-    pub fn cpu() -> anyhow::Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
-        Ok(Runtime { client })
+    /// The process-wide PJRT CPU client plus compile/execute helpers.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A compiled executable with its input arity/shapes for validation.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        /// Expected input shapes ([] = scalar).
+        pub input_shapes: Vec<Vec<usize>>,
     }
 
-    /// Compile an HLO-text file into an executable.
-    pub fn compile_hlo_file(&self, path: impl AsRef<Path>,
-                            input_shapes: Vec<Vec<usize>>) -> anyhow::Result<Executable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    impl Runtime {
+        /// Create the CPU client (one per process is plenty; cheap to share
+        /// behind an Arc in the coordinator).
+        pub fn cpu() -> anyhow::Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile an HLO-text file into an executable.
+        pub fn compile_hlo_file(&self, path: impl AsRef<Path>,
+                                input_shapes: Vec<Vec<usize>>) -> anyhow::Result<Executable> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+            Ok(Executable { exe, input_shapes })
+        }
+    }
+
+    impl Executable {
+        /// Execute with f32 inputs; each input is (data, shape) where shape []
+        /// means scalar.  Returns the first (tuple-unwrapped) f32 output.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<f32>> {
+            if inputs.len() != self.input_shapes.len() {
+                return Err(anyhow!(
+                    "arity mismatch: got {}, executable wants {}",
+                    inputs.len(),
+                    self.input_shapes.len()
+                ));
+            }
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (i, (data, shape)) in inputs.iter().enumerate() {
+                let want = &self.input_shapes[i];
+                if *shape != want.as_slice() {
+                    return Err(anyhow!("input {i} shape {shape:?} != expected {want:?}"));
+                }
+                let n: usize = shape.iter().product();
+                if data.len() != n.max(1) {
+                    return Err(anyhow!("input {i}: {} elems for shape {shape:?}", data.len()));
+                }
+                let lit = if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?
+                };
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+            let out = lit.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+            out.to_vec::<f32>()
+                .map_err(|e| anyhow!("to_vec<f32>: {e:?}"))
+                .context("reading executable output")
+        }
+    }
+}
+
+#[cfg(not(pjrt_vendored))]
+mod imp {
+    use std::path::Path;
+
+    use anyhow::anyhow;
+
+    fn unavailable() -> anyhow::Error {
+        anyhow!(
+            "PJRT runtime unavailable: memdiff was built without \
+             `--cfg pjrt_vendored` (the `xla` bindings crate is only in \
+             the offline vendored registry)"
         )
-        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-        Ok(Executable { exe, input_shapes })
+    }
+
+    /// Stub client: construction fails, so artifact-gated callers skip.
+    pub struct Runtime {
+        _priv: (),
+    }
+
+    /// Stub executable (never constructed; kept for API parity).
+    pub struct Executable {
+        /// Expected input shapes ([] = scalar).
+        pub input_shapes: Vec<Vec<usize>>,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> anyhow::Result<Self> {
+            Err(unavailable())
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-stub".to_string()
+        }
+
+        pub fn compile_hlo_file(&self, _path: impl AsRef<Path>,
+                                _input_shapes: Vec<Vec<usize>>) -> anyhow::Result<Executable> {
+            Err(unavailable())
+        }
+    }
+
+    impl Executable {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<f32>> {
+            Err(unavailable())
+        }
     }
 }
 
-impl Executable {
-    /// Execute with f32 inputs; each input is (data, shape) where shape []
-    /// means scalar.  Returns the first (tuple-unwrapped) f32 output.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> anyhow::Result<Vec<f32>> {
-        if inputs.len() != self.input_shapes.len() {
-            return Err(anyhow!(
-                "arity mismatch: got {}, executable wants {}",
-                inputs.len(),
-                self.input_shapes.len()
-            ));
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, (data, shape)) in inputs.iter().enumerate() {
-            let want = &self.input_shapes[i];
-            if *shape != want.as_slice() {
-                return Err(anyhow!("input {i} shape {shape:?} != expected {want:?}"));
-            }
-            let n: usize = shape.iter().product();
-            if data.len() != n.max(1) {
-                return Err(anyhow!("input {i}: {} elems for shape {shape:?}", data.len()));
-            }
-            let lit = if shape.is_empty() {
-                xla::Literal::scalar(data[0])
-            } else {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape input {i}: {e:?}"))?
-            };
-            literals.push(lit);
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
-        let out = lit.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
-        out.to_vec::<f32>()
-            .map_err(|e| anyhow!("to_vec<f32>: {e:?}"))
-            .context("reading executable output")
-    }
-}
+pub use imp::{Executable, Runtime};

