@@ -3,16 +3,20 @@
 //! Compares the three crossbar noise fidelities in both lanes — scalar
 //! `forward` (one vector) and batched `forward_batch` (B lanes per GEMM) —
 //! plus a bank-grid sweep (monolithic oracle vs `BankedCrossbarLayer` at
-//! 1×1 / 1×2 / 2×2 / 3×3 tile grids, capturing the tiling overhead), the
-//! fused analog score-net evaluation and one closed-loop solver sub-step.
-//! Per-MVM nanoseconds land in `BENCH_mvm.json` so the perf trajectory is
-//! tracked across PRs.
+//! 1×1 / 1×2 / 2×2 / 3×3 tile grids, capturing the tiling overhead), a
+//! bank-parallel thread sweep (1/2/4/8-thread `exec::Pool` over a 3×3
+//! grid, `par_*` keys), the fused analog score-net evaluation and one
+//! closed-loop solver sub-step.  Per-MVM nanoseconds land in
+//! `BENCH_mvm.json` so the perf trajectory is tracked across PRs.
+
+use std::sync::Arc;
 
 use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
 use memdiff::crossbar::mapper::map_layer;
 use memdiff::crossbar::{BankedCrossbarLayer, CrossbarLayer, NoiseModel};
 use memdiff::data::Meta;
 use memdiff::device::cell::CellParams;
+use memdiff::exec::{Ctx, ParStrategy, Pool};
 use memdiff::nn::{AnalogScoreNet, BatchScratch, ScoreNet, ScoreWeights};
 use memdiff::util::bench;
 use memdiff::util::rng::Rng;
@@ -27,7 +31,11 @@ fn main() -> anyhow::Result<()> {
 
     bench::section("crossbar MVM 14x14, scalar vs batched (per-MVM cost)");
     let wmat = Mat::from_fn(14, 14, |_, _| 0.6 * rng.gaussian_f32());
-    let (layer, _) = CrossbarLayer::program(&wmat, CellParams::default(), 0.0012, &mut rng);
+    let (mut layer, _) = CrossbarLayer::program(&wmat, CellParams::default(), 0.0012, &mut rng);
+    // pre-existing series stay pinned serial so their BENCH keys remain
+    // comparable across PRs and machines; the par_* sweep below is the
+    // parallel series with explicit thread counts
+    layer.set_exec(Ctx::serial());
     let v = rng.gaussian_vec(14);
     let mut out = vec![0.0f32; 14];
     let vb: Vec<f32> = (0..B).flat_map(|_| v.iter().copied()).collect();
@@ -68,10 +76,12 @@ fn main() -> anyhow::Result<()> {
     for &(dim, label, key_mono, key_banked) in GRIDS {
         let wmat = Mat::from_fn(dim, dim, |_, _| 0.5 * rng.gaussian_f32());
         let m = map_layer(&wmat);
-        let mono = CrossbarLayer::from_conductances(&m.g_target, m.gain,
-                                                    CellParams::default());
-        let banked = BankedCrossbarLayer::from_conductances(
+        let mut mono = CrossbarLayer::from_conductances(&m.g_target, m.gain,
+                                                        CellParams::default());
+        mono.set_exec(Ctx::serial()); // serial series: tiling overhead only
+        let mut banked = BankedCrossbarLayer::from_conductances(
             &m.g_target, m.gain, CellParams::default(), 42);
+        banked.set_exec(Ctx::serial());
         let vb: Vec<f32> = (0..B * dim).map(|_| rng.gaussian_f32()).collect();
         let mut outb = vec![0.0f32; B * dim];
         let rm = bench::bench(&format!("{label} ({dim}x{dim}) mono (B={B})"),
@@ -92,6 +102,54 @@ fn main() -> anyhow::Result<()> {
                  rb.mean_ns() / rm.mean_ns(), banked.n_banks());
     }
 
+    bench::section("bank-parallel thread sweep: banked 3x3 (96x96) forward_batch, B=64");
+    // wall time of the whole batched call (not per-MVM) — the acceptance
+    // series: par_3x3_t*_ns must fall from 1 → 4 threads.  Auto picks the
+    // lane axis at B=64; the banks_* series pins the tile-column axis.
+    {
+        let dim = 96;
+        let wmat = Mat::from_fn(dim, dim, |_, _| 0.5 * rng.gaussian_f32());
+        let m = map_layer(&wmat);
+        let vb: Vec<f32> = (0..B * dim).map(|_| rng.gaussian_f32()).collect();
+        let mut outb = vec![0.0f32; B * dim];
+        const SWEEP: &[(usize, &str, &str)] = &[
+            (1, "par_3x3_t1_ns", "par_banks_3x3_t1_ns"),
+            (2, "par_3x3_t2_ns", "par_banks_3x3_t2_ns"),
+            (4, "par_3x3_t4_ns", "par_banks_3x3_t4_ns"),
+            (8, "par_3x3_t8_ns", "par_banks_3x3_t8_ns"),
+        ];
+        let mut t1_auto = f64::NAN;
+        let mut t4_auto = f64::NAN;
+        for &(threads, key_auto, key_banks) in SWEEP {
+            let pool = Arc::new(Pool::new(threads));
+            for (strategy, key) in
+                [(ParStrategy::Auto, key_auto), (ParStrategy::Banks, key_banks)]
+            {
+                let mut banked = BankedCrossbarLayer::from_conductances(
+                    &m.g_target, m.gain, CellParams::default(), 42);
+                banked.set_exec(Ctx::with_pool(strategy, pool.clone()));
+                let r = bench::bench(
+                    &format!("3x3 banked t={threads} {strategy} (B={B})"), 150,
+                    || {
+                        banked.forward_batch(&vb, &mut outb, B,
+                                             NoiseModel::Ideal, &mut rng);
+                        std::hint::black_box(&outb);
+                    });
+                bench::report(&r);
+                json.push((key, r.mean_ns()));
+                if strategy == ParStrategy::Auto {
+                    if threads == 1 {
+                        t1_auto = r.mean_ns();
+                    } else if threads == 4 {
+                        t4_auto = r.mean_ns();
+                    }
+                }
+            }
+        }
+        json.push(("par_3x3_speedup_t4", t1_auto / t4_auto));
+        println!("  => 1→4 thread speedup {:.2}x", t1_auto / t4_auto);
+    }
+
     match Meta::load_default().and_then(|meta| {
         let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json"))?;
         Ok((meta, w))
@@ -106,7 +164,8 @@ fn main() -> anyhow::Result<()> {
                 ("read-per-cell", "eval_read_per_cell_scalar_ns",
                  "eval_read_per_cell_batched_ns", NoiseModel::ReadPerCell),
             ] {
-                let net = AnalogScoreNet::from_conductances(&w, CellParams::default(), nm);
+                let net = AnalogScoreNet::from_conductances(&w, CellParams::default(), nm)
+                    .with_exec(Ctx::serial()); // serial series (see above)
                 let mut o = [0.0f32; 2];
                 let r = bench::bench(&format!("score eval {label} scalar"), 150, || {
                     net.eval(&[0.4, -0.2], 0.5, &[0.0, 0.0, 0.0], &mut o, &mut rng);
@@ -132,7 +191,8 @@ fn main() -> anyhow::Result<()> {
 
             bench::section("closed-loop solver: one full solve (2000 substeps)");
             let net = AnalogScoreNet::from_conductances(
-                &w, CellParams::default(), NoiseModel::ReadFast);
+                &w, CellParams::default(), NoiseModel::ReadFast)
+                .with_exec(Ctx::serial());
             let solver = AnalogSolver::new(&net, SolverConfig::new(SolverMode::Sde)
                 .with_schedule(meta.sched));
             let mut trace = Vec::new();

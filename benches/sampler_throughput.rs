@@ -35,10 +35,15 @@ fn main() -> anyhow::Result<()> {
 
     bench::section("analog solver throughput, scalar vs batched (samples/s)");
 
+    // scalar/batched lane series stay pinned serial so their BENCH keys
+    // remain comparable across PRs and machines; pool usage is recorded
+    // separately below (pool_* keys from the service section)
     let net = AnalogScoreNet::from_conductances(
-        &w, CellParams::default(), NoiseModel::ReadFast);
+        &w, CellParams::default(), NoiseModel::ReadFast)
+        .with_exec(memdiff::exec::Ctx::serial());
     let solver = AnalogSolver::new(&net, SolverConfig::new(SolverMode::Sde)
-        .with_schedule(meta.sched).with_substeps(2000));
+        .with_schedule(meta.sched).with_substeps(2000))
+        .with_exec(memdiff::exec::Ctx::serial());
     let t0 = std::time::Instant::now();
     let n = 192;
     std::hint::black_box(solver.solve_batch(n, &[], &mut rng));
@@ -58,8 +63,11 @@ fn main() -> anyhow::Result<()> {
 
     bench::section("rust digital throughput, scalar vs batched (samples/s)");
 
-    let dig = DigitalScoreNet::new(w.clone());
-    let sampler = DigitalSampler::new(&dig, SamplerMode::Sde).with_schedule(meta.sched);
+    let dig = DigitalScoreNet::new(w.clone())
+        .with_exec(memdiff::exec::Ctx::serial());
+    let sampler = DigitalSampler::new(&dig, SamplerMode::Sde)
+        .with_schedule(meta.sched)
+        .with_exec(memdiff::exec::Ctx::serial());
     let steps = 128;
     let reps_scalar = 16;
     let t0 = std::time::Instant::now();
@@ -119,6 +127,7 @@ fn main() -> anyhow::Result<()> {
             linger: std::time::Duration::from_millis(1),
         },
         seed: 3,
+        intra_threads: 0,
     }));
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
@@ -140,7 +149,15 @@ fn main() -> anyhow::Result<()> {
     let service_sps = samples as f64 / t0.elapsed().as_secs_f64();
     bench::row(&["service (100-step SDE, batched lane)",
                  &format!("{service_sps:.0} samples/s over {total} requests")]);
-    bench::row(&["service metrics", &service.metrics.snapshot().report()]);
+    let snapshot = service.metrics.snapshot();
+    bench::row(&["service metrics", &snapshot.report()]);
+    // pool configuration/usage of this run, so the perf trajectory records
+    // what parallelism the numbers were taken under
+    let (pool_threads, pool_scopes, pool_tasks) = snapshot
+        .pool
+        .as_ref()
+        .map(|p| (p.threads as f64, p.scopes_run as f64, p.tasks_run as f64))
+        .unwrap_or((f64::NAN, f64::NAN, f64::NAN));
 
     bench::write_json("BENCH_sampler_throughput.json", &[
         ("batch_size", B as f64),
@@ -152,6 +169,9 @@ fn main() -> anyhow::Result<()> {
         ("analog_batched_speedup", analog_batched / analog_scalar),
         ("pjrt_samples_per_s", pjrt_sps),
         ("service_samples_per_s", service_sps),
+        ("pool_threads", pool_threads),
+        ("pool_scopes_run", pool_scopes),
+        ("pool_tasks_run", pool_tasks),
     ])?;
     Ok(())
 }

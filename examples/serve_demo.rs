@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
             linger: std::time::Duration::from_millis(2),
         },
         seed: 99,
+        intra_threads: 0,
     }));
 
     println!("serve_demo: {CLIENTS} clients x {REQUESTS_PER_CLIENT} requests, 4 workers");

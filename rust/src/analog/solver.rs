@@ -37,6 +37,7 @@ use super::integrator::Integrator;
 use super::multiplier::Multiplier;
 use crate::clamp_voltage;
 use crate::diffusion::schedule::VpSchedule;
+use crate::exec::{self, lane_chunk_lens, lane_plan, Shards};
 use crate::nn::{BatchScratch, ScoreNet};
 use crate::util::rng::Rng;
 
@@ -111,6 +112,10 @@ pub struct AnalogSolver<'a> {
     mul_drift: Multiplier,
     /// g²/σ-path multipliers.
     mul_score: Multiplier,
+    /// Parallel-execution context for the batched lane's per-sub-step
+    /// integrator update (NN GEMMs parallelize inside the net); per-lane
+    /// noise-DAC streams keep any chunking bitwise deterministic.
+    pub exec: exec::Ctx,
 }
 
 impl<'a> AnalogSolver<'a> {
@@ -120,7 +125,13 @@ impl<'a> AnalogSolver<'a> {
             cfg,
             mul_drift: Multiplier::new(1.0),
             mul_score: Multiplier::new(1.0),
+            exec: exec::Ctx::default(),
         }
+    }
+
+    pub fn with_exec(mut self, exec: exec::Ctx) -> Self {
+        self.exec = exec;
+        self
     }
 
     /// Solve one trajectory.  `x0` is the pre-charge (the N(0,I) draw);
@@ -266,6 +277,15 @@ impl<'a> AnalogSolver<'a> {
         let mut scratch = BatchScratch::new();
         let loop_gain = (t_span / self.cfg.t_solve_s * self.cfg.rc_s) as f32;
 
+        // lane-chunk plan for the integrator update, fixed for the whole
+        // solve so chunk boundaries (and each lane's noise-DAC stream
+        // draws) never move between sub-steps; x and the integrator bank
+        // share one lens vector (both are lane×dim)
+        let (upd_chunk, upd_tasks) =
+            lane_plan(n, self.exec.lane_tasks(n, len));
+        let lens_x = lane_chunk_lens(n, dim, upd_chunk, upd_tasks);
+        let lens_r = lane_chunk_lens(n, 1, upd_chunk, upd_tasks);
+
         for k in 0..nsub {
             let tau = k as f64 * d_tau;
             let t = self.cfg.sched.t_end - t_span * (tau / self.cfg.t_solve_s);
@@ -286,18 +306,42 @@ impl<'a> AnalogSolver<'a> {
                                             &mut scratch, rng),
             }
 
-            for (b, lane) in lane_rngs.iter_mut().enumerate() {
-                for i in b * dim..(b + 1) * dim {
-                    let drift_term = self.mul_drift.mul(w_drift as f32, x[i]);
-                    let score_term =
-                        self.mul_score.mul(w_score as f32, net_out[i]);
-                    let mut v_sum = drift_term - score_term;
-                    if self.cfg.mode == SolverMode::Sde {
-                        v_sum += ((beta / dt_alg).sqrt() * lane.gaussian()) as f32;
+            // one update body for both execution shapes: a lane chunk is
+            // (states, its integrators, its noise-DAC streams, the chunk's
+            // base offset into the shared NN output)
+            let no: &[f32] = &net_out;
+            let update = |xc: &mut [f32], ic: &mut [Integrator],
+                          rngs: &mut [Rng], base: usize| {
+                for (bl, lane) in rngs.iter_mut().enumerate() {
+                    for j in bl * dim..(bl + 1) * dim {
+                        let drift_term =
+                            self.mul_drift.mul(w_drift as f32, xc[j]);
+                        let score_term =
+                            self.mul_score.mul(w_score as f32, no[base + j]);
+                        let mut v_sum = drift_term - score_term;
+                        if self.cfg.mode == SolverMode::Sde {
+                            v_sum +=
+                                ((beta / dt_alg).sqrt() * lane.gaussian()) as f32;
+                        }
+                        let v_in = v_sum * loop_gain;
+                        xc[j] = clamp_voltage(ic[j].step(v_in, d_tau));
                     }
-                    let v_in = v_sum * loop_gain;
-                    x[i] = clamp_voltage(ints[i].step(v_in, d_tau));
                 }
+            };
+            if upd_tasks > 1 {
+                // each lane's integrators and noise-DAC stream live whole
+                // inside one task, so the chunked update is bitwise equal
+                // to the serial call at any thread count
+                let sx = Shards::new(&mut x[..], lens_x.iter().copied());
+                let si = Shards::new(&mut ints[..], lens_x.iter().copied());
+                let sr =
+                    Shards::new(&mut lane_rngs[..], lens_r.iter().copied());
+                self.exec.run(upd_tasks, &|ti| {
+                    update(sx.take(ti), si.take(ti), sr.take(ti),
+                           ti * upd_chunk * dim);
+                });
+            } else {
+                update(&mut x[..], &mut ints[..], &mut lane_rngs[..], 0);
             }
         }
         x
@@ -459,6 +503,33 @@ mod tests {
         assert_eq!(a, b);
         for &v in &a {
             assert!((-2.0..=4.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn batched_update_bitwise_across_exec_contexts() {
+        // per-lane noise-DAC streams make the lane-chunked integrator
+        // update bitwise equal to serial at any thread count, ODE and SDE
+        use crate::exec::{Ctx, ParStrategy, Pool};
+        use std::sync::Arc;
+        let net = GaussianNet { s0: 0.5, sched: VpSchedule::default() };
+        for mode in [SolverMode::Ode, SolverMode::Sde] {
+            let ctxs = [
+                Ctx::serial(),
+                Ctx::with_pool(ParStrategy::Lanes, Arc::new(Pool::new(1))),
+                Ctx::with_pool(ParStrategy::Lanes, Arc::new(Pool::new(4))),
+            ];
+            let outs: Vec<Vec<f32>> = ctxs
+                .into_iter()
+                .map(|ctx| {
+                    let cfg = SolverConfig::new(mode).with_substeps(120);
+                    let solver = AnalogSolver::new(&net, cfg).with_exec(ctx);
+                    let mut rng = Rng::new(21);
+                    solver.solve_batched(9, &[], &mut rng)
+                })
+                .collect();
+            assert_eq!(outs[0], outs[1], "{mode:?} 1-thread pool");
+            assert_eq!(outs[0], outs[2], "{mode:?} 4-thread pool");
         }
     }
 }

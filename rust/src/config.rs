@@ -8,6 +8,8 @@
 //! workers = 4
 //! max_batch = 64
 //! linger_ms = 2
+//! threads = 0        # intra-op pool threads (0 = auto / RUST_PALLAS_THREADS)
+//! par = auto         # serial | banks | lanes | auto
 //!
 //! [solver]
 //! substeps = 2000
@@ -79,6 +81,11 @@ pub struct Config {
     pub workers: usize,
     pub max_batch: usize,
     pub linger_ms: u64,
+    /// Intra-op pool threads (0 = auto: `RUST_PALLAS_THREADS` if set, else
+    /// sized against `workers` — see [`crate::exec`]).
+    pub threads: usize,
+    /// Bank-parallel strategy for the crossbar/net forward paths.
+    pub par: crate::exec::ParStrategy,
     pub substeps: usize,
     pub guidance: f32,
     pub seed: u64,
@@ -91,6 +98,8 @@ impl Default for Config {
             workers: 2,
             max_batch: 64,
             linger_ms: 2,
+            threads: 0,
+            par: crate::exec::ParStrategy::Auto,
             substeps: 2000,
             guidance: 2.0,
             seed: 7,
@@ -106,6 +115,13 @@ impl Config {
             workers: raw.get_parsed("service", "workers")?.unwrap_or(d.workers),
             max_batch: raw.get_parsed("service", "max_batch")?.unwrap_or(d.max_batch),
             linger_ms: raw.get_parsed("service", "linger_ms")?.unwrap_or(d.linger_ms),
+            threads: raw.get_parsed("service", "threads")?.unwrap_or(d.threads),
+            par: match raw.get("service", "par") {
+                None => d.par,
+                Some(s) => s
+                    .parse()
+                    .map_err(|e| anyhow!("[service] par = {s:?}: {e}"))?,
+            },
             substeps: raw.get_parsed("solver", "substeps")?.unwrap_or(d.substeps),
             guidance: raw.get_parsed("solver", "guidance")?.unwrap_or(d.guidance),
             seed: raw.get_parsed("solver", "seed")?.unwrap_or(d.seed),
@@ -144,6 +160,19 @@ mod tests {
         assert_eq!(cfg.workers, 8);
         assert_eq!(cfg.max_batch, 64); // default
         assert_eq!(cfg.substeps, 2000);
+        assert_eq!(cfg.threads, 0); // auto
+        assert_eq!(cfg.par, crate::exec::ParStrategy::Auto);
+    }
+
+    #[test]
+    fn parallel_knobs_parse() {
+        let raw =
+            RawConfig::parse("[service]\nthreads = 4\npar = banks\n").unwrap();
+        let cfg = Config::from_raw(&raw).unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.par, crate::exec::ParStrategy::Banks);
+        let bad = RawConfig::parse("[service]\npar = rayon\n").unwrap();
+        assert!(Config::from_raw(&bad).is_err());
     }
 
     #[test]

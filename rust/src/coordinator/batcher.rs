@@ -93,7 +93,12 @@ impl Batcher {
         true
     }
 
-    /// Close the queue; pending requests still drain.
+    /// Close the queue; pending requests still drain.  Every caller
+    /// blocked in [`Self::next_batch`] — waiting on an empty queue *or*
+    /// lingering on a partial batch — is woken promptly (`notify_all`),
+    /// so shutdown latency never depends on the linger deadline.  With
+    /// intra-op pool threads multiplying worker wakeups, a lost or lazy
+    /// wakeup here would strand a worker for a full linger window.
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
@@ -291,6 +296,37 @@ mod tests {
         assert_eq!(batch.total_samples(), 4);
         assert!(waited >= Duration::from_millis(10), "{waited:?}");
         b.close();
+    }
+
+    #[test]
+    fn close_wakes_all_blocked_callers_promptly() {
+        // several callers blocked on an empty queue, plus one lingering on
+        // a partial batch with a long deadline: close() must release them
+        // all far sooner than the linger window
+        let b = std::sync::Arc::new(Batcher::new(BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_secs(30),
+        }));
+        b.submit(req(0, 0, 4)); // makes one caller linger instead of idle
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let b = std::sync::Arc::clone(&b);
+                std::thread::spawn(move || {
+                    let mut seen = 0usize;
+                    while b.next_batch().is_some() {
+                        seen += 1;
+                    }
+                    seen
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(50));
+        let t0 = Instant::now();
+        b.close();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(t0.elapsed() < Duration::from_secs(5),
+                "blocked callers must wake promptly, not after the linger");
+        assert_eq!(total, 1, "the queued request still drains exactly once");
     }
 
     #[test]

@@ -1,11 +1,14 @@
-//! Service metrics: request/sample counters, latency summaries, and the
+//! Service metrics: request/sample counters, latency summaries, the
 //! engine's macro-bank topology (grid shape + per-bank program/read stats,
-//! refreshed after every batch so read counters stay live).
+//! refreshed after every batch so read counters stay live), and the
+//! intra-op pool gauges (threads, scopes/tasks run, queue high-water mark,
+//! tasks-per-scope histogram) from [`crate::exec`].
 
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::crossbar::BankReport;
+use crate::exec::PoolStats;
 use crate::util::stats::Summary;
 
 #[derive(Default)]
@@ -17,6 +20,7 @@ struct Inner {
     wall_latency: Summary,
     batch_fill: Summary,
     banking: Vec<BankReport>,
+    pool: Option<PoolStats>,
 }
 
 /// Thread-safe metrics sink.
@@ -50,6 +54,12 @@ impl Metrics {
         self.inner.lock().unwrap().banking = banking;
     }
 
+    /// Publish the intra-op pool gauges (refreshed after every batch, like
+    /// the banking stats, so task counters stay live under traffic).
+    pub fn set_pool(&self, pool: PoolStats) {
+        self.inner.lock().unwrap().pool = Some(pool);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         MetricsSnapshot {
@@ -61,6 +71,7 @@ impl Metrics {
             p99_latency_s: m.wall_latency.p99(),
             mean_batch_fill: m.batch_fill.mean(),
             banking: m.banking.clone(),
+            pool: m.pool.clone(),
         }
     }
 }
@@ -78,6 +89,8 @@ pub struct MetricsSnapshot {
     /// Engine bank topology, one entry per score-net layer (empty when the
     /// engine exposes none, e.g. digital baselines).
     pub banking: Vec<BankReport>,
+    /// Intra-op pool gauges (None until a service publishes them).
+    pub pool: Option<PoolStats>,
 }
 
 impl MetricsSnapshot {
@@ -99,6 +112,20 @@ impl MetricsSnapshot {
             let layers: Vec<String> =
                 self.banking.iter().map(|r| r.summary()).collect();
             s.push_str(&layers.join(","));
+        }
+        if let Some(p) = &self.pool {
+            s.push_str(&format!(
+                " pool=t{}:scopes={}:tasks={}:qmax={}:hist={}",
+                p.threads,
+                p.scopes_run,
+                p.tasks_run,
+                p.max_queue_depth,
+                p.scope_size_hist
+                    .iter()
+                    .map(|h| h.to_string())
+                    .collect::<Vec<_>>()
+                    .join("/"),
+            ));
         }
         s
     }
@@ -130,6 +157,24 @@ mod tests {
         let r = m.snapshot().report();
         assert!(r.contains("requests=1"));
         assert!(!r.contains("banks="), "no banking published yet");
+        assert!(!r.contains("pool="), "no pool gauges published yet");
+    }
+
+    #[test]
+    fn pool_gauges_surface_in_report() {
+        let m = Metrics::new();
+        m.set_pool(PoolStats {
+            threads: 4,
+            scopes_run: 12,
+            tasks_run: 96,
+            max_queue_depth: 9,
+            scope_size_hist: [0, 3, 9, 0, 0],
+        });
+        let s = m.snapshot();
+        assert_eq!(s.pool.as_ref().unwrap().threads, 4);
+        let r = s.report();
+        assert!(r.contains("pool=t4:scopes=12:tasks=96:qmax=9:hist=0/3/9/0/0"),
+                "{r}");
     }
 
     #[test]

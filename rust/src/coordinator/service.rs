@@ -26,6 +26,7 @@ use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, SolverChoice, TaskKind};
 use crate::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
 use crate::crossbar::BankReport;
+use crate::exec::{self, Pool};
 use crate::diffusion::sampler::{DigitalSampler, SamplerKind, SamplerMode};
 use crate::diffusion::schedule::VpSchedule;
 use crate::energy::model::{AnalogCost, DigitalCost};
@@ -272,6 +273,12 @@ pub struct ServiceConfig {
     pub workers: usize,
     pub batcher: BatcherConfig,
     pub seed: u64,
+    /// Intra-op pool threads per process (0 = auto: `RUST_PALLAS_THREADS`
+    /// if set, else `cores − workers + 1` — the pool is shared and every
+    /// worker participates in its own scopes, so when all workers fork at
+    /// once, callers + helpers ≈ cores).  The process-shared pool is
+    /// created on the first sizing, which wins for the process lifetime.
+    pub intra_threads: usize,
 }
 
 impl Default for ServiceConfig {
@@ -280,6 +287,7 @@ impl Default for ServiceConfig {
             workers: 2,
             batcher: BatcherConfig::default(),
             seed: 0xD1FF_0510,
+            intra_threads: 0,
         }
     }
 }
@@ -294,10 +302,20 @@ pub struct Service {
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
     pub mode_gate: Arc<ModeGate>,
+    /// The process-shared intra-op pool, sized coherently against the
+    /// engine worker count at startup.
+    pool: Arc<Pool>,
 }
 
 impl Service {
     /// Start the worker pool over `engine` (+ optional pixel decoder).
+    ///
+    /// Also claims (or adopts) the process-shared [`exec::Pool`]: with
+    /// `intra_threads = 0` it sizes the pool at `cores − workers + 1`
+    /// (env override wins; each worker participates in its own fork-join
+    /// scopes while the spawned helpers are shared), so when every worker
+    /// forks at once, callers + helpers ≈ cores — engine-level and
+    /// bank-level parallelism never oversubscribe each other.
     pub fn start(engine: Arc<dyn Engine>, decoder: Option<Arc<PixelDecoder>>,
                  cfg: ServiceConfig) -> Self {
         let batcher = Arc::new(Batcher::new(cfg.batcher.clone()));
@@ -305,6 +323,12 @@ impl Service {
             Arc::new(Mutex::new(std::collections::HashMap::new()));
         let metrics = Arc::new(Metrics::new());
         metrics.set_banking(engine.bank_report());
+        let pool = exec::shared_sized(if cfg.intra_threads > 0 {
+            cfg.intra_threads
+        } else {
+            exec::intra_threads_for_workers(cfg.workers.max(1))
+        });
+        metrics.set_pool(pool.stats());
         let mode_gate = Arc::new(ModeGate::new());
         let max_batch = cfg.batcher.max_batch_samples;
 
@@ -316,6 +340,7 @@ impl Service {
             let decoder = decoder.clone();
             let metrics = Arc::clone(&metrics);
             let mode_gate = Arc::clone(&mode_gate);
+            let pool = Arc::clone(&pool);
             let mut rng = Rng::new(cfg.seed ^ (w as u64).wrapping_mul(0x9E37_79B9));
             workers.push(std::thread::spawn(move || {
                 while let Some(batch) = batcher.next_batch() {
@@ -330,9 +355,11 @@ impl Service {
                         batch.total_samples() as f64 / max_batch as f64,
                         wall,
                     );
-                    // refresh the per-bank read counters alongside the
-                    // batch counters (topology is static, reads are live)
+                    // refresh the per-bank read counters and the pool
+                    // gauges alongside the batch counters (topology is
+                    // static, reads/tasks are live)
                     metrics.set_banking(engine.bank_report());
+                    metrics.set_pool(pool.stats());
                     let mut pend = pending.lock().unwrap();
                     match result {
                         Ok(responses) => {
@@ -361,7 +388,13 @@ impl Service {
             next_id: AtomicU64::new(1),
             metrics,
             mode_gate,
+            pool,
         }
+    }
+
+    /// The process-shared intra-op pool this service sized at startup.
+    pub fn exec_pool(&self) -> &Arc<Pool> {
+        &self.pool
     }
 
     fn run_batch(engine: &dyn Engine, decoder: Option<&PixelDecoder>,
@@ -412,9 +445,13 @@ impl Service {
             return Err(anyhow!("n_samples must be > 0"));
         }
         req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = req.id;
         let (tx, rx) = channel();
-        self.pending.lock().unwrap().insert(req.id, tx);
+        self.pending.lock().unwrap().insert(id, tx);
         if !self.batcher.submit(req) {
+            // the request never entered the queue: its response entry must
+            // go too, or shutdown would see a permanently-pending request
+            self.pending.lock().unwrap().remove(&id);
             self.metrics.record_rejected();
             return Err(anyhow!("service is shutting down"));
         }
@@ -436,21 +473,41 @@ impl Service {
         rx.recv().map_err(|_| anyhow!("worker dropped"))?
     }
 
-    /// Drain and stop.
+    /// Drain and stop.  Closing the batcher wakes every blocked
+    /// `next_batch` caller promptly (queued work still drains first), and
+    /// once the workers have joined, **no request may still hold a pending
+    /// response entry** — that would mean a submitted request was dropped
+    /// without an answer.  Asserted in debug builds; release builds fail
+    /// any leftover loudly instead of hanging its caller forever.
     pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
         self.batcher.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        let leftovers: Vec<(u64, ResponseTx)> =
+            self.pending.lock().unwrap().drain().collect();
+        if !std::thread::panicking() {
+            debug_assert!(
+                leftovers.is_empty(),
+                "shutdown dropped {} request(s) with pending response entries",
+                leftovers.len()
+            );
+        }
+        for (_, tx) in leftovers {
+            let _ = tx.send(Err(anyhow!(
+                "service shut down before the request completed"
+            )));
         }
     }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
-        self.batcher.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown_inner();
     }
 }
 
@@ -489,6 +546,7 @@ mod tests {
                     linger: std::time::Duration::from_millis(1),
                 },
                 seed: 1,
+                intra_threads: 0,
             },
         )
     }
@@ -570,6 +628,38 @@ mod tests {
         let r = s.generate(TaskKind::Letter(0), 2,
                            SolverChoice::DigitalOde { steps: 5 }, 2.0, true);
         assert!(r.is_err());
+        s.shutdown();
+    }
+
+    #[test]
+    fn rejected_submit_leaves_no_pending_entry() {
+        let s = svc(1);
+        s.batcher.close();
+        let r = s.submit(GenRequest {
+            id: 0,
+            task: TaskKind::Circle,
+            n_samples: 2,
+            solver: SolverChoice::AnalogOde,
+            guidance: 0.0,
+            decode: false,
+        });
+        assert!(r.is_err());
+        assert!(s.pending.lock().unwrap().is_empty(),
+                "rejected request must not leave a pending response entry");
+        // shutdown's no-dropped-request assertion must hold
+        s.shutdown();
+    }
+
+    #[test]
+    fn pool_gauges_surface_in_metrics() {
+        let s = svc(1);
+        s.generate(TaskKind::Circle, 3, SolverChoice::AnalogOde, 0.0, false)
+            .unwrap();
+        let m = s.metrics.snapshot();
+        let pool = m.pool.as_ref().expect("service must publish pool gauges");
+        assert!(pool.threads >= 1);
+        assert_eq!(s.exec_pool().threads(), pool.threads);
+        assert!(m.report().contains("pool="), "{}", m.report());
         s.shutdown();
     }
 

@@ -13,12 +13,22 @@
 //!   stream ([`crate::util::rng::Rng::split`]), so device read/write noise
 //!   is uncorrelated across physical arrays, as in multi-array resistive
 //!   memory systems (cf. arXiv:2404.09613's per-array noise).  The
-//!   streams are layer state (behind one mutex), not caller state: noisy
-//!   draws depend on the layer's own call history — deterministic per
+//!   streams are layer state (one mutex per bank), not caller state: noisy
+//!   draws depend only on the bank's own call history — deterministic per
 //!   (seed, call sequence), like a physical array whose noise keeps
-//!   evolving — and concurrent service workers serialize on the lock for
-//!   *noisy* modes only (`Ideal`, the bitwise-parity serving mode, never
-//!   touches it).
+//!   evolving — independent of *which thread* evaluates the bank, which is
+//!   what makes the bank-parallel path below deterministic in the noisy
+//!   modes too (`Ideal`, the bitwise-parity serving mode, never draws).
+//! * **Deterministic bank-parallel execution** — `forward`/`forward_batch`
+//!   fork over the [`crate::exec`] pool under an [`exec::Ctx`]
+//!   ([`BankedCrossbarLayer::set_exec`]).  Two decompositions, both
+//!   bitwise equal to the serial path at any thread count:
+//!   *banks* — one task per tile-column into disjoint per-column scratch,
+//!   tile-rows folded in ascending (monolithic) order, then a bit-exact
+//!   copy into the shared output; *lanes* — one task per contiguous chunk
+//!   of batch lanes writing its own slice of the output (noise-free path
+//!   only; per-bank draws are lane-ordered and must stay on one task).
+//!   `Auto` picks per call from the grid, batch and pool size.
 //! * **Per-tile-column TIA gains** — partial sums flow *down a column of
 //!   tiles* in the current domain and meet one TIA bank at the bottom, so
 //!   every tile-column gets its own gain from the existing
@@ -60,6 +70,7 @@ use super::noise::NoiseModel;
 use super::G_FIXED_MS;
 use crate::device::array::{Macro, ProgramStats, MACRO_DIM};
 use crate::device::cell::{Cell, CellParams};
+use crate::exec::{self, lane_chunk_lens, lane_plan, ParStrategy, Shards};
 use crate::util::rng::Rng;
 use crate::util::tensor::{matmul_block_accum, Mat};
 
@@ -170,11 +181,24 @@ pub struct BankedCrossbarLayer {
     /// weights; the hot path uses the per-bank caches).
     g_cache: Mat,
     read_noise_frac: f32,
-    /// Per-bank noise streams (bank order).  Behind a mutex so the
-    /// `&self` compute path stays `Sync` for the serving workers.
-    streams: Mutex<Vec<Rng>>,
+    /// Per-bank noise streams (bank order), one mutex per bank so the
+    /// `&self` compute path stays `Sync` and bank tasks running on
+    /// different pool threads never contend — or share — a stream.
+    streams: Vec<Mutex<Rng>>,
     /// Per-bank MVM sweep counters.
     reads: Vec<AtomicU64>,
+    /// Parallel-execution context (strategy + pool handle).
+    exec: exec::Ctx,
+}
+
+/// Per-call execution plan for one forward sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Plan {
+    Serial,
+    /// One task per tile-column (all noise modes).
+    Banks,
+    /// N contiguous lane-chunk tasks (noise-free path only).
+    Lanes(usize),
 }
 
 impl BankedCrossbarLayer {
@@ -252,8 +276,9 @@ impl BankedCrossbarLayer {
             col_gains,
             g_cache: Mat::zeros(rows, cols),
             read_noise_frac,
-            streams: Mutex::new(streams),
+            streams: streams.into_iter().map(Mutex::new).collect(),
             reads: (0..n_banks).map(|_| AtomicU64::new(0)).collect(),
+            exec: exec::Ctx::default(),
         };
         layer.refresh_cache();
         (layer, agg)
@@ -314,11 +339,19 @@ impl BankedCrossbarLayer {
             col_gains: vec![gain; tile_cols],
             g_cache: Mat::zeros(rows, cols),
             read_noise_frac,
-            streams: Mutex::new(streams),
+            streams: streams.into_iter().map(Mutex::new).collect(),
             reads: (0..n_banks).map(|_| AtomicU64::new(0)).collect(),
+            exec: exec::Ctx::default(),
         };
         layer.refresh_cache();
         layer
+    }
+
+    /// Set the execution context (parallel strategy + pool handle) the
+    /// forward paths run under.  Any context yields bitwise-identical
+    /// outputs — only wall time changes.
+    pub fn set_exec(&mut self, exec: exec::Ctx) {
+        self.exec = exec;
     }
 
     pub fn shape(&self) -> (usize, usize) {
@@ -387,10 +420,15 @@ impl BankedCrossbarLayer {
         assert_eq!(v_in.len(), batch * self.rows);
         assert_eq!(out.len(), batch * self.cols);
         out.fill(0.0);
-        match noise {
-            NoiseModel::Ideal => self.accumulate_ideal(v_in, out, batch),
-            NoiseModel::ReadFast => self.accumulate_fast(v_in, out, batch),
-            NoiseModel::ReadPerCell => self.accumulate_per_cell(v_in, out, batch),
+        match self.plan(batch, noise) {
+            Plan::Serial => {
+                for tj in 0..self.tile_cols {
+                    self.accumulate_column(tj, v_in, out, self.cols,
+                                           tj * MACRO_DIM, batch, noise);
+                }
+            }
+            Plan::Banks => self.run_bank_parallel(v_in, out, batch, noise),
+            Plan::Lanes(nt) => self.run_lane_parallel(v_in, out, batch, nt),
         }
         for ctr in &self.reads {
             ctr.fetch_add(batch as u64, Ordering::Relaxed);
@@ -415,81 +453,200 @@ impl BankedCrossbarLayer {
         }
     }
 
-    /// One noise-free GEMM per bank, accumulated into the shared output.
-    fn accumulate_ideal(&self, v_in: &[f32], out: &mut [f32], batch: usize) {
-        for bank in &self.banks {
-            let (br, bc) = bank.g_local.shape();
-            matmul_block_accum(v_in, self.rows, bank.row0,
-                               bank.g_local.as_slice(), out, self.cols,
-                               bank.col0, batch, br, bc);
+    /// Pick the execution plan for one forward sweep.  Every plan yields
+    /// bitwise-identical output; the choice only affects wall time.
+    fn plan(&self, batch: usize, noise: NoiseModel) -> Plan {
+        let threads = self.exec.threads();
+        if threads <= 1 {
+            return Plan::Serial;
+        }
+        // lane chunking re-orders nothing in the noise-free path, but noisy
+        // modes draw per (bank, lane) in lane order from the bank streams —
+        // splitting lanes across tasks would split those sequences, so the
+        // noisy modes stay on the bank (tile-column) axis
+        let lanes_ok = noise == NoiseModel::Ideal && batch >= 2;
+        let banks_ok = self.tile_cols >= 2;
+        match self.exec.strategy {
+            ParStrategy::Serial => Plan::Serial,
+            ParStrategy::Lanes if lanes_ok => Plan::Lanes(threads.min(batch)),
+            ParStrategy::Lanes | ParStrategy::Banks if banks_ok => Plan::Banks,
+            ParStrategy::Lanes | ParStrategy::Banks => Plan::Serial,
+            ParStrategy::Auto => {
+                if self.rows * self.cols * batch < exec::MIN_PAR_WORK {
+                    Plan::Serial
+                } else if lanes_ok && batch >= 2 * threads {
+                    Plan::Lanes(threads)
+                } else if banks_ok {
+                    Plan::Banks
+                } else if lanes_ok {
+                    Plan::Lanes(threads.min(batch))
+                } else {
+                    Plan::Serial
+                }
+            }
         }
     }
 
-    /// Fused mean+variance sweep per bank: exact per-cell column moments
-    /// `frac²·Σ_r (v·G)²` with one Gaussian per (bank, lane, column) drawn
-    /// from the bank's own stream — noise independent across physical
-    /// arrays, variances adding to the monolithic column total.
-    fn accumulate_fast(&self, v_in: &[f32], out: &mut [f32], batch: usize) {
+    /// Accumulate one tile-column's partial sums into `dst`, whose rows
+    /// are `dst_stride` apart with the column block starting at `dst_off`
+    /// (the shared output for the serial/lane paths, a private scratch
+    /// block for the bank-parallel path).
+    ///
+    /// Banks fold in **ascending tile-row order**, so for every output
+    /// element the accumulation runs over logical rows 0..rows ascending —
+    /// the monolithic [`CrossbarLayer`] order.  That single invariant is
+    /// what makes serial, bank-parallel and lane-parallel execution
+    /// bitwise interchangeable.  Noisy draws come from each bank's own
+    /// stream ([`Self::fast_bank`]/[`Self::per_cell_bank`]), so the
+    /// sequences are identical no matter which task runs the column.
+    fn accumulate_column(&self, tj: usize, v_in: &[f32], dst: &mut [f32],
+                         dst_stride: usize, dst_off: usize, batch: usize,
+                         noise: NoiseModel) {
+        for ti in 0..self.tile_rows {
+            let idx = ti * self.tile_cols + tj;
+            match noise {
+                NoiseModel::Ideal => {
+                    let bank = &self.banks[idx];
+                    let (br, bc) = bank.g_local.shape();
+                    matmul_block_accum(v_in, self.rows, bank.row0,
+                                       bank.g_local.as_slice(), dst,
+                                       dst_stride, dst_off, batch, br, bc);
+                }
+                NoiseModel::ReadFast => {
+                    self.fast_bank(idx, v_in, dst, dst_stride, dst_off, batch)
+                }
+                NoiseModel::ReadPerCell => {
+                    self.per_cell_bank(idx, v_in, dst, dst_stride, dst_off,
+                                       batch)
+                }
+            }
+        }
+    }
+
+    /// Fused mean+variance sweep for one bank: exact per-cell column
+    /// moments `frac²·Σ_r (v·G)²` with one Gaussian per (lane, column)
+    /// drawn from the bank's own stream — noise independent across
+    /// physical arrays, variances adding to the monolithic column total.
+    fn fast_bank(&self, idx: usize, v_in: &[f32], dst: &mut [f32],
+                 dst_stride: usize, dst_off: usize, batch: usize) {
+        let bank = &self.banks[idx];
         let frac = self.read_noise_frac;
-        let mut streams = self.streams.lock().unwrap();
-        for (bank, stream) in self.banks.iter().zip(streams.iter_mut()) {
-            let (br, bc) = bank.g_local.shape();
-            let gl = bank.g_local.as_slice();
-            let mut var = [0.0f32; MACRO_DIM];
-            for b in 0..batch {
-                let vrow =
-                    &v_in[b * self.rows + bank.row0..b * self.rows + bank.row0 + br];
-                let orow = &mut out
-                    [b * self.cols + bank.col0..b * self.cols + bank.col0 + bc];
-                var[..bc].fill(0.0);
-                for (r, &v) in vrow.iter().enumerate() {
-                    if v == 0.0 {
-                        continue;
-                    }
-                    let grow = &gl[r * bc..(r + 1) * bc];
-                    for ((o, vc), &gc) in
-                        orow.iter_mut().zip(var.iter_mut()).zip(grow)
-                    {
-                        let term = v * gc;
-                        *o += term;
-                        *vc += term * term;
-                    }
+        let mut stream = self.streams[idx].lock().unwrap();
+        let (br, bc) = bank.g_local.shape();
+        let gl = bank.g_local.as_slice();
+        let mut var = [0.0f32; MACRO_DIM];
+        for b in 0..batch {
+            let vrow =
+                &v_in[b * self.rows + bank.row0..b * self.rows + bank.row0 + br];
+            let orow =
+                &mut dst[b * dst_stride + dst_off..b * dst_stride + dst_off + bc];
+            var[..bc].fill(0.0);
+            for (r, &v) in vrow.iter().enumerate() {
+                if v == 0.0 {
+                    continue;
                 }
-                for (o, vc) in orow.iter_mut().zip(var[..bc].iter()) {
-                    *o += frac * vc.sqrt() * stream.gaussian_f32();
+                let grow = &gl[r * bc..(r + 1) * bc];
+                for ((o, vc), &gc) in orow.iter_mut().zip(var.iter_mut()).zip(grow)
+                {
+                    let term = v * gc;
+                    *o += term;
+                    *vc += term * term;
+                }
+            }
+            for (o, vc) in orow.iter_mut().zip(var[..bc].iter()) {
+                *o += frac * vc.sqrt() * stream.gaussian_f32();
+            }
+        }
+    }
+
+    /// Tile-major exact device walk for one bank: each cell is read **once
+    /// per call** from the bank's stream and the draw serves every lane
+    /// (the burst is faster than the read-noise bandwidth), amortizing the
+    /// walk over the batch.  With zero read noise this is bitwise equal to
+    /// the `Ideal` path (same accumulation order).
+    fn per_cell_bank(&self, idx: usize, v_in: &[f32], dst: &mut [f32],
+                     dst_stride: usize, dst_off: usize, batch: usize) {
+        let bank = &self.banks[idx];
+        let mut stream = self.streams[idx].lock().unwrap();
+        let (br, bc) = (bank.tile.rows(), bank.tile.cols());
+        for r in 0..br {
+            for c in 0..bc {
+                let gv = bank.tile.cell(r, c).read(&mut stream);
+                for b in 0..batch {
+                    let v = v_in[b * self.rows + bank.row0 + r];
+                    if v != 0.0 {
+                        dst[b * dst_stride + dst_off + c] += v * gv;
+                    }
                 }
             }
         }
     }
 
-    /// Tile-major exact device walk: each cell is read **once per call**
-    /// from its bank's stream and the draw serves every lane (the burst is
-    /// faster than the read-noise bandwidth), amortizing the walk over the
-    /// batch.  With zero read noise this is bitwise equal to the `Ideal`
-    /// path (same accumulation order).
-    fn accumulate_per_cell(&self, v_in: &[f32], out: &mut [f32], batch: usize) {
-        let mut streams = self.streams.lock().unwrap();
-        for (bank, stream) in self.banks.iter().zip(streams.iter_mut()) {
-            let (br, bc) = (bank.tile.rows(), bank.tile.cols());
-            for r in 0..br {
-                for c in 0..bc {
-                    let gv = bank.tile.cell(r, c).read(stream);
-                    for b in 0..batch {
-                        let v = v_in[b * self.rows + bank.row0 + r];
-                        if v != 0.0 {
-                            out[b * self.cols + bank.col0 + c] += v * gv;
-                        }
-                    }
-                }
-            }
+    /// Physical width of tile-column `tj` (ragged at the right edge).
+    #[inline]
+    fn col_width(&self, tj: usize) -> usize {
+        (self.cols - tj * MACRO_DIM).min(MACRO_DIM)
+    }
+
+    /// One pool task per tile-column, each into a disjoint contiguous
+    /// scratch block, then a fixed-order **bit-exact copy** (never a float
+    /// add) into the shared output.  Because a column task folds its
+    /// tile-rows in the monolithic order, the copied bits equal what the
+    /// serial path would have produced in place.
+    fn run_bank_parallel(&self, v_in: &[f32], out: &mut [f32], batch: usize,
+                         noise: NoiseModel) {
+        // one scratch allocation per call (batch × cols); only this plan
+        // pays it — the serial and lane paths write straight into `out`
+        let mut scratch = vec![0.0f32; batch * self.cols];
+        {
+            let shards = Shards::new(
+                &mut scratch,
+                (0..self.tile_cols).map(|tj| batch * self.col_width(tj)),
+            );
+            self.exec.run(self.tile_cols, &|tj| {
+                let block = shards.take(tj);
+                self.accumulate_column(tj, v_in, block, self.col_width(tj), 0,
+                                       batch, noise);
+            });
         }
+        let mut off = 0usize;
+        for tj in 0..self.tile_cols {
+            let bc = self.col_width(tj);
+            let c0 = tj * MACRO_DIM;
+            for b in 0..batch {
+                out[b * self.cols + c0..b * self.cols + c0 + bc]
+                    .copy_from_slice(&scratch[off + b * bc..off + (b + 1) * bc]);
+            }
+            off += batch * bc;
+        }
+    }
+
+    /// Lane-chunk tasks (noise-free path only): each task owns a
+    /// contiguous run of output lanes and folds every tile-column serially
+    /// for them — each output element is produced whole by one task with
+    /// the serial accumulation order, so no reduction exists at all.
+    fn run_lane_parallel(&self, v_in: &[f32], out: &mut [f32], batch: usize,
+                         n_tasks: usize) {
+        let (chunk, n_tasks) = lane_plan(batch, n_tasks);
+        let lens = lane_chunk_lens(batch, self.cols, chunk, n_tasks);
+        let shards = Shards::new(out, lens);
+        self.exec.run(n_tasks, &|i| {
+            let oc = shards.take(i);
+            let lanes = oc.len() / self.cols;
+            let lane0 = i * chunk;
+            let vin = &v_in[lane0 * self.rows..(lane0 + lanes) * self.rows];
+            for tj in 0..self.tile_cols {
+                self.accumulate_column(tj, vin, oc, self.cols, tj * MACRO_DIM,
+                                       lanes, NoiseModel::Ideal);
+            }
+        });
     }
 
     /// Age all banks (each from its own stream), then refresh the caches.
     pub fn age(&mut self, dt_s: f64) {
-        let streams = self.streams.get_mut().unwrap();
-        for (bank, stream) in self.banks.iter_mut().zip(streams.iter_mut()) {
-            bank.tile.age(dt_s, stream);
+        for (bank, stream) in self.banks.iter_mut().zip(self.streams.iter_mut())
+        {
+            bank.tile.age(dt_s, stream.get_mut().unwrap());
         }
         self.refresh_cache();
     }
@@ -579,6 +736,15 @@ impl ScoreLayer {
 
     pub fn is_banked(&self) -> bool {
         matches!(self, ScoreLayer::Banked(_))
+    }
+
+    /// Set the execution context on either substrate (outputs are
+    /// context-invariant bit for bit; only wall time changes).
+    pub fn set_exec(&mut self, exec: crate::exec::Ctx) {
+        match self {
+            ScoreLayer::Mono(l) => l.set_exec(exec),
+            ScoreLayer::Banked(l) => l.set_exec(exec),
+        }
     }
 
     pub fn shape(&self) -> (usize, usize) {
@@ -855,6 +1021,42 @@ mod tests {
         l1.forward_batch(&vinb, &mut outb, 3, NoiseModel::Ideal, &mut rng);
         assert_eq!(l1.report(0).total_reads(), 4,
                    "monolithic read counter must stay live");
+    }
+
+    #[test]
+    fn forced_parallel_plans_stay_bitwise_equal() {
+        use crate::exec::{Ctx, ParStrategy, Pool};
+        use std::sync::Arc;
+        // 40x70 → 2x3 ragged grid; compare serial vs forced Banks vs forced
+        // Lanes on a 3-thread pool, per noise mode, with fresh layers so the
+        // per-bank streams start from the same state
+        let w = test_weights(40, 70, 77);
+        let m = mapper::map_layer(&w);
+        let pool = Arc::new(Pool::new(3));
+        let build = |ctx: Ctx| {
+            let mut l = BankedCrossbarLayer::from_conductances(
+                &m.g_target, m.gain, CellParams::default(), 29,
+            );
+            l.set_exec(ctx);
+            l
+        };
+        let batch = 5;
+        let vb: Vec<f32> =
+            (0..batch * 40).map(|i| (i as f32 * 0.19).sin()).collect();
+        for noise in
+            [NoiseModel::Ideal, NoiseModel::ReadFast, NoiseModel::ReadPerCell]
+        {
+            let mut rng = Rng::new(30);
+            let mut want = vec![0.0f32; batch * 70];
+            build(Ctx::serial()).forward_batch(&vb, &mut want, batch, noise,
+                                               &mut rng);
+            for strategy in [ParStrategy::Banks, ParStrategy::Lanes] {
+                let layer = build(Ctx::with_pool(strategy, pool.clone()));
+                let mut got = vec![0.0f32; batch * 70];
+                layer.forward_batch(&vb, &mut got, batch, noise, &mut rng);
+                assert_eq!(got, want, "{noise:?} under {strategy:?}");
+            }
+        }
     }
 
     #[test]

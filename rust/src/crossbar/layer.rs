@@ -40,6 +40,7 @@ use super::noise::NoiseModel;
 use super::G_FIXED_MS;
 use crate::device::array::{Macro, ProgramStats, MACRO_DIM};
 use crate::device::cell::CellParams;
+use crate::exec::{self, lane_chunk_lens, lane_plan, Shards};
 use crate::util::rng::Rng;
 use crate::util::tensor::{matmul_into, Mat};
 
@@ -62,6 +63,9 @@ pub struct CrossbarLayer {
     /// — the monolithic counterpart of the banked per-bank counters, so
     /// the serving metrics stay live on either substrate.
     reads: AtomicU64,
+    /// Parallel-execution context: the noise-free batched GEMM lane-chunks
+    /// over the pool (the "too small to bank" scaling axis).
+    exec: exec::Ctx,
 }
 
 impl CrossbarLayer {
@@ -103,6 +107,7 @@ impl CrossbarLayer {
             g_cache: Mat::zeros(rows, cols),
             read_noise_frac,
             reads: AtomicU64::new(0),
+            exec: exec::Ctx::default(),
         };
         layer.refresh_cache();
         (layer, agg)
@@ -147,9 +152,16 @@ impl CrossbarLayer {
             g_cache: Mat::zeros(rows, cols),
             read_noise_frac,
             reads: AtomicU64::new(0),
+            exec: exec::Ctx::default(),
         };
         layer.refresh_cache();
         layer
+    }
+
+    /// Set the execution context; outputs are context-invariant bit for
+    /// bit (only the noise-free batched GEMM forks, over lane chunks).
+    pub fn set_exec(&mut self, exec: exec::Ctx) {
+        self.exec = exec;
     }
 
     pub fn shape(&self) -> (usize, usize) {
@@ -273,7 +285,23 @@ impl CrossbarLayer {
         let g = self.g_cache.as_slice();
         let (k, n) = (self.rows, self.cols);
         if frac == 0.0 {
-            matmul_into(v_in, g, out, batch, k, n);
+            // noise-free GEMM: lane-chunk over the pool when the context
+            // says so.  Each chunk's per-element accumulation order is the
+            // serial order (row blocks are independent), so any task count
+            // is bitwise identical to the single matmul_into call.
+            let nt = self.exec.lane_tasks(batch, batch * k * n);
+            if nt > 1 {
+                let (chunk, nt) = lane_plan(batch, nt);
+                let shards = Shards::new(out, lane_chunk_lens(batch, n, chunk, nt));
+                self.exec.run(nt, &|i| {
+                    let oc = shards.take(i);
+                    let lanes = oc.len() / n;
+                    let a = &v_in[i * chunk * k..(i * chunk + lanes) * k];
+                    matmul_into(a, g, oc, lanes, k, n);
+                });
+            } else {
+                matmul_into(v_in, g, out, batch, k, n);
+            }
             return;
         }
         let mut var_stack = [0.0f32; MACRO_DIM * 4];
@@ -578,6 +606,30 @@ mod tests {
             layer.forward(&v[b * 10..(b + 1) * 10], &mut scalar,
                           NoiseModel::ReadPerCell, &mut rng);
             assert_eq!(&batched[b * 8..(b + 1) * 8], scalar.as_slice());
+        }
+    }
+
+    #[test]
+    fn lane_chunked_ideal_batch_matches_serial_bitwise() {
+        use crate::exec::{Ctx, ParStrategy, Pool};
+        use std::sync::Arc;
+        let w = test_weights(14, 14, 31);
+        let m = super::super::mapper::map_layer(&w);
+        let mut serial =
+            CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet_params());
+        serial.set_exec(Ctx::serial());
+        let mut par =
+            CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet_params());
+        par.set_exec(Ctx::with_pool(ParStrategy::Lanes, Arc::new(Pool::new(4))));
+        let mut rng = Rng::new(32);
+        // batch 7 over 4 tasks exercises ragged lane chunks
+        for batch in [2usize, 4, 7] {
+            let v: Vec<f32> = (0..batch * 14).map(|_| rng.gaussian_f32()).collect();
+            let mut a = vec![0.0f32; batch * 14];
+            let mut b = vec![0.0f32; batch * 14];
+            serial.forward_batch(&v, &mut a, batch, NoiseModel::Ideal, &mut rng);
+            par.forward_batch(&v, &mut b, batch, NoiseModel::Ideal, &mut rng);
+            assert_eq!(a, b, "batch {batch}");
         }
     }
 

@@ -31,6 +31,7 @@
 
 use super::schedule::VpSchedule;
 use crate::clamp_voltage;
+use crate::exec::{self, lane_chunk_lens, lane_plan, Shards};
 use crate::nn::{BatchScratch, ScoreNet};
 use crate::util::rng::Rng;
 use crate::util::tensor::scratch_slice;
@@ -60,6 +61,10 @@ pub struct DigitalSampler<'a> {
     pub mode: SamplerMode,
     /// CFG guidance strength λ; None = unconditional evaluation.
     pub guidance: Option<f32>,
+    /// Parallel-execution context for the batched lane's per-step state
+    /// update (the score-net GEMMs parallelize inside the net itself).
+    /// Per-lane RNG streams keep any chunking bitwise deterministic.
+    pub exec: exec::Ctx,
 }
 
 impl<'a> DigitalSampler<'a> {
@@ -70,11 +75,17 @@ impl<'a> DigitalSampler<'a> {
             kind: SamplerKind::Euler,
             mode,
             guidance: None,
+            exec: exec::Ctx::default(),
         }
     }
 
     pub fn with_kind(mut self, kind: SamplerKind) -> Self {
         self.kind = kind;
+        self
+    }
+
+    pub fn with_exec(mut self, exec: exec::Ctx) -> Self {
+        self.exec = exec;
         self
     }
 
@@ -277,6 +288,14 @@ impl<'a> DigitalSampler<'a> {
         }
         let mut lane_rngs: Vec<Rng> = (0..n).map(|_| rng.split()).collect();
         let (dt, ts) = self.sched.reverse_grid(n_steps);
+        // lane-chunk plan for the Euler update (fixed for the whole solve so
+        // chunk boundaries — and the per-lane stream draws within them —
+        // never move between steps); per-lane RNGs make any chunking
+        // bitwise-deterministic, serial included
+        let (upd_chunk, upd_tasks) =
+            lane_plan(n, self.exec.lane_tasks(n, len));
+        let lens_x = lane_chunk_lens(n, dim, upd_chunk, upd_tasks);
+        let lens_r = lane_chunk_lens(n, 1, upd_chunk, upd_tasks);
         let mut s = StepScratch::default();
         let mut scratch = BatchScratch::new();
         let net_out = scratch_slice(&mut s.net_out, len);
@@ -298,17 +317,40 @@ impl<'a> DigitalSampler<'a> {
                         SamplerMode::Sde => (self.sched.beta(t) * dt).sqrt(),
                         SamplerMode::Ode => 0.0,
                     };
-                    for (b, lane) in lane_rngs.iter_mut().enumerate() {
-                        for i in b * dim..(b + 1) * dim {
-                            let z = if diff > 0.0 {
-                                lane.gaussian_f32()
-                            } else {
-                                0.0
-                            };
-                            x[i] = clamp_voltage(
-                                x[i] - (dt as f32) * rhs[i] + (diff as f32) * z,
-                            );
+                    // one update body for both execution shapes: a lane
+                    // chunk is (states, its lanes' Wiener streams, the
+                    // chunk's base offset into rhs)
+                    let rhs_ro: &[f32] = rhs;
+                    let update = |xc: &mut [f32], rngs: &mut [Rng],
+                                  base: usize| {
+                        for (bl, lane) in rngs.iter_mut().enumerate() {
+                            for j in bl * dim..(bl + 1) * dim {
+                                let z = if diff > 0.0 {
+                                    lane.gaussian_f32()
+                                } else {
+                                    0.0
+                                };
+                                xc[j] = clamp_voltage(
+                                    xc[j] - (dt as f32) * rhs_ro[base + j]
+                                        + (diff as f32) * z,
+                                );
+                            }
                         }
+                    };
+                    if upd_tasks > 1 {
+                        // one task per lane chunk; each lane's state and
+                        // Wiener stream live whole inside one task, so the
+                        // chunked update is bitwise equal to serial
+                        let sx =
+                            Shards::new(&mut x[..], lens_x.iter().copied());
+                        let sr = Shards::new(&mut lane_rngs[..],
+                                             lens_r.iter().copied());
+                        self.exec.run(upd_tasks, &|ti| {
+                            update(sx.take(ti), sr.take(ti),
+                                   ti * upd_chunk * dim);
+                        });
+                    } else {
+                        update(&mut x[..], &mut lane_rngs[..], 0);
                     }
                 }
                 (SamplerKind::Heun, SamplerMode::Ode) => {
@@ -582,6 +624,32 @@ mod tests {
         assert_eq!(a, b);
         for &v in &a {
             assert!((-2.0..=4.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn batched_update_bitwise_across_exec_contexts() {
+        // per-lane RNG streams make the lane-chunked Euler update bitwise
+        // equal to serial at any thread count, in ODE *and* SDE mode
+        use crate::exec::{Ctx, ParStrategy, Pool};
+        use std::sync::Arc;
+        let net = GaussianNet { s0: 0.5, sched: VpSchedule::default() };
+        for mode in [SamplerMode::Ode, SamplerMode::Sde] {
+            let ctxs = [
+                Ctx::serial(),
+                Ctx::with_pool(ParStrategy::Lanes, Arc::new(Pool::new(1))),
+                Ctx::with_pool(ParStrategy::Lanes, Arc::new(Pool::new(4))),
+            ];
+            let outs: Vec<Vec<f32>> = ctxs
+                .into_iter()
+                .map(|ctx| {
+                    let s = DigitalSampler::new(&net, mode).with_exec(ctx);
+                    let mut rng = Rng::new(77);
+                    s.sample_batched(10, &[], 25, &mut rng).0
+                })
+                .collect();
+            assert_eq!(outs[0], outs[1], "{mode:?} 1-thread pool");
+            assert_eq!(outs[0], outs[2], "{mode:?} 4-thread pool");
         }
     }
 }

@@ -1,0 +1,357 @@
+//! The scoped worker pool behind [`super::Ctx::run`].
+//!
+//! Std-only (no rayon/crossbeam in the offline vendor set): a shared
+//! FIFO injector queue guarded by one mutex, long-lived worker threads,
+//! and a fork-join `run(n, f)` scope in which the **caller participates**
+//! — it pushes its `n` tasks, then pops and executes jobs itself until its
+//! scope completes, so a 1-thread pool degenerates to plain inline
+//! execution and progress never depends on worker scheduling.
+//!
+//! ## Why this is sound
+//!
+//! `run` type-erases the caller's closure to a raw fat pointer and blocks
+//! until every one of its tasks has finished executing, so the pointer
+//! (and everything the closure borrows) outlives all uses.  Panics inside
+//! tasks are caught on the executing thread, recorded on the scope, and
+//! re-raised on the calling thread after the join — the scope never
+//! returns (or unwinds) while a worker still holds its pointers.
+//!
+//! ## Why this is deterministic
+//!
+//! The pool itself guarantees only *which* task indices run (each exactly
+//! once) — never an ordering.  Determinism is the contract of the callers
+//! (see the [`super`] module docs): tasks write disjoint slots and any
+//! combination step is ordered, so the observable result is independent
+//! of scheduling — bitwise, not approximately.
+//!
+//! Nested `run` calls are allowed: a task that opens its own scope drains
+//! the shared queue while waiting, so the nesting bottoms out at leaf
+//! tasks and cannot deadlock.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::MAX_THREADS;
+
+/// Tasks-per-scope histogram buckets: [1, 2–3, 4–7, 8–15, ≥16].
+pub const HIST_BUCKETS: usize = 5;
+
+fn hist_bucket(n: usize) -> usize {
+    match n {
+        0..=1 => 0,
+        2..=3 => 1,
+        4..=7 => 2,
+        8..=15 => 3,
+        _ => 4,
+    }
+}
+
+/// One scope's shared state, living on the calling thread's stack for the
+/// duration of `run` (jobs hold raw pointers to it — see module docs).
+/// The closure reference is lifetime-erased to `'static` when the scope is
+/// built (`run` blocks until every task has finished, so the erasure never
+/// outlives the borrow).
+struct ScopeState {
+    f: &'static (dyn Fn(usize) + Sync),
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+struct Job {
+    scope: *const ScopeState,
+    index: usize,
+}
+
+// SAFETY: the pointed-at ScopeState (and the closure it points to) is kept
+// alive by the blocked `run` caller until `remaining` hits zero, and all
+// fields reached through the pointers are Sync.
+unsafe impl Send for Job {}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    /// Workers block here for jobs.
+    work_cv: Condvar,
+    /// Scope callers block here for their stolen tasks to finish.
+    done_cv: Condvar,
+    tasks_run: AtomicU64,
+    scopes_run: AtomicU64,
+    max_queue_depth: AtomicUsize,
+    scope_size_hist: [AtomicU64; HIST_BUCKETS],
+}
+
+fn exec_job(shared: &Shared, job: Job) {
+    // SAFETY: see `Job`'s Send justification — the scope outlives this call.
+    let scope = unsafe { &*job.scope };
+    let f = scope.f;
+    if catch_unwind(AssertUnwindSafe(|| f(job.index))).is_err() {
+        scope.panicked.store(true, Ordering::Release);
+    }
+    shared.tasks_run.fetch_add(1, Ordering::Relaxed);
+    if scope.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // last task of the scope: take the lock before notifying so the
+        // caller can't check-then-sleep between our decrement and notify
+        let _guard = shared.state.lock().unwrap();
+        shared.done_cv.notify_all();
+    }
+}
+
+/// Point-in-time pool gauges for the serving metrics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Configured thread count (caller thread included).
+    pub threads: usize,
+    /// Fork-join scopes opened.
+    pub scopes_run: u64,
+    /// Tasks executed (inline fast-path included).
+    pub tasks_run: u64,
+    /// High-water injector queue depth.
+    pub max_queue_depth: usize,
+    /// Tasks-per-scope histogram: [1, 2–3, 4–7, 8–15, ≥16].
+    pub scope_size_hist: [u64; HIST_BUCKETS],
+}
+
+/// A fixed-size scoped worker pool.  `threads` counts the participating
+/// caller, so `Pool::new(1)` spawns no OS threads at all.
+pub struct Pool {
+    shared: Arc<Shared>,
+    threads: usize,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.clamp(1, MAX_THREADS);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            tasks_run: AtomicU64::new(0),
+            scopes_run: AtomicU64::new(0),
+            max_queue_depth: AtomicUsize::new(0),
+            scope_size_hist: Default::default(),
+        });
+        let workers = (1..threads)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("memdiff-exec-{w}"))
+                    .spawn(move || Self::worker_loop(&shared))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        Pool { shared, threads, workers }
+    }
+
+    /// Configured thread count (caller included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            threads: self.threads,
+            scopes_run: self.shared.scopes_run.load(Ordering::Relaxed),
+            tasks_run: self.shared.tasks_run.load(Ordering::Relaxed),
+            max_queue_depth: self.shared.max_queue_depth.load(Ordering::Relaxed),
+            scope_size_hist: std::array::from_fn(|i| {
+                self.shared.scope_size_hist[i].load(Ordering::Relaxed)
+            }),
+        }
+    }
+
+    fn worker_loop(shared: &Shared) {
+        loop {
+            let job = {
+                let mut st = shared.state.lock().unwrap();
+                loop {
+                    if let Some(j) = st.jobs.pop_front() {
+                        break Some(j);
+                    }
+                    if st.shutdown {
+                        break None;
+                    }
+                    st = shared.work_cv.wait(st).unwrap();
+                }
+            };
+            match job {
+                Some(j) => exec_job(shared, j),
+                None => return,
+            }
+        }
+    }
+
+    /// Run tasks `0..n` — each exactly once — and block until all have
+    /// completed.  The caller executes tasks too (it is thread 0 of the
+    /// pool); with no workers, or a single task, this is a plain inline
+    /// loop.  Panics in any task re-raise here after the scope joins.
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        self.shared.scopes_run.fetch_add(1, Ordering::Relaxed);
+        self.shared.scope_size_hist[hist_bucket(n)].fetch_add(1, Ordering::Relaxed);
+        if self.workers.is_empty() || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            self.shared.tasks_run.fetch_add(n as u64, Ordering::Relaxed);
+            return;
+        }
+
+        // SAFETY: erase the closure's lifetime so the queue (which is
+        // 'static) can reference it.  Sound because this function does not
+        // return until `remaining` hits zero — no task can touch `f` after
+        // the borrow ends.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync),
+                                  &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let scope = ScopeState {
+            f: f_static,
+            remaining: AtomicUsize::new(n),
+            panicked: AtomicBool::new(false),
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for index in 0..n {
+                st.jobs.push_back(Job { scope: &scope, index });
+            }
+            let depth = st.jobs.len();
+            self.shared.max_queue_depth.fetch_max(depth, Ordering::Relaxed);
+            self.shared.work_cv.notify_all();
+        }
+        // participate until this scope has no queued work left (FIFO keeps
+        // the wait for our own jobs bounded even under concurrent scopes)
+        while scope.remaining.load(Ordering::Acquire) > 0 {
+            let job = self.shared.state.lock().unwrap().jobs.pop_front();
+            match job {
+                Some(j) => exec_job(&self.shared, j),
+                None => break,
+            }
+        }
+        // tasks stolen by workers may still be in flight
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while scope.remaining.load(Ordering::Acquire) > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+        }
+        if scope.panicked.load(Ordering::Acquire) {
+            panic!("exec::Pool task panicked");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_index_runs_exactly_once() {
+        let pool = Pool::new(4);
+        for n in [1usize, 2, 3, 7, 64, 257] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.run(n, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} of n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_is_inline() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.threads(), 1);
+        assert!(pool.workers.is_empty());
+        let hits: Vec<AtomicU64> = (0..9).map(|_| AtomicU64::new(0)).collect();
+        pool.run(9, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn scope_blocks_until_all_tasks_finish() {
+        // tasks record completion; after run() returns, all must be done
+        let pool = Pool::new(4);
+        let done = AtomicUsize::new(0);
+        pool.run(32, &|_| {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn panic_in_task_propagates_to_caller() {
+        let pool = Pool::new(3);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // pool is still usable afterwards
+        let ok = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn nested_scopes_complete() {
+        let pool = Pool::new(4);
+        let count = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            pool.run(4, &|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let pool = Pool::new(2);
+        pool.run(3, &|_| {});
+        pool.run(1, &|_| {});
+        let s = pool.stats();
+        assert_eq!(s.threads, 2);
+        assert_eq!(s.scopes_run, 2);
+        assert_eq!(s.tasks_run, 4);
+        assert_eq!(s.scope_size_hist[hist_bucket(3)], 1);
+        assert_eq!(s.scope_size_hist[hist_bucket(1)], 1);
+    }
+
+    #[test]
+    fn thread_count_clamped() {
+        assert_eq!(Pool::new(0).threads(), 1);
+        assert_eq!(Pool::new(MAX_THREADS + 100).threads(), MAX_THREADS);
+    }
+}

@@ -1,0 +1,174 @@
+//! [`Shards`]: split one mutable buffer into per-task disjoint `&mut`
+//! ranges for the pool's fixed task→output-slot contract.
+//!
+//! `std`'s `chunks_mut` cannot hand chunk *i* to task *i* through a shared
+//! closure, so this wrapper does: ranges are consecutive (hence disjoint)
+//! by construction, and a per-shard taken flag guarantees each range is
+//! handed out at most once per `Shards` value — together that makes
+//! [`Shards::take`] sound without exposing `unsafe` at the call sites.
+
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Disjoint consecutive sub-slices of one backing `&mut [T]`, claimable by
+/// index from concurrent pool tasks.
+pub struct Shards<'a, T> {
+    ptr: *mut T,
+    /// (offset, len) per shard; consecutive, so pairwise disjoint.
+    spans: Vec<(usize, usize)>,
+    taken: Vec<AtomicBool>,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: a Shards value only ever hands out non-overlapping &mut ranges
+// (consecutive spans + the taken flags), so sharing it across threads is
+// as safe as sending each &mut [T] chunk individually.
+unsafe impl<T: Send> Send for Shards<'_, T> {}
+unsafe impl<T: Send> Sync for Shards<'_, T> {}
+
+impl<'a, T> Shards<'a, T> {
+    /// Split `data` into consecutive shards of the given lengths (their sum
+    /// must not exceed `data.len()`; a trailing remainder stays unclaimed).
+    pub fn new(data: &'a mut [T], lens: impl IntoIterator<Item = usize>) -> Self {
+        let mut spans = Vec::new();
+        let mut off = 0usize;
+        for len in lens {
+            spans.push((off, len));
+            off += len;
+        }
+        assert!(
+            off <= data.len(),
+            "shard lengths ({off}) exceed the backing slice ({})",
+            data.len()
+        );
+        let taken = spans.iter().map(|_| AtomicBool::new(false)).collect();
+        Shards { ptr: data.as_mut_ptr(), spans, taken, _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Claim shard `i`.  Panics if `i` was already claimed — the pool runs
+    /// each task index exactly once, so a double claim is a caller bug
+    /// (and would otherwise alias the `&mut`).
+    pub fn take(&self, i: usize) -> &mut [T] {
+        assert!(
+            !self.taken[i].swap(true, Ordering::AcqRel),
+            "shard {i} claimed twice"
+        );
+        let (off, len) = self.spans[i];
+        // SAFETY: spans are consecutive (disjoint) and the flag above
+        // guarantees this range is handed out once for self's lifetime,
+        // which is bounded by the backing &'a mut [T].
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(off), len) }
+    }
+}
+
+/// Turn a task-count hint into a concrete lane-chunk plan `(chunk,
+/// n_tasks)` with every task owning at least one lane.  The recompute of
+/// `n_tasks` from the rounded-up chunk is load-bearing: without it a
+/// trailing task could own zero lanes and slice its inputs out of bounds.
+/// Every lane-parallel call site goes through this (and
+/// [`lane_chunk_lens`]) so chunk boundaries — and therefore bitwise
+/// results — can never drift between layers.
+pub fn lane_plan(lanes: usize, tasks_hint: usize) -> (usize, usize) {
+    if lanes == 0 {
+        return (1, 0);
+    }
+    if tasks_hint <= 1 {
+        return (lanes, 1);
+    }
+    let chunk = lanes.div_ceil(tasks_hint);
+    (chunk, lanes.div_ceil(chunk))
+}
+
+/// Per-task lane-chunk lengths: `lanes` rows of `width` elements split into
+/// `n_tasks` contiguous chunks of `chunk` rows (last one ragged), matching
+/// a [`lane_plan`] result.
+pub fn lane_chunk_lens(lanes: usize, width: usize, chunk: usize,
+                       n_tasks: usize) -> Vec<usize> {
+    (0..n_tasks)
+        .map(|i| (lanes - (i * chunk).min(lanes)).min(chunk) * width)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_are_disjoint_and_writable() {
+        let mut buf = vec![0u32; 10];
+        {
+            let sh = Shards::new(&mut buf, [3, 4, 3]);
+            assert_eq!(sh.len(), 3);
+            let a = sh.take(0);
+            let b = sh.take(1);
+            let c = sh.take(2);
+            assert_eq!((a.len(), b.len(), c.len()), (3, 4, 3));
+            a.fill(1);
+            b.fill(2);
+            c.fill(3);
+        }
+        assert_eq!(buf, [1, 1, 1, 2, 2, 2, 2, 3, 3, 3]);
+    }
+
+    #[test]
+    fn trailing_remainder_stays_unclaimed() {
+        let mut buf = vec![7u8; 5];
+        let sh = Shards::new(&mut buf, [2, 2]);
+        sh.take(0).fill(0);
+        sh.take(1).fill(0);
+        drop(sh);
+        assert_eq!(buf[4], 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "claimed twice")]
+    fn double_take_panics() {
+        let mut buf = vec![0u8; 4];
+        let sh = Shards::new(&mut buf, [2, 2]);
+        let _a = sh.take(1);
+        let _b = sh.take(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed the backing slice")]
+    fn oversized_lens_panic() {
+        let mut buf = vec![0u8; 4];
+        let _ = Shards::new(&mut buf, [3, 3]);
+    }
+
+    #[test]
+    fn lane_chunk_lens_cover_ragged_tails() {
+        // 10 lanes of width 3, chunks of 4 → 4+4+2 lanes
+        assert_eq!(lane_chunk_lens(10, 3, 4, 3), vec![12, 12, 6]);
+        // exact division
+        assert_eq!(lane_chunk_lens(8, 2, 4, 2), vec![8, 8]);
+        let total: usize = lane_chunk_lens(10, 3, 4, 3).iter().sum();
+        assert_eq!(total, 30);
+    }
+
+    #[test]
+    fn lane_plan_never_yields_zero_lane_tasks() {
+        // 5 lanes over a 4-task hint: chunk 2 → only 3 tasks (not 4, whose
+        // last task would own zero lanes)
+        assert_eq!(lane_plan(5, 4), (2, 3));
+        assert_eq!(lane_plan(8, 4), (2, 4));
+        assert_eq!(lane_plan(3, 8), (1, 3));
+        assert_eq!(lane_plan(7, 1), (7, 1));
+        assert_eq!(lane_plan(0, 4), (1, 0));
+        for lanes in 1..40usize {
+            for hint in 1..10usize {
+                let (chunk, n) = lane_plan(lanes, hint);
+                assert!(n * chunk >= lanes && (n - 1) * chunk < lanes,
+                        "lanes={lanes} hint={hint} → ({chunk},{n})");
+            }
+        }
+    }
+}

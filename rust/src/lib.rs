@@ -20,6 +20,9 @@
 //! * [`vae`] — the latent-diffusion pixel decoder (linear + 2 deconv).
 //! * [`runtime`] — PJRT CPU client; loads the AOT artifacts produced by
 //!   `python/compile/aot.py` (HLO text) and executes them.
+//! * [`exec`] — deterministic bank-parallel execution: a std-only scoped
+//!   worker pool with a fixed task→slot fork-join contract, so N-thread
+//!   evaluation stays bitwise equal to the serial oracle.
 //! * [`coordinator`] — generation service: request queue, dynamic batcher,
 //!   worker scheduler, metrics.
 //! * [`energy`] — analog-vs-digital latency & energy models behind the
@@ -39,6 +42,7 @@ pub mod data;
 pub mod device;
 pub mod diffusion;
 pub mod energy;
+pub mod exec;
 pub mod nn;
 pub mod runtime;
 pub mod util;

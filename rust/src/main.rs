@@ -53,7 +53,7 @@ fn usage() -> ! {
          usage:\n\
          \x20 memdiff generate [--task circle|h|k|u] [--solver analog-ode|analog-sde|euler|euler-sde]\n\
          \x20                  [--n 500] [--steps 130] [--engine analog|rust|hlo] [--decode]\n\
-         \x20 memdiff serve    [--requests 64] [--workers 4]\n\
+         \x20 memdiff serve    [--requests 64] [--workers 4] [--threads N]\n\
          \x20 memdiff characterize\n\
          \x20 memdiff info\n\
          \x20 (global) [--config memdiff.toml] [--seed N]"
@@ -94,17 +94,21 @@ fn load_weights(task: &TaskKind) -> anyhow::Result<ScoreWeights> {
 fn build_engine(engine: &str, task: &TaskKind, cfg: &Config)
                 -> anyhow::Result<Arc<dyn Engine>> {
     let meta = Meta::load_default()?;
+    // bank-parallel strategy from config; the pool itself is sized by the
+    // Service at startup (workers vs. intra-op threads)
+    let exec = memdiff::exec::Ctx::new(cfg.par);
     Ok(match engine {
         "analog" => {
             let w = load_weights(task)?;
             let net = AnalogScoreNet::from_conductances(
-                &w, CellParams::default(), NoiseModel::ReadFast);
+                &w, CellParams::default(), NoiseModel::ReadFast)
+                .with_exec(exec);
             Arc::new(AnalogEngine { net, sched: meta.sched, substeps: cfg.substeps })
         }
         "rust" => {
             let w = load_weights(task)?;
             Arc::new(RustDigitalEngine {
-                net: DigitalScoreNet::new(w),
+                net: DigitalScoreNet::new(w).with_exec(exec),
                 sched: meta.sched,
             })
         }
@@ -146,6 +150,7 @@ fn cmd_generate(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()
             linger: std::time::Duration::from_millis(cfg.linger_ms),
         },
         seed: opt(kv, "seed", cfg.seed),
+        intra_threads: opt(kv, "threads", cfg.threads),
     });
 
     let t0 = std::time::Instant::now();
@@ -204,6 +209,7 @@ fn cmd_serve(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> {
             linger: std::time::Duration::from_millis(cfg.linger_ms),
         },
         seed: cfg.seed,
+        intra_threads: opt(kv, "threads", cfg.threads),
     }));
 
     println!("serve: {n_requests} mixed requests over {workers} workers");

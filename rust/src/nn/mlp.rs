@@ -19,6 +19,7 @@ use crate::analog::activation::relu_diode;
 use crate::clamp_voltage;
 use crate::crossbar::{BankReport, Banking, NoiseModel, ScoreLayer};
 use crate::device::cell::CellParams;
+use crate::exec::{self, lane_chunk_lens, lane_plan, Shards};
 use crate::util::rng::Rng;
 use crate::util::tensor::{matmul_bias_into, scratch_slice, vecmat_bias_into, Mat};
 
@@ -27,16 +28,30 @@ use crate::util::tensor::{matmul_bias_into, scratch_slice, vecmat_bias_into, Mat
 pub struct DigitalScoreNet {
     w: ScoreWeights,
     emb: Embedding,
+    /// Parallel-execution context: the batched lane chunks lanes over the
+    /// pool (the scaling axis for nets too small to bank).
+    exec: exec::Ctx,
 }
 
 impl DigitalScoreNet {
     pub fn new(w: ScoreWeights) -> Self {
         let emb = Embedding::new(w.emb_w.clone(), w.cond_proj.clone());
-        DigitalScoreNet { w, emb }
+        DigitalScoreNet { w, emb, exec: exec::Ctx::default() }
     }
 
     pub fn weights(&self) -> &ScoreWeights {
         &self.w
+    }
+
+    /// Set the execution context; outputs are context-invariant bit for
+    /// bit (lane chunks never change a lane's accumulation order).
+    pub fn set_exec(&mut self, exec: exec::Ctx) {
+        self.exec = exec;
+    }
+
+    pub fn with_exec(mut self, exec: exec::Ctx) -> Self {
+        self.set_exec(exec);
+        self
     }
 }
 
@@ -97,6 +112,9 @@ impl ScoreNet for DigitalScoreNet {
     /// Native batched lane: B×d · d×h GEMMs with the embedding computed
     /// once for all lanes.  Zero heap allocation at steady state (scratch
     /// reused across timesteps); bitwise equal to per-lane [`Self::eval`].
+    /// Under a parallel [`exec::Ctx`] the lanes split into contiguous
+    /// chunks, one pool task each, with disjoint scratch/output shards —
+    /// still bitwise equal (each lane's float-op sequence is untouched).
     fn eval_batch(&self, xs: &[f32], t: f32, onehot: &[f32], out: &mut [f32],
                   scratch: &mut BatchScratch, _rng: &mut Rng) {
         let h = self.w.hidden();
@@ -107,6 +125,52 @@ impl ScoreNet for DigitalScoreNet {
 
         let emb = scratch_slice(&mut scratch.emb, h);
         self.emb.eval(t, onehot, emb);
+
+        let nt = self
+            .exec
+            .lane_tasks(batch, batch * (d * h + h * h + h * d));
+        if nt > 1 {
+            let (chunk, nt) = lane_plan(batch, nt);
+            let lens_d = lane_chunk_lens(batch, d, chunk, nt);
+            let lens_h = lane_chunk_lens(batch, h, chunk, nt);
+            let emb_ro: &[f32] = emb;
+            let sx = Shards::new(scratch_slice(&mut scratch.x, batch * d),
+                                 lens_d.iter().copied());
+            let s1 = Shards::new(scratch_slice(&mut scratch.h1, batch * h),
+                                 lens_h.iter().copied());
+            let s2 = Shards::new(scratch_slice(&mut scratch.h2, batch * h),
+                                 lens_h.iter().copied());
+            let so = Shards::new(out, lens_d.iter().copied());
+            self.exec.run(nt, &|i| {
+                let xc = sx.take(i);
+                let h1 = s1.take(i);
+                let h2 = s2.take(i);
+                let ob = so.take(i);
+                let lanes = ob.len() / d;
+                let lane0 = i * chunk;
+                let xs_c = &xs[lane0 * d..(lane0 + lanes) * d];
+                for (o, &v) in xc.iter_mut().zip(xs_c) {
+                    *o = clamp_voltage(v);
+                }
+                matmul_bias_into(xc, self.w.w1.as_slice(), &self.w.b1, h1,
+                                 lanes, d, h);
+                for row in h1.chunks_exact_mut(h) {
+                    for (v, &e) in row.iter_mut().zip(emb_ro) {
+                        *v = clamp_voltage((*v + e).max(0.0));
+                    }
+                }
+                matmul_bias_into(h1, self.w.w2.as_slice(), &self.w.b2, h2,
+                                 lanes, h, h);
+                for row in h2.chunks_exact_mut(h) {
+                    for (v, &e) in row.iter_mut().zip(emb_ro) {
+                        *v = clamp_voltage((*v + e).max(0.0));
+                    }
+                }
+                matmul_bias_into(h2, self.w.w3.as_slice(), &self.w.b3, ob,
+                                 lanes, h, d);
+            });
+            return;
+        }
 
         let xc = scratch_slice(&mut scratch.x, batch * d);
         for (o, &v) in xc.iter_mut().zip(xs) {
@@ -237,6 +301,22 @@ impl AnalogScoreNet {
 
     pub fn set_noise_model(&mut self, noise: NoiseModel) {
         self.noise = noise;
+    }
+
+    /// Set the execution context on all three crossbar layers.  The banked
+    /// substrate forks per tile-column (and per lane chunk when noise-free);
+    /// outputs stay bitwise identical under any context.  Lane order of the
+    /// per-bank noise draws is preserved by construction, so this is safe
+    /// for noisy modes too.
+    pub fn set_exec(&mut self, exec: exec::Ctx) {
+        self.l1.set_exec(exec.clone());
+        self.l2.set_exec(exec.clone());
+        self.l3.set_exec(exec);
+    }
+
+    pub fn with_exec(mut self, exec: exec::Ctx) -> Self {
+        self.set_exec(exec);
+        self
     }
 
     /// Total programmed cells across the three layers (energy model input).
@@ -615,6 +695,28 @@ mod tests {
                         &mut s, &mut rng);
             assert_eq!(&outb[lane * 2..(lane + 1) * 2], s.as_slice(),
                        "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn digital_lane_chunked_eval_batch_is_bitwise_serial() {
+        use crate::exec::{Ctx, ParStrategy, Pool};
+        use std::sync::Arc;
+        let serial = DigitalScoreNet::new(weights()).with_exec(Ctx::serial());
+        let par = DigitalScoreNet::new(weights())
+            .with_exec(Ctx::with_pool(ParStrategy::Lanes, Arc::new(Pool::new(3))));
+        let mut rng = Rng::new(8);
+        for batch in [2usize, 5, 8] {
+            let xs: Vec<f32> =
+                (0..batch * 2).map(|i| 0.07 * i as f32 - 0.4).collect();
+            let oh = [0.0, 1.0, 0.0];
+            let mut sa = BatchScratch::new();
+            let mut sb = BatchScratch::new();
+            let mut a = vec![0.0f32; batch * 2];
+            let mut b = vec![0.0f32; batch * 2];
+            serial.eval_batch(&xs, 0.4, &oh, &mut a, &mut sa, &mut rng);
+            par.eval_batch(&xs, 0.4, &oh, &mut b, &mut sb, &mut rng);
+            assert_eq!(a, b, "batch {batch}");
         }
     }
 

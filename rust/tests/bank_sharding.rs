@@ -193,6 +193,7 @@ fn service_surfaces_bank_topology_and_reads() {
                 linger: std::time::Duration::from_millis(1),
             },
             seed: 6,
+            intra_threads: 0,
         },
     );
     // topology is visible before any traffic (reads = 0)

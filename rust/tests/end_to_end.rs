@@ -185,6 +185,7 @@ fn programming_mode_blocks_and_resumes() {
         workers: 2,
         batcher: BatcherConfig::default(),
         seed: 5,
+        intra_threads: 0,
     }));
     // hold programming mode, fire requests, release — all must complete
     let svc2 = Arc::clone(&svc);

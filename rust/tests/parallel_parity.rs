@@ -1,0 +1,240 @@
+//! Bitwise-determinism parity suite for the `exec` bank-parallel
+//! subsystem.
+//!
+//! The contract under test: for any [`exec::Ctx`] — serial, a 1-thread
+//! pool, or an N-thread pool, on either the bank (tile-column) or lane
+//! axis — every forward path produces **bitwise identical** output.
+//! `Ideal` evaluation must additionally equal the serial *monolithic*
+//! oracle (the PR 2 invariant, now preserved under parallel execution),
+//! and the noisy modes must be thread-count-invariant because every draw
+//! comes from a per-bank (or per-lane) stream whose sequence does not
+//! depend on scheduling.
+//!
+//! Runs on synthetic weights so it needs no built artifacts.
+
+use std::sync::Arc;
+
+use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::crossbar::mapper::map_layer;
+use memdiff::crossbar::{BankedCrossbarLayer, Banking, CrossbarLayer, NoiseModel};
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::sampler::{DigitalSampler, SamplerMode};
+use memdiff::exec::{Ctx, ParStrategy, Pool};
+use memdiff::nn::{AnalogScoreNet, BatchScratch, DigitalScoreNet, ScoreNet,
+                  ScoreWeights};
+use memdiff::util::rng::Rng;
+use memdiff::util::tensor::Mat;
+
+fn quiet() -> CellParams {
+    CellParams { read_noise_frac: 0.0, ..CellParams::default() }
+}
+
+fn test_weights(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| 0.6 * rng.gaussian_f32())
+}
+
+/// 1×1, 2×2-ragged and 3×3 tile grids.
+const GRIDS: [(usize, usize); 3] = [(32, 32), (40, 40), (96, 96)];
+
+/// The context matrix every parity test sweeps: serial, a 1-thread pool,
+/// and a 4-thread pool on each forced axis plus Auto.
+fn contexts() -> Vec<(String, Ctx)> {
+    let p1 = Arc::new(Pool::new(1));
+    let p4 = Arc::new(Pool::new(4));
+    vec![
+        ("serial".into(), Ctx::serial()),
+        ("banks-t1".into(), Ctx::with_pool(ParStrategy::Banks, p1.clone())),
+        ("lanes-t1".into(), Ctx::with_pool(ParStrategy::Lanes, p1)),
+        ("banks-t4".into(), Ctx::with_pool(ParStrategy::Banks, p4.clone())),
+        ("lanes-t4".into(), Ctx::with_pool(ParStrategy::Lanes, p4.clone())),
+        ("auto-t4".into(), Ctx::with_pool(ParStrategy::Auto, p4)),
+    ]
+}
+
+#[test]
+fn nthread_banked_ideal_bitwise_equals_serial_monolithic_oracle() {
+    for (rows, cols) in GRIDS {
+        let w = test_weights(rows, cols, 1000 + rows as u64);
+        let m = map_layer(&w);
+        let mut mono =
+            CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet());
+        mono.set_exec(Ctx::serial()); // the oracle stays serial by decree
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..rows).map(|i| (i as f32 * 0.23).sin()).collect();
+        let mut want_scalar = vec![0.0f32; cols];
+        mono.forward(&v, &mut want_scalar, NoiseModel::Ideal, &mut rng);
+        let batch = 7; // odd batch → ragged lane chunks on a 4-thread pool
+        let vb: Vec<f32> =
+            (0..batch * rows).map(|i| (i as f32 * 0.31).cos() - 0.2).collect();
+        let mut want_batch = vec![0.0f32; batch * cols];
+        mono.forward_batch(&vb, &mut want_batch, batch, NoiseModel::Ideal,
+                           &mut rng);
+
+        for (label, ctx) in contexts() {
+            let mut banked = BankedCrossbarLayer::from_conductances(
+                &m.g_target, m.gain, quiet(), 11,
+            );
+            banked.set_exec(ctx);
+            let mut got = vec![0.0f32; cols];
+            banked.forward(&v, &mut got, NoiseModel::Ideal, &mut rng);
+            assert_eq!(got, want_scalar, "{rows}x{cols} scalar under {label}");
+            let mut gotb = vec![0.0f32; batch * cols];
+            banked.forward_batch(&vb, &mut gotb, batch, NoiseModel::Ideal,
+                                 &mut rng);
+            assert_eq!(gotb, want_batch, "{rows}x{cols} batched under {label}");
+        }
+    }
+}
+
+#[test]
+fn noisy_modes_bitwise_invariant_across_thread_counts() {
+    // ReadFast and ReadPerCell draw from per-bank streams, so the outputs
+    // (not just their moments) must be identical at any thread count.
+    // Fresh layers per context so the stream states start equal; two calls
+    // per layer so evolving stream state is covered too.
+    for (rows, cols) in GRIDS {
+        let w = test_weights(rows, cols, 2000 + cols as u64);
+        let m = map_layer(&w);
+        let batch = 5;
+        let vb: Vec<f32> =
+            (0..batch * rows).map(|i| 0.2 + (i as f32 * 0.13).sin()).collect();
+        let v: Vec<f32> = vb[..rows].to_vec();
+        for noise in [NoiseModel::ReadFast, NoiseModel::ReadPerCell] {
+            let mut want: Option<(Vec<f32>, Vec<f32>)> = None;
+            for (label, ctx) in contexts() {
+                let mut layer = BankedCrossbarLayer::from_conductances(
+                    &m.g_target, m.gain, CellParams::default(), 13,
+                );
+                layer.set_exec(ctx);
+                let mut rng = Rng::new(2);
+                let mut scalar = vec![0.0f32; cols];
+                layer.forward(&v, &mut scalar, noise, &mut rng);
+                let mut batched = vec![0.0f32; batch * cols];
+                layer.forward_batch(&vb, &mut batched, batch, noise, &mut rng);
+                match &want {
+                    None => want = Some((scalar, batched)),
+                    Some((ws, wb)) => {
+                        assert_eq!(&scalar, ws,
+                                   "{rows}x{cols} {noise:?} scalar under {label}");
+                        assert_eq!(&batched, wb,
+                                   "{rows}x{cols} {noise:?} batched under {label}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn digital_net_lane_chunks_bitwise_at_hidden_48() {
+    // hidden = 48, batch 64: big enough that Auto actually forks
+    let w = ScoreWeights::synthetic(2, 48, 3, 3000);
+    let batch = 64;
+    let xs: Vec<f32> =
+        (0..batch * 2).map(|i| 0.04 * i as f32 - 1.1).collect();
+    let oh = [0.0, 0.0, 1.0];
+    let mut want: Option<Vec<f32>> = None;
+    for (label, ctx) in contexts() {
+        let net = DigitalScoreNet::new(w.clone()).with_exec(ctx);
+        let mut rng = Rng::new(3);
+        let mut scratch = BatchScratch::new();
+        let mut out = vec![0.0f32; batch * 2];
+        net.eval_batch(&xs, 0.6, &oh, &mut out, &mut scratch, &mut rng);
+        match &want {
+            None => {
+                // serial context first: cross-check against per-lane eval
+                let mut scalar = [0.0f32; 2];
+                for b in 0..batch {
+                    net.eval(&xs[b * 2..(b + 1) * 2], 0.6, &oh, &mut scalar,
+                             &mut rng);
+                    assert_eq!(&out[b * 2..(b + 1) * 2], scalar.as_slice(),
+                               "lane {b} vs scalar eval");
+                }
+                want = Some(out);
+            }
+            Some(w) => assert_eq!(&out, w, "eval_batch under {label}"),
+        }
+    }
+}
+
+#[test]
+fn wide_net_end_to_end_bitwise_across_thread_counts() {
+    // hidden = 48 score net through the digital sampler AND the analog
+    // solver, serial vs 4-thread, against the serial monolithic oracle
+    let w = ScoreWeights::synthetic(2, 48, 3, 4000);
+    let oh = [0.0, 0.0, 0.0];
+    let p4 = Arc::new(Pool::new(4));
+
+    // oracle: forced-monolithic net, serial context
+    let mono = AnalogScoreNet::from_conductances_with(
+        &w, quiet(), NoiseModel::Ideal, Banking::ForceMonolithic)
+        .with_exec(Ctx::serial());
+
+    let mut rng = Rng::new(4);
+    let (want_dig, _) = DigitalSampler::new(&mono, SamplerMode::Ode)
+        .with_exec(Ctx::serial())
+        .sample_batched(6, &oh, 15, &mut rng);
+    let cfg = SolverConfig::new(SolverMode::Ode).with_substeps(120);
+    let mut rng = Rng::new(5);
+    let want_ana = AnalogSolver::new(&mono, cfg.clone())
+        .with_exec(Ctx::serial())
+        .solve_batched(4, &oh, &mut rng);
+
+    for (label, ctx) in [
+        ("serial".to_string(), Ctx::serial()),
+        ("auto-t4".to_string(), Ctx::with_pool(ParStrategy::Auto, p4.clone())),
+        ("banks-t4".to_string(), Ctx::with_pool(ParStrategy::Banks, p4.clone())),
+        ("lanes-t4".to_string(), Ctx::with_pool(ParStrategy::Lanes, p4.clone())),
+    ] {
+        let banked =
+            AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal)
+                .with_exec(ctx.clone());
+        assert!(banked.is_banked(), "hidden 48 must shard");
+
+        let mut rng = Rng::new(4);
+        let (got_dig, _) = DigitalSampler::new(&banked, SamplerMode::Ode)
+            .with_exec(ctx.clone())
+            .sample_batched(6, &oh, 15, &mut rng);
+        assert_eq!(got_dig, want_dig, "digital sampler under {label}");
+
+        let mut rng = Rng::new(5);
+        let got_ana = AnalogSolver::new(&banked, cfg.clone())
+            .with_exec(ctx)
+            .solve_batched(4, &oh, &mut rng);
+        assert_eq!(got_ana, want_ana, "analog solver under {label}");
+    }
+}
+
+#[test]
+fn sde_with_read_noise_bitwise_across_thread_counts() {
+    // the strongest form of the invariant: device read noise (per-bank
+    // streams) + SDE Wiener noise (per-lane streams) end-to-end, still
+    // bitwise identical between serial and a 4-thread pool
+    let w = ScoreWeights::synthetic(2, 48, 3, 5000);
+    let oh = [0.0, 0.0, 0.0];
+    let p4 = Arc::new(Pool::new(4));
+    let run = |ctx: Ctx| -> (Vec<f32>, Vec<f32>) {
+        let net = AnalogScoreNet::from_conductances(
+            &w, CellParams::default(), NoiseModel::ReadFast)
+            .with_exec(ctx.clone());
+        let mut rng = Rng::new(6);
+        let (dig, _) = DigitalSampler::new(&net, SamplerMode::Sde)
+            .with_exec(ctx.clone())
+            .sample_batched(6, &oh, 20, &mut rng);
+        let cfg = SolverConfig::new(SolverMode::Sde).with_substeps(80);
+        let mut rng = Rng::new(7);
+        let ana = AnalogSolver::new(&net, cfg)
+            .with_exec(ctx)
+            .solve_batched(5, &oh, &mut rng);
+        (dig, ana)
+    };
+    let (want_dig, want_ana) = run(Ctx::serial());
+    for strategy in [ParStrategy::Banks, ParStrategy::Auto] {
+        let (dig, ana) = run(Ctx::with_pool(strategy, p4.clone()));
+        assert_eq!(dig, want_dig, "SDE sampler under {strategy:?}");
+        assert_eq!(ana, want_ana, "SDE solver under {strategy:?}");
+    }
+    assert!(want_dig.iter().all(|v| v.is_finite()));
+    assert!(want_ana.iter().all(|v| v.is_finite()));
+}
