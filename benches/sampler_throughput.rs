@@ -13,7 +13,8 @@ use std::sync::Arc;
 
 use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
 use memdiff::coordinator::batcher::BatcherConfig;
-use memdiff::coordinator::service::RustDigitalEngine;
+use memdiff::coordinator::deploy::{self, BackendKind, DeployPlan};
+use memdiff::coordinator::service::{AnalogEngine, Engine, RustDigitalEngine};
 use memdiff::coordinator::{GenRequest, Service, ServiceConfig, SolverChoice, TaskKind};
 use memdiff::crossbar::NoiseModel;
 use memdiff::data::Meta;
@@ -158,6 +159,81 @@ fn main() -> anyhow::Result<()> {
         .as_ref()
         .map(|p| (p.threads as f64, p.scopes_run as f64, p.tasks_run as f64))
         .unwrap_or((f64::NAN, f64::NAN, f64::NAN));
+    drop(service);
+
+    bench::section("deployment router, mixed-class traffic (analog + rust lanes)");
+    // conditional weights so the router sees conditional classes too
+    let wc = ScoreWeights::load(Meta::artifacts_dir().join("weights_cond.json"))?;
+    let mut plan = DeployPlan::default(); // analog→analog, digital→rust
+    plan.apply_overrides("analog_workers=2,rust_workers=2")?;
+    let router = Arc::new(deploy::start_deployed(
+        &plan,
+        &mut |kind: BackendKind| {
+            Ok(match kind {
+                BackendKind::Analog => Arc::new(AnalogEngine {
+                    net: AnalogScoreNet::from_conductances(
+                        &wc, CellParams::default(), NoiseModel::ReadFast),
+                    sched: meta.sched,
+                    // short solve window: this scenario measures routing +
+                    // lane isolation, not the full analog solve
+                    substeps: 250,
+                }) as Arc<dyn Engine>,
+                BackendKind::Rust => Arc::new(RustDigitalEngine {
+                    net: DigitalScoreNet::new(wc.clone()),
+                    sched: meta.sched,
+                }) as Arc<dyn Engine>,
+                BackendKind::Hlo => anyhow::bail!("not deployed in this bench"),
+            })
+        },
+        None,
+        ServiceConfig {
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch_samples: B,
+                linger: std::time::Duration::from_millis(1),
+            },
+            seed: 17,
+            intra_threads: 0,
+        },
+    )?);
+    let t0 = std::time::Instant::now();
+    let total_mixed = 60usize;
+    let mut rxs = Vec::new();
+    for i in 0..total_mixed {
+        // interleaved AnalogOde + DigitalOde + conditional DigitalSde
+        let (task, solver, n) = match i % 3 {
+            0 => (TaskKind::Circle, SolverChoice::AnalogOde, 4),
+            1 => (TaskKind::Circle, SolverChoice::DigitalOde { steps: 100 }, 16),
+            _ => (TaskKind::Letter((i / 3) % 3),
+                  SolverChoice::DigitalSde { steps: 100 }, 16),
+        };
+        rxs.push(router.submit(GenRequest {
+            id: 0,
+            task,
+            n_samples: n,
+            solver,
+            guidance: 2.0,
+            decode: false,
+        })?);
+    }
+    let mut mixed_samples = 0usize;
+    for rx in rxs {
+        mixed_samples += rx.recv()??.samples.len() / 2;
+    }
+    let router_wall = t0.elapsed().as_secs_f64();
+    let router_sps = mixed_samples as f64 / router_wall;
+    let rsnap = router.metrics.snapshot();
+    bench::row(&["router (mixed classes, 2 backends)",
+                 &format!("{router_sps:.0} samples/s over {total_mixed} requests")]);
+    bench::row(&["router metrics", &rsnap.report()]);
+    // per-backend throughput/latency for the perf trajectory
+    let backend = |name: &str| rsnap.backends.iter().find(|b| b.name == name);
+    let (router_analog_sps, router_analog_lat) = backend("analog")
+        .map(|b| (b.samples as f64 / router_wall, b.mean_latency_s))
+        .unwrap_or((f64::NAN, f64::NAN));
+    let (router_rust_sps, router_rust_lat) = backend("rust")
+        .map(|b| (b.samples as f64 / router_wall, b.mean_latency_s))
+        .unwrap_or((f64::NAN, f64::NAN));
 
     bench::write_json("BENCH_sampler_throughput.json", &[
         ("batch_size", B as f64),
@@ -172,6 +248,12 @@ fn main() -> anyhow::Result<()> {
         ("pool_threads", pool_threads),
         ("pool_scopes_run", pool_scopes),
         ("pool_tasks_run", pool_tasks),
+        ("router_total_samples_per_s", router_sps),
+        ("router_analog_samples_per_s", router_analog_sps),
+        ("router_rust_samples_per_s", router_rust_sps),
+        ("router_analog_mean_latency_s", router_analog_lat),
+        ("router_rust_mean_latency_s", router_rust_lat),
+        ("router_degraded", rsnap.degraded.len() as f64),
     ])?;
     Ok(())
 }

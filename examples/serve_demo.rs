@@ -1,47 +1,101 @@
-//! Coordinator demo: mixed-task request load through the batching service.
+//! Deployment-router demo: mixed analog + digital traffic through ONE
+//! routed service.
 //!
-//! Spawns client threads firing conditional/unconditional generation
-//! requests with random sizes and decode flags at the service, then prints
-//! throughput, latency percentiles, and batch-fill metrics — the serving-
-//! layer behaviour a deployment cares about.
+//! Builds the paper-shaped two-backend deployment table — analog classes
+//! on the analog-hardware simulator, digital classes on the rust baseline
+//! — and fires conditional/unconditional requests of both solver families
+//! at it from concurrent clients.  Each backend owns its own batcher lane
+//! and workers, so the slow analog batches never head-of-line-block the
+//! digital traffic; the metrics report shows the per-backend `backend=`
+//! columns (queue depth, throughput, modeled hardware energy).
+//!
+//! Falls back to synthetic weights when the AOT artifacts are absent, so
+//! this demo (and the CI smoke step that runs it) works on a fresh
+//! checkout.  A second mini-deployment at the end requests the `hlo`
+//! backend to demonstrate the Hlo→rust fallback chain: with the default
+//! stub runtime the deployment degrades instead of failing startup, and
+//! the degradation surfaces in the metrics (`degraded=` column).
 //!
 //! Run with: `cargo run --release --example serve_demo`
 
 use std::sync::Arc;
 
 use memdiff::coordinator::batcher::BatcherConfig;
-use memdiff::coordinator::service::RustDigitalEngine;
-use memdiff::coordinator::{GenRequest, Service, ServiceConfig, SolverChoice, TaskKind};
+use memdiff::coordinator::deploy::{self, BackendKind, DeployPlan};
+use memdiff::coordinator::service::{AnalogEngine, Engine, HloEngine, RustDigitalEngine};
+use memdiff::coordinator::{GenRequest, ServiceConfig, SolverChoice, TaskKind};
+use memdiff::crossbar::NoiseModel;
 use memdiff::data::Meta;
-use memdiff::nn::{DigitalScoreNet, ScoreWeights};
+use memdiff::device::cell::CellParams;
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::runtime::ArtifactStore;
 use memdiff::util::rng::Rng;
 use memdiff::util::stats::Summary;
 use memdiff::vae::{DecoderWeights, PixelDecoder};
 
-const CLIENTS: usize = 8;
-const REQUESTS_PER_CLIENT: usize = 24;
+const CLIENTS: usize = 6;
+const REQUESTS_PER_CLIENT: usize = 12;
+/// Analog solve window per sample, kept short so the demo stays snappy.
+const DEMO_SUBSTEPS: usize = 250;
 
 fn main() -> anyhow::Result<()> {
-    let meta = Meta::load_default()?;
-    let weights = ScoreWeights::load(Meta::artifacts_dir().join("weights_cond.json"))?;
-    let decoder = Arc::new(PixelDecoder::new(DecoderWeights::load(
-        Meta::artifacts_dir().join("vae_decoder.json"))?));
+    // artifacts when built, synthetic fixture otherwise (CI smoke runs
+    // this on a fresh checkout)
+    let sched = Meta::load_default().map(|m| m.sched).unwrap_or_default();
+    let weights = ScoreWeights::load(Meta::artifacts_dir().join("weights_cond.json"))
+        .unwrap_or_else(|_| {
+            println!("(artifacts absent: using the synthetic weight fixture)");
+            ScoreWeights::synthetic(2, 48, 3, 2024)
+        });
+    let decoder = DecoderWeights::load(Meta::artifacts_dir().join("vae_decoder.json"))
+        .ok()
+        .map(|w| Arc::new(PixelDecoder::new(w)));
+    let have_decoder = decoder.is_some();
 
-    let engine = Arc::new(RustDigitalEngine {
-        net: DigitalScoreNet::new(weights),
-        sched: meta.sched,
-    });
-    let service = Arc::new(Service::start(engine, Some(decoder), ServiceConfig {
-        workers: 4,
-        batcher: BatcherConfig {
-            max_batch_samples: 64,
-            linger: std::time::Duration::from_millis(2),
+    // the paper-shaped two-backend table: analog classes → analog
+    // simulator, digital classes → rust baseline, two workers each
+    let mut plan = DeployPlan::default();
+    plan.set("analog_workers", "2")?;
+    plan.set("rust_workers", "2")?;
+    let mut factory = |kind: BackendKind| -> anyhow::Result<Arc<dyn Engine>> {
+        Ok(match kind {
+            BackendKind::Analog => Arc::new(AnalogEngine {
+                net: AnalogScoreNet::from_conductances(
+                    &weights, CellParams::default(), NoiseModel::ReadFast),
+                sched,
+                substeps: DEMO_SUBSTEPS,
+            }),
+            BackendKind::Rust => Arc::new(RustDigitalEngine {
+                net: DigitalScoreNet::new(weights.clone()),
+                sched,
+            }),
+            BackendKind::Hlo => {
+                let store = ArtifactStore::open_default()?;
+                let n_classes = store.meta().n_classes;
+                Arc::new(HloEngine { store, n_classes })
+            }
+        })
+    };
+    let service = Arc::new(deploy::start_deployed(
+        &plan,
+        &mut factory,
+        decoder,
+        ServiceConfig {
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch_samples: 64,
+                linger: std::time::Duration::from_millis(2),
+            },
+            seed: 99,
+            intra_threads: 0,
         },
-        seed: 99,
-        intra_threads: 0,
-    }));
+    )?);
 
-    println!("serve_demo: {CLIENTS} clients x {REQUESTS_PER_CLIENT} requests, 4 workers");
+    println!(
+        "serve_demo: {CLIENTS} clients x {REQUESTS_PER_CLIENT} mixed-family \
+         requests, 2 workers/backend"
+    );
+    println!("deployment: {}", service.registry().route_summary());
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..CLIENTS)
         .map(|cid| {
@@ -50,17 +104,19 @@ fn main() -> anyhow::Result<()> {
                 let mut rng = Rng::new(1000 + cid as u64);
                 let mut lat = Summary::new();
                 let mut samples = 0usize;
-                for _ in 0..REQUESTS_PER_CLIENT {
+                for k in 0..REQUESTS_PER_CLIENT {
                     let task = match rng.below(4) {
                         0 => TaskKind::Circle,
                         c => TaskKind::Letter(c - 1),
                     };
-                    let solver = if rng.uniform() < 0.5 {
-                        SolverChoice::DigitalSde { steps: 100 }
-                    } else {
-                        SolverChoice::DigitalOde { steps: 100 }
+                    // both solver families through the one router
+                    let solver = match (cid + k) % 4 {
+                        0 => SolverChoice::AnalogOde,
+                        1 => SolverChoice::AnalogSde,
+                        2 => SolverChoice::DigitalOde { steps: 100 },
+                        _ => SolverChoice::DigitalSde { steps: 100 },
                     };
-                    let n = 1 + rng.below(24);
+                    let n = 1 + rng.below(12);
                     let t = std::time::Instant::now();
                     let rx = service
                         .submit(GenRequest {
@@ -69,7 +125,9 @@ fn main() -> anyhow::Result<()> {
                             n_samples: n,
                             solver,
                             guidance: 2.0,
-                            decode: task.is_conditional() && rng.uniform() < 0.3,
+                            decode: have_decoder
+                                && task.is_conditional()
+                                && rng.uniform() < 0.3,
                         })
                         .unwrap();
                     let resp = rx.recv().unwrap().unwrap();
@@ -86,9 +144,6 @@ fn main() -> anyhow::Result<()> {
     for h in handles {
         let (lat, samples) = h.join().unwrap();
         total_samples += samples;
-        for q in [50.0, 99.0] {
-            let _ = q; // per-client percentiles folded into the global summary
-        }
         all_lat.record(lat.p50());
     }
     let wall = t0.elapsed();
@@ -99,7 +154,17 @@ fn main() -> anyhow::Result<()> {
     );
     println!("client-side median latency (median across clients): {:.1} ms",
              1e3 * all_lat.p50());
-    println!("service metrics: {}", service.metrics.snapshot().report());
+    let snap = service.metrics.snapshot();
+    println!("service metrics: {}", snap.report());
+    assert_eq!(snap.backends.len(), 2, "two backends deployed");
+    for b in &snap.backends {
+        assert!(b.requests > 0, "backend {} must have served traffic", b.name);
+        println!(
+            "  backend {:>6}: {} requests, {} samples, mean batch latency {:.1} ms, \
+             modeled hw energy {:.3e} J",
+            b.name, b.requests, b.samples, 1e3 * b.mean_latency_s, b.hw_energy_j
+        );
+    }
 
     // programming-mode exclusion demo: reprogram while serving drains
     println!("\nmode-gate demo: entering programming mode (compute drains first)...");
@@ -108,5 +173,32 @@ fn main() -> anyhow::Result<()> {
         println!("  in programming mode: macro exclusively held");
     }
     println!("  back in compute mode");
+
+    // Hlo→rust fallback chain: ask for the PJRT backend; with the default
+    // stub runtime (or absent artifacts) the digital classes degrade to
+    // the rust engine at startup instead of failing the deployment
+    println!("\nfallback demo: deployment table requests digital=hlo ...");
+    let mut plan = DeployPlan::default();
+    plan.apply_overrides("digital=hlo,rust_workers=1,analog_workers=1,hlo_workers=1")?;
+    let fb = deploy::start_deployed(&plan, &mut factory, None, ServiceConfig {
+        workers: 1,
+        batcher: BatcherConfig {
+            max_batch_samples: 64,
+            linger: std::time::Duration::from_millis(1),
+        },
+        seed: 7,
+        intra_threads: 0,
+    })?;
+    let resp = fb.generate(TaskKind::Circle, 4,
+                           SolverChoice::DigitalOde { steps: 50 }, 0.0, false)?;
+    assert_eq!(resp.samples.len(), 8);
+    let snap = fb.metrics.snapshot();
+    println!("  resolved routes: {}", fb.registry().route_summary());
+    if snap.degraded.is_empty() {
+        println!("  hlo runtime available: no degradation");
+    } else {
+        println!("  degraded as planned: {}", snap.degraded.join("; "));
+    }
+    println!("  fallback metrics: {}", snap.report());
     Ok(())
 }

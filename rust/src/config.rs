@@ -14,6 +14,12 @@
 //! [solver]
 //! substeps = 2000
 //! guidance = 2.0
+//!
+//! [deploy]
+//! analog = analog      # backend for the analog solver family
+//! digital = rust       # rust | hlo (per-class keys like digital_cond work too)
+//! analog_workers = 2   # per-backend worker counts (0 = [service] workers)
+//! rust_workers = 2
 //! ```
 
 use std::collections::BTreeMap;
@@ -63,6 +69,18 @@ impl RawConfig {
         self.sections.get(section)?.get(key).map(|s| s.as_str())
     }
 
+    /// Every `key = value` entry of a section, in file-stable (sorted)
+    /// order — used by table-shaped sections like `[deploy]` whose key set
+    /// is open-ended.
+    pub fn section_entries(&self, section: &str) -> Vec<(&str, &str)> {
+        self.sections
+            .get(section)
+            .map(|kvs| {
+                kvs.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect()
+            })
+            .unwrap_or_default()
+    }
+
     pub fn get_parsed<T: std::str::FromStr>(&self, section: &str, key: &str)
                                             -> anyhow::Result<Option<T>> {
         match self.get(section, key) {
@@ -90,6 +108,12 @@ pub struct Config {
     pub guidance: f32,
     pub seed: u64,
     pub artifacts_dir: Option<String>,
+    /// Deployment table from the `[deploy]` section: request class →
+    /// backend plus per-backend worker counts (see
+    /// [`crate::coordinator::deploy::DeployPlan`]).  Default routes
+    /// analog classes to the analog simulator and digital classes to the
+    /// rust baseline.
+    pub deploy: crate::coordinator::DeployPlan,
 }
 
 impl Default for Config {
@@ -104,6 +128,7 @@ impl Default for Config {
             guidance: 2.0,
             seed: 7,
             artifacts_dir: None,
+            deploy: crate::coordinator::DeployPlan::default(),
         }
     }
 }
@@ -126,6 +151,13 @@ impl Config {
             guidance: raw.get_parsed("solver", "guidance")?.unwrap_or(d.guidance),
             seed: raw.get_parsed("solver", "seed")?.unwrap_or(d.seed),
             artifacts_dir: raw.get("paths", "artifacts").map(String::from),
+            deploy: {
+                let mut plan = d.deploy;
+                for (k, v) in raw.section_entries("deploy") {
+                    plan.set(k, v)?;
+                }
+                plan
+            },
         })
     }
 
@@ -173,6 +205,30 @@ mod tests {
         assert_eq!(cfg.par, crate::exec::ParStrategy::Banks);
         let bad = RawConfig::parse("[service]\npar = rayon\n").unwrap();
         assert!(Config::from_raw(&bad).is_err());
+    }
+
+    #[test]
+    fn deploy_section_parses_into_plan() {
+        use crate::coordinator::deploy::BackendKind;
+        use crate::coordinator::request::{RequestClass, SolverFamily};
+        let raw = RawConfig::parse(
+            "[deploy]\ndigital = hlo\ndigital_cond = rust\nanalog_workers = 3\n",
+        )
+        .unwrap();
+        let cfg = Config::from_raw(&raw).unwrap();
+        let uncond = RequestClass { family: SolverFamily::Digital, conditional: false };
+        let cond = RequestClass { family: SolverFamily::Digital, conditional: true };
+        assert_eq!(cfg.deploy.backend_for(uncond), BackendKind::Hlo);
+        assert_eq!(cfg.deploy.backend_for(cond), BackendKind::Rust);
+        assert_eq!(cfg.deploy.workers_for(BackendKind::Analog), 3);
+        // default plan when the section is absent
+        let plain = Config::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(plain.deploy, crate::coordinator::DeployPlan::default());
+        // family mismatches and junk keys are config errors
+        let bad = RawConfig::parse("[deploy]\nanalog = hlo\n").unwrap();
+        assert!(Config::from_raw(&bad).is_err());
+        let junk = RawConfig::parse("[deploy]\nteleport = analog\n").unwrap();
+        assert!(Config::from_raw(&junk).is_err());
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! 4. requests with the same key dequeue FIFO.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::request::GenRequest;
@@ -112,6 +112,12 @@ impl Batcher {
         self.len() == 0
     }
 
+    /// Total queued samples (the running per-key counters summed) — the
+    /// queue-depth gauge the per-backend metrics report.
+    pub fn queued_samples(&self) -> usize {
+        self.state.lock().unwrap().key_samples.values().sum()
+    }
+
     /// Blocking: wait for and assemble the next batch.  Returns None once
     /// closed *and* drained.
     pub fn next_batch(&self) -> Option<Batch> {
@@ -174,6 +180,56 @@ impl Batcher {
             }
         }
         Batch { key, requests }
+    }
+}
+
+/// Per-backend batching lanes behind one submit surface.
+///
+/// The deployment router gives every backend its **own** [`Batcher`], so
+/// coalescing stays per-class and a slow lane (a 2000-substep analog
+/// batch) can never head-of-line-block another backend's traffic.  The
+/// shutdown contract extends the single-lane one: [`Self::close_all`]
+/// closes *every* lane, each lane still drains fully (close wakes all
+/// blocked `next_batch` callers promptly, queued work ships first), and
+/// the service asserts no request is dropped with a pending response
+/// entry across any lane.
+pub struct LaneSet {
+    lanes: Vec<Arc<Batcher>>,
+}
+
+impl LaneSet {
+    /// One lane per backend, all sharing the same batching policy.
+    pub fn new(n_lanes: usize, cfg: &BatcherConfig) -> Self {
+        LaneSet {
+            lanes: (0..n_lanes)
+                .map(|_| Arc::new(Batcher::new(cfg.clone())))
+                .collect(),
+        }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn lane(&self, idx: usize) -> &Arc<Batcher> {
+        &self.lanes[idx]
+    }
+
+    /// Submit to one lane (non-blocking).  False if that lane is closed.
+    pub fn submit(&self, idx: usize, req: GenRequest) -> bool {
+        self.lanes[idx].submit(req)
+    }
+
+    /// Close every lane; queued work still drains per lane.
+    pub fn close_all(&self) {
+        for lane in &self.lanes {
+            lane.close();
+        }
+    }
+
+    /// Total queued requests across lanes.
+    pub fn queued_requests(&self) -> usize {
+        self.lanes.iter().map(|l| l.len()).sum()
     }
 }
 
@@ -361,6 +417,59 @@ mod tests {
         // drain the rest; the map must end empty
         let _ = drain(&b);
         assert!(b.state.lock().unwrap().key_samples.is_empty());
+    }
+
+    #[test]
+    fn queued_samples_track_submissions() {
+        let b = Batcher::new(BatcherConfig::default());
+        assert_eq!(b.queued_samples(), 0);
+        b.submit(req(0, 0, 10));
+        b.submit(req(1, 1, 5));
+        assert_eq!(b.queued_samples(), 15);
+        let _ = drain(&b);
+        assert_eq!(b.queued_samples(), 0);
+    }
+
+    #[test]
+    fn lane_set_isolates_lanes() {
+        let set = LaneSet::new(2, &BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_millis(0),
+        });
+        assert_eq!(set.n_lanes(), 2);
+        assert!(set.submit(0, req(1, 0, 4)));
+        assert!(set.submit(1, req(2, 1, 6)));
+        assert_eq!(set.queued_requests(), 2);
+        // closing lane 0 alone leaves lane 1 accepting work
+        set.lane(0).close();
+        assert!(!set.submit(0, req(3, 0, 1)));
+        assert!(set.submit(1, req(4, 1, 1)));
+        // lane 0 still drains its queued request after close
+        let batch = set.lane(0).next_batch().unwrap();
+        assert_eq!(batch.requests[0].id, 1);
+        assert!(set.lane(0).next_batch().is_none());
+    }
+
+    #[test]
+    fn close_all_drains_every_lane() {
+        let set = LaneSet::new(3, &BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_secs(30),
+        });
+        for lane in 0..3 {
+            for k in 0..2 {
+                set.submit(lane, req((lane * 10 + k) as u64, lane % 3, 3));
+            }
+        }
+        set.close_all();
+        for lane in 0..3 {
+            let mut ids = Vec::new();
+            while let Some(batch) = set.lane(lane).next_batch() {
+                ids.extend(batch.requests.iter().map(|r| r.id));
+            }
+            assert_eq!(ids.len(), 2, "lane {lane} must drain fully");
+        }
+        assert_eq!(set.queued_requests(), 0);
     }
 
     #[test]

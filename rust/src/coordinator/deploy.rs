@@ -1,0 +1,628 @@
+//! Deployment router: request classes mapped onto named backends.
+//!
+//! The paper's evaluation runs *different solvers on different substrates*
+//! — the analog integrator for speed/energy, the digital sampler as the
+//! quality baseline — so a deployment must serve both side by side.  This
+//! module is the table that makes that routable:
+//!
+//! * [`BackendKind`] — the three engine implementations a deployment can
+//!   name (`analog` simulator, `rust` digital baseline, `hlo` PJRT
+//!   artifacts).
+//! * [`DeployPlan`] — the config-driven class→backend table (`[deploy]`
+//!   section / `--deploy` CLI overrides) plus per-backend worker counts.
+//! * [`EngineRegistry`] — the resolved runtime table the [`Service`]
+//!   facade consults on every submit: request class → backend index →
+//!   that backend's batcher lane and worker allotment.
+//! * [`build_registry`] — constructs each backend the plan needs via a
+//!   caller-supplied factory, with a **fallback chain**: if the `hlo`
+//!   backend fails to construct (the default `pjrt_vendored` stub errors,
+//!   or the AOT artifacts are absent), its classes degrade to the `rust`
+//!   digital engine and the [`Degradation`] is recorded in `Metrics`
+//!   rather than failing startup.
+//!
+//! Flow of one request: `GenRequest::class()` → registry route → that
+//! backend's lane ([`super::batcher::LaneSet`]) → coalesced per-class
+//! batch → one of the backend's own workers → `Engine::generate`.  Lanes
+//! are per-backend, so a slow analog batch can never head-of-line-block
+//! digital traffic.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::anyhow;
+
+use super::request::{RequestClass, SolverFamily};
+use super::service::{Engine, Service, ServiceConfig};
+use crate::vae::PixelDecoder;
+
+/// The engine implementations a deployment table can name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Rust analog-hardware simulator ([`super::service::AnalogEngine`]).
+    Analog,
+    /// Pure-rust digital baseline ([`super::service::RustDigitalEngine`]).
+    Rust,
+    /// AOT PJRT artifacts ([`super::service::HloEngine`]).
+    Hlo,
+}
+
+impl BackendKind {
+    /// Every kind, in a fixed order ([`Self::index`] indexes it).
+    pub const ALL: [BackendKind; 3] =
+        [BackendKind::Analog, BackendKind::Rust, BackendKind::Hlo];
+
+    /// Dense index into [`Self::ALL`].
+    pub fn index(&self) -> usize {
+        match self {
+            BackendKind::Analog => 0,
+            BackendKind::Rust => 1,
+            BackendKind::Hlo => 2,
+        }
+    }
+
+    /// Stable name used by config values, CLI flags and metrics labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Analog => "analog",
+            BackendKind::Rust => "rust",
+            BackendKind::Hlo => "hlo",
+        }
+    }
+
+    /// Whether this engine implementation can execute the given solver
+    /// family (engines reject the wrong family at `generate` time; the
+    /// plan validates earlier, at assignment time).
+    pub fn serves(&self, family: SolverFamily) -> bool {
+        match self {
+            BackendKind::Analog => family == SolverFamily::Analog,
+            BackendKind::Rust | BackendKind::Hlo => {
+                family == SolverFamily::Digital
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "analog" => Ok(BackendKind::Analog),
+            "rust" => Ok(BackendKind::Rust),
+            "hlo" => Ok(BackendKind::Hlo),
+            other => {
+                Err(format!("unknown backend {other:?} (expected analog|rust|hlo)"))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The config-driven deployment table: which backend serves each request
+/// class, and how many service workers each backend gets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeployPlan {
+    /// Backend per class, indexed by [`RequestClass::index`].
+    route: [BackendKind; 4],
+    /// Workers per backend, indexed by [`BackendKind::index`];
+    /// 0 = use the service-wide default ([`ServiceConfig::workers`]).
+    workers: [usize; 3],
+}
+
+impl Default for DeployPlan {
+    /// Paper-shaped default: analog classes on the analog simulator,
+    /// digital classes on the rust baseline (the stub-safe choice).
+    fn default() -> Self {
+        DeployPlan {
+            route: [
+                BackendKind::Analog,
+                BackendKind::Analog,
+                BackendKind::Rust,
+                BackendKind::Rust,
+            ],
+            workers: [0; 3],
+        }
+    }
+}
+
+impl DeployPlan {
+    pub fn backend_for(&self, class: RequestClass) -> BackendKind {
+        self.route[class.index()]
+    }
+
+    /// Configured worker count for a backend (0 = service default).
+    pub fn workers_for(&self, kind: BackendKind) -> usize {
+        self.workers[kind.index()]
+    }
+
+    /// Apply one `key = value` entry.  Keys:
+    ///
+    /// * `analog` / `digital` — backend for the whole solver family;
+    /// * `analog_uncond` / `analog_cond` / `digital_uncond` /
+    ///   `digital_cond` — backend for one class;
+    /// * `analog_workers` / `rust_workers` / `hlo_workers` — per-backend
+    ///   worker count (0 = service default).
+    ///
+    /// Family compatibility is validated here, at assignment time: an
+    /// analog class can only run on the analog engine, a digital class on
+    /// `rust` or `hlo`.
+    pub fn set(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        let key = key.trim();
+        if let Some(backend) = key.strip_suffix("_workers") {
+            let kind: BackendKind = backend
+                .parse()
+                .map_err(|e| anyhow!("[deploy] {key}: {e}"))?;
+            let n: usize = value.trim().parse().map_err(|_| {
+                anyhow!("[deploy] {key} = {value:?}: expected a worker count")
+            })?;
+            self.workers[kind.index()] = n;
+            return Ok(());
+        }
+        let kind: BackendKind = value
+            .parse()
+            .map_err(|e| anyhow!("[deploy] {key} = {value:?}: {e}"))?;
+        let classes: Vec<RequestClass> = match key {
+            "analog" | "digital" => {
+                let family = if key == "analog" {
+                    SolverFamily::Analog
+                } else {
+                    SolverFamily::Digital
+                };
+                RequestClass::ALL
+                    .into_iter()
+                    .filter(|c| c.family == family)
+                    .collect()
+            }
+            _ => match RequestClass::ALL.into_iter().find(|c| c.name() == key) {
+                Some(c) => vec![c],
+                None => {
+                    return Err(anyhow!(
+                        "[deploy] unknown key {key:?} (expected analog, digital, \
+                         a class name like digital_cond, or <backend>_workers)"
+                    ))
+                }
+            },
+        };
+        for class in classes {
+            if !kind.serves(class.family) {
+                return Err(anyhow!(
+                    "[deploy] {key} = {value:?}: backend {kind} cannot serve \
+                     {class} (wrong solver family)"
+                ));
+            }
+            self.route[class.index()] = kind;
+        }
+        Ok(())
+    }
+
+    /// Apply a comma-separated `key=value` override list (the `--deploy`
+    /// CLI flag), e.g. `digital=hlo,digital_cond=rust,rust_workers=4`.
+    pub fn apply_overrides(&mut self, spec: &str) -> anyhow::Result<()> {
+        for pair in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--deploy {pair:?}: expected key=value"))?;
+            self.set(k, v)?;
+        }
+        Ok(())
+    }
+
+    /// The distinct backends this plan routes to, in [`BackendKind::ALL`]
+    /// order (so `rust` is always constructed before `hlo` can need it as
+    /// a fallback).
+    pub fn backends_needed(&self) -> Vec<BackendKind> {
+        BackendKind::ALL
+            .into_iter()
+            .filter(|k| self.route.contains(k))
+            .collect()
+    }
+
+    /// One-line class→backend summary for logs.
+    pub fn summary(&self) -> String {
+        RequestClass::ALL
+            .iter()
+            .map(|c| format!("{c}->{}", self.backend_for(*c)))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// A class rerouted at startup because its planned backend failed to
+/// construct (the Hlo→rust fallback chain).
+#[derive(Debug, Clone)]
+pub struct Degradation {
+    pub class: RequestClass,
+    pub from: BackendKind,
+    pub to: BackendKind,
+    pub reason: String,
+}
+
+impl std::fmt::Display for Degradation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}->{}", self.class, self.from, self.to)
+    }
+}
+
+/// A named backend: an engine plus its worker allotment.
+pub struct Backend {
+    pub name: String,
+    pub engine: Arc<dyn Engine>,
+    /// Worker threads dedicated to this backend's lane
+    /// (0 = [`ServiceConfig::workers`]).
+    pub workers: usize,
+}
+
+/// The resolved runtime routing table: named backends plus the class→
+/// backend map the [`Service`] facade consults on every submit.
+#[derive(Default)]
+pub struct EngineRegistry {
+    backends: Vec<Backend>,
+    route: HashMap<RequestClass, usize>,
+}
+
+impl EngineRegistry {
+    pub fn new() -> Self {
+        EngineRegistry::default()
+    }
+
+    /// One backend named `default` serving every class — the thin
+    /// single-engine deployment [`Service::start`] wraps for back-compat.
+    pub fn single(engine: Arc<dyn Engine>) -> Self {
+        let mut reg = EngineRegistry::new();
+        reg.add_backend("default", engine, 0).unwrap();
+        for class in RequestClass::ALL {
+            reg.route_class(class, "default").unwrap();
+        }
+        reg
+    }
+
+    /// Register a backend; names must be unique.  Returns its index.
+    pub fn add_backend(&mut self, name: impl Into<String>,
+                       engine: Arc<dyn Engine>, workers: usize)
+                       -> anyhow::Result<usize> {
+        let name = name.into();
+        if self.backends.iter().any(|b| b.name == name) {
+            return Err(anyhow!("backend {name:?} registered twice"));
+        }
+        self.backends.push(Backend { name, engine, workers });
+        Ok(self.backends.len() - 1)
+    }
+
+    /// Route a request class to a registered backend by name.
+    pub fn route_class(&mut self, class: RequestClass, name: &str)
+                       -> anyhow::Result<()> {
+        let idx = self
+            .backends
+            .iter()
+            .position(|b| b.name == name)
+            .ok_or_else(|| anyhow!("no backend named {name:?} registered"))?;
+        self.route.insert(class, idx);
+        Ok(())
+    }
+
+    /// Route both classes (conditional and unconditional) of a solver
+    /// family to a registered backend by name.
+    pub fn route_family(&mut self, family: SolverFamily, name: &str)
+                        -> anyhow::Result<()> {
+        for class in
+            RequestClass::ALL.into_iter().filter(|c| c.family == family)
+        {
+            self.route_class(class, name)?;
+        }
+        Ok(())
+    }
+
+    /// Backend index serving `class`, if routed.
+    pub fn backend_index(&self, class: RequestClass) -> Option<usize> {
+        self.route.get(&class).copied()
+    }
+
+    pub fn backend(&self, idx: usize) -> &Backend {
+        &self.backends[idx]
+    }
+
+    pub fn backends(&self) -> &[Backend] {
+        &self.backends
+    }
+
+    pub fn n_backends(&self) -> usize {
+        self.backends.len()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.backends.iter().map(|b| b.name.clone()).collect()
+    }
+
+    /// One-line class→backend summary of the *resolved* routes.
+    pub fn route_summary(&self) -> String {
+        let mut classes: Vec<RequestClass> = self.route.keys().copied().collect();
+        classes.sort_by_key(|c| c.index());
+        classes
+            .into_iter()
+            .map(|c| format!("{c}->{}", self.backends[self.route[&c]].name))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// Engine constructor the deployment layer calls per [`BackendKind`].
+/// Fallible so a missing runtime (the `pjrt_vendored` stub) or missing
+/// artifacts surface as a degradation instead of a panic.
+pub type BackendFactory<'a> =
+    dyn FnMut(BackendKind) -> anyhow::Result<Arc<dyn Engine>> + 'a;
+
+/// Build the runtime registry a plan describes, constructing each needed
+/// backend via `factory`.  The **fallback chain**: a failed `hlo`
+/// construction degrades its classes to the `rust` digital engine
+/// (constructing it on demand if the plan didn't already need it) and
+/// returns the [`Degradation`]s for the metrics; any other construction
+/// failure aborts startup.  The replacement lane absorbs the failed
+/// backend's explicit worker allotment when it exceeds rust's own, so
+/// provisioned capacity isn't silently dropped with the degradation.
+pub fn build_registry(plan: &DeployPlan, factory: &mut BackendFactory<'_>)
+                      -> anyhow::Result<(EngineRegistry, Vec<Degradation>)> {
+    let mut reg = EngineRegistry::new();
+    let mut built: HashMap<BackendKind, usize> = HashMap::new();
+    let mut degradations: Vec<Degradation> = Vec::new();
+    // resolved class→kind map, updated when a backend degrades
+    let mut resolved: [BackendKind; 4] =
+        std::array::from_fn(|i| plan.backend_for(RequestClass::ALL[i]));
+
+    // `backends_needed` yields `rust` before `hlo`, so when the fallback
+    // fires, the rust engine either already exists or is built right here
+    for kind in plan.backends_needed() {
+        match factory(kind) {
+            Ok(engine) => {
+                let idx =
+                    reg.add_backend(kind.name(), engine, plan.workers_for(kind))?;
+                built.insert(kind, idx);
+            }
+            Err(e) if kind == BackendKind::Hlo => {
+                let reason = format!("{e:#}");
+                let hlo_workers = plan.workers_for(BackendKind::Hlo);
+                match built.get(&BackendKind::Rust).copied() {
+                    Some(idx) => {
+                        // rust already serves its own classes and now
+                        // absorbs the hlo traffic too: keep the larger
+                        // *explicit* allotment (0 = service default is
+                        // left alone — this layer has no basis to resize
+                        // a default)
+                        let w = &mut reg.backends[idx].workers;
+                        if *w > 0 && hlo_workers > *w {
+                            *w = hlo_workers;
+                        }
+                    }
+                    None => {
+                        let engine = factory(BackendKind::Rust).map_err(|re| {
+                            anyhow!(
+                                "hlo backend failed ({reason}) and the rust \
+                                 fallback failed too: {re:#}"
+                            )
+                        })?;
+                        // this lane exists only to absorb the hlo classes:
+                        // it inherits the larger allotment so provisioned
+                        // capacity isn't silently dropped
+                        let workers =
+                            plan.workers_for(BackendKind::Rust).max(hlo_workers);
+                        let idx = reg.add_backend(
+                            BackendKind::Rust.name(), engine, workers)?;
+                        built.insert(BackendKind::Rust, idx);
+                    }
+                }
+                for (i, class) in RequestClass::ALL.into_iter().enumerate() {
+                    if resolved[i] == BackendKind::Hlo {
+                        resolved[i] = BackendKind::Rust;
+                        degradations.push(Degradation {
+                            class,
+                            from: BackendKind::Hlo,
+                            to: BackendKind::Rust,
+                            reason: reason.clone(),
+                        });
+                    }
+                }
+            }
+            Err(e) => {
+                return Err(e.context(format!(
+                    "constructing the {} backend (no fallback for this kind)",
+                    kind.name()
+                )))
+            }
+        }
+    }
+
+    for (i, class) in RequestClass::ALL.into_iter().enumerate() {
+        reg.route_class(class, resolved[i].name())?;
+    }
+    Ok((reg, degradations))
+}
+
+/// One-call deployment: build the registry from `plan` (with the Hlo→rust
+/// fallback chain), start the routed [`Service`], and record any
+/// degradations in its [`super::Metrics`].
+pub fn start_deployed(plan: &DeployPlan, factory: &mut BackendFactory<'_>,
+                      decoder: Option<Arc<PixelDecoder>>, cfg: ServiceConfig)
+                      -> anyhow::Result<Service> {
+    let (registry, degradations) = build_registry(plan, factory)?;
+    let service = Service::start_routed(registry, decoder, cfg);
+    for d in &degradations {
+        service.metrics.record_degradation(d.to_string());
+    }
+    Ok(service)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::TagEngine;
+
+    fn class(name: &str) -> RequestClass {
+        RequestClass::ALL.into_iter().find(|c| c.name() == name).unwrap()
+    }
+
+    #[test]
+    fn default_plan_routes_families() {
+        let plan = DeployPlan::default();
+        assert_eq!(plan.backend_for(class("analog_uncond")), BackendKind::Analog);
+        assert_eq!(plan.backend_for(class("analog_cond")), BackendKind::Analog);
+        assert_eq!(plan.backend_for(class("digital_uncond")), BackendKind::Rust);
+        assert_eq!(plan.backend_for(class("digital_cond")), BackendKind::Rust);
+        assert_eq!(plan.backends_needed(),
+                   vec![BackendKind::Analog, BackendKind::Rust]);
+    }
+
+    #[test]
+    fn plan_keys_parse_and_validate() {
+        let mut plan = DeployPlan::default();
+        plan.set("digital", "hlo").unwrap();
+        assert_eq!(plan.backend_for(class("digital_cond")), BackendKind::Hlo);
+        plan.set("digital_cond", "rust").unwrap();
+        assert_eq!(plan.backend_for(class("digital_cond")), BackendKind::Rust);
+        assert_eq!(plan.backend_for(class("digital_uncond")), BackendKind::Hlo);
+        plan.set("rust_workers", "4").unwrap();
+        assert_eq!(plan.workers_for(BackendKind::Rust), 4);
+        // family mismatches rejected at assignment time
+        assert!(plan.set("analog", "rust").is_err());
+        assert!(plan.set("digital", "analog").is_err());
+        assert!(plan.set("digital_uncond", "analog").is_err());
+        // junk rejected
+        assert!(plan.set("teleport", "analog").is_err());
+        assert!(plan.set("digital", "gpu").is_err());
+        assert!(plan.set("rust_workers", "many").is_err());
+    }
+
+    #[test]
+    fn cli_overrides_apply_in_order() {
+        let mut plan = DeployPlan::default();
+        plan.apply_overrides("digital=hlo,digital_cond=rust,analog_workers=2")
+            .unwrap();
+        assert_eq!(plan.backend_for(class("digital_uncond")), BackendKind::Hlo);
+        assert_eq!(plan.backend_for(class("digital_cond")), BackendKind::Rust);
+        assert_eq!(plan.workers_for(BackendKind::Analog), 2);
+        assert!(plan.apply_overrides("digital").is_err());
+        assert_eq!(plan.summary(),
+                   "analog_uncond->analog,analog_cond->analog,\
+                    digital_uncond->hlo,digital_cond->rust");
+    }
+
+    #[test]
+    fn registry_routes_and_rejects_duplicates() {
+        let mut reg = EngineRegistry::new();
+        reg.add_backend("a", Arc::new(TagEngine(1.0)), 1).unwrap();
+        reg.add_backend("b", Arc::new(TagEngine(2.0)), 2).unwrap();
+        assert!(reg.add_backend("a", Arc::new(TagEngine(3.0)), 1).is_err());
+        reg.route_class(class("analog_uncond"), "a").unwrap();
+        reg.route_class(class("digital_uncond"), "b").unwrap();
+        assert!(reg.route_class(class("digital_cond"), "zzz").is_err());
+        assert_eq!(reg.backend_index(class("analog_uncond")), Some(0));
+        assert_eq!(reg.backend_index(class("digital_uncond")), Some(1));
+        assert_eq!(reg.backend_index(class("digital_cond")), None);
+        assert_eq!(reg.backend(1).workers, 2);
+        assert_eq!(reg.route_summary(),
+                   "analog_uncond->a,digital_uncond->b");
+    }
+
+    #[test]
+    fn single_registry_serves_every_class() {
+        let reg = EngineRegistry::single(Arc::new(TagEngine(7.0)));
+        assert_eq!(reg.n_backends(), 1);
+        for class in RequestClass::ALL {
+            assert_eq!(reg.backend_index(class), Some(0));
+        }
+    }
+
+    #[test]
+    fn build_registry_happy_path() {
+        let plan = DeployPlan::default();
+        let mut calls = Vec::new();
+        let (reg, degs) = build_registry(&plan, &mut |kind| {
+            calls.push(kind);
+            Ok(Arc::new(TagEngine(kind.index() as f32)) as Arc<dyn Engine>)
+        })
+        .unwrap();
+        assert_eq!(calls, vec![BackendKind::Analog, BackendKind::Rust]);
+        assert!(degs.is_empty());
+        assert_eq!(reg.n_backends(), 2);
+        assert_eq!(reg.backend_index(class("digital_cond")), Some(1));
+    }
+
+    #[test]
+    fn hlo_failure_degrades_to_rust() {
+        let mut plan = DeployPlan::default();
+        plan.apply_overrides("digital=hlo,hlo_workers=8").unwrap();
+        // plan needs only analog + hlo: the fallback must construct rust
+        // on demand
+        let (reg, degs) = build_registry(&plan, &mut |kind| match kind {
+            BackendKind::Hlo => Err(anyhow!("stub runtime")),
+            k => Ok(Arc::new(TagEngine(k.index() as f32)) as Arc<dyn Engine>),
+        })
+        .unwrap();
+        assert_eq!(degs.len(), 2, "both digital classes degrade");
+        for d in &degs {
+            assert_eq!(d.from, BackendKind::Hlo);
+            assert_eq!(d.to, BackendKind::Rust);
+            assert!(d.reason.contains("stub runtime"));
+        }
+        let rust_idx = reg
+            .backends()
+            .iter()
+            .position(|b| b.name == "rust")
+            .expect("rust fallback backend registered");
+        assert_eq!(reg.backend_index(class("digital_uncond")), Some(rust_idx));
+        assert_eq!(reg.backend_index(class("digital_cond")), Some(rust_idx));
+        assert_eq!(reg.backend(rust_idx).workers, 8,
+                   "fallback lane inherits the hlo worker allotment");
+    }
+
+    #[test]
+    fn hlo_degradation_bumps_existing_rust_allotment() {
+        let mut plan = DeployPlan::default();
+        plan.apply_overrides(
+            "digital_uncond=rust,digital_cond=hlo,rust_workers=2,hlo_workers=6",
+        )
+        .unwrap();
+        let (reg, degs) = build_registry(&plan, &mut |kind| match kind {
+            BackendKind::Hlo => Err(anyhow!("stub runtime")),
+            k => Ok(Arc::new(TagEngine(k.index() as f32)) as Arc<dyn Engine>),
+        })
+        .unwrap();
+        assert_eq!(degs.len(), 1);
+        let rust = reg
+            .backends()
+            .iter()
+            .find(|b| b.name == "rust")
+            .unwrap();
+        assert_eq!(rust.workers, 6,
+                   "explicit rust allotment grows to the absorbed hlo one");
+    }
+
+    #[test]
+    fn non_hlo_failure_aborts_startup() {
+        let plan = DeployPlan::default();
+        let err = build_registry(&plan, &mut |kind| match kind {
+            BackendKind::Analog => Err(anyhow!("no weights")),
+            k => Ok(Arc::new(TagEngine(k.index() as f32)) as Arc<dyn Engine>),
+        })
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("analog backend"));
+    }
+
+    #[test]
+    fn hlo_failure_with_failing_rust_fallback_aborts() {
+        let mut plan = DeployPlan::default();
+        plan.set("digital", "hlo").unwrap();
+        let err = build_registry(&plan, &mut |kind| match kind {
+            BackendKind::Analog => {
+                Ok(Arc::new(TagEngine(0.0)) as Arc<dyn Engine>)
+            }
+            _ => Err(anyhow!("nothing works")),
+        })
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fallback failed too"), "{msg}");
+    }
+}

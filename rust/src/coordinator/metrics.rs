@@ -1,8 +1,12 @@
 //! Service metrics: request/sample counters, latency summaries, the
-//! engine's macro-bank topology (grid shape + per-bank program/read stats,
-//! refreshed after every batch so read counters stay live), and the
-//! intra-op pool gauges (threads, scopes/tasks run, queue high-water mark,
-//! tasks-per-scope histogram) from [`crate::exec`].
+//! engines' macro-bank topology (grid shape + per-bank program/read stats,
+//! refreshed after every batch so read counters stay live), the intra-op
+//! pool gauges (threads, scopes/tasks run, queue high-water mark,
+//! tasks-per-scope histogram) from [`crate::exec`], and — since the
+//! deployment router — **per-backend** gauges: each named backend's queue
+//! depth, request/sample/batch counters, modeled hardware energy, and any
+//! startup degradation (the Hlo→rust fallback chain) surface as a
+//! `backend=` column in the report.
 
 use std::sync::Mutex;
 use std::time::Duration;
@@ -10,6 +14,18 @@ use std::time::Duration;
 use crate::crossbar::BankReport;
 use crate::exec::PoolStats;
 use crate::util::stats::Summary;
+
+/// Live per-backend gauge (internal accumulation state).
+#[derive(Debug, Clone, Default)]
+struct BackendGauge {
+    name: String,
+    requests: u64,
+    samples: u64,
+    batches: u64,
+    queue_depth: usize,
+    hw_energy_j: f64,
+    wall_latency: Summary,
+}
 
 #[derive(Default)]
 struct Inner {
@@ -19,8 +35,13 @@ struct Inner {
     rejected: u64,
     wall_latency: Summary,
     batch_fill: Summary,
-    banking: Vec<BankReport>,
+    /// Bank reports grouped by backend index, so a worker can refresh its
+    /// own engine's group without rebuilding every backend's topology
+    /// (single-engine services use one group via [`Metrics::set_banking`]).
+    banking: Vec<Vec<BankReport>>,
     pool: Option<PoolStats>,
+    backends: Vec<BackendGauge>,
+    degraded: Vec<String>,
 }
 
 /// Thread-safe metrics sink.
@@ -48,16 +69,65 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
-    /// Publish the engine's bank topology + per-bank stats (the service
-    /// refreshes this after every batch so the read counters stay live).
+    /// Publish a single engine's bank topology + per-bank stats as the
+    /// whole banking picture (replaces every group).
     pub fn set_banking(&self, banking: Vec<BankReport>) {
-        self.inner.lock().unwrap().banking = banking;
+        self.inner.lock().unwrap().banking = vec![banking];
+    }
+
+    /// Publish ONE backend's bank topology/read stats, leaving the other
+    /// backends' groups alone — each worker refreshes only its own
+    /// engine after a batch instead of rebuilding every topology.
+    pub fn set_backend_banking(&self, idx: usize, banking: Vec<BankReport>) {
+        let mut m = self.inner.lock().unwrap();
+        if m.banking.len() <= idx {
+            m.banking.resize_with(idx + 1, Vec::new);
+        }
+        m.banking[idx] = banking;
     }
 
     /// Publish the intra-op pool gauges (refreshed after every batch, like
     /// the banking stats, so task counters stay live under traffic).
     pub fn set_pool(&self, pool: PoolStats) {
         self.inner.lock().unwrap().pool = Some(pool);
+    }
+
+    /// Declare the deployment's named backends (index order is the
+    /// routing order the service uses).  Resets any prior gauges.
+    pub fn set_backends(&self, names: &[String]) {
+        self.inner.lock().unwrap().backends = names
+            .iter()
+            .map(|n| BackendGauge { name: n.clone(), ..BackendGauge::default() })
+            .collect();
+    }
+
+    /// Account one completed batch to a backend: request/sample counters,
+    /// wall latency, and the batch's total modeled hardware energy.
+    pub fn record_backend_batch(&self, idx: usize, n_requests: usize,
+                                n_samples: usize, hw_energy_j: f64,
+                                latency: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        if let Some(b) = m.backends.get_mut(idx) {
+            b.requests += n_requests as u64;
+            b.samples += n_samples as u64;
+            b.batches += 1;
+            b.hw_energy_j += hw_energy_j;
+            b.wall_latency.record(latency.as_secs_f64());
+        }
+    }
+
+    /// Refresh a backend lane's queue-depth gauge (queued samples).
+    pub fn set_backend_queue(&self, idx: usize, depth: usize) {
+        let mut m = self.inner.lock().unwrap();
+        if let Some(b) = m.backends.get_mut(idx) {
+            b.queue_depth = depth;
+        }
+    }
+
+    /// Record a startup degradation (a class rerouted off its planned
+    /// backend, e.g. `digital_cond:hlo->rust`).
+    pub fn record_degradation(&self, entry: String) {
+        self.inner.lock().unwrap().degraded.push(entry);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -70,8 +140,22 @@ impl Metrics {
             mean_latency_s: m.wall_latency.mean(),
             p99_latency_s: m.wall_latency.p99(),
             mean_batch_fill: m.batch_fill.mean(),
-            banking: m.banking.clone(),
+            banking: m.banking.iter().flatten().cloned().collect(),
             pool: m.pool.clone(),
+            backends: m
+                .backends
+                .iter()
+                .map(|b| BackendSnapshot {
+                    name: b.name.clone(),
+                    requests: b.requests,
+                    samples: b.samples,
+                    batches: b.batches,
+                    queue_depth: b.queue_depth,
+                    hw_energy_j: b.hw_energy_j,
+                    mean_latency_s: b.wall_latency.mean(),
+                })
+                .collect(),
+            degraded: m.degraded.clone(),
         }
     }
 }
@@ -91,6 +175,41 @@ pub struct MetricsSnapshot {
     pub banking: Vec<BankReport>,
     /// Intra-op pool gauges (None until a service publishes them).
     pub pool: Option<PoolStats>,
+    /// Per-backend gauges, in the deployment's backend-index order (empty
+    /// until a routed service declares its backends).
+    pub backends: Vec<BackendSnapshot>,
+    /// Startup degradations (classes rerouted off a failed backend).
+    pub degraded: Vec<String>,
+}
+
+/// Point-in-time copy of one backend's gauges.
+#[derive(Debug, Clone)]
+pub struct BackendSnapshot {
+    pub name: String,
+    pub requests: u64,
+    pub samples: u64,
+    pub batches: u64,
+    /// Samples queued in this backend's lane at the last refresh.
+    pub queue_depth: usize,
+    /// Accumulated modeled hardware energy (J) served by this backend.
+    pub hw_energy_j: f64,
+    pub mean_latency_s: f64,
+}
+
+impl BackendSnapshot {
+    /// Compact `name[...]` column for the one-line report.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}[q{} req{} smp{} bat{} lat{:.1}ms e{:.2e}J]",
+            self.name,
+            self.queue_depth,
+            self.requests,
+            self.samples,
+            self.batches,
+            1e3 * self.mean_latency_s,
+            self.hw_energy_j,
+        )
+    }
 }
 
 impl MetricsSnapshot {
@@ -112,6 +231,16 @@ impl MetricsSnapshot {
             let layers: Vec<String> =
                 self.banking.iter().map(|r| r.summary()).collect();
             s.push_str(&layers.join(","));
+        }
+        if !self.backends.is_empty() {
+            s.push_str(" backend=");
+            let cols: Vec<String> =
+                self.backends.iter().map(|b| b.summary()).collect();
+            s.push_str(&cols.join(","));
+        }
+        if !self.degraded.is_empty() {
+            s.push_str(" degraded=");
+            s.push_str(&self.degraded.join(";"));
         }
         if let Some(p) = &self.pool {
             s.push_str(&format!(
@@ -158,6 +287,46 @@ mod tests {
         assert!(r.contains("requests=1"));
         assert!(!r.contains("banks="), "no banking published yet");
         assert!(!r.contains("pool="), "no pool gauges published yet");
+        assert!(!r.contains("backend="), "no backends declared yet");
+        assert!(!r.contains("degraded="), "no degradations recorded yet");
+    }
+
+    #[test]
+    fn backend_gauges_accumulate_and_report() {
+        let m = Metrics::new();
+        m.set_backends(&["analog".to_string(), "rust".to_string()]);
+        m.record_backend_batch(0, 2, 32, 3.0e-5, Duration::from_millis(4));
+        m.record_backend_batch(0, 1, 16, 1.5e-5, Duration::from_millis(2));
+        m.record_backend_batch(1, 3, 24, 2.0e-3, Duration::from_millis(8));
+        m.set_backend_queue(1, 40);
+        // out-of-range indices are ignored, not panics (late worker after
+        // a set_backends reset)
+        m.record_backend_batch(9, 1, 1, 1.0, Duration::from_millis(1));
+        m.set_backend_queue(9, 1);
+        let s = m.snapshot();
+        assert_eq!(s.backends.len(), 2);
+        let a = &s.backends[0];
+        assert_eq!((a.requests, a.samples, a.batches), (3, 48, 2));
+        assert!((a.hw_energy_j - 4.5e-5).abs() < 1e-12);
+        assert!((a.mean_latency_s - 0.003).abs() < 1e-9);
+        assert_eq!(s.backends[1].queue_depth, 40);
+        let r = s.report();
+        assert!(r.contains("backend=analog[q0 req3 smp48 bat2"), "{r}");
+        assert!(r.contains("rust[q40 req3 smp24 bat1"), "{r}");
+    }
+
+    #[test]
+    fn degradations_surface_in_report() {
+        let m = Metrics::new();
+        m.record_degradation("digital_uncond:hlo->rust".into());
+        m.record_degradation("digital_cond:hlo->rust".into());
+        let s = m.snapshot();
+        assert_eq!(s.degraded.len(), 2);
+        let r = s.report();
+        assert!(
+            r.contains("degraded=digital_uncond:hlo->rust;digital_cond:hlo->rust"),
+            "{r}"
+        );
     }
 
     #[test]

@@ -1,26 +1,72 @@
-//! L3 coordinator: the generation service.
+//! L3 coordinator: the routed generation service.
 //!
 //! The paper's system serves *sampling requests*: a client asks for N
 //! samples of a task (unconditional circle, or a conditioned letter), and
 //! the hardware answers with latent samples (optionally decoded to
-//! pixels).  This module is the serving layer around the solvers:
+//! pixels).  The paper's own evaluation runs the two solver families on
+//! *different substrates* — the analog integrator and the digital
+//! baseline side by side — so the serving layer is a **deployment
+//! router**, not a single-engine queue.
 //!
-//! * [`request`] — request/response types and solver selection.
-//! * [`batcher`] — dynamic batching queue: requests coalesce by
-//!   (condition, solver) key up to the artifact batch size, with a linger
-//!   timeout — the same size-or-deadline policy a vLLM-style router uses.
-//! * [`service`] — worker pool executing batches against one of the three
-//!   engines (analog simulator / rust digital / PJRT artifacts), plus the
-//!   compute-vs-programming [`service::ModeGate`] mirroring the PCB's
-//!   SPDT mode switches.
-//! * [`metrics`] — latency/throughput counters.
+//! Flow of one request (class → backend → lane):
+//!
+//! 1. [`request`] — the request names a solver; its
+//!    [`request::RequestClass`] (solver family × conditional) is the
+//!    routing unit.
+//! 2. [`deploy`] — the [`deploy::EngineRegistry`] maps that class to a
+//!    named backend (`analog` simulator / `rust` digital / `hlo` PJRT
+//!    artifacts), per the config-driven [`deploy::DeployPlan`]; a failed
+//!    `hlo` construction degrades its classes to `rust` at startup
+//!    (recorded in metrics) instead of failing the deployment.
+//! 3. [`batcher`] — each backend owns one lane of the
+//!    [`batcher::LaneSet`]: a dynamic batching queue coalescing by
+//!    (condition, solver, decode) key up to the artifact batch size with a
+//!    linger timeout — the same size-or-deadline policy a vLLM-style
+//!    router uses, but per class, so a slow analog batch never
+//!    head-of-line-blocks digital traffic.
+//! 4. [`service`] — the [`service::Service`] facade: per-backend worker
+//!    allotments execute each lane's batches against that backend's
+//!    engine, plus the compute-vs-programming [`service::ModeGate`]
+//!    mirroring the PCB's SPDT mode switches.  Shutdown drains **every**
+//!    lane under the no-dropped-request invariant.
+//! 5. [`metrics`] — totals plus per-backend queue-depth / throughput /
+//!    hardware-energy gauges (`backend=` column) and any startup
+//!    degradations (`degraded=` column).
 
 pub mod batcher;
+pub mod deploy;
 pub mod metrics;
 pub mod request;
 pub mod service;
 
-pub use batcher::{Batch, Batcher, BatcherConfig};
+/// Shared engine stubs for the coordinator unit tests.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::request::SolverChoice;
+    use super::service::Engine;
+    use crate::util::rng::Rng;
+
+    /// Engine stamping every sample with a constant tag, so routing tests
+    /// can prove which backend served a request.
+    pub struct TagEngine(pub f32);
+
+    impl Engine for TagEngine {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn n_classes(&self) -> usize {
+            3
+        }
+        fn generate(&self, _s: SolverChoice, _onehot: &[f32], _g: f32,
+                    n: usize, _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+            Ok(vec![self.0; n * 2])
+        }
+    }
+}
+
+pub use batcher::{Batch, Batcher, BatcherConfig, LaneSet};
+pub use deploy::{BackendKind, DeployPlan, EngineRegistry};
 pub use metrics::Metrics;
-pub use request::{GenRequest, GenResponse, SolverChoice, TaskKind};
+pub use request::{GenRequest, GenResponse, RequestClass, SolverChoice,
+                  SolverFamily, TaskKind};
 pub use service::{ModeGate, Service, ServiceConfig};

@@ -25,6 +25,62 @@ impl TaskKind {
     }
 }
 
+/// Solver substrate family — the first routing axis of the deployment
+/// layer (the paper runs the two families on different hardware).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SolverFamily {
+    /// Continuous-time analog integrator (the resistive-memory substrate).
+    Analog,
+    /// Discrete-step digital sampler (rust baseline or PJRT artifacts).
+    Digital,
+}
+
+/// Request class: the unit the deployment router maps onto a backend —
+/// solver family × conditional/unconditional.  Every request resolves to
+/// exactly one class, and requests sharing a [`GenRequest::batch_key`]
+/// always share a class (the key folds in both the condition and the
+/// solver), so routing by class never splits a coalescible batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RequestClass {
+    pub family: SolverFamily,
+    pub conditional: bool,
+}
+
+impl RequestClass {
+    /// Every class, in a fixed order ([`Self::index`] indexes it).
+    pub const ALL: [RequestClass; 4] = [
+        RequestClass { family: SolverFamily::Analog, conditional: false },
+        RequestClass { family: SolverFamily::Analog, conditional: true },
+        RequestClass { family: SolverFamily::Digital, conditional: false },
+        RequestClass { family: SolverFamily::Digital, conditional: true },
+    ];
+
+    /// Dense index into [`Self::ALL`] (deployment tables are arrays).
+    pub fn index(&self) -> usize {
+        let fam = match self.family {
+            SolverFamily::Analog => 0,
+            SolverFamily::Digital => 2,
+        };
+        fam + self.conditional as usize
+    }
+
+    /// Stable name used by `[deploy]` config keys and metrics labels.
+    pub fn name(&self) -> &'static str {
+        match (self.family, self.conditional) {
+            (SolverFamily::Analog, false) => "analog_uncond",
+            (SolverFamily::Analog, true) => "analog_cond",
+            (SolverFamily::Digital, false) => "digital_uncond",
+            (SolverFamily::Digital, true) => "digital_cond",
+        }
+    }
+}
+
+impl std::fmt::Display for RequestClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Which solver executes the request.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SolverChoice {
@@ -41,6 +97,15 @@ pub enum SolverChoice {
 impl SolverChoice {
     pub fn is_analog(&self) -> bool {
         matches!(self, SolverChoice::AnalogOde | SolverChoice::AnalogSde)
+    }
+
+    /// Substrate family this choice executes on (the routing axis).
+    pub fn family(&self) -> SolverFamily {
+        if self.is_analog() {
+            SolverFamily::Analog
+        } else {
+            SolverFamily::Digital
+        }
     }
 
     /// Batching key: requests sharing it may ride the same batch.
@@ -68,6 +133,15 @@ pub struct GenRequest {
 }
 
 impl GenRequest {
+    /// The class the deployment router maps onto a backend.  Coarser than
+    /// [`Self::batch_key`]: many keys per class, never the reverse.
+    pub fn class(&self) -> RequestClass {
+        RequestClass {
+            family: self.solver.family(),
+            conditional: self.task.is_conditional(),
+        }
+    }
+
     /// Batching key: same condition + solver (+decode flag) may coalesce.
     pub fn batch_key(&self) -> u64 {
         let cond = match self.task {
@@ -127,6 +201,62 @@ mod tests {
         assert_ne!(base.batch_key(), other_steps.batch_key());
         assert_ne!(base.batch_key(), other_decode.batch_key());
         assert_eq!(base.batch_key(), same.batch_key());
+    }
+
+    #[test]
+    fn request_class_is_family_times_condition() {
+        let mk = |solver, task| GenRequest {
+            id: 0,
+            task,
+            n_samples: 1,
+            solver,
+            guidance: 0.0,
+            decode: false,
+        };
+        let cases = [
+            (SolverChoice::AnalogOde, TaskKind::Circle,
+             RequestClass { family: SolverFamily::Analog, conditional: false }),
+            (SolverChoice::AnalogSde, TaskKind::Letter(2),
+             RequestClass { family: SolverFamily::Analog, conditional: true }),
+            (SolverChoice::DigitalOde { steps: 10 }, TaskKind::Circle,
+             RequestClass { family: SolverFamily::Digital, conditional: false }),
+            (SolverChoice::DigitalSde { steps: 10 }, TaskKind::Letter(0),
+             RequestClass { family: SolverFamily::Digital, conditional: true }),
+        ];
+        for (solver, task, want) in cases {
+            assert_eq!(mk(solver, task).class(), want);
+        }
+    }
+
+    #[test]
+    fn class_indices_cover_all() {
+        let idx: std::collections::HashSet<usize> =
+            RequestClass::ALL.iter().map(|c| c.index()).collect();
+        assert_eq!(idx, (0..4).collect());
+        for c in RequestClass::ALL {
+            assert_eq!(RequestClass::ALL[c.index()], c);
+        }
+        let names: std::collections::HashSet<&str> =
+            RequestClass::ALL.iter().map(|c| c.name()).collect();
+        assert_eq!(names.len(), 4);
+    }
+
+    #[test]
+    fn batch_key_never_crosses_class_condition() {
+        // the router batches per class: a key must never be shared by a
+        // conditional and an unconditional request (the solver-family axis
+        // is separated by routing itself)
+        let cond = GenRequest {
+            id: 0,
+            task: TaskKind::Letter(0),
+            n_samples: 1,
+            solver: SolverChoice::DigitalOde { steps: 100 },
+            guidance: 2.0,
+            decode: false,
+        };
+        let uncond = GenRequest { task: TaskKind::Circle, ..cond.clone() };
+        assert_ne!(cond.batch_key(), uncond.batch_key());
+        assert_ne!(cond.class(), uncond.class());
     }
 
     #[test]

@@ -1,12 +1,24 @@
-//! The generation service: engines, mode gate, worker pool.
+//! The generation service: a routed deployment of engines behind one
+//! submit surface.
 //!
-//! A [`Service`] owns a [`Batcher`] and a pool of worker threads.  Each
-//! emitted batch runs on one worker against the configured [`Engine`];
-//! results are split back to the originating requests in FIFO order and
-//! delivered over per-request channels.  The rust engines execute each
-//! batch through the batched lane (`sample_batched` / `solve_batched`), so
-//! a coalesced 64-sample batch is one sequence of B×dim GEMMs rather than
-//! 64 independent single-vector solves — the coalescing actually pays off.
+//! A [`Service`] is the **router facade** over an
+//! [`EngineRegistry`](super::deploy::EngineRegistry): every registered
+//! backend owns its own [`Batcher`](super::batcher::Batcher) lane (see
+//! [`LaneSet`](super::batcher::LaneSet)) and its own worker allotment, and
+//! `submit` routes each request by its [`RequestClass`] (solver family ×
+//! conditional) to the backend's lane.  Coalescing therefore stays
+//! per-class, and a slow analog batch can never head-of-line-block
+//! digital traffic.  [`Service::start`] remains the thin one-backend
+//! deployment (one engine serving every class) for tests and back-compat;
+//! [`Service::start_routed`] hosts a full multi-backend table.
+//!
+//! Each emitted batch runs on one of its backend's workers against that
+//! backend's [`Engine`]; results are split back to the originating
+//! requests in FIFO order and delivered over per-request channels.  The
+//! rust engines execute each batch through the batched lane
+//! (`sample_batched` / `solve_batched`), so a coalesced 64-sample batch is
+//! one sequence of B×dim GEMMs rather than 64 independent single-vector
+//! solves — the coalescing actually pays off.
 //!
 //! The [`ModeGate`] mirrors the PCB's SPDT switches (Methods): the macro
 //! is either in *computation* mode (any number of concurrent solves) or
@@ -21,7 +33,8 @@ use std::time::Instant;
 
 use anyhow::anyhow;
 
-use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::batcher::{Batch, BatcherConfig, LaneSet};
+use super::deploy::EngineRegistry;
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, SolverChoice, TaskKind};
 use crate::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
@@ -294,95 +307,147 @@ impl Default for ServiceConfig {
 
 type ResponseTx = Sender<anyhow::Result<GenResponse>>;
 
-/// The running service.
+/// The running service: the deployment router facade.
 pub struct Service {
-    batcher: Arc<Batcher>,
+    /// One batcher lane per registry backend (index-aligned).
+    lanes: LaneSet,
+    registry: Arc<EngineRegistry>,
     pending: Arc<Mutex<std::collections::HashMap<u64, ResponseTx>>>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
     pub mode_gate: Arc<ModeGate>,
     /// The process-shared intra-op pool, sized coherently against the
-    /// engine worker count at startup.
+    /// total engine worker count at startup.
     pool: Arc<Pool>,
 }
 
 impl Service {
-    /// Start the worker pool over `engine` (+ optional pixel decoder).
-    ///
-    /// Also claims (or adopts) the process-shared [`exec::Pool`]: with
-    /// `intra_threads = 0` it sizes the pool at `cores − workers + 1`
-    /// (env override wins; each worker participates in its own fork-join
-    /// scopes while the spawned helpers are shared), so when every worker
-    /// forks at once, callers + helpers ≈ cores — engine-level and
-    /// bank-level parallelism never oversubscribe each other.
+    /// Thin one-backend deployment: `engine` serves every request class
+    /// through a single lane (the pre-router behaviour, kept for tests
+    /// and single-substrate deployments).
     pub fn start(engine: Arc<dyn Engine>, decoder: Option<Arc<PixelDecoder>>,
                  cfg: ServiceConfig) -> Self {
-        let batcher = Arc::new(Batcher::new(cfg.batcher.clone()));
+        Self::start_routed(EngineRegistry::single(engine), decoder, cfg)
+    }
+
+    /// Start the routed deployment: every backend in `registry` gets its
+    /// own batcher lane and its own worker allotment (`Backend::workers`,
+    /// 0 = `cfg.workers`), and `submit` routes by request class.
+    ///
+    /// Also claims (or adopts) the process-shared [`exec::Pool`]: with
+    /// `intra_threads = 0` it sizes the pool at `cores − total_workers + 1`
+    /// where `total_workers` sums the per-backend allotments (env override
+    /// wins; each worker participates in its own fork-join scopes while
+    /// the spawned helpers are shared), so when every worker forks at
+    /// once, callers + helpers ≈ cores — engine-level and bank-level
+    /// parallelism never oversubscribe each other.
+    ///
+    /// Per-backend worker RNG seeds depend on the *backend-local* worker
+    /// index only, so a class stream served by a one-worker backend here
+    /// is bitwise identical to the same stream through a one-worker
+    /// single-engine service with the same seed (the router-parity
+    /// contract; `rust/tests/router_parity.rs`).
+    pub fn start_routed(registry: EngineRegistry,
+                        decoder: Option<Arc<PixelDecoder>>,
+                        cfg: ServiceConfig) -> Self {
+        let registry = Arc::new(registry);
+        let lanes = LaneSet::new(registry.n_backends(), &cfg.batcher);
         let pending: Arc<Mutex<std::collections::HashMap<u64, ResponseTx>>> =
             Arc::new(Mutex::new(std::collections::HashMap::new()));
         let metrics = Arc::new(Metrics::new());
-        metrics.set_banking(engine.bank_report());
+        metrics.set_backends(&registry.names());
+        for (b, backend) in registry.backends().iter().enumerate() {
+            metrics.set_backend_banking(b, backend.engine.bank_report());
+        }
+        let backend_workers: Vec<usize> = registry
+            .backends()
+            .iter()
+            .map(|b| if b.workers == 0 { cfg.workers.max(1) } else { b.workers })
+            .collect();
+        let total_workers: usize = backend_workers.iter().sum::<usize>().max(1);
         let pool = exec::shared_sized(if cfg.intra_threads > 0 {
             cfg.intra_threads
         } else {
-            exec::intra_threads_for_workers(cfg.workers.max(1))
+            exec::intra_threads_for_workers(total_workers)
         });
         metrics.set_pool(pool.stats());
         let mode_gate = Arc::new(ModeGate::new());
         let max_batch = cfg.batcher.max_batch_samples;
 
         let mut workers = Vec::new();
-        for w in 0..cfg.workers.max(1) {
-            let batcher = Arc::clone(&batcher);
-            let pending = Arc::clone(&pending);
-            let engine = Arc::clone(&engine);
-            let decoder = decoder.clone();
-            let metrics = Arc::clone(&metrics);
-            let mode_gate = Arc::clone(&mode_gate);
-            let pool = Arc::clone(&pool);
-            let mut rng = Rng::new(cfg.seed ^ (w as u64).wrapping_mul(0x9E37_79B9));
-            workers.push(std::thread::spawn(move || {
-                while let Some(batch) = batcher.next_batch() {
-                    let _compute = mode_gate.compute();
-                    let t0 = Instant::now();
-                    let result = Self::run_batch(&*engine, decoder.as_deref(),
-                                                 &batch, &mut rng);
-                    let wall = t0.elapsed();
-                    metrics.record_batch(
-                        batch.requests.len(),
-                        batch.total_samples(),
-                        batch.total_samples() as f64 / max_batch as f64,
-                        wall,
-                    );
-                    // refresh the per-bank read counters and the pool
-                    // gauges alongside the batch counters (topology is
-                    // static, reads/tasks are live)
-                    metrics.set_banking(engine.bank_report());
-                    metrics.set_pool(pool.stats());
-                    let mut pend = pending.lock().unwrap();
-                    match result {
-                        Ok(responses) => {
-                            for resp in responses {
-                                if let Some(tx) = pend.remove(&resp.id) {
-                                    let _ = tx.send(Ok(resp));
+        for (b, &n_workers) in backend_workers.iter().enumerate() {
+            for w in 0..n_workers {
+                let lane = Arc::clone(lanes.lane(b));
+                let pending = Arc::clone(&pending);
+                let registry = Arc::clone(&registry);
+                let decoder = decoder.clone();
+                let metrics = Arc::clone(&metrics);
+                let mode_gate = Arc::clone(&mode_gate);
+                let pool = Arc::clone(&pool);
+                // backend-local worker index → seed, for router parity
+                let mut rng =
+                    Rng::new(cfg.seed ^ (w as u64).wrapping_mul(0x9E37_79B9));
+                workers.push(std::thread::spawn(move || {
+                    let engine = Arc::clone(&registry.backend(b).engine);
+                    while let Some(batch) = lane.next_batch() {
+                        let _compute = mode_gate.compute();
+                        let t0 = Instant::now();
+                        let result = Self::run_batch(&*engine,
+                                                     decoder.as_deref(),
+                                                     &batch, &mut rng);
+                        let wall = t0.elapsed();
+                        metrics.record_batch(
+                            batch.requests.len(),
+                            batch.total_samples(),
+                            batch.total_samples() as f64 / max_batch as f64,
+                            wall,
+                        );
+                        let batch_energy = result
+                            .as_ref()
+                            .map(|rs| {
+                                rs.iter().map(|r| r.hw_energy_j).sum::<f64>()
+                            })
+                            .unwrap_or(0.0);
+                        metrics.record_backend_batch(
+                            b,
+                            batch.requests.len(),
+                            batch.total_samples(),
+                            batch_energy,
+                            wall,
+                        );
+                        metrics.set_backend_queue(b, lane.queued_samples());
+                        // refresh this backend's per-bank read counters and
+                        // the pool gauges alongside the batch counters
+                        // (topology is static, reads/tasks are live; other
+                        // backends' groups are left untouched)
+                        metrics.set_backend_banking(b, engine.bank_report());
+                        metrics.set_pool(pool.stats());
+                        let mut pend = pending.lock().unwrap();
+                        match result {
+                            Ok(responses) => {
+                                for resp in responses {
+                                    if let Some(tx) = pend.remove(&resp.id) {
+                                        let _ = tx.send(Ok(resp));
+                                    }
                                 }
                             }
-                        }
-                        Err(e) => {
-                            for req in &batch.requests {
-                                if let Some(tx) = pend.remove(&req.id) {
-                                    let _ = tx.send(Err(anyhow!("{e}")));
+                            Err(e) => {
+                                for req in &batch.requests {
+                                    if let Some(tx) = pend.remove(&req.id) {
+                                        let _ = tx.send(Err(anyhow!("{e}")));
+                                    }
                                 }
                             }
                         }
                     }
-                }
-            }));
+                }));
+            }
         }
 
         Service {
-            batcher,
+            lanes,
+            registry,
             pending,
             workers,
             next_id: AtomicU64::new(1),
@@ -395,6 +460,11 @@ impl Service {
     /// The process-shared intra-op pool this service sized at startup.
     pub fn exec_pool(&self) -> &Arc<Pool> {
         &self.pool
+    }
+
+    /// The deployment's routing table (class → named backend).
+    pub fn registry(&self) -> &Arc<EngineRegistry> {
+        &self.registry
     }
 
     fn run_batch(engine: &dyn Engine, decoder: Option<&PixelDecoder>,
@@ -438,17 +508,29 @@ impl Service {
         Ok(responses)
     }
 
-    /// Submit a request; returns a receiver for the response.
+    /// Submit a request; returns a receiver for the response.  The
+    /// request's class ([`GenRequest::class`]) picks the backend lane; a
+    /// class the deployment doesn't route is rejected here, before any
+    /// queueing.
     pub fn submit(&self, mut req: GenRequest)
                   -> anyhow::Result<Receiver<anyhow::Result<GenResponse>>> {
         if req.n_samples == 0 {
             return Err(anyhow!("n_samples must be > 0"));
         }
+        let class = req.class();
+        let Some(lane_idx) = self.registry.backend_index(class) else {
+            self.metrics.record_rejected();
+            return Err(anyhow!(
+                "no backend routed for request class {class} \
+                 (deployment routes: {})",
+                self.registry.route_summary()
+            ));
+        };
         req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let id = req.id;
         let (tx, rx) = channel();
         self.pending.lock().unwrap().insert(id, tx);
-        if !self.batcher.submit(req) {
+        if !self.lanes.submit(lane_idx, req) {
             // the request never entered the queue: its response entry must
             // go too, or shutdown would see a permanently-pending request
             self.pending.lock().unwrap().remove(&id);
@@ -473,18 +555,19 @@ impl Service {
         rx.recv().map_err(|_| anyhow!("worker dropped"))?
     }
 
-    /// Drain and stop.  Closing the batcher wakes every blocked
-    /// `next_batch` caller promptly (queued work still drains first), and
-    /// once the workers have joined, **no request may still hold a pending
-    /// response entry** — that would mean a submitted request was dropped
-    /// without an answer.  Asserted in debug builds; release builds fail
-    /// any leftover loudly instead of hanging its caller forever.
+    /// Drain and stop.  Closing **every** per-backend lane wakes every
+    /// blocked `next_batch` caller promptly (queued work still drains
+    /// first, per lane), and once all workers across all backends have
+    /// joined, **no request may still hold a pending response entry** —
+    /// that would mean a submitted request was dropped without an answer,
+    /// on any lane.  Asserted in debug builds; release builds fail any
+    /// leftover loudly instead of hanging its caller forever.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
-        self.batcher.close();
+        self.lanes.close_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -514,6 +597,7 @@ impl Drop for Service {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::testutil::TagEngine;
     use crate::diffusion::schedule::VpSchedule;
 
     /// Deterministic linear engine for service-level tests: sample k of a
@@ -634,7 +718,7 @@ mod tests {
     #[test]
     fn rejected_submit_leaves_no_pending_entry() {
         let s = svc(1);
-        s.batcher.close();
+        s.lanes.close_all();
         let r = s.submit(GenRequest {
             id: 0,
             task: TaskKind::Circle,
@@ -661,6 +745,119 @@ mod tests {
         assert_eq!(s.exec_pool().threads(), pool.threads);
         assert!(m.report().contains("pool="), "{}", m.report());
         s.shutdown();
+    }
+
+    /// Two-backend routed service: analog classes tagged 1.0, digital 2.0.
+    fn routed_svc(workers: usize) -> Service {
+        use crate::coordinator::request::SolverFamily;
+        let mut reg = EngineRegistry::new();
+        reg.add_backend("analog", Arc::new(TagEngine(1.0)), workers).unwrap();
+        reg.add_backend("digital", Arc::new(TagEngine(2.0)), workers).unwrap();
+        reg.route_family(SolverFamily::Analog, "analog").unwrap();
+        reg.route_family(SolverFamily::Digital, "digital").unwrap();
+        Service::start_routed(reg, None, ServiceConfig {
+            workers: 1,
+            batcher: BatcherConfig {
+                max_batch_samples: 64,
+                linger: std::time::Duration::from_millis(1),
+            },
+            seed: 5,
+            intra_threads: 0,
+        })
+    }
+
+    #[test]
+    fn routed_service_routes_by_class() {
+        let s = routed_svc(1);
+        let a = s
+            .generate(TaskKind::Circle, 3, SolverChoice::AnalogOde, 0.0, false)
+            .unwrap();
+        assert!(a.samples.iter().all(|&v| v == 1.0), "analog backend tag");
+        let d = s
+            .generate(TaskKind::Letter(1), 4,
+                      SolverChoice::DigitalOde { steps: 5 }, 2.0, false)
+            .unwrap();
+        assert!(d.samples.iter().all(|&v| v == 2.0), "digital backend tag");
+        let m = s.metrics.snapshot();
+        assert_eq!(m.backends.len(), 2);
+        assert_eq!(m.backends[0].samples, 3, "analog lane counted its batch");
+        assert_eq!(m.backends[1].samples, 4, "digital lane counted its batch");
+        assert_eq!(m.requests, 2, "totals still aggregate across lanes");
+        let r = m.report();
+        assert!(r.contains("backend=analog[") && r.contains("digital["), "{r}");
+        s.shutdown();
+    }
+
+    #[test]
+    fn unrouted_class_rejected_at_submit() {
+        use crate::coordinator::request::RequestClass;
+        let mut reg = EngineRegistry::new();
+        reg.add_backend("digital", Arc::new(TagEngine(2.0)), 1).unwrap();
+        for class in RequestClass::ALL.into_iter().filter(|c| !c.conditional) {
+            reg.route_class(class, "digital").unwrap();
+        }
+        let s = Service::start_routed(reg, None, ServiceConfig {
+            workers: 1,
+            batcher: BatcherConfig {
+                max_batch_samples: 64,
+                linger: std::time::Duration::from_millis(1),
+            },
+            seed: 5,
+            intra_threads: 0,
+        });
+        // unconditional digital routed fine
+        assert!(s
+            .generate(TaskKind::Circle, 1,
+                      SolverChoice::DigitalOde { steps: 2 }, 0.0, false)
+            .is_ok());
+        // conditional classes are not in the table: rejected pre-queue
+        let err = s
+            .generate(TaskKind::Letter(0), 1,
+                      SolverChoice::DigitalOde { steps: 2 }, 2.0, false)
+            .unwrap_err();
+        assert!(err.to_string().contains("no backend routed"), "{err}");
+        assert!(s.pending.lock().unwrap().is_empty(),
+                "unrouted request must not leave a pending entry");
+        assert_eq!(s.metrics.snapshot().rejected, 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn mixed_class_shutdown_drains_every_lane() {
+        // the no-dropped-request invariant must hold across ALL lanes:
+        // queue mixed-class work, shut down immediately, and every request
+        // must still receive its answer (close() drains, never drops)
+        let s = routed_svc(2);
+        let mut rxs = Vec::new();
+        for i in 0..24usize {
+            let (task, solver) = match i % 4 {
+                0 => (TaskKind::Circle, SolverChoice::AnalogOde),
+                1 => (TaskKind::Letter(i % 3), SolverChoice::AnalogSde),
+                2 => (TaskKind::Circle, SolverChoice::DigitalOde { steps: 4 }),
+                _ => (TaskKind::Letter(i % 3),
+                      SolverChoice::DigitalSde { steps: 4 }),
+            };
+            rxs.push(s
+                .submit(GenRequest {
+                    id: 0,
+                    task,
+                    n_samples: 1 + i % 5,
+                    solver,
+                    guidance: 2.0,
+                    decode: false,
+                })
+                .unwrap());
+        }
+        // shutdown closes every lane and joins; the debug assertion inside
+        // verifies the pending map drained
+        s.shutdown();
+        let mut answered = 0;
+        for rx in rxs {
+            let resp = rx.recv().expect("worker delivered before joining");
+            assert!(resp.is_ok());
+            answered += 1;
+        }
+        assert_eq!(answered, 24, "every queued request got an answer");
     }
 
     #[test]

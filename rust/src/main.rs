@@ -15,6 +15,7 @@ use std::sync::Arc;
 
 use memdiff::coordinator::{Service, ServiceConfig, SolverChoice, TaskKind};
 use memdiff::coordinator::batcher::BatcherConfig;
+use memdiff::coordinator::deploy::{self, BackendKind};
 use memdiff::coordinator::service::{AnalogEngine, Engine, HloEngine, RustDigitalEngine};
 use memdiff::config::Config;
 use memdiff::crossbar::NoiseModel;
@@ -54,6 +55,7 @@ fn usage() -> ! {
          \x20 memdiff generate [--task circle|h|k|u] [--solver analog-ode|analog-sde|euler|euler-sde]\n\
          \x20                  [--n 500] [--steps 130] [--engine analog|rust|hlo] [--decode]\n\
          \x20 memdiff serve    [--requests 64] [--workers 4] [--threads N]\n\
+         \x20                  [--deploy analog=analog,digital=rust|hlo,rust_workers=N,...]\n\
          \x20 memdiff characterize\n\
          \x20 memdiff info\n\
          \x20 (global) [--config memdiff.toml] [--seed N]"
@@ -199,34 +201,58 @@ fn cmd_generate(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()
 fn cmd_serve(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> {
     let n_requests: usize = opt(kv, "requests", 64);
     let workers: usize = opt(kv, "workers", cfg.workers);
-    let engine = build_engine("rust", &TaskKind::Letter(0), cfg)?;
+
+    // deployment table: [deploy] config section, then --deploy overrides
+    let mut plan = cfg.deploy.clone();
+    if let Some(spec) = kv.get("deploy") {
+        plan.apply_overrides(spec)?;
+    }
     let decoder = Arc::new(PixelDecoder::new(DecoderWeights::load(
         Meta::artifacts_dir().join("vae_decoder.json"))?));
-    let service = Arc::new(Service::start(engine, Some(decoder), ServiceConfig {
-        workers,
-        batcher: BatcherConfig {
-            max_batch_samples: cfg.max_batch,
-            linger: std::time::Duration::from_millis(cfg.linger_ms),
+    // one engine per backend the plan names; the conditional weights serve
+    // both classes of a family (zero one-hot = unconditional)
+    let service = Arc::new(deploy::start_deployed(
+        &plan,
+        &mut |kind: BackendKind| build_engine(kind.name(), &TaskKind::Letter(0), cfg),
+        Some(decoder),
+        ServiceConfig {
+            workers,
+            batcher: BatcherConfig {
+                max_batch_samples: cfg.max_batch,
+                linger: std::time::Duration::from_millis(cfg.linger_ms),
+            },
+            seed: cfg.seed,
+            intra_threads: opt(kv, "threads", cfg.threads),
         },
-        seed: cfg.seed,
-        intra_threads: opt(kv, "threads", cfg.threads),
-    }));
+    )?);
 
-    println!("serve: {n_requests} mixed requests over {workers} workers");
+    println!("serve: {n_requests} mixed requests over {workers} workers/backend");
+    println!("deployment: {}", service.registry().route_summary());
     let mut rng = Rng::new(cfg.seed);
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n_requests)
-        .map(|_| {
-            let task = TaskKind::Letter(rng.below(3));
+        .map(|i| {
+            // mixed-class load: analog and digital families side by side,
+            // conditional and unconditional
+            let solver = match i % 4 {
+                0 => SolverChoice::AnalogOde,
+                1 => SolverChoice::DigitalOde { steps: 100 },
+                _ => SolverChoice::DigitalSde { steps: 100 },
+            };
+            let task = if i % 3 == 0 {
+                TaskKind::Circle
+            } else {
+                TaskKind::Letter(rng.below(3))
+            };
             let n = 1 + rng.below(16);
             service
                 .submit(memdiff::coordinator::GenRequest {
                     id: 0,
                     task,
                     n_samples: n,
-                    solver: SolverChoice::DigitalSde { steps: 100 },
+                    solver,
                     guidance: cfg.guidance,
-                    decode: rng.uniform() < 0.25,
+                    decode: task.is_conditional() && rng.uniform() < 0.25,
                 })
                 .unwrap()
         })

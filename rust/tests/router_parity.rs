@@ -1,0 +1,305 @@
+//! Router parity: every request class served through the multi-backend
+//! `Service` must return **bitwise-identical** samples to a direct
+//! single-engine `Service` given the same seed/config — in Ideal and
+//! noisy modes — and the Hlo→rust fallback chain must degrade (not fail)
+//! under the default stub runtime.
+//!
+//! Uses the synthetic weight fixture, so the suite runs without AOT
+//! artifacts.  Determinism relies on two contracts: engine construction
+//! is deterministic (fixed bank-stream seeds), and a backend's worker RNG
+//! seed depends only on the backend-local worker index, so a one-worker
+//! lane replays the exact RNG sequence of a one-worker single-engine
+//! service.
+
+use std::sync::Arc;
+
+use memdiff::coordinator::batcher::BatcherConfig;
+use memdiff::coordinator::deploy::{self, BackendKind, DeployPlan, EngineRegistry};
+use memdiff::coordinator::service::{AnalogEngine, Engine, HloEngine, RustDigitalEngine};
+use memdiff::coordinator::{
+    GenRequest, GenResponse, Service, ServiceConfig, SolverChoice, SolverFamily,
+    TaskKind,
+};
+use memdiff::crossbar::NoiseModel;
+use memdiff::data::Meta;
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::schedule::VpSchedule;
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::runtime::ArtifactStore;
+
+const SEED: u64 = 0xBAD5_EED5;
+const SUBSTEPS: usize = 40;
+
+fn weights() -> ScoreWeights {
+    ScoreWeights::synthetic(2, 8, 3, 77)
+}
+
+fn sched() -> VpSchedule {
+    VpSchedule::default()
+}
+
+fn analog_engine(noise: NoiseModel) -> Arc<dyn Engine> {
+    let params = if matches!(noise, NoiseModel::Ideal) {
+        CellParams { read_noise_frac: 0.0, ..CellParams::default() }
+    } else {
+        CellParams::default()
+    };
+    Arc::new(AnalogEngine {
+        net: AnalogScoreNet::from_conductances(&weights(), params, noise),
+        sched: sched(),
+        substeps: SUBSTEPS,
+    })
+}
+
+fn rust_engine() -> Arc<dyn Engine> {
+    Arc::new(RustDigitalEngine { net: DigitalScoreNet::new(weights()), sched: sched() })
+}
+
+fn svc_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 1,
+        batcher: BatcherConfig {
+            max_batch_samples: 64,
+            linger: std::time::Duration::from_millis(1),
+        },
+        seed: SEED,
+        intra_threads: 0,
+    }
+}
+
+/// The two-backend deployment under test: one-worker lanes so request
+/// streams replay deterministically.
+fn routed_service(noise: NoiseModel) -> Service {
+    let mut reg = EngineRegistry::new();
+    reg.add_backend("analog", analog_engine(noise), 1).unwrap();
+    reg.add_backend("rust", rust_engine(), 1).unwrap();
+    reg.route_family(SolverFamily::Analog, "analog").unwrap();
+    reg.route_family(SolverFamily::Digital, "rust").unwrap();
+    Service::start_routed(reg, None, svc_cfg())
+}
+
+/// One request per class, cycled `reps` times — the full class cross.
+fn scenario(reps: usize) -> Vec<(TaskKind, SolverChoice, usize)> {
+    let mut out = Vec::new();
+    for r in 0..reps {
+        out.push((TaskKind::Circle, SolverChoice::AnalogOde, 3 + r));
+        out.push((TaskKind::Letter(r % 3), SolverChoice::AnalogSde, 2 + r));
+        out.push((TaskKind::Circle, SolverChoice::DigitalOde { steps: 12 }, 4 + r));
+        out.push((TaskKind::Letter((r + 1) % 3),
+                  SolverChoice::DigitalSde { steps: 12 }, 3 + r));
+    }
+    out
+}
+
+/// Run the scenario through a service sequentially (one blocking request
+/// at a time, so batches and RNG consumption replay exactly), keeping
+/// only requests `filter` accepts.
+fn run_filtered(svc: &Service, reqs: &[(TaskKind, SolverChoice, usize)],
+                filter: impl Fn(&SolverChoice) -> bool) -> Vec<GenResponse> {
+    reqs.iter()
+        .filter(|(_, s, _)| filter(s))
+        .map(|&(task, solver, n)| {
+            svc.generate(task, n, solver, 2.0, false).unwrap()
+        })
+        .collect()
+}
+
+fn assert_bitwise(a: &[GenResponse], b: &[GenResponse], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: response counts");
+    for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.samples.len(), rb.samples.len(), "{what} req {i}");
+        for (k, (x, y)) in ra.samples.iter().zip(&rb.samples).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "{what} req {i} sample {k}: {x} vs {y}");
+        }
+    }
+}
+
+fn parity_for(noise: NoiseModel, what: &str) {
+    let reqs = scenario(3);
+
+    // the routed service sees the full interleaved mixed-class stream
+    let routed = routed_service(noise);
+    let via_router = run_filtered(&routed, &reqs, |_| true);
+    let snap = routed.metrics.snapshot();
+    routed.shutdown();
+
+    // each single-engine service replays only its family's subsequence
+    let analog_only = Service::start(analog_engine(noise), None, svc_cfg());
+    let via_analog = run_filtered(&analog_only, &reqs, |s| s.is_analog());
+    analog_only.shutdown();
+
+    let rust_only = Service::start(rust_engine(), None, svc_cfg());
+    let via_rust = run_filtered(&rust_only, &reqs, |s| !s.is_analog());
+    rust_only.shutdown();
+
+    let routed_analog: Vec<GenResponse> = reqs
+        .iter()
+        .zip(&via_router)
+        .filter(|((_, s, _), _)| s.is_analog())
+        .map(|(_, r)| r.clone())
+        .collect();
+    let routed_rust: Vec<GenResponse> = reqs
+        .iter()
+        .zip(&via_router)
+        .filter(|((_, s, _), _)| !s.is_analog())
+        .map(|(_, r)| r.clone())
+        .collect();
+
+    assert_bitwise(&routed_analog, &via_analog, &format!("{what}/analog"));
+    assert_bitwise(&routed_rust, &via_rust, &format!("{what}/digital"));
+
+    // per-backend gauges saw exactly the class split
+    assert_eq!(snap.backends.len(), 2);
+    let total_analog: usize = reqs
+        .iter()
+        .filter(|(_, s, _)| s.is_analog())
+        .map(|&(_, _, n)| n)
+        .sum();
+    let total_rust: usize = reqs
+        .iter()
+        .filter(|(_, s, _)| !s.is_analog())
+        .map(|&(_, _, n)| n)
+        .sum();
+    assert_eq!(snap.backends[0].samples as usize, total_analog, "{what}");
+    assert_eq!(snap.backends[1].samples as usize, total_rust, "{what}");
+    assert!(snap.backends[0].hw_energy_j > 0.0,
+            "{what}: analog energy accounted");
+    assert!(snap.degraded.is_empty(), "{what}: nothing degraded");
+}
+
+#[test]
+fn routed_bitwise_identical_to_single_engine_ideal() {
+    parity_for(NoiseModel::Ideal, "ideal");
+}
+
+#[test]
+fn routed_bitwise_identical_to_single_engine_noisy() {
+    parity_for(NoiseModel::ReadFast, "readfast");
+}
+
+#[test]
+fn hlo_fallback_serves_digital_through_rust() {
+    let mut plan = DeployPlan::default();
+    plan.apply_overrides("digital=hlo,analog_workers=1,rust_workers=1,hlo_workers=1")
+        .unwrap();
+    let mut factory = |kind: BackendKind| -> anyhow::Result<Arc<dyn Engine>> {
+        Ok(match kind {
+            BackendKind::Analog => analog_engine(NoiseModel::Ideal),
+            BackendKind::Rust => rust_engine(),
+            BackendKind::Hlo => {
+                let store = ArtifactStore::open_default()?;
+                let n_classes = store.meta().n_classes;
+                Arc::new(HloEngine { store, n_classes })
+            }
+        })
+    };
+    let svc = deploy::start_deployed(&plan, &mut factory, None, svc_cfg())
+        .expect("fallback chain must not fail startup");
+
+    let reqs = scenario(2);
+    let digital = run_filtered(&svc, &reqs, |s| !s.is_analog());
+    let snap = svc.metrics.snapshot();
+    svc.shutdown();
+
+    if snap.degraded.is_empty() {
+        // a real vendored PJRT runtime with artifacts answered: nothing
+        // further to assert about the fallback path on this build
+        eprintln!("hlo runtime available; fallback not exercised");
+        return;
+    }
+    // the stub runtime (the default build) must have degraded BOTH
+    // digital classes to rust and recorded it
+    assert!(!cfg!(pjrt_vendored),
+            "vendored runtime should not degrade unless artifacts are absent");
+    assert_eq!(snap.degraded.len(), 2, "{:?}", snap.degraded);
+    for d in &snap.degraded {
+        assert!(d.contains("hlo->rust"), "{d}");
+    }
+    assert!(snap.report().contains("degraded="), "{}", snap.report());
+    let rust_names: Vec<&str> =
+        snap.backends.iter().map(|b| b.name.as_str()).collect();
+    assert!(rust_names.contains(&"rust"), "{rust_names:?}");
+    assert!(!rust_names.contains(&"hlo"), "failed backend not registered");
+
+    // and the degraded path is *exactly* the rust path, bitwise
+    let rust_only = Service::start(rust_engine(), None, svc_cfg());
+    let direct = run_filtered(&rust_only, &reqs, |s| !s.is_analog());
+    rust_only.shutdown();
+    assert_bitwise(&digital, &direct, "fallback/digital");
+}
+
+#[test]
+fn mixed_class_shutdown_drains_all_lanes_end_to_end() {
+    // queue mixed-family work on real engines and shut down immediately:
+    // the per-lane drain + no-dropped-request invariant must answer every
+    // request across both lanes
+    let svc = routed_service(NoiseModel::Ideal);
+    let mut rxs = Vec::new();
+    for (task, solver, n) in scenario(2) {
+        rxs.push(svc
+            .submit(GenRequest {
+                id: 0,
+                task,
+                n_samples: n,
+                solver,
+                guidance: 2.0,
+                decode: false,
+            })
+            .unwrap());
+    }
+    let expected = rxs.len();
+    svc.shutdown();
+    let mut answered = 0;
+    for rx in rxs {
+        let resp = rx.recv().expect("response delivered before worker join");
+        assert!(resp.is_ok(), "{:?}", resp.err());
+        answered += 1;
+    }
+    assert_eq!(answered, expected, "no request dropped on any lane");
+}
+
+#[test]
+fn routed_service_with_artifact_weights_if_present() {
+    // optional heavier check: when the real exported weights exist, the
+    // routed deployment serves them the same way (artifact-gated, skips
+    // cleanly on fresh checkouts)
+    let p = Meta::artifacts_dir().join("weights_cond.json");
+    if !p.exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let w = ScoreWeights::load(p).unwrap();
+    let mut reg = EngineRegistry::new();
+    reg.add_backend(
+        "analog",
+        Arc::new(AnalogEngine {
+            net: AnalogScoreNet::from_conductances(
+                &w, CellParams::default(), NoiseModel::ReadFast),
+            sched: sched(),
+            substeps: SUBSTEPS,
+        }) as Arc<dyn Engine>,
+        1,
+    )
+    .unwrap();
+    reg.add_backend(
+        "rust",
+        Arc::new(RustDigitalEngine { net: DigitalScoreNet::new(w.clone()), sched: sched() })
+            as Arc<dyn Engine>,
+        1,
+    )
+    .unwrap();
+    reg.route_family(SolverFamily::Analog, "analog").unwrap();
+    reg.route_family(SolverFamily::Digital, "rust").unwrap();
+    let svc = Service::start_routed(reg, None, svc_cfg());
+    let a = svc.generate(TaskKind::Letter(0), 4, SolverChoice::AnalogOde, 2.0, false)
+        .unwrap();
+    let d = svc
+        .generate(TaskKind::Letter(1), 4, SolverChoice::DigitalOde { steps: 16 },
+                  2.0, false)
+        .unwrap();
+    assert_eq!(a.samples.len(), 8);
+    assert_eq!(d.samples.len(), 8);
+    assert!(a.samples.iter().chain(&d.samples).all(|v| v.is_finite()));
+    svc.shutdown();
+}
