@@ -5,9 +5,11 @@
 //! service under a mixed load — the serving-layer numbers a deployment
 //! would track.  Every engine is measured in both lanes: scalar
 //! (per-sample reference) and batched (the production matrix-matrix path
-//! the coordinator routes through), and the results land in
-//! `BENCH_sampler_throughput.json` so the perf trajectory is tracked
-//! across PRs.
+//! the coordinator routes through), plus (e) the TCP front-end over
+//! loopback — sustained ticket latency/throughput and the reject rate of
+//! the bounded lanes at deliberate saturation (`frontend_*` keys) — and
+//! the results land in `BENCH_sampler_throughput.json` so the perf
+//! trajectory is tracked across PRs.
 
 use std::sync::Arc;
 
@@ -126,6 +128,7 @@ fn main() -> anyhow::Result<()> {
         batcher: BatcherConfig {
             max_batch_samples: B,
             linger: std::time::Duration::from_millis(1),
+            ..BatcherConfig::default()
         },
         seed: 3,
         intra_threads: 0,
@@ -145,7 +148,7 @@ fn main() -> anyhow::Result<()> {
     }
     let mut samples = 0usize;
     for rx in rxs {
-        samples += rx.recv()??.samples.len() / 2;
+        samples += rx.recv()?.samples.len() / 2;
     }
     let service_sps = samples as f64 / t0.elapsed().as_secs_f64();
     bench::row(&["service (100-step SDE, batched lane)",
@@ -168,7 +171,7 @@ fn main() -> anyhow::Result<()> {
     plan.apply_overrides("analog_workers=2,rust_workers=2")?;
     let router = Arc::new(deploy::start_deployed(
         &plan,
-        &mut |kind: BackendKind| {
+        &mut |kind: BackendKind, _weights: Option<&str>| {
             Ok(match kind {
                 BackendKind::Analog => Arc::new(AnalogEngine {
                     net: AnalogScoreNet::from_conductances(
@@ -191,6 +194,7 @@ fn main() -> anyhow::Result<()> {
             batcher: BatcherConfig {
                 max_batch_samples: B,
                 linger: std::time::Duration::from_millis(1),
+                ..BatcherConfig::default()
             },
             seed: 17,
             intra_threads: 0,
@@ -218,7 +222,7 @@ fn main() -> anyhow::Result<()> {
     }
     let mut mixed_samples = 0usize;
     for rx in rxs {
-        mixed_samples += rx.recv()??.samples.len() / 2;
+        mixed_samples += rx.recv()?.samples.len() / 2;
     }
     let router_wall = t0.elapsed().as_secs_f64();
     let router_sps = mixed_samples as f64 / router_wall;
@@ -234,6 +238,102 @@ fn main() -> anyhow::Result<()> {
     let (router_rust_sps, router_rust_lat) = backend("rust")
         .map(|b| (b.samples as f64 / router_wall, b.mean_latency_s))
         .unwrap_or((f64::NAN, f64::NAN));
+
+    bench::section("TCP front-end over loopback (tickets, bounded lanes)");
+    // a digital-only deployment behind the line-JSON front-end: small
+    // bounded lanes so the saturation burst measurably sheds
+    let frontend_queue_depth = 2 * B;
+    let fe_engine = Arc::new(RustDigitalEngine {
+        net: DigitalScoreNet::new(w.clone()),
+        sched: meta.sched,
+    });
+    let mut fe_reg = memdiff::coordinator::EngineRegistry::new();
+    fe_reg.add_backend("rust", fe_engine, 2)?;
+    fe_reg.route_family(memdiff::coordinator::SolverFamily::Digital, "rust")?;
+    let fe_service = Service::start_routed(fe_reg, None, ServiceConfig {
+        workers: 2,
+        batcher: BatcherConfig {
+            max_batch_samples: B,
+            linger: std::time::Duration::from_millis(1),
+            queue_depth: frontend_queue_depth,
+        },
+        seed: 23,
+        intra_threads: 0,
+    });
+    let front = memdiff::serve::FrontEnd::bind(
+        fe_service, "127.0.0.1:0", memdiff::serve::FrontEndConfig::default())?;
+    let addr = front.local_addr();
+    let fe_metrics = front.metrics();
+
+    use memdiff::serve::protocol::{self, Status};
+    use std::io::{BufReader, Write as _};
+    let stream = std::net::TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut fe_writer = stream.try_clone()?;
+    let mut fe_reader = BufReader::new(stream);
+    use memdiff::serve::protocol::read_reply;
+
+    // sustained phase: windowed pacing (4 in flight) — per-ticket wire
+    // latency and throughput under a load the bounded lanes can carry
+    let sustained_total = 192usize;
+    let window = 4usize;
+    let fe_n = 8usize;
+    let mut sent = 0usize;
+    let mut done = 0usize;
+    let mut t_sent: Vec<std::time::Instant> = Vec::with_capacity(sustained_total);
+    let mut lats: Vec<f64> = Vec::with_capacity(sustained_total);
+    let t0 = std::time::Instant::now();
+    while done < sustained_total {
+        while sent < sustained_total && sent - done < window {
+            let line = protocol::request_line(
+                sent as u64, TaskKind::Circle, fe_n,
+                SolverChoice::DigitalSde { steps: 100 }, 0.0, false);
+            fe_writer.write_all(line.as_bytes())?;
+            fe_writer.write_all(b"\n")?;
+            t_sent.push(std::time::Instant::now());
+            sent += 1;
+        }
+        let reply = read_reply(&mut fe_reader)?;
+        anyhow::ensure!(reply.status == Status::Ok, "sustained reject");
+        lats.push(t_sent[reply.id as usize].elapsed().as_secs_f64());
+        done += 1;
+    }
+    let fe_wall = t0.elapsed().as_secs_f64();
+    let fe_sps = (sustained_total * fe_n) as f64 / fe_wall;
+    let fe_p50 = memdiff::util::stats::percentile(&lats, 50.0);
+    let fe_p99 = memdiff::util::stats::percentile(&lats, 99.0);
+    bench::row(&["front-end sustained (windowed, B=8/req)",
+                 &format!("{fe_sps:.0} samples/s  p50 {:.1} ms  p99 {:.1} ms",
+                          1e3 * fe_p50, 1e3 * fe_p99)]);
+
+    // saturation phase: unpaced burst of 4x the lane bound — the reject
+    // rate is the shed fraction the 429-path absorbs at the edge
+    let burst_total = (8 * frontend_queue_depth / fe_n).max(32);
+    for i in 0..burst_total {
+        let line = protocol::request_line(
+            (10_000 + i) as u64, TaskKind::Circle, fe_n,
+            SolverChoice::DigitalSde { steps: 100 }, 0.0, false);
+        fe_writer.write_all(line.as_bytes())?;
+        fe_writer.write_all(b"\n")?;
+    }
+    let mut burst_ok = 0usize;
+    let mut burst_shed = 0usize;
+    for _ in 0..burst_total {
+        match read_reply(&mut fe_reader)?.status {
+            Status::Ok => burst_ok += 1,
+            Status::Overloaded => burst_shed += 1,
+            other => anyhow::bail!("unexpected burst status {other:?}"),
+        }
+    }
+    let fe_reject_rate = burst_shed as f64 / burst_total as f64;
+    bench::row(&["front-end saturation burst",
+                 &format!("{burst_ok} ok / {burst_shed} shed \
+                           (reject rate {:.0}%)", 100.0 * fe_reject_rate)]);
+    drop(fe_writer);
+    drop(fe_reader);
+    front.shutdown();
+    let fe_snap = fe_metrics.snapshot();
+    bench::row(&["front-end metrics", &fe_snap.report()]);
 
     bench::write_json("BENCH_sampler_throughput.json", &[
         ("batch_size", B as f64),
@@ -254,6 +354,12 @@ fn main() -> anyhow::Result<()> {
         ("router_analog_mean_latency_s", router_analog_lat),
         ("router_rust_mean_latency_s", router_rust_lat),
         ("router_degraded", rsnap.degraded.len() as f64),
+        ("frontend_queue_depth", frontend_queue_depth as f64),
+        ("frontend_samples_per_s", fe_sps),
+        ("frontend_p50_ticket_latency_s", fe_p50),
+        ("frontend_p99_ticket_latency_s", fe_p99),
+        ("frontend_saturation_reject_rate", fe_reject_rate),
+        ("frontend_rejected", fe_snap.rejected as f64),
     ])?;
     Ok(())
 }

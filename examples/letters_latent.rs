@@ -88,7 +88,7 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let responses: Vec<_> = rxs.into_iter()
-        .map(|rx| rx.recv().unwrap().unwrap())
+        .map(|rx| rx.recv().unwrap())
         .collect();
     let wall = t0.elapsed();
 

@@ -57,7 +57,8 @@ fn main() -> anyhow::Result<()> {
     let mut plan = DeployPlan::default();
     plan.set("analog_workers", "2")?;
     plan.set("rust_workers", "2")?;
-    let mut factory = |kind: BackendKind| -> anyhow::Result<Arc<dyn Engine>> {
+    let mut factory = |kind: BackendKind, _weights: Option<&str>|
+     -> anyhow::Result<Arc<dyn Engine>> {
         Ok(match kind {
             BackendKind::Analog => Arc::new(AnalogEngine {
                 net: AnalogScoreNet::from_conductances(
@@ -85,6 +86,7 @@ fn main() -> anyhow::Result<()> {
             batcher: BatcherConfig {
                 max_batch_samples: 64,
                 linger: std::time::Duration::from_millis(2),
+                ..BatcherConfig::default()
             },
             seed: 99,
             intra_threads: 0,
@@ -130,7 +132,7 @@ fn main() -> anyhow::Result<()> {
                                 && rng.uniform() < 0.3,
                         })
                         .unwrap();
-                    let resp = rx.recv().unwrap().unwrap();
+                    let resp = rx.recv().unwrap();
                     lat.record(t.elapsed().as_secs_f64());
                     samples += resp.samples.len() / 2;
                 }
@@ -185,6 +187,7 @@ fn main() -> anyhow::Result<()> {
         batcher: BatcherConfig {
             max_batch_samples: 64,
             linger: std::time::Duration::from_millis(1),
+            ..BatcherConfig::default()
         },
         seed: 7,
         intra_threads: 0,

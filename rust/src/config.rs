@@ -8,6 +8,7 @@
 //! workers = 4
 //! max_batch = 64
 //! linger_ms = 2
+//! queue_depth = 512  # per-lane queue bound in samples (0 = unbounded)
 //! threads = 0        # intra-op pool threads (0 = auto / RUST_PALLAS_THREADS)
 //! par = auto         # serial | banks | lanes | auto
 //!
@@ -20,6 +21,8 @@
 //! digital = rust       # rust | hlo (per-class keys like digital_cond work too)
 //! analog_workers = 2   # per-backend worker counts (0 = [service] workers)
 //! rust_workers = 2
+//! analog_queue = 128   # per-backend lane bound in samples (0 = queue_depth)
+//! rust_weights = w.json  # per-backend weight path (default: standard artifacts)
 //! ```
 
 use std::collections::BTreeMap;
@@ -99,6 +102,12 @@ pub struct Config {
     pub workers: usize,
     pub max_batch: usize,
     pub linger_ms: u64,
+    /// Per-lane queue bound in samples (0 = unbounded).  The serving
+    /// front-end's backpressure knob: a lane whose queued samples would
+    /// exceed this sheds the request with an `Overloaded` reject instead
+    /// of queueing it.  Per-backend `<backend>_queue` keys in `[deploy]`
+    /// override it lane by lane.
+    pub queue_depth: usize,
     /// Intra-op pool threads (0 = auto: `RUST_PALLAS_THREADS` if set, else
     /// sized against `workers` — see [`crate::exec`]).
     pub threads: usize,
@@ -122,6 +131,7 @@ impl Default for Config {
             workers: 2,
             max_batch: 64,
             linger_ms: 2,
+            queue_depth: 512,
             threads: 0,
             par: crate::exec::ParStrategy::Auto,
             substeps: 2000,
@@ -140,6 +150,9 @@ impl Config {
             workers: raw.get_parsed("service", "workers")?.unwrap_or(d.workers),
             max_batch: raw.get_parsed("service", "max_batch")?.unwrap_or(d.max_batch),
             linger_ms: raw.get_parsed("service", "linger_ms")?.unwrap_or(d.linger_ms),
+            queue_depth: raw
+                .get_parsed("service", "queue_depth")?
+                .unwrap_or(d.queue_depth),
             threads: raw.get_parsed("service", "threads")?.unwrap_or(d.threads),
             par: match raw.get("service", "par") {
                 None => d.par,
@@ -191,6 +204,7 @@ mod tests {
         let cfg = Config::from_raw(&raw).unwrap();
         assert_eq!(cfg.workers, 8);
         assert_eq!(cfg.max_batch, 64); // default
+        assert_eq!(cfg.queue_depth, 512); // default: bounded lanes
         assert_eq!(cfg.substeps, 2000);
         assert_eq!(cfg.threads, 0); // auto
         assert_eq!(cfg.par, crate::exec::ParStrategy::Auto);
@@ -229,6 +243,17 @@ mod tests {
         assert!(Config::from_raw(&bad).is_err());
         let junk = RawConfig::parse("[deploy]\nteleport = analog\n").unwrap();
         assert!(Config::from_raw(&junk).is_err());
+    }
+
+    #[test]
+    fn queue_depth_parses() {
+        let raw =
+            RawConfig::parse("[service]\nqueue_depth = 96\n").unwrap();
+        assert_eq!(Config::from_raw(&raw).unwrap().queue_depth, 96);
+        let off = RawConfig::parse("[service]\nqueue_depth = 0\n").unwrap();
+        assert_eq!(Config::from_raw(&off).unwrap().queue_depth, 0, "0 = unbounded");
+        let bad = RawConfig::parse("[service]\nqueue_depth = deep\n").unwrap();
+        assert!(Config::from_raw(&bad).is_err());
     }
 
     #[test]

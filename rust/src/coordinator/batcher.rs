@@ -5,11 +5,19 @@
 //! the oldest member has waited `linger` — the size-or-deadline policy of
 //! serving routers.  Invariants (property-tested):
 //!
-//! 1. every submitted request appears in exactly one emitted batch;
+//! 1. every submitted request appears in exactly one emitted batch
+//!    **or** was rejected at submit (closed / over the queue bound) —
+//!    never both, never neither;
 //! 2. batches never mix keys;
 //! 3. a batch's sample total never exceeds `max_batch_samples` unless a
 //!    single oversized request needs its own batch;
 //! 4. requests with the same key dequeue FIFO.
+//!
+//! Queues are **bounded** when `queue_depth > 0`: a submit that would
+//! push the queued-sample total past the bound is answered
+//! [`SubmitOutcome::Overloaded`] without enqueueing — admission-time
+//! backpressure for the serving front-end (the caller sheds or retries;
+//! the queue never hides overload by growing without limit).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -26,11 +34,42 @@ pub struct BatcherConfig {
     /// Max time the oldest queued request waits before a partial batch is
     /// emitted.
     pub linger: Duration,
+    /// Queue bound in **samples** (0 = unbounded, the library default;
+    /// the CLI config defaults to a finite `[service] queue_depth`).  A
+    /// submit that would exceed it is rejected `Overloaded` — except an
+    /// oversized single request on an *empty* queue, which is admitted
+    /// (mirroring the oversized-request-ships-alone batching rule, so a
+    /// request larger than the bound is not unservable by construction).
+    pub queue_depth: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch_samples: 64, linger: Duration::from_millis(2) }
+        BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_millis(2),
+            queue_depth: 0,
+        }
+    }
+}
+
+/// What happened to a submitted request — admission is the only place a
+/// request can be refused, so the outcome is structured rather than a
+/// bool (the service maps it onto the `SubmitError` taxonomy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Enqueued; `queued_samples` is the lane's post-admission fill
+    /// (the live queue-depth gauge).
+    Accepted { queued_samples: usize },
+    /// The bounded queue is full: not enqueued, caller sheds load.
+    Overloaded { queued_samples: usize, queue_depth: usize },
+    /// The queue is closed (drain in progress): not enqueued.
+    Closed,
+}
+
+impl SubmitOutcome {
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, SubmitOutcome::Accepted { .. })
     }
 }
 
@@ -59,6 +98,9 @@ struct State {
     /// submit/assemble so `next_batch` reads the head key's fill level in
     /// O(1) per condvar wakeup instead of rescanning the whole queue.
     key_samples: HashMap<u64, usize>,
+    /// Running total across all keys — the O(1) admission check against
+    /// `queue_depth` and the queue-depth gauge.
+    queued_samples: usize,
 }
 
 /// Thread-safe dynamic batcher.
@@ -76,21 +118,36 @@ impl Batcher {
                 queue: VecDeque::new(),
                 closed: false,
                 key_samples: HashMap::new(),
+                queued_samples: 0,
             }),
             cv: Condvar::new(),
         }
     }
 
-    /// Enqueue a request (non-blocking).  Returns false if closed.
-    pub fn submit(&self, req: GenRequest) -> bool {
+    /// Enqueue a request (non-blocking, never waits for space).  The
+    /// admission decision — and nothing else — happens here: closed
+    /// queues and full bounded queues answer without enqueueing.
+    #[must_use = "a rejected request must be answered, not dropped"]
+    pub fn submit(&self, req: GenRequest) -> SubmitOutcome {
         let mut st = self.state.lock().unwrap();
         if st.closed {
-            return false;
+            return SubmitOutcome::Closed;
+        }
+        if self.cfg.queue_depth > 0
+            && st.queued_samples > 0
+            && st.queued_samples + req.n_samples > self.cfg.queue_depth
+        {
+            return SubmitOutcome::Overloaded {
+                queued_samples: st.queued_samples,
+                queue_depth: self.cfg.queue_depth,
+            };
         }
         *st.key_samples.entry(req.batch_key()).or_insert(0) += req.n_samples;
+        st.queued_samples += req.n_samples;
+        let queued_samples = st.queued_samples;
         st.queue.push_back(Queued { req, at: Instant::now() });
         self.cv.notify_one();
-        true
+        SubmitOutcome::Accepted { queued_samples }
     }
 
     /// Close the queue; pending requests still drain.  Every caller
@@ -112,10 +169,15 @@ impl Batcher {
         self.len() == 0
     }
 
-    /// Total queued samples (the running per-key counters summed) — the
-    /// queue-depth gauge the per-backend metrics report.
+    /// Total queued samples (running counter, O(1)) — the queue-depth
+    /// gauge the per-backend metrics report and the admission check.
     pub fn queued_samples(&self) -> usize {
-        self.state.lock().unwrap().key_samples.values().sum()
+        self.state.lock().unwrap().queued_samples
+    }
+
+    /// The configured queue bound in samples (0 = unbounded).
+    pub fn queue_depth(&self) -> usize {
+        self.cfg.queue_depth
     }
 
     /// Blocking: wait for and assemble the next batch.  Returns None once
@@ -172,13 +234,14 @@ impl Batcher {
                 break;
             }
         }
-        // keep the running per-key count exact
+        // keep the running per-key and total counts exact
         if let Some(cnt) = st.key_samples.get_mut(&key) {
             *cnt = cnt.saturating_sub(total);
             if *cnt == 0 {
                 st.key_samples.remove(&key);
             }
         }
+        st.queued_samples = st.queued_samples.saturating_sub(total);
         Batch { key, requests }
     }
 }
@@ -200,10 +263,16 @@ pub struct LaneSet {
 impl LaneSet {
     /// One lane per backend, all sharing the same batching policy.
     pub fn new(n_lanes: usize, cfg: &BatcherConfig) -> Self {
+        Self::with_configs((0..n_lanes).map(|_| cfg.clone()).collect())
+    }
+
+    /// One lane per config — the deployment router passes per-backend
+    /// queue bounds here (`<backend>_queue` overrides), so a slow
+    /// backend can run a shallow shed-early queue while others keep the
+    /// service-wide depth.
+    pub fn with_configs(cfgs: Vec<BatcherConfig>) -> Self {
         LaneSet {
-            lanes: (0..n_lanes)
-                .map(|_| Arc::new(Batcher::new(cfg.clone())))
-                .collect(),
+            lanes: cfgs.into_iter().map(|c| Arc::new(Batcher::new(c))).collect(),
         }
     }
 
@@ -215,8 +284,10 @@ impl LaneSet {
         &self.lanes[idx]
     }
 
-    /// Submit to one lane (non-blocking).  False if that lane is closed.
-    pub fn submit(&self, idx: usize, req: GenRequest) -> bool {
+    /// Submit to one lane (non-blocking admission — see
+    /// [`Batcher::submit`]).
+    #[must_use = "a rejected request must be answered, not dropped"]
+    pub fn submit(&self, idx: usize, req: GenRequest) -> SubmitOutcome {
         self.lanes[idx].submit(req)
     }
 
@@ -263,7 +334,7 @@ mod tests {
     #[test]
     fn single_request_emits_one_batch() {
         let b = Batcher::new(BatcherConfig::default());
-        assert!(b.submit(req(1, 0, 10)));
+        assert!(b.submit(req(1, 0, 10)).is_accepted());
         let batches = drain(&b);
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].requests[0].id, 1);
@@ -273,7 +344,7 @@ mod tests {
     fn same_key_coalesces() {
         let b = Batcher::new(BatcherConfig::default());
         for id in 0..4 {
-            b.submit(req(id, 0, 10));
+            assert!(b.submit(req(id, 0, 10)).is_accepted());
         }
         let batches = drain(&b);
         assert_eq!(batches.len(), 1);
@@ -283,9 +354,9 @@ mod tests {
     #[test]
     fn different_keys_do_not_mix() {
         let b = Batcher::new(BatcherConfig::default());
-        b.submit(req(0, 0, 8));
-        b.submit(req(1, 1, 8));
-        b.submit(req(2, 0, 8));
+        for r in [req(0, 0, 8), req(1, 1, 8), req(2, 0, 8)] {
+            assert!(b.submit(r).is_accepted());
+        }
         let batches = drain(&b);
         for batch in &batches {
             let keys: std::collections::HashSet<u64> =
@@ -306,9 +377,10 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             max_batch_samples: 64,
             linger: Duration::from_millis(1),
+            ..BatcherConfig::default()
         });
         for id in 0..5 {
-            b.submit(req(id, 0, 20));
+            assert!(b.submit(req(id, 0, 20)).is_accepted());
         }
         let batches = drain(&b);
         for batch in &batches {
@@ -323,9 +395,10 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             max_batch_samples: 64,
             linger: Duration::from_millis(1),
+            ..BatcherConfig::default()
         });
-        b.submit(req(0, 0, 500));
-        b.submit(req(1, 0, 4));
+        assert!(b.submit(req(0, 0, 500)).is_accepted());
+        assert!(b.submit(req(1, 0, 4)).is_accepted());
         let batches = drain(&b);
         assert_eq!(batches[0].requests.len(), 1);
         assert_eq!(batches[0].total_samples(), 500);
@@ -335,7 +408,7 @@ mod tests {
     fn closed_queue_rejects_submissions() {
         let b = Batcher::new(BatcherConfig::default());
         b.close();
-        assert!(!b.submit(req(0, 0, 1)));
+        assert_eq!(b.submit(req(0, 0, 1)), SubmitOutcome::Closed);
         assert!(b.next_batch().is_none());
     }
 
@@ -344,8 +417,9 @@ mod tests {
         let b = std::sync::Arc::new(Batcher::new(BatcherConfig {
             max_batch_samples: 64,
             linger: Duration::from_millis(20),
+            ..BatcherConfig::default()
         }));
-        b.submit(req(0, 0, 4));
+        assert!(b.submit(req(0, 0, 4)).is_accepted());
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         let waited = t0.elapsed();
@@ -362,8 +436,9 @@ mod tests {
         let b = std::sync::Arc::new(Batcher::new(BatcherConfig {
             max_batch_samples: 64,
             linger: Duration::from_secs(30),
+            ..BatcherConfig::default()
         }));
-        b.submit(req(0, 0, 4)); // makes one caller linger instead of idle
+        let _ = b.submit(req(0, 0, 4)); // makes one caller linger instead of idle
         let handles: Vec<_> = (0..3)
             .map(|_| {
                 let b = std::sync::Arc::clone(&b);
@@ -392,11 +467,12 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             max_batch_samples: 16,
             linger: Duration::from_millis(0),
+            ..BatcherConfig::default()
         });
         let mut id = 0u64;
         for round in 0..4 {
             for k in 0..3usize {
-                b.submit(req(id, k, 3 + round));
+                assert!(b.submit(req(id, k, 3 + round)).is_accepted());
                 id += 1;
             }
             {
@@ -423,11 +499,106 @@ mod tests {
     fn queued_samples_track_submissions() {
         let b = Batcher::new(BatcherConfig::default());
         assert_eq!(b.queued_samples(), 0);
-        b.submit(req(0, 0, 10));
-        b.submit(req(1, 1, 5));
+        let _ = b.submit(req(0, 0, 10));
+        let _ = b.submit(req(1, 1, 5));
         assert_eq!(b.queued_samples(), 15);
         let _ = drain(&b);
         assert_eq!(b.queued_samples(), 0);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_at_depth_and_recovers() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_millis(0),
+            queue_depth: 10,
+        });
+        assert_eq!(b.queue_depth(), 10);
+        assert_eq!(b.submit(req(0, 0, 6)),
+                   SubmitOutcome::Accepted { queued_samples: 6 });
+        assert_eq!(b.submit(req(1, 0, 4)),
+                   SubmitOutcome::Accepted { queued_samples: 10 });
+        // full: the next sample over the bound is shed, not queued
+        assert_eq!(b.submit(req(2, 0, 1)),
+                   SubmitOutcome::Overloaded { queued_samples: 10, queue_depth: 10 });
+        assert_eq!(b.queued_samples(), 10, "reject must not enqueue");
+        // draining a batch frees capacity again
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.total_samples(), 10);
+        assert!(b.submit(req(3, 0, 10)).is_accepted());
+        let _ = drain(&b);
+    }
+
+    #[test]
+    fn bound_applies_across_keys() {
+        // the bound is per lane, not per key: two keys share the budget
+        let b = Batcher::new(BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_millis(0),
+            queue_depth: 8,
+        });
+        assert!(b.submit(req(0, 0, 5)).is_accepted());
+        assert!(b.submit(req(1, 1, 3)).is_accepted());
+        assert!(matches!(b.submit(req(2, 2, 1)),
+                         SubmitOutcome::Overloaded { .. }));
+        let _ = drain(&b);
+    }
+
+    #[test]
+    fn oversized_request_admitted_only_on_empty_queue() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_millis(0),
+            queue_depth: 8,
+        });
+        // larger than the bound but the queue is empty: admitted (the
+        // oversized-ships-alone rule — otherwise it could never run)
+        assert!(b.submit(req(0, 0, 500)).is_accepted());
+        // now the queue is non-empty: everything further is shed
+        assert!(matches!(b.submit(req(1, 0, 1)),
+                         SubmitOutcome::Overloaded { .. }));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.total_samples(), 500);
+        assert!(b.submit(req(2, 0, 1)).is_accepted());
+        let _ = drain(&b);
+    }
+
+    #[test]
+    fn closed_wins_over_overloaded() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_millis(0),
+            queue_depth: 4,
+        });
+        assert!(b.submit(req(0, 0, 4)).is_accepted());
+        b.close();
+        // a closed full queue reports Closed (drain state), not Overloaded
+        assert_eq!(b.submit(req(1, 0, 4)), SubmitOutcome::Closed);
+    }
+
+    #[test]
+    fn lane_set_per_lane_queue_bounds() {
+        let set = LaneSet::with_configs(vec![
+            BatcherConfig {
+                max_batch_samples: 64,
+                linger: Duration::from_millis(0),
+                queue_depth: 2,
+            },
+            BatcherConfig {
+                max_batch_samples: 64,
+                linger: Duration::from_millis(0),
+                queue_depth: 0, // unbounded
+            },
+        ]);
+        assert!(set.submit(0, req(0, 0, 2)).is_accepted());
+        assert!(matches!(set.submit(0, req(1, 0, 1)),
+                         SubmitOutcome::Overloaded { queue_depth: 2, .. }),
+                "lane 0 is full");
+        for id in 10..40 {
+            assert!(set.submit(1, req(id, 1, 8)).is_accepted(),
+                    "lane 1 is unbounded and unaffected by lane 0's bound");
+        }
+        set.close_all();
     }
 
     #[test]
@@ -435,15 +606,16 @@ mod tests {
         let set = LaneSet::new(2, &BatcherConfig {
             max_batch_samples: 64,
             linger: Duration::from_millis(0),
+            ..BatcherConfig::default()
         });
         assert_eq!(set.n_lanes(), 2);
-        assert!(set.submit(0, req(1, 0, 4)));
-        assert!(set.submit(1, req(2, 1, 6)));
+        assert!(set.submit(0, req(1, 0, 4)).is_accepted());
+        assert!(set.submit(1, req(2, 1, 6)).is_accepted());
         assert_eq!(set.queued_requests(), 2);
         // closing lane 0 alone leaves lane 1 accepting work
         set.lane(0).close();
-        assert!(!set.submit(0, req(3, 0, 1)));
-        assert!(set.submit(1, req(4, 1, 1)));
+        assert_eq!(set.submit(0, req(3, 0, 1)), SubmitOutcome::Closed);
+        assert!(set.submit(1, req(4, 1, 1)).is_accepted());
         // lane 0 still drains its queued request after close
         let batch = set.lane(0).next_batch().unwrap();
         assert_eq!(batch.requests[0].id, 1);
@@ -455,10 +627,13 @@ mod tests {
         let set = LaneSet::new(3, &BatcherConfig {
             max_batch_samples: 64,
             linger: Duration::from_secs(30),
+            ..BatcherConfig::default()
         });
         for lane in 0..3 {
             for k in 0..2 {
-                set.submit(lane, req((lane * 10 + k) as u64, lane % 3, 3));
+                assert!(set
+                    .submit(lane, req((lane * 10 + k) as u64, lane % 3, 3))
+                    .is_accepted());
             }
         }
         set.close_all();
@@ -488,9 +663,10 @@ mod tests {
                 let b = Batcher::new(BatcherConfig {
                     max_batch_samples: 64,
                     linger: Duration::from_millis(0),
+                    ..BatcherConfig::default()
                 });
                 for r in reqs {
-                    b.submit(r.clone());
+                    assert!(b.submit(r.clone()).is_accepted());
                 }
                 let batches = drain(&b);
                 let mut seen: Vec<u64> = batches

@@ -112,6 +112,17 @@ pub struct DeployPlan {
     /// Workers per backend, indexed by [`BackendKind::index`];
     /// 0 = use the service-wide default ([`ServiceConfig::workers`]).
     workers: [usize; 3],
+    /// Lane queue bound (samples) per backend, indexed by
+    /// [`BackendKind::index`]; 0 = the service-wide
+    /// `[service] queue_depth`.  A slow backend can run a shallower
+    /// shed-early queue than the rest of the deployment.
+    queue: [usize; 3],
+    /// Score-weight path per backend, indexed by [`BackendKind::index`]
+    /// (`<backend>_weights` keys).  `None` = the engine factory's
+    /// default.  This is the groundwork for per-class model variants: a
+    /// wide high-accuracy net and a narrow low-latency net can sit
+    /// behind different backends of one deployment.
+    weights: [Option<String>; 3],
 }
 
 impl Default for DeployPlan {
@@ -126,6 +137,8 @@ impl Default for DeployPlan {
                 BackendKind::Rust,
             ],
             workers: [0; 3],
+            queue: [0; 3],
+            weights: [None, None, None],
         }
     }
 }
@@ -140,13 +153,27 @@ impl DeployPlan {
         self.workers[kind.index()]
     }
 
+    /// Configured lane queue bound for a backend (0 = service default).
+    pub fn queue_for(&self, kind: BackendKind) -> usize {
+        self.queue[kind.index()]
+    }
+
+    /// Configured weight path for a backend (`None` = factory default).
+    pub fn weights_for(&self, kind: BackendKind) -> Option<&str> {
+        self.weights[kind.index()].as_deref()
+    }
+
     /// Apply one `key = value` entry.  Keys:
     ///
     /// * `analog` / `digital` — backend for the whole solver family;
     /// * `analog_uncond` / `analog_cond` / `digital_uncond` /
     ///   `digital_cond` — backend for one class;
     /// * `analog_workers` / `rust_workers` / `hlo_workers` — per-backend
-    ///   worker count (0 = service default).
+    ///   worker count (0 = service default);
+    /// * `<backend>_queue` — per-backend lane queue bound in samples
+    ///   (0 = the service-wide `[service] queue_depth`);
+    /// * `<backend>_weights` — per-backend score-weight path (for `hlo`,
+    ///   an artifacts directory), overriding the factory default.
     ///
     /// Family compatibility is validated here, at assignment time: an
     /// analog class can only run on the analog engine, a digital class on
@@ -161,6 +188,28 @@ impl DeployPlan {
                 anyhow!("[deploy] {key} = {value:?}: expected a worker count")
             })?;
             self.workers[kind.index()] = n;
+            return Ok(());
+        }
+        if let Some(backend) = key.strip_suffix("_queue") {
+            let kind: BackendKind = backend
+                .parse()
+                .map_err(|e| anyhow!("[deploy] {key}: {e}"))?;
+            let n: usize = value.trim().parse().map_err(|_| {
+                anyhow!("[deploy] {key} = {value:?}: expected a queue depth \
+                         in samples")
+            })?;
+            self.queue[kind.index()] = n;
+            return Ok(());
+        }
+        if let Some(backend) = key.strip_suffix("_weights") {
+            let kind: BackendKind = backend
+                .parse()
+                .map_err(|e| anyhow!("[deploy] {key}: {e}"))?;
+            let path = value.trim();
+            if path.is_empty() {
+                return Err(anyhow!("[deploy] {key}: expected a weight path"));
+            }
+            self.weights[kind.index()] = Some(path.to_string());
             return Ok(());
         }
         let kind: BackendKind = value
@@ -183,7 +232,8 @@ impl DeployPlan {
                 None => {
                     return Err(anyhow!(
                         "[deploy] unknown key {key:?} (expected analog, digital, \
-                         a class name like digital_cond, or <backend>_workers)"
+                         a class name like digital_cond, or <backend>_workers / \
+                         <backend>_queue / <backend>_weights)"
                     ))
                 }
             },
@@ -248,13 +298,16 @@ impl std::fmt::Display for Degradation {
     }
 }
 
-/// A named backend: an engine plus its worker allotment.
+/// A named backend: an engine plus its worker allotment and lane bound.
 pub struct Backend {
     pub name: String,
     pub engine: Arc<dyn Engine>,
     /// Worker threads dedicated to this backend's lane
     /// (0 = [`ServiceConfig::workers`]).
     pub workers: usize,
+    /// Lane queue bound in samples (0 = the service-wide
+    /// `BatcherConfig::queue_depth`).
+    pub queue_depth: usize,
 }
 
 /// The resolved runtime routing table: named backends plus the class→
@@ -282,14 +335,24 @@ impl EngineRegistry {
     }
 
     /// Register a backend; names must be unique.  Returns its index.
+    /// Lane queue bound defaults to the service-wide depth; use
+    /// [`Self::add_backend_cfg`] to override it.
     pub fn add_backend(&mut self, name: impl Into<String>,
                        engine: Arc<dyn Engine>, workers: usize)
                        -> anyhow::Result<usize> {
+        self.add_backend_cfg(name, engine, workers, 0)
+    }
+
+    /// [`Self::add_backend`] with an explicit lane queue bound in samples
+    /// (0 = the service-wide `BatcherConfig::queue_depth`).
+    pub fn add_backend_cfg(&mut self, name: impl Into<String>,
+                           engine: Arc<dyn Engine>, workers: usize,
+                           queue_depth: usize) -> anyhow::Result<usize> {
         let name = name.into();
         if self.backends.iter().any(|b| b.name == name) {
             return Err(anyhow!("backend {name:?} registered twice"));
         }
-        self.backends.push(Backend { name, engine, workers });
+        self.backends.push(Backend { name, engine, workers, queue_depth });
         Ok(self.backends.len() - 1)
     }
 
@@ -351,10 +414,13 @@ impl EngineRegistry {
 }
 
 /// Engine constructor the deployment layer calls per [`BackendKind`].
-/// Fallible so a missing runtime (the `pjrt_vendored` stub) or missing
-/// artifacts surface as a degradation instead of a panic.
+/// The second argument is the plan's `<backend>_weights` path override
+/// (`None` = the factory's default weights; for `hlo`, an artifacts
+/// directory).  Fallible so a missing runtime (the `pjrt_vendored`
+/// stub) or missing artifacts surface as a degradation instead of a
+/// panic.
 pub type BackendFactory<'a> =
-    dyn FnMut(BackendKind) -> anyhow::Result<Arc<dyn Engine>> + 'a;
+    dyn FnMut(BackendKind, Option<&str>) -> anyhow::Result<Arc<dyn Engine>> + 'a;
 
 /// Build the runtime registry a plan describes, constructing each needed
 /// backend via `factory`.  The **fallback chain**: a failed `hlo`
@@ -376,29 +442,40 @@ pub fn build_registry(plan: &DeployPlan, factory: &mut BackendFactory<'_>)
     // `backends_needed` yields `rust` before `hlo`, so when the fallback
     // fires, the rust engine either already exists or is built right here
     for kind in plan.backends_needed() {
-        match factory(kind) {
+        match factory(kind, plan.weights_for(kind)) {
             Ok(engine) => {
-                let idx =
-                    reg.add_backend(kind.name(), engine, plan.workers_for(kind))?;
+                let idx = reg.add_backend_cfg(
+                    kind.name(), engine,
+                    plan.workers_for(kind), plan.queue_for(kind))?;
                 built.insert(kind, idx);
             }
             Err(e) if kind == BackendKind::Hlo => {
                 let reason = format!("{e:#}");
                 let hlo_workers = plan.workers_for(BackendKind::Hlo);
+                let hlo_queue = plan.queue_for(BackendKind::Hlo);
                 match built.get(&BackendKind::Rust).copied() {
                     Some(idx) => {
                         // rust already serves its own classes and now
                         // absorbs the hlo traffic too: keep the larger
                         // *explicit* allotment (0 = service default is
                         // left alone — this layer has no basis to resize
-                        // a default)
+                        // a default).  Same for the lane bound: absorbed
+                        // traffic keeps the deeper provisioned queue.
                         let w = &mut reg.backends[idx].workers;
                         if *w > 0 && hlo_workers > *w {
                             *w = hlo_workers;
                         }
+                        let q = &mut reg.backends[idx].queue_depth;
+                        if *q > 0 && hlo_queue > *q {
+                            *q = hlo_queue;
+                        }
                     }
                     None => {
-                        let engine = factory(BackendKind::Rust).map_err(|re| {
+                        let engine = factory(
+                            BackendKind::Rust,
+                            plan.weights_for(BackendKind::Rust),
+                        )
+                        .map_err(|re| {
                             anyhow!(
                                 "hlo backend failed ({reason}) and the rust \
                                  fallback failed too: {re:#}"
@@ -409,8 +486,10 @@ pub fn build_registry(plan: &DeployPlan, factory: &mut BackendFactory<'_>)
                         // capacity isn't silently dropped
                         let workers =
                             plan.workers_for(BackendKind::Rust).max(hlo_workers);
-                        let idx = reg.add_backend(
-                            BackendKind::Rust.name(), engine, workers)?;
+                        let queue =
+                            plan.queue_for(BackendKind::Rust).max(hlo_queue);
+                        let idx = reg.add_backend_cfg(
+                            BackendKind::Rust.name(), engine, workers, queue)?;
                         built.insert(BackendKind::Rust, idx);
                     }
                 }
@@ -485,6 +564,13 @@ mod tests {
         assert_eq!(plan.backend_for(class("digital_uncond")), BackendKind::Hlo);
         plan.set("rust_workers", "4").unwrap();
         assert_eq!(plan.workers_for(BackendKind::Rust), 4);
+        plan.set("analog_queue", "96").unwrap();
+        assert_eq!(plan.queue_for(BackendKind::Analog), 96);
+        assert_eq!(plan.queue_for(BackendKind::Rust), 0, "others untouched");
+        plan.set("rust_weights", "custom/weights_narrow.json").unwrap();
+        assert_eq!(plan.weights_for(BackendKind::Rust),
+                   Some("custom/weights_narrow.json"));
+        assert_eq!(plan.weights_for(BackendKind::Analog), None);
         // family mismatches rejected at assignment time
         assert!(plan.set("analog", "rust").is_err());
         assert!(plan.set("digital", "analog").is_err());
@@ -493,6 +579,9 @@ mod tests {
         assert!(plan.set("teleport", "analog").is_err());
         assert!(plan.set("digital", "gpu").is_err());
         assert!(plan.set("rust_workers", "many").is_err());
+        assert!(plan.set("gpu_queue", "8").is_err());
+        assert!(plan.set("rust_queue", "deep").is_err());
+        assert!(plan.set("analog_weights", "  ").is_err());
     }
 
     #[test]
@@ -539,7 +628,7 @@ mod tests {
     fn build_registry_happy_path() {
         let plan = DeployPlan::default();
         let mut calls = Vec::new();
-        let (reg, degs) = build_registry(&plan, &mut |kind| {
+        let (reg, degs) = build_registry(&plan, &mut |kind, _weights| {
             calls.push(kind);
             Ok(Arc::new(TagEngine(kind.index() as f32)) as Arc<dyn Engine>)
         })
@@ -556,7 +645,7 @@ mod tests {
         plan.apply_overrides("digital=hlo,hlo_workers=8").unwrap();
         // plan needs only analog + hlo: the fallback must construct rust
         // on demand
-        let (reg, degs) = build_registry(&plan, &mut |kind| match kind {
+        let (reg, degs) = build_registry(&plan, &mut |kind, _weights| match kind {
             BackendKind::Hlo => Err(anyhow!("stub runtime")),
             k => Ok(Arc::new(TagEngine(k.index() as f32)) as Arc<dyn Engine>),
         })
@@ -585,7 +674,7 @@ mod tests {
             "digital_uncond=rust,digital_cond=hlo,rust_workers=2,hlo_workers=6",
         )
         .unwrap();
-        let (reg, degs) = build_registry(&plan, &mut |kind| match kind {
+        let (reg, degs) = build_registry(&plan, &mut |kind, _weights| match kind {
             BackendKind::Hlo => Err(anyhow!("stub runtime")),
             k => Ok(Arc::new(TagEngine(k.index() as f32)) as Arc<dyn Engine>),
         })
@@ -601,9 +690,56 @@ mod tests {
     }
 
     #[test]
+    fn build_registry_passes_weight_paths_and_queue_bounds() {
+        let mut plan = DeployPlan::default();
+        plan.apply_overrides(
+            "rust_weights=narrow.json,analog_queue=64,rust_queue=32")
+            .unwrap();
+        let mut seen: Vec<(BackendKind, Option<String>)> = Vec::new();
+        let (reg, degs) = build_registry(&plan, &mut |kind, weights| {
+            seen.push((kind, weights.map(String::from)));
+            Ok(Arc::new(TagEngine(0.0)) as Arc<dyn Engine>)
+        })
+        .unwrap();
+        assert!(degs.is_empty());
+        assert_eq!(seen, vec![
+            (BackendKind::Analog, None),
+            (BackendKind::Rust, Some("narrow.json".into())),
+        ], "factory receives each backend's configured weight path");
+        assert_eq!(reg.backends()[0].queue_depth, 64);
+        assert_eq!(reg.backends()[1].queue_depth, 32);
+    }
+
+    #[test]
+    fn hlo_fallback_absorbs_queue_bound_not_weights() {
+        let mut plan = DeployPlan::default();
+        plan.apply_overrides("digital=hlo,hlo_queue=96,hlo_weights=hlo_dir")
+            .unwrap();
+        let mut rust_weights_seen: Option<Option<String>> = None;
+        let (reg, degs) = build_registry(&plan, &mut |kind, weights| match kind {
+            BackendKind::Hlo => Err(anyhow!("stub runtime")),
+            k => {
+                if k == BackendKind::Rust {
+                    rust_weights_seen = Some(weights.map(String::from));
+                }
+                Ok(Arc::new(TagEngine(k.index() as f32)) as Arc<dyn Engine>)
+            }
+        })
+        .unwrap();
+        assert_eq!(degs.len(), 2);
+        let rust =
+            reg.backends().iter().find(|b| b.name == "rust").unwrap();
+        assert_eq!(rust.queue_depth, 96,
+                   "on-demand fallback lane inherits the hlo queue bound");
+        assert_eq!(rust_weights_seen, Some(None),
+                   "fallback builds rust with RUST weights (hlo's path names \
+                    an artifacts dir, not score weights)");
+    }
+
+    #[test]
     fn non_hlo_failure_aborts_startup() {
         let plan = DeployPlan::default();
-        let err = build_registry(&plan, &mut |kind| match kind {
+        let err = build_registry(&plan, &mut |kind, _weights| match kind {
             BackendKind::Analog => Err(anyhow!("no weights")),
             k => Ok(Arc::new(TagEngine(k.index() as f32)) as Arc<dyn Engine>),
         })
@@ -615,7 +751,7 @@ mod tests {
     fn hlo_failure_with_failing_rust_fallback_aborts() {
         let mut plan = DeployPlan::default();
         plan.set("digital", "hlo").unwrap();
-        let err = build_registry(&plan, &mut |kind| match kind {
+        let err = build_registry(&plan, &mut |kind, _weights| match kind {
             BackendKind::Analog => {
                 Ok(Arc::new(TagEngine(0.0)) as Arc<dyn Engine>)
             }

@@ -4,7 +4,8 @@
 //! pool gauges (threads, scopes/tasks run, queue high-water mark,
 //! tasks-per-scope histogram) from [`crate::exec`], and — since the
 //! deployment router — **per-backend** gauges: each named backend's queue
-//! depth, request/sample/batch counters, modeled hardware energy, and any
+//! depth, admission-reject count (its bounded lane shedding load),
+//! request/sample/batch counters, modeled hardware energy, and any
 //! startup degradation (the Hlo→rust fallback chain) surface as a
 //! `backend=` column in the report.
 
@@ -22,6 +23,9 @@ struct BackendGauge {
     requests: u64,
     samples: u64,
     batches: u64,
+    /// Admission rejects against this backend's bounded lane
+    /// (`Overloaded` sheds — the 429 count of the front-end).
+    rejected: u64,
     queue_depth: usize,
     hw_energy_j: f64,
     wall_latency: Summary,
@@ -116,6 +120,16 @@ impl Metrics {
         }
     }
 
+    /// Count one admission reject (full bounded lane) against a backend
+    /// — pairs with [`Metrics::record_rejected`], which tracks the
+    /// service-wide total.
+    pub fn record_backend_rejected(&self, idx: usize) {
+        let mut m = self.inner.lock().unwrap();
+        if let Some(b) = m.backends.get_mut(idx) {
+            b.rejected += 1;
+        }
+    }
+
     /// Refresh a backend lane's queue-depth gauge (queued samples).
     pub fn set_backend_queue(&self, idx: usize, depth: usize) {
         let mut m = self.inner.lock().unwrap();
@@ -150,6 +164,7 @@ impl Metrics {
                     requests: b.requests,
                     samples: b.samples,
                     batches: b.batches,
+                    rejected: b.rejected,
                     queue_depth: b.queue_depth,
                     hw_energy_j: b.hw_energy_j,
                     mean_latency_s: b.wall_latency.mean(),
@@ -189,6 +204,8 @@ pub struct BackendSnapshot {
     pub requests: u64,
     pub samples: u64,
     pub batches: u64,
+    /// Admission rejects against this backend's bounded lane.
+    pub rejected: u64,
     /// Samples queued in this backend's lane at the last refresh.
     pub queue_depth: usize,
     /// Accumulated modeled hardware energy (J) served by this backend.
@@ -200,9 +217,10 @@ impl BackendSnapshot {
     /// Compact `name[...]` column for the one-line report.
     pub fn summary(&self) -> String {
         format!(
-            "{}[q{} req{} smp{} bat{} lat{:.1}ms e{:.2e}J]",
+            "{}[q{} rej{} req{} smp{} bat{} lat{:.1}ms e{:.2e}J]",
             self.name,
             self.queue_depth,
+            self.rejected,
             self.requests,
             self.samples,
             self.batches,
@@ -301,18 +319,23 @@ mod tests {
         m.set_backend_queue(1, 40);
         // out-of-range indices are ignored, not panics (late worker after
         // a set_backends reset)
+        m.record_backend_rejected(0);
+        m.record_backend_rejected(0);
         m.record_backend_batch(9, 1, 1, 1.0, Duration::from_millis(1));
         m.set_backend_queue(9, 1);
+        m.record_backend_rejected(9);
         let s = m.snapshot();
         assert_eq!(s.backends.len(), 2);
         let a = &s.backends[0];
         assert_eq!((a.requests, a.samples, a.batches), (3, 48, 2));
+        assert_eq!(a.rejected, 2, "per-backend rejects accumulate");
+        assert_eq!(s.backends[1].rejected, 0);
         assert!((a.hw_energy_j - 4.5e-5).abs() < 1e-12);
         assert!((a.mean_latency_s - 0.003).abs() < 1e-9);
         assert_eq!(s.backends[1].queue_depth, 40);
         let r = s.report();
-        assert!(r.contains("backend=analog[q0 req3 smp48 bat2"), "{r}");
-        assert!(r.contains("rust[q40 req3 smp24 bat1"), "{r}");
+        assert!(r.contains("backend=analog[q0 rej2 req3 smp48 bat2"), "{r}");
+        assert!(r.contains("rust[q40 rej0 req3 smp24 bat1"), "{r}");
     }
 
     #[test]

@@ -8,14 +8,15 @@
 //! baseline side by side — so the serving layer is a **deployment
 //! router**, not a single-engine queue.
 //!
-//! Flow of one request (class → backend → lane):
+//! Flow of one request (submit → class → backend → lane → ticket):
 //!
 //! 1. [`request`] — the request names a solver; its
 //!    [`request::RequestClass`] (solver family × conditional) is the
 //!    routing unit.
 //! 2. [`deploy`] — the [`deploy::EngineRegistry`] maps that class to a
 //!    named backend (`analog` simulator / `rust` digital / `hlo` PJRT
-//!    artifacts), per the config-driven [`deploy::DeployPlan`]; a failed
+//!    artifacts), per the config-driven [`deploy::DeployPlan`] (routes,
+//!    per-backend workers / queue bounds / weight paths); a failed
 //!    `hlo` construction degrades its classes to `rust` at startup
 //!    (recorded in metrics) instead of failing the deployment.
 //! 3. [`batcher`] — each backend owns one lane of the
@@ -23,15 +24,26 @@
 //!    (condition, solver, decode) key up to the artifact batch size with a
 //!    linger timeout — the same size-or-deadline policy a vLLM-style
 //!    router uses, but per class, so a slow analog batch never
-//!    head-of-line-blocks digital traffic.
-//! 4. [`service`] — the [`service::Service`] facade: per-backend worker
-//!    allotments execute each lane's batches against that backend's
-//!    engine, plus the compute-vs-programming [`service::ModeGate`]
-//!    mirroring the PCB's SPDT mode switches.  Shutdown drains **every**
-//!    lane under the no-dropped-request invariant.
-//! 5. [`metrics`] — totals plus per-backend queue-depth / throughput /
-//!    hardware-energy gauges (`backend=` column) and any startup
-//!    degradations (`degraded=` column).
+//!    head-of-line-blocks digital traffic.  Lanes are **bounded**
+//!    (`[service] queue_depth`, per-backend `<backend>_queue`): a full
+//!    lane rejects at admission ([`batcher::SubmitOutcome::Overloaded`])
+//!    instead of hiding overload in an unbounded queue.
+//! 4. [`service`] — the [`service::Service`] facade.  Ingress is
+//!    nonblocking: `submit_nb` returns a response
+//!    [`Ticket`](crate::serve::Ticket) completed through per-lane maps
+//!    (see [`crate::serve`] — poll, deadline-wait, block, or waker); the
+//!    blocking `submit`/`generate` wrap the same path.  Per-backend
+//!    worker allotments execute each lane's batches against that
+//!    backend's engine, plus the compute-vs-programming
+//!    [`service::ModeGate`] mirroring the PCB's SPDT mode switches.
+//!    Shutdown drains **every** lane under the no-dropped-request
+//!    invariant and fails any leftover ticket (no stranded waiter).
+//! 5. [`metrics`] — totals plus per-backend queue-depth / reject /
+//!    throughput / hardware-energy gauges (`backend=` column) and any
+//!    startup degradations (`degraded=` column).
+//!
+//! The TCP edge over this core — wire protocol, connection handling,
+//! graceful drain — lives in [`crate::serve`].
 
 pub mod batcher;
 pub mod deploy;
@@ -64,9 +76,13 @@ pub(crate) mod testutil {
     }
 }
 
-pub use batcher::{Batch, Batcher, BatcherConfig, LaneSet};
+pub use batcher::{Batch, Batcher, BatcherConfig, LaneSet, SubmitOutcome};
 pub use deploy::{BackendKind, DeployPlan, EngineRegistry};
 pub use metrics::Metrics;
 pub use request::{GenRequest, GenResponse, RequestClass, SolverChoice,
                   SolverFamily, TaskKind};
 pub use service::{ModeGate, Service, ServiceConfig};
+
+// the structured admission error `submit_nb` returns (defined next to the
+// rest of the serving-edge taxonomy in `crate::serve`)
+pub use crate::serve::admission::SubmitError;

@@ -23,6 +23,18 @@ impl TaskKind {
     pub fn is_conditional(&self) -> bool {
         matches!(self, TaskKind::Letter(_))
     }
+
+    /// Parse the stable task names shared by the CLI and the wire
+    /// protocol (`circle`, or a letter class `h`/`k`/`u`).
+    pub fn from_name(s: &str) -> Option<TaskKind> {
+        match s {
+            "circle" => Some(TaskKind::Circle),
+            "h" | "H" => Some(TaskKind::Letter(0)),
+            "k" | "K" => Some(TaskKind::Letter(1)),
+            "u" | "U" => Some(TaskKind::Letter(2)),
+            _ => None,
+        }
+    }
 }
 
 /// Solver substrate family — the first routing axis of the deployment
@@ -97,6 +109,18 @@ pub enum SolverChoice {
 impl SolverChoice {
     pub fn is_analog(&self) -> bool {
         matches!(self, SolverChoice::AnalogOde | SolverChoice::AnalogSde)
+    }
+
+    /// Parse the stable solver names shared by the CLI and the wire
+    /// protocol; `steps` applies to the digital solvers only.
+    pub fn from_name(s: &str, steps: usize) -> Option<SolverChoice> {
+        match s {
+            "analog-ode" => Some(SolverChoice::AnalogOde),
+            "analog-sde" => Some(SolverChoice::AnalogSde),
+            "euler" => Some(SolverChoice::DigitalOde { steps }),
+            "euler-sde" => Some(SolverChoice::DigitalSde { steps }),
+            _ => None,
+        }
     }
 
     /// Substrate family this choice executes on (the routing axis).
@@ -257,6 +281,19 @@ mod tests {
         let uncond = GenRequest { task: TaskKind::Circle, ..cond.clone() };
         assert_ne!(cond.batch_key(), uncond.batch_key());
         assert_ne!(cond.class(), uncond.class());
+    }
+
+    #[test]
+    fn names_parse_for_cli_and_wire() {
+        assert_eq!(TaskKind::from_name("circle"), Some(TaskKind::Circle));
+        assert_eq!(TaskKind::from_name("H"), Some(TaskKind::Letter(0)));
+        assert_eq!(TaskKind::from_name("u"), Some(TaskKind::Letter(2)));
+        assert_eq!(TaskKind::from_name("z"), None);
+        assert_eq!(SolverChoice::from_name("analog-sde", 9),
+                   Some(SolverChoice::AnalogSde));
+        assert_eq!(SolverChoice::from_name("euler", 40),
+                   Some(SolverChoice::DigitalOde { steps: 40 }));
+        assert_eq!(SolverChoice::from_name("rk4", 40), None);
     }
 
     #[test]

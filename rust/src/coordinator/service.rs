@@ -12,9 +12,22 @@
 //! deployment (one engine serving every class) for tests and back-compat;
 //! [`Service::start_routed`] hosts a full multi-backend table.
 //!
+//! Ingress is **nonblocking**: [`Service::submit_nb`] routes by class,
+//! enqueues against the lane's *bounded* queue (per-lane backpressure —
+//! a full lane answers [`SubmitError::Overloaded`] without blocking the
+//! caller or touching other lanes), and returns a
+//! [`Ticket`](crate::serve::Ticket) whose result arrives through the
+//! per-lane [`TicketBoard`](crate::serve::TicketBoard) — poll it, wait
+//! with a deadline, block on it, or register a waker
+//! ([`Notify`](crate::serve::Notify)) to multiplex many tickets.  The
+//! blocking [`Service::submit`] / [`Service::generate`] are thin
+//! wrappers over the same path, so ticket payloads are bitwise-identical
+//! to the blocking ones by construction (`rust/tests/frontend_serve.rs`
+//! proves it end-to-end).
+//!
 //! Each emitted batch runs on one of its backend's workers against that
 //! backend's [`Engine`]; results are split back to the originating
-//! requests in FIFO order and delivered over per-request channels.  The
+//! requests in FIFO order and delivered through the ticket board.  The
 //! rust engines execute each batch through the batched lane
 //! (`sample_batched` / `solve_batched`), so a coalesced 64-sample batch is
 //! one sequence of B×dim GEMMs rather than 64 independent single-vector
@@ -26,14 +39,13 @@
 //! the compute side; reprogramming takes the exclusive side.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::anyhow;
 
-use super::batcher::{Batch, BatcherConfig, LaneSet};
+use super::batcher::{Batch, BatcherConfig, LaneSet, SubmitOutcome};
 use super::deploy::EngineRegistry;
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, SolverChoice, TaskKind};
@@ -45,6 +57,8 @@ use crate::diffusion::schedule::VpSchedule;
 use crate::energy::model::{AnalogCost, DigitalCost};
 use crate::nn::{AnalogScoreNet, DigitalScoreNet, ScoreNet};
 use crate::runtime::ArtifactStore;
+use crate::serve::admission::SubmitError;
+use crate::serve::ticket::{Ticket, TicketBoard};
 use crate::util::rng::Rng;
 use crate::vae::PixelDecoder;
 
@@ -305,14 +319,14 @@ impl Default for ServiceConfig {
     }
 }
 
-type ResponseTx = Sender<anyhow::Result<GenResponse>>;
-
 /// The running service: the deployment router facade.
 pub struct Service {
     /// One batcher lane per registry backend (index-aligned).
     lanes: LaneSet,
     registry: Arc<EngineRegistry>,
-    pending: Arc<Mutex<std::collections::HashMap<u64, ResponseTx>>>,
+    /// Per-lane pending-ticket maps — the completion side of
+    /// `submit_nb` (replaces the old global blocking response map).
+    tickets: Arc<TicketBoard>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
@@ -352,9 +366,21 @@ impl Service {
                         decoder: Option<Arc<PixelDecoder>>,
                         cfg: ServiceConfig) -> Self {
         let registry = Arc::new(registry);
-        let lanes = LaneSet::new(registry.n_backends(), &cfg.batcher);
-        let pending: Arc<Mutex<std::collections::HashMap<u64, ResponseTx>>> =
-            Arc::new(Mutex::new(std::collections::HashMap::new()));
+        // per-lane batching configs: a backend's explicit `<backend>_queue`
+        // bound overrides the service-wide depth for its own lane only
+        let lane_cfgs: Vec<BatcherConfig> = registry
+            .backends()
+            .iter()
+            .map(|b| {
+                let mut c = cfg.batcher.clone();
+                if b.queue_depth > 0 {
+                    c.queue_depth = b.queue_depth;
+                }
+                c
+            })
+            .collect();
+        let lanes = LaneSet::with_configs(lane_cfgs);
+        let tickets = Arc::new(TicketBoard::new(registry.n_backends()));
         let metrics = Arc::new(Metrics::new());
         metrics.set_backends(&registry.names());
         for (b, backend) in registry.backends().iter().enumerate() {
@@ -379,7 +405,7 @@ impl Service {
         for (b, &n_workers) in backend_workers.iter().enumerate() {
             for w in 0..n_workers {
                 let lane = Arc::clone(lanes.lane(b));
-                let pending = Arc::clone(&pending);
+                let tickets = Arc::clone(&tickets);
                 let registry = Arc::clone(&registry);
                 let decoder = decoder.clone();
                 let metrics = Arc::clone(&metrics);
@@ -423,20 +449,20 @@ impl Service {
                         // backends' groups are left untouched)
                         metrics.set_backend_banking(b, engine.bank_report());
                         metrics.set_pool(pool.stats());
-                        let mut pend = pending.lock().unwrap();
+                        // deliver through this lane's ticket map only —
+                        // completions on one backend never contend with
+                        // another backend's submit/complete traffic
                         match result {
                             Ok(responses) => {
                                 for resp in responses {
-                                    if let Some(tx) = pend.remove(&resp.id) {
-                                        let _ = tx.send(Ok(resp));
-                                    }
+                                    let id = resp.id;
+                                    tickets.complete(b, id, Ok(resp));
                                 }
                             }
                             Err(e) => {
                                 for req in &batch.requests {
-                                    if let Some(tx) = pend.remove(&req.id) {
-                                        let _ = tx.send(Err(anyhow!("{e}")));
-                                    }
+                                    tickets.complete(b, req.id,
+                                                     Err(anyhow!("{e}")));
                                 }
                             }
                         }
@@ -448,7 +474,7 @@ impl Service {
         Service {
             lanes,
             registry,
-            pending,
+            tickets,
             workers,
             next_id: AtomicU64::new(1),
             metrics,
@@ -508,60 +534,91 @@ impl Service {
         Ok(responses)
     }
 
-    /// Submit a request; returns a receiver for the response.  The
-    /// request's class ([`GenRequest::class`]) picks the backend lane; a
-    /// class the deployment doesn't route is rejected here, before any
-    /// queueing.
-    pub fn submit(&self, mut req: GenRequest)
-                  -> anyhow::Result<Receiver<anyhow::Result<GenResponse>>> {
+    /// Nonblocking submit: route by class, admit against the lane's
+    /// bounded queue, return a [`Ticket`] for the response.  **Never
+    /// blocks** — a full lane answers [`SubmitError::Overloaded`]
+    /// immediately (without touching any other lane), a draining lane
+    /// [`SubmitError::ShuttingDown`].
+    ///
+    /// Reject accounting is exactly-once and leak-free: on any error
+    /// path the request holds no queue slot and no pending ticket entry,
+    /// and the `rejected` counter (plus the backend's own reject gauge
+    /// for `Overloaded`) was incremented exactly once.
+    pub fn submit_nb(&self, mut req: GenRequest) -> Result<Ticket, SubmitError> {
         if req.n_samples == 0 {
-            return Err(anyhow!("n_samples must be > 0"));
+            self.metrics.record_rejected();
+            return Err(SubmitError::Invalid("n_samples must be > 0".into()));
         }
         let class = req.class();
         let Some(lane_idx) = self.registry.backend_index(class) else {
             self.metrics.record_rejected();
-            return Err(anyhow!(
-                "no backend routed for request class {class} \
-                 (deployment routes: {})",
-                self.registry.route_summary()
-            ));
+            return Err(SubmitError::Unroutable {
+                class,
+                routes: self.registry.route_summary(),
+            });
         };
         req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let id = req.id;
-        let (tx, rx) = channel();
-        self.pending.lock().unwrap().insert(id, tx);
-        if !self.lanes.submit(lane_idx, req) {
-            // the request never entered the queue: its response entry must
-            // go too, or shutdown would see a permanently-pending request
-            self.pending.lock().unwrap().remove(&id);
-            self.metrics.record_rejected();
-            return Err(anyhow!("service is shutting down"));
+        // register BEFORE enqueueing: the instant the lane accepts, a
+        // worker may complete the request
+        let ticket = self.tickets.register(lane_idx, id);
+        match self.lanes.submit(lane_idx, req) {
+            SubmitOutcome::Accepted { queued_samples } => {
+                self.metrics.set_backend_queue(lane_idx, queued_samples);
+                Ok(ticket)
+            }
+            SubmitOutcome::Overloaded { queued_samples, queue_depth } => {
+                // never entered the queue: retract the ticket entry or
+                // shutdown would see a permanently-pending request
+                self.tickets.retract(lane_idx, id);
+                self.metrics.record_rejected();
+                self.metrics.record_backend_rejected(lane_idx);
+                self.metrics.set_backend_queue(lane_idx, queued_samples);
+                Err(SubmitError::Overloaded {
+                    backend: self.registry.backend(lane_idx).name.clone(),
+                    queued_samples,
+                    queue_depth,
+                })
+            }
+            SubmitOutcome::Closed => {
+                self.tickets.retract(lane_idx, id);
+                self.metrics.record_rejected();
+                Err(SubmitError::ShuttingDown)
+            }
         }
-        Ok(rx)
+    }
+
+    /// Submit a request; returns the response [`Ticket`] (block on it
+    /// with [`Ticket::recv`]).  Same admission path as [`Self::submit_nb`]
+    /// — this wrapper only erases the structured error into `anyhow`
+    /// (downcast to [`SubmitError`] to branch on the reject kind).
+    pub fn submit(&self, req: GenRequest) -> anyhow::Result<Ticket> {
+        self.submit_nb(req).map_err(anyhow::Error::from)
     }
 
     /// Submit and block for the result.
     pub fn generate(&self, task: TaskKind, n_samples: usize,
                     solver: SolverChoice, guidance: f32, decode: bool)
                     -> anyhow::Result<GenResponse> {
-        let rx = self.submit(GenRequest {
+        self.submit(GenRequest {
             id: 0,
             task,
             n_samples,
             solver,
             guidance,
             decode,
-        })?;
-        rx.recv().map_err(|_| anyhow!("worker dropped"))?
+        })?
+        .recv()
     }
 
     /// Drain and stop.  Closing **every** per-backend lane wakes every
     /// blocked `next_batch` caller promptly (queued work still drains
     /// first, per lane), and once all workers across all backends have
-    /// joined, **no request may still hold a pending response entry** —
-    /// that would mean a submitted request was dropped without an answer,
-    /// on any lane.  Asserted in debug builds; release builds fail any
-    /// leftover loudly instead of hanging its caller forever.
+    /// joined, **no ticket may still be pending on the board** — that
+    /// would mean a submitted request was dropped without an answer, on
+    /// any lane.  Asserted in debug builds; release builds fail any
+    /// leftover ticket loudly instead of stranding its waiter forever
+    /// (blocked `recv`s and registered wakers all resolve).
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
@@ -571,19 +628,14 @@ impl Service {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        let leftovers: Vec<(u64, ResponseTx)> =
-            self.pending.lock().unwrap().drain().collect();
+        let leftovers = self.tickets.fail_all(|| {
+            anyhow!("service shut down before the request completed")
+        });
         if !std::thread::panicking() {
-            debug_assert!(
-                leftovers.is_empty(),
-                "shutdown dropped {} request(s) with pending response entries",
-                leftovers.len()
+            debug_assert_eq!(
+                leftovers, 0,
+                "shutdown dropped {leftovers} request(s) with pending tickets"
             );
-        }
-        for (_, tx) in leftovers {
-            let _ = tx.send(Err(anyhow!(
-                "service shut down before the request completed"
-            )));
         }
     }
 }
@@ -596,6 +648,8 @@ impl Drop for Service {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Mutex;
+
     use super::*;
     use crate::coordinator::testutil::TagEngine;
     use crate::diffusion::schedule::VpSchedule;
@@ -628,6 +682,7 @@ mod tests {
                 batcher: BatcherConfig {
                     max_batch_samples: 64,
                     linger: std::time::Duration::from_millis(1),
+                    ..BatcherConfig::default()
                 },
                 seed: 1,
                 intra_threads: 0,
@@ -665,7 +720,7 @@ mod tests {
             ));
         }
         for (i, rx) in rxs {
-            let r = rx.recv().unwrap().unwrap();
+            let r = rx.recv().unwrap();
             assert_eq!(r.samples.len(), 2 * i, "request {i}");
             // class payload consistent within the response
             let class = r.samples[1];
@@ -728,9 +783,143 @@ mod tests {
             decode: false,
         });
         assert!(r.is_err());
-        assert!(s.pending.lock().unwrap().is_empty(),
-                "rejected request must not leave a pending response entry");
+        assert_eq!(s.tickets.pending(), 0,
+                   "rejected request must not leave a pending ticket entry");
+        assert_eq!(s.metrics.snapshot().rejected, 1,
+                   "closed-lane reject counted exactly once, not double");
         // shutdown's no-dropped-request assertion must hold
+        s.shutdown();
+    }
+
+    /// Engine whose `generate` blocks on a shared gate — lets tests hold
+    /// a worker busy deterministically while they fill the lane queue.
+    struct GateEngine {
+        gate: Arc<Mutex<()>>,
+        entered: Arc<std::sync::atomic::AtomicUsize>,
+    }
+
+    impl Engine for GateEngine {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn n_classes(&self) -> usize {
+            3
+        }
+        fn generate(&self, _s: SolverChoice, _onehot: &[f32], _g: f32,
+                    n: usize, _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+            self.entered.fetch_add(1, Ordering::SeqCst);
+            let _hold = self.gate.lock().unwrap();
+            Ok(vec![0.0; n * 2])
+        }
+    }
+
+    fn circle_req(n: usize) -> GenRequest {
+        GenRequest {
+            id: 0,
+            task: TaskKind::Circle,
+            n_samples: n,
+            solver: SolverChoice::AnalogOde,
+            guidance: 0.0,
+            decode: false,
+        }
+    }
+
+    /// The backpressure-accounting regression (double-count/leak paths):
+    /// every overload reject must increment `rejected` + the backend
+    /// gauge exactly once and leave no pending ticket; accepted work
+    /// must still complete afterwards.
+    #[test]
+    fn overload_rejects_count_once_and_leak_nothing() {
+        let gate = Arc::new(Mutex::new(()));
+        let entered = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let engine = Arc::new(GateEngine {
+            gate: Arc::clone(&gate),
+            entered: Arc::clone(&entered),
+        });
+        let mut reg = EngineRegistry::new();
+        // bounded lane: 3 samples deep
+        reg.add_backend_cfg("gated", engine, 1, 3).unwrap();
+        for class in crate::coordinator::request::RequestClass::ALL {
+            reg.route_class(class, "gated").unwrap();
+        }
+        let s = Service::start_routed(reg, None, ServiceConfig {
+            workers: 1,
+            batcher: BatcherConfig {
+                max_batch_samples: 1, // one request per batch: no coalescing
+                linger: std::time::Duration::from_millis(0),
+                ..BatcherConfig::default()
+            },
+            seed: 1,
+            intra_threads: 1,
+        });
+
+        // hold the worker inside generate(), then fill the queue exactly
+        let hold = gate.lock().unwrap();
+        let first = s.submit_nb(circle_req(1)).unwrap();
+        while entered.load(Ordering::SeqCst) == 0 {
+            std::thread::yield_now();
+        }
+        // worker is busy; lane queue is empty again — fill its 3 slots
+        let queued: Vec<Ticket> =
+            (0..3).map(|_| s.submit_nb(circle_req(1)).unwrap()).collect();
+        // 4th queued sample exceeds the bound: Overloaded, exactly once
+        let err = s.submit_nb(circle_req(1)).unwrap_err();
+        match &err {
+            SubmitError::Overloaded { backend, queued_samples, queue_depth } => {
+                assert_eq!(backend, "gated");
+                assert_eq!((*queued_samples, *queue_depth), (3, 3));
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.rejected, 1, "service total counted exactly once");
+        assert_eq!(snap.backends[0].rejected, 1, "backend gauge counted once");
+        assert_eq!(snap.backends[0].queue_depth, 3, "queue gauge shows the fill");
+        assert_eq!(s.tickets.pending(), 4,
+                   "only the accepted requests hold tickets");
+        // a second overload increments again (once)
+        assert!(matches!(s.submit_nb(circle_req(1)),
+                         Err(SubmitError::Overloaded { .. })));
+        assert_eq!(s.metrics.snapshot().rejected, 2);
+
+        // release the worker: every accepted ticket completes
+        drop(hold);
+        assert!(first.recv().is_ok());
+        for t in queued {
+            assert!(t.recv_timeout(std::time::Duration::from_secs(30))
+                .expect("accepted ticket completes")
+                .is_ok());
+        }
+        assert_eq!(s.tickets.pending(), 0);
+        // shutdown's no-dropped-request assertion must hold after rejects
+        s.shutdown();
+    }
+
+    #[test]
+    fn submit_nb_ticket_polls_and_times_out() {
+        let s = svc(1);
+        let t = s.submit_nb(circle_req(4)).unwrap();
+        // recv with deadline resolves (Some) and yields the response
+        let r = t.recv_timeout(std::time::Duration::from_secs(30))
+            .expect("completes well within the deadline")
+            .unwrap();
+        assert_eq!(r.samples.len(), 8);
+        // spent ticket: try_recv None, recv errors instead of hanging
+        assert!(t.try_recv().is_none());
+        assert!(t.recv().is_err());
+        s.shutdown();
+    }
+
+    #[test]
+    fn shutting_down_submit_nb_is_structured() {
+        let s = svc(1);
+        s.lanes.close_all();
+        match s.submit_nb(circle_req(1)) {
+            Err(SubmitError::ShuttingDown) => {}
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+        assert_eq!(s.metrics.snapshot().rejected, 1);
+        assert_eq!(s.tickets.pending(), 0);
         s.shutdown();
     }
 
@@ -760,6 +949,7 @@ mod tests {
             batcher: BatcherConfig {
                 max_batch_samples: 64,
                 linger: std::time::Duration::from_millis(1),
+                ..BatcherConfig::default()
             },
             seed: 5,
             intra_threads: 0,
@@ -801,6 +991,7 @@ mod tests {
             batcher: BatcherConfig {
                 max_batch_samples: 64,
                 linger: std::time::Duration::from_millis(1),
+                ..BatcherConfig::default()
             },
             seed: 5,
             intra_threads: 0,
@@ -816,8 +1007,8 @@ mod tests {
                       SolverChoice::DigitalOde { steps: 2 }, 2.0, false)
             .unwrap_err();
         assert!(err.to_string().contains("no backend routed"), "{err}");
-        assert!(s.pending.lock().unwrap().is_empty(),
-                "unrouted request must not leave a pending entry");
+        assert_eq!(s.tickets.pending(), 0,
+                   "unrouted request must not leave a pending entry");
         assert_eq!(s.metrics.snapshot().rejected, 1);
         s.shutdown();
     }
@@ -853,8 +1044,9 @@ mod tests {
         s.shutdown();
         let mut answered = 0;
         for rx in rxs {
-            let resp = rx.recv().expect("worker delivered before joining");
-            assert!(resp.is_ok());
+            let resp = rx.recv();
+            assert!(resp.is_ok(), "worker delivered before joining: {:?}",
+                    resp.err());
             answered += 1;
         }
         assert_eq!(answered, 24, "every queued request got an answer");

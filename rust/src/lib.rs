@@ -25,6 +25,10 @@
 //!   evaluation stays bitwise equal to the serial oracle.
 //! * [`coordinator`] — generation service: request queue, dynamic batcher,
 //!   worker scheduler, metrics.
+//! * [`serve`] — async serving front-end over the coordinator:
+//!   nonblocking `submit_nb` ingress with response tickets, per-lane
+//!   bounded-queue backpressure, and a line-JSON TCP front-end
+//!   (`memdiff serve --listen`) with graceful drain.
 //! * [`energy`] — analog-vs-digital latency & energy models behind the
 //!   paper's Fig. 3f/3g/4g/4h comparisons.
 //! * [`util`] — self-contained substrates (PRNG, JSON, tensors, stats,
@@ -45,6 +49,7 @@ pub mod energy;
 pub mod exec;
 pub mod nn;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod vae;
 

@@ -2,7 +2,11 @@
 //!
 //! Subcommands:
 //!   generate      one-shot generation (task, solver, sample count)
-//!   serve         run the batching service over a scripted client load
+//!   serve         run the batching service over a scripted client load,
+//!                 or (with --listen) the TCP front-end speaking the
+//!                 line-JSON protocol of `memdiff::serve::protocol`
+//!   client        scripted load generator for a --listen server
+//!                 (mixed-class burst including deliberate overload)
 //!   characterize  device-level figures (Fig. 2): IV, levels, retention,
 //!                 moon-star pattern, error distributions
 //!   info          print artifact manifest + platform
@@ -33,9 +37,19 @@ fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
-            let val = args.get(i + 1).cloned().unwrap_or_else(|| "true".into());
+            // a `--key` followed by another `--flag` is a boolean flag,
+            // not a key swallowing the flag as its value
+            let val = match args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    i += 2;
+                    v.clone()
+                }
+                _ => {
+                    i += 1;
+                    "true".into()
+                }
+            };
             kv.insert(key.to_string(), val);
-            i += 2;
         } else {
             pos.push(args[i].clone());
             i += 1;
@@ -55,7 +69,12 @@ fn usage() -> ! {
          \x20 memdiff generate [--task circle|h|k|u] [--solver analog-ode|analog-sde|euler|euler-sde]\n\
          \x20                  [--n 500] [--steps 130] [--engine analog|rust|hlo] [--decode]\n\
          \x20 memdiff serve    [--requests 64] [--workers 4] [--threads N]\n\
-         \x20                  [--deploy analog=analog,digital=rust|hlo,rust_workers=N,...]\n\
+         \x20                  [--deploy analog=analog,digital=rust|hlo,rust_workers=N,\n\
+         \x20                   rust_queue=N,rust_weights=PATH,...]\n\
+         \x20                  [--listen 127.0.0.1:7979] [--queue-depth N] [--max-conns N]\n\
+         \x20                  [--substeps N] [--synthetic]\n\
+         \x20 memdiff client   --connect HOST:PORT [--requests N] [--burst N]\n\
+         \x20                  [--expect-overload] [--shutdown]\n\
          \x20 memdiff characterize\n\
          \x20 memdiff info\n\
          \x20 (global) [--config memdiff.toml] [--seed N]"
@@ -64,13 +83,7 @@ fn usage() -> ! {
 }
 
 fn task_of(s: &str) -> TaskKind {
-    match s {
-        "circle" => TaskKind::Circle,
-        "h" | "H" => TaskKind::Letter(0),
-        "k" | "K" => TaskKind::Letter(1),
-        "u" | "U" => TaskKind::Letter(2),
-        _ => usage(),
-    }
+    TaskKind::from_name(s).unwrap_or_else(|| usage())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -81,41 +94,61 @@ fn main() -> anyhow::Result<()> {
     match cmd {
         "generate" => cmd_generate(&kv, &cfg),
         "serve" => cmd_serve(&kv, &cfg),
+        "client" => cmd_client(&kv, &cfg),
         "characterize" => cmd_characterize(&kv, &cfg),
         "info" => cmd_info(),
         _ => usage(),
     }
 }
 
-fn load_weights(task: &TaskKind) -> anyhow::Result<ScoreWeights> {
+/// Score weights for an engine: the `[deploy] <backend>_weights` override
+/// when given, the synthetic fixture when requested (runs on a fresh
+/// checkout — CI smoke uses it), else the standard per-task artifact.
+fn load_weights(task: &TaskKind, path: Option<&str>, synthetic: bool)
+                -> anyhow::Result<ScoreWeights> {
+    if let Some(p) = path {
+        return ScoreWeights::load(p);
+    }
+    if synthetic {
+        return Ok(ScoreWeights::synthetic(2, 48, 3, 2024));
+    }
     let dir = Meta::artifacts_dir();
     let file = if task.is_conditional() { "weights_cond.json" } else { "weights_uncond.json" };
     ScoreWeights::load(dir.join(file))
 }
 
-fn build_engine(engine: &str, task: &TaskKind, cfg: &Config)
+fn build_engine(engine: &str, task: &TaskKind, cfg: &Config,
+                weights_path: Option<&str>, synthetic: bool)
                 -> anyhow::Result<Arc<dyn Engine>> {
-    let meta = Meta::load_default()?;
+    let sched = if synthetic {
+        Meta::load_default().map(|m| m.sched).unwrap_or_default()
+    } else {
+        Meta::load_default()?.sched
+    };
     // bank-parallel strategy from config; the pool itself is sized by the
     // Service at startup (workers vs. intra-op threads)
     let exec = memdiff::exec::Ctx::new(cfg.par);
     Ok(match engine {
         "analog" => {
-            let w = load_weights(task)?;
+            let w = load_weights(task, weights_path, synthetic)?;
             let net = AnalogScoreNet::from_conductances(
                 &w, CellParams::default(), NoiseModel::ReadFast)
                 .with_exec(exec);
-            Arc::new(AnalogEngine { net, sched: meta.sched, substeps: cfg.substeps })
+            Arc::new(AnalogEngine { net, sched, substeps: cfg.substeps })
         }
         "rust" => {
-            let w = load_weights(task)?;
+            let w = load_weights(task, weights_path, synthetic)?;
             Arc::new(RustDigitalEngine {
                 net: DigitalScoreNet::new(w).with_exec(exec),
-                sched: meta.sched,
+                sched,
             })
         }
         "hlo" => {
-            let store = ArtifactStore::open_default()?;
+            // a weights override names an artifacts directory here
+            let store = match weights_path {
+                Some(dir) => ArtifactStore::open(dir)?,
+                None => ArtifactStore::open_default()?,
+            };
             let n_classes = store.meta().n_classes;
             Arc::new(HloEngine { store, n_classes })
         }
@@ -138,7 +171,8 @@ fn cmd_generate(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()
         if solver.is_analog() { "analog" } else { "hlo" });
     let decode = kv.contains_key("decode");
 
-    let engine = build_engine(engine_name, &task, cfg)?;
+    let engine = build_engine(engine_name, &task, cfg, None,
+                              kv.contains_key("synthetic"))?;
     let decoder = if decode {
         Some(Arc::new(PixelDecoder::new(DecoderWeights::load(
             Meta::artifacts_dir().join("vae_decoder.json"))?)))
@@ -150,6 +184,7 @@ fn cmd_generate(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()
         batcher: BatcherConfig {
             max_batch_samples: cfg.max_batch,
             linger: std::time::Duration::from_millis(cfg.linger_ms),
+            queue_depth: cfg.queue_depth,
         },
         seed: opt(kv, "seed", cfg.seed),
         intra_threads: opt(kv, "threads", cfg.threads),
@@ -199,75 +234,257 @@ fn cmd_generate(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()
 }
 
 fn cmd_serve(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> {
-    let n_requests: usize = opt(kv, "requests", 64);
-    let workers: usize = opt(kv, "workers", cfg.workers);
-
     // deployment table: [deploy] config section, then --deploy overrides
     let mut plan = cfg.deploy.clone();
     if let Some(spec) = kv.get("deploy") {
         plan.apply_overrides(spec)?;
     }
-    let decoder = Arc::new(PixelDecoder::new(DecoderWeights::load(
-        Meta::artifacts_dir().join("vae_decoder.json"))?));
+    let workers: usize = opt(kv, "workers", cfg.workers);
+    let synthetic = kv.contains_key("synthetic");
+    let mut cfg = cfg.clone();
+    cfg.queue_depth = opt(kv, "queue-depth", cfg.queue_depth);
+    cfg.substeps = opt(kv, "substeps", cfg.substeps);
+    let svc_cfg = ServiceConfig {
+        workers,
+        batcher: BatcherConfig {
+            max_batch_samples: cfg.max_batch,
+            linger: std::time::Duration::from_millis(cfg.linger_ms),
+            queue_depth: cfg.queue_depth,
+        },
+        seed: cfg.seed,
+        intra_threads: opt(kv, "threads", cfg.threads),
+    };
+    let decoder = DecoderWeights::load(
+        Meta::artifacts_dir().join("vae_decoder.json"))
+        .ok()
+        .map(|w| Arc::new(PixelDecoder::new(w)));
+    if decoder.is_none() && !synthetic {
+        anyhow::bail!("vae_decoder.json not found (build artifacts or pass --synthetic)");
+    }
+    let have_decoder = decoder.is_some();
     // one engine per backend the plan names; the conditional weights serve
     // both classes of a family (zero one-hot = unconditional)
-    let service = Arc::new(deploy::start_deployed(
-        &plan,
-        &mut |kind: BackendKind| build_engine(kind.name(), &TaskKind::Letter(0), cfg),
-        Some(decoder),
-        ServiceConfig {
-            workers,
-            batcher: BatcherConfig {
-                max_batch_samples: cfg.max_batch,
-                linger: std::time::Duration::from_millis(cfg.linger_ms),
-            },
-            seed: cfg.seed,
-            intra_threads: opt(kv, "threads", cfg.threads),
-        },
-    )?);
+    let mut factory = |kind: BackendKind, weights: Option<&str>| {
+        build_engine(kind.name(), &TaskKind::Letter(0), &cfg, weights, synthetic)
+    };
+    let service =
+        deploy::start_deployed(&plan, &mut factory, decoder, svc_cfg)?;
 
+    if let Some(addr) = kv.get("listen") {
+        return serve_listen(service, addr, kv);
+    }
+
+    let service = Arc::new(service);
+    let n_requests: usize = opt(kv, "requests", 64);
     println!("serve: {n_requests} mixed requests over {workers} workers/backend");
     println!("deployment: {}", service.registry().route_summary());
     let mut rng = Rng::new(cfg.seed);
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n_requests)
-        .map(|i| {
-            // mixed-class load: analog and digital families side by side,
-            // conditional and unconditional
-            let solver = match i % 4 {
-                0 => SolverChoice::AnalogOde,
-                1 => SolverChoice::DigitalOde { steps: 100 },
-                _ => SolverChoice::DigitalSde { steps: 100 },
-            };
-            let task = if i % 3 == 0 {
-                TaskKind::Circle
-            } else {
-                TaskKind::Letter(rng.below(3))
-            };
-            let n = 1 + rng.below(16);
-            service
-                .submit(memdiff::coordinator::GenRequest {
-                    id: 0,
-                    task,
-                    n_samples: n,
-                    solver,
-                    guidance: cfg.guidance,
-                    decode: task.is_conditional() && rng.uniform() < 0.25,
-                })
-                .unwrap()
-        })
-        .collect();
+    let mut shed = 0usize;
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        // mixed-class load: analog and digital families side by side,
+        // conditional and unconditional
+        let solver = match i % 4 {
+            0 => SolverChoice::AnalogOde,
+            1 => SolverChoice::DigitalOde { steps: 100 },
+            _ => SolverChoice::DigitalSde { steps: 100 },
+        };
+        let task = if i % 3 == 0 {
+            TaskKind::Circle
+        } else {
+            TaskKind::Letter(rng.below(3))
+        };
+        let n = 1 + rng.below(16);
+        match service.submit(memdiff::coordinator::GenRequest {
+            id: 0,
+            task,
+            n_samples: n,
+            solver,
+            guidance: cfg.guidance,
+            decode: have_decoder && task.is_conditional() && rng.uniform() < 0.25,
+        }) {
+            Ok(ticket) => rxs.push(ticket),
+            // bounded lanes shed under the unpaced burst: that IS the
+            // backpressure feature — count it instead of crashing
+            Err(e) => match e.downcast_ref::<memdiff::serve::SubmitError>() {
+                Some(memdiff::serve::SubmitError::Overloaded { .. }) => shed += 1,
+                _ => return Err(e),
+            },
+        }
+    }
     let mut total_samples = 0usize;
     for rx in rxs {
-        let resp = rx.recv()??;
+        let resp = rx.recv()?;
         total_samples += resp.samples.len() / 2;
     }
     let wall = t0.elapsed();
     println!(
-        "served {total_samples} samples in {wall:?} ({:.0} samples/s)",
+        "served {total_samples} samples in {wall:?} ({:.0} samples/s), \
+         {shed} requests shed by backpressure",
         total_samples as f64 / wall.as_secs_f64()
     );
     println!("metrics: {}", service.metrics.snapshot().report());
+    Ok(())
+}
+
+/// `memdiff serve --listen ADDR`: run the TCP front-end until a client
+/// sends `{"op":"shutdown"}` (or `--for-ms` elapses), then drain
+/// gracefully — in-flight tickets complete, new connections get a
+/// shutting-down response.
+fn serve_listen(service: memdiff::coordinator::Service, addr: &str,
+                kv: &HashMap<String, String>) -> anyhow::Result<()> {
+    use memdiff::serve::{FrontEnd, FrontEndConfig};
+    let route_summary = service.registry().route_summary();
+    let front = FrontEnd::bind(service, addr, FrontEndConfig {
+        max_conns: opt(kv, "max-conns", 64),
+        ..FrontEndConfig::default()
+    })?;
+    let metrics = front.metrics();
+    println!("listening on {}", front.local_addr());
+    println!("deployment: {route_summary}");
+    let for_ms: u64 = opt(kv, "for-ms", 0);
+    if for_ms > 0 {
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_millis(for_ms);
+        while !front.drain_requested() && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    } else {
+        front.wait_drain();
+    }
+    println!("draining...");
+    front.shutdown();
+    println!("metrics: {}", metrics.snapshot().report());
+    Ok(())
+}
+
+/// `memdiff client --connect ADDR`: scripted load for a `--listen`
+/// server — a paced sustained phase (every request answered `ok`), then
+/// an unpaced mixed-class burst that deliberately overruns the server's
+/// bounded lanes (expect `overloaded` sheds), then optionally the
+/// shutdown control line.  Exits nonzero on any protocol violation, so
+/// CI can smoke-test the front-end with it.
+fn cmd_client(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> {
+    use memdiff::serve::protocol::{self, Status};
+    use std::collections::HashMap as Map;
+    use std::io::{BufRead, BufReader, Write};
+
+    let addr = kv.get("connect").map(|s| s.as_str()).unwrap_or_else(|| usage());
+    let n_sustained: usize = opt(kv, "requests", 32);
+    let n_burst: usize = opt(kv, "burst", 32);
+    let expect_overload = kv.contains_key("expect-overload");
+    let do_shutdown = kv.contains_key("shutdown");
+
+    use memdiff::serve::protocol::read_reply;
+
+    let stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    let mix = |i: usize, rng: &mut Rng| {
+        let solver = match i % 4 {
+            0 => SolverChoice::AnalogOde,
+            1 => SolverChoice::AnalogSde,
+            2 => SolverChoice::DigitalOde { steps: 100 },
+            _ => SolverChoice::DigitalSde { steps: 100 },
+        };
+        let task = if i % 3 == 0 {
+            TaskKind::Circle
+        } else {
+            TaskKind::Letter(rng.below(3))
+        };
+        (task, solver)
+    };
+    let mut rng = Rng::new(cfg.seed ^ 0xC11E);
+
+    // sustained phase: paced (read each reply before the next request),
+    // so the bounded queues never overflow and every answer must be ok
+    let mut lat = memdiff::util::stats::Summary::new();
+    let mut sustained_samples = 0usize;
+    let t0 = std::time::Instant::now();
+    for i in 0..n_sustained {
+        let (task, solver) = mix(i, &mut rng);
+        let n = 1 + rng.below(4);
+        let line = protocol::request_line(i as u64, task, n, solver,
+                                          cfg.guidance, false);
+        let t = std::time::Instant::now();
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        let reply = read_reply(&mut reader)?;
+        lat.record(t.elapsed().as_secs_f64());
+        anyhow::ensure!(reply.id == i as u64,
+                        "paced reply id {} != {i}", reply.id);
+        anyhow::ensure!(reply.status == Status::Ok,
+                        "paced request {i} got {:?} ({:?})",
+                        reply.status, reply.error);
+        anyhow::ensure!(reply.samples.len() == n * reply.dim,
+                        "request {i}: {} samples for n={n} dim={}",
+                        reply.samples.len(), reply.dim);
+        sustained_samples += n;
+    }
+    let sustained_wall = t0.elapsed();
+    println!(
+        "sustained: {n_sustained} requests / {sustained_samples} samples in \
+         {sustained_wall:?} (p50 {:.1} ms, p99 {:.1} ms)",
+        1e3 * lat.p50(), 1e3 * lat.p99(),
+    );
+
+    // burst phase: unpaced — fire everything, then collect; bounded
+    // lanes shed the overflow as `overloaded`
+    let mut expected: Map<u64, usize> = Map::new();
+    for i in 0..n_burst {
+        let id = (1000 + i) as u64;
+        let (task, solver) = mix(i, &mut rng);
+        let n = 2 + rng.below(4);
+        let line = protocol::request_line(id, task, n, solver,
+                                          cfg.guidance, false);
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        expected.insert(id, n);
+    }
+    let mut n_ok = 0usize;
+    let mut n_overloaded = 0usize;
+    for _ in 0..n_burst {
+        let reply = read_reply(&mut reader)?;
+        let n = expected.remove(&reply.id).ok_or_else(|| {
+            anyhow::anyhow!("burst reply for unknown/duplicate id {}", reply.id)
+        })?;
+        match reply.status {
+            Status::Ok => {
+                anyhow::ensure!(reply.samples.len() == n * reply.dim);
+                n_ok += 1;
+            }
+            Status::Overloaded => {
+                anyhow::ensure!(reply.queue_depth.unwrap_or(0) > 0,
+                                "overloaded reply must carry the bound");
+                n_overloaded += 1;
+            }
+            other => anyhow::bail!("burst got {other:?} ({:?})", reply.error),
+        }
+    }
+    anyhow::ensure!(expected.is_empty(), "every burst request answered");
+    println!("burst: {n_burst} requests -> {n_ok} ok, {n_overloaded} shed \
+              ({:.0}% reject rate)",
+             100.0 * n_overloaded as f64 / n_burst.max(1) as f64);
+    if expect_overload {
+        anyhow::ensure!(n_overloaded > 0,
+                        "--expect-overload: the burst should have overrun \
+                         the bounded lanes but nothing was shed");
+    }
+
+    if do_shutdown {
+        writer.write_all(protocol::shutdown_line().as_bytes())?;
+        writer.write_all(b"\n")?;
+        let ack = read_reply(&mut reader)?;
+        anyhow::ensure!(ack.status == Status::Ok, "shutdown ack");
+        // server drains and closes the connection
+        let mut rest = String::new();
+        let _ = reader.read_line(&mut rest);
+        println!("server acknowledged shutdown; draining");
+    }
     Ok(())
 }
 

@@ -1,0 +1,156 @@
+//! Admission control: the structured reject taxonomy of the nonblocking
+//! submit path, and the connection cap of the TCP edge.
+//!
+//! Backpressure has two gates.  At the **lane** gate, `Service::submit_nb`
+//! checks the routed lane's bounded queue and answers with a
+//! [`SubmitError`] instead of blocking — `Overloaded` is the 429-style
+//! shed signal (one slow backend rejects while the others keep serving),
+//! `ShuttingDown` the drain signal.  At the **edge** gate, the acceptor
+//! holds a [`ConnGate`]: at most `max` concurrent connection handlers;
+//! connection number `max + 1` is answered and closed instead of admitted,
+//! so a connection flood cannot exhaust handler threads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::request::RequestClass;
+
+/// Why `Service::submit_nb` refused a request **at admission** — the
+/// request never entered a lane queue, no ticket remains registered, and
+/// the `rejected` counter (plus the per-backend gauge for `Overloaded`)
+/// was incremented exactly once.
+#[derive(Debug, thiserror::Error)]
+pub enum SubmitError {
+    /// The routed lane's bounded queue is full: shed load now rather
+    /// than hide the overload in an unbounded queue.
+    #[error("backend {backend:?} overloaded: {queued_samples} samples queued \
+             (queue_depth {queue_depth})")]
+    Overloaded {
+        /// Name of the backend whose lane is full.
+        backend: String,
+        /// Samples queued in that lane at the reject.
+        queued_samples: usize,
+        /// The lane's configured bound (samples).
+        queue_depth: usize,
+    },
+    /// The service is draining; lanes accept no new work.
+    #[error("service is shutting down")]
+    ShuttingDown,
+    /// No backend is routed for the request's class.
+    #[error("no backend routed for request class {class} \
+             (deployment routes: {routes})")]
+    Unroutable { class: RequestClass, routes: String },
+    /// The request is malformed (e.g. zero samples).
+    #[error("invalid request: {0}")]
+    Invalid(String),
+}
+
+/// Concurrent-connection cap for the TCP acceptor.  `try_acquire` hands
+/// out at most `max` live [`ConnPermit`]s; a permit releases its slot on
+/// drop, so a handler thread cannot leak capacity on any exit path.
+pub struct ConnGate {
+    max: usize,
+    active: Arc<AtomicUsize>,
+}
+
+impl ConnGate {
+    pub fn new(max: usize) -> Self {
+        ConnGate { max: max.max(1), active: Arc::new(AtomicUsize::new(0)) }
+    }
+
+    /// Claim a handler slot, or `None` when the edge is at capacity.
+    pub fn try_acquire(&self) -> Option<ConnPermit> {
+        let mut cur = self.active.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max {
+                return None;
+            }
+            match self.active.compare_exchange_weak(
+                cur, cur + 1, Ordering::AcqRel, Ordering::Relaxed) {
+                Ok(_) => {
+                    return Some(ConnPermit { active: Arc::clone(&self.active) })
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Live handler count (gauge).
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> usize {
+        self.max
+    }
+}
+
+/// RAII handler slot from a [`ConnGate`].
+pub struct ConnPermit {
+    active: Arc<AtomicUsize>,
+}
+
+impl Drop for ConnPermit {
+    fn drop(&mut self) {
+        self.active.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_caps_and_releases() {
+        let gate = ConnGate::new(2);
+        let a = gate.try_acquire().unwrap();
+        let b = gate.try_acquire().unwrap();
+        assert!(gate.try_acquire().is_none(), "at capacity");
+        assert_eq!(gate.active(), 2);
+        drop(a);
+        let c = gate.try_acquire().expect("slot freed on drop");
+        assert!(gate.try_acquire().is_none());
+        drop(b);
+        drop(c);
+        assert_eq!(gate.active(), 0);
+    }
+
+    #[test]
+    fn gate_is_thread_safe_under_contention() {
+        let gate = Arc::new(ConnGate::new(4));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let gate = Arc::clone(&gate);
+                let peak = Arc::clone(&peak);
+                std::thread::spawn(move || {
+                    let mut admitted = 0usize;
+                    for _ in 0..200 {
+                        if let Some(p) = gate.try_acquire() {
+                            peak.fetch_max(gate.active(), Ordering::Relaxed);
+                            admitted += 1;
+                            drop(p);
+                        }
+                    }
+                    admitted
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total > 0);
+        assert!(peak.load(Ordering::Relaxed) <= 4, "cap never exceeded");
+        assert_eq!(gate.active(), 0, "every permit released");
+    }
+
+    #[test]
+    fn submit_error_messages() {
+        let e = SubmitError::Overloaded {
+            backend: "analog".into(),
+            queued_samples: 128,
+            queue_depth: 128,
+        };
+        let s = e.to_string();
+        assert!(s.contains("overloaded") && s.contains("128"), "{s}");
+        assert!(SubmitError::ShuttingDown.to_string().contains("shutting down"));
+    }
+}

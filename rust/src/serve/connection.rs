@@ -1,0 +1,384 @@
+//! TCP front-end: acceptor + capped connection handlers over the
+//! nonblocking core.
+//!
+//! The [`FrontEnd`] binds a listener and runs one **acceptor** thread
+//! plus at most `max_conns` **connection handler** threads (the
+//! [`ConnGate`] edge cap — an over-cap connection is answered with an
+//! `overloaded` line and closed, never queued).  A handler speaks the
+//! line-delimited JSON protocol of [`super::protocol`] and drives *only*
+//! the nonblocking core: every parsed request goes through
+//! `Service::submit_nb`, the returned [`Ticket`]s are registered on one
+//! shared [`Notify`] waker, and the handler multiplexes socket reads
+//! (bounded by a poll quantum) with ticket completions — it never blocks
+//! on a single response, so one slow request cannot stall the
+//! connection's other in-flight work.  Responses are written as tickets
+//! complete, correlated by the client-chosen `id`.
+//!
+//! ## Graceful drain
+//!
+//! [`FrontEnd::request_drain`] (or a client's `{"op":"shutdown"}`
+//! control line) flips the drain flag: the acceptor answers **new**
+//! connections with a `shutting_down` line, handlers reject **new**
+//! requests the same way while still delivering their in-flight
+//! tickets, and once a handler's in-flight set is empty it closes its
+//! connection.  [`FrontEnd::shutdown`] performs the full sequence —
+//! drain, join every handler, stop the acceptor, then drain the
+//! [`Service`] itself (`Service::shutdown` closes every lane under the
+//! no-dropped-request invariant) — so every admitted request is
+//! answered before the process exits.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::coordinator::Service;
+use crate::serve::admission::ConnGate;
+use crate::serve::protocol::{self, Status, WireMsg};
+use crate::serve::ticket::{Notify, Ticket};
+
+/// Front-end tuning.
+#[derive(Debug, Clone)]
+pub struct FrontEndConfig {
+    /// Concurrent connection-handler cap (the edge admission gate).
+    pub max_conns: usize,
+    /// Poll quantum: socket read timeout between ticket-completion
+    /// sweeps.  Bounds the latency of noticing a completed ticket or the
+    /// drain flag while blocked on an idle socket.
+    pub poll: Duration,
+    /// How long a closing connection waits for its in-flight tickets.
+    pub drain_grace: Duration,
+    /// Socket write timeout.  A client that stops *reading* its socket
+    /// would otherwise wedge its handler thread forever inside a
+    /// blocking `write_all` once the kernel send buffer fills — and a
+    /// wedged handler would hang `FrontEnd::shutdown`'s join.  On
+    /// timeout the connection is dropped (its tickets still resolve
+    /// server-side).
+    pub write_timeout: Duration,
+}
+
+impl Default for FrontEndConfig {
+    fn default() -> Self {
+        FrontEndConfig {
+            max_conns: 64,
+            poll: Duration::from_millis(5),
+            drain_grace: Duration::from_secs(120),
+            write_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Accumulated-request-line cap: a peer that never sends a newline must
+/// not grow the buffer unboundedly.
+const MAX_LINE_BYTES: usize = 1 << 20;
+/// Acceptor wakeup period while the (nonblocking) listener is idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+struct Shared {
+    service: Arc<Service>,
+    cfg: FrontEndConfig,
+    /// Soft stop: reject new work, finish in-flight.
+    draining: AtomicBool,
+    /// Hard stop: acceptor exits.
+    stopped: AtomicBool,
+    drain_notify: Notify,
+    gate: ConnGate,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Shared {
+    fn draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+}
+
+/// The running TCP front-end (owns the [`Service`]).
+pub struct FrontEnd {
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl FrontEnd {
+    /// Bind `addr` (e.g. `127.0.0.1:7979`, port 0 for ephemeral) and
+    /// start accepting.  Takes ownership of the service; grab an
+    /// `Arc<Metrics>` clone first if you need gauges after shutdown.
+    pub fn bind(service: Service, addr: &str, cfg: FrontEndConfig)
+                -> anyhow::Result<FrontEnd> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding front-end listener on {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the listener nonblocking")?;
+        let addr = listener.local_addr()?;
+        let max_conns = cfg.max_conns;
+        let shared = Arc::new(Shared {
+            service: Arc::new(service),
+            cfg,
+            draining: AtomicBool::new(false),
+            stopped: AtomicBool::new(false),
+            drain_notify: Notify::new(),
+            gate: ConnGate::new(max_conns),
+            conns: Mutex::new(Vec::new()),
+        });
+        let sh = Arc::clone(&shared);
+        let acceptor = std::thread::spawn(move || accept_loop(listener, sh));
+        Ok(FrontEnd { shared, acceptor: Some(acceptor), addr })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The service metrics sink (usable after [`Self::shutdown`] too —
+    /// it is an `Arc`).
+    pub fn metrics(&self) -> Arc<crate::coordinator::Metrics> {
+        Arc::clone(&self.shared.service.metrics)
+    }
+
+    /// Live connection-handler count.
+    pub fn active_conns(&self) -> usize {
+        self.shared.gate.active()
+    }
+
+    /// Begin the graceful drain (idempotent, returns immediately): new
+    /// connections and new requests get `shutting_down`, in-flight
+    /// tickets still complete.
+    pub fn request_drain(&self) {
+        self.shared.draining.store(true, Ordering::Release);
+        self.shared.drain_notify.notify();
+    }
+
+    pub fn drain_requested(&self) -> bool {
+        self.shared.draining()
+    }
+
+    /// Block until a drain is requested (by [`Self::request_drain`] or a
+    /// client's `{"op":"shutdown"}` line).
+    pub fn wait_drain(&self) {
+        while !self.shared.draining() {
+            self.shared.drain_notify.wait_timeout(Duration::from_millis(250));
+        }
+    }
+
+    /// Full graceful shutdown: drain, join every handler, stop the
+    /// acceptor, then drain the service's lanes (in-flight tickets
+    /// complete; nothing admitted is dropped).  Synchronous: when this
+    /// returns, every worker has joined — the final `Arc<Service>` clone
+    /// dies here and `Service`'s own drop guard runs the lane drain
+    /// under the no-dropped-request assertion.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.request_drain();
+        // stop and join the ACCEPTOR first: once it is gone, nothing can
+        // spawn or push another handler, so draining `conns` below races
+        // with no one (a handler accepted just before the drain flag is
+        // in the vec by the time the acceptor exits its loop iteration)
+        self.shared.stopped.store(true, Ordering::Release);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let conns: Vec<JoinHandle<()>> =
+            self.shared.conns.lock().unwrap().drain(..).collect();
+        for c in conns {
+            let _ = c.join();
+        }
+        // every handler/acceptor Arc clone is gone; dropping self (the
+        // last clone) now drains the Service via its Drop guard
+    }
+}
+
+impl Drop for FrontEnd {
+    fn drop(&mut self) {
+        if self.acceptor.is_some() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
+    loop {
+        if sh.stopped.load(Ordering::Acquire) {
+            break;
+        }
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                // one-shot rejects below must never wedge the acceptor on
+                // a peer that doesn't read
+                let _ = stream.set_write_timeout(Some(sh.cfg.write_timeout));
+                if sh.draining() {
+                    // new connections during drain get one shutting-down
+                    // line and are closed
+                    let _ = write_line(
+                        &mut stream,
+                        &protocol::status_line(0, Status::ShuttingDown,
+                                               "server draining"),
+                    );
+                    continue;
+                }
+                match sh.gate.try_acquire() {
+                    Some(permit) => {
+                        let sh2 = Arc::clone(&sh);
+                        let h = std::thread::spawn(move || {
+                            let _permit = permit;
+                            handle_conn(stream, sh2);
+                        });
+                        let mut conns = sh.conns.lock().unwrap();
+                        // reap finished handlers so a long-lived server
+                        // doesn't accumulate one JoinHandle per past
+                        // connection (detaching a finished thread is free)
+                        conns.retain(|c| !c.is_finished());
+                        conns.push(h);
+                    }
+                    None => {
+                        let _ = write_line(
+                            &mut stream,
+                            &protocol::status_line(
+                                0, Status::Overloaded,
+                                "connection limit reached"),
+                        );
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// One in-flight request on a connection: client id, requested sample
+/// count, the service ticket.
+type InFlight = (u64, usize, Ticket);
+
+fn handle_conn(mut stream: TcpStream, sh: Arc<Shared>) {
+    let _ = stream.set_read_timeout(Some(sh.cfg.poll));
+    let _ = stream.set_write_timeout(Some(sh.cfg.write_timeout));
+    let _ = stream.set_nodelay(true);
+    let notify = Notify::new();
+    let mut inflight: Vec<InFlight> = Vec::new();
+    let mut acc: Vec<u8> = Vec::new();
+    let mut buf = [0u8; 8192];
+    let mut open = true;
+
+    while open {
+        if flush_completed(&mut inflight, &mut stream).is_err() {
+            return; // peer gone: tickets resolve server-side regardless
+        }
+        if sh.draining() && inflight.is_empty() {
+            return; // drained: close the connection
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => open = false,
+            Ok(n) => {
+                acc.extend_from_slice(&buf[..n]);
+                if acc.len() > MAX_LINE_BYTES {
+                    let _ = write_line(&mut stream, &protocol::status_line(
+                        0, Status::Error, "request line too long"));
+                    return;
+                }
+                if process_buffered(&mut acc, &sh, &notify, &mut inflight,
+                                    &mut stream).is_err() {
+                    return;
+                }
+            }
+            Err(e) if matches!(e.kind(),
+                               ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                // poll tick: loop back to the completion sweep
+            }
+            Err(_) => open = false,
+        }
+    }
+
+    // EOF (or read error): the peer sends nothing more, but its admitted
+    // requests still deserve answers — wait out the in-flight set
+    let deadline = Instant::now() + sh.cfg.drain_grace;
+    while !inflight.is_empty() && Instant::now() < deadline {
+        if flush_completed(&mut inflight, &mut stream).is_err() {
+            return;
+        }
+        if !inflight.is_empty() {
+            notify.wait_timeout(sh.cfg.poll.max(Duration::from_millis(1)));
+        }
+    }
+}
+
+/// Split complete lines off `acc` and process each.  Err = the socket
+/// write failed (connection dead).
+fn process_buffered(acc: &mut Vec<u8>, sh: &Shared, notify: &Notify,
+                    inflight: &mut Vec<InFlight>, stream: &mut TcpStream)
+                    -> std::io::Result<()> {
+    while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
+        let raw: Vec<u8> = acc.drain(..=pos).collect();
+        let line = String::from_utf8_lossy(&raw[..raw.len() - 1]);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match protocol::parse_line(line) {
+            Err(e) => {
+                write_line(stream,
+                           &protocol::status_line(e.id, Status::Error, &e.msg))?;
+            }
+            Ok(WireMsg::Shutdown) => {
+                write_line(stream, &protocol::shutdown_ack_line())?;
+                sh.draining.store(true, Ordering::Release);
+                sh.drain_notify.notify();
+            }
+            Ok(WireMsg::Request { client_id, req }) => {
+                if sh.draining() {
+                    write_line(stream, &protocol::status_line(
+                        client_id, Status::ShuttingDown, "server draining"))?;
+                    continue;
+                }
+                let n = req.n_samples;
+                match sh.service.submit_nb(req) {
+                    Ok(ticket) => {
+                        ticket.set_notify(notify);
+                        inflight.push((client_id, n, ticket));
+                    }
+                    Err(e) => {
+                        write_line(stream, &protocol::reject_line(client_id, &e))?;
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Write response lines for every completed in-flight ticket (order of
+/// completion, not submission — responses are id-correlated).
+fn flush_completed(inflight: &mut Vec<InFlight>, stream: &mut TcpStream)
+                   -> std::io::Result<()> {
+    let mut i = 0;
+    while i < inflight.len() {
+        match inflight[i].2.try_recv() {
+            Some(result) => {
+                let (client_id, n, _) = inflight.remove(i);
+                let line = match result {
+                    Ok(resp) => protocol::ok_line(client_id, n, &resp),
+                    Err(e) => protocol::status_line(
+                        client_id, Status::Error, &format!("{e:#}")),
+                };
+                write_line(stream, &line)?;
+            }
+            None => i += 1,
+        }
+    }
+    Ok(())
+}
+
+fn write_line(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")
+}

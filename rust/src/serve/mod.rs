@@ -1,0 +1,65 @@
+//! Async serving front-end: nonblocking ingress, response tickets, and
+//! per-lane backpressure over the routed [`Service`](crate::coordinator::Service).
+//!
+//! The coordinator turns the paper's solvers into a routed service; this
+//! module turns that service into a **deployable server**.  It is
+//! std-only (no tokio/epoll): blocking threads at the edge, a
+//! nonblocking core in the middle.
+//!
+//! ## The flow of one request
+//!
+//! ```text
+//!            TCP line (JSON)             class route        bounded lane
+//! client ──▶ connection handler ──▶ Service::submit_nb ──▶ Batcher queue
+//!               │       ▲                  │ reject: Overloaded /
+//!               │       │ Notify waker     │         ShuttingDown /
+//!               │       │                  ▼         Unroutable
+//!               │   Ticket ◀── TicketBoard.complete ◀── backend worker
+//!               ▼
+//!            response line (id-correlated, completion order)
+//! ```
+//!
+//! * [`ticket`] — [`Ticket`](ticket::Ticket) /
+//!   [`TicketBoard`](ticket::TicketBoard): per-lane completion maps
+//!   replacing the old global blocking response map.  Poll
+//!   (`try_recv`), wait with a deadline (`recv_deadline` /
+//!   `recv_timeout`), block (`recv`), or register a shared
+//!   [`Notify`](ticket::Notify) waker to sleep on many tickets at once.
+//! * [`admission`] — the structured
+//!   [`SubmitError`](admission::SubmitError) taxonomy (`Overloaded` is
+//!   the 429-style shed signal from a full bounded lane) and the
+//!   [`ConnGate`](admission::ConnGate) connection cap at the TCP edge.
+//! * [`protocol`] — the line-delimited JSON wire format (request /
+//!   response schema including the `overloaded` and `shutting_down`
+//!   statuses; see the module docs for the exact schema).
+//! * [`connection`] — the [`FrontEnd`](connection::FrontEnd): acceptor +
+//!   capped connection handlers, every one of them driving only the
+//!   nonblocking core, with graceful drain wired through to
+//!   `Service::shutdown` (in-flight tickets complete; new connections
+//!   and requests get `shutting_down`).
+//!
+//! ## Backpressure contract
+//!
+//! Every batcher lane is **bounded** (`[service] queue_depth`, samples;
+//! per-backend `<backend>_queue` overrides in `[deploy]`).  A full lane
+//! rejects at admission — `submit_nb` returns
+//! `SubmitError::Overloaded` *without blocking* and without touching
+//! any other lane, the service `rejected` counter and the backend's
+//! `rej`/queue gauges record it, and the caller holds no dangling
+//! ticket.  A slow analog lane therefore sheds its own overload while
+//! the digital lanes keep serving — overload is surfaced, never hidden
+//! in an unbounded queue.
+//!
+//! Run the server with `memdiff serve --listen 127.0.0.1:7979` and
+//! drive it with `memdiff client --connect 127.0.0.1:7979` (a scripted
+//! mixed-class load generator speaking this protocol).
+
+pub mod admission;
+pub mod connection;
+pub mod protocol;
+pub mod ticket;
+
+pub use admission::{ConnGate, SubmitError};
+pub use connection::{FrontEnd, FrontEndConfig};
+pub use protocol::{parse_reply, Status, WireReply};
+pub use ticket::{Notify, Ticket, TicketBoard};

@@ -1,0 +1,436 @@
+//! Wire protocol of the TCP front-end: line-delimited JSON.
+//!
+//! One request per line, one response line per request.  Responses may
+//! arrive **out of submission order** (lanes run concurrently); the
+//! client-chosen `id` correlates them.
+//!
+//! ## Request schema
+//!
+//! ```text
+//! {"id": 7, "task": "circle"|"h"|"k"|"u", "n": 4,
+//!  "solver": "analog-ode"|"analog-sde"|"euler"|"euler-sde",
+//!  "steps": 100, "guidance": 2.0, "decode": false}
+//! ```
+//!
+//! `id` defaults to 0, `task` to `"circle"`, `n` to 1, `solver` to
+//! `"analog-ode"`, `steps` (digital solvers only) to 130, `guidance` to
+//! 2.0, `decode` to false.  `n` is capped at [`MAX_WIRE_SAMPLES`] and
+//! `steps` at [`MAX_WIRE_STEPS`] — over-cap requests are rejected at
+//! parse time, before admission, so a remote client cannot force an
+//! unbounded allocation or step loop.  A control line
+//! `{"op": "shutdown"}` asks the server to begin its graceful drain
+//! (demo/CI affordance — see `memdiff serve --listen`).
+//!
+//! ## Response schema
+//!
+//! ```text
+//! {"id": 7, "status": "ok", "dim": 2, "samples": [x0,y0,x1,y1,...],
+//!  "wall_latency_s": ..., "hw_latency_s": ..., "hw_energy_j": ...}
+//! {"id": 8, "status": "overloaded", "error": "...",
+//!  "queued_samples": 128, "queue_depth": 128}
+//! {"id": 9, "status": "shutting_down", "error": "..."}
+//! {"id": 0, "status": "error", "error": "bad request: ..."}
+//! ```
+//!
+//! `status` is the machine-readable outcome: `ok`, `overloaded` (the
+//! lane's bounded queue was full — retry later or back off),
+//! `shutting_down` (server draining — reconnect elsewhere), or `error`
+//! (malformed request, unrouted class, or engine failure).  Decoded
+//! images ride an `images` array when `decode` was requested.
+
+use crate::coordinator::request::{GenRequest, GenResponse, SolverChoice, TaskKind};
+use crate::serve::admission::SubmitError;
+use crate::util::json::Json;
+
+use std::collections::BTreeMap;
+
+/// Machine-readable response outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Ok,
+    Overloaded,
+    ShuttingDown,
+    Error,
+}
+
+impl Status {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Overloaded => "overloaded",
+            Status::ShuttingDown => "shutting_down",
+            Status::Error => "error",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Status> {
+        match s {
+            "ok" => Some(Status::Ok),
+            "overloaded" => Some(Status::Overloaded),
+            "shutting_down" => Some(Status::ShuttingDown),
+            "error" => Some(Status::Error),
+            _ => None,
+        }
+    }
+}
+
+/// One parsed request line.
+#[derive(Debug)]
+pub enum WireMsg {
+    /// A generation request: the client's correlation id plus the
+    /// service request (its `id` field is 0 — the service assigns its
+    /// own internal ids).
+    Request { client_id: u64, req: GenRequest },
+    /// `{"op": "shutdown"}` — begin the graceful drain.
+    Shutdown,
+}
+
+/// A request-line parse failure: the message goes into an
+/// `error`-status response, echoed under the best-effort client `id`
+/// (0 when the line wasn't valid JSON at all).
+#[derive(Debug)]
+pub struct WireError {
+    pub id: u64,
+    pub msg: String,
+}
+
+/// Hard cap on a single wire request's sample count.  In-process
+/// callers are trusted with any `n` (and the batcher deliberately
+/// admits an oversized request on an empty queue), but over TCP an
+/// unbounded `n` would let any remote client force an `n × dim`
+/// allocation in the worker — so the edge rejects it at parse time,
+/// before it can reach admission.
+pub const MAX_WIRE_SAMPLES: usize = 4096;
+
+/// Companion cap on a digital request's step count (an unbounded
+/// `steps` is a CPU-time attack the same way an unbounded `n` is a
+/// memory one).
+pub const MAX_WIRE_STEPS: usize = 65_536;
+
+/// Parse one request line.
+pub fn parse_line(line: &str) -> Result<WireMsg, WireError> {
+    let j = Json::parse(line)
+        .map_err(|e| WireError { id: 0, msg: format!("bad request: {e}") })?;
+    if j.as_obj().is_none() {
+        return Err(WireError {
+            id: 0,
+            msg: "bad request: expected a JSON object".into(),
+        });
+    }
+    let client_id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let err = |msg: String| WireError { id: client_id, msg };
+    if let Some(op) = j.get("op").and_then(|v| v.as_str()) {
+        return match op {
+            "shutdown" => Ok(WireMsg::Shutdown),
+            other => Err(err(format!("bad request: unknown op {other:?}"))),
+        };
+    }
+    let task_name = j.get("task").and_then(|v| v.as_str()).unwrap_or("circle");
+    let task = TaskKind::from_name(task_name)
+        .ok_or_else(|| err(format!("bad request: unknown task {task_name:?}")))?;
+    let n = j.get("n").and_then(|v| v.as_usize()).unwrap_or(1);
+    if n > MAX_WIRE_SAMPLES {
+        return Err(err(format!(
+            "bad request: n = {n} exceeds the per-request cap of \
+             {MAX_WIRE_SAMPLES} samples"
+        )));
+    }
+    let steps = j.get("steps").and_then(|v| v.as_usize()).unwrap_or(130);
+    if steps > MAX_WIRE_STEPS {
+        return Err(err(format!(
+            "bad request: steps = {steps} exceeds the cap of {MAX_WIRE_STEPS}"
+        )));
+    }
+    let solver_name =
+        j.get("solver").and_then(|v| v.as_str()).unwrap_or("analog-ode");
+    let solver = SolverChoice::from_name(solver_name, steps).ok_or_else(|| {
+        err(format!("bad request: unknown solver {solver_name:?}"))
+    })?;
+    let guidance = j.get("guidance").and_then(|v| v.as_f64()).unwrap_or(2.0) as f32;
+    let decode = matches!(j.get("decode"), Some(Json::Bool(true)));
+    Ok(WireMsg::Request {
+        client_id,
+        req: GenRequest { id: 0, task, n_samples: n, solver, guidance, decode },
+    })
+}
+
+fn base_obj(client_id: u64, status: Status) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("id".into(), Json::Num(client_id as f64));
+    m.insert("status".into(), Json::Str(status.as_str().into()));
+    m
+}
+
+/// Success response line for a completed ticket.  `n_samples` is the
+/// request's sample count (the handler knows it from the parsed
+/// request) — it recovers the per-sample dimensionality for the client.
+pub fn ok_line(client_id: u64, n_samples: usize, resp: &GenResponse) -> String {
+    let mut m = base_obj(client_id, Status::Ok);
+    let dim = if n_samples > 0 { resp.samples.len() / n_samples } else { 0 };
+    m.insert("dim".into(), Json::Num(dim as f64));
+    m.insert("samples".into(),
+             Json::Arr(resp.samples.iter().map(|&v| Json::Num(v as f64)).collect()));
+    if let Some(images) = &resp.images {
+        m.insert("images".into(),
+                 Json::Arr(images.iter().map(|&v| Json::Num(v as f64)).collect()));
+    }
+    m.insert("wall_latency_s".into(), Json::Num(resp.wall_latency_s));
+    m.insert("hw_latency_s".into(), Json::Num(resp.hw_latency_s));
+    m.insert("hw_energy_j".into(), Json::Num(resp.hw_energy_j));
+    Json::Obj(m).to_string()
+}
+
+/// Plain non-ok response line.
+pub fn status_line(client_id: u64, status: Status, error: &str) -> String {
+    let mut m = base_obj(client_id, status);
+    m.insert("error".into(), Json::Str(error.into()));
+    Json::Obj(m).to_string()
+}
+
+/// Response line for an admission reject, mapping the structured
+/// [`SubmitError`] onto a wire status (`Overloaded` carries the queue
+/// numbers so clients can implement informed backoff).
+pub fn reject_line(client_id: u64, err: &SubmitError) -> String {
+    match err {
+        SubmitError::Overloaded { queued_samples, queue_depth, .. } => {
+            let mut m = base_obj(client_id, Status::Overloaded);
+            m.insert("error".into(), Json::Str(err.to_string()));
+            m.insert("queued_samples".into(), Json::Num(*queued_samples as f64));
+            m.insert("queue_depth".into(), Json::Num(*queue_depth as f64));
+            Json::Obj(m).to_string()
+        }
+        SubmitError::ShuttingDown => {
+            status_line(client_id, Status::ShuttingDown, &err.to_string())
+        }
+        SubmitError::Unroutable { .. } | SubmitError::Invalid(_) => {
+            status_line(client_id, Status::Error, &err.to_string())
+        }
+    }
+}
+
+/// Ack line for a `{"op":"shutdown"}` control request.
+pub fn shutdown_ack_line() -> String {
+    let mut m = base_obj(0, Status::Ok);
+    m.insert("op".into(), Json::Str("shutdown".into()));
+    Json::Obj(m).to_string()
+}
+
+/// One parsed response line (the client side of the protocol — used by
+/// `memdiff client`, the front-end bench scenario and the tests).
+#[derive(Debug, Clone)]
+pub struct WireReply {
+    pub id: u64,
+    pub status: Status,
+    /// Flat `n × dim` samples (empty unless `status == Ok`).
+    pub samples: Vec<f32>,
+    pub dim: usize,
+    pub error: Option<String>,
+    /// Queue numbers of an `overloaded` reject.
+    pub queued_samples: Option<usize>,
+    pub queue_depth: Option<usize>,
+    pub wall_latency_s: f64,
+}
+
+/// Parse one response line.
+pub fn parse_reply(line: &str) -> Result<WireReply, String> {
+    let j = Json::parse(line).map_err(|e| format!("bad response: {e}"))?;
+    let status_str = j
+        .get("status")
+        .and_then(|v| v.as_str())
+        .ok_or("bad response: missing status")?;
+    let status = Status::from_str(status_str)
+        .ok_or_else(|| format!("bad response: unknown status {status_str:?}"))?;
+    let samples = j
+        .get("samples")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|x| x as f32).collect())
+        .unwrap_or_default();
+    Ok(WireReply {
+        id: j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        status,
+        samples,
+        dim: j.get("dim").and_then(|v| v.as_usize()).unwrap_or(2),
+        error: j.get("error").and_then(|v| v.as_str()).map(String::from),
+        queued_samples: j.get("queued_samples").and_then(|v| v.as_usize()),
+        queue_depth: j.get("queue_depth").and_then(|v| v.as_usize()),
+        wall_latency_s: j.get("wall_latency_s").and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN),
+    })
+}
+
+/// Build a request line (client side).
+pub fn request_line(client_id: u64, task: TaskKind, n: usize,
+                    solver: SolverChoice, guidance: f32, decode: bool)
+                    -> String {
+    let mut m = BTreeMap::new();
+    m.insert("id".into(), Json::Num(client_id as f64));
+    m.insert("task".into(), Json::Str(match task {
+        TaskKind::Circle => "circle".into(),
+        TaskKind::Letter(0) => "h".into(),
+        TaskKind::Letter(1) => "k".into(),
+        TaskKind::Letter(_) => "u".into(),
+    }));
+    m.insert("n".into(), Json::Num(n as f64));
+    let (solver_name, steps) = match solver {
+        SolverChoice::AnalogOde => ("analog-ode", None),
+        SolverChoice::AnalogSde => ("analog-sde", None),
+        SolverChoice::DigitalOde { steps } => ("euler", Some(steps)),
+        SolverChoice::DigitalSde { steps } => ("euler-sde", Some(steps)),
+    };
+    m.insert("solver".into(), Json::Str(solver_name.into()));
+    if let Some(steps) = steps {
+        m.insert("steps".into(), Json::Num(steps as f64));
+    }
+    m.insert("guidance".into(), Json::Num(guidance as f64));
+    if decode {
+        m.insert("decode".into(), Json::Bool(true));
+    }
+    Json::Obj(m).to_string()
+}
+
+/// Build the shutdown control line (client side).
+pub fn shutdown_line() -> String {
+    r#"{"op":"shutdown"}"#.to_string()
+}
+
+/// Read and parse one reply line from a buffered stream (the client
+/// side's read loop — shared by `memdiff client`, the front-end bench
+/// scenario and the tests).  EOF is an error: callers use this only
+/// while expecting an answer.
+pub fn read_reply(reader: &mut impl std::io::BufRead)
+                  -> anyhow::Result<WireReply> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        anyhow::bail!("server closed the connection early");
+    }
+    parse_reply(line.trim()).map_err(|e| anyhow::anyhow!("{e} in {line:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SolverFamily;
+
+    #[test]
+    fn request_roundtrip_all_fields() {
+        let line = request_line(42, TaskKind::Letter(1), 6,
+                                SolverChoice::DigitalSde { steps: 77 }, 1.5, true);
+        let WireMsg::Request { client_id, req } = parse_line(&line).unwrap()
+        else { panic!("expected request") };
+        assert_eq!(client_id, 42);
+        assert_eq!(req.task, TaskKind::Letter(1));
+        assert_eq!(req.n_samples, 6);
+        assert_eq!(req.solver, SolverChoice::DigitalSde { steps: 77 });
+        assert_eq!(req.guidance, 1.5);
+        assert!(req.decode);
+        assert_eq!(req.id, 0, "service assigns its own ids");
+        assert_eq!(req.class().family, SolverFamily::Digital);
+    }
+
+    #[test]
+    fn request_defaults() {
+        let WireMsg::Request { client_id, req } = parse_line("{}").unwrap()
+        else { panic!() };
+        assert_eq!(client_id, 0);
+        assert_eq!(req.task, TaskKind::Circle);
+        assert_eq!(req.n_samples, 1);
+        assert_eq!(req.solver, SolverChoice::AnalogOde);
+        assert_eq!(req.guidance, 2.0);
+        assert!(!req.decode);
+    }
+
+    #[test]
+    fn shutdown_op_parses() {
+        assert!(matches!(parse_line(&shutdown_line()).unwrap(),
+                         WireMsg::Shutdown));
+        assert!(parse_line(r#"{"op":"reboot"}"#).is_err());
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(parse_line("not json").is_err());
+        assert!(parse_line("[1,2]").is_err());
+        assert!(parse_line(r#"{"task":"z"}"#).is_err());
+        assert!(parse_line(r#"{"solver":"warp"}"#).is_err());
+        // a parseable object with bad fields echoes the client id back
+        let e = parse_line(r#"{"id": 4, "task": "zebra"}"#).unwrap_err();
+        assert_eq!(e.id, 4);
+        assert!(e.msg.contains("unknown task"), "{}", e.msg);
+        assert_eq!(parse_line("not json").unwrap_err().id, 0);
+    }
+
+    #[test]
+    fn wire_caps_reject_abusive_requests() {
+        // an in-cap request parses; one past either cap is refused at
+        // parse time with the client id echoed
+        assert!(parse_line(&format!(r#"{{"n": {MAX_WIRE_SAMPLES}}}"#)).is_ok());
+        let e = parse_line(&format!(
+            r#"{{"id": 3, "n": {}}}"#, MAX_WIRE_SAMPLES + 1)).unwrap_err();
+        assert_eq!(e.id, 3);
+        assert!(e.msg.contains("cap"), "{}", e.msg);
+        let e = parse_line(&format!(
+            r#"{{"solver": "euler", "steps": {}}}"#, MAX_WIRE_STEPS + 1))
+            .unwrap_err();
+        assert!(e.msg.contains("steps"), "{}", e.msg);
+    }
+
+    #[test]
+    fn read_reply_reads_one_line_and_flags_eof() {
+        let data = format!("{}\nleftover", status_line(4, Status::Error, "x"));
+        let mut r = std::io::BufReader::new(data.as_bytes());
+        let reply = read_reply(&mut r).unwrap();
+        assert_eq!((reply.id, reply.status), (4, Status::Error));
+        // EOF mid-stream is an error, not a hang or a default reply
+        let mut empty = std::io::BufReader::new(&b""[..]);
+        assert!(read_reply(&mut empty).is_err());
+    }
+
+    #[test]
+    fn ok_line_roundtrips_samples_bitwise() {
+        let resp = GenResponse {
+            id: 9,
+            samples: vec![1.5, -2.25, 0.0, 3.125],
+            images: None,
+            wall_latency_s: 0.25,
+            hw_latency_s: 1e-3,
+            hw_energy_j: 2e-6,
+        };
+        let line = ok_line(7, 2, &resp);
+        let r = parse_reply(&line).unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.status, Status::Ok);
+        assert_eq!(r.dim, 2);
+        for (a, b) in r.samples.iter().zip(&resp.samples) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(r.wall_latency_s, 0.25);
+    }
+
+    #[test]
+    fn reject_lines_carry_status_and_queue_numbers() {
+        let e = SubmitError::Overloaded {
+            backend: "analog".into(),
+            queued_samples: 96,
+            queue_depth: 128,
+        };
+        let r = parse_reply(&reject_line(5, &e)).unwrap();
+        assert_eq!(r.status, Status::Overloaded);
+        assert_eq!(r.queued_samples, Some(96));
+        assert_eq!(r.queue_depth, Some(128));
+        assert!(r.error.unwrap().contains("overloaded"));
+
+        let r = parse_reply(&reject_line(5, &SubmitError::ShuttingDown)).unwrap();
+        assert_eq!(r.status, Status::ShuttingDown);
+
+        let r = parse_reply(&reject_line(
+            5, &SubmitError::Invalid("n_samples must be > 0".into()))).unwrap();
+        assert_eq!(r.status, Status::Error);
+    }
+
+    #[test]
+    fn shutdown_ack_parses_as_ok() {
+        let r = parse_reply(&shutdown_ack_line()).unwrap();
+        assert_eq!(r.status, Status::Ok);
+        assert!(r.samples.is_empty());
+    }
+}

@@ -1,0 +1,390 @@
+//! Response tickets: the nonblocking completion side of `submit_nb`.
+//!
+//! The blocking service used to hold one global `id → Sender` response
+//! map; every completion and every submit contended on it, and a caller
+//! could only *block* on its channel.  The async front-end replaces it
+//! with a [`TicketBoard`]: **per-lane** pending maps (a completion on the
+//! analog lane never touches the digital lane's lock) whose entries are
+//! [`Slot`]s shared with the caller-held [`Ticket`].  A ticket can be
+//! polled ([`Ticket::try_recv`]), waited on with a deadline
+//! ([`Ticket::recv_deadline`] / [`Ticket::recv_timeout`]), blocked on
+//! ([`Ticket::recv`]), or wired into a shared [`Notify`] so one
+//! connection handler can sleep on *many* tickets at once (the waker
+//! registry of the TCP front-end).
+//!
+//! Delivery contract: a worker completes a ticket **exactly once**; the
+//! result is consumed **at most once** (the first successful receive
+//! takes it — later receives report the ticket as spent).  Shutdown
+//! fails every still-pending ticket via [`TicketBoard::fail_all`], so no
+//! waiter is ever stranded (the no-dropped-request invariant, extended
+//! to the nonblocking path).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::GenResponse;
+
+/// One ticket's shared completion cell.
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+struct SlotState {
+    /// The response, once the worker delivered it (taken by the first
+    /// successful receive).
+    result: Option<anyhow::Result<GenResponse>>,
+    /// The result was delivered *and* already consumed.
+    taken: bool,
+    /// Optional multi-ticket waker, fired on completion.
+    notify: Option<Notify>,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            state: Mutex::new(SlotState { result: None, taken: false, notify: None }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, result: anyhow::Result<GenResponse>) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.result.is_none() && !st.taken,
+                      "ticket completed twice");
+        st.result = Some(result);
+        let notify = st.notify.take();
+        drop(st);
+        self.cv.notify_all();
+        if let Some(n) = notify {
+            n.notify();
+        }
+    }
+}
+
+/// A response ticket: the caller's handle to one in-flight request.
+///
+/// Obtained from `Service::submit_nb` (or the blocking `submit`, which
+/// returns the same handle).  Cheap to move across threads; dropping a
+/// ticket without receiving is fine — the worker still completes the
+/// slot and the board entry is cleaned up on delivery.
+pub struct Ticket {
+    id: u64,
+    slot: Arc<Slot>,
+}
+
+impl std::fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ticket")
+            .field("id", &self.id)
+            .field("done", &self.is_done())
+            .finish()
+    }
+}
+
+impl Ticket {
+    /// The service-assigned request id this ticket answers.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Nonblocking poll.  `None` while pending — and after the result
+    /// has already been taken (a ticket delivers at most once).
+    pub fn try_recv(&self) -> Option<anyhow::Result<GenResponse>> {
+        let mut st = self.slot.state.lock().unwrap();
+        if st.result.is_some() {
+            st.taken = true;
+        }
+        st.result.take()
+    }
+
+    /// Whether the worker has delivered (true even after the result was
+    /// taken).
+    pub fn is_done(&self) -> bool {
+        let st = self.slot.state.lock().unwrap();
+        st.result.is_some() || st.taken
+    }
+
+    /// Block until completion.  Errors if the result was already taken
+    /// (never hangs on a spent ticket).
+    pub fn recv(&self) -> anyhow::Result<GenResponse> {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            if st.taken && st.result.is_none() {
+                anyhow::bail!("ticket {} already received", self.id);
+            }
+            if st.result.is_some() {
+                st.taken = true;
+                return st.result.take().unwrap();
+            }
+            st = self.slot.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Block until completion or `deadline`.  `None` = still pending at
+    /// the deadline (or already taken).
+    pub fn recv_deadline(&self, deadline: Instant)
+                         -> Option<anyhow::Result<GenResponse>> {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            if st.result.is_some() {
+                st.taken = true;
+                return st.result.take();
+            }
+            if st.taken {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) =
+                self.slot.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// [`Self::recv_deadline`] with a relative timeout.
+    pub fn recv_timeout(&self, timeout: Duration)
+                        -> Option<anyhow::Result<GenResponse>> {
+        self.recv_deadline(Instant::now() + timeout)
+    }
+
+    /// Register a shared waker: `notify` fires when this ticket
+    /// completes (immediately if it already has).  One [`Notify`] can
+    /// watch any number of tickets — the front-end's connection handlers
+    /// register every in-flight ticket on one waker and sleep on that.
+    pub fn set_notify(&self, notify: &Notify) {
+        let mut st = self.slot.state.lock().unwrap();
+        if st.result.is_some() || st.taken {
+            drop(st);
+            notify.notify();
+        } else {
+            st.notify = Some(notify.clone());
+        }
+    }
+}
+
+/// A consumable wakeup flag shared by many tickets (the waker registry
+/// unit).  `notify` latches the flag; `wait_timeout` consumes it — a
+/// notification between two waits is never lost.
+#[derive(Clone, Default)]
+pub struct Notify {
+    inner: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Notify {
+    pub fn new() -> Self {
+        Notify::default()
+    }
+
+    /// Latch the flag and wake every waiter.
+    pub fn notify(&self) {
+        let (flag, cv) = &*self.inner;
+        *flag.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    /// Wait until notified or `timeout`; consumes the flag.  Returns
+    /// whether a notification was seen.
+    pub fn wait_timeout(&self, timeout: Duration) -> bool {
+        let (flag, cv) = &*self.inner;
+        let mut set = flag.lock().unwrap();
+        let deadline = Instant::now() + timeout;
+        while !*set {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = cv.wait_timeout(set, deadline - now).unwrap();
+            set = guard;
+        }
+        *set = false;
+        true
+    }
+}
+
+/// Per-lane pending-ticket maps: the service-side half of the ticket
+/// subsystem (replaces the global blocking response map).
+pub struct TicketBoard {
+    lanes: Vec<Mutex<HashMap<u64, Arc<Slot>>>>,
+}
+
+impl TicketBoard {
+    /// One pending map per batcher lane.
+    pub fn new(n_lanes: usize) -> Self {
+        TicketBoard {
+            lanes: (0..n_lanes.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    /// Register a pending request on `lane`, returning the caller's
+    /// ticket.  Must happen **before** the request is enqueued (a worker
+    /// may complete it immediately after the queue accepts it).
+    pub fn register(&self, lane: usize, id: u64) -> Ticket {
+        let slot = Arc::new(Slot::new());
+        self.lanes[lane].lock().unwrap().insert(id, Arc::clone(&slot));
+        Ticket { id, slot }
+    }
+
+    /// Remove a registration whose enqueue was rejected (the request
+    /// never entered the lane, so no worker will ever complete it).
+    pub fn retract(&self, lane: usize, id: u64) {
+        self.lanes[lane].lock().unwrap().remove(&id);
+    }
+
+    /// Deliver one request's result: removes the pending entry and fills
+    /// the caller's slot (waking its waiters and any registered notify).
+    pub fn complete(&self, lane: usize, id: u64,
+                    result: anyhow::Result<GenResponse>) {
+        let slot = self.lanes[lane].lock().unwrap().remove(&id);
+        if let Some(slot) = slot {
+            slot.complete(result);
+        } else {
+            debug_assert!(false, "completion for unregistered ticket {id}");
+        }
+    }
+
+    /// Total still-pending tickets across every lane.
+    pub fn pending(&self) -> usize {
+        self.lanes.iter().map(|l| l.lock().unwrap().len()).sum()
+    }
+
+    /// Fail every still-pending ticket (shutdown's no-stranded-waiter
+    /// guarantee); returns how many there were.
+    pub fn fail_all(&self, mk_err: impl Fn() -> anyhow::Error) -> usize {
+        let mut n = 0;
+        for lane in &self.lanes {
+            let drained: Vec<Arc<Slot>> =
+                lane.lock().unwrap().drain().map(|(_, s)| s).collect();
+            for slot in drained {
+                slot.complete(Err(mk_err()));
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64, v: f32) -> GenResponse {
+        GenResponse {
+            id,
+            samples: vec![v; 2],
+            images: None,
+            wall_latency_s: 0.0,
+            hw_latency_s: 0.0,
+            hw_energy_j: 0.0,
+        }
+    }
+
+    #[test]
+    fn try_recv_poll_then_complete() {
+        let board = TicketBoard::new(2);
+        let t = board.register(1, 7);
+        assert!(t.try_recv().is_none());
+        assert!(!t.is_done());
+        board.complete(1, 7, Ok(resp(7, 3.0)));
+        assert!(t.is_done());
+        let got = t.try_recv().unwrap().unwrap();
+        assert_eq!(got.samples, vec![3.0, 3.0]);
+        // a ticket delivers at most once
+        assert!(t.try_recv().is_none());
+        assert!(t.is_done());
+        assert!(t.recv().is_err(), "spent ticket must error, not hang");
+        assert_eq!(board.pending(), 0);
+    }
+
+    #[test]
+    fn recv_blocks_until_completion() {
+        let board = Arc::new(TicketBoard::new(1));
+        let t = board.register(0, 1);
+        let b2 = Arc::clone(&board);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            b2.complete(0, 1, Ok(resp(1, 5.0)));
+        });
+        let got = t.recv().unwrap();
+        assert_eq!(got.samples[0], 5.0);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_succeeds() {
+        let board = TicketBoard::new(1);
+        let t = board.register(0, 2);
+        assert!(t.recv_timeout(Duration::from_millis(10)).is_none());
+        board.complete(0, 2, Err(anyhow::anyhow!("boom")));
+        let got = t.recv_timeout(Duration::from_millis(10)).unwrap();
+        assert!(got.is_err());
+    }
+
+    #[test]
+    fn notify_wakes_on_completion_and_is_consumed() {
+        let board = Arc::new(TicketBoard::new(1));
+        let t1 = board.register(0, 1);
+        let t2 = board.register(0, 2);
+        let n = Notify::new();
+        t1.set_notify(&n);
+        t2.set_notify(&n);
+        assert!(!n.wait_timeout(Duration::from_millis(5)), "nothing yet");
+        let b2 = Arc::clone(&board);
+        let h = std::thread::spawn(move || {
+            b2.complete(0, 1, Ok(resp(1, 1.0)));
+        });
+        assert!(n.wait_timeout(Duration::from_secs(5)), "woken by completion");
+        h.join().unwrap();
+        assert!(t1.try_recv().is_some());
+        // flag consumed; second wait needs the second completion
+        board.complete(0, 2, Ok(resp(2, 2.0)));
+        assert!(n.wait_timeout(Duration::from_secs(5)));
+        assert!(t2.try_recv().is_some());
+    }
+
+    #[test]
+    fn set_notify_on_already_done_fires_immediately() {
+        let board = TicketBoard::new(1);
+        let t = board.register(0, 9);
+        board.complete(0, 9, Ok(resp(9, 0.0)));
+        let n = Notify::new();
+        t.set_notify(&n);
+        assert!(n.wait_timeout(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn retract_removes_pending_entry() {
+        let board = TicketBoard::new(3);
+        let _t = board.register(2, 4);
+        assert_eq!(board.pending(), 1);
+        board.retract(2, 4);
+        assert_eq!(board.pending(), 0);
+    }
+
+    #[test]
+    fn fail_all_resolves_every_waiter() {
+        let board = TicketBoard::new(2);
+        let a = board.register(0, 1);
+        let b = board.register(1, 2);
+        let n = board.fail_all(|| anyhow::anyhow!("service shut down"));
+        assert_eq!(n, 2);
+        assert!(a.recv().is_err());
+        assert!(b.try_recv().unwrap().is_err());
+        assert_eq!(board.pending(), 0);
+    }
+
+    #[test]
+    fn lanes_are_independent() {
+        let board = TicketBoard::new(2);
+        let a = board.register(0, 1);
+        let b = board.register(1, 1); // same id, different lane: distinct
+        board.complete(0, 1, Ok(resp(1, 1.0)));
+        assert!(a.is_done());
+        assert!(!b.is_done());
+        board.complete(1, 1, Ok(resp(1, 2.0)));
+        assert_eq!(b.try_recv().unwrap().unwrap().samples[0], 2.0);
+    }
+}

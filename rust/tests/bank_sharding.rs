@@ -191,6 +191,7 @@ fn service_surfaces_bank_topology_and_reads() {
             batcher: BatcherConfig {
                 max_batch_samples: 16,
                 linger: std::time::Duration::from_millis(1),
+                ..BatcherConfig::default()
             },
             seed: 6,
             intra_threads: 0,

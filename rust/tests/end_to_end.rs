@@ -207,7 +207,7 @@ fn programming_mode_blocks_and_resumes() {
         // _prog drops here: compute resumes
     };
     for rx in rxs {
-        let r = rx.recv().unwrap().unwrap();
+        let r = rx.recv().unwrap();
         assert_eq!(r.samples.len(), 32);
     }
 }

@@ -1,0 +1,602 @@
+//! Async front-end integration suite: bounded-queue reject semantics per
+//! lane, ticket completion vs. the blocking `submit` oracle (bitwise),
+//! shutdown drain under concurrent in-flight tickets, and the TCP
+//! front-end end-to-end (wire protocol, overload statuses, connection
+//! cap, graceful drain).
+//!
+//! Runs without AOT artifacts (synthetic weights / stub engines).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use memdiff::coordinator::batcher::BatcherConfig;
+use memdiff::coordinator::service::Engine;
+use memdiff::coordinator::{
+    EngineRegistry, GenRequest, GenResponse, Service, ServiceConfig,
+    SolverChoice, SolverFamily, SubmitError, TaskKind,
+};
+use memdiff::crossbar::NoiseModel;
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::schedule::VpSchedule;
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::serve::protocol::{self, Status};
+use memdiff::serve::{FrontEnd, FrontEndConfig, WireReply};
+use memdiff::util::rng::Rng;
+
+// ---------------------------------------------------------------- engines
+
+/// Constant-tag engine: proves which backend served a request.
+struct TagEngine(f32);
+
+impl Engine for TagEngine {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn n_classes(&self) -> usize {
+        3
+    }
+    fn generate(&self, _s: SolverChoice, _oh: &[f32], _g: f32, n: usize,
+                _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+        Ok(vec![self.0; n * 2])
+    }
+}
+
+/// Engine blocked on a shared gate: holds a worker busy deterministically
+/// while a test fills the lane queue behind it.
+struct GateEngine {
+    gate: Arc<Mutex<()>>,
+    entered: Arc<AtomicUsize>,
+}
+
+impl Engine for GateEngine {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn n_classes(&self) -> usize {
+        3
+    }
+    fn generate(&self, _s: SolverChoice, _oh: &[f32], _g: f32, n: usize,
+                _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        let _hold = self.gate.lock().unwrap();
+        Ok(vec![0.0; n * 2])
+    }
+}
+
+/// Engine stamping each batch with its global serving order, so a test
+/// can assert FIFO completion per lane.
+struct SeqEngine {
+    ctr: AtomicU32,
+}
+
+impl Engine for SeqEngine {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn n_classes(&self) -> usize {
+        3
+    }
+    fn generate(&self, _s: SolverChoice, _oh: &[f32], _g: f32, n: usize,
+                _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+        let seq = self.ctr.fetch_add(1, Ordering::SeqCst) as f32;
+        Ok(vec![seq; n * 2])
+    }
+}
+
+// ----------------------------------------------------------------- setup
+
+fn weights() -> ScoreWeights {
+    ScoreWeights::synthetic(2, 8, 3, 77)
+}
+
+fn analog_engine(noise: NoiseModel) -> Arc<dyn Engine> {
+    use memdiff::coordinator::service::AnalogEngine;
+    let params = if matches!(noise, NoiseModel::Ideal) {
+        CellParams { read_noise_frac: 0.0, ..CellParams::default() }
+    } else {
+        CellParams::default()
+    };
+    Arc::new(AnalogEngine {
+        net: AnalogScoreNet::from_conductances(&weights(), params, noise),
+        sched: VpSchedule::default(),
+        substeps: 30,
+    })
+}
+
+fn rust_engine() -> Arc<dyn Engine> {
+    use memdiff::coordinator::service::RustDigitalEngine;
+    Arc::new(RustDigitalEngine {
+        net: DigitalScoreNet::new(weights()),
+        sched: VpSchedule::default(),
+    })
+}
+
+fn svc_cfg(max_batch: usize, queue_depth: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers: 1,
+        batcher: BatcherConfig {
+            max_batch_samples: max_batch,
+            linger: Duration::from_millis(1),
+            queue_depth,
+        },
+        seed: 0xF0F0,
+        intra_threads: 1,
+    }
+}
+
+/// Two-lane routed deployment over the synthetic engines.
+fn routed(noise: NoiseModel) -> Service {
+    let mut reg = EngineRegistry::new();
+    reg.add_backend("analog", analog_engine(noise), 1).unwrap();
+    reg.add_backend("rust", rust_engine(), 1).unwrap();
+    reg.route_family(SolverFamily::Analog, "analog").unwrap();
+    reg.route_family(SolverFamily::Digital, "rust").unwrap();
+    Service::start_routed(reg, None, svc_cfg(64, 0))
+}
+
+fn req(task: TaskKind, solver: SolverChoice, n: usize) -> GenRequest {
+    GenRequest { id: 0, task, n_samples: n, solver, guidance: 2.0, decode: false }
+}
+
+fn scenario() -> Vec<GenRequest> {
+    let mut out = Vec::new();
+    for r in 0..3usize {
+        out.push(req(TaskKind::Circle, SolverChoice::AnalogOde, 3 + r));
+        out.push(req(TaskKind::Letter(r % 3), SolverChoice::AnalogSde, 2 + r));
+        out.push(req(TaskKind::Circle,
+                     SolverChoice::DigitalOde { steps: 12 }, 4 + r));
+        out.push(req(TaskKind::Letter((r + 1) % 3),
+                     SolverChoice::DigitalSde { steps: 12 }, 3 + r));
+    }
+    out
+}
+
+// ------------------------------------------------- per-lane backpressure
+
+/// Fill one bounded lane while its worker is held busy: that lane sheds
+/// `Overloaded` without blocking the caller, the *other* lane keeps
+/// serving, and every accepted ticket still completes.
+#[test]
+fn full_lane_sheds_while_other_lane_serves() {
+    let gate = Arc::new(Mutex::new(()));
+    let entered = Arc::new(AtomicUsize::new(0));
+    let mut reg = EngineRegistry::new();
+    // analog lane: gated engine, bounded to 4 samples
+    reg.add_backend_cfg(
+        "slow",
+        Arc::new(GateEngine {
+            gate: Arc::clone(&gate),
+            entered: Arc::clone(&entered),
+        }),
+        1,
+        4,
+    )
+    .unwrap();
+    // digital lane: fast tag engine, unbounded
+    reg.add_backend("fast", Arc::new(TagEngine(2.0)), 1).unwrap();
+    reg.route_family(SolverFamily::Analog, "slow").unwrap();
+    reg.route_family(SolverFamily::Digital, "fast").unwrap();
+    // max_batch 1: every request is its own batch (no coalescing races)
+    let s = Service::start_routed(reg, None, svc_cfg(1, 0));
+
+    // occupy the slow worker inside generate()
+    let hold = gate.lock().unwrap();
+    let first = s
+        .submit_nb(req(TaskKind::Circle, SolverChoice::AnalogOde, 1))
+        .unwrap();
+    while entered.load(Ordering::SeqCst) == 0 {
+        std::thread::yield_now();
+    }
+    // fill the slow lane to its 4-sample bound
+    let queued: Vec<_> = (0..4)
+        .map(|_| {
+            s.submit_nb(req(TaskKind::Circle, SolverChoice::AnalogOde, 1))
+                .unwrap()
+        })
+        .collect();
+    // the next analog request is shed immediately — no blocking
+    let t0 = std::time::Instant::now();
+    let err = s
+        .submit_nb(req(TaskKind::Circle, SolverChoice::AnalogOde, 1))
+        .unwrap_err();
+    assert!(t0.elapsed() < Duration::from_millis(250),
+            "overload must answer without blocking");
+    match &err {
+        SubmitError::Overloaded { backend, queued_samples, queue_depth } => {
+            assert_eq!(backend, "slow");
+            assert_eq!((*queued_samples, *queue_depth), (4, 4));
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+
+    // the OTHER lane still serves end-to-end while the slow lane is full
+    let d = s
+        .generate(TaskKind::Circle, 5, SolverChoice::DigitalOde { steps: 4 },
+                  0.0, false)
+        .unwrap();
+    assert_eq!(d.samples, vec![2.0; 10], "digital lane unaffected");
+
+    // gauges: service total + the slow backend's reject/queue columns
+    let snap = s.metrics.snapshot();
+    assert_eq!(snap.rejected, 1);
+    let slow = snap.backends.iter().find(|b| b.name == "slow").unwrap();
+    assert_eq!(slow.rejected, 1);
+    assert_eq!(slow.queue_depth, 4, "queue gauge shows the full lane");
+    let fast = snap.backends.iter().find(|b| b.name == "fast").unwrap();
+    assert_eq!(fast.rejected, 0);
+    assert!(snap.report().contains("rej1"), "{}", snap.report());
+
+    // release: every accepted ticket completes, nothing leaks
+    drop(hold);
+    assert!(first.recv().is_ok());
+    for t in queued {
+        assert!(t
+            .recv_timeout(Duration::from_secs(30))
+            .expect("accepted ticket completes")
+            .is_ok());
+    }
+    s.shutdown();
+}
+
+// --------------------------------------------- tickets vs blocking oracle
+
+fn assert_bitwise(a: &[GenResponse], b: &[GenResponse], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: response counts");
+    for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.samples.len(), rb.samples.len(), "{what} req {i}");
+        for (k, (x, y)) in ra.samples.iter().zip(&rb.samples).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "{what} req {i} sample {k}: {x} vs {y}");
+        }
+    }
+}
+
+/// The ticket path is a transport, not a computation: replaying the same
+/// request stream through `submit_nb` + polling must yield bitwise the
+/// same payloads as the blocking `generate` oracle — per class, in Ideal
+/// and noisy modes.
+#[test]
+fn tickets_bitwise_match_blocking_submit_oracle() {
+    for (noise, what) in [(NoiseModel::Ideal, "ideal"),
+                          (NoiseModel::ReadFast, "readfast")] {
+        // nonblocking replay: poll each ticket to completion before the
+        // next submit, so batches and RNG consumption replay exactly
+        let nb = routed(noise);
+        let via_tickets: Vec<GenResponse> = scenario()
+            .into_iter()
+            .map(|r| {
+                let t = nb.submit_nb(r).unwrap();
+                loop {
+                    // exercise the poll path (try_recv), not recv()
+                    if let Some(result) = t.try_recv() {
+                        break result.unwrap();
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            })
+            .collect();
+        nb.shutdown();
+
+        // blocking oracle: same deployment, same seeds, same stream
+        let oracle = routed(noise);
+        let via_blocking: Vec<GenResponse> = scenario()
+            .into_iter()
+            .map(|r| {
+                oracle
+                    .generate(r.task, r.n_samples, r.solver, r.guidance,
+                              r.decode)
+                    .unwrap()
+            })
+            .collect();
+        oracle.shutdown();
+
+        assert_bitwise(&via_tickets, &via_blocking, what);
+    }
+}
+
+/// Same-lane tickets complete in submission order (FIFO per lane), and a
+/// deadline-wait sees them in that order.
+#[test]
+fn ticket_completion_order_is_fifo_per_lane() {
+    let reg = EngineRegistry::single(Arc::new(SeqEngine {
+        ctr: AtomicU32::new(0),
+    }));
+    // one worker, one request per batch: serving order == queue order
+    let s = Service::start_routed(reg, None, svc_cfg(1, 0));
+    let tickets: Vec<_> = (0..8)
+        .map(|_| {
+            s.submit_nb(req(TaskKind::Circle, SolverChoice::AnalogOde, 1))
+                .unwrap()
+        })
+        .collect();
+    let mut stamps = Vec::new();
+    for t in &tickets {
+        let r = t
+            .recv_deadline(std::time::Instant::now() + Duration::from_secs(30))
+            .expect("completes before the deadline")
+            .unwrap();
+        stamps.push(r.samples[0]);
+    }
+    let expect: Vec<f32> = (0..8).map(|k| k as f32).collect();
+    assert_eq!(stamps, expect, "FIFO serving order per lane");
+    s.shutdown();
+}
+
+// ------------------------------------------------------- shutdown drain
+
+/// Queue mixed-class tickets, some with waiters already blocked on them,
+/// then shut down immediately: every ticket resolves Ok (the queued work
+/// drains) and no waiter is left stuck.
+#[test]
+fn shutdown_drains_inflight_tickets_no_stuck_waiter() {
+    let mut reg = EngineRegistry::new();
+    reg.add_backend("analog", Arc::new(TagEngine(1.0)), 2).unwrap();
+    reg.add_backend("rust", Arc::new(TagEngine(2.0)), 2).unwrap();
+    reg.route_family(SolverFamily::Analog, "analog").unwrap();
+    reg.route_family(SolverFamily::Digital, "rust").unwrap();
+    let s = Service::start_routed(reg, None, svc_cfg(64, 0));
+
+    let mut waited = Vec::new();
+    let mut polled = Vec::new();
+    for (i, r) in scenario().into_iter().enumerate() {
+        let t = s.submit_nb(r).unwrap();
+        if i % 2 == 0 {
+            // half the tickets get a blocked waiter thread right away
+            waited.push(std::thread::spawn(move || t.recv()));
+        } else {
+            polled.push(t);
+        }
+    }
+    // shutdown with all of that in flight: drains every lane, fails any
+    // leftover ticket — so every waiter must return
+    s.shutdown();
+    for h in waited {
+        let r = h.join().expect("waiter thread finished");
+        assert!(r.is_ok(), "queued work drained: {:?}", r.err());
+    }
+    for t in polled {
+        let r = t.try_recv().expect("resolved by shutdown at the latest");
+        assert!(r.is_ok(), "{:?}", r.err());
+    }
+}
+
+// ------------------------------------------------------- TCP front-end
+
+fn read_reply(reader: &mut BufReader<TcpStream>) -> WireReply {
+    protocol::read_reply(reader).expect("reply line")
+}
+
+fn send_line(w: &mut TcpStream, line: &str) {
+    w.write_all(line.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+}
+
+fn tag_front(queue_depth: usize, max_conns: usize) -> FrontEnd {
+    let mut reg = EngineRegistry::new();
+    reg.add_backend("analog", Arc::new(TagEngine(1.0)), 1).unwrap();
+    reg.add_backend("rust", Arc::new(TagEngine(2.0)), 1).unwrap();
+    reg.route_family(SolverFamily::Analog, "analog").unwrap();
+    reg.route_family(SolverFamily::Digital, "rust").unwrap();
+    let s = Service::start_routed(reg, None, svc_cfg(64, queue_depth));
+    FrontEnd::bind(s, "127.0.0.1:0", FrontEndConfig {
+        max_conns,
+        poll: Duration::from_millis(2),
+        ..FrontEndConfig::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn tcp_roundtrip_mixed_classes_and_errors() {
+    let front = tag_front(0, 8);
+    let stream = TcpStream::connect(front.local_addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    // two classes through one connection, out-of-order-safe via ids
+    send_line(&mut w, &protocol::request_line(
+        7, TaskKind::Circle, 3, SolverChoice::AnalogOde, 0.0, false));
+    send_line(&mut w, &protocol::request_line(
+        8, TaskKind::Letter(1), 2, SolverChoice::DigitalSde { steps: 5 },
+        2.0, false));
+    let mut got = std::collections::HashMap::new();
+    for _ in 0..2 {
+        let reply = read_reply(&mut r);
+        assert_eq!(reply.status, Status::Ok, "{:?}", reply.error);
+        got.insert(reply.id, reply);
+    }
+    let a = &got[&7];
+    assert_eq!(a.dim, 2);
+    assert_eq!(a.samples, vec![1.0; 6], "analog lane tag");
+    let d = &got[&8];
+    assert_eq!(d.samples, vec![2.0; 4], "digital lane tag");
+
+    // malformed line and bad fields answer `error`, connection survives
+    send_line(&mut w, "this is not json");
+    assert_eq!(read_reply(&mut r).status, Status::Error);
+    send_line(&mut w, r#"{"id": 9, "task": "zebra"}"#);
+    let bad = read_reply(&mut r);
+    assert_eq!((bad.id, bad.status), (9, Status::Error));
+    send_line(&mut w, r#"{"id": 10, "n": 0}"#);
+    assert_eq!(read_reply(&mut r).status, Status::Error, "invalid request");
+    // still serving after the errors
+    send_line(&mut w, &protocol::request_line(
+        11, TaskKind::Circle, 1, SolverChoice::AnalogSde, 0.0, false));
+    assert_eq!(read_reply(&mut r).status, Status::Ok);
+
+    front.shutdown();
+}
+
+#[test]
+fn tcp_overload_surfaces_structured_status() {
+    let gate = Arc::new(Mutex::new(()));
+    let entered = Arc::new(AtomicUsize::new(0));
+    let mut reg = EngineRegistry::new();
+    // single gated lane bounded at 2 samples; every class routes to it
+    reg.add_backend_cfg(
+        "gated",
+        Arc::new(GateEngine {
+            gate: Arc::clone(&gate),
+            entered: Arc::clone(&entered),
+        }),
+        1,
+        2,
+    )
+    .unwrap();
+    for family in [SolverFamily::Analog, SolverFamily::Digital] {
+        reg.route_family(family, "gated").unwrap();
+    }
+    let s = Service::start_routed(reg, None, svc_cfg(1, 0));
+    let front = FrontEnd::bind(s, "127.0.0.1:0", FrontEndConfig {
+        poll: Duration::from_millis(2),
+        ..FrontEndConfig::default()
+    })
+    .unwrap();
+    let stream = TcpStream::connect(front.local_addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    // hold the gate FIRST, then let id 1 occupy the worker inside
+    // generate() — deterministic: the worker cannot finish early
+    let hold = gate.lock().unwrap();
+    send_line(&mut w, &protocol::request_line(
+        1, TaskKind::Circle, 1, SolverChoice::AnalogOde, 0.0, false));
+    while entered.load(Ordering::SeqCst) == 0 {
+        std::thread::yield_now();
+    }
+    // ids 2,3 fill the 2-sample bound; 4,5 must shed as `overloaded`
+    for id in 2..=5u64 {
+        send_line(&mut w, &protocol::request_line(
+            id, TaskKind::Circle, 1, SolverChoice::AnalogOde, 0.0, false));
+    }
+    let mut ok_ids = Vec::new();
+    let mut shed_ids = Vec::new();
+    // the two sheds answer immediately; 1..3 answer once the gate drops
+    for _ in 0..2 {
+        let reply = read_reply(&mut r);
+        assert_eq!(reply.status, Status::Overloaded, "{:?}", reply.error);
+        assert_eq!(reply.queue_depth, Some(2), "bound on the wire");
+        assert_eq!(reply.queued_samples, Some(2));
+        shed_ids.push(reply.id);
+    }
+    drop(hold);
+    for _ in 0..3 {
+        let reply = read_reply(&mut r);
+        assert_eq!(reply.status, Status::Ok, "{:?}", reply.error);
+        ok_ids.push(reply.id);
+    }
+    shed_ids.sort_unstable();
+    ok_ids.sort_unstable();
+    assert_eq!(shed_ids, vec![4, 5]);
+    assert_eq!(ok_ids, vec![1, 2, 3]);
+
+    let metrics = front.metrics();
+    front.shutdown();
+    let snap = metrics.snapshot();
+    assert_eq!(snap.rejected, 2);
+    assert_eq!(snap.backends[0].rejected, 2);
+}
+
+#[test]
+fn tcp_connection_cap_rejects_at_edge() {
+    let front = tag_front(0, 1);
+    // first connection claims the only handler slot
+    let stream = TcpStream::connect(front.local_addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    send_line(&mut w, &protocol::request_line(
+        1, TaskKind::Circle, 1, SolverChoice::AnalogOde, 0.0, false));
+    assert_eq!(read_reply(&mut r).status, Status::Ok);
+    // second concurrent connection is answered `overloaded` and closed
+    let s2 = TcpStream::connect(front.local_addr()).unwrap();
+    let mut r2 = BufReader::new(s2);
+    let reply = read_reply(&mut r2);
+    assert_eq!(reply.status, Status::Overloaded);
+    assert!(reply.error.unwrap().contains("connection limit"));
+    let mut rest = String::new();
+    assert_eq!(r2.read_line(&mut rest).unwrap(), 0, "edge-rejected conn closes");
+    front.shutdown();
+}
+
+/// Graceful drain end-to-end: in-flight tickets complete and are
+/// delivered, new requests on live connections and brand-new connections
+/// both get `shutting_down`.
+#[test]
+fn tcp_graceful_drain_completes_inflight() {
+    let gate = Arc::new(Mutex::new(()));
+    let entered = Arc::new(AtomicUsize::new(0));
+    let reg = EngineRegistry::single(Arc::new(GateEngine {
+        gate: Arc::clone(&gate),
+        entered: Arc::clone(&entered),
+    }));
+    let s = Service::start_routed(reg, None, svc_cfg(1, 0));
+    let front = FrontEnd::bind(s, "127.0.0.1:0", FrontEndConfig {
+        poll: Duration::from_millis(2),
+        ..FrontEndConfig::default()
+    })
+    .unwrap();
+    let addr = front.local_addr();
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    // hold the gate first, then put one request in flight (worker
+    // blocked inside generate until the test releases it)
+    let hold = gate.lock().unwrap();
+    send_line(&mut w, &protocol::request_line(
+        1, TaskKind::Circle, 2, SolverChoice::AnalogOde, 0.0, false));
+    while entered.load(Ordering::SeqCst) == 0 {
+        std::thread::yield_now();
+    }
+
+    front.request_drain();
+    // a new request on the live connection: shutting_down
+    send_line(&mut w, &protocol::request_line(
+        2, TaskKind::Circle, 1, SolverChoice::AnalogOde, 0.0, false));
+    let reply = read_reply(&mut r);
+    assert_eq!((reply.id, reply.status), (2, Status::ShuttingDown));
+    // a brand-new connection: one shutting_down line, then closed
+    {
+        let s2 = TcpStream::connect(addr).unwrap();
+        let mut r2 = BufReader::new(s2);
+        assert_eq!(read_reply(&mut r2).status, Status::ShuttingDown);
+        let mut rest = String::new();
+        assert_eq!(r2.read_line(&mut rest).unwrap(), 0);
+    }
+
+    // release the worker: the in-flight ticket completes AND is delivered
+    drop(hold);
+    let reply = read_reply(&mut r);
+    assert_eq!((reply.id, reply.status), (1, Status::Ok));
+    assert_eq!(reply.samples.len(), 4);
+    // connection then closes (drained handler)
+    let mut rest = String::new();
+    assert_eq!(r.read_line(&mut rest).unwrap(), 0, "handler closes after drain");
+
+    // full shutdown joins cleanly under the no-dropped-request invariant
+    front.shutdown();
+}
+
+/// The `{"op":"shutdown"}` control line drives the same drain from the
+/// client side (what `memdiff client --shutdown` and the CI smoke use).
+#[test]
+fn tcp_client_shutdown_op_drains_server() {
+    let front = tag_front(0, 4);
+    let addr = front.local_addr();
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    send_line(&mut w, &protocol::request_line(
+        1, TaskKind::Circle, 1, SolverChoice::AnalogOde, 0.0, false));
+    assert_eq!(read_reply(&mut r).status, Status::Ok);
+    send_line(&mut w, &protocol::shutdown_line());
+    let ack = read_reply(&mut r);
+    assert_eq!(ack.status, Status::Ok);
+    // drain flag reached the front-end: wait_drain returns
+    front.wait_drain();
+    assert!(front.drain_requested());
+    front.shutdown();
+}
