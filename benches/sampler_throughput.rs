@@ -8,8 +8,10 @@
 //! the coordinator routes through), plus (e) the TCP front-end over
 //! loopback — sustained ticket latency/throughput and the reject rate of
 //! the bounded lanes at deliberate saturation (`frontend_*` keys) — and
-//! the results land in `BENCH_sampler_throughput.json` so the perf
-//! trajectory is tracked across PRs.
+//! (f) the durable job queue — fsync'd enqueue-ack latency and drained
+//! throughput (`jobs_*` keys).  The results land in
+//! `BENCH_sampler_throughput.json` so the perf trajectory is tracked
+//! across PRs.
 
 use std::sync::Arc;
 
@@ -335,6 +337,84 @@ fn main() -> anyhow::Result<()> {
     let fe_snap = fe_metrics.snapshot();
     bench::row(&["front-end metrics", &fe_snap.report()]);
 
+    bench::section("durable job queue (fsync'd enqueue ack, end-to-end)");
+    // the submit-now/fetch-later path: every enqueue pays one fsync before
+    // it is acknowledged, so both the ack latency and the drained
+    // throughput land in the perf trajectory
+    let jobs_dir = std::env::temp_dir()
+        .join(format!("memdiff_bench_jobs_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&jobs_dir);
+    let jq_service = Arc::new(Service::start(
+        Arc::new(RustDigitalEngine {
+            net: DigitalScoreNet::new(w.clone()),
+            sched: meta.sched,
+        }),
+        None,
+        ServiceConfig {
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch_samples: B,
+                linger: std::time::Duration::from_millis(1),
+                ..BatcherConfig::default()
+            },
+            seed: 29,
+            intra_threads: 0,
+        },
+    ));
+    let jq_store = Arc::new(memdiff::jobs::JobStore::open(&jobs_dir)?);
+    let jq_runner = memdiff::jobs::JobRunner::start(
+        Arc::clone(&jq_service),
+        Arc::clone(&jq_store),
+        memdiff::jobs::RunnerConfig::default(),
+    );
+    let jobs_total = 48usize;
+    let jobs_n = 8usize;
+    let mut enq_lats: Vec<f64> = Vec::with_capacity(jobs_total);
+    let t0 = std::time::Instant::now();
+    let job_ids: Vec<u64> = (0..jobs_total)
+        .map(|_| {
+            let t = std::time::Instant::now();
+            let id = jq_runner
+                .enqueue(
+                    &GenRequest {
+                        id: 0,
+                        task: TaskKind::Circle,
+                        n_samples: jobs_n,
+                        solver: SolverChoice::DigitalSde { steps: 100 },
+                        guidance: 0.0,
+                        decode: false,
+                    },
+                    0,
+                    None,
+                    None,
+                )
+                .expect("durable enqueue");
+            enq_lats.push(t.elapsed().as_secs_f64());
+            id
+        })
+        .collect();
+    let mut jobs_samples = 0usize;
+    for id in job_ids {
+        let j = jq_runner
+            .wait_result(id, std::time::Duration::from_secs(120))
+            .expect("job resolves");
+        anyhow::ensure!(j.state == memdiff::jobs::JobState::Done,
+                        "bench job {id} ended {:?} ({:?})", j.state, j.error);
+        jobs_samples += j.result.map_or(0, |r| r.samples.len() / 2);
+    }
+    let jobs_wall = t0.elapsed().as_secs_f64();
+    let jobs_sps = jobs_samples as f64 / jobs_wall;
+    let jobs_enq_p50 = memdiff::util::stats::percentile(&enq_lats, 50.0);
+    bench::row(&["job queue (100-step SDE, B=8/job)",
+                 &format!("{jobs_sps:.0} samples/s over {jobs_total} jobs  \
+                           enqueue-ack p50 {:.2} ms", 1e3 * jobs_enq_p50)]);
+    bench::row(&["job gauges", &jq_store.gauges().summary()]);
+    jq_runner.drain();
+    drop(jq_runner);
+    drop(jq_service);
+    drop(jq_store);
+    let _ = std::fs::remove_dir_all(&jobs_dir);
+
     bench::write_json("BENCH_sampler_throughput.json", &[
         ("batch_size", B as f64),
         ("digital_scalar_samples_per_s", digital_scalar),
@@ -360,6 +440,8 @@ fn main() -> anyhow::Result<()> {
         ("frontend_p99_ticket_latency_s", fe_p99),
         ("frontend_saturation_reject_rate", fe_reject_rate),
         ("frontend_rejected", fe_snap.rejected as f64),
+        ("jobs_samples_per_s", jobs_sps),
+        ("jobs_enqueue_fsync_p50_s", jobs_enq_p50),
     ])?;
     Ok(())
 }

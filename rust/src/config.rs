@@ -23,6 +23,13 @@
 //! rust_workers = 2
 //! analog_queue = 128   # per-backend lane bound in samples (0 = queue_depth)
 //! rust_weights = w.json  # per-backend weight path (default: standard artifacts)
+//!
+//! [jobs]
+//! max_retries = 4        # retry budget per job (runs at most budget+1 times)
+//! backoff_base_ms = 50   # first-retry backoff; doubles per attempt
+//! backoff_max_ms = 5000  # backoff ceiling
+//! result_ttl_ms = 900000 # retention of a terminal job's result/error
+//! checkpoint_every = 256 # log records between snapshot compactions
 //! ```
 
 use std::collections::BTreeMap;
@@ -123,6 +130,48 @@ pub struct Config {
     /// analog classes to the analog simulator and digital classes to the
     /// rust baseline.
     pub deploy: crate::coordinator::DeployPlan,
+    /// Durable-job-queue knobs from the `[jobs]` section (used only when
+    /// the server runs with `--state-dir`).
+    pub jobs: JobsConfig,
+}
+
+/// Typed `[jobs]` section — the config-file surface of
+/// [`crate::jobs::RunnerConfig`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobsConfig {
+    pub max_retries: u32,
+    pub backoff_base_ms: u64,
+    pub backoff_max_ms: u64,
+    pub result_ttl_ms: u64,
+    pub checkpoint_every: usize,
+}
+
+impl Default for JobsConfig {
+    fn default() -> Self {
+        JobsConfig {
+            max_retries: 4,
+            backoff_base_ms: 50,
+            backoff_max_ms: 5000,
+            result_ttl_ms: 900_000,
+            checkpoint_every: 256,
+        }
+    }
+}
+
+impl JobsConfig {
+    /// Lower into the runner's tuning (sweep/drain cadences keep the
+    /// runner defaults — they are operational, not workload, knobs).
+    pub fn runner_config(&self) -> crate::jobs::RunnerConfig {
+        use std::time::Duration;
+        crate::jobs::RunnerConfig {
+            max_retries: self.max_retries,
+            backoff_base: Duration::from_millis(self.backoff_base_ms),
+            backoff_max: Duration::from_millis(self.backoff_max_ms),
+            result_ttl: Duration::from_millis(self.result_ttl_ms),
+            checkpoint_every: self.checkpoint_every,
+            ..crate::jobs::RunnerConfig::default()
+        }
+    }
 }
 
 impl Default for Config {
@@ -139,6 +188,7 @@ impl Default for Config {
             seed: 7,
             artifacts_dir: None,
             deploy: crate::coordinator::DeployPlan::default(),
+            jobs: JobsConfig::default(),
         }
     }
 }
@@ -170,6 +220,23 @@ impl Config {
                     plan.set(k, v)?;
                 }
                 plan
+            },
+            jobs: JobsConfig {
+                max_retries: raw
+                    .get_parsed("jobs", "max_retries")?
+                    .unwrap_or(d.jobs.max_retries),
+                backoff_base_ms: raw
+                    .get_parsed("jobs", "backoff_base_ms")?
+                    .unwrap_or(d.jobs.backoff_base_ms),
+                backoff_max_ms: raw
+                    .get_parsed("jobs", "backoff_max_ms")?
+                    .unwrap_or(d.jobs.backoff_max_ms),
+                result_ttl_ms: raw
+                    .get_parsed("jobs", "result_ttl_ms")?
+                    .unwrap_or(d.jobs.result_ttl_ms),
+                checkpoint_every: raw
+                    .get_parsed("jobs", "checkpoint_every")?
+                    .unwrap_or(d.jobs.checkpoint_every),
             },
         })
     }
@@ -253,6 +320,28 @@ mod tests {
         let off = RawConfig::parse("[service]\nqueue_depth = 0\n").unwrap();
         assert_eq!(Config::from_raw(&off).unwrap().queue_depth, 0, "0 = unbounded");
         let bad = RawConfig::parse("[service]\nqueue_depth = deep\n").unwrap();
+        assert!(Config::from_raw(&bad).is_err());
+    }
+
+    #[test]
+    fn jobs_section_parses_with_defaults() {
+        let raw = RawConfig::parse(
+            "[jobs]\nmax_retries = 7\nbackoff_base_ms = 25\nresult_ttl_ms = 60000\n",
+        )
+        .unwrap();
+        let cfg = Config::from_raw(&raw).unwrap();
+        assert_eq!(cfg.jobs.max_retries, 7);
+        assert_eq!(cfg.jobs.backoff_base_ms, 25);
+        assert_eq!(cfg.jobs.backoff_max_ms, 5000, "untouched keys keep defaults");
+        assert_eq!(cfg.jobs.result_ttl_ms, 60_000);
+        assert_eq!(cfg.jobs.checkpoint_every, 256);
+        let rc = cfg.jobs.runner_config();
+        assert_eq!(rc.max_retries, 7);
+        assert_eq!(rc.backoff_base, std::time::Duration::from_millis(25));
+        // absent section = all defaults
+        let plain = Config::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(plain.jobs, JobsConfig::default());
+        let bad = RawConfig::parse("[jobs]\nmax_retries = many\n").unwrap();
         assert!(Config::from_raw(&bad).is_err());
     }
 

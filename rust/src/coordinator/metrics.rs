@@ -31,6 +31,31 @@ struct BackendGauge {
     wall_latency: Summary,
 }
 
+/// Per-state job counts + lifetime totals, pushed by the job runner
+/// (None until a `--state-dir` deployment publishes them).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct JobGauges {
+    pub queued: usize,
+    pub running: usize,
+    pub failed: usize,
+    pub done: usize,
+    pub dead: usize,
+    pub cancelled: usize,
+    pub enqueued_total: u64,
+    pub retries_total: u64,
+}
+
+impl JobGauges {
+    /// Compact `jobs=[...]` column for the one-line report.
+    pub fn summary(&self) -> String {
+        format!(
+            "[q{} run{} fail{} done{} dead{} canc{} enq{} retry{}]",
+            self.queued, self.running, self.failed, self.done, self.dead,
+            self.cancelled, self.enqueued_total, self.retries_total,
+        )
+    }
+}
+
 #[derive(Default)]
 struct Inner {
     requests: u64,
@@ -46,6 +71,10 @@ struct Inner {
     pool: Option<PoolStats>,
     backends: Vec<BackendGauge>,
     degraded: Vec<String>,
+    jobs: Option<JobGauges>,
+    /// Engine panics contained by the worker's `catch_unwind` (each fails
+    /// only its own batch's requests).
+    worker_panics: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -144,6 +173,33 @@ impl Metrics {
         self.inner.lock().unwrap().degraded.push(entry);
     }
 
+    /// Publish the job-queue gauges (pushed by the job runner).
+    pub fn set_jobs(&self, gauges: JobGauges) {
+        self.inner.lock().unwrap().jobs = Some(gauges);
+    }
+
+    /// Count one engine panic contained by a worker's `catch_unwind`.
+    pub fn record_worker_panic(&self) {
+        self.inner.lock().unwrap().worker_panics += 1;
+    }
+
+    /// Estimate how long a shed caller should wait before retrying
+    /// against backend `idx`, from the lane's observed drain rate: the
+    /// backend has served `samples` over `Σ wall_latency` busy-seconds,
+    /// so `queued_samples / rate` is the expected time to drain what is
+    /// queued now.  Clamped to [10 ms, 10 s]; 100 ms before any batch
+    /// has completed (no rate to derive).
+    pub fn retry_after_hint_ms(&self, idx: usize, queued_samples: usize) -> u64 {
+        let m = self.inner.lock().unwrap();
+        let Some(b) = m.backends.get(idx) else { return 100 };
+        let busy_s = b.wall_latency.sum();
+        if b.samples == 0 || busy_s <= 0.0 {
+            return 100;
+        }
+        let rate = b.samples as f64 / busy_s; // samples per busy-second
+        ((queued_samples as f64 / rate) * 1e3).clamp(10.0, 10_000.0) as u64
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         MetricsSnapshot {
@@ -171,6 +227,8 @@ impl Metrics {
                 })
                 .collect(),
             degraded: m.degraded.clone(),
+            jobs: m.jobs.clone(),
+            worker_panics: m.worker_panics,
         }
     }
 }
@@ -195,6 +253,10 @@ pub struct MetricsSnapshot {
     pub backends: Vec<BackendSnapshot>,
     /// Startup degradations (classes rerouted off a failed backend).
     pub degraded: Vec<String>,
+    /// Job-queue gauges (None unless a `--state-dir` deployment runs).
+    pub jobs: Option<JobGauges>,
+    /// Engine panics contained by worker `catch_unwind`.
+    pub worker_panics: u64,
 }
 
 /// Point-in-time copy of one backend's gauges.
@@ -259,6 +321,13 @@ impl MetricsSnapshot {
         if !self.degraded.is_empty() {
             s.push_str(" degraded=");
             s.push_str(&self.degraded.join(";"));
+        }
+        if let Some(j) = &self.jobs {
+            s.push_str(" jobs=");
+            s.push_str(&j.summary());
+        }
+        if self.worker_panics > 0 {
+            s.push_str(&format!(" panics={}", self.worker_panics));
         }
         if let Some(p) = &self.pool {
             s.push_str(&format!(
@@ -367,6 +436,47 @@ mod tests {
         let r = s.report();
         assert!(r.contains("pool=t4:scopes=12:tasks=96:qmax=9:hist=0/3/9/0/0"),
                 "{r}");
+    }
+
+    #[test]
+    fn job_gauges_and_panics_surface_in_report() {
+        let m = Metrics::new();
+        let base = m.snapshot();
+        assert!(base.jobs.is_none());
+        assert!(!base.report().contains("jobs="), "absent until published");
+        assert!(!base.report().contains("panics="), "absent until one lands");
+        m.set_jobs(JobGauges {
+            queued: 2,
+            running: 1,
+            done: 3,
+            enqueued_total: 6,
+            retries_total: 4,
+            ..JobGauges::default()
+        });
+        m.record_worker_panic();
+        let s = m.snapshot();
+        assert_eq!(s.jobs.as_ref().unwrap().done, 3);
+        assert_eq!(s.worker_panics, 1);
+        let r = s.report();
+        assert!(r.contains("jobs=[q2 run1 fail0 done3 dead0 canc0 enq6 retry4]"),
+                "{r}");
+        assert!(r.contains("panics=1"), "{r}");
+    }
+
+    #[test]
+    fn retry_after_hint_tracks_drain_rate() {
+        let m = Metrics::new();
+        m.set_backends(&["analog".to_string()]);
+        // no data yet: conservative default
+        assert_eq!(m.retry_after_hint_ms(0, 64), 100);
+        assert_eq!(m.retry_after_hint_ms(9, 64), 100, "unknown backend");
+        // 32 samples per 100ms busy → 320 samples/s; 64 queued → 200ms
+        m.record_backend_batch(0, 4, 32, 0.0, Duration::from_millis(100));
+        let hint = m.retry_after_hint_ms(0, 64);
+        assert!((190..=210).contains(&hint), "hint={hint}");
+        // clamped below and above
+        assert_eq!(m.retry_after_hint_ms(0, 0), 10);
+        assert_eq!(m.retry_after_hint_ms(0, 1_000_000), 10_000);
     }
 
     #[test]

@@ -78,7 +78,7 @@ pub(crate) mod testutil {
 
 pub use batcher::{Batch, Batcher, BatcherConfig, LaneSet, SubmitOutcome};
 pub use deploy::{BackendKind, DeployPlan, EngineRegistry};
-pub use metrics::Metrics;
+pub use metrics::{JobGauges, Metrics};
 pub use request::{GenRequest, GenResponse, RequestClass, SolverChoice,
                   SolverFamily, TaskKind};
 pub use service::{ModeGate, Service, ServiceConfig};

@@ -35,6 +35,16 @@ impl TaskKind {
             _ => None,
         }
     }
+
+    /// Inverse of [`Self::from_name`] — the stable wire/persistence name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Circle => "circle",
+            TaskKind::Letter(0) => "h",
+            TaskKind::Letter(1) => "k",
+            TaskKind::Letter(_) => "u",
+        }
+    }
 }
 
 /// Solver substrate family — the first routing axis of the deployment
@@ -119,6 +129,27 @@ impl SolverChoice {
             "analog-sde" => Some(SolverChoice::AnalogSde),
             "euler" => Some(SolverChoice::DigitalOde { steps }),
             "euler-sde" => Some(SolverChoice::DigitalSde { steps }),
+            _ => None,
+        }
+    }
+
+    /// Inverse of [`Self::from_name`] — the stable wire/persistence name
+    /// (pair it with [`Self::steps`] to round-trip digital choices).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverChoice::AnalogOde => "analog-ode",
+            SolverChoice::AnalogSde => "analog-sde",
+            SolverChoice::DigitalOde { .. } => "euler",
+            SolverChoice::DigitalSde { .. } => "euler-sde",
+        }
+    }
+
+    /// Step count of a digital choice (None for the analog solvers).
+    pub fn steps(&self) -> Option<usize> {
+        match self {
+            SolverChoice::DigitalOde { steps } | SolverChoice::DigitalSde { steps } => {
+                Some(*steps)
+            }
             _ => None,
         }
     }

@@ -419,9 +419,26 @@ impl Service {
                     while let Some(batch) = lane.next_batch() {
                         let _compute = mode_gate.compute();
                         let t0 = Instant::now();
-                        let result = Self::run_batch(&*engine,
-                                                     decoder.as_deref(),
-                                                     &batch, &mut rng);
+                        // contain engine panics: a poisoned request fails
+                        // its own batch's tickets while the worker (and
+                        // every other lane) keeps serving
+                        let result = match std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                Self::run_batch(&*engine, decoder.as_deref(),
+                                                &batch, &mut rng)
+                            })) {
+                            Ok(r) => r,
+                            Err(payload) => {
+                                metrics.record_worker_panic();
+                                let msg = payload
+                                    .downcast_ref::<&str>()
+                                    .map(|s| s.to_string())
+                                    .or_else(|| payload.downcast_ref::<String>()
+                                                       .cloned())
+                                    .unwrap_or_else(|| "opaque panic".into());
+                                Err(anyhow!("engine panicked: {msg}"))
+                            }
+                        };
                         let wall = t0.elapsed();
                         metrics.record_batch(
                             batch.requests.len(),
@@ -578,6 +595,11 @@ impl Service {
                     backend: self.registry.backend(lane_idx).name.clone(),
                     queued_samples,
                     queue_depth,
+                    // adaptive hint from the lane's observed drain rate so
+                    // shed callers back off instead of hammering
+                    retry_after_ms: self
+                        .metrics
+                        .retry_after_hint_ms(lane_idx, queued_samples),
                 })
             }
             SubmitOutcome::Closed => {
@@ -628,9 +650,11 @@ impl Service {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        let leftovers = self.tickets.fail_all(|| {
-            anyhow!("service shut down before the request completed")
-        });
+        // typed so job owners can tell a drained ticket (requeue, no
+        // retry budget consumed) from a real engine failure
+        let leftovers = self
+            .tickets
+            .fail_all(|| anyhow::Error::new(crate::serve::admission::DrainError));
         if !std::thread::panicking() {
             debug_assert_eq!(
                 leftovers, 0,
@@ -865,9 +889,11 @@ mod tests {
         // 4th queued sample exceeds the bound: Overloaded, exactly once
         let err = s.submit_nb(circle_req(1)).unwrap_err();
         match &err {
-            SubmitError::Overloaded { backend, queued_samples, queue_depth } => {
+            SubmitError::Overloaded { backend, queued_samples, queue_depth,
+                                      retry_after_ms } => {
                 assert_eq!(backend, "gated");
                 assert_eq!((*queued_samples, *queue_depth), (3, 3));
+                assert!(*retry_after_ms > 0, "a backoff hint is always derived");
             }
             other => panic!("expected Overloaded, got {other:?}"),
         }
@@ -933,6 +959,60 @@ mod tests {
         assert!(pool.threads >= 1);
         assert_eq!(s.exec_pool().threads(), pool.threads);
         assert!(m.report().contains("pool="), "{}", m.report());
+        s.shutdown();
+    }
+
+    /// Panics on conditional (lettered) requests, serves unconditional
+    /// ones — the poisoned-request stand-in.
+    struct PoisonEngine;
+
+    impl Engine for PoisonEngine {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn n_classes(&self) -> usize {
+            3
+        }
+        fn generate(&self, _s: SolverChoice, onehot: &[f32], _g: f32,
+                    n: usize, _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+            if onehot.iter().any(|&c| c != 0.0) {
+                panic!("poisoned request");
+            }
+            Ok(vec![1.0; n * 2])
+        }
+    }
+
+    #[test]
+    fn engine_panic_fails_only_its_own_request() {
+        let s = Service::start(
+            Arc::new(PoisonEngine),
+            None,
+            ServiceConfig {
+                workers: 1,
+                batcher: BatcherConfig {
+                    max_batch_samples: 64,
+                    linger: std::time::Duration::from_millis(1),
+                    ..BatcherConfig::default()
+                },
+                seed: 1,
+                intra_threads: 1,
+            },
+        );
+        // the poisoned request panics the engine; catch_unwind turns it
+        // into this request's error instead of killing the worker
+        let err = s
+            .generate(TaskKind::Letter(0), 2, SolverChoice::AnalogOde, 0.0, false)
+            .unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert!(err.to_string().contains("poisoned request"), "{err}");
+        // the same worker keeps serving healthy requests afterwards
+        let ok = s
+            .generate(TaskKind::Circle, 3, SolverChoice::AnalogOde, 0.0, false)
+            .expect("worker survives the panic");
+        assert_eq!(ok.samples.len(), 6);
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.worker_panics, 1);
+        assert!(snap.report().contains("panics=1"), "{}", snap.report());
         s.shutdown();
     }
 

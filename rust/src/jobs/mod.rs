@@ -1,0 +1,60 @@
+//! Durable job queue: submit-now / fetch-later semantics over the
+//! routed [`Service`](crate::coordinator::Service), with crash recovery,
+//! retry with backoff, and TTL result retention.
+//!
+//! A client no longer has to hold a TCP socket open for the whole
+//! generation: `enqueue` durably accepts the request and returns a job
+//! id; `status` / `result` (long-poll) fetch the outcome later — across
+//! a server restart if need be.
+//!
+//! ```text
+//!             enqueue                 submit_nb          ticket Ok
+//!  queued ──────────────▶ (due) ──▶ running ─────────────────▶ done
+//!    ▲                                │  │                      │ TTL
+//!    │  backoff elapsed               │  │ ticket Err /         ▼
+//!  failed ◀───────────────────────────┘  │ Overloaded shed   (swept)
+//!    │                                   │
+//!    │ budget exhausted / unroutable     │ DrainError (shutdown)
+//!    ▼                                   ▼
+//!   dead (error retained to TTL)     requeued as queued — no budget
+//!                                    consumed, survives the restart
+//!  cancel: queued/failed → cancelled immediately; running → flagged,
+//!  finalized cancelled when the in-flight attempt resolves.
+//! ```
+//!
+//! ## Crash-consistency contract
+//!
+//! 1. **Acknowledged means durable.**  [`JobStore::enqueue`] appends a
+//!    checksummed record ([`record`]) to the append-only log and
+//!    **fsyncs before returning the job id**.  Every later transition
+//!    (`fail`/`done`/`dead`/`cancel`/TTL expiry) is likewise an fsync'd
+//!    record.  A job id the caller has seen can never be silently lost.
+//! 2. **Torn tails are tolerated, never fatal.**  Replay applies every
+//!    complete, CRC-valid frame from the log head and stops at the first
+//!    invalid one; the file is truncated back to that clean prefix.  A
+//!    crash mid-append costs at most the *unacknowledged* record being
+//!    written — never an acknowledged one.
+//! 3. **`running` is not durable — execution is at-least-once.**  No
+//!    record marks attempt start, so a job in flight at the crash (or
+//!    requeued by a drain) replays as `queued` and is re-run.  A job
+//!    whose `done` record hit the log serves its retained result instead
+//!    of re-running.
+//! 4. **Checkpoints are atomic.**  [`JobStore::checkpoint`] writes the
+//!    full table to `snapshot.json` via tmp-file + fsync + rename, then
+//!    truncates the log; replay is snapshot-then-log.  A crash at any
+//!    byte of that sequence recovers to a consistent state.
+//! 5. **Graceful drain checkpoints rather than discards.**  On
+//!    [`JobRunner::drain`], in-flight attempts get a grace period to
+//!    finish durably; stragglers return to `queued` with no retry budget
+//!    consumed, and a final checkpoint lands before the thread exits.
+//!
+//! The wire surface (`enqueue`/`status`/`result`/`cancel` ops) lives in
+//! [`crate::serve::protocol`]; `memdiff serve --state-dir DIR` turns the
+//! whole layer on.
+
+pub mod record;
+pub mod runner;
+pub mod store;
+
+pub use runner::{JobRunner, RunnerConfig};
+pub use store::{now_ms, Job, JobResult, JobState, JobStore};

@@ -1,0 +1,172 @@
+//! Checksummed record frames for the append-only job log.
+//!
+//! Every record the [`JobStore`](super::store::JobStore) appends is one
+//! self-delimiting frame:
+//!
+//! ```text
+//! magic "MDJ1" (4) | payload len u32 LE (4) | crc32(payload) u32 LE (4) | payload
+//! ```
+//!
+//! The reader walks frames from the start and **stops at the first
+//! invalid one** — bad magic, over-cap length, a length that runs past
+//! the buffer, or a CRC mismatch.  That is the torn-tail contract: a
+//! crash mid-append leaves at most one partial frame at the end of the
+//! log, the replay applies every complete frame before it, and the store
+//! truncates the file back to the clean prefix so the next append starts
+//! on a frame boundary.  A frame that was fully written and fsync'd can
+//! never be lost to a *later* torn append.
+
+/// Frame magic — versioned so a future layout bump is detectable.
+pub const MAGIC: [u8; 4] = *b"MDJ1";
+
+/// Fixed frame header size (magic + len + crc).
+pub const HEADER_BYTES: usize = 12;
+
+/// Hard cap on one record's payload.  A corrupt length field must not
+/// drive an unbounded allocation during replay; real records (one job's
+/// request or result) are far below this.
+pub const MAX_RECORD_BYTES: usize = 1 << 26; // 64 MiB
+
+/// IEEE CRC-32 lookup table, built at compile time (std has no CRC).
+const CRC_TABLE: [u32; 256] = make_crc_table();
+
+const fn make_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// IEEE CRC-32 of a byte slice.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Encode one payload as a framed record.
+pub fn encode(payload: &[u8]) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_RECORD_BYTES);
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Decode every complete, checksum-valid frame from the start of `buf`.
+/// Returns the payloads plus the **clean prefix length** — the byte
+/// offset just past the last valid frame.  Anything beyond it (a torn or
+/// corrupt tail) should be truncated by the caller before appending.
+pub fn decode_all(buf: &[u8]) -> (Vec<Vec<u8>>, usize) {
+    let mut payloads = Vec::new();
+    let mut off = 0usize;
+    while off + HEADER_BYTES <= buf.len() {
+        if buf[off..off + 4] != MAGIC {
+            break;
+        }
+        let len =
+            u32::from_le_bytes(buf[off + 4..off + 8].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(buf[off + 8..off + 12].try_into().unwrap());
+        if len > MAX_RECORD_BYTES || off + HEADER_BYTES + len > buf.len() {
+            break;
+        }
+        let payload = &buf[off + HEADER_BYTES..off + HEADER_BYTES + len];
+        if crc32(payload) != crc {
+            break;
+        }
+        payloads.push(payload.to_vec());
+        off += HEADER_BYTES + len;
+    }
+    (payloads, off)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_multiple_frames() {
+        let records: Vec<&[u8]> = vec![b"alpha", b"", b"{\"t\":\"enq\"}"];
+        let mut buf = Vec::new();
+        for r in &records {
+            buf.extend_from_slice(&encode(r));
+        }
+        let (got, clean) = decode_all(&buf);
+        assert_eq!(clean, buf.len());
+        assert_eq!(got.len(), 3);
+        for (g, r) in got.iter().zip(&records) {
+            assert_eq!(g.as_slice(), *r);
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_offset_never_panics_or_loses_prefix() {
+        let records: Vec<Vec<u8>> =
+            (0..5).map(|i| format!("record-{i}-{}", "x".repeat(i * 7)).into_bytes())
+                  .collect();
+        let mut buf = Vec::new();
+        let mut boundaries = Vec::new(); // clean length after frame i
+        for r in &records {
+            buf.extend_from_slice(&encode(r));
+            boundaries.push(buf.len());
+        }
+        for cut in 0..=buf.len() {
+            let (got, clean) = decode_all(&buf[..cut]);
+            // complete frames entirely before the cut always survive
+            let expect = boundaries.iter().filter(|&&b| b <= cut).count();
+            assert_eq!(got.len(), expect, "cut at {cut}");
+            assert_eq!(clean, boundaries.get(expect.wrapping_sub(1)).copied()
+                                        .unwrap_or(0));
+        }
+    }
+
+    #[test]
+    fn corruption_stops_at_the_bad_frame() {
+        let mut buf = encode(b"good-one");
+        let keep = buf.len();
+        buf.extend_from_slice(&encode(b"will-be-corrupted"));
+        // flip one payload bit of the second frame
+        let n = buf.len();
+        buf[n - 3] ^= 0x40;
+        let (got, clean) = decode_all(&buf);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].as_slice(), b"good-one");
+        assert_eq!(clean, keep, "clean prefix ends before the corrupt frame");
+        // bad magic likewise stops the walk without consuming bytes
+        let mut junk = b"XXXX".to_vec();
+        junk.extend_from_slice(&encode(b"unreachable"));
+        assert_eq!(decode_all(&junk).0.len(), 0);
+    }
+
+    #[test]
+    fn absurd_length_field_is_rejected_not_allocated() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 64]);
+        let (got, clean) = decode_all(&buf);
+        assert!(got.is_empty());
+        assert_eq!(clean, 0);
+    }
+}

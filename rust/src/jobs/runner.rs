@@ -1,0 +1,560 @@
+//! The job lifecycle driver: submits due jobs through
+//! [`Service::submit_nb`], retries transient failures with exponential
+//! backoff + jitter, contains budget exhaustion as `dead`, retains
+//! results to their TTL, and checkpoints on graceful drain.
+//!
+//! One background thread owns the whole lifecycle.  It sleeps on a
+//! [`Notify`] waker that is registered on every in-flight ticket (the
+//! same waker pattern the TCP front-end uses), so completions wake it
+//! immediately; deferred jobs and backoff deadlines bound the sleep via
+//! [`JobStore::next_run_at`].
+//!
+//! ## Failure taxonomy
+//!
+//! * **Transient** — an engine error or an [`SubmitError::Overloaded`]
+//!   shed.  One attempt is consumed; the job parks as `failed` until
+//!   `now + backoff`, where backoff is `base · 2^(attempt−1)` capped at
+//!   `backoff_max`, jittered ×[0.5, 1.5), and never below the lane's
+//!   `retry_after_ms` hint when the shed carried one.
+//! * **Permanent** — `Unroutable`/`Invalid`, or the retry budget is
+//!   exhausted: the job goes `dead` with its last error retained.
+//! * **Drain** — a ticket failed by service shutdown
+//!   ([`DrainError`](crate::serve::admission::DrainError)) is *not* a
+//!   failed attempt: the job is requeued with no budget consumed, so the
+//!   restart re-runs it exactly as a crash would have.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::GenRequest;
+use crate::coordinator::Service;
+use crate::serve::admission::{DrainError, SubmitError};
+use crate::serve::ticket::{Notify, Ticket};
+use crate::util::rng::Rng;
+
+use super::store::{now_ms, Job, JobState, JobStore};
+
+/// Tuning for the [`JobRunner`] (see `[jobs]` in the config file).
+#[derive(Debug, Clone)]
+pub struct RunnerConfig {
+    /// Default retry budget for jobs enqueued without an explicit one
+    /// (a job executes at most `max_retries + 1` times).
+    pub max_retries: u32,
+    /// First-retry backoff; doubles per attempt.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+    /// Default retention of a terminal job's result/error.
+    pub result_ttl: Duration,
+    /// Cadence of the TTL sweep and gauge push.
+    pub sweep_interval: Duration,
+    /// Compact log → snapshot once this many records have accumulated.
+    pub checkpoint_every: usize,
+    /// On drain, wait this long for in-flight attempts before requeueing
+    /// them (they survive as `queued` either way).
+    pub drain_grace: Duration,
+}
+
+impl Default for RunnerConfig {
+    fn default() -> Self {
+        RunnerConfig {
+            max_retries: 4,
+            backoff_base: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(5),
+            result_ttl: Duration::from_secs(900),
+            sweep_interval: Duration::from_secs(1),
+            checkpoint_every: 256,
+            drain_grace: Duration::from_secs(30),
+        }
+    }
+}
+
+struct Shared {
+    service: Arc<Service>,
+    store: Arc<JobStore>,
+    cfg: RunnerConfig,
+    /// Woken by ticket completions, new enqueues, cancels, and drain.
+    wake: Notify,
+    stop: AtomicBool,
+    /// Long-poll waiters per job id, notified on terminal transitions.
+    watchers: Mutex<HashMap<u64, Vec<Notify>>>,
+}
+
+impl Shared {
+    fn notify_watchers(&self, id: u64) {
+        if let Some(list) = self.watchers.lock().unwrap().remove(&id) {
+            for n in list {
+                n.notify();
+            }
+        }
+    }
+
+    fn push_gauges(&self) {
+        self.service.metrics.set_jobs(self.store.gauges());
+    }
+}
+
+/// Handle to the lifecycle thread.  Dropping it drains gracefully:
+/// in-flight attempts get [`RunnerConfig::drain_grace`] to finish, then
+/// everything is checkpointed — never discarded.
+pub struct JobRunner {
+    sh: Arc<Shared>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl JobRunner {
+    /// Start the lifecycle thread over an opened store.
+    pub fn start(service: Arc<Service>, store: Arc<JobStore>,
+                 cfg: RunnerConfig) -> Arc<JobRunner> {
+        let sh = Arc::new(Shared {
+            service,
+            store,
+            cfg,
+            wake: Notify::new(),
+            stop: AtomicBool::new(false),
+            watchers: Mutex::new(HashMap::new()),
+        });
+        sh.push_gauges();
+        let loop_sh = Arc::clone(&sh);
+        let thread = std::thread::Builder::new()
+            .name("job-runner".into())
+            .spawn(move || run_loop(&loop_sh))
+            .expect("spawning job-runner thread");
+        Arc::new(JobRunner { sh, thread: Mutex::new(Some(thread)) })
+    }
+
+    /// Durably accept a job (fsync'd before the id is returned).
+    /// `defer_ms` delays the first run; `max_retries`/`ttl_ms` default to
+    /// the runner config.
+    pub fn enqueue(&self, req: &GenRequest, defer_ms: u64,
+                   max_retries: Option<u32>, ttl_ms: Option<u64>)
+                   -> anyhow::Result<u64> {
+        let id = self.sh.store.enqueue(
+            req,
+            defer_ms,
+            max_retries.unwrap_or(self.sh.cfg.max_retries),
+            ttl_ms.unwrap_or(self.sh.cfg.result_ttl.as_millis() as u64),
+        )?;
+        self.sh.push_gauges();
+        self.sh.wake.notify();
+        Ok(id)
+    }
+
+    /// Snapshot a job's current state (None = unknown or swept).
+    pub fn get(&self, id: u64) -> Option<Job> {
+        self.sh.store.get(id)
+    }
+
+    /// Cancel a job (see [`JobStore::cancel`] for the state rules).
+    pub fn cancel(&self, id: u64) -> anyhow::Result<JobState> {
+        let state = self.sh.store.cancel(id)?;
+        if state.is_terminal() {
+            self.sh.notify_watchers(id);
+        }
+        self.sh.push_gauges();
+        self.sh.wake.notify();
+        Ok(state)
+    }
+
+    /// Register a waker fired when `id` reaches a terminal state
+    /// (immediately if it already has, or is unknown).  This is what the
+    /// front-end's long-poll `result` op sleeps on.
+    pub fn subscribe(&self, id: u64, notify: &Notify) {
+        let mut w = self.sh.watchers.lock().unwrap();
+        match self.sh.store.get(id) {
+            Some(j) if !j.state.is_terminal() => {
+                w.entry(id).or_default().push(notify.clone());
+            }
+            _ => notify.notify(),
+        }
+    }
+
+    /// Block until `id` is terminal or `timeout` elapses; returns the
+    /// latest snapshot (non-terminal on timeout, None if unknown).
+    pub fn wait_result(&self, id: u64, timeout: Duration) -> Option<Job> {
+        let deadline = Instant::now() + timeout;
+        let n = Notify::new();
+        loop {
+            let job = self.sh.store.get(id)?;
+            if job.state.is_terminal() {
+                return Some(job);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Some(job);
+            }
+            self.subscribe(id, &n);
+            n.wait_timeout(deadline - now);
+        }
+    }
+
+    /// The underlying store (tests and the serve layer peek at it).
+    pub fn store(&self) -> &Arc<JobStore> {
+        &self.sh.store
+    }
+
+    /// Stop the lifecycle thread: in-flight attempts get `drain_grace`
+    /// to finish (results recorded durably), stragglers are requeued,
+    /// and the store is checkpointed.  Idempotent.
+    pub fn drain(&self) {
+        self.sh.stop.store(true, Ordering::SeqCst);
+        self.sh.wake.notify();
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for JobRunner {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+/// Backoff before retry `attempt` (1-based): exponential from the base,
+/// capped, jittered ×[0.5, 1.5) so synchronized failures don't retry in
+/// lockstep.
+fn backoff_ms(cfg: &RunnerConfig, attempt: u32, rng: &mut Rng) -> u64 {
+    let base = (cfg.backoff_base.as_millis() as u64).max(1);
+    let cap = (cfg.backoff_max.as_millis() as u64).max(1);
+    let exp = base.saturating_mul(1u64 << attempt.saturating_sub(1).min(20));
+    let jitter = 0.5 + rng.uniform();
+    (((exp.min(cap) as f64) * jitter) as u64).clamp(1, cap)
+}
+
+/// Consume one attempt after a transient failure: park as `failed` with
+/// backoff (at least `hint_ms`), or go `dead` when the budget is out.
+fn record_attempt_failure(sh: &Shared, job: &Job, err: &str, hint_ms: u64,
+                          rng: &mut Rng) {
+    let r = if job.attempts >= job.max_retries {
+        sh.store.record_dead(job.id, err)
+    } else {
+        let delay = backoff_ms(&sh.cfg, job.attempts + 1, rng).max(hint_ms);
+        sh.store.record_failure(job.id, err, now_ms() + delay)
+    };
+    if let Err(e) = r {
+        eprintln!("job {}: failed to persist outcome: {e}", job.id);
+    }
+    if sh.store.get(job.id).map(|j| j.state.is_terminal()).unwrap_or(true) {
+        sh.notify_watchers(job.id);
+    }
+}
+
+fn run_loop(sh: &Shared) {
+    let mut inflight: HashMap<u64, Ticket> = HashMap::new();
+    let mut rng = Rng::new(0x6A6F_6273); // "jobs"
+    let mut svc_down = false;
+    let mut drain_deadline: Option<Instant> = None;
+    let mut last_sweep = Instant::now();
+
+    loop {
+        let stopping = sh.stop.load(Ordering::SeqCst);
+        if stopping && drain_deadline.is_none() {
+            drain_deadline = Some(Instant::now() + sh.cfg.drain_grace);
+        }
+
+        // 1. harvest completed tickets
+        let done: Vec<u64> = inflight
+            .iter()
+            .filter(|(_, t)| t.is_done())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in done {
+            let ticket = inflight.remove(&id).unwrap();
+            match ticket.try_recv() {
+                Some(Ok(resp)) => {
+                    if let Err(e) = sh.store.record_done(id, resp.into()) {
+                        eprintln!("job {id}: failed to persist result: {e}");
+                    }
+                    sh.notify_watchers(id);
+                }
+                Some(Err(e)) => {
+                    if e.downcast_ref::<DrainError>().is_some() {
+                        // the service drained under us: not the job's
+                        // fault — requeue with no budget consumed
+                        sh.store.requeue(id);
+                        svc_down = true;
+                    } else if let Some(job) = sh.store.get(id) {
+                        record_attempt_failure(sh, &job, &format!("{e:#}"), 0,
+                                               &mut rng);
+                    }
+                }
+                None => {
+                    // raced with is_done; put it back
+                    inflight.insert(id, ticket);
+                }
+            }
+        }
+
+        // 2. submit due jobs (unless the service is going away)
+        if !stopping && !svc_down {
+            let now = now_ms();
+            for id in sh.store.due(now) {
+                if inflight.contains_key(&id) {
+                    continue;
+                }
+                let Some(job) = sh.store.get(id) else { continue };
+                match sh.service.submit_nb(job.to_request()) {
+                    Ok(ticket) => {
+                        ticket.set_notify(&sh.wake);
+                        sh.store.mark_running(id);
+                        inflight.insert(id, ticket);
+                    }
+                    Err(SubmitError::Overloaded { retry_after_ms, .. }) => {
+                        record_attempt_failure(sh, &job, "lane overloaded",
+                                               retry_after_ms, &mut rng);
+                    }
+                    Err(SubmitError::ShuttingDown) => {
+                        // leave the job queued: it survives to the restart
+                        svc_down = true;
+                        break;
+                    }
+                    Err(e) => {
+                        // Unroutable / Invalid: no retry will change it
+                        if let Err(pe) = sh.store.record_dead(id, &e.to_string()) {
+                            eprintln!("job {id}: failed to persist outcome: {pe}");
+                        }
+                        sh.notify_watchers(id);
+                    }
+                }
+            }
+        }
+
+        // 3. periodic TTL sweep, gauges, compaction
+        if last_sweep.elapsed() >= sh.cfg.sweep_interval {
+            last_sweep = Instant::now();
+            if let Err(e) = sh.store.sweep_expired(now_ms()) {
+                eprintln!("job TTL sweep failed: {e}");
+            }
+        }
+        if sh.store.appended_records() >= sh.cfg.checkpoint_every {
+            if let Err(e) = sh.store.checkpoint() {
+                eprintln!("job checkpoint failed: {e}");
+            }
+        }
+        sh.push_gauges();
+
+        // 4. exit conditions
+        if (stopping || svc_down) && inflight.is_empty() {
+            break;
+        }
+        if let Some(dl) = drain_deadline {
+            if Instant::now() >= dl {
+                // grace expired: the attempts never completed, so they
+                // restart as queued — checkpointed, not discarded
+                for (id, _ticket) in inflight.drain() {
+                    sh.store.requeue(id);
+                }
+                break;
+            }
+        }
+
+        // 5. sleep until woken or the next deadline
+        let mut timeout = sh.cfg.sweep_interval;
+        if let Some(next) = sh.store.next_run_at() {
+            let wait = next.saturating_sub(now_ms());
+            timeout = timeout.min(Duration::from_millis(wait.max(1)));
+        }
+        if stopping {
+            timeout = timeout.min(Duration::from_millis(50));
+        }
+        sh.wake.wait_timeout(timeout);
+    }
+
+    // graceful exit: everything durable, log compacted
+    if let Err(e) = sh.store.checkpoint() {
+        eprintln!("final job checkpoint failed: {e}");
+    }
+    sh.push_gauges();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{GenRequest, SolverChoice, TaskKind};
+    use crate::coordinator::service::Engine;
+    use crate::coordinator::{BatcherConfig, Service, ServiceConfig};
+    use std::path::PathBuf;
+    use std::sync::atomic::AtomicUsize;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("memdiff_runner_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn req(n: usize) -> GenRequest {
+        GenRequest {
+            id: 0,
+            task: TaskKind::Circle,
+            n_samples: n,
+            solver: SolverChoice::AnalogOde,
+            guidance: 0.0,
+            decode: false,
+        }
+    }
+
+    fn svc(engine: Arc<dyn Engine>) -> Arc<Service> {
+        Arc::new(Service::start(
+            engine,
+            None,
+            ServiceConfig {
+                workers: 1,
+                batcher: BatcherConfig {
+                    max_batch_samples: 64,
+                    linger: Duration::from_millis(1),
+                    ..BatcherConfig::default()
+                },
+                seed: 7,
+                intra_threads: 1,
+            },
+        ))
+    }
+
+    fn fast_cfg() -> RunnerConfig {
+        RunnerConfig {
+            max_retries: 2,
+            backoff_base: Duration::from_millis(5),
+            backoff_max: Duration::from_millis(20),
+            result_ttl: Duration::from_secs(60),
+            sweep_interval: Duration::from_millis(20),
+            checkpoint_every: 10_000,
+            drain_grace: Duration::from_secs(5),
+        }
+    }
+
+    /// Succeeds always (tags samples 1.0).
+    struct OkEngine;
+    impl Engine for OkEngine {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn n_classes(&self) -> usize {
+            3
+        }
+        fn generate(&self, _s: SolverChoice, _c: &[f32], _g: f32, n: usize,
+                    _r: &mut Rng) -> anyhow::Result<Vec<f32>> {
+            Ok(vec![1.0; n * 2])
+        }
+    }
+
+    /// Fails the first `fails` calls, then succeeds.
+    struct FlakyEngine {
+        fails: usize,
+        calls: AtomicUsize,
+    }
+    impl Engine for FlakyEngine {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn n_classes(&self) -> usize {
+            3
+        }
+        fn generate(&self, _s: SolverChoice, _c: &[f32], _g: f32, n: usize,
+                    _r: &mut Rng) -> anyhow::Result<Vec<f32>> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) < self.fails {
+                anyhow::bail!("injected transient failure");
+            }
+            Ok(vec![2.0; n * 2])
+        }
+    }
+
+    #[test]
+    fn job_runs_to_done_and_result_is_durable() {
+        let dir = tmpdir("done");
+        let id;
+        {
+            let store = Arc::new(JobStore::open(&dir).unwrap());
+            let runner = JobRunner::start(svc(Arc::new(OkEngine)), store, fast_cfg());
+            id = runner.enqueue(&req(4), 0, None, None).unwrap();
+            let job = runner.wait_result(id, Duration::from_secs(10)).unwrap();
+            assert_eq!(job.state, JobState::Done);
+            assert_eq!(job.result.as_ref().unwrap().samples.len(), 8);
+            runner.drain();
+        }
+        // the retained result survives a restart
+        let store = JobStore::open(&dir).unwrap();
+        let job = store.get(id).unwrap();
+        assert_eq!(job.state, JobState::Done);
+        assert_eq!(job.result.unwrap().samples, vec![1.0; 8]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn transient_failures_retry_then_succeed() {
+        let dir = tmpdir("flaky");
+        let store = Arc::new(JobStore::open(&dir).unwrap());
+        let engine = Arc::new(FlakyEngine { fails: 2, calls: AtomicUsize::new(0) });
+        let runner = JobRunner::start(svc(engine), store, fast_cfg());
+        let id = runner.enqueue(&req(2), 0, Some(3), None).unwrap();
+        let job = runner.wait_result(id, Duration::from_secs(10)).unwrap();
+        assert_eq!(job.state, JobState::Done, "err={:?}", job.error);
+        assert_eq!(job.attempts, 2, "two failed attempts before success");
+        runner.drain();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budget_exhaustion_goes_dead_with_error_retained() {
+        let dir = tmpdir("dead");
+        let store = Arc::new(JobStore::open(&dir).unwrap());
+        let engine =
+            Arc::new(FlakyEngine { fails: usize::MAX, calls: AtomicUsize::new(0) });
+        let runner = JobRunner::start(svc(engine), store, fast_cfg());
+        let id = runner.enqueue(&req(1), 0, Some(1), None).unwrap();
+        let job = runner.wait_result(id, Duration::from_secs(10)).unwrap();
+        assert_eq!(job.state, JobState::Dead);
+        assert_eq!(job.attempts, 1);
+        assert!(job.error.unwrap().contains("transient failure"));
+        runner.drain();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn deferred_job_waits_for_run_at() {
+        let dir = tmpdir("defer");
+        let store = Arc::new(JobStore::open(&dir).unwrap());
+        let runner = JobRunner::start(svc(Arc::new(OkEngine)), store, fast_cfg());
+        let id = runner.enqueue(&req(1), 150, None, None).unwrap();
+        let early = runner.wait_result(id, Duration::from_millis(30)).unwrap();
+        assert!(!early.state.is_terminal(), "must still be waiting");
+        let job = runner.wait_result(id, Duration::from_secs(10)).unwrap();
+        assert_eq!(job.state, JobState::Done);
+        runner.drain();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cancel_before_run_prevents_execution() {
+        let dir = tmpdir("cancel");
+        let store = Arc::new(JobStore::open(&dir).unwrap());
+        let runner = JobRunner::start(svc(Arc::new(OkEngine)), store, fast_cfg());
+        let id = runner.enqueue(&req(1), 60_000, None, None).unwrap();
+        assert_eq!(runner.cancel(id).unwrap(), JobState::Cancelled);
+        let job = runner.wait_result(id, Duration::from_secs(2)).unwrap();
+        assert_eq!(job.state, JobState::Cancelled);
+        assert!(job.result.is_none());
+        runner.drain();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gauges_flow_into_service_metrics() {
+        let dir = tmpdir("gauges");
+        let store = Arc::new(JobStore::open(&dir).unwrap());
+        let service = svc(Arc::new(OkEngine));
+        let runner = JobRunner::start(Arc::clone(&service), store, fast_cfg());
+        let id = runner.enqueue(&req(1), 0, None, None).unwrap();
+        runner.wait_result(id, Duration::from_secs(10)).unwrap();
+        runner.drain();
+        let snap = service.metrics.snapshot();
+        let jobs = snap.jobs.expect("job gauges published");
+        assert_eq!(jobs.enqueued_total, 1);
+        assert_eq!(jobs.done, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,899 @@
+//! Durable job state: append-only record log + snapshot under a state
+//! directory.
+//!
+//! The [`JobStore`] is the persistence half of the job layer.  Every
+//! accepted mutation — enqueue, failed attempt, terminal outcome, cancel,
+//! TTL expiry — is one checksummed frame ([`super::record`]) appended to
+//! `jobs.log` and **fsync'd before the call returns**, so an acknowledged
+//! enqueue survives SIGKILL.  [`JobStore::checkpoint`] compacts the pair:
+//! the full job table is written to `snapshot.json` atomically (tmp +
+//! fsync + rename) and the log is truncated.  [`JobStore::open`] replays
+//! snapshot-then-log, tolerating a torn log tail (the partial frame is
+//! discarded and the file truncated back to the clean prefix).
+//!
+//! `Running` is deliberately **not** a durable state: no record marks the
+//! start of an attempt, so any job that was in flight at the crash
+//! replays as `Queued` and is re-run — at-least-once execution, never
+//! silent loss.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context};
+
+use super::record;
+use crate::coordinator::metrics::JobGauges;
+use crate::coordinator::request::{GenRequest, GenResponse, SolverChoice, TaskKind};
+use crate::util::json::Json;
+
+/// Milliseconds since the unix epoch — the store's wall-clock unit
+/// (persisted `run_at` / `expire_at` stamps must survive restarts, so
+/// they cannot be `Instant`s).
+pub fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Lifecycle state of one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting for its `run_at` time and a lane slot.
+    Queued,
+    /// Submitted to the service; a ticket is in flight.
+    Running,
+    /// Last attempt failed; waiting out its backoff until `run_at`.
+    Failed,
+    /// Completed; result retained until `expire_at`.
+    Done,
+    /// Retry budget exhausted; error retained until `expire_at`.
+    Dead,
+    /// Cancelled by the client.
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Failed => "failed",
+            JobState::Done => "done",
+            JobState::Dead => "dead",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<JobState> {
+        match s {
+            "queued" => Some(JobState::Queued),
+            "running" => Some(JobState::Running),
+            "failed" => Some(JobState::Failed),
+            "done" => Some(JobState::Done),
+            "dead" => Some(JobState::Dead),
+            "cancelled" => Some(JobState::Cancelled),
+            _ => None,
+        }
+    }
+
+    /// Terminal states never transition again (and carry an `expire_at`).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Dead | JobState::Cancelled)
+    }
+}
+
+/// Retained result of a completed job (the durable subset of
+/// [`GenResponse`]).
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub samples: Vec<f32>,
+    pub images: Option<Vec<f32>>,
+    pub wall_latency_s: f64,
+    pub hw_latency_s: f64,
+    pub hw_energy_j: f64,
+}
+
+impl From<GenResponse> for JobResult {
+    fn from(r: GenResponse) -> Self {
+        JobResult {
+            samples: r.samples,
+            images: r.images,
+            wall_latency_s: r.wall_latency_s,
+            hw_latency_s: r.hw_latency_s,
+            hw_energy_j: r.hw_energy_j,
+        }
+    }
+}
+
+/// One durable job: the request plus its lifecycle bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: u64,
+    pub task: TaskKind,
+    pub n_samples: usize,
+    pub solver: SolverChoice,
+    pub guidance: f32,
+    pub decode: bool,
+    pub state: JobState,
+    /// Completed attempts (failed submissions/executions so far).
+    pub attempts: u32,
+    /// Retry budget: the job goes `Dead` when `attempts` would exceed it.
+    pub max_retries: u32,
+    /// Earliest time (unix ms) the job may run — enqueue deferral or the
+    /// current retry backoff.
+    pub run_at_ms: u64,
+    /// Retention of the terminal record (result or error) in ms.
+    pub ttl_ms: u64,
+    /// When a terminal job's record is swept (unix ms; 0 = not terminal).
+    pub expire_at_ms: u64,
+    /// Last failure message (also the terminal error of a `Dead` job).
+    pub error: Option<String>,
+    pub result: Option<JobResult>,
+    /// Cancel arrived while the job was in flight; the completion will be
+    /// discarded and the job finalized as `Cancelled`.
+    pub cancel_requested: bool,
+}
+
+impl Job {
+    /// The service request this job re-submits on every attempt.
+    pub fn to_request(&self) -> GenRequest {
+        GenRequest {
+            id: 0,
+            task: self.task,
+            n_samples: self.n_samples,
+            solver: self.solver,
+            guidance: self.guidance,
+            decode: self.decode,
+        }
+    }
+}
+
+struct Inner {
+    log: File,
+    /// Records appended since the last checkpoint (compaction trigger).
+    appended: usize,
+    jobs: BTreeMap<u64, Job>,
+    next_id: u64,
+    enqueued_total: u64,
+    retries_total: u64,
+}
+
+/// The durable job table (see the module docs for the crash contract).
+pub struct JobStore {
+    dir: PathBuf,
+    inner: Mutex<Inner>,
+}
+
+const LOG_FILE: &str = "jobs.log";
+const SNAP_FILE: &str = "snapshot.json";
+
+impl JobStore {
+    /// Open (or create) a state directory and replay it: snapshot first,
+    /// then every complete log record; a torn log tail is truncated.
+    /// Jobs that were `Running` at the crash come back `Queued`.
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<JobStore> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating state dir {}", dir.display()))?;
+        let mut inner = Inner {
+            // placeholder; replaced below after replay/truncate
+            log: OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(dir.join(LOG_FILE))?,
+            appended: 0,
+            jobs: BTreeMap::new(),
+            next_id: 1,
+            enqueued_total: 0,
+            retries_total: 0,
+        };
+
+        let snap_path = dir.join(SNAP_FILE);
+        if let Ok(text) = std::fs::read_to_string(&snap_path) {
+            let j = Json::parse(&text)
+                .map_err(|e| anyhow!("corrupt {}: {e}", snap_path.display()))?;
+            inner.next_id =
+                j.get("next_id").and_then(|v| v.as_f64()).unwrap_or(1.0) as u64;
+            inner.enqueued_total =
+                j.get("enqueued_total").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+            inner.retries_total =
+                j.get("retries_total").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+            for jj in j.get("jobs").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                let job = job_from_json(jj)
+                    .ok_or_else(|| anyhow!("corrupt job in snapshot"))?;
+                inner.jobs.insert(job.id, job);
+            }
+        }
+
+        let log_path = dir.join(LOG_FILE);
+        let bytes = std::fs::read(&log_path).unwrap_or_default();
+        let (payloads, clean) = record::decode_all(&bytes);
+        for p in &payloads {
+            let text = std::str::from_utf8(p)
+                .map_err(|_| anyhow!("non-utf8 log record"))?;
+            let j = Json::parse(text).map_err(|e| anyhow!("corrupt record: {e}"))?;
+            apply_record(&mut inner, &j)?;
+        }
+        if clean < bytes.len() {
+            // torn/corrupt tail: cut back to the last complete frame so
+            // the next append starts on a frame boundary
+            let f = OpenOptions::new().write(true).open(&log_path)?;
+            f.set_len(clean as u64)?;
+            f.sync_data()?;
+        }
+        // an attempt in flight at the crash replays as queued (re-run;
+        // at-least-once) — unless a durable cancel arrived meanwhile
+        for job in inner.jobs.values_mut() {
+            if job.state == JobState::Running {
+                job.state = JobState::Queued;
+            }
+        }
+        inner.log = OpenOptions::new().create(true).append(true).open(&log_path)?;
+        inner.appended = payloads.len();
+        Ok(JobStore { dir, inner: Mutex::new(inner) })
+    }
+
+    /// The state directory this store persists under.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Persist and admit a new job.  Returns its id only after the `enq`
+    /// record is on disk and fsync'd — the durability acknowledgement.
+    pub fn enqueue(&self, req: &GenRequest, defer_ms: u64, max_retries: u32,
+                   ttl_ms: u64) -> anyhow::Result<u64> {
+        let mut m = self.inner.lock().unwrap();
+        let id = m.next_id;
+        m.next_id += 1;
+        let job = Job {
+            id,
+            task: req.task,
+            n_samples: req.n_samples,
+            solver: req.solver,
+            guidance: req.guidance,
+            decode: req.decode,
+            state: JobState::Queued,
+            attempts: 0,
+            max_retries,
+            run_at_ms: now_ms() + defer_ms,
+            ttl_ms,
+            expire_at_ms: 0,
+            error: None,
+            result: None,
+            cancel_requested: false,
+        };
+        let rec = enq_record(&job);
+        append_synced(&mut m, &rec)?;
+        m.enqueued_total += 1;
+        m.jobs.insert(id, job);
+        Ok(id)
+    }
+
+    /// Mark a job in flight.  In-memory only — no record is written, so a
+    /// crash now replays the job as `Queued` (the at-least-once contract).
+    pub fn mark_running(&self, id: u64) {
+        let mut m = self.inner.lock().unwrap();
+        if let Some(j) = m.jobs.get_mut(&id) {
+            if j.state == JobState::Queued || j.state == JobState::Failed {
+                j.state = JobState::Running;
+            }
+        }
+    }
+
+    /// Return a job from flight to `Queued` without burning budget (the
+    /// graceful-drain path: the attempt never completed, so the restart
+    /// re-runs it — exactly what a crash would have done).
+    pub fn requeue(&self, id: u64) {
+        let mut m = self.inner.lock().unwrap();
+        if let Some(j) = m.jobs.get_mut(&id) {
+            if j.state == JobState::Running {
+                j.state = JobState::Queued;
+                j.run_at_ms = now_ms();
+            }
+        }
+    }
+
+    /// Record one failed attempt: increments the attempt count and parks
+    /// the job as `Failed` until `next_run_at_ms` (the backoff deadline).
+    pub fn record_failure(&self, id: u64, err: &str, next_run_at_ms: u64)
+                          -> anyhow::Result<()> {
+        let mut m = self.inner.lock().unwrap();
+        let rec = obj(&[
+            ("t", Json::Str("fail".into())),
+            ("job", num(id)),
+            ("err", Json::Str(err.into())),
+            ("run_at", num(next_run_at_ms)),
+        ]);
+        append_synced(&mut m, &rec)?;
+        m.retries_total += 1;
+        let j = m.jobs.get_mut(&id).ok_or_else(|| anyhow!("unknown job {id}"))?;
+        j.attempts += 1;
+        j.state = JobState::Failed;
+        j.run_at_ms = next_run_at_ms;
+        j.error = Some(err.to_string());
+        Ok(())
+    }
+
+    /// Record the terminal failure: budget exhausted (or unroutable).
+    pub fn record_dead(&self, id: u64, err: &str) -> anyhow::Result<()> {
+        let mut m = self.inner.lock().unwrap();
+        let Some(j) = m.jobs.get(&id) else { return Err(anyhow!("unknown job {id}")) };
+        let expire = now_ms() + j.ttl_ms;
+        let rec = obj(&[
+            ("t", Json::Str("dead".into())),
+            ("job", num(id)),
+            ("err", Json::Str(err.into())),
+            ("exp", num(expire)),
+        ]);
+        append_synced(&mut m, &rec)?;
+        let j = m.jobs.get_mut(&id).unwrap();
+        j.state = JobState::Dead;
+        j.error = Some(err.to_string());
+        j.expire_at_ms = expire;
+        Ok(())
+    }
+
+    /// Record a completed job; the result is retained until its TTL.  If
+    /// a cancel arrived while the job was in flight, the completion is
+    /// discarded and the job finalizes as `Cancelled` (already durable
+    /// via the cancel record).
+    pub fn record_done(&self, id: u64, result: JobResult) -> anyhow::Result<()> {
+        let mut m = self.inner.lock().unwrap();
+        let Some(j) = m.jobs.get(&id) else { return Err(anyhow!("unknown job {id}")) };
+        let expire = now_ms() + j.ttl_ms;
+        if j.cancel_requested {
+            let j = m.jobs.get_mut(&id).unwrap();
+            j.state = JobState::Cancelled;
+            j.expire_at_ms = expire;
+            return Ok(());
+        }
+        let mut fields = vec![
+            ("t", Json::Str("done".into())),
+            ("job", num(id)),
+            ("exp", num(expire)),
+            ("samples",
+             Json::Arr(result.samples.iter().map(|&v| Json::Num(v as f64)).collect())),
+            ("wall_latency_s", Json::Num(result.wall_latency_s)),
+            ("hw_latency_s", Json::Num(result.hw_latency_s)),
+            ("hw_energy_j", Json::Num(result.hw_energy_j)),
+        ];
+        if let Some(images) = &result.images {
+            fields.push(("images",
+                         Json::Arr(images.iter().map(|&v| Json::Num(v as f64))
+                                         .collect())));
+        }
+        let rec = obj(&fields);
+        append_synced(&mut m, &rec)?;
+        let j = m.jobs.get_mut(&id).unwrap();
+        j.state = JobState::Done;
+        j.expire_at_ms = expire;
+        j.result = Some(result);
+        Ok(())
+    }
+
+    /// Cancel a job.  Waiting jobs (`Queued`/`Failed`) cancel immediately;
+    /// a `Running` job is flagged and finalizes as `Cancelled` when its
+    /// in-flight attempt resolves; terminal jobs are untouched.  Returns
+    /// the state after the call.
+    pub fn cancel(&self, id: u64) -> anyhow::Result<JobState> {
+        let mut m = self.inner.lock().unwrap();
+        let Some(j) = m.jobs.get(&id) else { return Err(anyhow!("unknown job {id}")) };
+        if j.state.is_terminal() {
+            return Ok(j.state);
+        }
+        let expire = now_ms() + j.ttl_ms;
+        let rec = obj(&[("t", Json::Str("cancel".into())), ("job", num(id))]);
+        append_synced(&mut m, &rec)?;
+        let j = m.jobs.get_mut(&id).unwrap();
+        if j.state == JobState::Running {
+            j.cancel_requested = true;
+        } else {
+            j.state = JobState::Cancelled;
+            j.expire_at_ms = expire;
+        }
+        Ok(j.state)
+    }
+
+    /// Snapshot one job (None if unknown or already swept).
+    pub fn get(&self, id: u64) -> Option<Job> {
+        self.inner.lock().unwrap().jobs.get(&id).cloned()
+    }
+
+    /// Ids of jobs ready to submit: `Queued`/`Failed`, due, not flagged
+    /// for cancel — in id order (FIFO among equally-due jobs).
+    pub fn due(&self, now: u64) -> Vec<u64> {
+        let m = self.inner.lock().unwrap();
+        m.jobs
+            .values()
+            .filter(|j| {
+                matches!(j.state, JobState::Queued | JobState::Failed)
+                    && !j.cancel_requested
+                    && j.run_at_ms <= now
+            })
+            .map(|j| j.id)
+            .collect()
+    }
+
+    /// Earliest `run_at` among waiting jobs (the scheduler's next wakeup).
+    pub fn next_run_at(&self) -> Option<u64> {
+        let m = self.inner.lock().unwrap();
+        m.jobs
+            .values()
+            .filter(|j| {
+                matches!(j.state, JobState::Queued | JobState::Failed)
+                    && !j.cancel_requested
+            })
+            .map(|j| j.run_at_ms)
+            .min()
+    }
+
+    /// Sweep expired terminal jobs (TTL retention).  Each removal is
+    /// logged so a replay converges to the same table.  Returns how many
+    /// were swept.
+    pub fn sweep_expired(&self, now: u64) -> anyhow::Result<usize> {
+        let mut m = self.inner.lock().unwrap();
+        let expired: Vec<u64> = m
+            .jobs
+            .values()
+            .filter(|j| j.state.is_terminal() && j.expire_at_ms > 0
+                        && j.expire_at_ms <= now)
+            .map(|j| j.id)
+            .collect();
+        for &id in &expired {
+            let rec = obj(&[("t", Json::Str("exp".into())), ("job", num(id))]);
+            append_synced(&mut m, &rec)?;
+            m.jobs.remove(&id);
+        }
+        Ok(expired.len())
+    }
+
+    /// Records appended since the last checkpoint (compaction trigger).
+    pub fn appended_records(&self) -> usize {
+        self.inner.lock().unwrap().appended
+    }
+
+    /// Compact: write the whole table to `snapshot.json` atomically
+    /// (tmp + fsync + rename), then truncate the log.  Crash-safe at any
+    /// point — the rename is atomic and the log is only cut *after* the
+    /// new snapshot is durable.
+    pub fn checkpoint(&self) -> anyhow::Result<()> {
+        let mut m = self.inner.lock().unwrap();
+        let mut top = BTreeMap::new();
+        top.insert("next_id".to_string(), num(m.next_id));
+        top.insert("enqueued_total".to_string(), num(m.enqueued_total));
+        top.insert("retries_total".to_string(), num(m.retries_total));
+        top.insert("jobs".to_string(),
+                   Json::Arr(m.jobs.values().map(job_to_json).collect()));
+        let text = Json::Obj(top).to_string();
+
+        let tmp = self.dir.join("snapshot.json.tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(text.as_bytes())?;
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, self.dir.join(SNAP_FILE))?;
+        // durability of the rename itself (best-effort where the platform
+        // allows opening a directory)
+        #[cfg(unix)]
+        if let Ok(d) = File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        // everything in the log is now covered by the snapshot
+        let log_path = self.dir.join(LOG_FILE);
+        let f = OpenOptions::new().write(true).open(&log_path)?;
+        f.set_len(0)?;
+        f.sync_data()?;
+        m.log = OpenOptions::new().create(true).append(true).open(&log_path)?;
+        m.appended = 0;
+        Ok(())
+    }
+
+    /// Per-state counts + lifetime totals, for the metrics gauges.
+    pub fn gauges(&self) -> JobGauges {
+        let m = self.inner.lock().unwrap();
+        let mut g = JobGauges {
+            enqueued_total: m.enqueued_total,
+            retries_total: m.retries_total,
+            ..JobGauges::default()
+        };
+        for j in m.jobs.values() {
+            match j.state {
+                JobState::Queued => g.queued += 1,
+                JobState::Running => g.running += 1,
+                JobState::Failed => g.failed += 1,
+                JobState::Done => g.done += 1,
+                JobState::Dead => g.dead += 1,
+                JobState::Cancelled => g.cancelled += 1,
+            }
+        }
+        g
+    }
+}
+
+// ---------------------------------------------------------------------
+// record / snapshot serialization (hand-rolled JSON, like the wire layer)
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn obj(fields: &[(&str, Json)]) -> Json {
+    Json::Obj(fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+fn enq_record(job: &Job) -> Json {
+    let mut fields = vec![
+        ("t", Json::Str("enq".into())),
+        ("job", num(job.id)),
+        ("task", Json::Str(job.task.name().into())),
+        ("n", num(job.n_samples as u64)),
+        ("solver", Json::Str(job.solver.name().into())),
+        ("guidance", Json::Num(job.guidance as f64)),
+        ("decode", Json::Bool(job.decode)),
+        ("run_at", num(job.run_at_ms)),
+        ("max_retries", num(job.max_retries as u64)),
+        ("ttl_ms", num(job.ttl_ms)),
+    ];
+    if let Some(steps) = job.solver.steps() {
+        fields.push(("steps", num(steps as u64)));
+    }
+    obj(&fields)
+}
+
+fn parse_solver(j: &Json) -> Option<SolverChoice> {
+    let name = j.get("solver")?.as_str()?;
+    let steps = j.get("steps").and_then(|v| v.as_usize()).unwrap_or(130);
+    SolverChoice::from_name(name, steps)
+}
+
+fn apply_record(inner: &mut Inner, j: &Json) -> anyhow::Result<()> {
+    let t = j.get("t").and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("record missing type tag"))?;
+    let id = j.get("job").and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("record missing job id"))? as u64;
+    match t {
+        "enq" => {
+            let task = j.get("task").and_then(|v| v.as_str())
+                .and_then(TaskKind::from_name)
+                .ok_or_else(|| anyhow!("enq record: bad task"))?;
+            let solver = parse_solver(j)
+                .ok_or_else(|| anyhow!("enq record: bad solver"))?;
+            let job = Job {
+                id,
+                task,
+                n_samples: j.get("n").and_then(|v| v.as_usize()).unwrap_or(1),
+                solver,
+                guidance: j.get("guidance").and_then(|v| v.as_f64())
+                    .unwrap_or(2.0) as f32,
+                decode: matches!(j.get("decode"), Some(Json::Bool(true))),
+                state: JobState::Queued,
+                attempts: 0,
+                max_retries: j.get("max_retries").and_then(|v| v.as_usize())
+                    .unwrap_or(0) as u32,
+                run_at_ms: j.get("run_at").and_then(|v| v.as_f64())
+                    .unwrap_or(0.0) as u64,
+                ttl_ms: j.get("ttl_ms").and_then(|v| v.as_f64())
+                    .unwrap_or(0.0) as u64,
+                expire_at_ms: 0,
+                error: None,
+                result: None,
+                cancel_requested: false,
+            };
+            inner.jobs.insert(id, job);
+            inner.next_id = inner.next_id.max(id + 1);
+            inner.enqueued_total += 1;
+        }
+        "fail" => {
+            inner.retries_total += 1;
+            if let Some(job) = inner.jobs.get_mut(&id) {
+                job.attempts += 1;
+                job.state = JobState::Failed;
+                job.run_at_ms = j.get("run_at").and_then(|v| v.as_f64())
+                    .unwrap_or(0.0) as u64;
+                job.error = j.get("err").and_then(|v| v.as_str()).map(String::from);
+            }
+        }
+        "dead" => {
+            if let Some(job) = inner.jobs.get_mut(&id) {
+                job.state = JobState::Dead;
+                job.error = j.get("err").and_then(|v| v.as_str()).map(String::from);
+                job.expire_at_ms = j.get("exp").and_then(|v| v.as_f64())
+                    .unwrap_or(0.0) as u64;
+            }
+        }
+        "done" => {
+            if let Some(job) = inner.jobs.get_mut(&id) {
+                // a durable cancel before the done record wins
+                if job.state == JobState::Cancelled {
+                    return Ok(());
+                }
+                job.state = JobState::Done;
+                job.expire_at_ms = j.get("exp").and_then(|v| v.as_f64())
+                    .unwrap_or(0.0) as u64;
+                job.result = Some(JobResult {
+                    samples: j.get("samples").and_then(|v| v.as_arr())
+                        .map(|a| a.iter().filter_map(|v| v.as_f64())
+                              .map(|x| x as f32).collect())
+                        .unwrap_or_default(),
+                    images: j.get("images").and_then(|v| v.as_arr())
+                        .map(|a| a.iter().filter_map(|v| v.as_f64())
+                              .map(|x| x as f32).collect()),
+                    wall_latency_s: j.get("wall_latency_s")
+                        .and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    hw_latency_s: j.get("hw_latency_s")
+                        .and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    hw_energy_j: j.get("hw_energy_j")
+                        .and_then(|v| v.as_f64()).unwrap_or(0.0),
+                });
+            }
+        }
+        "cancel" => {
+            if let Some(job) = inner.jobs.get_mut(&id) {
+                if !job.state.is_terminal() {
+                    job.state = JobState::Cancelled;
+                    job.expire_at_ms = now_ms() + job.ttl_ms;
+                }
+            }
+        }
+        "exp" => {
+            inner.jobs.remove(&id);
+        }
+        other => return Err(anyhow!("unknown record type {other:?}")),
+    }
+    Ok(())
+}
+
+fn job_to_json(job: &Job) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), num(job.id));
+    m.insert("task".to_string(), Json::Str(job.task.name().into()));
+    m.insert("n".to_string(), num(job.n_samples as u64));
+    m.insert("solver".to_string(), Json::Str(job.solver.name().into()));
+    if let Some(steps) = job.solver.steps() {
+        m.insert("steps".to_string(), num(steps as u64));
+    }
+    m.insert("guidance".to_string(), Json::Num(job.guidance as f64));
+    m.insert("decode".to_string(), Json::Bool(job.decode));
+    m.insert("state".to_string(), Json::Str(job.state.as_str().into()));
+    m.insert("attempts".to_string(), num(job.attempts as u64));
+    m.insert("max_retries".to_string(), num(job.max_retries as u64));
+    m.insert("run_at".to_string(), num(job.run_at_ms));
+    m.insert("ttl_ms".to_string(), num(job.ttl_ms));
+    m.insert("exp".to_string(), num(job.expire_at_ms));
+    if let Some(err) = &job.error {
+        m.insert("err".to_string(), Json::Str(err.clone()));
+    }
+    if job.cancel_requested {
+        m.insert("cancel_requested".to_string(), Json::Bool(true));
+    }
+    if let Some(r) = &job.result {
+        m.insert("samples".to_string(),
+                 Json::Arr(r.samples.iter().map(|&v| Json::Num(v as f64)).collect()));
+        if let Some(images) = &r.images {
+            m.insert("images".to_string(),
+                     Json::Arr(images.iter().map(|&v| Json::Num(v as f64)).collect()));
+        }
+        m.insert("wall_latency_s".to_string(), Json::Num(r.wall_latency_s));
+        m.insert("hw_latency_s".to_string(), Json::Num(r.hw_latency_s));
+        m.insert("hw_energy_j".to_string(), Json::Num(r.hw_energy_j));
+    }
+    Json::Obj(m)
+}
+
+fn job_from_json(j: &Json) -> Option<Job> {
+    let state = JobState::from_str(j.get("state")?.as_str()?)?;
+    let result = j.get("samples").and_then(|v| v.as_arr()).map(|a| JobResult {
+        samples: a.iter().filter_map(|v| v.as_f64()).map(|x| x as f32).collect(),
+        images: j.get("images").and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|x| x as f32).collect()),
+        wall_latency_s: j.get("wall_latency_s").and_then(|v| v.as_f64())
+            .unwrap_or(0.0),
+        hw_latency_s: j.get("hw_latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        hw_energy_j: j.get("hw_energy_j").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    });
+    Some(Job {
+        id: j.get("id")?.as_f64()? as u64,
+        task: TaskKind::from_name(j.get("task")?.as_str()?)?,
+        n_samples: j.get("n").and_then(|v| v.as_usize()).unwrap_or(1),
+        solver: parse_solver(j)?,
+        guidance: j.get("guidance").and_then(|v| v.as_f64()).unwrap_or(2.0) as f32,
+        decode: matches!(j.get("decode"), Some(Json::Bool(true))),
+        state,
+        attempts: j.get("attempts").and_then(|v| v.as_usize()).unwrap_or(0) as u32,
+        max_retries: j.get("max_retries").and_then(|v| v.as_usize())
+            .unwrap_or(0) as u32,
+        run_at_ms: j.get("run_at").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        ttl_ms: j.get("ttl_ms").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        expire_at_ms: j.get("exp").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        error: j.get("err").and_then(|v| v.as_str()).map(String::from),
+        result,
+        cancel_requested: matches!(j.get("cancel_requested"), Some(Json::Bool(true))),
+    })
+}
+
+/// Append one framed record and fsync before returning — the durability
+/// acknowledgement point of every mutation.
+fn append_synced(inner: &mut Inner, rec: &Json) -> anyhow::Result<()> {
+    let frame = record::encode(rec.to_string().as_bytes());
+    inner.log.write_all(&frame).context("appending job record")?;
+    inner.log.sync_data().context("fsyncing job log")?;
+    inner.appended += 1;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("memdiff_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn req(n: usize) -> GenRequest {
+        GenRequest {
+            id: 0,
+            task: TaskKind::Letter(1),
+            n_samples: n,
+            solver: SolverChoice::DigitalOde { steps: 40 },
+            guidance: 1.5,
+            decode: false,
+        }
+    }
+
+    #[test]
+    fn enqueue_replays_across_reopen() {
+        let dir = tmpdir("reopen");
+        let a;
+        {
+            let s = JobStore::open(&dir).unwrap();
+            a = s.enqueue(&req(3), 0, 4, 60_000).unwrap();
+            let b = s.enqueue(&req(5), 10_000, 2, 60_000).unwrap();
+            assert_ne!(a, b);
+            s.mark_running(a); // running is NOT durable
+        }
+        let s = JobStore::open(&dir).unwrap();
+        let ja = s.get(a).unwrap();
+        assert_eq!(ja.state, JobState::Queued, "running replays as queued");
+        assert_eq!(ja.n_samples, 3);
+        assert_eq!(ja.solver, SolverChoice::DigitalOde { steps: 40 });
+        assert_eq!(ja.task, TaskKind::Letter(1));
+        assert_eq!(ja.max_retries, 4);
+        let g = s.gauges();
+        assert_eq!((g.queued, g.enqueued_total), (2, 2));
+        // fresh enqueues never collide with replayed ids
+        let c = s.enqueue(&req(1), 0, 0, 1000).unwrap();
+        assert!(c > a);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lifecycle_transitions_are_durable() {
+        let dir = tmpdir("lifecycle");
+        let (a, b, c, d);
+        {
+            let s = JobStore::open(&dir).unwrap();
+            a = s.enqueue(&req(2), 0, 3, 60_000).unwrap();
+            b = s.enqueue(&req(2), 0, 1, 60_000).unwrap();
+            c = s.enqueue(&req(2), 0, 0, 60_000).unwrap();
+            d = s.enqueue(&req(2), 0, 0, 60_000).unwrap();
+            s.record_failure(a, "transient", now_ms() + 50).unwrap();
+            s.record_done(b, JobResult {
+                samples: vec![1.0, 2.0],
+                images: None,
+                wall_latency_s: 0.5,
+                hw_latency_s: 1e-3,
+                hw_energy_j: 2e-6,
+            }).unwrap();
+            s.record_dead(c, "budget exhausted").unwrap();
+            assert_eq!(s.cancel(d).unwrap(), JobState::Cancelled);
+        }
+        let s = JobStore::open(&dir).unwrap();
+        let ja = s.get(a).unwrap();
+        assert_eq!((ja.state, ja.attempts), (JobState::Failed, 1));
+        assert_eq!(ja.error.as_deref(), Some("transient"));
+        let jb = s.get(b).unwrap();
+        assert_eq!(jb.state, JobState::Done);
+        assert_eq!(jb.result.as_ref().unwrap().samples, vec![1.0, 2.0]);
+        assert!(jb.expire_at_ms > 0);
+        assert_eq!(s.get(c).unwrap().state, JobState::Dead);
+        assert_eq!(s.get(d).unwrap().state, JobState::Cancelled);
+        assert_eq!(s.gauges().retries_total, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_compacts_and_preserves_everything() {
+        let dir = tmpdir("checkpoint");
+        let a;
+        {
+            let s = JobStore::open(&dir).unwrap();
+            a = s.enqueue(&req(2), 0, 3, 60_000).unwrap();
+            for _ in 0..3 {
+                s.enqueue(&req(1), 5_000, 0, 60_000).unwrap();
+            }
+            s.record_done(a, JobResult {
+                samples: vec![7.0; 4],
+                images: None,
+                wall_latency_s: 0.1,
+                hw_latency_s: 0.0,
+                hw_energy_j: 0.0,
+            }).unwrap();
+            assert!(s.appended_records() >= 5);
+            s.checkpoint().unwrap();
+            assert_eq!(s.appended_records(), 0);
+        }
+        assert_eq!(std::fs::metadata(dir.join("jobs.log")).unwrap().len(), 0);
+        let s = JobStore::open(&dir).unwrap();
+        let g = s.gauges();
+        assert_eq!((g.queued, g.done, g.enqueued_total), (3, 1, 4));
+        assert_eq!(s.get(a).unwrap().result.unwrap().samples, vec![7.0; 4]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn due_and_next_run_at_respect_deferral() {
+        let dir = tmpdir("due");
+        let s = JobStore::open(&dir).unwrap();
+        let now = now_ms();
+        let a = s.enqueue(&req(1), 0, 0, 1000).unwrap();
+        let b = s.enqueue(&req(1), 3_600_000, 0, 1000).unwrap();
+        let due = s.due(now + 10);
+        assert!(due.contains(&a) && !due.contains(&b));
+        assert_eq!(s.next_run_at().unwrap(), s.get(a).unwrap().run_at_ms);
+        // cancel removes from the schedule
+        s.cancel(a).unwrap();
+        assert!(s.due(now + 10).is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ttl_sweep_expires_terminal_jobs_durably() {
+        let dir = tmpdir("ttl");
+        let a;
+        {
+            let s = JobStore::open(&dir).unwrap();
+            a = s.enqueue(&req(1), 0, 0, 10).unwrap(); // 10 ms TTL
+            let b = s.enqueue(&req(1), 0, 0, 3_600_000).unwrap();
+            s.record_done(a, JobResult {
+                samples: vec![0.0; 2], images: None,
+                wall_latency_s: 0.0, hw_latency_s: 0.0, hw_energy_j: 0.0,
+            }).unwrap();
+            s.record_done(b, JobResult {
+                samples: vec![0.0; 2], images: None,
+                wall_latency_s: 0.0, hw_latency_s: 0.0, hw_energy_j: 0.0,
+            }).unwrap();
+            let swept = s.sweep_expired(now_ms() + 60_000).unwrap();
+            assert_eq!(swept, 1, "only the short-TTL job expires");
+            assert!(s.get(a).is_none());
+            assert!(s.get(b).is_some());
+        }
+        let s = JobStore::open(&dir).unwrap();
+        assert!(s.get(a).is_none(), "expiry survives replay");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cancel_of_running_job_discards_its_completion() {
+        let dir = tmpdir("cancel_running");
+        let s = JobStore::open(&dir).unwrap();
+        let a = s.enqueue(&req(1), 0, 0, 60_000).unwrap();
+        s.mark_running(a);
+        assert_eq!(s.cancel(a).unwrap(), JobState::Running, "flagged, not yanked");
+        s.record_done(a, JobResult {
+            samples: vec![9.0; 2], images: None,
+            wall_latency_s: 0.0, hw_latency_s: 0.0, hw_energy_j: 0.0,
+        }).unwrap();
+        let j = s.get(a).unwrap();
+        assert_eq!(j.state, JobState::Cancelled);
+        assert!(j.result.is_none(), "cancelled result is discarded");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -29,6 +29,10 @@
 //!   nonblocking `submit_nb` ingress with response tickets, per-lane
 //!   bounded-queue backpressure, and a line-JSON TCP front-end
 //!   (`memdiff serve --listen`) with graceful drain.
+//! * [`jobs`] — durable job queue over the front-end: fsync'd append-only
+//!   log + snapshot under `--state-dir`, crash recovery with torn-tail
+//!   tolerance, retry with exponential backoff + jitter, TTL result
+//!   retention, and submit-now/fetch-later wire ops.
 //! * [`energy`] — analog-vs-digital latency & energy models behind the
 //!   paper's Fig. 3f/3g/4g/4h comparisons.
 //! * [`util`] — self-contained substrates (PRNG, JSON, tensors, stats,
@@ -47,6 +51,7 @@ pub mod device;
 pub mod diffusion;
 pub mod energy;
 pub mod exec;
+pub mod jobs;
 pub mod nn;
 pub mod runtime;
 pub mod serve;

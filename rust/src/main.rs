@@ -72,9 +72,11 @@ fn usage() -> ! {
          \x20                  [--deploy analog=analog,digital=rust|hlo,rust_workers=N,\n\
          \x20                   rust_queue=N,rust_weights=PATH,...]\n\
          \x20                  [--listen 127.0.0.1:7979] [--queue-depth N] [--max-conns N]\n\
-         \x20                  [--substeps N] [--synthetic]\n\
+         \x20                  [--state-dir DIR] [--substeps N] [--synthetic]\n\
          \x20 memdiff client   --connect HOST:PORT [--requests N] [--burst N]\n\
          \x20                  [--expect-overload] [--shutdown]\n\
+         \x20                  [--enqueue N [--defer-ms N] [--max-retries N] [--ttl-ms N]]\n\
+         \x20                  [--fetch ID[,ID...] [--wait-ms N]] [--cancel ID]\n\
          \x20 memdiff characterize\n\
          \x20 memdiff info\n\
          \x20 (global) [--config memdiff.toml] [--seed N]"
@@ -271,7 +273,7 @@ fn cmd_serve(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> {
         deploy::start_deployed(&plan, &mut factory, decoder, svc_cfg)?;
 
     if let Some(addr) = kv.get("listen") {
-        return serve_listen(service, addr, kv);
+        return serve_listen(service, addr, kv, &cfg);
     }
 
     let service = Arc::new(service);
@@ -331,12 +333,27 @@ fn cmd_serve(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> {
 /// `memdiff serve --listen ADDR`: run the TCP front-end until a client
 /// sends `{"op":"shutdown"}` (or `--for-ms` elapses), then drain
 /// gracefully — in-flight tickets complete, new connections get a
-/// shutting-down response.
+/// shutting-down response.  With `--state-dir DIR` the durable job layer
+/// is mounted too: the store replays its log (so a SIGKILL'd server picks
+/// up exactly where the last fsync left it) and `enqueue`/`status`/
+/// `result`/`cancel` wire ops come alive.
 fn serve_listen(service: memdiff::coordinator::Service, addr: &str,
-                kv: &HashMap<String, String>) -> anyhow::Result<()> {
+                kv: &HashMap<String, String>, cfg: &Config)
+                -> anyhow::Result<()> {
+    use memdiff::jobs::{JobRunner, JobStore};
     use memdiff::serve::{FrontEnd, FrontEndConfig};
     let route_summary = service.registry().route_summary();
-    let front = FrontEnd::bind(service, addr, FrontEndConfig {
+    let service = Arc::new(service);
+    let runner = match kv.get("state-dir") {
+        Some(dir) => {
+            let store = Arc::new(JobStore::open(dir)?);
+            println!("state-dir {dir}: replayed jobs {}", store.gauges().summary());
+            Some(JobRunner::start(
+                Arc::clone(&service), store, cfg.jobs.runner_config()))
+        }
+        None => None,
+    };
+    let front = FrontEnd::bind_shared(service, runner, addr, FrontEndConfig {
         max_conns: opt(kv, "max-conns", 64),
         ..FrontEndConfig::default()
     })?;
@@ -365,6 +382,13 @@ fn serve_listen(service: memdiff::coordinator::Service, addr: &str,
 /// bounded lanes (expect `overloaded` sheds), then optionally the
 /// shutdown control line.  Exits nonzero on any protocol violation, so
 /// CI can smoke-test the front-end with it.
+///
+/// Job mode (needs a server started with `--state-dir`): `--enqueue N`
+/// submits N durable jobs and prints one `job <id>` line per fsync'd
+/// acknowledgement; `--fetch ID[,ID...]` long-polls each job's result
+/// (`--wait-ms` per poll round); `--cancel ID` requests cancellation.
+/// These replace the load phases, so a CI script can enqueue, SIGKILL
+/// the server, restart it, and fetch the same ids.
 fn cmd_client(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> {
     use memdiff::serve::protocol::{self, Status};
     use std::collections::HashMap as Map;
@@ -383,6 +407,12 @@ fn cmd_client(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> 
     stream.set_nodelay(true)?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
+
+    if kv.contains_key("enqueue") || kv.contains_key("fetch")
+        || kv.contains_key("cancel")
+    {
+        return client_jobs(kv, cfg, &mut writer, &mut reader, do_shutdown);
+    }
 
     let mix = |i: usize, rng: &mut Rng| {
         let solver = match i % 4 {
@@ -481,6 +511,91 @@ fn cmd_client(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> 
         let ack = read_reply(&mut reader)?;
         anyhow::ensure!(ack.status == Status::Ok, "shutdown ack");
         // server drains and closes the connection
+        let mut rest = String::new();
+        let _ = reader.read_line(&mut rest);
+        println!("server acknowledged shutdown; draining");
+    }
+    Ok(())
+}
+
+/// The job side of `memdiff client` — see [`cmd_client`].
+fn client_jobs(kv: &HashMap<String, String>, cfg: &Config,
+               writer: &mut std::net::TcpStream,
+               reader: &mut std::io::BufReader<std::net::TcpStream>,
+               do_shutdown: bool) -> anyhow::Result<()> {
+    use memdiff::serve::protocol::{self, read_reply, Status};
+    use std::io::{BufRead, Write};
+
+    let mut send = |line: &str| -> anyhow::Result<()> {
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        Ok(())
+    };
+
+    if let Some(n) = kv.get("enqueue") {
+        let n: usize = n.parse().map_err(|_| anyhow::anyhow!("--enqueue N"))?;
+        let defer_ms: u64 = opt(kv, "defer-ms", 0);
+        let max_retries: Option<u32> =
+            kv.get("max-retries").and_then(|s| s.parse().ok());
+        let ttl_ms: Option<u64> = kv.get("ttl-ms").and_then(|s| s.parse().ok());
+        let mut rng = Rng::new(cfg.seed ^ 0x10B5);
+        for i in 0..n {
+            // digital solvers: the job survives a restart, where the
+            // synthetic-weights server answers every class
+            let solver = if i % 2 == 0 {
+                SolverChoice::DigitalOde { steps: 60 }
+            } else {
+                SolverChoice::DigitalSde { steps: 60 }
+            };
+            let task = if i % 3 == 0 {
+                TaskKind::Circle
+            } else {
+                TaskKind::Letter(rng.below(3))
+            };
+            send(&protocol::enqueue_line(
+                i as u64, task, 1 + rng.below(4), solver, cfg.guidance,
+                false, defer_ms, max_retries, ttl_ms))?;
+            let reply = read_reply(reader)?;
+            anyhow::ensure!(reply.status == Status::Ok,
+                            "enqueue {i} got {:?} ({:?})",
+                            reply.status, reply.error);
+            let job = reply.job.ok_or_else(|| {
+                anyhow::anyhow!("enqueue ack without a job id")
+            })?;
+            // one machine-greppable line per durable acknowledgement
+            println!("job {job}");
+        }
+    }
+
+    if let Some(ids) = kv.get("fetch") {
+        let wait_ms: u64 = opt(kv, "wait-ms", 10_000);
+        for (k, id) in ids.split(',').filter(|s| !s.is_empty()).enumerate() {
+            let job: u64 = id.trim().parse()
+                .map_err(|_| anyhow::anyhow!("--fetch: bad job id {id:?}"))?;
+            send(&protocol::result_line(k as u64, job, wait_ms))?;
+            let reply = read_reply(reader)?;
+            anyhow::ensure!(reply.job == Some(job),
+                            "fetch reply for job {:?}, wanted {job}", reply.job);
+            let state = reply.state.as_deref().unwrap_or("?");
+            anyhow::ensure!(reply.status == Status::Ok && state == "done",
+                            "job {job} is {state:?} ({:?})", reply.error);
+            println!("job {job} done: {} samples", reply.samples.len()
+                     / reply.dim.max(1));
+        }
+    }
+
+    if let Some(id) = kv.get("cancel") {
+        let job: u64 = id.parse()
+            .map_err(|_| anyhow::anyhow!("--cancel: bad job id {id:?}"))?;
+        send(&protocol::job_op_line("cancel", 0, job))?;
+        let reply = read_reply(reader)?;
+        println!("job {job} -> {}", reply.state.as_deref().unwrap_or("unknown"));
+    }
+
+    if do_shutdown {
+        send(&protocol::shutdown_line())?;
+        let ack = read_reply(reader)?;
+        anyhow::ensure!(ack.status == Status::Ok, "shutdown ack");
         let mut rest = String::new();
         let _ = reader.read_line(&mut rest);
         println!("server acknowledged shutdown; draining");

@@ -24,7 +24,7 @@ pub enum SubmitError {
     /// The routed lane's bounded queue is full: shed load now rather
     /// than hide the overload in an unbounded queue.
     #[error("backend {backend:?} overloaded: {queued_samples} samples queued \
-             (queue_depth {queue_depth})")]
+             (queue_depth {queue_depth}, retry after ~{retry_after_ms}ms)")]
     Overloaded {
         /// Name of the backend whose lane is full.
         backend: String,
@@ -32,6 +32,10 @@ pub enum SubmitError {
         queued_samples: usize,
         /// The lane's configured bound (samples).
         queue_depth: usize,
+        /// Adaptive backoff hint from the lane's observed drain rate
+        /// (expected ms until the queued samples clear; see
+        /// [`Metrics::retry_after_hint_ms`](crate::coordinator::Metrics::retry_after_hint_ms)).
+        retry_after_ms: u64,
     },
     /// The service is draining; lanes accept no new work.
     #[error("service is shutting down")]
@@ -44,6 +48,14 @@ pub enum SubmitError {
     #[error("invalid request: {0}")]
     Invalid(String),
 }
+
+/// The typed error `Service::shutdown` fails leftover tickets with, so
+/// callers that own durable jobs can tell "the service drained under my
+/// in-flight attempt" (requeue, no retry budget consumed) apart from a
+/// genuine engine failure.  Match with `err.downcast_ref::<DrainError>()`.
+#[derive(Debug, Clone, Copy, thiserror::Error)]
+#[error("service shut down before the request completed")]
+pub struct DrainError;
 
 /// Concurrent-connection cap for the TCP acceptor.  `try_acquire` hands
 /// out at most `max` live [`ConnPermit`]s; a permit releases its slot on
@@ -148,9 +160,18 @@ mod tests {
             backend: "analog".into(),
             queued_samples: 128,
             queue_depth: 128,
+            retry_after_ms: 250,
         };
         let s = e.to_string();
         assert!(s.contains("overloaded") && s.contains("128"), "{s}");
+        assert!(s.contains("250ms"), "hint surfaces in the message: {s}");
         assert!(SubmitError::ShuttingDown.to_string().contains("shutting down"));
+    }
+
+    #[test]
+    fn drain_error_downcasts_through_anyhow() {
+        let e: anyhow::Error = anyhow::Error::new(DrainError);
+        assert!(e.downcast_ref::<DrainError>().is_some());
+        assert!(e.to_string().contains("shut down"));
     }
 }

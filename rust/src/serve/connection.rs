@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 use anyhow::Context;
 
 use crate::coordinator::Service;
+use crate::jobs::JobRunner;
 use crate::serve::admission::ConnGate;
 use crate::serve::protocol::{self, Status, WireMsg};
 use crate::serve::ticket::{Notify, Ticket};
@@ -80,6 +81,9 @@ const ACCEPT_POLL: Duration = Duration::from_millis(10);
 
 struct Shared {
     service: Arc<Service>,
+    /// The durable job layer (None unless started with a state dir —
+    /// job ops are answered with an error in that case).
+    runner: Option<Arc<JobRunner>>,
     cfg: FrontEndConfig,
     /// Soft stop: reject new work, finish in-flight.
     draining: AtomicBool,
@@ -109,6 +113,17 @@ impl FrontEnd {
     /// `Arc<Metrics>` clone first if you need gauges after shutdown.
     pub fn bind(service: Service, addr: &str, cfg: FrontEndConfig)
                 -> anyhow::Result<FrontEnd> {
+        Self::bind_shared(Arc::new(service), None, addr, cfg)
+    }
+
+    /// Like [`Self::bind`], but over a shared service plus an optional
+    /// durable [`JobRunner`] — the `--state-dir` deployment shape.  With
+    /// a runner, the job ops (`enqueue`/`status`/`result`/`cancel`) come
+    /// alive; [`Self::shutdown`] drains the runner (checkpointing, not
+    /// discarding) before the service's own lane drain.
+    pub fn bind_shared(service: Arc<Service>, runner: Option<Arc<JobRunner>>,
+                       addr: &str, cfg: FrontEndConfig)
+                       -> anyhow::Result<FrontEnd> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding front-end listener on {addr}"))?;
         listener
@@ -117,7 +132,8 @@ impl FrontEnd {
         let addr = listener.local_addr()?;
         let max_conns = cfg.max_conns;
         let shared = Arc::new(Shared {
-            service: Arc::new(service),
+            service,
+            runner,
             cfg,
             draining: AtomicBool::new(false),
             stopped: AtomicBool::new(false),
@@ -128,6 +144,11 @@ impl FrontEnd {
         let sh = Arc::clone(&shared);
         let acceptor = std::thread::spawn(move || accept_loop(listener, sh));
         Ok(FrontEnd { shared, acceptor: Some(acceptor), addr })
+    }
+
+    /// The durable job layer, when one was attached at bind time.
+    pub fn runner(&self) -> Option<&Arc<JobRunner>> {
+        self.shared.runner.as_ref()
     }
 
     /// The bound address (resolves port 0).
@@ -190,6 +211,12 @@ impl FrontEnd {
             self.shared.conns.lock().unwrap().drain(..).collect();
         for c in conns {
             let _ = c.join();
+        }
+        // drain the job layer while the service still serves: in-flight
+        // job attempts get their grace to complete durably, stragglers
+        // requeue, and the store checkpoints — never discards
+        if let Some(runner) = &self.shared.runner {
+            runner.drain();
         }
         // every handler/acceptor Arc clone is gone; dropping self (the
         // last clone) now drains the Service via its Drop guard
@@ -260,21 +287,27 @@ fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
 /// count, the service ticket.
 type InFlight = (u64, usize, Ticket);
 
+/// One long-polling `result` op: client id, job id, poll deadline.
+type JobWait = (u64, u64, Instant);
+
 fn handle_conn(mut stream: TcpStream, sh: Arc<Shared>) {
     let _ = stream.set_read_timeout(Some(sh.cfg.poll));
     let _ = stream.set_write_timeout(Some(sh.cfg.write_timeout));
     let _ = stream.set_nodelay(true);
     let notify = Notify::new();
     let mut inflight: Vec<InFlight> = Vec::new();
+    let mut jobwaits: Vec<JobWait> = Vec::new();
     let mut acc: Vec<u8> = Vec::new();
     let mut buf = [0u8; 8192];
     let mut open = true;
 
     while open {
-        if flush_completed(&mut inflight, &mut stream).is_err() {
+        if flush_completed(&mut inflight, &mut stream).is_err()
+            || flush_jobwaits(&mut jobwaits, &sh, &mut stream).is_err()
+        {
             return; // peer gone: tickets resolve server-side regardless
         }
-        if sh.draining() && inflight.is_empty() {
+        if sh.draining() && inflight.is_empty() && jobwaits.is_empty() {
             return; // drained: close the connection
         }
         match stream.read(&mut buf) {
@@ -287,7 +320,7 @@ fn handle_conn(mut stream: TcpStream, sh: Arc<Shared>) {
                     return;
                 }
                 if process_buffered(&mut acc, &sh, &notify, &mut inflight,
-                                    &mut stream).is_err() {
+                                    &mut jobwaits, &mut stream).is_err() {
                     return;
                 }
             }
@@ -302,11 +335,15 @@ fn handle_conn(mut stream: TcpStream, sh: Arc<Shared>) {
     // EOF (or read error): the peer sends nothing more, but its admitted
     // requests still deserve answers — wait out the in-flight set
     let deadline = Instant::now() + sh.cfg.drain_grace;
-    while !inflight.is_empty() && Instant::now() < deadline {
-        if flush_completed(&mut inflight, &mut stream).is_err() {
+    while (!inflight.is_empty() || !jobwaits.is_empty())
+        && Instant::now() < deadline
+    {
+        if flush_completed(&mut inflight, &mut stream).is_err()
+            || flush_jobwaits(&mut jobwaits, &sh, &mut stream).is_err()
+        {
             return;
         }
-        if !inflight.is_empty() {
+        if !inflight.is_empty() || !jobwaits.is_empty() {
             notify.wait_timeout(sh.cfg.poll.max(Duration::from_millis(1)));
         }
     }
@@ -315,7 +352,8 @@ fn handle_conn(mut stream: TcpStream, sh: Arc<Shared>) {
 /// Split complete lines off `acc` and process each.  Err = the socket
 /// write failed (connection dead).
 fn process_buffered(acc: &mut Vec<u8>, sh: &Shared, notify: &Notify,
-                    inflight: &mut Vec<InFlight>, stream: &mut TcpStream)
+                    inflight: &mut Vec<InFlight>, jobwaits: &mut Vec<JobWait>,
+                    stream: &mut TcpStream)
                     -> std::io::Result<()> {
     while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
         let raw: Vec<u8> = acc.drain(..=pos).collect();
@@ -351,6 +389,110 @@ fn process_buffered(acc: &mut Vec<u8>, sh: &Shared, notify: &Notify,
                     }
                 }
             }
+            Ok(WireMsg::Enqueue { client_id, req, defer_ms, max_retries,
+                                  ttl_ms }) => {
+                let Some(runner) = &sh.runner else {
+                    write_line(stream, &protocol::status_line(
+                        client_id, Status::Error,
+                        "no job queue (start the server with --state-dir)"))?;
+                    continue;
+                };
+                // accepted even while draining: the job is durable, so
+                // it runs after the restart — that is the whole point
+                match runner.enqueue(&req, defer_ms, max_retries, ttl_ms) {
+                    Ok(job) => {
+                        write_line(stream,
+                                   &protocol::enqueue_ack_line(client_id, job))?;
+                    }
+                    Err(e) => {
+                        write_line(stream, &protocol::status_line(
+                            client_id, Status::Error,
+                            &format!("enqueue failed: {e:#}")))?;
+                    }
+                }
+            }
+            Ok(WireMsg::JobStatus { client_id, job }) => {
+                let Some(runner) = &sh.runner else {
+                    write_line(stream, &protocol::status_line(
+                        client_id, Status::Error,
+                        "no job queue (start the server with --state-dir)"))?;
+                    continue;
+                };
+                match runner.get(job) {
+                    Some(j) => write_line(
+                        stream, &protocol::job_status_line(client_id, &j))?,
+                    None => write_line(
+                        stream, &protocol::job_unknown_line(client_id, job))?,
+                }
+            }
+            Ok(WireMsg::JobCancel { client_id, job }) => {
+                let Some(runner) = &sh.runner else {
+                    write_line(stream, &protocol::status_line(
+                        client_id, Status::Error,
+                        "no job queue (start the server with --state-dir)"))?;
+                    continue;
+                };
+                match runner.cancel(job).ok().and_then(|_| runner.get(job)) {
+                    Some(j) => write_line(
+                        stream, &protocol::job_status_line(client_id, &j))?,
+                    None => write_line(
+                        stream, &protocol::job_unknown_line(client_id, job))?,
+                }
+            }
+            Ok(WireMsg::JobResult { client_id, job, wait_ms }) => {
+                let Some(runner) = &sh.runner else {
+                    write_line(stream, &protocol::status_line(
+                        client_id, Status::Error,
+                        "no job queue (start the server with --state-dir)"))?;
+                    continue;
+                };
+                match runner.get(job) {
+                    None => write_line(
+                        stream, &protocol::job_unknown_line(client_id, job))?,
+                    Some(j) if j.state.is_terminal() || wait_ms == 0 => {
+                        write_line(stream,
+                                   &protocol::job_result_line(client_id, &j))?;
+                    }
+                    Some(_) => {
+                        // long-poll: ride the connection's Notify waker —
+                        // the runner fires it on the terminal transition,
+                        // flush_jobwaits writes the answer
+                        runner.subscribe(job, notify);
+                        jobwaits.push((client_id, job,
+                                       Instant::now()
+                                       + Duration::from_millis(wait_ms)));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Answer every long-polled `result` op that is ready: terminal job,
+/// expired wait, or a draining server (answer with the pollable
+/// snapshot rather than holding the connection open).
+fn flush_jobwaits(jobwaits: &mut Vec<JobWait>, sh: &Shared,
+                  stream: &mut TcpStream) -> std::io::Result<()> {
+    let mut i = 0;
+    while i < jobwaits.len() {
+        let (client_id, job, deadline) = jobwaits[i];
+        let answer = match sh.runner.as_ref().and_then(|r| r.get(job)) {
+            None => Some(protocol::job_unknown_line(client_id, job)),
+            Some(j) if j.state.is_terminal()
+                || Instant::now() >= deadline
+                || sh.draining() =>
+            {
+                Some(protocol::job_result_line(client_id, &j))
+            }
+            Some(_) => None,
+        };
+        match answer {
+            Some(line) => {
+                jobwaits.remove(i);
+                write_line(stream, &line)?;
+            }
+            None => i += 1,
         }
     }
     Ok(())

@@ -50,9 +50,23 @@
 //! the digital lanes keep serving — overload is surfaced, never hidden
 //! in an unbounded queue.
 //!
-//! Run the server with `memdiff serve --listen 127.0.0.1:7979` and
-//! drive it with `memdiff client --connect 127.0.0.1:7979` (a scripted
-//! mixed-class load generator speaking this protocol).
+//! ## Durable jobs
+//!
+//! With `--state-dir DIR`, the front-end also hosts the
+//! [`crate::jobs`] layer: `enqueue`/`status`/`result`/`cancel` wire ops
+//! give submit-now/fetch-later semantics backed by an fsync'd log —
+//! an acknowledged job survives SIGKILL and is re-run (or its retained
+//! result served) after restart.  The long-poll `result` op rides the
+//! same per-connection [`Notify`](ticket::Notify) waker the tickets
+//! use, and `overloaded` rejects carry a `retry_after_ms` hint derived
+//! from the lane's drain rate so both remote clients and the job
+//! runner's backoff adapt to actual throughput.
+//!
+//! Run the server with `memdiff serve --listen 127.0.0.1:7979` (add
+//! `--state-dir state/` for durable jobs) and drive it with
+//! `memdiff client --connect 127.0.0.1:7979` (a scripted mixed-class
+//! load generator speaking this protocol; `--enqueue`/`--fetch` for
+//! the job ops).
 
 pub mod admission;
 pub mod connection;

@@ -33,12 +33,37 @@
 //! ```
 //!
 //! `status` is the machine-readable outcome: `ok`, `overloaded` (the
-//! lane's bounded queue was full — retry later or back off),
-//! `shutting_down` (server draining — reconnect elsewhere), or `error`
-//! (malformed request, unrouted class, or engine failure).  Decoded
-//! images ride an `images` array when `decode` was requested.
+//! lane's bounded queue was full — retry later or back off;
+//! `retry_after_ms` carries the lane's drain-rate-derived backoff
+//! hint), `shutting_down` (server draining — reconnect elsewhere), or
+//! `error` (malformed request, unrouted class, or engine failure).
+//! Decoded images ride an `images` array when `decode` was requested.
+//!
+//! ## Job ops (durable queue — servers started with `--state-dir`)
+//!
+//! ```text
+//! {"op": "enqueue", "id": 3, ...request fields...,
+//!  "defer_ms": 0, "max_retries": 4, "ttl_ms": 900000}
+//!                    -> {"id": 3, "status": "ok", "job": 17, "state": "queued"}
+//! {"op": "status", "id": 3, "job": 17}
+//!                    -> {"id": 3, "status": "ok", "job": 17,
+//!                        "state": "running", "attempts": 0}
+//! {"op": "result", "id": 3, "job": 17, "wait_ms": 5000}   # long-poll
+//!                    -> done:  ok + state "done" + samples/dim/latencies
+//!                    -> dead/cancelled: status "error" + state + error
+//!                    -> still pending at the deadline: ok + non-terminal
+//!                       state + attempts (poll again)
+//! {"op": "cancel", "id": 3, "job": 17}
+//!                    -> {"id": 3, "status": "ok", "job": 17, "state": ...}
+//! ```
+//!
+//! `enqueue` acks only after the job is fsync-durable — the returned
+//! `job` id survives a server crash (see [`crate::jobs`] for the
+//! contract).  An unknown/expired job id answers `status: "error"`.
+//! Servers without a state dir answer every job op with an error.
 
 use crate::coordinator::request::{GenRequest, GenResponse, SolverChoice, TaskKind};
+use crate::jobs::store::Job;
 use crate::serve::admission::SubmitError;
 use crate::util::json::Json;
 
@@ -83,6 +108,25 @@ pub enum WireMsg {
     Request { client_id: u64, req: GenRequest },
     /// `{"op": "shutdown"}` — begin the graceful drain.
     Shutdown,
+    /// `{"op": "enqueue", ...}` — durably accept a job and answer with
+    /// its id immediately (submit-now/fetch-later).
+    Enqueue {
+        client_id: u64,
+        req: GenRequest,
+        /// Delay before the first run (the `run_at` deferral).
+        defer_ms: u64,
+        /// Retry budget override (None = server default).
+        max_retries: Option<u32>,
+        /// Result-retention override (None = server default).
+        ttl_ms: Option<u64>,
+    },
+    /// `{"op": "status", "job": N}` — job lifecycle snapshot.
+    JobStatus { client_id: u64, job: u64 },
+    /// `{"op": "result", "job": N, "wait_ms": T}` — fetch the result,
+    /// long-polling up to `wait_ms` for a terminal state.
+    JobResult { client_id: u64, job: u64, wait_ms: u64 },
+    /// `{"op": "cancel", "job": N}`.
+    JobCancel { client_id: u64, job: u64 },
 }
 
 /// A request-line parse failure: the message goes into an
@@ -107,24 +151,10 @@ pub const MAX_WIRE_SAMPLES: usize = 4096;
 /// memory one).
 pub const MAX_WIRE_STEPS: usize = 65_536;
 
-/// Parse one request line.
-pub fn parse_line(line: &str) -> Result<WireMsg, WireError> {
-    let j = Json::parse(line)
-        .map_err(|e| WireError { id: 0, msg: format!("bad request: {e}") })?;
-    if j.as_obj().is_none() {
-        return Err(WireError {
-            id: 0,
-            msg: "bad request: expected a JSON object".into(),
-        });
-    }
-    let client_id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+/// Parse the generation-request fields shared by plain requests and
+/// `enqueue` (task/n/solver/steps/guidance/decode, with the wire caps).
+fn parse_gen(j: &Json, client_id: u64) -> Result<GenRequest, WireError> {
     let err = |msg: String| WireError { id: client_id, msg };
-    if let Some(op) = j.get("op").and_then(|v| v.as_str()) {
-        return match op {
-            "shutdown" => Ok(WireMsg::Shutdown),
-            other => Err(err(format!("bad request: unknown op {other:?}"))),
-        };
-    }
     let task_name = j.get("task").and_then(|v| v.as_str()).unwrap_or("circle");
     let task = TaskKind::from_name(task_name)
         .ok_or_else(|| err(format!("bad request: unknown task {task_name:?}")))?;
@@ -148,10 +178,55 @@ pub fn parse_line(line: &str) -> Result<WireMsg, WireError> {
     })?;
     let guidance = j.get("guidance").and_then(|v| v.as_f64()).unwrap_or(2.0) as f32;
     let decode = matches!(j.get("decode"), Some(Json::Bool(true)));
-    Ok(WireMsg::Request {
-        client_id,
-        req: GenRequest { id: 0, task, n_samples: n, solver, guidance, decode },
-    })
+    Ok(GenRequest { id: 0, task, n_samples: n, solver, guidance, decode })
+}
+
+/// Parse one request line.
+pub fn parse_line(line: &str) -> Result<WireMsg, WireError> {
+    let j = Json::parse(line)
+        .map_err(|e| WireError { id: 0, msg: format!("bad request: {e}") })?;
+    if j.as_obj().is_none() {
+        return Err(WireError {
+            id: 0,
+            msg: "bad request: expected a JSON object".into(),
+        });
+    }
+    let client_id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let err = |msg: String| WireError { id: client_id, msg };
+    if let Some(op) = j.get("op").and_then(|v| v.as_str()) {
+        return match op {
+            "shutdown" => Ok(WireMsg::Shutdown),
+            "enqueue" => Ok(WireMsg::Enqueue {
+                client_id,
+                req: parse_gen(&j, client_id)?,
+                defer_ms: j.get("defer_ms").and_then(|v| v.as_f64())
+                    .unwrap_or(0.0) as u64,
+                max_retries: j.get("max_retries").and_then(|v| v.as_usize())
+                    .map(|v| v as u32),
+                ttl_ms: j.get("ttl_ms").and_then(|v| v.as_f64()).map(|v| v as u64),
+            }),
+            "status" | "result" | "cancel" => {
+                let job = j
+                    .get("job")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| {
+                        err(format!("bad request: op {op:?} requires a job id"))
+                    })? as u64;
+                Ok(match op {
+                    "status" => WireMsg::JobStatus { client_id, job },
+                    "cancel" => WireMsg::JobCancel { client_id, job },
+                    _ => WireMsg::JobResult {
+                        client_id,
+                        job,
+                        wait_ms: j.get("wait_ms").and_then(|v| v.as_f64())
+                            .unwrap_or(0.0) as u64,
+                    },
+                })
+            }
+            other => Err(err(format!("bad request: unknown op {other:?}"))),
+        };
+    }
+    Ok(WireMsg::Request { client_id, req: parse_gen(&j, client_id)? })
 }
 
 fn base_obj(client_id: u64, status: Status) -> BTreeMap<String, Json> {
@@ -192,11 +267,13 @@ pub fn status_line(client_id: u64, status: Status, error: &str) -> String {
 /// numbers so clients can implement informed backoff).
 pub fn reject_line(client_id: u64, err: &SubmitError) -> String {
     match err {
-        SubmitError::Overloaded { queued_samples, queue_depth, .. } => {
+        SubmitError::Overloaded { queued_samples, queue_depth, retry_after_ms,
+                                  .. } => {
             let mut m = base_obj(client_id, Status::Overloaded);
             m.insert("error".into(), Json::Str(err.to_string()));
             m.insert("queued_samples".into(), Json::Num(*queued_samples as f64));
             m.insert("queue_depth".into(), Json::Num(*queue_depth as f64));
+            m.insert("retry_after_ms".into(), Json::Num(*retry_after_ms as f64));
             Json::Obj(m).to_string()
         }
         SubmitError::ShuttingDown => {
@@ -215,6 +292,73 @@ pub fn shutdown_ack_line() -> String {
     Json::Obj(m).to_string()
 }
 
+fn job_obj(client_id: u64, status: Status, job: u64, state: &str)
+           -> BTreeMap<String, Json> {
+    let mut m = base_obj(client_id, status);
+    m.insert("job".into(), Json::Num(job as f64));
+    m.insert("state".into(), Json::Str(state.into()));
+    m
+}
+
+/// Ack line for a durably-accepted `enqueue` (sent only after the fsync).
+pub fn enqueue_ack_line(client_id: u64, job: u64) -> String {
+    Json::Obj(job_obj(client_id, Status::Ok, job, "queued")).to_string()
+}
+
+/// Response line for a `status` op (also the post-`cancel` snapshot).
+pub fn job_status_line(client_id: u64, job: &Job) -> String {
+    let mut m = job_obj(client_id, Status::Ok, job.id, job.state.as_str());
+    m.insert("attempts".into(), Json::Num(job.attempts as f64));
+    if let Some(err) = &job.error {
+        m.insert("error".into(), Json::Str(err.clone()));
+    }
+    Json::Obj(m).to_string()
+}
+
+/// Response line for a `result` op: a done job's retained result, a
+/// dead/cancelled job's error, or (still pending at the long-poll
+/// deadline) the non-terminal state for the client to poll again.
+pub fn job_result_line(client_id: u64, job: &Job) -> String {
+    use crate::jobs::store::JobState;
+    match (&job.state, &job.result) {
+        (JobState::Done, Some(r)) => {
+            let mut m = job_obj(client_id, Status::Ok, job.id, "done");
+            let dim = if job.n_samples > 0 {
+                r.samples.len() / job.n_samples
+            } else {
+                0
+            };
+            m.insert("dim".into(), Json::Num(dim as f64));
+            m.insert("samples".into(),
+                     Json::Arr(r.samples.iter().map(|&v| Json::Num(v as f64))
+                                .collect()));
+            if let Some(images) = &r.images {
+                m.insert("images".into(),
+                         Json::Arr(images.iter().map(|&v| Json::Num(v as f64))
+                                    .collect()));
+            }
+            m.insert("wall_latency_s".into(), Json::Num(r.wall_latency_s));
+            m.insert("hw_latency_s".into(), Json::Num(r.hw_latency_s));
+            m.insert("hw_energy_j".into(), Json::Num(r.hw_energy_j));
+            Json::Obj(m).to_string()
+        }
+        (s, _) if s.is_terminal() => {
+            // dead or cancelled (a done job always retains its result)
+            let mut m = job_obj(client_id, Status::Error, job.id, s.as_str());
+            m.insert("error".into(), Json::Str(
+                job.error.clone()
+                   .unwrap_or_else(|| format!("job is {}", s.as_str()))));
+            Json::Obj(m).to_string()
+        }
+        _ => job_status_line(client_id, job),
+    }
+}
+
+/// Error line for a job op against an unknown (or TTL-swept) job id.
+pub fn job_unknown_line(client_id: u64, job: u64) -> String {
+    status_line(client_id, Status::Error, &format!("unknown job {job}"))
+}
+
 /// One parsed response line (the client side of the protocol — used by
 /// `memdiff client`, the front-end bench scenario and the tests).
 #[derive(Debug, Clone)]
@@ -228,7 +372,16 @@ pub struct WireReply {
     /// Queue numbers of an `overloaded` reject.
     pub queued_samples: Option<usize>,
     pub queue_depth: Option<usize>,
+    /// Adaptive backoff hint of an `overloaded` reject (drain-rate
+    /// derived; wait this long before retrying).
+    pub retry_after_ms: Option<u64>,
     pub wall_latency_s: f64,
+    /// Job id of a job-op reply.
+    pub job: Option<u64>,
+    /// Job lifecycle state of a job-op reply.
+    pub state: Option<String>,
+    /// Failed attempts so far, on `status`/pending-`result` replies.
+    pub attempts: Option<u32>,
 }
 
 /// Parse one response line.
@@ -253,37 +406,80 @@ pub fn parse_reply(line: &str) -> Result<WireReply, String> {
         error: j.get("error").and_then(|v| v.as_str()).map(String::from),
         queued_samples: j.get("queued_samples").and_then(|v| v.as_usize()),
         queue_depth: j.get("queue_depth").and_then(|v| v.as_usize()),
+        retry_after_ms: j.get("retry_after_ms").and_then(|v| v.as_f64())
+            .map(|v| v as u64),
         wall_latency_s: j.get("wall_latency_s").and_then(|v| v.as_f64())
             .unwrap_or(f64::NAN),
+        job: j.get("job").and_then(|v| v.as_f64()).map(|v| v as u64),
+        state: j.get("state").and_then(|v| v.as_str()).map(String::from),
+        attempts: j.get("attempts").and_then(|v| v.as_usize()).map(|v| v as u32),
     })
+}
+
+/// The generation fields shared by `request_line` and `enqueue_line`.
+fn gen_fields(client_id: u64, task: TaskKind, n: usize, solver: SolverChoice,
+              guidance: f32, decode: bool) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("id".into(), Json::Num(client_id as f64));
+    m.insert("task".into(), Json::Str(task.name().into()));
+    m.insert("n".into(), Json::Num(n as f64));
+    m.insert("solver".into(), Json::Str(solver.name().into()));
+    if let Some(steps) = solver.steps() {
+        m.insert("steps".into(), Json::Num(steps as f64));
+    }
+    m.insert("guidance".into(), Json::Num(guidance as f64));
+    if decode {
+        m.insert("decode".into(), Json::Bool(true));
+    }
+    m
 }
 
 /// Build a request line (client side).
 pub fn request_line(client_id: u64, task: TaskKind, n: usize,
                     solver: SolverChoice, guidance: f32, decode: bool)
                     -> String {
-    let mut m = BTreeMap::new();
-    m.insert("id".into(), Json::Num(client_id as f64));
-    m.insert("task".into(), Json::Str(match task {
-        TaskKind::Circle => "circle".into(),
-        TaskKind::Letter(0) => "h".into(),
-        TaskKind::Letter(1) => "k".into(),
-        TaskKind::Letter(_) => "u".into(),
-    }));
-    m.insert("n".into(), Json::Num(n as f64));
-    let (solver_name, steps) = match solver {
-        SolverChoice::AnalogOde => ("analog-ode", None),
-        SolverChoice::AnalogSde => ("analog-sde", None),
-        SolverChoice::DigitalOde { steps } => ("euler", Some(steps)),
-        SolverChoice::DigitalSde { steps } => ("euler-sde", Some(steps)),
-    };
-    m.insert("solver".into(), Json::Str(solver_name.into()));
-    if let Some(steps) = steps {
-        m.insert("steps".into(), Json::Num(steps as f64));
+    Json::Obj(gen_fields(client_id, task, n, solver, guidance, decode))
+        .to_string()
+}
+
+/// Build an `enqueue` line (client side).  `None` overrides defer to the
+/// server's configured defaults.
+#[allow(clippy::too_many_arguments)]
+pub fn enqueue_line(client_id: u64, task: TaskKind, n: usize,
+                    solver: SolverChoice, guidance: f32, decode: bool,
+                    defer_ms: u64, max_retries: Option<u32>,
+                    ttl_ms: Option<u64>) -> String {
+    let mut m = gen_fields(client_id, task, n, solver, guidance, decode);
+    m.insert("op".into(), Json::Str("enqueue".into()));
+    if defer_ms > 0 {
+        m.insert("defer_ms".into(), Json::Num(defer_ms as f64));
     }
-    m.insert("guidance".into(), Json::Num(guidance as f64));
-    if decode {
-        m.insert("decode".into(), Json::Bool(true));
+    if let Some(r) = max_retries {
+        m.insert("max_retries".into(), Json::Num(r as f64));
+    }
+    if let Some(t) = ttl_ms {
+        m.insert("ttl_ms".into(), Json::Num(t as f64));
+    }
+    Json::Obj(m).to_string()
+}
+
+/// Build a `status` or `cancel` line (client side).
+pub fn job_op_line(op: &str, client_id: u64, job: u64) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("op".into(), Json::Str(op.into()));
+    m.insert("id".into(), Json::Num(client_id as f64));
+    m.insert("job".into(), Json::Num(job as f64));
+    Json::Obj(m).to_string()
+}
+
+/// Build a long-polling `result` line (client side).
+pub fn result_line(client_id: u64, job: u64, wait_ms: u64) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("op".into(), Json::Str("result".into()));
+    m.insert("id".into(), Json::Num(client_id as f64));
+    m.insert("job".into(), Json::Num(job as f64));
+    if wait_ms > 0 {
+        m.insert("wait_ms".into(), Json::Num(wait_ms as f64));
     }
     Json::Obj(m).to_string()
 }
@@ -412,11 +608,13 @@ mod tests {
             backend: "analog".into(),
             queued_samples: 96,
             queue_depth: 128,
+            retry_after_ms: 350,
         };
         let r = parse_reply(&reject_line(5, &e)).unwrap();
         assert_eq!(r.status, Status::Overloaded);
         assert_eq!(r.queued_samples, Some(96));
         assert_eq!(r.queue_depth, Some(128));
+        assert_eq!(r.retry_after_ms, Some(350), "backoff hint rides the wire");
         assert!(r.error.unwrap().contains("overloaded"));
 
         let r = parse_reply(&reject_line(5, &SubmitError::ShuttingDown)).unwrap();
@@ -432,5 +630,109 @@ mod tests {
         let r = parse_reply(&shutdown_ack_line()).unwrap();
         assert_eq!(r.status, Status::Ok);
         assert!(r.samples.is_empty());
+    }
+
+    #[test]
+    fn enqueue_line_roundtrips_job_fields() {
+        let line = enqueue_line(8, TaskKind::Letter(0), 5,
+                                SolverChoice::DigitalOde { steps: 40 }, 1.0,
+                                false, 2500, Some(3), Some(60_000));
+        let WireMsg::Enqueue { client_id, req, defer_ms, max_retries, ttl_ms } =
+            parse_line(&line).unwrap()
+        else { panic!("expected enqueue") };
+        assert_eq!(client_id, 8);
+        assert_eq!(req.task, TaskKind::Letter(0));
+        assert_eq!(req.n_samples, 5);
+        assert_eq!(req.solver, SolverChoice::DigitalOde { steps: 40 });
+        assert_eq!(defer_ms, 2500);
+        assert_eq!(max_retries, Some(3));
+        assert_eq!(ttl_ms, Some(60_000));
+        // omitted knobs come back None (server defaults)
+        let line = enqueue_line(8, TaskKind::Circle, 1, SolverChoice::AnalogOde,
+                                0.0, false, 0, None, None);
+        let WireMsg::Enqueue { defer_ms, max_retries, ttl_ms, .. } =
+            parse_line(&line).unwrap()
+        else { panic!() };
+        assert_eq!((defer_ms, max_retries, ttl_ms), (0, None, None));
+        // the wire caps guard enqueue exactly like plain requests
+        assert!(parse_line(&format!(
+            r#"{{"op":"enqueue","n":{}}}"#, MAX_WIRE_SAMPLES + 1)).is_err());
+    }
+
+    #[test]
+    fn job_ops_parse_and_require_ids() {
+        let WireMsg::JobStatus { client_id, job } =
+            parse_line(&job_op_line("status", 2, 17)).unwrap()
+        else { panic!() };
+        assert_eq!((client_id, job), (2, 17));
+        let WireMsg::JobCancel { job, .. } =
+            parse_line(&job_op_line("cancel", 2, 17)).unwrap()
+        else { panic!() };
+        assert_eq!(job, 17);
+        let WireMsg::JobResult { job, wait_ms, .. } =
+            parse_line(&result_line(2, 17, 5000)).unwrap()
+        else { panic!() };
+        assert_eq!((job, wait_ms), (17, 5000));
+        let e = parse_line(r#"{"op":"status","id":4}"#).unwrap_err();
+        assert_eq!(e.id, 4);
+        assert!(e.msg.contains("requires a job id"), "{}", e.msg);
+    }
+
+    #[test]
+    fn job_reply_lines_roundtrip() {
+        use crate::jobs::store::{Job, JobResult, JobState};
+        let r = parse_reply(&enqueue_ack_line(3, 17)).unwrap();
+        assert_eq!((r.id, r.status), (3, Status::Ok));
+        assert_eq!(r.job, Some(17));
+        assert_eq!(r.state.as_deref(), Some("queued"));
+
+        let mut job = Job {
+            id: 17,
+            task: TaskKind::Circle,
+            n_samples: 2,
+            solver: SolverChoice::AnalogOde,
+            guidance: 0.0,
+            decode: false,
+            state: JobState::Failed,
+            attempts: 2,
+            max_retries: 4,
+            run_at_ms: 0,
+            ttl_ms: 1000,
+            expire_at_ms: 0,
+            error: Some("transient".into()),
+            result: None,
+            cancel_requested: false,
+        };
+        let r = parse_reply(&job_status_line(3, &job)).unwrap();
+        assert_eq!(r.state.as_deref(), Some("failed"));
+        assert_eq!(r.attempts, Some(2));
+        assert!(r.error.unwrap().contains("transient"));
+        // result op on a non-terminal job answers the pollable snapshot
+        let r = parse_reply(&job_result_line(3, &job)).unwrap();
+        assert_eq!(r.status, Status::Ok);
+        assert_eq!(r.state.as_deref(), Some("failed"));
+
+        job.state = JobState::Done;
+        job.result = Some(JobResult {
+            samples: vec![1.0, 2.0, 3.0, 4.0],
+            images: None,
+            wall_latency_s: 0.5,
+            hw_latency_s: 1e-3,
+            hw_energy_j: 2e-6,
+        });
+        let r = parse_reply(&job_result_line(3, &job)).unwrap();
+        assert_eq!(r.status, Status::Ok);
+        assert_eq!(r.state.as_deref(), Some("done"));
+        assert_eq!(r.dim, 2);
+        assert_eq!(r.samples, vec![1.0, 2.0, 3.0, 4.0]);
+
+        job.state = JobState::Dead;
+        let r = parse_reply(&job_result_line(3, &job)).unwrap();
+        assert_eq!(r.status, Status::Error);
+        assert_eq!(r.state.as_deref(), Some("dead"));
+
+        let r = parse_reply(&job_unknown_line(3, 99)).unwrap();
+        assert_eq!(r.status, Status::Error);
+        assert!(r.error.unwrap().contains("unknown job 99"));
     }
 }

@@ -133,6 +133,12 @@ impl Summary {
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(f64::NAN, f64::max)
     }
+
+    /// Total of all recorded values (0 when empty — unlike `mean`, a sum
+    /// over nothing is well-defined).
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
 }
 
 #[cfg(test)]

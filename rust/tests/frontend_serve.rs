@@ -205,9 +205,12 @@ fn full_lane_sheds_while_other_lane_serves() {
     assert!(t0.elapsed() < Duration::from_millis(250),
             "overload must answer without blocking");
     match &err {
-        SubmitError::Overloaded { backend, queued_samples, queue_depth } => {
+        SubmitError::Overloaded {
+            backend, queued_samples, queue_depth, retry_after_ms,
+        } => {
             assert_eq!(backend, "slow");
             assert_eq!((*queued_samples, *queue_depth), (4, 4));
+            assert!(*retry_after_ms > 0, "shed carries a backoff hint");
         }
         other => panic!("expected Overloaded, got {other:?}"),
     }

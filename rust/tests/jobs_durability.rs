@@ -1,0 +1,318 @@
+//! Durable-job-queue crash suite: torn-log replay at every byte offset,
+//! SIGKILL + restart end-to-end over the TCP front-end (the acceptance
+//! scenario — every fsync-acknowledged job is re-run or its retained
+//! result served), and the drain regression (a runner drain checkpoints
+//! queued work instead of dropping it, without burning retry budget).
+//!
+//! Runs without AOT artifacts (synthetic weights / stub engines).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use memdiff::coordinator::batcher::BatcherConfig;
+use memdiff::coordinator::service::Engine;
+use memdiff::coordinator::{
+    GenRequest, Service, ServiceConfig, SolverChoice, TaskKind,
+};
+use memdiff::jobs::{record, JobRunner, JobState, JobStore, RunnerConfig};
+use memdiff::util::rng::Rng;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("memdiff_jobsit_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn req(n: usize) -> GenRequest {
+    GenRequest {
+        id: 0,
+        task: TaskKind::Circle,
+        n_samples: n,
+        solver: SolverChoice::DigitalOde { steps: 8 },
+        guidance: 0.0,
+        decode: false,
+    }
+}
+
+// ------------------------------------------------- torn-tail replay
+
+/// Property test over the record framing as the store actually uses it:
+/// truncate `jobs.log` at EVERY byte offset and reopen.  Replay must
+/// never fail, must recover exactly the complete-frame prefix (the
+/// fsync-acknowledged jobs), and must drop only the torn tail.
+#[test]
+fn log_truncated_at_every_offset_replays_exact_acknowledged_prefix() {
+    let dir = tmp("trunc");
+    let store = JobStore::open(&dir).unwrap();
+    const N: u64 = 6;
+    for i in 0..N {
+        let id = store.enqueue(&req(1 + i as usize), 0, 2, 60_000).unwrap();
+        assert_eq!(id, i + 1, "ids are dense from 1");
+    }
+    drop(store);
+    let log = std::fs::read(dir.join("jobs.log")).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let cut_dir = tmp("trunc_cut");
+    for cut in 0..=log.len() {
+        std::fs::create_dir_all(&cut_dir).unwrap();
+        std::fs::write(cut_dir.join("jobs.log"), &log[..cut]).unwrap();
+        // the codec is the oracle: a job survives iff its frame is whole
+        let (frames, clean) = record::decode_all(&log[..cut]);
+        assert!(clean <= cut);
+        let replayed = JobStore::open(&cut_dir)
+            .unwrap_or_else(|e| panic!("cut at {cut}: replay failed: {e:#}"));
+        let g = replayed.gauges();
+        assert_eq!(g.queued, frames.len(), "cut at {cut}");
+        assert_eq!(g.enqueued_total, frames.len() as u64, "cut at {cut}");
+        for id in 1..=frames.len() as u64 {
+            let j = replayed.get(id).unwrap_or_else(|| {
+                panic!("cut at {cut}: job {id} lost from clean prefix")
+            });
+            assert_eq!(j.state, JobState::Queued);
+            assert_eq!(j.n_samples, id as usize, "payload intact at cut {cut}");
+        }
+        assert!(replayed.get(frames.len() as u64 + 1).is_none(),
+                "cut at {cut}: torn tail must not materialize a job");
+        drop(replayed);
+        std::fs::remove_dir_all(&cut_dir).unwrap();
+    }
+}
+
+// ---------------------------------------------- SIGKILL + restart e2e
+
+#[cfg(unix)]
+mod sigkill {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::process::{Child, Command, Stdio};
+
+    use memdiff::serve::protocol::{self, read_reply, Status};
+
+    fn spawn_server(dir: &Path) -> (Child, String) {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_memdiff"))
+            .args(["serve", "--listen", "127.0.0.1:0", "--synthetic",
+                   "--workers", "1", "--state-dir"])
+            .arg(dir)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn memdiff serve");
+        let stdout = child.stdout.take().unwrap();
+        let mut lines = BufReader::new(stdout);
+        let addr = loop {
+            let mut line = String::new();
+            assert!(lines.read_line(&mut line).unwrap() > 0,
+                    "server exited before listening");
+            if let Some(a) = line.trim().strip_prefix("listening on ") {
+                break a.to_string();
+            }
+        };
+        // keep the pipe drained so the child never blocks on stdout
+        std::thread::spawn(move || {
+            let mut s = String::new();
+            while matches!(lines.read_line(&mut s), Ok(n) if n > 0) {
+                s.clear();
+            }
+        });
+        (child, addr)
+    }
+
+    fn connect(addr: &str) -> (TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        (stream.try_clone().unwrap(), BufReader::new(stream))
+    }
+
+    fn send(w: &mut TcpStream, line: &str) {
+        w.write_all(line.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+    }
+
+    /// The acceptance scenario: enqueue over loopback, SIGKILL the
+    /// server, restart on the same state dir, and fetch every
+    /// acknowledged job — the completed one's retained result is served
+    /// and the interrupted one is re-run to `done`.  Zero silent losses.
+    #[test]
+    fn sigkill_and_restart_serves_every_acknowledged_job() {
+        let dir = tmp("kill");
+        let (mut child, addr) = spawn_server(&dir);
+        let (mut w, mut r) = connect(&addr);
+
+        // job A: run to completion before the crash (retained result)
+        send(&mut w, &protocol::enqueue_line(
+            1, TaskKind::Circle, 2, SolverChoice::DigitalOde { steps: 8 },
+            0.0, false, 0, None, None));
+        let ack = read_reply(&mut r).unwrap();
+        assert_eq!(ack.status, Status::Ok, "{:?}", ack.error);
+        let job_a = ack.job.expect("enqueue ack carries the job id");
+        send(&mut w, &protocol::result_line(2, job_a, 30_000));
+        let done = read_reply(&mut r).unwrap();
+        assert_eq!((done.status, done.state.as_deref()),
+                   (Status::Ok, Some("done")), "{:?}", done.error);
+        assert_eq!(done.samples.len(), 2 * done.dim);
+
+        // job B: acknowledged (fsync'd) right before the kill
+        send(&mut w, &protocol::enqueue_line(
+            3, TaskKind::Letter(1), 3, SolverChoice::DigitalSde { steps: 8 },
+            0.0, false, 0, None, None));
+        let ack_b = read_reply(&mut r).unwrap();
+        assert_eq!(ack_b.status, Status::Ok, "{:?}", ack_b.error);
+        let job_b = ack_b.job.unwrap();
+        assert_ne!(job_a, job_b);
+
+        child.kill().unwrap();
+        child.wait().unwrap();
+        drop((w, r));
+
+        // restart on the same state dir: the log replays
+        let (mut child2, addr2) = spawn_server(&dir);
+        let (mut w, mut r) = connect(&addr2);
+        for (k, job) in [job_a, job_b].into_iter().enumerate() {
+            send(&mut w, &protocol::result_line(10 + k as u64, job, 30_000));
+            let reply = read_reply(&mut r).unwrap();
+            assert_eq!(reply.job, Some(job));
+            assert_eq!((reply.status, reply.state.as_deref()),
+                       (Status::Ok, Some("done")),
+                       "job {job} after restart: {:?}", reply.error);
+            assert!(!reply.samples.is_empty(), "job {job} payload served");
+        }
+
+        // graceful exit this time: drain checkpoints the store
+        send(&mut w, &protocol::shutdown_line());
+        assert_eq!(read_reply(&mut r).unwrap().status, Status::Ok);
+        child2.wait().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+// --------------------------------------------------- drain regression
+
+/// Engine blocked on a shared gate: pins the attempt in flight while the
+/// test drains the runner underneath it.
+struct GateEngine {
+    gate: Arc<Mutex<()>>,
+    entered: Arc<AtomicUsize>,
+}
+
+impl Engine for GateEngine {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn n_classes(&self) -> usize {
+        3
+    }
+    fn generate(&self, _s: SolverChoice, _oh: &[f32], _g: f32, n: usize,
+                _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        let _hold = self.gate.lock().unwrap();
+        Ok(vec![0.5; n * 2])
+    }
+}
+
+struct OkEngine;
+
+impl Engine for OkEngine {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn n_classes(&self) -> usize {
+        3
+    }
+    fn generate(&self, _s: SolverChoice, _oh: &[f32], _g: f32, n: usize,
+                _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+        Ok(vec![0.25; n * 2])
+    }
+}
+
+fn svc(engine: Arc<dyn Engine>) -> Arc<Service> {
+    Arc::new(Service::start(engine, None, ServiceConfig {
+        workers: 1,
+        batcher: BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_millis(1),
+            queue_depth: 0,
+        },
+        seed: 0xD12A,
+        intra_threads: 1,
+    }))
+}
+
+/// Regression for the shutdown/drain interaction: draining the runner
+/// while attempts are in flight must checkpoint those jobs as `queued`
+/// (not failed, not dropped, no retry budget burned), and a fresh
+/// runner on the same state dir must complete every one of them.
+#[test]
+fn runner_drain_checkpoints_inflight_jobs_and_restart_completes_them() {
+    let dir = tmp("drain");
+    let gate = Arc::new(Mutex::new(()));
+    let entered = Arc::new(AtomicUsize::new(0));
+    let service = svc(Arc::new(GateEngine {
+        gate: Arc::clone(&gate),
+        entered: Arc::clone(&entered),
+    }));
+    let store = Arc::new(JobStore::open(&dir).unwrap());
+    let runner = JobRunner::start(
+        Arc::clone(&service),
+        Arc::clone(&store),
+        RunnerConfig {
+            sweep_interval: Duration::from_millis(20),
+            drain_grace: Duration::from_millis(200),
+            ..RunnerConfig::default()
+        },
+    );
+
+    // pin the worker inside generate(), then get three jobs in flight
+    let hold = gate.lock().unwrap();
+    let ids: Vec<u64> = (0..3)
+        .map(|_| runner.enqueue(&req(2), 0, None, None).unwrap())
+        .collect();
+    while entered.load(Ordering::SeqCst) == 0 {
+        std::thread::yield_now();
+    }
+
+    // drain with everything stuck: after the grace window the runner
+    // must requeue the in-flight attempts and checkpoint them durably
+    runner.drain();
+    drop(runner);
+    drop(hold); // let the abandoned batches finish; their tickets are gone
+    drop(service); // Drop drains the service under the no-drop invariant
+    drop(store);
+
+    let store2 = Arc::new(JobStore::open(&dir).unwrap());
+    let g = store2.gauges();
+    assert_eq!((g.queued, g.done, g.dead, g.failed), (3, 0, 0, 0),
+               "drain parks jobs as queued: {}", g.summary());
+    for id in &ids {
+        let j = store2.get(*id).expect("no job dropped across drain");
+        assert_eq!(j.state, JobState::Queued);
+        assert_eq!(j.attempts, 0, "a drain is not a failed attempt");
+    }
+
+    // fresh runner over a healthy engine: every parked job completes
+    let service2 = svc(Arc::new(OkEngine));
+    let runner2 = JobRunner::start(
+        Arc::clone(&service2),
+        Arc::clone(&store2),
+        RunnerConfig {
+            sweep_interval: Duration::from_millis(20),
+            ..RunnerConfig::default()
+        },
+    );
+    for id in ids {
+        let j = runner2
+            .wait_result(id, Duration::from_secs(30))
+            .expect("job resolves after restart");
+        assert_eq!(j.state, JobState::Done, "job {id}: {:?}", j.error);
+        let result = j.result.expect("done job retains its result");
+        assert_eq!(result.samples, vec![0.25; 4]);
+    }
+    runner2.drain();
+    drop(runner2);
+    drop(service2);
+    std::fs::remove_dir_all(&dir).ok();
+}
