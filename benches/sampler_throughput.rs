@@ -9,7 +9,9 @@
 //! loopback — sustained ticket latency/throughput and the reject rate of
 //! the bounded lanes at deliberate saturation (`frontend_*` keys) — and
 //! (f) the durable job queue — fsync'd enqueue-ack latency and drained
-//! throughput (`jobs_*` keys).  The results land in
+//! throughput (`jobs_*` keys) — and (g) the observability subsystem's
+//! cost on the compute hot path, enabled vs disabled (`obs_*` keys,
+//! budgeted at < 3% in `rust/src/obs/`).  The results land in
 //! `BENCH_sampler_throughput.json` so the perf trajectory is tracked
 //! across PRs.
 
@@ -146,6 +148,7 @@ fn main() -> anyhow::Result<()> {
             solver: SolverChoice::DigitalSde { steps: 100 },
             guidance: 0.0,
             decode: false,
+            trace: memdiff::obs::TraceId::mint(),
         })?);
     }
     let mut samples = 0usize;
@@ -220,6 +223,7 @@ fn main() -> anyhow::Result<()> {
             solver,
             guidance: 2.0,
             decode: false,
+            trace: memdiff::obs::TraceId::mint(),
         })?);
     }
     let mut mixed_samples = 0usize;
@@ -383,6 +387,7 @@ fn main() -> anyhow::Result<()> {
                         solver: SolverChoice::DigitalSde { steps: 100 },
                         guidance: 0.0,
                         decode: false,
+                        trace: memdiff::obs::TraceId::NONE,
                     },
                     0,
                     None,
@@ -415,6 +420,29 @@ fn main() -> anyhow::Result<()> {
     drop(jq_store);
     let _ = std::fs::remove_dir_all(&jobs_dir);
 
+    bench::section("observability overhead (phase timers + spans, on vs off)");
+    // same batched digital lane as above: enabled is the default serving
+    // configuration, disabled strips every probe to one atomic load — the
+    // delta is the price of the [obs] subsystem on the compute hot path
+    let obs_reps = 24usize;
+    memdiff::obs::set_enabled(true);
+    let t0 = std::time::Instant::now();
+    for _ in 0..obs_reps {
+        std::hint::black_box(sampler.sample_batched(B, &[], steps, &mut rng));
+    }
+    let obs_on_sps = (obs_reps * B) as f64 / t0.elapsed().as_secs_f64();
+    memdiff::obs::set_enabled(false);
+    let t0 = std::time::Instant::now();
+    for _ in 0..obs_reps {
+        std::hint::black_box(sampler.sample_batched(B, &[], steps, &mut rng));
+    }
+    let obs_off_sps = (obs_reps * B) as f64 / t0.elapsed().as_secs_f64();
+    memdiff::obs::set_enabled(true);
+    let obs_overhead_pct = 100.0 * (obs_off_sps - obs_on_sps) / obs_off_sps;
+    bench::row(&["obs overhead (batched digital lane)",
+                 &format!("on {obs_on_sps:.0} / off {obs_off_sps:.0} \
+                           samples/s  ({obs_overhead_pct:+.2}%)")]);
+
     bench::write_json("BENCH_sampler_throughput.json", &[
         ("batch_size", B as f64),
         ("digital_scalar_samples_per_s", digital_scalar),
@@ -442,6 +470,9 @@ fn main() -> anyhow::Result<()> {
         ("frontend_rejected", fe_snap.rejected as f64),
         ("jobs_samples_per_s", jobs_sps),
         ("jobs_enqueue_fsync_p50_s", jobs_enq_p50),
+        ("obs_on_samples_per_s", obs_on_sps),
+        ("obs_off_samples_per_s", obs_off_sps),
+        ("obs_overhead_pct", obs_overhead_pct),
     ])?;
     Ok(())
 }

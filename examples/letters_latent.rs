@@ -83,6 +83,7 @@ fn main() -> anyhow::Result<()> {
                     solver: SolverChoice::AnalogSde,
                     guidance: GUIDANCE,
                     decode: true,
+                    trace: memdiff::obs::TraceId::mint(),
                 })
                 .unwrap()
         })

@@ -130,6 +130,7 @@ fn main() -> anyhow::Result<()> {
                             decode: have_decoder
                                 && task.is_conditional()
                                 && rng.uniform() < 0.3,
+                            trace: memdiff::obs::TraceId::mint(),
                         })
                         .unwrap();
                     let resp = rx.recv().unwrap();

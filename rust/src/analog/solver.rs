@@ -164,6 +164,7 @@ impl<'a> AnalogSolver<'a> {
         let mut x = x0.to_vec();
 
         for k in 0..n {
+            let _t_sub = crate::obs::phase(crate::obs::Phase::Substep);
             let tau = k as f64 * d_tau;
             // hardware τ → algorithm t (reverse time)
             let t = self.cfg.sched.t_end - t_span * (tau / self.cfg.t_solve_s);
@@ -224,8 +225,11 @@ impl<'a> AnalogSolver<'a> {
         let mut trace = Vec::new();
         for s in 0..n {
             let x = &mut out[s * dim..(s + 1) * dim];
-            for v in x.iter_mut() {
-                *v = rng.gaussian_f32();
+            {
+                let _t = crate::obs::phase(crate::obs::Phase::NoisePass);
+                for v in x.iter_mut() {
+                    *v = rng.gaussian_f32();
+                }
             }
             self.solve_into(x, onehot, rng, 0, &mut trace);
         }
@@ -255,8 +259,11 @@ impl<'a> AnalogSolver<'a> {
         let dt_alg = t_span / nsub as f64;
 
         let mut x = vec![0.0f32; len];
-        for v in x.iter_mut() {
-            *v = rng.gaussian_f32();
+        {
+            let _t = crate::obs::phase(crate::obs::Phase::NoisePass);
+            for v in x.iter_mut() {
+                *v = rng.gaussian_f32();
+            }
         }
         let mut lane_rngs: Vec<Rng> = (0..n).map(|_| rng.split()).collect();
 
@@ -287,6 +294,7 @@ impl<'a> AnalogSolver<'a> {
         let lens_r = lane_chunk_lens(n, 1, upd_chunk, upd_tasks);
 
         for k in 0..nsub {
+            let _t_sub = crate::obs::phase(crate::obs::Phase::Substep);
             let tau = k as f64 * d_tau;
             let t = self.cfg.sched.t_end - t_span * (tau / self.cfg.t_solve_s);
             let beta = self.cfg.sched.beta(t);

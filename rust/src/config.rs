@@ -30,6 +30,11 @@
 //! backoff_max_ms = 5000  # backoff ceiling
 //! result_ttl_ms = 900000 # retention of a terminal job's result/error
 //! checkpoint_every = 256 # log records between snapshot compactions
+//!
+//! [obs]
+//! enabled = true         # master switch; off = one atomic load per probe
+//! ring_capacity = 4096   # span-ring slots (overwrite-oldest, ~32 B each)
+//! jsonl_flush_ms = 10000 # metrics.jsonl flush period under --state-dir (0 = off)
 //! ```
 
 use std::collections::BTreeMap;
@@ -133,6 +138,9 @@ pub struct Config {
     /// Durable-job-queue knobs from the `[jobs]` section (used only when
     /// the server runs with `--state-dir`).
     pub jobs: JobsConfig,
+    /// Observability knobs from the `[obs]` section (tracing ring size,
+    /// master enable switch, JSONL flush cadence — see [`crate::obs`]).
+    pub obs: crate::obs::ObsConfig,
 }
 
 /// Typed `[jobs]` section — the config-file surface of
@@ -189,6 +197,7 @@ impl Default for Config {
             artifacts_dir: None,
             deploy: crate::coordinator::DeployPlan::default(),
             jobs: JobsConfig::default(),
+            obs: crate::obs::ObsConfig::default(),
         }
     }
 }
@@ -237,6 +246,17 @@ impl Config {
                 checkpoint_every: raw
                     .get_parsed("jobs", "checkpoint_every")?
                     .unwrap_or(d.jobs.checkpoint_every),
+            },
+            obs: crate::obs::ObsConfig {
+                enabled: raw
+                    .get_parsed("obs", "enabled")?
+                    .unwrap_or(d.obs.enabled),
+                ring_capacity: raw
+                    .get_parsed("obs", "ring_capacity")?
+                    .unwrap_or(d.obs.ring_capacity),
+                jsonl_flush_ms: raw
+                    .get_parsed("obs", "jsonl_flush_ms")?
+                    .unwrap_or(d.obs.jsonl_flush_ms),
             },
         })
     }
@@ -342,6 +362,24 @@ mod tests {
         let plain = Config::from_raw(&RawConfig::parse("").unwrap()).unwrap();
         assert_eq!(plain.jobs, JobsConfig::default());
         let bad = RawConfig::parse("[jobs]\nmax_retries = many\n").unwrap();
+        assert!(Config::from_raw(&bad).is_err());
+    }
+
+    #[test]
+    fn obs_section_parses_with_defaults() {
+        let raw = RawConfig::parse(
+            "[obs]\nenabled = false\nring_capacity = 1024\n",
+        )
+        .unwrap();
+        let cfg = Config::from_raw(&raw).unwrap();
+        assert!(!cfg.obs.enabled);
+        assert_eq!(cfg.obs.ring_capacity, 1024);
+        assert_eq!(cfg.obs.jsonl_flush_ms, 10_000, "untouched keys keep defaults");
+        // absent section = all defaults (enabled by default)
+        let plain = Config::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert!(plain.obs.enabled);
+        assert_eq!(plain.obs.ring_capacity, 4096);
+        let bad = RawConfig::parse("[obs]\nenabled = maybe\n").unwrap();
         assert!(Config::from_raw(&bad).is_err());
     }
 

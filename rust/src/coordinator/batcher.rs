@@ -78,6 +78,10 @@ impl SubmitOutcome {
 pub struct Batch {
     pub key: u64,
     pub requests: Vec<GenRequest>,
+    /// Per-request queue wait (submit → assembly), parallel to
+    /// `requests` — the worker turns these into `queue`/`batch_form`
+    /// trace spans without re-deriving submit times.
+    pub waits: Vec<Duration>,
 }
 
 impl Batch {
@@ -215,6 +219,8 @@ impl Batcher {
     /// budget; the head request always ships even if oversized.
     fn assemble(&self, st: &mut State, key: u64) -> Batch {
         let mut requests = Vec::new();
+        let mut waits = Vec::new();
+        let now = Instant::now();
         let mut total = 0usize;
         let mut i = 0;
         while i < st.queue.len() {
@@ -229,6 +235,7 @@ impl Batcher {
             }
             let q = st.queue.remove(i).unwrap();
             total += q.req.n_samples;
+            waits.push(now.saturating_duration_since(q.at));
             requests.push(q.req);
             if total >= self.cfg.max_batch_samples {
                 break;
@@ -242,7 +249,7 @@ impl Batcher {
             }
         }
         st.queued_samples = st.queued_samples.saturating_sub(total);
-        Batch { key, requests }
+        Batch { key, requests, waits }
     }
 }
 
@@ -317,6 +324,7 @@ mod tests {
             task: TaskKind::Letter(class),
             n_samples: n,
             solver: SolverChoice::DigitalOde { steps: 100 },
+            trace: crate::obs::TraceId::NONE,
             guidance: 2.0,
             decode: false,
         }

@@ -88,9 +88,18 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// Poison-tolerant lock: a worker panic contained by `catch_unwind`
+    /// may poison this mutex mid-update; the counters inside are
+    /// monotone scalars, so recovering the guard is always safe and the
+    /// alternative (every later metrics call cascading the panic) would
+    /// take down exactly the observability needed to diagnose it.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn record_batch(&self, n_requests: usize, n_samples: usize, fill: f64,
                         latency: Duration) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.requests += n_requests as u64;
         m.samples += n_samples as u64;
         m.batches += 1;
@@ -99,20 +108,20 @@ impl Metrics {
     }
 
     pub fn record_rejected(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.lock().rejected += 1;
     }
 
     /// Publish a single engine's bank topology + per-bank stats as the
     /// whole banking picture (replaces every group).
     pub fn set_banking(&self, banking: Vec<BankReport>) {
-        self.inner.lock().unwrap().banking = vec![banking];
+        self.lock().banking = vec![banking];
     }
 
     /// Publish ONE backend's bank topology/read stats, leaving the other
     /// backends' groups alone — each worker refreshes only its own
     /// engine after a batch instead of rebuilding every topology.
     pub fn set_backend_banking(&self, idx: usize, banking: Vec<BankReport>) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         if m.banking.len() <= idx {
             m.banking.resize_with(idx + 1, Vec::new);
         }
@@ -122,13 +131,13 @@ impl Metrics {
     /// Publish the intra-op pool gauges (refreshed after every batch, like
     /// the banking stats, so task counters stay live under traffic).
     pub fn set_pool(&self, pool: PoolStats) {
-        self.inner.lock().unwrap().pool = Some(pool);
+        self.lock().pool = Some(pool);
     }
 
     /// Declare the deployment's named backends (index order is the
     /// routing order the service uses).  Resets any prior gauges.
     pub fn set_backends(&self, names: &[String]) {
-        self.inner.lock().unwrap().backends = names
+        self.lock().backends = names
             .iter()
             .map(|n| BackendGauge { name: n.clone(), ..BackendGauge::default() })
             .collect();
@@ -139,7 +148,7 @@ impl Metrics {
     pub fn record_backend_batch(&self, idx: usize, n_requests: usize,
                                 n_samples: usize, hw_energy_j: f64,
                                 latency: Duration) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         if let Some(b) = m.backends.get_mut(idx) {
             b.requests += n_requests as u64;
             b.samples += n_samples as u64;
@@ -153,7 +162,7 @@ impl Metrics {
     /// — pairs with [`Metrics::record_rejected`], which tracks the
     /// service-wide total.
     pub fn record_backend_rejected(&self, idx: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         if let Some(b) = m.backends.get_mut(idx) {
             b.rejected += 1;
         }
@@ -161,7 +170,7 @@ impl Metrics {
 
     /// Refresh a backend lane's queue-depth gauge (queued samples).
     pub fn set_backend_queue(&self, idx: usize, depth: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         if let Some(b) = m.backends.get_mut(idx) {
             b.queue_depth = depth;
         }
@@ -170,17 +179,17 @@ impl Metrics {
     /// Record a startup degradation (a class rerouted off its planned
     /// backend, e.g. `digital_cond:hlo->rust`).
     pub fn record_degradation(&self, entry: String) {
-        self.inner.lock().unwrap().degraded.push(entry);
+        self.lock().degraded.push(entry);
     }
 
     /// Publish the job-queue gauges (pushed by the job runner).
     pub fn set_jobs(&self, gauges: JobGauges) {
-        self.inner.lock().unwrap().jobs = Some(gauges);
+        self.lock().jobs = Some(gauges);
     }
 
     /// Count one engine panic contained by a worker's `catch_unwind`.
     pub fn record_worker_panic(&self) {
-        self.inner.lock().unwrap().worker_panics += 1;
+        self.lock().worker_panics += 1;
     }
 
     /// Estimate how long a shed caller should wait before retrying
@@ -190,7 +199,7 @@ impl Metrics {
     /// queued now.  Clamped to [10 ms, 10 s]; 100 ms before any batch
     /// has completed (no rate to derive).
     pub fn retry_after_hint_ms(&self, idx: usize, queued_samples: usize) -> u64 {
-        let m = self.inner.lock().unwrap();
+        let m = self.lock();
         let Some(b) = m.backends.get(idx) else { return 100 };
         let busy_s = b.wall_latency.sum();
         if b.samples == 0 || busy_s <= 0.0 {
@@ -201,7 +210,7 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let m = self.inner.lock().unwrap();
+        let m = self.lock();
         MetricsSnapshot {
             requests: m.requests,
             samples: m.samples,
@@ -210,6 +219,7 @@ impl Metrics {
             mean_latency_s: m.wall_latency.mean(),
             p99_latency_s: m.wall_latency.p99(),
             mean_batch_fill: m.batch_fill.mean(),
+            wall_latency: m.wall_latency.clone(),
             banking: m.banking.iter().flatten().cloned().collect(),
             pool: m.pool.clone(),
             backends: m
@@ -224,6 +234,7 @@ impl Metrics {
                     queue_depth: b.queue_depth,
                     hw_energy_j: b.hw_energy_j,
                     mean_latency_s: b.wall_latency.mean(),
+                    wall_latency: b.wall_latency.clone(),
                 })
                 .collect(),
             degraded: m.degraded.clone(),
@@ -243,6 +254,9 @@ pub struct MetricsSnapshot {
     pub mean_latency_s: f64,
     pub p99_latency_s: f64,
     pub mean_batch_fill: f64,
+    /// The full (bounded, log-bucketed) wall-latency histogram, for the
+    /// Prometheus/JSON exporters.
+    pub wall_latency: Summary,
     /// Engine bank topology, one entry per score-net layer (empty when the
     /// engine exposes none, e.g. digital baselines).
     pub banking: Vec<BankReport>,
@@ -273,6 +287,8 @@ pub struct BackendSnapshot {
     /// Accumulated modeled hardware energy (J) served by this backend.
     pub hw_energy_j: f64,
     pub mean_latency_s: f64,
+    /// The backend's full wall-latency histogram, for the exporters.
+    pub wall_latency: Summary,
 }
 
 impl BackendSnapshot {
@@ -461,6 +477,30 @@ mod tests {
         assert!(r.contains("jobs=[q2 run1 fail0 done3 dead0 canc0 enq6 retry4]"),
                 "{r}");
         assert!(r.contains("panics=1"), "{r}");
+    }
+
+    #[test]
+    fn metrics_survive_a_poisoned_mutex() {
+        // a contained worker panic can poison the metrics mutex while a
+        // guard is held; every later call must recover, not cascade
+        let m = Metrics::new();
+        m.record_batch(1, 8, 1.0, Duration::from_millis(2));
+        let poison = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let _g = m.inner.lock().unwrap();
+                panic!("worker panic while holding the metrics lock");
+            }));
+        assert!(poison.is_err());
+        assert!(m.inner.is_poisoned(), "precondition: mutex is poisoned");
+        m.record_batch(2, 16, 1.0, Duration::from_millis(4));
+        m.record_rejected();
+        m.record_worker_panic();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.samples, 24);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.worker_panics, 1);
+        assert!(s.report().contains("requests=3"));
     }
 
     #[test]

@@ -185,6 +185,10 @@ pub struct GenRequest {
     pub guidance: f32,
     /// Decode latents to 12×12 pixel images (letters task).
     pub decode: bool,
+    /// Trace identity minted at ingress ([`TraceId::NONE`] for internal
+    /// synthetic requests); rides the request through every layer so
+    /// span events correlate into one timeline.
+    pub trace: crate::obs::TraceId,
 }
 
 impl GenRequest {
@@ -244,6 +248,7 @@ mod tests {
             solver: SolverChoice::DigitalOde { steps: 100 },
             guidance: 2.0,
             decode: false,
+            trace: crate::obs::TraceId::NONE,
         };
         let other_class = GenRequest { task: TaskKind::Letter(1), ..base.clone() };
         let other_steps = GenRequest {
@@ -267,6 +272,7 @@ mod tests {
             solver,
             guidance: 0.0,
             decode: false,
+            trace: crate::obs::TraceId::NONE,
         };
         let cases = [
             (SolverChoice::AnalogOde, TaskKind::Circle,
@@ -308,6 +314,7 @@ mod tests {
             solver: SolverChoice::DigitalOde { steps: 100 },
             guidance: 2.0,
             decode: false,
+            trace: crate::obs::TraceId::NONE,
         };
         let uncond = GenRequest { task: TaskKind::Circle, ..cond.clone() };
         assert_ne!(cond.batch_key(), uncond.batch_key());

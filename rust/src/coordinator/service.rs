@@ -41,7 +41,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 
@@ -56,6 +56,7 @@ use crate::diffusion::sampler::{DigitalSampler, SamplerKind, SamplerMode};
 use crate::diffusion::schedule::VpSchedule;
 use crate::energy::model::{AnalogCost, DigitalCost};
 use crate::nn::{AnalogScoreNet, DigitalScoreNet, ScoreNet};
+use crate::obs::{self, Stage};
 use crate::runtime::ArtifactStore;
 use crate::serve::admission::SubmitError;
 use crate::serve::ticket::{Ticket, TicketBoard};
@@ -285,12 +286,12 @@ impl ModeGate {
 
     /// Enter computation mode (shared).
     pub fn compute(&self) -> std::sync::RwLockReadGuard<'_, ()> {
-        self.lock.read().unwrap()
+        self.lock.read().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Enter programming mode (exclusive: all compute drains first).
     pub fn programming(&self) -> std::sync::RwLockWriteGuard<'_, ()> {
-        self.lock.write().unwrap()
+        self.lock.write().unwrap_or_else(|e| e.into_inner())
     }
 }
 
@@ -416,8 +417,21 @@ impl Service {
                     Rng::new(cfg.seed ^ (w as u64).wrapping_mul(0x9E37_79B9));
                 workers.push(std::thread::spawn(move || {
                     let engine = Arc::clone(&registry.backend(b).engine);
+                    let bname = registry.backend(b).name.clone();
                     while let Some(batch) = lane.next_batch() {
                         let _compute = mode_gate.compute();
+                        // queue wait + batch-gather spans per member
+                        let oldest = batch.waits.iter().copied().max()
+                            .unwrap_or_default();
+                        for (req, wait) in
+                            batch.requests.iter().zip(batch.waits.iter())
+                        {
+                            let class = req.class().name();
+                            obs::span(req.trace, Stage::Queue, &bname, class,
+                                      *wait);
+                            obs::span(req.trace, Stage::BatchForm, &bname,
+                                      class, oldest);
+                        }
                         let t0 = Instant::now();
                         // contain engine panics: a poisoned request fails
                         // its own batch's tickets while the worker (and
@@ -425,7 +439,7 @@ impl Service {
                         let result = match std::panic::catch_unwind(
                             std::panic::AssertUnwindSafe(|| {
                                 Self::run_batch(&*engine, decoder.as_deref(),
-                                                &batch, &mut rng)
+                                                &batch, &bname, &mut rng)
                             })) {
                             Ok(r) => r,
                             Err(payload) => {
@@ -440,6 +454,10 @@ impl Service {
                             }
                         };
                         let wall = t0.elapsed();
+                        for req in &batch.requests {
+                            obs::span(req.trace, Stage::EngineSolve, &bname,
+                                      req.class().name(), wall);
+                        }
                         metrics.record_batch(
                             batch.requests.len(),
                             batch.total_samples(),
@@ -471,15 +489,26 @@ impl Service {
                         // another backend's submit/complete traffic
                         match result {
                             Ok(responses) => {
-                                for resp in responses {
+                                // run_batch builds responses in request
+                                // order, so zipping recovers each trace
+                                for (resp, req) in responses
+                                    .into_iter()
+                                    .zip(batch.requests.iter())
+                                {
                                     let id = resp.id;
                                     tickets.complete(b, id, Ok(resp));
+                                    obs::span(req.trace, Stage::Deliver,
+                                              &bname, req.class().name(),
+                                              Duration::ZERO);
                                 }
                             }
                             Err(e) => {
                                 for req in &batch.requests {
                                     tickets.complete(b, req.id,
                                                      Err(anyhow!("{e}")));
+                                    obs::span(req.trace, Stage::Deliver,
+                                              &bname, req.class().name(),
+                                              Duration::ZERO);
                                 }
                             }
                         }
@@ -511,7 +540,7 @@ impl Service {
     }
 
     fn run_batch(engine: &dyn Engine, decoder: Option<&PixelDecoder>,
-                 batch: &Batch, rng: &mut Rng)
+                 batch: &Batch, backend: &str, rng: &mut Rng)
                  -> anyhow::Result<Vec<GenResponse>> {
         let first = &batch.requests[0];
         let onehot = first.task.onehot(engine.n_classes());
@@ -533,7 +562,13 @@ impl Service {
             offset += take;
             let images = if req.decode {
                 match decoder {
-                    Some(d) => Some(d.decode_batch(&pts)),
+                    Some(d) => {
+                        let td = Instant::now();
+                        let imgs = d.decode_batch(&pts);
+                        obs::span(req.trace, Stage::Decode, backend,
+                                  req.class().name(), td.elapsed());
+                        Some(imgs)
+                    }
                     None => return Err(anyhow!("decode requested but no decoder")),
                 }
             } else {
@@ -562,6 +597,7 @@ impl Service {
     /// and the `rejected` counter (plus the backend's own reject gauge
     /// for `Overloaded`) was incremented exactly once.
     pub fn submit_nb(&self, mut req: GenRequest) -> Result<Ticket, SubmitError> {
+        let t_admit = Instant::now();
         if req.n_samples == 0 {
             self.metrics.record_rejected();
             return Err(SubmitError::Invalid("n_samples must be > 0".into()));
@@ -578,10 +614,15 @@ impl Service {
         let id = req.id;
         // register BEFORE enqueueing: the instant the lane accepts, a
         // worker may complete the request
-        let ticket = self.tickets.register(lane_idx, id);
+        let trace = req.trace;
+        let class_name = class.name();
+        let ticket = self.tickets.register(lane_idx, id, trace);
         match self.lanes.submit(lane_idx, req) {
             SubmitOutcome::Accepted { queued_samples } => {
                 self.metrics.set_backend_queue(lane_idx, queued_samples);
+                obs::span(trace, Stage::Admit,
+                          &self.registry.backend(lane_idx).name, class_name,
+                          t_admit.elapsed());
                 Ok(ticket)
             }
             SubmitOutcome::Overloaded { queued_samples, queue_depth } => {
@@ -629,6 +670,7 @@ impl Service {
             solver,
             guidance,
             decode,
+            trace: crate::obs::TraceId::mint(),
         })?
         .recv()
     }
@@ -737,6 +779,7 @@ mod tests {
                     task: TaskKind::Letter(i % 3),
                     n_samples: i,
                     solver: SolverChoice::DigitalOde { steps: 10 },
+                    trace: crate::obs::TraceId::NONE,
                     guidance: 2.0,
                     decode: false,
                 })
@@ -780,6 +823,7 @@ mod tests {
                 solver: SolverChoice::AnalogOde,
                 guidance: 0.0,
                 decode: false,
+                trace: crate::obs::TraceId::NONE,
             })
             .is_err());
         s.shutdown();
@@ -805,6 +849,7 @@ mod tests {
             solver: SolverChoice::AnalogOde,
             guidance: 0.0,
             decode: false,
+            trace: crate::obs::TraceId::NONE,
         });
         assert!(r.is_err());
         assert_eq!(s.tickets.pending(), 0,
@@ -845,6 +890,7 @@ mod tests {
             solver: SolverChoice::AnalogOde,
             guidance: 0.0,
             decode: false,
+            trace: crate::obs::TraceId::NONE,
         }
     }
 
@@ -1116,6 +1162,7 @@ mod tests {
                     solver,
                     guidance: 2.0,
                     decode: false,
+                    trace: crate::obs::TraceId::NONE,
                 })
                 .unwrap());
         }

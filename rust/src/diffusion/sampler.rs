@@ -260,8 +260,11 @@ impl<'a> DigitalSampler<'a> {
         let mut scratch = StepScratch::default();
         for s in 0..n {
             let x = &mut out[s * dim..(s + 1) * dim];
-            for v in x.iter_mut() {
-                *v = rng.gaussian_f32();
+            {
+                let _t = crate::obs::phase(crate::obs::Phase::NoisePass);
+                for v in x.iter_mut() {
+                    *v = rng.gaussian_f32();
+                }
             }
             self.sample_into_scratch(x, onehot, n_steps, rng, &mut scratch);
         }
@@ -283,8 +286,11 @@ impl<'a> DigitalSampler<'a> {
         let dim = self.net.dim();
         let len = n * dim;
         let mut x = vec![0.0f32; len];
-        for v in x.iter_mut() {
-            *v = rng.gaussian_f32();
+        {
+            let _t = crate::obs::phase(crate::obs::Phase::NoisePass);
+            for v in x.iter_mut() {
+                *v = rng.gaussian_f32();
+            }
         }
         let mut lane_rngs: Vec<Rng> = (0..n).map(|_| rng.split()).collect();
         let (dt, ts) = self.sched.reverse_grid(n_steps);

@@ -85,7 +85,8 @@ struct Shared {
 
 impl Shared {
     fn notify_watchers(&self, id: u64) {
-        if let Some(list) = self.watchers.lock().unwrap().remove(&id) {
+        if let Some(list) = self.watchers.lock()
+            .unwrap_or_else(|e| e.into_inner()).remove(&id) {
             for n in list {
                 n.notify();
             }
@@ -148,6 +149,14 @@ impl JobRunner {
         self.sh.store.get(id)
     }
 
+    /// Current per-state gauges, also pushed into the service metrics
+    /// (the stats op calls this so scrapes are point-in-time fresh).
+    pub fn gauges(&self) -> crate::coordinator::JobGauges {
+        let g = self.sh.store.gauges();
+        self.sh.service.metrics.set_jobs(g.clone());
+        g
+    }
+
     /// Cancel a job (see [`JobStore::cancel`] for the state rules).
     pub fn cancel(&self, id: u64) -> anyhow::Result<JobState> {
         let state = self.sh.store.cancel(id)?;
@@ -163,7 +172,7 @@ impl JobRunner {
     /// (immediately if it already has, or is unknown).  This is what the
     /// front-end's long-poll `result` op sleeps on.
     pub fn subscribe(&self, id: u64, notify: &Notify) {
-        let mut w = self.sh.watchers.lock().unwrap();
+        let mut w = self.sh.watchers.lock().unwrap_or_else(|e| e.into_inner());
         match self.sh.store.get(id) {
             Some(j) if !j.state.is_terminal() => {
                 w.entry(id).or_default().push(notify.clone());
@@ -202,7 +211,8 @@ impl JobRunner {
     pub fn drain(&self) {
         self.sh.stop.store(true, Ordering::SeqCst);
         self.sh.wake.notify();
-        if let Some(t) = self.thread.lock().unwrap().take() {
+        if let Some(t) = self.thread.lock()
+            .unwrap_or_else(|e| e.into_inner()).take() {
             let _ = t.join();
         }
     }
@@ -395,6 +405,7 @@ mod tests {
             solver: SolverChoice::AnalogOde,
             guidance: 0.0,
             decode: false,
+            trace: crate::obs::TraceId::NONE,
         }
     }
 

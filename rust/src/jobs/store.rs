@@ -136,6 +136,11 @@ pub struct Job {
     /// Cancel arrived while the job was in flight; the completion will be
     /// discarded and the job finalized as `Cancelled`.
     pub cancel_requested: bool,
+    /// Trace identity: taken from the enqueueing request (so wire spans
+    /// and job attempts correlate), minted fresh on crash replay — trace
+    /// ids are process-local, a restored number could collide with the
+    /// new process's mint counter.
+    pub trace: crate::obs::TraceId,
 }
 
 impl Job {
@@ -148,6 +153,7 @@ impl Job {
             solver: self.solver,
             guidance: self.guidance,
             decode: self.decode,
+            trace: self.trace,
         }
     }
 }
@@ -265,6 +271,11 @@ impl JobStore {
             error: None,
             result: None,
             cancel_requested: false,
+            trace: if req.trace.is_none() {
+                crate::obs::TraceId::mint()
+            } else {
+                req.trace
+            },
         };
         let rec = enq_record(&job);
         append_synced(&mut m, &rec)?;
@@ -400,7 +411,8 @@ impl JobStore {
 
     /// Snapshot one job (None if unknown or already swept).
     pub fn get(&self, id: u64) -> Option<Job> {
-        self.inner.lock().unwrap().jobs.get(&id).cloned()
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+            .jobs.get(&id).cloned()
     }
 
     /// Ids of jobs ready to submit: `Queued`/`Failed`, due, not flagged
@@ -453,7 +465,7 @@ impl JobStore {
 
     /// Records appended since the last checkpoint (compaction trigger).
     pub fn appended_records(&self) -> usize {
-        self.inner.lock().unwrap().appended
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).appended
     }
 
     /// Compact: write the whole table to `snapshot.json` atomically
@@ -474,6 +486,7 @@ impl JobStore {
         {
             let mut f = File::create(&tmp)?;
             f.write_all(text.as_bytes())?;
+            let _t = crate::obs::phase(crate::obs::Phase::Fsync);
             f.sync_data()?;
         }
         std::fs::rename(&tmp, self.dir.join(SNAP_FILE))?;
@@ -495,7 +508,7 @@ impl JobStore {
 
     /// Per-state counts + lifetime totals, for the metrics gauges.
     pub fn gauges(&self) -> JobGauges {
-        let m = self.inner.lock().unwrap();
+        let m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         let mut g = JobGauges {
             enqueued_total: m.enqueued_total,
             retries_total: m.retries_total,
@@ -538,6 +551,7 @@ fn enq_record(job: &Job) -> Json {
         ("run_at", num(job.run_at_ms)),
         ("max_retries", num(job.max_retries as u64)),
         ("ttl_ms", num(job.ttl_ms)),
+        ("trace", num(job.trace.0)),
     ];
     if let Some(steps) = job.solver.steps() {
         fields.push(("steps", num(steps as u64)));
@@ -583,6 +597,8 @@ fn apply_record(inner: &mut Inner, j: &Json) -> anyhow::Result<()> {
                 error: None,
                 result: None,
                 cancel_requested: false,
+                // replay runs in a new process: fresh trace (see `Job`)
+                trace: crate::obs::TraceId::mint(),
             };
             inner.jobs.insert(id, job);
             inner.next_id = inner.next_id.max(id + 1);
@@ -665,6 +681,7 @@ fn job_to_json(job: &Job) -> Json {
     m.insert("run_at".to_string(), num(job.run_at_ms));
     m.insert("ttl_ms".to_string(), num(job.ttl_ms));
     m.insert("exp".to_string(), num(job.expire_at_ms));
+    m.insert("trace".to_string(), num(job.trace.0));
     if let Some(err) = &job.error {
         m.insert("err".to_string(), Json::Str(err.clone()));
     }
@@ -713,6 +730,8 @@ fn job_from_json(j: &Json) -> Option<Job> {
         error: j.get("err").and_then(|v| v.as_str()).map(String::from),
         result,
         cancel_requested: matches!(j.get("cancel_requested"), Some(Json::Bool(true))),
+        // snapshot restore = new process: fresh trace (see `Job`)
+        trace: crate::obs::TraceId::mint(),
     })
 }
 
@@ -721,7 +740,10 @@ fn job_from_json(j: &Json) -> Option<Job> {
 fn append_synced(inner: &mut Inner, rec: &Json) -> anyhow::Result<()> {
     let frame = record::encode(rec.to_string().as_bytes());
     inner.log.write_all(&frame).context("appending job record")?;
-    inner.log.sync_data().context("fsyncing job log")?;
+    {
+        let _t = crate::obs::phase(crate::obs::Phase::Fsync);
+        inner.log.sync_data().context("fsyncing job log")?;
+    }
     inner.appended += 1;
     Ok(())
 }
@@ -743,6 +765,7 @@ mod tests {
             task: TaskKind::Letter(1),
             n_samples: n,
             solver: SolverChoice::DigitalOde { steps: 40 },
+            trace: crate::obs::TraceId::NONE,
             guidance: 1.5,
             decode: false,
         }

@@ -33,6 +33,10 @@
 //!   log + snapshot under `--state-dir`, crash recovery with torn-tail
 //!   tolerance, retry with exponential backoff + jitter, TTL result
 //!   retention, and submit-now/fetch-later wire ops.
+//! * [`obs`] — end-to-end observability: request tracing with per-stage
+//!   spans, a bounded metrics registry exported as Prometheus text and
+//!   JSON (`{"op":"stats"}`, `--metrics-listen`), and hot-path phase
+//!   timers that cost one atomic load when disabled.
 //! * [`energy`] — analog-vs-digital latency & energy models behind the
 //!   paper's Fig. 3f/3g/4g/4h comparisons.
 //! * [`util`] — self-contained substrates (PRNG, JSON, tensors, stats,
@@ -53,6 +57,7 @@ pub mod energy;
 pub mod exec;
 pub mod jobs;
 pub mod nn;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod util;

@@ -73,8 +73,10 @@ fn usage() -> ! {
          \x20                   rust_queue=N,rust_weights=PATH,...]\n\
          \x20                  [--listen 127.0.0.1:7979] [--queue-depth N] [--max-conns N]\n\
          \x20                  [--state-dir DIR] [--substeps N] [--synthetic]\n\
+         \x20                  [--metrics-listen 127.0.0.1:9198]\n\
          \x20 memdiff client   --connect HOST:PORT [--requests N] [--burst N]\n\
          \x20                  [--expect-overload] [--shutdown]\n\
+         \x20                  [--stats [--prom]]\n\
          \x20                  [--enqueue N [--defer-ms N] [--max-retries N] [--ttl-ms N]]\n\
          \x20                  [--fetch ID[,ID...] [--wait-ms N]] [--cancel ID]\n\
          \x20 memdiff characterize\n\
@@ -92,6 +94,7 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (pos, kv) = parse_args(&args);
     let cfg = Config::load_or_default(kv.get("config").map(|s| s.as_str()))?;
+    memdiff::obs::init(&cfg.obs);
     let cmd = pos.first().map(|s| s.as_str()).unwrap_or("");
     match cmd {
         "generate" => cmd_generate(&kv, &cfg),
@@ -305,6 +308,7 @@ fn cmd_serve(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> {
             solver,
             guidance: cfg.guidance,
             decode: have_decoder && task.is_conditional() && rng.uniform() < 0.25,
+            trace: memdiff::obs::TraceId::mint(),
         }) {
             Ok(ticket) => rxs.push(ticket),
             // bounded lanes shed under the unpaced burst: that IS the
@@ -353,11 +357,24 @@ fn serve_listen(service: memdiff::coordinator::Service, addr: &str,
         }
         None => None,
     };
+    let runner_for_obs = runner.clone();
     let front = FrontEnd::bind_shared(service, runner, addr, FrontEndConfig {
         max_conns: opt(kv, "max-conns", 64),
         ..FrontEndConfig::default()
     })?;
     let metrics = front.metrics();
+    if let Some(maddr) = kv.get("metrics-listen") {
+        let bound = spawn_metrics_listener(
+            maddr, Arc::clone(&metrics), runner_for_obs.clone())?;
+        println!("metrics scrape endpoint on http://{bound}/metrics");
+    }
+    let flush_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let flush_thread = match kv.get("state-dir") {
+        Some(dir) if cfg.obs.jsonl_flush_ms > 0 => Some(spawn_jsonl_flush(
+            dir, cfg.obs.jsonl_flush_ms, Arc::clone(&metrics),
+            runner_for_obs, Arc::clone(&flush_stop))),
+        _ => None,
+    };
     println!("listening on {}", front.local_addr());
     println!("deployment: {route_summary}");
     let for_ms: u64 = opt(kv, "for-ms", 0);
@@ -371,9 +388,91 @@ fn serve_listen(service: memdiff::coordinator::Service, addr: &str,
         front.wait_drain();
     }
     println!("draining...");
+    flush_stop.store(true, std::sync::atomic::Ordering::Release);
+    if let Some(t) = flush_thread {
+        let _ = t.join(); // writes one final line before exiting
+    }
     front.shutdown();
     println!("metrics: {}", metrics.snapshot().report());
     Ok(())
+}
+
+/// `--metrics-listen ADDR`: a minimal plaintext HTTP scrape endpoint —
+/// every request on the socket (whatever the path) is answered with the
+/// Prometheus rendering of the current metrics snapshot.  Runs on a
+/// detached thread for the life of the process.
+fn spawn_metrics_listener(addr: &str,
+                          metrics: Arc<memdiff::coordinator::Metrics>,
+                          runner: Option<Arc<memdiff::jobs::JobRunner>>)
+                          -> anyhow::Result<std::net::SocketAddr> {
+    use std::io::{Read, Write};
+    let listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("binding --metrics-listen {addr}: {e}"))?;
+    let bound = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("metrics-listen".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut stream) = stream else { continue };
+                // drain the request head; the reply ignores path/method
+                let _ = stream.set_read_timeout(
+                    Some(std::time::Duration::from_millis(500)));
+                let mut buf = [0u8; 1024];
+                let _ = stream.read(&mut buf);
+                if let Some(r) = &runner {
+                    let _ = r.gauges(); // refresh the jobs gauges in-band
+                }
+                let body = memdiff::obs::export::render_prometheus(
+                    &metrics.snapshot());
+                let _ = write!(
+                    stream,
+                    "HTTP/1.0 200 OK\r\n\
+                     Content-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\n\r\n{}",
+                    body.len(), body);
+            }
+        })?;
+    Ok(bound)
+}
+
+/// Periodic metrics flush: appends one `stats_json` line per period to
+/// `<state-dir>/metrics.jsonl`, plus a final line on shutdown, so a
+/// crashed or drained server leaves a machine-readable metrics trail
+/// next to its job log.
+fn spawn_jsonl_flush(dir: &str, period_ms: u64,
+                     metrics: Arc<memdiff::coordinator::Metrics>,
+                     runner: Option<Arc<memdiff::jobs::JobRunner>>,
+                     stop: Arc<std::sync::atomic::AtomicBool>)
+                     -> std::thread::JoinHandle<()> {
+    use std::io::Write;
+    use std::sync::atomic::Ordering;
+    let path = std::path::Path::new(dir).join("metrics.jsonl");
+    std::thread::spawn(move || {
+        let period = std::time::Duration::from_millis(period_ms.max(100));
+        let flush = |path: &std::path::Path| {
+            if let Some(r) = &runner {
+                let _ = r.gauges();
+            }
+            let line = memdiff::obs::export::stats_json(
+                &metrics.snapshot()).to_string();
+            if let Ok(mut f) = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+            {
+                let _ = writeln!(f, "{line}");
+            }
+        };
+        let mut last = std::time::Instant::now();
+        while !stop.load(Ordering::Acquire) {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            if last.elapsed() >= period {
+                last = std::time::Instant::now();
+                flush(&path);
+            }
+        }
+        flush(&path);
+    })
 }
 
 /// `memdiff client --connect ADDR`: scripted load for a `--listen`
@@ -412,6 +511,32 @@ fn cmd_client(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> 
         || kv.contains_key("cancel")
     {
         return client_jobs(kv, cfg, &mut writer, &mut reader, do_shutdown);
+    }
+
+    // --stats: one stats op, print the reply, done.  --prom switches the
+    // output from the JSON stats object to the Prometheus text body.
+    if kv.contains_key("stats") {
+        writer.write_all(protocol::stats_line(0).as_bytes())?;
+        writer.write_all(b"\n")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let msg = memdiff::util::json::Json::parse(line.trim())?;
+        anyhow::ensure!(
+            msg.get("status").and_then(|s| s.as_str()) == Some("ok"),
+            "stats op failed: {}", line.trim());
+        if kv.contains_key("prom") {
+            let text = msg
+                .get("prometheus")
+                .and_then(|p| p.as_str())
+                .ok_or_else(|| anyhow::anyhow!("reply without prometheus"))?;
+            print!("{text}");
+        } else {
+            let stats = msg
+                .get("stats")
+                .ok_or_else(|| anyhow::anyhow!("reply without stats"))?;
+            println!("{}", stats.to_string());
+        }
+        return Ok(());
     }
 
     let mix = |i: usize, rng: &mut Rng| {

@@ -1,0 +1,530 @@
+//! Exporters: Prometheus text exposition and JSON rendering of the
+//! whole observability surface — the coordinator metrics snapshot
+//! (counters, per-backend gauges, bank read counters, pool stats, job
+//! gauges), the [`super::Registry`] series (per-stage latency
+//! histograms), the hot-path phase timers, and recent trace timelines
+//! (JSON only).
+//!
+//! Histograms render with cumulative `le` buckets on the shared
+//! log-bucket edges ([`crate::util::stats::log_bucket_upper`]); only
+//! non-empty buckets are emitted (cumulativity still holds at every
+//! emitted edge), plus the mandatory `+Inf`, `_sum`, and `_count`.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::util::json::Json;
+use crate::util::stats::{log_bucket_upper, Summary};
+
+use super::registry::{HistSnapshot, Key};
+use super::trace::SpanEvent;
+use super::{obs, Phase};
+
+/// Escape a label value per the Prometheus text exposition rules.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn labels_text(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+fn line(out: &mut String, name: &str, labels: &[(String, String)], v: f64) {
+    out.push_str(name);
+    out.push_str(&labels_text(labels));
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        out.push_str(&format!(" {}\n", v as i64));
+    } else {
+        out.push_str(&format!(" {v}\n"));
+    }
+}
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+fn owned(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+/// Render one histogram family series: cumulative buckets at the
+/// non-empty log-bucket edges, then `+Inf`, `_sum`, `_count`.
+fn render_hist(out: &mut String, name: &str, labels: &[(String, String)],
+               buckets: &[u64], sum: f64) {
+    let mut cum = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        let upper = log_bucket_upper(i);
+        if upper.is_finite() {
+            let mut ls = labels.to_vec();
+            ls.push(("le".to_string(), format!("{upper:.6e}")));
+            line(out, &format!("{name}_bucket"), &ls, cum as f64);
+        }
+    }
+    let mut ls = labels.to_vec();
+    ls.push(("le".to_string(), "+Inf".to_string()));
+    line(out, &format!("{name}_bucket"), &ls, cum as f64);
+    line(out, &format!("{name}_sum"), labels, sum);
+    line(out, &format!("{name}_count"), labels, cum as f64);
+}
+
+fn render_summary_hist(out: &mut String, name: &str,
+                       labels: &[(String, String)], s: &Summary) {
+    render_hist(out, name, labels, s.buckets(), s.sum());
+}
+
+/// The full Prometheus text exposition: coordinator snapshot + registry
+/// + phase timers.  This is what `--metrics-listen` scrapes and what
+/// the `stats` wire op embeds.
+pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
+    let mut out = String::with_capacity(4096);
+    let o = obs();
+
+    header(&mut out, "memdiff_requests_total", "counter",
+           "Requests served by the coordinator.");
+    line(&mut out, "memdiff_requests_total", &[], snap.requests as f64);
+    header(&mut out, "memdiff_samples_total", "counter",
+           "Samples generated.");
+    line(&mut out, "memdiff_samples_total", &[], snap.samples as f64);
+    header(&mut out, "memdiff_batches_total", "counter",
+           "Batches executed.");
+    line(&mut out, "memdiff_batches_total", &[], snap.batches as f64);
+    header(&mut out, "memdiff_rejected_total", "counter",
+           "Admission rejects (bounded-lane sheds).");
+    line(&mut out, "memdiff_rejected_total", &[], snap.rejected as f64);
+    header(&mut out, "memdiff_worker_panics_total", "counter",
+           "Engine panics contained by worker catch_unwind.");
+    line(&mut out, "memdiff_worker_panics_total", &[],
+         snap.worker_panics as f64);
+    header(&mut out, "memdiff_batch_fill_ratio", "gauge",
+           "Mean batch fill (coalesced samples / max batch).");
+    line(&mut out, "memdiff_batch_fill_ratio", &[], zero_nan(snap.mean_batch_fill));
+
+    header(&mut out, "memdiff_request_latency_seconds", "histogram",
+           "Batch wall latency, service-wide.");
+    render_summary_hist(&mut out, "memdiff_request_latency_seconds", &[],
+                        &snap.wall_latency);
+
+    if !snap.backends.is_empty() {
+        header(&mut out, "memdiff_backend_requests_total", "counter",
+               "Requests served per backend.");
+        for b in &snap.backends {
+            line(&mut out, "memdiff_backend_requests_total",
+                 &owned(&[("backend", &b.name)]), b.requests as f64);
+        }
+        header(&mut out, "memdiff_backend_samples_total", "counter",
+               "Samples generated per backend.");
+        for b in &snap.backends {
+            line(&mut out, "memdiff_backend_samples_total",
+                 &owned(&[("backend", &b.name)]), b.samples as f64);
+        }
+        header(&mut out, "memdiff_backend_rejected_total", "counter",
+               "Bounded-lane sheds per backend.");
+        for b in &snap.backends {
+            line(&mut out, "memdiff_backend_rejected_total",
+                 &owned(&[("backend", &b.name)]), b.rejected as f64);
+        }
+        header(&mut out, "memdiff_lane_queue_depth", "gauge",
+               "Samples queued in the backend's lane.");
+        for b in &snap.backends {
+            line(&mut out, "memdiff_lane_queue_depth",
+                 &owned(&[("backend", &b.name)]), b.queue_depth as f64);
+        }
+        header(&mut out, "memdiff_hw_energy_joules_total", "counter",
+               "Modeled hardware energy served per backend.");
+        for b in &snap.backends {
+            line(&mut out, "memdiff_hw_energy_joules_total",
+                 &owned(&[("backend", &b.name)]), b.hw_energy_j);
+        }
+        header(&mut out, "memdiff_backend_latency_seconds", "histogram",
+               "Batch wall latency per backend.");
+        for b in &snap.backends {
+            render_summary_hist(&mut out, "memdiff_backend_latency_seconds",
+                                &owned(&[("backend", &b.name)]),
+                                &b.wall_latency);
+        }
+    }
+
+    if !snap.banking.is_empty() {
+        header(&mut out, "memdiff_bank_reads_total", "counter",
+               "MVM read sweeps per crossbar layer (and per bank tile).");
+        for r in &snap.banking {
+            let layer = r.layer.to_string();
+            line(&mut out, "memdiff_bank_reads_total",
+                 &owned(&[("layer", &layer)]), r.reads as f64);
+            for b in &r.banks {
+                let tile = format!("r{}c{}", b.tile_row, b.tile_col);
+                line(&mut out, "memdiff_bank_reads_total",
+                     &owned(&[("layer", &layer), ("bank", &tile)]),
+                     b.reads as f64);
+            }
+        }
+    }
+
+    if let Some(p) = &snap.pool {
+        header(&mut out, "memdiff_pool_threads", "gauge",
+               "Intra-op pool thread count.");
+        line(&mut out, "memdiff_pool_threads", &[], p.threads as f64);
+        header(&mut out, "memdiff_pool_scopes_total", "counter",
+               "Fork-join scopes run.");
+        line(&mut out, "memdiff_pool_scopes_total", &[], p.scopes_run as f64);
+        header(&mut out, "memdiff_pool_tasks_total", "counter",
+               "Pool tasks run.");
+        line(&mut out, "memdiff_pool_tasks_total", &[], p.tasks_run as f64);
+    }
+
+    if let Some(j) = &snap.jobs {
+        header(&mut out, "memdiff_jobs", "gauge",
+               "Durable jobs by lifecycle state.");
+        for (state, v) in [("queued", j.queued), ("running", j.running),
+                           ("failed", j.failed), ("done", j.done),
+                           ("dead", j.dead), ("cancelled", j.cancelled)] {
+            line(&mut out, "memdiff_jobs", &owned(&[("state", state)]),
+                 v as f64);
+        }
+        header(&mut out, "memdiff_jobs_enqueued_total", "counter",
+               "Jobs durably enqueued.");
+        line(&mut out, "memdiff_jobs_enqueued_total", &[],
+             j.enqueued_total as f64);
+        header(&mut out, "memdiff_jobs_retries_total", "counter",
+               "Job attempts retried.");
+        line(&mut out, "memdiff_jobs_retries_total", &[],
+             j.retries_total as f64);
+    }
+
+    if !snap.degraded.is_empty() {
+        header(&mut out, "memdiff_degraded_routes", "gauge",
+               "Classes rerouted off their planned backend at startup.");
+        line(&mut out, "memdiff_degraded_routes", &[],
+             snap.degraded.len() as f64);
+    }
+
+    // dynamic registry series (per-stage latency histograms and any
+    // counters/gauges instrumented sites registered)
+    let reg = o.registry.snapshot();
+    render_registry_counters(&mut out, &reg.counters);
+    render_registry_gauges(&mut out, &reg.gauges);
+    render_registry_hists(&mut out, &reg.hists);
+
+    header(&mut out, "memdiff_phase_seconds_total", "counter",
+           "Time spent in instrumented hot-path phases.");
+    for p in Phase::ALL {
+        let (ns, _) = o.phases.read(p);
+        line(&mut out, "memdiff_phase_seconds_total",
+             &owned(&[("phase", p.name())]), ns as f64 * 1e-9);
+    }
+    header(&mut out, "memdiff_phase_invocations_total", "counter",
+           "Invocations of instrumented hot-path phases.");
+    for p in Phase::ALL {
+        let (_, n) = o.phases.read(p);
+        line(&mut out, "memdiff_phase_invocations_total",
+             &owned(&[("phase", p.name())]), n as f64);
+    }
+    out
+}
+
+fn zero_nan(v: f64) -> f64 {
+    if v.is_nan() {
+        0.0
+    } else {
+        v
+    }
+}
+
+fn render_registry_counters(out: &mut String, counters: &[(Key, u64)]) {
+    let mut last = "";
+    for ((name, labels), v) in counters {
+        if name != last {
+            header(out, name, "counter", "Registered counter.");
+            last = name;
+        }
+        line(out, name, labels, *v as f64);
+    }
+}
+
+fn render_registry_gauges(out: &mut String, gauges: &[(Key, f64)]) {
+    let mut last = "";
+    for ((name, labels), v) in gauges {
+        if name != last {
+            header(out, name, "gauge", "Registered gauge.");
+            last = name;
+        }
+        line(out, name, labels, *v);
+    }
+}
+
+fn render_registry_hists(out: &mut String, hists: &[(Key, HistSnapshot)]) {
+    let mut last = "";
+    for ((name, labels), h) in hists {
+        if name != last {
+            header(out, name, "histogram", "Registered histogram.");
+            last = name;
+        }
+        render_hist(out, name, labels, &h.buckets, h.sum);
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON rendering (the `stats` wire op and the periodic JSONL flush)
+
+fn jnum(v: f64) -> Json {
+    Json::Num(zero_nan(v))
+}
+
+fn jobj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// The whole observability surface as one JSON object: coordinator
+/// counters/gauges, per-stage latency breakdowns, phase timers, and the
+/// most recent trace timelines.
+pub fn stats_json(snap: &MetricsSnapshot) -> Json {
+    let o = obs();
+    let mut top: Vec<(&str, Json)> = vec![
+        ("requests", jnum(snap.requests as f64)),
+        ("samples", jnum(snap.samples as f64)),
+        ("batches", jnum(snap.batches as f64)),
+        ("rejected", jnum(snap.rejected as f64)),
+        ("worker_panics", jnum(snap.worker_panics as f64)),
+        ("mean_latency_s", jnum(snap.mean_latency_s)),
+        ("p99_latency_s", jnum(snap.p99_latency_s)),
+        ("mean_batch_fill", jnum(snap.mean_batch_fill)),
+    ];
+
+    top.push(("backends", Json::Arr(snap.backends.iter().map(|b| jobj(vec![
+        ("name", Json::Str(b.name.clone())),
+        ("requests", jnum(b.requests as f64)),
+        ("samples", jnum(b.samples as f64)),
+        ("batches", jnum(b.batches as f64)),
+        ("rejected", jnum(b.rejected as f64)),
+        ("queue_depth", jnum(b.queue_depth as f64)),
+        ("hw_energy_j", jnum(b.hw_energy_j)),
+        ("mean_latency_s", jnum(b.mean_latency_s)),
+        ("p50_latency_s", jnum(b.wall_latency.p50())),
+        ("p99_latency_s", jnum(b.wall_latency.p99())),
+    ])).collect())));
+
+    top.push(("banks", Json::Arr(snap.banking.iter().map(|r| jobj(vec![
+        ("layer", jnum(r.layer as f64)),
+        ("rows", jnum(r.rows as f64)),
+        ("cols", jnum(r.cols as f64)),
+        ("tile_rows", jnum(r.tile_rows as f64)),
+        ("tile_cols", jnum(r.tile_cols as f64)),
+        ("reads", jnum(r.reads as f64)),
+        ("banks", Json::Arr(r.banks.iter().map(|b| jobj(vec![
+            ("tile_row", jnum(b.tile_row as f64)),
+            ("tile_col", jnum(b.tile_col as f64)),
+            ("reads", jnum(b.reads as f64)),
+        ])).collect())),
+    ])).collect())));
+
+    if let Some(p) = &snap.pool {
+        top.push(("pool", jobj(vec![
+            ("threads", jnum(p.threads as f64)),
+            ("scopes_run", jnum(p.scopes_run as f64)),
+            ("tasks_run", jnum(p.tasks_run as f64)),
+            ("max_queue_depth", jnum(p.max_queue_depth as f64)),
+        ])));
+    }
+
+    if let Some(j) = &snap.jobs {
+        top.push(("jobs", jobj(vec![
+            ("queued", jnum(j.queued as f64)),
+            ("running", jnum(j.running as f64)),
+            ("failed", jnum(j.failed as f64)),
+            ("done", jnum(j.done as f64)),
+            ("dead", jnum(j.dead as f64)),
+            ("cancelled", jnum(j.cancelled as f64)),
+            ("enqueued_total", jnum(j.enqueued_total as f64)),
+            ("retries_total", jnum(j.retries_total as f64)),
+        ])));
+    }
+
+    if !snap.degraded.is_empty() {
+        top.push(("degraded", Json::Arr(
+            snap.degraded.iter().map(|d| Json::Str(d.clone())).collect())));
+    }
+
+    // per-stage latency breakdowns (per backend, per class)
+    let reg = o.registry.snapshot();
+    top.push(("stages", Json::Arr(reg.hists.iter()
+        .filter(|((name, _), _)| name == "memdiff_stage_latency_seconds")
+        .map(|((_, labels), h)| {
+            let get = |k: &str| labels.iter().find(|(lk, _)| lk == k)
+                .map(|(_, v)| v.clone()).unwrap_or_default();
+            jobj(vec![
+                ("stage", Json::Str(get("stage"))),
+                ("backend", Json::Str(get("backend"))),
+                ("class", Json::Str(get("class"))),
+                ("count", jnum(h.count as f64)),
+                ("sum_s", jnum(h.sum)),
+                ("p50_s", jnum(h.p50)),
+                ("p90_s", jnum(h.p90)),
+                ("p99_s", jnum(h.p99)),
+            ])
+        })
+        .collect())));
+
+    top.push(("phases", Json::Arr(Phase::ALL.iter().map(|p| {
+        let (ns, n) = o.phases.read(*p);
+        jobj(vec![
+            ("phase", Json::Str(p.name().to_string())),
+            ("total_s", jnum(ns as f64 * 1e-9)),
+            ("count", jnum(n as f64)),
+        ])
+    }).collect())));
+
+    top.push(("traces", traces_json(&o.ring.snapshot())));
+
+    jobj(top)
+}
+
+/// Most recent trace timelines (up to 32), newest first.
+fn traces_json(events: &[SpanEvent]) -> Json {
+    let o = obs();
+    let mut by_trace: BTreeMap<u64, Vec<&SpanEvent>> = BTreeMap::new();
+    for e in events {
+        by_trace.entry(e.trace).or_default().push(e);
+    }
+    let mut traces: Vec<(u64, Vec<&SpanEvent>)> = by_trace.into_iter().collect();
+    // newest first, by the trace's latest span
+    traces.sort_by_key(|(_, evs)|
+        std::cmp::Reverse(evs.iter().map(|e| e.start_us).max().unwrap_or(0)));
+    traces.truncate(32);
+    Json::Arr(traces.into_iter().map(|(t, mut evs)| {
+        evs.sort_by_key(|e| (e.start_us, e.stage.index()));
+        jobj(vec![
+            ("trace", jnum(t as f64)),
+            ("spans", Json::Arr(evs.into_iter().map(|e| jobj(vec![
+                ("stage", Json::Str(e.stage.name().to_string())),
+                ("start_us", jnum(e.start_us as f64)),
+                ("dur_us", jnum(e.dur_us as f64)),
+                ("backend", Json::Str(o.label_name(e.backend))),
+                ("class", Json::Str(o.label_name(e.class))),
+            ])).collect())),
+        ])
+    }).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use std::time::Duration;
+
+    fn snap_with_traffic() -> MetricsSnapshot {
+        let m = Metrics::new();
+        m.set_backends(&["analog".to_string(), "rust".to_string()]);
+        m.record_batch(2, 32, 0.5, Duration::from_millis(3));
+        m.record_backend_batch(0, 1, 16, 1e-5, Duration::from_millis(3));
+        m.record_backend_batch(1, 1, 16, 2e-3, Duration::from_millis(7));
+        m.set_backend_queue(0, 12);
+        m.snapshot()
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b"), "a\\\"b");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("a\nb"), "a\\nb");
+        // escaped output embeds in a well-formed label
+        let t = labels_text(&[("k".into(), "v\"\\\n".into())]);
+        assert_eq!(t, "{k=\"v\\\"\\\\\\n\"}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_count() {
+        let mut s = Summary::new();
+        for v in [0.001, 0.002, 0.002, 0.004, 0.050, 1.5] {
+            s.record(v);
+        }
+        let mut out = String::new();
+        render_summary_hist(&mut out, "t_seconds", &[], &s);
+        let mut prev = 0i64;
+        let mut last_bucket = 0i64;
+        let mut count = -1i64;
+        for l in out.lines() {
+            let (name, val) = l.rsplit_once(' ').unwrap();
+            let v: f64 = val.parse().unwrap();
+            if name.starts_with("t_seconds_bucket") {
+                assert!(v as i64 >= prev, "cumulativity violated: {l}");
+                prev = v as i64;
+                last_bucket = v as i64;
+                if name.contains("+Inf") {
+                    assert_eq!(v as i64, 6, "+Inf bucket counts everything");
+                }
+            } else if name == "t_seconds_count" {
+                count = v as i64;
+            }
+        }
+        assert_eq!(last_bucket, count, "_count equals the +Inf bucket");
+        assert!(out.contains("t_seconds_sum"));
+    }
+
+    #[test]
+    fn prometheus_lines_are_well_formed() {
+        super::super::set_enabled(true);
+        super::super::span(super::super::TraceId::mint(),
+                           super::super::Stage::Queue, "rust",
+                           "digital_uncond", Duration::from_millis(2));
+        let text = render_prometheus(&snap_with_traffic());
+        assert!(text.contains("memdiff_requests_total 2"));
+        assert!(text.contains(
+            "memdiff_lane_queue_depth{backend=\"analog\"} 12"));
+        assert!(text.contains("memdiff_backend_latency_seconds_bucket"));
+        assert!(text.contains("memdiff_stage_latency_seconds"));
+        assert!(text.contains("memdiff_phase_seconds_total{phase=\"gemm\"}"));
+        for l in text.lines() {
+            if l.starts_with('#') || l.is_empty() {
+                continue;
+            }
+            let (name, val) = l.rsplit_once(' ').expect("name value");
+            assert!(val.parse::<f64>().is_ok(), "unparseable value: {l}");
+            assert!(name.starts_with("memdiff_") || name.starts_with("t_"),
+                    "unexpected family: {l}");
+        }
+    }
+
+    #[test]
+    fn stats_json_has_stage_breakdown_and_traces() {
+        super::super::set_enabled(true);
+        let t = super::super::TraceId::mint();
+        for st in super::super::Stage::ALL {
+            super::super::span(t, st, "rust", "digital_uncond",
+                               Duration::from_micros(40));
+        }
+        let j = stats_json(&snap_with_traffic());
+        let stages = j.get("stages").and_then(|v| v.as_arr()).unwrap();
+        assert!(stages.iter().any(|s|
+            s.get("stage").and_then(|v| v.as_str()) == Some("engine_solve")));
+        let traces = j.get("traces").and_then(|v| v.as_arr()).unwrap();
+        let mine = traces.iter().find(|tr|
+            tr.get("trace").and_then(|v| v.as_f64()) == Some(t.0 as f64))
+            .expect("trace present");
+        let spans = mine.get("spans").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(spans.len(), super::super::Stage::ALL.len());
+        // round-trips through the hand-rolled serializer
+        let text = j.to_string();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

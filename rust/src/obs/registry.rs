@@ -1,0 +1,300 @@
+//! Metrics registry: named counters, gauges, and atomic log-bucketed
+//! histograms with constant memory per series.
+//!
+//! Series are keyed by `(name, sorted label pairs)`.  Handle lookup
+//! takes one short mutex on the registry map; recording through a held
+//! handle is lock-free (atomics only).  Histograms share their bucket
+//! geometry with [`crate::util::stats`] (`log_bucket_*`), so quantiles
+//! read here carry the same ±4.4% relative-error bound and the
+//! Prometheus `le` edges match the in-process `Summary` everywhere.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::stats::{log_bucket_repr, LOG_BUCKETS};
+
+/// A series key: metric name + sorted `label=value` pairs.
+pub type Key = (String, Vec<(String, String)>);
+
+/// Monotone counter handle (clone-cheap; record is one atomic add).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge holding an `f64` (stored as bits).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Lock-free log-bucketed histogram (the atomic sibling of
+/// [`crate::util::stats::Summary`]): fixed bucket array + exact
+/// count/sum, bounded memory regardless of sample volume.
+pub struct AtomicHist {
+    buckets: Box<[AtomicU64; LOG_BUCKETS]>,
+    count: AtomicU64,
+    /// Σ values, accumulated as f64 bits via CAS (contention here is one
+    /// batch completion at a time — negligible).
+    sum_bits: AtomicU64,
+}
+
+impl AtomicHist {
+    fn new() -> AtomicHist {
+        AtomicHist {
+            buckets: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn record(&self, v: f64) {
+        let i = crate::util::stats::log_bucket_index(v);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Snapshot of the raw (non-cumulative) bucket counts.
+    pub fn buckets(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Approximate percentile (±4.4%), q in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        let counts = self.buckets();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q / 100.0) * (total as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen > rank {
+                return log_bucket_repr(i);
+            }
+        }
+        log_bucket_repr(LOG_BUCKETS - 1)
+    }
+}
+
+/// Hot-path phase timers: fixed atomic (Σns, count) slots — no map
+/// lookup, no allocation, safe to hit from the GEMM inner loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Matrix-multiply microkernels (`util::tensor`).
+    Gemm,
+    /// Gaussian/noise-DAC generation passes.
+    NoisePass,
+    /// One stepper substep (analog RC loop or digital Euler step).
+    Substep,
+    /// Durable-log fsync (`jobs::store`).
+    Fsync,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] =
+        [Phase::Gemm, Phase::NoisePass, Phase::Substep, Phase::Fsync];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Gemm => "gemm",
+            Phase::NoisePass => "noise_pass",
+            Phase::Substep => "substep",
+            Phase::Fsync => "fsync",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+#[derive(Default)]
+pub struct PhaseSlot {
+    pub sum_ns: AtomicU64,
+    pub count: AtomicU64,
+}
+
+pub struct PhaseTimers {
+    pub slots: [PhaseSlot; Phase::ALL.len()],
+}
+
+impl PhaseTimers {
+    pub fn new() -> PhaseTimers {
+        PhaseTimers { slots: std::array::from_fn(|_| PhaseSlot::default()) }
+    }
+
+    pub fn record(&self, phase: Phase, ns: u64) {
+        let slot = &self.slots[phase.index()];
+        slot.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        slot.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn read(&self, phase: Phase) -> (u64, u64) {
+        let slot = &self.slots[phase.index()];
+        (slot.sum_ns.load(Ordering::Relaxed), slot.count.load(Ordering::Relaxed))
+    }
+}
+
+/// The series registry.  Get-or-create returns a shared handle the call
+/// site caches (or re-looks-up — one mutexed BTreeMap probe).
+pub struct Registry {
+    counters: Mutex<BTreeMap<Key, Counter>>,
+    gauges: Mutex<BTreeMap<Key, Gauge>>,
+    hists: Mutex<BTreeMap<Key, Arc<AtomicHist>>>,
+}
+
+fn key(name: &str, labels: &[(&str, &str)]) -> Key {
+    let mut ls: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    ls.sort();
+    (name.to_string(), ls)
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            hists: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let mut m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(key(name, labels))
+            .or_insert_with(|| Counter(Arc::new(AtomicU64::new(0))))
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        let mut m = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(key(name, labels))
+            .or_insert_with(|| Gauge(Arc::new(AtomicU64::new(0f64.to_bits()))))
+            .clone()
+    }
+
+    pub fn hist(&self, name: &str, labels: &[(&str, &str)]) -> Arc<AtomicHist> {
+        let mut m = self.hists.lock().unwrap_or_else(|e| e.into_inner());
+        Arc::clone(m.entry(key(name, labels)).or_insert_with(|| Arc::new(AtomicHist::new())))
+    }
+
+    /// Snapshot every series for export (counters, gauges, histograms).
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let counters = self.counters.lock().unwrap_or_else(|e| e.into_inner())
+            .iter().map(|(k, c)| (k.clone(), c.get())).collect();
+        let gauges = self.gauges.lock().unwrap_or_else(|e| e.into_inner())
+            .iter().map(|(k, g)| (k.clone(), g.get())).collect();
+        let hists = self.hists.lock().unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(k, h)| (k.clone(), HistSnapshot {
+                buckets: h.buckets(),
+                count: h.count(),
+                sum: h.sum(),
+                p50: h.percentile(50.0),
+                p90: h.percentile(90.0),
+                p99: h.percentile(99.0),
+            }))
+            .collect();
+        RegistrySnapshot { counters, gauges, hists }
+    }
+}
+
+/// Point-in-time copy of every registered series.
+pub struct RegistrySnapshot {
+    pub counters: Vec<(Key, u64)>,
+    pub gauges: Vec<(Key, f64)>,
+    pub hists: Vec<(Key, HistSnapshot)>,
+}
+
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("memdiff_test_total", &[("lane", "a")]);
+        c.inc();
+        c.add(4);
+        // same key → same series, regardless of label order
+        assert_eq!(r.counter("memdiff_test_total", &[("lane", "a")]).get(), 5);
+        let g = r.gauge("memdiff_depth", &[]);
+        g.set(3.5);
+        assert_eq!(r.gauge("memdiff_depth", &[]).get(), 3.5);
+    }
+
+    #[test]
+    fn hist_counts_sum_and_quantiles() {
+        let r = Registry::new();
+        let h = r.hist("memdiff_lat", &[("stage", "queue")]);
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum() - 5.05).abs() < 1e-9);
+        let p50 = h.percentile(50.0);
+        assert!((p50 / 0.050 - 1.0).abs() < 0.125, "p50={p50}");
+        let p99 = h.percentile(99.0);
+        assert!(p99 >= p50);
+    }
+
+    #[test]
+    fn phase_timers_accumulate() {
+        let t = PhaseTimers::new();
+        t.record(Phase::Gemm, 100);
+        t.record(Phase::Gemm, 50);
+        t.record(Phase::Fsync, 7);
+        assert_eq!(t.read(Phase::Gemm), (150, 2));
+        assert_eq!(t.read(Phase::Fsync), (7, 1));
+        assert_eq!(t.read(Phase::Substep), (0, 0));
+    }
+}

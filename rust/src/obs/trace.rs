@@ -1,0 +1,228 @@
+//! Request tracing: trace ids, lifecycle stages, and the span ring.
+//!
+//! A [`TraceId`] is minted once at ingress (wire parse, CLI submit, or
+//! job attempt) and rides the request through every layer via
+//! `GenRequest.trace` / `Ticket::trace` / the durable job record.  Each
+//! layer drops a [`SpanEvent`] — stage, monotonic start, duration,
+//! backend, class — into the fixed-size [`SpanRing`], which is sharded
+//! by trace id so concurrent workers rarely contend on the same lock
+//! and old events are overwritten in place (constant memory).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide trace-id mint (0 is reserved for "no trace").
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// Identity of one request across every serving layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// The absent trace (internal/synthetic requests that skip ingress).
+    pub const NONE: TraceId = TraceId(0);
+
+    /// Mint a fresh process-unique id.
+    pub fn mint() -> TraceId {
+        TraceId(NEXT_TRACE.fetch_add(1, Ordering::Relaxed))
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.0 == 0
+    }
+}
+
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Lifecycle stage of one request, in pipeline order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Wire/CLI ingress parsed and accepted the request line.
+    Accept,
+    /// `submit_nb` admitted it past the bounded-lane check.
+    Admit,
+    /// Time spent waiting in the batcher lane (duration = queue wait).
+    Queue,
+    /// The lane coalesced it into a batch (duration = oldest wait in
+    /// the batch, i.e. how long the batch took to gather).
+    BatchForm,
+    /// The backend engine solved the batch (duration = solve wall).
+    EngineSolve,
+    /// Latents were decoded to pixels (only when requested).
+    Decode,
+    /// The response ticket was completed.
+    Deliver,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 7] = [
+        Stage::Accept,
+        Stage::Admit,
+        Stage::Queue,
+        Stage::BatchForm,
+        Stage::EngineSolve,
+        Stage::Decode,
+        Stage::Deliver,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::Accept => "accept",
+            Stage::Admit => "admit",
+            Stage::Queue => "queue",
+            Stage::BatchForm => "batch_form",
+            Stage::EngineSolve => "engine_solve",
+            Stage::Decode => "decode",
+            Stage::Deliver => "deliver",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// One recorded span: `stage` of `trace` started at `start_us`
+/// (microseconds on the process-monotonic obs clock) and lasted
+/// `dur_us`.  `backend`/`class` are interned label indices (see
+/// [`super::Obs::label`]); `u16::MAX` / empty means "not yet routed".
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    pub trace: u64,
+    pub stage: Stage,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub backend: u16,
+    pub class: u16,
+}
+
+struct Shard {
+    events: Vec<SpanEvent>,
+    /// Next overwrite position once the shard is full.
+    next: usize,
+    cap: usize,
+}
+
+/// Fixed-size, sharded span buffer.  `record` takes one short mutex on
+/// the shard owned by the trace id; memory never grows past
+/// `shards × per-shard capacity` events.
+pub struct SpanRing {
+    shards: Vec<Mutex<Shard>>,
+}
+
+const N_SHARDS: usize = 8;
+
+impl SpanRing {
+    /// `capacity` = total events retained across all shards.
+    pub fn new(capacity: usize) -> SpanRing {
+        let per = (capacity / N_SHARDS).max(8);
+        SpanRing {
+            shards: (0..N_SHARDS)
+                .map(|_| Mutex::new(Shard {
+                    events: Vec::with_capacity(per),
+                    next: 0,
+                    cap: per,
+                }))
+                .collect(),
+        }
+    }
+
+    pub fn record(&self, ev: SpanEvent) {
+        let shard = &self.shards[(ev.trace as usize) % N_SHARDS];
+        let mut s = shard.lock().unwrap_or_else(|e| e.into_inner());
+        if s.events.len() < s.cap {
+            s.events.push(ev);
+        } else {
+            let at = s.next;
+            s.events[at] = ev;
+            s.next = (at + 1) % s.cap;
+        }
+    }
+
+    /// Every retained event, sorted by (trace, start) — the raw material
+    /// of timelines and breakdowns.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let s = shard.lock().unwrap_or_else(|e| e.into_inner());
+            out.extend_from_slice(&s.events);
+        }
+        out.sort_by_key(|e| (e.trace, e.start_us, e.stage.index()));
+        out
+    }
+
+    /// The retained spans of one trace, in start order.
+    pub fn timeline(&self, trace: TraceId) -> Vec<SpanEvent> {
+        let shard = &self.shards[(trace.0 as usize) % N_SHARDS];
+        let s = shard.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out: Vec<SpanEvent> =
+            s.events.iter().filter(|e| e.trace == trace.0).copied().collect();
+        out.sort_by_key(|e| (e.start_us, e.stage.index()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mint_is_unique_and_nonzero() {
+        let a = TraceId::mint();
+        let b = TraceId::mint();
+        assert_ne!(a, b);
+        assert!(!a.is_none() && !b.is_none());
+        assert!(TraceId::NONE.is_none());
+    }
+
+    #[test]
+    fn ring_is_bounded_and_overwrites_oldest() {
+        let ring = SpanRing::new(64); // 8 per shard
+        for i in 0..10_000u64 {
+            ring.record(SpanEvent {
+                trace: i,
+                stage: Stage::Accept,
+                start_us: i,
+                dur_us: 0,
+                backend: 0,
+                class: 0,
+            });
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 64, "capacity is a hard bound");
+        // everything retained is from the recent tail
+        assert!(snap.iter().all(|e| e.trace >= 10_000 - 8 * 8 * 2));
+    }
+
+    #[test]
+    fn timeline_filters_and_sorts() {
+        let ring = SpanRing::new(128);
+        let t = TraceId(42);
+        for (i, st) in Stage::ALL.iter().enumerate() {
+            ring.record(SpanEvent {
+                trace: t.0,
+                stage: *st,
+                start_us: 100 * (Stage::ALL.len() - i) as u64, // reversed
+                dur_us: 5,
+                backend: 1,
+                class: 2,
+            });
+        }
+        ring.record(SpanEvent {
+            trace: 7,
+            stage: Stage::Accept,
+            start_us: 0,
+            dur_us: 0,
+            backend: 0,
+            class: 0,
+        });
+        let tl = ring.timeline(t);
+        assert_eq!(tl.len(), Stage::ALL.len());
+        assert!(tl.windows(2).all(|w| w[0].start_us <= w[1].start_us),
+                "timeline is monotone in start");
+    }
+}

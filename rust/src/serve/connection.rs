@@ -38,6 +38,7 @@ use anyhow::Context;
 
 use crate::coordinator::Service;
 use crate::jobs::JobRunner;
+use crate::obs;
 use crate::serve::admission::ConnGate;
 use crate::serve::protocol::{self, Status, WireMsg};
 use crate::serve::ticket::{Notify, Ticket};
@@ -207,8 +208,8 @@ impl FrontEnd {
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
         }
-        let conns: Vec<JoinHandle<()>> =
-            self.shared.conns.lock().unwrap().drain(..).collect();
+        let conns: Vec<JoinHandle<()>> = self.shared.conns.lock()
+            .unwrap_or_else(|e| e.into_inner()).drain(..).collect();
         for c in conns {
             let _ = c.join();
         }
@@ -258,7 +259,8 @@ fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
                             let _permit = permit;
                             handle_conn(stream, sh2);
                         });
-                        let mut conns = sh.conns.lock().unwrap();
+                        let mut conns = sh.conns.lock()
+                            .unwrap_or_else(|e| e.into_inner());
                         // reap finished handlers so a long-lived server
                         // doesn't accumulate one JoinHandle per past
                         // connection (detaching a finished thread is free)
@@ -356,6 +358,7 @@ fn process_buffered(acc: &mut Vec<u8>, sh: &Shared, notify: &Notify,
                     stream: &mut TcpStream)
                     -> std::io::Result<()> {
     while let Some(pos) = acc.iter().position(|&b| b == b'\n') {
+        let t_accept = Instant::now();
         let raw: Vec<u8> = acc.drain(..=pos).collect();
         let line = String::from_utf8_lossy(&raw[..raw.len() - 1]);
         let line = line.trim();
@@ -379,6 +382,8 @@ fn process_buffered(acc: &mut Vec<u8>, sh: &Shared, notify: &Notify,
                     continue;
                 }
                 let n = req.n_samples;
+                obs::span(req.trace, obs::Stage::Accept, "",
+                          req.class().name(), t_accept.elapsed());
                 match sh.service.submit_nb(req) {
                     Ok(ticket) => {
                         ticket.set_notify(notify);
@@ -410,6 +415,16 @@ fn process_buffered(acc: &mut Vec<u8>, sh: &Shared, notify: &Notify,
                             &format!("enqueue failed: {e:#}")))?;
                     }
                 }
+            }
+            Ok(WireMsg::Stats { client_id }) => {
+                if let Some(runner) = &sh.runner {
+                    let _ = runner.gauges(); // point-in-time refresh
+                }
+                let snap = sh.service.metrics.snapshot();
+                let stats = obs::export::stats_json(&snap);
+                let prom = obs::export::render_prometheus(&snap);
+                write_line(stream, &protocol::stats_reply_line(
+                    client_id, stats, &prom))?;
             }
             Ok(WireMsg::JobStatus { client_id, job }) => {
                 let Some(runner) = &sh.runner else {

@@ -61,6 +61,27 @@
 //! `job` id survives a server crash (see [`crate::jobs`] for the
 //! contract).  An unknown/expired job id answers `status: "error"`.
 //! Servers without a state dir answer every job op with an error.
+//!
+//! ## Stats op (observability — always available)
+//!
+//! ```text
+//! {"op": "stats", "id": 3}
+//!   -> {"id": 3, "status": "ok", "op": "stats",
+//!       "stats": {"requests": ..., "samples": ..., "rejected": ...,
+//!                 "backends": [{"name": ..., "queue_depth": ...,
+//!                               "p50_latency_s": ..., ...}],
+//!                 "banks": [{"layer": 0, "reads": ..., "banks": [...]}],
+//!                 "jobs": {"queued": ..., ...},       # state-dir servers
+//!                 "stages": [{"stage": "engine_solve", "backend": ...,
+//!                             "class": ..., "count": ..., "p50_s": ...}],
+//!                 "phases": [{"phase": "gemm", "total_s": ..., ...}],
+//!                 "traces": [{"trace": N, "spans": [...]}]},
+//!       "prometheus": "# HELP memdiff_requests_total ...\n..."}
+//! ```
+//!
+//! `stats` embeds the same JSON the periodic JSONL flush writes plus the
+//! full Prometheus text exposition (also served plainly on
+//! `--metrics-listen`); see [`crate::obs`] for the metric families.
 
 use crate::coordinator::request::{GenRequest, GenResponse, SolverChoice, TaskKind};
 use crate::jobs::store::Job;
@@ -127,6 +148,9 @@ pub enum WireMsg {
     JobResult { client_id: u64, job: u64, wait_ms: u64 },
     /// `{"op": "cancel", "job": N}`.
     JobCancel { client_id: u64, job: u64 },
+    /// `{"op": "stats"}` — the full observability snapshot (JSON stats +
+    /// Prometheus text) in one reply line.
+    Stats { client_id: u64 },
 }
 
 /// A request-line parse failure: the message goes into an
@@ -178,7 +202,8 @@ fn parse_gen(j: &Json, client_id: u64) -> Result<GenRequest, WireError> {
     })?;
     let guidance = j.get("guidance").and_then(|v| v.as_f64()).unwrap_or(2.0) as f32;
     let decode = matches!(j.get("decode"), Some(Json::Bool(true)));
-    Ok(GenRequest { id: 0, task, n_samples: n, solver, guidance, decode })
+    Ok(GenRequest { id: 0, task, n_samples: n, solver, guidance, decode,
+                    trace: crate::obs::TraceId::mint() })
 }
 
 /// Parse one request line.
@@ -196,6 +221,7 @@ pub fn parse_line(line: &str) -> Result<WireMsg, WireError> {
     if let Some(op) = j.get("op").and_then(|v| v.as_str()) {
         return match op {
             "shutdown" => Ok(WireMsg::Shutdown),
+            "stats" => Ok(WireMsg::Stats { client_id }),
             "enqueue" => Ok(WireMsg::Enqueue {
                 client_id,
                 req: parse_gen(&j, client_id)?,
@@ -489,6 +515,25 @@ pub fn shutdown_line() -> String {
     r#"{"op":"shutdown"}"#.to_string()
 }
 
+/// Build a `stats` line (client side — `memdiff client --stats`).
+pub fn stats_line(client_id: u64) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("op".into(), Json::Str("stats".into()));
+    m.insert("id".into(), Json::Num(client_id as f64));
+    Json::Obj(m).to_string()
+}
+
+/// Reply line for a `stats` op: the JSON stats object plus the full
+/// Prometheus text exposition as one string field.
+pub fn stats_reply_line(client_id: u64, stats: Json, prometheus: &str)
+                        -> String {
+    let mut m = base_obj(client_id, Status::Ok);
+    m.insert("op".into(), Json::Str("stats".into()));
+    m.insert("stats".into(), stats);
+    m.insert("prometheus".into(), Json::Str(prometheus.into()));
+    Json::Obj(m).to_string()
+}
+
 /// Read and parse one reply line from a buffered stream (the client
 /// side's read loop — shared by `memdiff client`, the front-end bench
 /// scenario and the tests).  EOF is an error: callers use this only
@@ -660,6 +705,28 @@ mod tests {
     }
 
     #[test]
+    fn stats_op_roundtrips() {
+        let WireMsg::Stats { client_id } =
+            parse_line(&stats_line(6)).unwrap()
+        else { panic!("expected stats") };
+        assert_eq!(client_id, 6);
+        // the reply line is a parseable object carrying both renderings
+        let stats = Json::parse(
+            r#"{"requests": 3, "jobs": {"queued": 1}}"#).unwrap();
+        let line = stats_reply_line(6, stats, "memdiff_requests_total 3\n");
+        let r = parse_reply(&line).unwrap();
+        assert_eq!((r.id, r.status), (6, Status::Ok));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("stats").and_then(|s| s.get("requests"))
+                    .and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(j.get("stats").and_then(|s| s.get("jobs"))
+                    .and_then(|g| g.get("queued"))
+                    .and_then(|v| v.as_usize()), Some(1));
+        assert!(j.get("prometheus").and_then(|v| v.as_str()).unwrap()
+                 .contains("memdiff_requests_total"));
+    }
+
+    #[test]
     fn job_ops_parse_and_require_ids() {
         let WireMsg::JobStatus { client_id, job } =
             parse_line(&job_op_line("status", 2, 17)).unwrap()
@@ -702,6 +769,7 @@ mod tests {
             error: Some("transient".into()),
             result: None,
             cancel_requested: false,
+            trace: crate::obs::TraceId::NONE,
         };
         let r = parse_reply(&job_status_line(3, &job)).unwrap();
         assert_eq!(r.state.as_deref(), Some("failed"));

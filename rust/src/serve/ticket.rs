@@ -24,6 +24,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::request::GenResponse;
+use crate::obs::TraceId;
 
 /// One ticket's shared completion cell.
 struct Slot {
@@ -50,7 +51,7 @@ impl Slot {
     }
 
     fn complete(&self, result: anyhow::Result<GenResponse>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         debug_assert!(st.result.is_none() && !st.taken,
                       "ticket completed twice");
         st.result = Some(result);
@@ -71,6 +72,7 @@ impl Slot {
 /// slot and the board entry is cleaned up on delivery.
 pub struct Ticket {
     id: u64,
+    trace: TraceId,
     slot: Arc<Slot>,
 }
 
@@ -89,10 +91,15 @@ impl Ticket {
         self.id
     }
 
+    /// The request's trace identity (for deliver spans and timelines).
+    pub fn trace(&self) -> TraceId {
+        self.trace
+    }
+
     /// Nonblocking poll.  `None` while pending — and after the result
     /// has already been taken (a ticket delivers at most once).
     pub fn try_recv(&self) -> Option<anyhow::Result<GenResponse>> {
-        let mut st = self.slot.state.lock().unwrap();
+        let mut st = self.slot.state.lock().unwrap_or_else(|e| e.into_inner());
         if st.result.is_some() {
             st.taken = true;
         }
@@ -102,14 +109,14 @@ impl Ticket {
     /// Whether the worker has delivered (true even after the result was
     /// taken).
     pub fn is_done(&self) -> bool {
-        let st = self.slot.state.lock().unwrap();
+        let st = self.slot.state.lock().unwrap_or_else(|e| e.into_inner());
         st.result.is_some() || st.taken
     }
 
     /// Block until completion.  Errors if the result was already taken
     /// (never hangs on a spent ticket).
     pub fn recv(&self) -> anyhow::Result<GenResponse> {
-        let mut st = self.slot.state.lock().unwrap();
+        let mut st = self.slot.state.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if st.taken && st.result.is_none() {
                 anyhow::bail!("ticket {} already received", self.id);
@@ -118,7 +125,7 @@ impl Ticket {
                 st.taken = true;
                 return st.result.take().unwrap();
             }
-            st = self.slot.cv.wait(st).unwrap();
+            st = self.slot.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -126,7 +133,7 @@ impl Ticket {
     /// the deadline (or already taken).
     pub fn recv_deadline(&self, deadline: Instant)
                          -> Option<anyhow::Result<GenResponse>> {
-        let mut st = self.slot.state.lock().unwrap();
+        let mut st = self.slot.state.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if st.result.is_some() {
                 st.taken = true;
@@ -140,7 +147,8 @@ impl Ticket {
                 return None;
             }
             let (guard, _) =
-                self.slot.cv.wait_timeout(st, deadline - now).unwrap();
+                self.slot.cv.wait_timeout(st, deadline - now)
+                    .unwrap_or_else(|e| e.into_inner());
             st = guard;
         }
     }
@@ -156,7 +164,7 @@ impl Ticket {
     /// watch any number of tickets — the front-end's connection handlers
     /// register every in-flight ticket on one waker and sleep on that.
     pub fn set_notify(&self, notify: &Notify) {
-        let mut st = self.slot.state.lock().unwrap();
+        let mut st = self.slot.state.lock().unwrap_or_else(|e| e.into_inner());
         if st.result.is_some() || st.taken {
             drop(st);
             notify.notify();
@@ -182,7 +190,7 @@ impl Notify {
     /// Latch the flag and wake every waiter.
     pub fn notify(&self) {
         let (flag, cv) = &*self.inner;
-        *flag.lock().unwrap() = true;
+        *flag.lock().unwrap_or_else(|e| e.into_inner()) = true;
         cv.notify_all();
     }
 
@@ -190,14 +198,15 @@ impl Notify {
     /// whether a notification was seen.
     pub fn wait_timeout(&self, timeout: Duration) -> bool {
         let (flag, cv) = &*self.inner;
-        let mut set = flag.lock().unwrap();
+        let mut set = flag.lock().unwrap_or_else(|e| e.into_inner());
         let deadline = Instant::now() + timeout;
         while !*set {
             let now = Instant::now();
             if now >= deadline {
                 return false;
             }
-            let (guard, _) = cv.wait_timeout(set, deadline - now).unwrap();
+            let (guard, _) = cv.wait_timeout(set, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
             set = guard;
         }
         *set = false;
@@ -222,23 +231,23 @@ impl TicketBoard {
     /// Register a pending request on `lane`, returning the caller's
     /// ticket.  Must happen **before** the request is enqueued (a worker
     /// may complete it immediately after the queue accepts it).
-    pub fn register(&self, lane: usize, id: u64) -> Ticket {
+    pub fn register(&self, lane: usize, id: u64, trace: TraceId) -> Ticket {
         let slot = Arc::new(Slot::new());
-        self.lanes[lane].lock().unwrap().insert(id, Arc::clone(&slot));
-        Ticket { id, slot }
+        self.lanes[lane].lock().unwrap_or_else(|e| e.into_inner()).insert(id, Arc::clone(&slot));
+        Ticket { id, trace, slot }
     }
 
     /// Remove a registration whose enqueue was rejected (the request
     /// never entered the lane, so no worker will ever complete it).
     pub fn retract(&self, lane: usize, id: u64) {
-        self.lanes[lane].lock().unwrap().remove(&id);
+        self.lanes[lane].lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
     }
 
     /// Deliver one request's result: removes the pending entry and fills
     /// the caller's slot (waking its waiters and any registered notify).
     pub fn complete(&self, lane: usize, id: u64,
                     result: anyhow::Result<GenResponse>) {
-        let slot = self.lanes[lane].lock().unwrap().remove(&id);
+        let slot = self.lanes[lane].lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
         if let Some(slot) = slot {
             slot.complete(result);
         } else {
@@ -248,7 +257,7 @@ impl TicketBoard {
 
     /// Total still-pending tickets across every lane.
     pub fn pending(&self) -> usize {
-        self.lanes.iter().map(|l| l.lock().unwrap().len()).sum()
+        self.lanes.iter().map(|l| l.lock().unwrap_or_else(|e| e.into_inner()).len()).sum()
     }
 
     /// Fail every still-pending ticket (shutdown's no-stranded-waiter
@@ -257,7 +266,7 @@ impl TicketBoard {
         let mut n = 0;
         for lane in &self.lanes {
             let drained: Vec<Arc<Slot>> =
-                lane.lock().unwrap().drain().map(|(_, s)| s).collect();
+                lane.lock().unwrap_or_else(|e| e.into_inner()).drain().map(|(_, s)| s).collect();
             for slot in drained {
                 slot.complete(Err(mk_err()));
                 n += 1;
@@ -285,7 +294,7 @@ mod tests {
     #[test]
     fn try_recv_poll_then_complete() {
         let board = TicketBoard::new(2);
-        let t = board.register(1, 7);
+        let t = board.register(1, 7, TraceId::NONE);
         assert!(t.try_recv().is_none());
         assert!(!t.is_done());
         board.complete(1, 7, Ok(resp(7, 3.0)));
@@ -302,7 +311,7 @@ mod tests {
     #[test]
     fn recv_blocks_until_completion() {
         let board = Arc::new(TicketBoard::new(1));
-        let t = board.register(0, 1);
+        let t = board.register(0, 1, TraceId::NONE);
         let b2 = Arc::clone(&board);
         let h = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(20));
@@ -316,7 +325,7 @@ mod tests {
     #[test]
     fn recv_deadline_times_out_then_succeeds() {
         let board = TicketBoard::new(1);
-        let t = board.register(0, 2);
+        let t = board.register(0, 2, TraceId::NONE);
         assert!(t.recv_timeout(Duration::from_millis(10)).is_none());
         board.complete(0, 2, Err(anyhow::anyhow!("boom")));
         let got = t.recv_timeout(Duration::from_millis(10)).unwrap();
@@ -326,8 +335,8 @@ mod tests {
     #[test]
     fn notify_wakes_on_completion_and_is_consumed() {
         let board = Arc::new(TicketBoard::new(1));
-        let t1 = board.register(0, 1);
-        let t2 = board.register(0, 2);
+        let t1 = board.register(0, 1, TraceId::NONE);
+        let t2 = board.register(0, 2, TraceId::NONE);
         let n = Notify::new();
         t1.set_notify(&n);
         t2.set_notify(&n);
@@ -348,7 +357,7 @@ mod tests {
     #[test]
     fn set_notify_on_already_done_fires_immediately() {
         let board = TicketBoard::new(1);
-        let t = board.register(0, 9);
+        let t = board.register(0, 9, TraceId::NONE);
         board.complete(0, 9, Ok(resp(9, 0.0)));
         let n = Notify::new();
         t.set_notify(&n);
@@ -358,7 +367,7 @@ mod tests {
     #[test]
     fn retract_removes_pending_entry() {
         let board = TicketBoard::new(3);
-        let _t = board.register(2, 4);
+        let _t = board.register(2, 4, TraceId::NONE);
         assert_eq!(board.pending(), 1);
         board.retract(2, 4);
         assert_eq!(board.pending(), 0);
@@ -367,8 +376,8 @@ mod tests {
     #[test]
     fn fail_all_resolves_every_waiter() {
         let board = TicketBoard::new(2);
-        let a = board.register(0, 1);
-        let b = board.register(1, 2);
+        let a = board.register(0, 1, TraceId::NONE);
+        let b = board.register(1, 2, TraceId::NONE);
         let n = board.fail_all(|| anyhow::anyhow!("service shut down"));
         assert_eq!(n, 2);
         assert!(a.recv().is_err());
@@ -379,8 +388,8 @@ mod tests {
     #[test]
     fn lanes_are_independent() {
         let board = TicketBoard::new(2);
-        let a = board.register(0, 1);
-        let b = board.register(1, 1); // same id, different lane: distinct
+        let a = board.register(0, 1, TraceId::NONE);
+        let b = board.register(1, 1, TraceId::NONE); // same id, different lane: distinct
         board.complete(0, 1, Ok(resp(1, 1.0)));
         assert!(a.is_done());
         assert!(!b.is_done());

@@ -96,48 +96,159 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     v[rank.min(v.len() - 1)]
 }
 
+// ---------------------------------------------------------------------
+// Log-bucketed histogram substrate (shared with `crate::obs::registry`)
+//
+// Buckets are geometric with `LOG_BUCKETS_PER_OCTAVE` subdivisions per
+// power of two, spanning 2^LOG_MIN_EXP .. 2^LOG_MAX_EXP, plus a zero/
+// underflow bucket below and an overflow bucket above.  A value's bucket
+// is found from its log2, so a quantile read off a bucket representative
+// (the geometric midpoint) is within a factor of 2^(1/16) ≈ ±4.4% of the
+// true value — the quantile-error bound of everything built on this.
+
+/// Subdivisions per octave (power of two). 8 → bucket width 2^(1/8) ≈ 1.09.
+pub const LOG_BUCKETS_PER_OCTAVE: usize = 8;
+/// Smallest resolved magnitude: 2^-30 ≈ 1e-9 (sub-nanosecond latencies
+/// collapse into the zero bucket).
+pub const LOG_MIN_EXP: i32 = -30;
+/// Largest resolved magnitude: 2^30 ≈ 1e9.
+pub const LOG_MAX_EXP: i32 = 30;
+/// Total bucket count: zero/underflow + geometric range + overflow.
+pub const LOG_BUCKETS: usize =
+    (LOG_MAX_EXP - LOG_MIN_EXP) as usize * LOG_BUCKETS_PER_OCTAVE + 2;
+
+/// Bucket index of a value (NaN and v ≤ 2^LOG_MIN_EXP land in bucket 0).
+#[inline]
+pub fn log_bucket_index(v: f64) -> usize {
+    if !(v > 0.0) {
+        return 0;
+    }
+    let pos = (v.log2() - LOG_MIN_EXP as f64) * LOG_BUCKETS_PER_OCTAVE as f64;
+    if pos < 0.0 {
+        0
+    } else {
+        // +1 past the underflow bucket; everything ≥ 2^LOG_MAX_EXP overflows
+        (pos.floor() as usize + 1).min(LOG_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper edge of bucket `i` (`+Inf` for the overflow bucket) —
+/// the `le` boundary of the Prometheus exposition.
+pub fn log_bucket_upper(i: usize) -> f64 {
+    if i == 0 {
+        (LOG_MIN_EXP as f64).exp2()
+    } else if i >= LOG_BUCKETS - 1 {
+        f64::INFINITY
+    } else {
+        (LOG_MIN_EXP as f64 + i as f64 / LOG_BUCKETS_PER_OCTAVE as f64).exp2()
+    }
+}
+
+/// Representative value of bucket `i` (geometric midpoint; 0 for the
+/// zero bucket) — what quantile queries report.
+pub fn log_bucket_repr(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else if i >= LOG_BUCKETS - 1 {
+        (LOG_MAX_EXP as f64).exp2()
+    } else {
+        (LOG_MIN_EXP as f64 + (i as f64 - 0.5) / LOG_BUCKETS_PER_OCTAVE as f64).exp2()
+    }
+}
+
 /// Online latency/throughput summary for coordinator metrics.
-#[derive(Debug, Clone, Default)]
+///
+/// **Constant memory**: one fixed bucket array plus four scalars, no
+/// matter how many samples are recorded (the previous implementation kept
+/// every sample in a `Vec<f64>`, which grew without bound under sustained
+/// serving).  `count`/`mean`/`sum`/`max` are exact; `p50`/`p99` are read
+/// from the log-bucketed histogram and carry its ±4.4% relative-error
+/// bound (see [`LOG_BUCKETS_PER_OCTAVE`]).
+#[derive(Debug, Clone)]
 pub struct Summary {
-    samples: Vec<f64>,
+    count: u64,
+    sum: f64,
+    max: f64,
+    buckets: Box<[u64; LOG_BUCKETS]>,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Summary::new()
+    }
 }
 
 impl Summary {
     pub fn new() -> Self {
-        Summary { samples: Vec::new() }
+        Summary {
+            count: 0,
+            sum: 0.0,
+            max: f64::NAN,
+            buckets: Box::new([0u64; LOG_BUCKETS]),
+        }
     }
 
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
+        self.count += 1;
+        self.sum += v;
+        self.max = if self.max.is_nan() { v } else { self.max.max(v) };
+        self.buckets[log_bucket_index(v)] += 1;
     }
 
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.count as usize
     }
 
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.count == 0 {
             return f64::NAN;
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        self.sum / self.count as f64
+    }
+
+    /// Approximate percentile (nearest-rank over the bucket counts),
+    /// q in [0, 100]; within ±4.4% of the true value.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q / 100.0) * (self.count as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen > rank {
+                return log_bucket_repr(i);
+            }
+        }
+        self.max
     }
 
     pub fn p50(&self) -> f64 {
-        percentile(&self.samples, 50.0)
+        self.percentile(50.0)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.percentile(90.0)
     }
 
     pub fn p99(&self) -> f64 {
-        percentile(&self.samples, 99.0)
+        self.percentile(99.0)
     }
 
     pub fn max(&self) -> f64 {
-        self.samples.iter().copied().fold(f64::NAN, f64::max)
+        self.max
     }
 
     /// Total of all recorded values (0 when empty — unlike `mean`, a sum
     /// over nothing is well-defined).
     pub fn sum(&self) -> f64 {
-        self.samples.iter().sum()
+        self.sum
+    }
+
+    /// The raw bucket counts (index ↔ [`log_bucket_upper`] edges), for
+    /// histogram export.
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets[..]
     }
 }
 
@@ -225,5 +336,56 @@ mod tests {
         assert_eq!(s.count(), 10);
         assert!((s.mean() - 5.5).abs() < 1e-12);
         assert_eq!(s.max(), 10.0);
+    }
+
+    #[test]
+    fn summary_memory_is_bounded_and_quantiles_hold_error_bound() {
+        let mut s = Summary::new();
+        let mut rng = Rng::new(9);
+        // 200k samples: the old Vec-backed Summary would hold 1.6 MB here;
+        // the bucketed one is a fixed array regardless of volume.
+        for _ in 0..200_000 {
+            let v = (rng.uniform() * 4.0).exp2() * 1e-3; // 1ms..16ms
+            s.record(v.max(1e-6));
+        }
+        assert!(std::mem::size_of_val(&*s.buckets) == LOG_BUCKETS * 8);
+        let bound = (1.0f64 / (2.0 * LOG_BUCKETS_PER_OCTAVE as f64)).exp2();
+        for q in [50.0, 90.0, 99.0] {
+            let est = s.percentile(q);
+            assert!(est > 0.0 && est <= s.max() * bound, "q{q} est {est}");
+        }
+        // p50 of a known uniform set stays within the documented ±4.4%
+        let mut t = Summary::new();
+        for i in 1..=1000 {
+            t.record(i as f64);
+        }
+        let p50 = t.p50();
+        assert!((p50 / 500.0 - 1.0).abs() < 1.0 / LOG_BUCKETS_PER_OCTAVE as f64,
+                "p50={p50}");
+        assert_eq!(t.count(), 1000);
+        assert!((t.sum() - 500_500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_buckets_are_monotone_and_cover() {
+        // index is monotone in v and upper edges are honest bounds
+        let mut prev = 0usize;
+        let mut v = 1e-10f64;
+        while v < 1e10 {
+            let i = log_bucket_index(v);
+            assert!(i >= prev, "index regressed at {v}");
+            assert!(v <= log_bucket_upper(i) || i == LOG_BUCKETS - 1);
+            if i > 0 && i < LOG_BUCKETS - 1 {
+                assert!(v > log_bucket_upper(i - 1) * 0.999_999);
+            }
+            prev = i;
+            v *= 1.07;
+        }
+        assert_eq!(log_bucket_index(0.0), 0);
+        assert_eq!(log_bucket_index(-1.0), 0);
+        assert_eq!(log_bucket_index(f64::NAN), 0);
+        assert_eq!(log_bucket_index(f64::INFINITY), LOG_BUCKETS - 1);
+        assert_eq!(log_bucket_upper(LOG_BUCKETS - 1), f64::INFINITY);
+        assert_eq!(log_bucket_repr(0), 0.0);
     }
 }

@@ -161,6 +161,7 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    let _t = crate::obs::phase(crate::obs::Phase::Gemm);
     let mut i = 0;
     while i + 4 <= m {
         let a0 = &a[i * k..(i + 1) * k];
@@ -233,6 +234,7 @@ pub fn matmul_tb_into(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize, 
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(bt.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
+    let _t = crate::obs::phase(crate::obs::Phase::Gemm);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];

@@ -198,6 +198,7 @@ fn programming_mode_blocks_and_resumes() {
                     task: TaskKind::Circle,
                     n_samples: 16,
                     solver: SolverChoice::DigitalSde { steps: 30 },
+                    trace: memdiff::obs::TraceId::NONE,
                     guidance: 0.0,
                     decode: false,
                 })

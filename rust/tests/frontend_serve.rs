@@ -138,7 +138,8 @@ fn routed(noise: NoiseModel) -> Service {
 }
 
 fn req(task: TaskKind, solver: SolverChoice, n: usize) -> GenRequest {
-    GenRequest { id: 0, task, n_samples: n, solver, guidance: 2.0, decode: false }
+    GenRequest { id: 0, task, n_samples: n, solver, guidance: 2.0, decode: false,
+                 trace: memdiff::obs::TraceId::NONE }
 }
 
 fn scenario() -> Vec<GenRequest> {

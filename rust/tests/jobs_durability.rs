@@ -32,6 +32,7 @@ fn req(n: usize) -> GenRequest {
         task: TaskKind::Circle,
         n_samples: n,
         solver: SolverChoice::DigitalOde { steps: 8 },
+        trace: memdiff::obs::TraceId::NONE,
         guidance: 0.0,
         decode: false,
     }

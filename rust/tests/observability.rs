@@ -1,0 +1,332 @@
+//! Observability integration suite: trace propagation through the
+//! loopback TCP front-end (every lifecycle stage lands in the span
+//! ring and the stage histograms), the `{"op":"stats"}` wire op
+//! end-to-end (JSON stats + Prometheus text in one reply, jobs gauges
+//! on a state-dir server), and metrics survival after an engine panic
+//! (the poison-tolerance satellite, end to end).
+//!
+//! Runs without AOT artifacts (synthetic weights / stub engines).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use memdiff::coordinator::batcher::BatcherConfig;
+use memdiff::coordinator::service::{AnalogEngine, Engine};
+use memdiff::coordinator::{
+    EngineRegistry, Service, ServiceConfig, SolverChoice, SolverFamily,
+    TaskKind,
+};
+use memdiff::crossbar::NoiseModel;
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::schedule::VpSchedule;
+use memdiff::jobs::{JobRunner, JobStore, RunnerConfig};
+use memdiff::nn::{AnalogScoreNet, ScoreWeights};
+use memdiff::serve::protocol::{self, Status};
+use memdiff::serve::{FrontEnd, FrontEndConfig};
+use memdiff::util::json::Json;
+use memdiff::util::rng::Rng;
+
+// ---------------------------------------------------------------- setup
+
+/// Constant-tag engine for the digital lane.
+struct TagEngine(f32);
+
+impl Engine for TagEngine {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn n_classes(&self) -> usize {
+        3
+    }
+    fn generate(&self, _s: SolverChoice, _oh: &[f32], _g: f32, n: usize,
+                _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+        Ok(vec![self.0; n * 2])
+    }
+}
+
+/// Engine that panics on conditional requests — the worker's panic
+/// containment turns that into a failed ticket, never a dead service.
+struct PanicEngine;
+
+impl Engine for PanicEngine {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn n_classes(&self) -> usize {
+        3
+    }
+    fn generate(&self, _s: SolverChoice, onehot: &[f32], _g: f32, n: usize,
+                _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+        if onehot.iter().any(|&c| c != 0.0) {
+            panic!("poisoned request");
+        }
+        Ok(vec![1.0; n * 2])
+    }
+}
+
+fn analog_engine() -> Arc<dyn Engine> {
+    // real crossbar substrate, so per-bank read counters show up in the
+    // exported series
+    let w = ScoreWeights::synthetic(2, 8, 3, 77);
+    let params = CellParams { read_noise_frac: 0.0, ..CellParams::default() };
+    Arc::new(AnalogEngine {
+        net: AnalogScoreNet::from_conductances(&w, params, NoiseModel::Ideal),
+        sched: VpSchedule::default(),
+        substeps: 30,
+    })
+}
+
+fn svc_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 1,
+        batcher: BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_millis(1),
+            queue_depth: 0,
+        },
+        seed: 0xF0F0,
+        intra_threads: 1,
+    }
+}
+
+fn routed_front() -> FrontEnd {
+    let mut reg = EngineRegistry::new();
+    reg.add_backend("analog", analog_engine(), 1).unwrap();
+    reg.add_backend("rust", Arc::new(TagEngine(2.0)), 1).unwrap();
+    reg.route_family(SolverFamily::Analog, "analog").unwrap();
+    reg.route_family(SolverFamily::Digital, "rust").unwrap();
+    let s = Service::start_routed(reg, None, svc_cfg());
+    FrontEnd::bind(s, "127.0.0.1:0", FrontEndConfig {
+        poll: Duration::from_millis(2),
+        ..FrontEndConfig::default()
+    })
+    .unwrap()
+}
+
+fn send_line(w: &mut TcpStream, line: &str) {
+    w.write_all(line.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+}
+
+fn read_json(r: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).expect("reply parses as JSON")
+}
+
+/// One stats-op round trip; asserts the ok envelope and returns
+/// (stats object, prometheus text).
+fn fetch_stats(w: &mut TcpStream, r: &mut BufReader<TcpStream>)
+               -> (Json, String) {
+    send_line(w, &protocol::stats_line(42));
+    let msg = read_json(r);
+    assert_eq!(msg.get("status").and_then(|s| s.as_str()), Some("ok"));
+    assert_eq!(msg.get("id").and_then(|v| v.as_f64()), Some(42.0));
+    let stats = msg.get("stats").expect("stats object").clone();
+    let prom = msg
+        .get("prometheus")
+        .and_then(|p| p.as_str())
+        .expect("prometheus text")
+        .to_string();
+    (stats, prom)
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("memdiff_obsit_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+// ------------------------------------------- trace propagation over TCP
+
+/// Requests entering over the wire mint a trace at ingress; after they
+/// complete, the stats op shows (a) per-stage latency histograms for
+/// the backend that served them, (b) per-bank read counters from the
+/// analog substrate, and (c) a full per-request timeline whose spans
+/// cover the lifecycle in order.
+#[test]
+fn wire_requests_trace_end_to_end() {
+    memdiff::obs::set_enabled(true);
+    let front = routed_front();
+    let stream = TcpStream::connect(front.local_addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    // a couple of requests per lane, paced so every reply is ok
+    for id in 0..4u64 {
+        let solver = if id % 2 == 0 {
+            SolverChoice::AnalogOde
+        } else {
+            SolverChoice::DigitalOde { steps: 8 }
+        };
+        send_line(&mut w, &protocol::request_line(
+            id, TaskKind::Circle, 2, solver, 0.0, false));
+        let reply = protocol::read_reply(&mut r).unwrap();
+        assert_eq!(reply.status, Status::Ok, "{:?}", reply.error);
+    }
+
+    let (stats, prom) = fetch_stats(&mut w, &mut r);
+
+    // (a) stage histograms, per backend, in both renderings
+    let stages = stats.get("stages").and_then(|s| s.as_arr()).unwrap();
+    for backend in ["analog", "rust"] {
+        assert!(
+            stages.iter().any(|st| {
+                st.get("backend").and_then(|b| b.as_str()) == Some(backend)
+                    && st.get("stage").and_then(|s| s.as_str())
+                        == Some("engine_solve")
+                    && st.get("count").and_then(|c| c.as_f64()).unwrap_or(0.0)
+                        >= 1.0
+            }),
+            "engine_solve stage row for {backend}: {stages:?}"
+        );
+    }
+    assert!(prom.contains("memdiff_stage_latency_seconds_bucket{"));
+    assert!(prom.contains("backend=\"analog\""));
+    assert!(prom.contains("memdiff_requests_total"));
+    assert!(prom.contains("memdiff_lane_queue_depth{backend=\"analog\"}"));
+
+    // (b) the analog lane's crossbars counted their reads
+    let banks = stats.get("banks").and_then(|b| b.as_arr()).unwrap();
+    assert!(!banks.is_empty(), "analog engine publishes bank reports");
+    let reads: f64 = banks
+        .iter()
+        .filter_map(|b| b.get("reads").and_then(|v| v.as_f64()))
+        .sum();
+    assert!(reads > 0.0, "nonzero bank reads after analog traffic");
+    assert!(prom.contains("memdiff_bank_reads_total{"));
+
+    // (c) at least one complete timeline: every lifecycle stage present
+    // (no decoder here, so `decode` is legitimately absent) and span
+    // starts never run backwards relative to delivery
+    let traces = stats.get("traces").and_then(|t| t.as_arr()).unwrap();
+    let complete = traces.iter().find(|t| {
+        let spans = t.get("spans").and_then(|s| s.as_arr());
+        let Some(spans) = spans else { return false };
+        ["accept", "admit", "queue", "batch_form", "engine_solve", "deliver"]
+            .iter()
+            .all(|want| {
+                spans.iter().any(|sp| {
+                    sp.get("stage").and_then(|s| s.as_str()) == Some(want)
+                })
+            })
+    });
+    let complete = complete.expect("a trace covering the whole lifecycle");
+    let spans = complete.get("spans").and_then(|s| s.as_arr()).unwrap();
+    let start = |stage: &str| -> f64 {
+        spans
+            .iter()
+            .find(|sp| sp.get("stage").and_then(|s| s.as_str()) == Some(stage))
+            .and_then(|sp| sp.get("start_us"))
+            .and_then(|v| v.as_f64())
+            .unwrap()
+    };
+    let deliver = start("deliver");
+    for stage in ["accept", "admit", "queue", "batch_form", "engine_solve"] {
+        assert!(start(stage) <= deliver,
+                "{stage} starts before delivery completes");
+    }
+
+    // phase timers ran under the analog solve
+    let phases = stats.get("phases").and_then(|p| p.as_arr()).unwrap();
+    assert!(
+        phases.iter().any(|p| {
+            p.get("phase").and_then(|s| s.as_str()) == Some("substep")
+                && p.get("count").and_then(|c| c.as_f64()).unwrap_or(0.0) > 0.0
+        }),
+        "substep phase counted: {phases:?}"
+    );
+
+    front.shutdown();
+}
+
+// --------------------------------------------- stats op on a jobs server
+
+/// On a `--state-dir` server the stats reply carries the jobs gauges,
+/// refreshed in-band, and they survive the job reaching `done`.
+#[test]
+fn stats_op_reports_jobs_gauges() {
+    let dir = tmp("gauges");
+    let mut reg = EngineRegistry::new();
+    reg.add_backend("rust", Arc::new(TagEngine(3.0)), 1).unwrap();
+    reg.route_family(SolverFamily::Analog, "rust").unwrap();
+    reg.route_family(SolverFamily::Digital, "rust").unwrap();
+    let service = Arc::new(Service::start_routed(reg, None, svc_cfg()));
+    let store = Arc::new(JobStore::open(&dir).unwrap());
+    let runner = JobRunner::start(Arc::clone(&service), store,
+                                  RunnerConfig::default());
+    let front = FrontEnd::bind_shared(service, Some(runner), "127.0.0.1:0",
+                                      FrontEndConfig {
+                                          poll: Duration::from_millis(2),
+                                          ..FrontEndConfig::default()
+                                      })
+    .unwrap();
+    let stream = TcpStream::connect(front.local_addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    // enqueue one durable job and long-poll it to `done`
+    send_line(&mut w, &protocol::enqueue_line(
+        1, TaskKind::Circle, 2, SolverChoice::DigitalOde { steps: 4 },
+        0.0, false, 0, None, None));
+    let ack = protocol::read_reply(&mut r).unwrap();
+    assert_eq!(ack.status, Status::Ok, "{:?}", ack.error);
+    let job = ack.job.expect("durable ack carries the job id");
+    send_line(&mut w, &protocol::result_line(2, job, 10_000));
+    let done = protocol::read_reply(&mut r).unwrap();
+    assert_eq!(done.status, Status::Ok, "{:?}", done.error);
+    assert_eq!(done.state.as_deref(), Some("done"));
+
+    let (stats, prom) = fetch_stats(&mut w, &mut r);
+    let jobs = stats.get("jobs").expect("state-dir server exports jobs");
+    assert!(jobs.get("enqueued_total").and_then(|v| v.as_f64()).unwrap()
+                >= 1.0);
+    assert!(jobs.get("done").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+    assert!(prom.contains("memdiff_jobs{state=\"done\"}"));
+    assert!(prom.contains("memdiff_jobs_enqueued_total"));
+
+    front.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------ metrics survive an engine panic
+
+/// The poison satellite end to end: a panicking engine fails its own
+/// ticket, and the observability path — snapshot, JSON, Prometheus —
+/// keeps answering afterwards with the panic counted.
+#[test]
+fn stats_survive_an_engine_panic() {
+    let reg = EngineRegistry::single(Arc::new(PanicEngine));
+    let s = Service::start_routed(reg, None, svc_cfg());
+    // conditional request trips the panic; its ticket fails
+    let poisoned = s
+        .submit_nb(memdiff::coordinator::GenRequest {
+            id: 0,
+            task: TaskKind::Letter(1),
+            n_samples: 1,
+            solver: SolverChoice::AnalogOde,
+            guidance: 0.0,
+            decode: false,
+            trace: memdiff::obs::TraceId::mint(),
+        })
+        .unwrap();
+    assert!(poisoned.recv().is_err(), "poisoned ticket fails");
+    // the service keeps serving and the exporters keep rendering
+    let ok = s
+        .generate(TaskKind::Circle, 1, SolverChoice::AnalogOde, 0.0, false)
+        .unwrap();
+    assert_eq!(ok.samples, vec![1.0; 2]);
+    let snap = s.metrics.snapshot();
+    assert!(snap.worker_panics >= 1, "panic counted");
+    let prom = memdiff::obs::export::render_prometheus(&snap);
+    assert!(prom.contains("memdiff_worker_panics_total"));
+    let json = memdiff::obs::export::stats_json(&snap).to_string();
+    let parsed = Json::parse(&json).unwrap();
+    assert!(parsed.get("worker_panics").and_then(|v| v.as_f64()).unwrap()
+                >= 1.0);
+    s.shutdown();
+}

@@ -247,6 +247,7 @@ fn mixed_class_shutdown_drains_all_lanes_end_to_end() {
                 solver,
                 guidance: 2.0,
                 decode: false,
+                trace: memdiff::obs::TraceId::NONE,
             })
             .unwrap());
     }
