@@ -11,7 +11,9 @@
 //! (f) the durable job queue — fsync'd enqueue-ack latency and drained
 //! throughput (`jobs_*` keys) — and (g) the observability subsystem's
 //! cost on the compute hot path, enabled vs disabled (`obs_*` keys,
-//! budgeted at < 3% in `rust/src/obs/`).  The results land in
+//! budgeted at < 3% in `rust/src/obs/`) — and (h) the analog health
+//! monitor's serving-path cost, ticking vs absent (`health_*` keys,
+//! sharing the same < 3% budget).  The results land in
 //! `BENCH_sampler_throughput.json` so the perf trajectory is tracked
 //! across PRs.
 
@@ -178,14 +180,14 @@ fn main() -> anyhow::Result<()> {
         &plan,
         &mut |kind: BackendKind, _weights: Option<&str>| {
             Ok(match kind {
-                BackendKind::Analog => Arc::new(AnalogEngine {
-                    net: AnalogScoreNet::from_conductances(
+                // short solve window (250 substeps): this scenario
+                // measures routing + lane isolation, not the full solve
+                BackendKind::Analog => Arc::new(AnalogEngine::new(
+                    AnalogScoreNet::from_conductances(
                         &wc, CellParams::default(), NoiseModel::ReadFast),
-                    sched: meta.sched,
-                    // short solve window: this scenario measures routing +
-                    // lane isolation, not the full analog solve
-                    substeps: 250,
-                }) as Arc<dyn Engine>,
+                    meta.sched,
+                    250,
+                )) as Arc<dyn Engine>,
                 BackendKind::Rust => Arc::new(RustDigitalEngine {
                     net: DigitalScoreNet::new(wc.clone()),
                     sched: meta.sched,
@@ -443,6 +445,61 @@ fn main() -> anyhow::Result<()> {
                  &format!("on {obs_on_sps:.0} / off {obs_off_sps:.0} \
                            samples/s  ({obs_overhead_pct:+.2}%)")]);
 
+    bench::section("health monitor overhead (drift ticks vs serving, on vs off)");
+    // the router deployment again, now with the monitor's retention clock
+    // ticking aggressively (20 ms cadence, aging under the programming
+    // gate every tick) — the delta is the mode-gate + drift-refresh cost
+    // the serving path pays for live health tracking
+    let health_load = |reps: usize| -> anyhow::Result<f64> {
+        let t0 = std::time::Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..reps {
+            let (task, solver, n) = match i % 3 {
+                0 => (TaskKind::Circle, SolverChoice::AnalogOde, 4),
+                1 => (TaskKind::Circle,
+                      SolverChoice::DigitalOde { steps: 100 }, 16),
+                _ => (TaskKind::Letter((i / 3) % 3),
+                      SolverChoice::DigitalSde { steps: 100 }, 16),
+            };
+            rxs.push(router.submit(GenRequest {
+                id: 0,
+                task,
+                n_samples: n,
+                solver,
+                guidance: 2.0,
+                decode: false,
+                trace: memdiff::obs::TraceId::mint(),
+            })?);
+        }
+        let mut s = 0usize;
+        for rx in rxs {
+            s += rx.recv()?.samples.len() / 2;
+        }
+        Ok(s as f64 / t0.elapsed().as_secs_f64())
+    };
+    let health_off_sps = health_load(total_mixed)?;
+    let mon = memdiff::obs::HealthMonitor::new(
+        memdiff::obs::HealthConfig {
+            tick_ms: 20,
+            // small but nonzero: every tick takes the programming gate
+            // and re-reads the drift report, without crossing the alert
+            // threshold over the run
+            retention_dt_s: 1e3,
+            probe_interval_ms: 0,
+            ..memdiff::obs::HealthConfig::default()
+        },
+        Arc::clone(router.registry()),
+        Arc::clone(&router.mode_gate),
+    );
+    mon.start();
+    let health_on_sps = health_load(total_mixed)?;
+    mon.stop();
+    let health_overhead_pct =
+        100.0 * (health_off_sps - health_on_sps) / health_off_sps;
+    bench::row(&["health overhead (routed mixed load)",
+                 &format!("off {health_off_sps:.0} / on {health_on_sps:.0} \
+                           samples/s  ({health_overhead_pct:+.2}%)")]);
+
     bench::write_json("BENCH_sampler_throughput.json", &[
         ("batch_size", B as f64),
         ("digital_scalar_samples_per_s", digital_scalar),
@@ -473,6 +530,9 @@ fn main() -> anyhow::Result<()> {
         ("obs_on_samples_per_s", obs_on_sps),
         ("obs_off_samples_per_s", obs_off_sps),
         ("obs_overhead_pct", obs_overhead_pct),
+        ("health_on_samples_per_s", health_on_sps),
+        ("health_off_samples_per_s", health_off_sps),
+        ("health_overhead_pct", health_overhead_pct),
     ])?;
     Ok(())
 }

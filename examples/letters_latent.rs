@@ -61,12 +61,12 @@ fn main() -> anyhow::Result<()> {
     println!("== Fig 4: conditional latent diffusion of letters H/K/U (CFG λ={GUIDANCE})");
 
     // ---- analog system through the full coordinator ----------------------
-    let engine = Arc::new(AnalogEngine {
-        net: AnalogScoreNet::from_conductances(
+    let engine = Arc::new(AnalogEngine::new(
+        AnalogScoreNet::from_conductances(
             &weights, CellParams::default(), NoiseModel::ReadFast),
-        sched: meta.sched,
-        substeps: 4000,
-    });
+        meta.sched,
+        4000,
+    ));
     let service = Service::start(engine, Some(decoder.clone()), ServiceConfig {
         workers: 4,
         ..ServiceConfig::default()

@@ -30,12 +30,12 @@ fn main() -> anyhow::Result<()> {
 
     // 1. the paper's system: time-continuous analog solver on the
     //    simulated resistive-memory macro (read noise on)
-    let analog = Arc::new(AnalogEngine {
-        net: AnalogScoreNet::from_conductances(
+    let analog = Arc::new(AnalogEngine::new(
+        AnalogScoreNet::from_conductances(
             &weights, CellParams::default(), NoiseModel::ReadFast),
-        sched: meta.sched,
-        substeps: 2000,
-    });
+        meta.sched,
+        2000,
+    ));
     let svc = Service::start(analog, None, ServiceConfig::default());
     let r = svc.generate(TaskKind::Circle, n, SolverChoice::AnalogSde, 0.0, false)?;
     println!(

@@ -60,12 +60,12 @@ fn main() -> anyhow::Result<()> {
     let mut factory = |kind: BackendKind, _weights: Option<&str>|
      -> anyhow::Result<Arc<dyn Engine>> {
         Ok(match kind {
-            BackendKind::Analog => Arc::new(AnalogEngine {
-                net: AnalogScoreNet::from_conductances(
+            BackendKind::Analog => Arc::new(AnalogEngine::new(
+                AnalogScoreNet::from_conductances(
                     &weights, CellParams::default(), NoiseModel::ReadFast),
                 sched,
-                substeps: DEMO_SUBSTEPS,
-            }),
+                DEMO_SUBSTEPS,
+            )),
             BackendKind::Rust => Arc::new(RustDigitalEngine {
                 net: DigitalScoreNet::new(weights.clone()),
                 sched,

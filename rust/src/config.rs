@@ -35,6 +35,24 @@
 //! enabled = true         # master switch; off = one atomic load per probe
 //! ring_capacity = 4096   # span-ring slots (overwrite-oldest, ~32 B each)
 //! jsonl_flush_ms = 10000 # metrics.jsonl flush period under --state-dir (0 = off)
+//!
+//! [health]
+//! enabled = true           # master switch for the analog health monitor
+//! tick_ms = 200            # monitor cadence (drift refresh + rule eval)
+//! retention_dt_s = 0       # simulated drift seconds applied per tick (0 = off)
+//! drift_alert_ms = 0.0004  # mean |dG| (mS) that latches drift:<backend>
+//! clear_frac = 0.5         # hysteresis: clear below threshold * clear_frac
+//! stuck_cell_pct = 1.0     # stuck-cell % that latches stuck:<backend>
+//! probe_interval_ms = 30000  # self-test cadence (0 = on demand only)
+//! probe_samples = 800      # samples per probe / oracle cloud
+//! probe_steps = 100        # Euler steps for digital probes + oracle
+//! probe_streak = 2         # consecutive breaches before a probe alert
+//! kl_budget_analog_uncond = 1.2   # per-class KL gates (probe vs oracle)
+//! kl_budget_analog_cond = 1.2
+//! kl_budget_digital_uncond = 1.0
+//! kl_budget_digital_cond = 1.0
+//! reprogram_on_drift = false  # auto-heal: write-verify on a drift alert
+//! reprogram_tol_ms = 0.0015   # write-verify tolerance (mS)
 //! ```
 
 use std::collections::BTreeMap;
@@ -141,6 +159,10 @@ pub struct Config {
     /// Observability knobs from the `[obs]` section (tracing ring size,
     /// master enable switch, JSONL flush cadence — see [`crate::obs`]).
     pub obs: crate::obs::ObsConfig,
+    /// Analog health-monitor knobs from the `[health]` section (drift
+    /// thresholds, probe cadence, per-class KL budgets — see
+    /// [`crate::obs::health`]).
+    pub health: crate::obs::HealthConfig,
 }
 
 /// Typed `[jobs]` section — the config-file surface of
@@ -198,6 +220,7 @@ impl Default for Config {
             deploy: crate::coordinator::DeployPlan::default(),
             jobs: JobsConfig::default(),
             obs: crate::obs::ObsConfig::default(),
+            health: crate::obs::HealthConfig::default(),
         }
     }
 }
@@ -257,6 +280,61 @@ impl Config {
                 jsonl_flush_ms: raw
                     .get_parsed("obs", "jsonl_flush_ms")?
                     .unwrap_or(d.obs.jsonl_flush_ms),
+            },
+            health: {
+                let h = d.health;
+                let mut kl_budget = h.kl_budget;
+                for (i, class) in
+                    crate::coordinator::request::RequestClass::ALL.iter()
+                        .enumerate()
+                {
+                    let key = format!("kl_budget_{}", class.name());
+                    if let Some(v) = raw.get_parsed("health", &key)? {
+                        kl_budget[i] = v;
+                    }
+                }
+                crate::obs::HealthConfig {
+                    enabled: raw
+                        .get_parsed("health", "enabled")?
+                        .unwrap_or(h.enabled),
+                    tick_ms: raw
+                        .get_parsed("health", "tick_ms")?
+                        .unwrap_or(h.tick_ms),
+                    retention_dt_s: raw
+                        .get_parsed("health", "retention_dt_s")?
+                        .unwrap_or(h.retention_dt_s),
+                    drift_alert_ms: raw
+                        .get_parsed("health", "drift_alert_ms")?
+                        .unwrap_or(h.drift_alert_ms),
+                    clear_frac: raw
+                        .get_parsed("health", "clear_frac")?
+                        .unwrap_or(h.clear_frac),
+                    stuck_cell_pct: raw
+                        .get_parsed("health", "stuck_cell_pct")?
+                        .unwrap_or(h.stuck_cell_pct),
+                    probe_interval_ms: raw
+                        .get_parsed("health", "probe_interval_ms")?
+                        .unwrap_or(h.probe_interval_ms),
+                    probe_samples: raw
+                        .get_parsed("health", "probe_samples")?
+                        .unwrap_or(h.probe_samples),
+                    probe_steps: raw
+                        .get_parsed("health", "probe_steps")?
+                        .unwrap_or(h.probe_steps),
+                    probe_seed: raw
+                        .get_parsed("health", "probe_seed")?
+                        .unwrap_or(h.probe_seed),
+                    probe_streak: raw
+                        .get_parsed("health", "probe_streak")?
+                        .unwrap_or(h.probe_streak),
+                    kl_budget,
+                    reprogram_on_drift: raw
+                        .get_parsed("health", "reprogram_on_drift")?
+                        .unwrap_or(h.reprogram_on_drift),
+                    reprogram_tol_ms: raw
+                        .get_parsed("health", "reprogram_tol_ms")?
+                        .unwrap_or(h.reprogram_tol_ms),
+                }
             },
         })
     }
@@ -380,6 +458,30 @@ mod tests {
         assert!(plain.obs.enabled);
         assert_eq!(plain.obs.ring_capacity, 4096);
         let bad = RawConfig::parse("[obs]\nenabled = maybe\n").unwrap();
+        assert!(Config::from_raw(&bad).is_err());
+    }
+
+    #[test]
+    fn health_section_parses_with_defaults() {
+        let raw = RawConfig::parse(
+            "[health]\nretention_dt_s = 1e8\ndrift_alert_ms = 0.001\n\
+             kl_budget_digital_cond = 0.8\nreprogram_on_drift = true\n",
+        )
+        .unwrap();
+        let cfg = Config::from_raw(&raw).unwrap();
+        assert_eq!(cfg.health.retention_dt_s, 1e8);
+        assert_eq!(cfg.health.drift_alert_ms, 0.001);
+        assert_eq!(cfg.health.kl_budget[3], 0.8, "digital_cond is index 3");
+        assert!(cfg.health.reprogram_on_drift);
+        let d = crate::obs::HealthConfig::default();
+        assert_eq!(cfg.health.tick_ms, d.tick_ms, "untouched keys keep defaults");
+        assert_eq!(cfg.health.kl_budget[0], d.kl_budget[0]);
+        assert_eq!(cfg.health.probe_samples, d.probe_samples);
+        // absent section = all defaults (monitor enabled, retention off)
+        let plain = Config::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert!(plain.health.enabled);
+        assert_eq!(plain.health.retention_dt_s, 0.0);
+        let bad = RawConfig::parse("[health]\ntick_ms = fast\n").unwrap();
         assert!(Config::from_raw(&bad).is_err());
     }
 

@@ -39,7 +39,7 @@
 //! the compute side; reprogramming takes the exclusive side.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -50,12 +50,14 @@ use super::deploy::EngineRegistry;
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, SolverChoice, TaskKind};
 use crate::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
-use crate::crossbar::BankReport;
+use crate::crossbar::{BankReport, LayerDrift};
+use crate::device::array::ProgramStats;
 use crate::exec::{self, Pool};
 use crate::diffusion::sampler::{DigitalSampler, SamplerKind, SamplerMode};
 use crate::diffusion::schedule::VpSchedule;
 use crate::energy::model::{AnalogCost, DigitalCost};
 use crate::nn::{AnalogScoreNet, DigitalScoreNet, ScoreNet};
+use crate::obs::health::DeviceHealth;
 use crate::obs::{self, Stage};
 use crate::runtime::ArtifactStore;
 use crate::serve::admission::SubmitError;
@@ -74,6 +76,13 @@ pub trait Engine: Send + Sync {
     /// metrics.  Default: none (digital/HLO engines have no crossbars).
     fn bank_report(&self) -> Vec<BankReport> {
         Vec::new()
+    }
+
+    /// Device-maintenance surface for the health monitor (retention
+    /// aging, drift reports, write-verify reprogramming).  Default: none
+    /// — digital/HLO engines have no conductances to drift.
+    fn device_health(&self) -> Option<&dyn DeviceHealth> {
+        None
     }
 
     /// Modeled hardware latency for one sampling.
@@ -120,23 +129,59 @@ pub fn paper_hw_cost(solver: SolverChoice, conditional: bool) -> HwCost {
 }
 
 /// Engine over the rust analog-hardware simulator.
+///
+/// The net sits behind a `RwLock` so the health monitor can age and
+/// reprogram the conductances in place (write side) while solves share
+/// the read side — the per-engine mirror of the [`ModeGate`]'s
+/// compute-vs-programming exclusion, for callers that bypass the gate.
 pub struct AnalogEngine {
-    pub net: AnalogScoreNet,
+    net: RwLock<AnalogScoreNet>,
     pub sched: VpSchedule,
     pub substeps: usize,
+    /// Deterministic stream for retention aging and reprogram noise, so
+    /// a monitored run replays bit-for-bit under the same config.
+    clock_rng: Mutex<Rng>,
+    // cached from the net at construction: hot-path queries must not
+    // touch the lock
+    dim: usize,
+    n_classes: usize,
+}
+
+impl AnalogEngine {
+    pub fn new(net: AnalogScoreNet, sched: VpSchedule, substeps: usize)
+               -> AnalogEngine {
+        let dim = net.dim();
+        let n_classes = net.n_classes();
+        AnalogEngine {
+            net: RwLock::new(net),
+            sched,
+            substeps,
+            clock_rng: Mutex::new(Rng::new(0xD21F_C10C)),
+            dim,
+            n_classes,
+        }
+    }
+
+    fn net_read(&self) -> std::sync::RwLockReadGuard<'_, AnalogScoreNet> {
+        self.net.read().unwrap_or_else(|e| e.into_inner())
+    }
 }
 
 impl Engine for AnalogEngine {
     fn dim(&self) -> usize {
-        self.net.dim()
+        self.dim
     }
 
     fn n_classes(&self) -> usize {
-        self.net.n_classes()
+        self.n_classes
     }
 
     fn bank_report(&self) -> Vec<BankReport> {
-        self.net.bank_report()
+        self.net_read().bank_report()
+    }
+
+    fn device_health(&self) -> Option<&dyn DeviceHealth> {
+        Some(self)
     }
 
     /// Unlike the trait default (paper-shape counts), this charges the
@@ -148,13 +193,13 @@ impl Engine for AnalogEngine {
     fn hw_energy_j(&self, solver: SolverChoice, conditional: bool) -> f64 {
         match solver {
             SolverChoice::AnalogOde | SolverChoice::AnalogSde => {
-                let shapes = self.net.layer_shapes();
+                let shapes = self.net_read().layer_shapes();
                 let c = if conditional {
                     AnalogCost::conditional_for_layers(
-                        &shapes, self.net.dim(), self.net.n_classes(),
+                        &shapes, self.dim, self.n_classes,
                     )
                 } else {
-                    AnalogCost::projected_for_layers(&shapes, self.net.dim())
+                    AnalogCost::projected_for_layers(&shapes, self.dim)
                 };
                 c.energy_j()
             }
@@ -179,10 +224,29 @@ impl Engine for AnalogEngine {
         if conditional {
             cfg = cfg.with_guidance(guidance);
         }
-        let solver = AnalogSolver::new(&self.net, cfg);
+        let net = self.net_read();
+        let solver = AnalogSolver::new(&net, cfg);
         // batched lane: all n lanes advance per sub-step, so the batcher's
         // coalescing amortizes every crossbar inference over the batch
         Ok(solver.solve_batched(n, onehot, rng))
+    }
+}
+
+impl DeviceHealth for AnalogEngine {
+    fn age(&self, dt_s: f64) {
+        let mut rng = self.clock_rng.lock().unwrap_or_else(|e| e.into_inner());
+        self.net.write().unwrap_or_else(|e| e.into_inner())
+            .age(dt_s, &mut rng);
+    }
+
+    fn drift_report(&self) -> Vec<LayerDrift> {
+        self.net_read().drift_report()
+    }
+
+    fn reprogram(&self, tol_ms: f32) -> ProgramStats {
+        let mut rng = self.clock_rng.lock().unwrap_or_else(|e| e.into_inner());
+        self.net.write().unwrap_or_else(|e| e.into_inner())
+            .reprogram(tol_ms, &mut rng)
     }
 }
 

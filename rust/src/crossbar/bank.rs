@@ -68,7 +68,7 @@ use super::layer::CrossbarLayer;
 use super::mapper;
 use super::noise::NoiseModel;
 use super::G_FIXED_MS;
-use crate::device::array::{Macro, ProgramStats, MACRO_DIM};
+use crate::device::array::{DriftStats, Macro, ProgramStats, MACRO_DIM};
 use crate::device::cell::{Cell, CellParams};
 use crate::exec::{self, lane_chunk_lens, lane_plan, ParStrategy, Shards};
 use crate::util::rng::Rng;
@@ -148,6 +148,25 @@ impl BankReport {
     }
 }
 
+/// Drift of one bank against its programmed baseline (health monitor).
+#[derive(Debug, Clone, Default)]
+pub struct BankDrift {
+    pub tile_row: usize,
+    pub tile_col: usize,
+    pub drift: DriftStats,
+}
+
+/// Drift of one logical layer: the aggregate over its banks (or the
+/// whole monolithic array), plus the per-bank breakdown when banked.
+#[derive(Debug, Clone, Default)]
+pub struct LayerDrift {
+    /// Layer index within the network.
+    pub layer: usize,
+    pub drift: DriftStats,
+    /// Per-bank drift, row-major; empty for a monolithic layer.
+    pub banks: Vec<BankDrift>,
+}
+
 /// One bank: a ≤32×32 macro plus its placement and conductance cache.
 #[derive(Debug)]
 struct Bank {
@@ -158,6 +177,9 @@ struct Bank {
     /// Flattened conductance cache of this tile (refreshed after
     /// programming / aging) — the `b` operand of the per-bank GEMM.
     g_local: Mat,
+    /// Drift baseline: the conductances at the last (re)program.  The
+    /// health monitor's estimator compares the live tile against this.
+    g_target: Mat,
     /// Programming summary (reads are tracked separately, lock-free).
     stat: BankStat,
 }
@@ -256,11 +278,13 @@ impl BankedCrossbarLayer {
                 agg.failures += st.failures;
                 agg.pulses.extend(st.pulses);
                 agg.abs_errors_ms.extend(st.abs_errors_ms);
+                let g_target = tile.conductances();
                 banks.push(Bank {
                     tile,
                     row0: r0,
                     col0: c0,
                     g_local: Mat::zeros(br, bc),
+                    g_target,
                     stat,
                 });
                 streams.push(stream);
@@ -312,11 +336,13 @@ impl BankedCrossbarLayer {
                             Cell::new(g.get(r0 + r, c0 + c), params.clone());
                     }
                 }
+                let g_target = tile.conductances();
                 banks.push(Bank {
                     tile,
                     row0: r0,
                     col0: c0,
                     g_local: Mat::zeros(br, bc),
+                    g_target,
                     stat: BankStat {
                         tile_row: ti,
                         tile_col: tj,
@@ -651,6 +677,49 @@ impl BankedCrossbarLayer {
         self.refresh_cache();
     }
 
+    /// Per-bank drift since the last (re)program, plus the layer
+    /// aggregate: live tile conductances vs the programmed baseline.
+    pub fn drift_stats(&self, layer: usize) -> LayerDrift {
+        let mut agg = DriftStats::default();
+        let banks: Vec<BankDrift> = self
+            .banks
+            .iter()
+            .map(|b| {
+                let drift = b.tile.drift_from(&b.g_target);
+                agg.merge(&drift);
+                BankDrift {
+                    tile_row: b.stat.tile_row,
+                    tile_col: b.stat.tile_col,
+                    drift,
+                }
+            })
+            .collect();
+        LayerDrift { layer, drift: agg, banks }
+    }
+
+    /// Re-run write-verify on every bank toward its programmed baseline
+    /// (each bank pulses from its own stream — deterministic per layer
+    /// seed), refresh the caches, and re-baseline the drift estimator at
+    /// the achieved state.  Per-bank [`BankStat`] programming summaries
+    /// are updated in place.
+    pub fn reprogram(&mut self, tol_ms: f32) -> ProgramStats {
+        let mut agg = ProgramStats::default();
+        for (bank, stream) in self.banks.iter_mut().zip(self.streams.iter_mut())
+        {
+            let rng = stream.get_mut().unwrap();
+            let st = bank
+                .tile
+                .program(&bank.g_target, tol_ms, PROGRAM_MAX_PULSES, rng);
+            bank.stat.mean_pulses = st.mean_pulses();
+            bank.stat.failures = st.failures;
+            bank.stat.max_error_ms = st.max_error_ms();
+            bank.g_target = bank.tile.conductances();
+            agg.merge(st);
+        }
+        self.refresh_cache();
+        agg
+    }
+
     /// Snapshot topology + per-bank program/read stats.
     pub fn report(&self, layer: usize) -> BankReport {
         let banks: Vec<BankStat> = self
@@ -790,6 +859,30 @@ impl ScoreLayer {
         match self {
             ScoreLayer::Mono(l) => l.age(dt_s, rng),
             ScoreLayer::Banked(l) => l.age(dt_s),
+        }
+    }
+
+    /// Drift since the last (re)program on either substrate.  The banked
+    /// arm includes the per-bank breakdown; the monolithic arm reports
+    /// the array aggregate only.
+    pub fn drift_report(&self, layer: usize) -> LayerDrift {
+        match self {
+            ScoreLayer::Mono(l) => LayerDrift {
+                layer,
+                drift: l.drift_stats(),
+                banks: Vec::new(),
+            },
+            ScoreLayer::Banked(l) => l.drift_stats(layer),
+        }
+    }
+
+    /// Write-verify recovery toward the programmed baseline.  The
+    /// monolithic arm pulses from `rng`; the banked arm from its
+    /// per-bank streams (deterministic per layer seed).
+    pub fn reprogram(&mut self, tol_ms: f32, rng: &mut Rng) -> ProgramStats {
+        match self {
+            ScoreLayer::Mono(l) => l.reprogram(tol_ms, rng),
+            ScoreLayer::Banked(l) => l.reprogram(tol_ms),
         }
     }
 
@@ -1057,6 +1150,70 @@ mod tests {
                 assert_eq!(got, want, "{noise:?} under {strategy:?}");
             }
         }
+    }
+
+    #[test]
+    fn per_bank_drift_tracks_age_and_reprogram_clears() {
+        let w = test_weights(40, 40, 51);
+        let mut rng = Rng::new(52);
+        let (mut layer, _) =
+            BankedCrossbarLayer::program(&w, quiet(), 0.0015, &mut rng);
+        // fresh program: baseline == achieved state, drift exactly zero
+        let d0 = layer.drift_stats(1);
+        assert_eq!(d0.layer, 1);
+        assert_eq!(d0.banks.len(), 4);
+        assert_eq!(d0.drift.cells, 40 * 40);
+        assert_eq!(d0.drift.sum_abs_ms, 0.0);
+        // age from the per-bank streams: every bank shows positive drift
+        layer.age(1e12);
+        let d1 = layer.drift_stats(1);
+        assert!(d1.drift.mean_abs_ms() > 1e-4, "{}", d1.drift.mean_abs_ms());
+        for b in &d1.banks {
+            assert!(b.drift.mean_abs_ms() > 0.0,
+                    "bank r{}c{} must drift", b.tile_row, b.tile_col);
+        }
+        // recovery: write-verify back to baseline, estimator re-zeroed
+        let ps = layer.reprogram(0.0015);
+        assert_eq!(ps.pulses.len() + ps.failures, 40 * 40);
+        assert_eq!(layer.drift_stats(1).drift.sum_abs_ms, 0.0);
+    }
+
+    #[test]
+    fn banked_aging_is_deterministic_per_stream_seed() {
+        // same seed → identical drift trajectories; different seed → not
+        let g = test_weights(40, 40, 53).map(|v| 0.04 + 0.02 * v.abs().min(1.0));
+        let mut a = BankedCrossbarLayer::from_conductances(&g, 1.0, quiet(), 99);
+        let mut b = BankedCrossbarLayer::from_conductances(&g, 1.0, quiet(), 99);
+        let mut c = BankedCrossbarLayer::from_conductances(&g, 1.0, quiet(), 100);
+        a.age(1e9);
+        b.age(1e9);
+        c.age(1e9);
+        assert_eq!(a.effective_weights().as_slice(),
+                   b.effective_weights().as_slice(),
+                   "same stream seed must reproduce drift exactly");
+        assert_ne!(a.effective_weights().as_slice(),
+                   c.effective_weights().as_slice());
+    }
+
+    #[test]
+    fn score_layer_drift_report_covers_both_substrates() {
+        let small = test_weights(8, 8, 54);
+        let wide = test_weights(8, 48, 55);
+        let mut rng = Rng::new(56);
+        let (mut mono, _) =
+            ScoreLayer::program(&small, quiet(), 0.001, &mut rng, Banking::Auto);
+        let (mut banked, _) =
+            ScoreLayer::program(&wide, quiet(), 0.001, &mut rng, Banking::Auto);
+        assert!(mono.drift_report(0).banks.is_empty());
+        assert_eq!(banked.drift_report(1).banks.len(), 2);
+        mono.age(1e12, &mut rng);
+        banked.age(1e12, &mut rng);
+        assert!(mono.drift_report(0).drift.mean_abs_ms() > 0.0);
+        assert!(banked.drift_report(1).drift.mean_abs_ms() > 0.0);
+        let _ = mono.reprogram(0.0015, &mut rng);
+        let _ = banked.reprogram(0.0015, &mut rng);
+        assert_eq!(mono.drift_report(0).drift.sum_abs_ms, 0.0);
+        assert_eq!(banked.drift_report(1).drift.sum_abs_ms, 0.0);
     }
 
     #[test]

@@ -38,8 +38,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use super::mapper::{map_layer, Mapping};
 use super::noise::NoiseModel;
 use super::G_FIXED_MS;
-use crate::device::array::{Macro, ProgramStats, MACRO_DIM};
-use crate::device::cell::CellParams;
+use crate::device::array::{DriftStats, Macro, ProgramStats, MACRO_DIM};
+use crate::device::cell::{CellParams, G_HI_MS, G_LO_MS};
 use crate::exec::{self, lane_chunk_lens, lane_plan, Shards};
 use crate::util::rng::Rng;
 use crate::util::tensor::{matmul_into, Mat};
@@ -57,6 +57,11 @@ pub struct CrossbarLayer {
     /// Cached programmed conductances (flattened logical matrix) for the
     /// fast path — refreshed after programming / aging.
     g_cache: Mat,
+    /// Conductance baseline the drift estimator compares against: the
+    /// state at the last (re)program.  Re-baselined by [`Self::reprogram`]
+    /// so write-verify residuals live in `ProgramStats`, not the drift
+    /// gauges.
+    g_target: Mat,
     /// Read-noise fraction used by the fast statistical model.
     read_noise_frac: f32,
     /// MVM sweeps served (scalar forward = 1, batched forward = B lanes)
@@ -105,11 +110,13 @@ impl CrossbarLayer {
             tile_rows,
             tile_cols,
             g_cache: Mat::zeros(rows, cols),
+            g_target: Mat::zeros(rows, cols),
             read_noise_frac,
             reads: AtomicU64::new(0),
             exec: exec::Ctx::default(),
         };
         layer.refresh_cache();
+        layer.g_target = layer.g_cache.clone();
         (layer, agg)
     }
 
@@ -150,11 +157,13 @@ impl CrossbarLayer {
             tile_rows,
             tile_cols,
             g_cache: Mat::zeros(rows, cols),
+            g_target: Mat::zeros(rows, cols),
             read_noise_frac,
             reads: AtomicU64::new(0),
             exec: exec::Ctx::default(),
         };
         layer.refresh_cache();
+        layer.g_target = layer.g_cache.clone();
         layer
     }
 
@@ -450,6 +459,46 @@ impl CrossbarLayer {
         }
         self.refresh_cache();
     }
+
+    /// Drift since the last (re)program: live conductances vs the
+    /// programmed baseline, aggregated over all tiles.
+    pub fn drift_stats(&self) -> DriftStats {
+        let mut agg = DriftStats::default();
+        for ti in 0..self.tile_rows {
+            for tj in 0..self.tile_cols {
+                let m = &self.tiles[ti * self.tile_cols + tj];
+                let (r0, c0) = (ti * MACRO_DIM, tj * MACRO_DIM);
+                let sub = Mat::from_fn(m.rows(), m.cols(), |r, c| {
+                    self.g_target.get(r0 + r, c0 + c)
+                });
+                agg.merge(&m.drift_from(&sub));
+            }
+        }
+        agg
+    }
+
+    /// Re-run write-verify toward the programmed baseline (drift
+    /// recovery), refresh the cache, and re-baseline the drift estimator
+    /// at the achieved state — so residual write error shows up in the
+    /// returned [`ProgramStats`], not as permanent drift.
+    pub fn reprogram(&mut self, tol_ms: f32, rng: &mut Rng) -> ProgramStats {
+        let mut agg = ProgramStats::default();
+        for ti in 0..self.tile_rows {
+            for tj in 0..self.tile_cols {
+                let m = &mut self.tiles[ti * self.tile_cols + tj];
+                let (r0, c0) = (ti * MACRO_DIM, tj * MACRO_DIM);
+                let sub = Mat::from_fn(m.rows(), m.cols(), |r, c| {
+                    self.g_target
+                        .get(r0 + r, c0 + c)
+                        .clamp(G_LO_MS, G_HI_MS)
+                });
+                agg.merge(m.program(&sub, tol_ms, 500, rng));
+            }
+        }
+        self.refresh_cache();
+        self.g_target = self.g_cache.clone();
+        agg
+    }
 }
 
 #[cfg(test)]
@@ -631,6 +680,37 @@ mod tests {
             par.forward_batch(&v, &mut b, batch, NoiseModel::Ideal, &mut rng);
             assert_eq!(a, b, "batch {batch}");
         }
+    }
+
+    #[test]
+    fn drift_estimator_tracks_age_and_reprogram_rebaselines() {
+        let w = test_weights(20, 12, 41);
+        let mut rng = Rng::new(42);
+        let (mut layer, _) = CrossbarLayer::program(&w, quiet_params(), 0.0015, &mut rng);
+        // freshly programmed: estimator sits exactly at zero
+        let st0 = layer.drift_stats();
+        assert_eq!(st0.cells, 20 * 12);
+        assert_eq!(st0.sum_abs_ms, 0.0);
+        // retention interval registers as positive drift
+        layer.age(1e12, &mut rng);
+        let st1 = layer.drift_stats();
+        assert!(st1.mean_abs_ms() > 1e-4, "mean {}", st1.mean_abs_ms());
+        // write-verify recovery returns residuals and zeroes the estimator
+        let ps = layer.reprogram(0.0015, &mut rng);
+        assert_eq!(ps.pulses.len() + ps.failures, 20 * 12);
+        let st2 = layer.drift_stats();
+        assert_eq!(st2.sum_abs_ms, 0.0, "reprogram must re-baseline");
+        // and the realized weights moved back toward the original request
+        assert!(w.max_abs_diff(&layer.effective_weights()) < 0.2);
+    }
+
+    #[test]
+    fn from_conductances_starts_with_zero_drift() {
+        let w = test_weights(6, 9, 43);
+        let m = super::super::mapper::map_layer(&w);
+        let layer =
+            CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet_params());
+        assert_eq!(layer.drift_stats().sum_abs_ms, 0.0);
     }
 
     #[test]

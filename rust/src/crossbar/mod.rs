@@ -13,7 +13,8 @@ pub mod layer;
 pub mod mapper;
 pub mod noise;
 
-pub use bank::{BankReport, BankStat, BankedCrossbarLayer, Banking, ScoreLayer};
+pub use bank::{BankDrift, BankReport, BankStat, BankedCrossbarLayer, Banking,
+               LayerDrift, ScoreLayer};
 pub use layer::CrossbarLayer;
 pub use mapper::{conductance_to_weight, required_gain, weight_to_conductance, Mapping};
 pub use noise::NoiseModel;

@@ -35,6 +35,52 @@ impl ProgramStats {
     pub fn max_error_ms(&self) -> f32 {
         self.abs_errors_ms.iter().copied().fold(0.0, f32::max)
     }
+
+    /// Fold another macro's programming result into this aggregate.
+    pub fn merge(&mut self, other: ProgramStats) {
+        self.pulses.extend(other.pulses);
+        self.failures += other.failures;
+        self.abs_errors_ms.extend(other.abs_errors_ms);
+    }
+}
+
+/// Retention-drift measurement against a programmed-target snapshot:
+/// the live `|G − target|` residuals plus the stuck-cell census, the raw
+/// material for the health monitor's per-bank drift gauges.
+#[derive(Debug, Clone, Default)]
+pub struct DriftStats {
+    /// Cells compared.
+    pub cells: usize,
+    /// Σ |G − target| in mS (use [`Self::mean_abs_ms`]).
+    pub sum_abs_ms: f64,
+    /// max |G − target| in mS.
+    pub max_abs_ms: f32,
+    /// Cells with the stuck-at fault flag set.
+    pub stuck: usize,
+}
+
+impl DriftStats {
+    pub fn mean_abs_ms(&self) -> f64 {
+        if self.cells == 0 {
+            return 0.0;
+        }
+        self.sum_abs_ms / self.cells as f64
+    }
+
+    /// Stuck cells as a percentage of the compared population.
+    pub fn stuck_pct(&self) -> f64 {
+        if self.cells == 0 {
+            return 0.0;
+        }
+        100.0 * self.stuck as f64 / self.cells as f64
+    }
+
+    pub fn merge(&mut self, other: &DriftStats) {
+        self.cells += other.cells;
+        self.sum_abs_ms += other.sum_abs_ms;
+        self.max_abs_ms = self.max_abs_ms.max(other.max_abs_ms);
+        self.stuck += other.stuck;
+    }
 }
 
 /// One 32×32 (or smaller) 1T1R macro.
@@ -162,10 +208,40 @@ impl Macro {
     }
 
     /// Age the whole array by `dt_s` seconds (retention experiments).
+    /// No-op at `dt_s <= 0` (each cell's drift model short-circuits).
     pub fn age(&mut self, dt_s: f64, rng: &mut Rng) {
         for cell in &mut self.cells {
             cell.drift(dt_s, rng);
         }
+    }
+
+    /// Retention-clock alias for [`Self::age`]: the health monitor's
+    /// background clock advances device time through this name.
+    pub fn drift(&mut self, dt_s: f64, rng: &mut Rng) {
+        self.age(dt_s, rng);
+    }
+
+    /// Measure live conductances against a target snapshot (same shape).
+    pub fn drift_from(&self, targets: &Mat) -> DriftStats {
+        assert_eq!(targets.shape(), (self.rows, self.cols));
+        let mut st = DriftStats { cells: self.rows * self.cols, ..Default::default() };
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let cell = self.cell(r, c);
+                let d = (cell.conductance() - targets.get(r, c)).abs();
+                st.sum_abs_ms += d as f64;
+                st.max_abs_ms = st.max_abs_ms.max(d);
+                if cell.is_stuck() {
+                    st.stuck += 1;
+                }
+            }
+        }
+        st
+    }
+
+    /// Stuck-at fault census.
+    pub fn count_stuck(&self) -> usize {
+        self.cells.iter().filter(|c| c.is_stuck()).count()
     }
 
     /// The moon-and-star demo pattern of Fig. 2f, scaled into the window.
@@ -303,5 +379,45 @@ mod tests {
     #[should_panic(expected = "exceeds 32x32")]
     fn oversize_macro_rejected() {
         let _ = Macro::new(33, 8);
+    }
+
+    #[test]
+    fn drift_from_zero_at_snapshot_then_grows_with_age() {
+        let mut rng = Rng::new(17);
+        let mut m = Macro::new(12, 12);
+        let _ = m.program(&Mat::full(12, 12, 0.055), 0.0015, 500, &mut rng);
+        // baseline = current state: residual is exactly zero
+        let snap = m.conductances();
+        let st0 = m.drift_from(&snap);
+        assert_eq!(st0.cells, 144);
+        assert_eq!(st0.sum_abs_ms, 0.0);
+        assert_eq!(st0.max_abs_ms, 0.0);
+        // dt = 0 is a no-op: the retention clock may tick with zero step
+        m.drift(0.0, &mut rng);
+        assert_eq!(m.drift_from(&snap).sum_abs_ms, 0.0);
+        // a real retention interval must move cells off the snapshot
+        m.drift(1e9, &mut rng);
+        let st1 = m.drift_from(&snap);
+        assert!(st1.mean_abs_ms() > 0.0, "aging must register as drift");
+        assert!(st1.max_abs_ms >= st1.mean_abs_ms() as f32);
+        assert!(st1.max_abs_ms < 0.01, "1e9 s drift stays small (Fig. 2e)");
+    }
+
+    #[test]
+    fn drift_stats_count_stuck_and_merge() {
+        let mut rng = Rng::new(19);
+        let mut m = Macro::new(10, 10);
+        m.inject_faults(0.15, &mut rng);
+        let n_stuck = m.count_stuck();
+        assert!(n_stuck > 0, "15% fault injection on 100 cells");
+        let snap = m.conductances();
+        let st = m.drift_from(&snap);
+        assert_eq!(st.stuck, n_stuck);
+        assert!((st.stuck_pct() - 100.0 * n_stuck as f64 / 100.0).abs() < 1e-12);
+        let mut agg = DriftStats::default();
+        agg.merge(&st);
+        agg.merge(&st);
+        assert_eq!(agg.cells, 200);
+        assert_eq!(agg.stuck, 2 * n_stuck);
     }
 }

@@ -77,6 +77,7 @@ fn usage() -> ! {
          \x20 memdiff client   --connect HOST:PORT [--requests N] [--burst N]\n\
          \x20                  [--expect-overload] [--shutdown]\n\
          \x20                  [--stats [--prom]]\n\
+         \x20                  [--health | --age-device SECONDS | --reprogram]\n\
          \x20                  [--enqueue N [--defer-ms N] [--max-retries N] [--ttl-ms N]]\n\
          \x20                  [--fetch ID[,ID...] [--wait-ms N]] [--cancel ID]\n\
          \x20 memdiff characterize\n\
@@ -139,7 +140,7 @@ fn build_engine(engine: &str, task: &TaskKind, cfg: &Config,
             let net = AnalogScoreNet::from_conductances(
                 &w, CellParams::default(), NoiseModel::ReadFast)
                 .with_exec(exec);
-            Arc::new(AnalogEngine { net, sched, substeps: cfg.substeps })
+            Arc::new(AnalogEngine::new(net, sched, cfg.substeps))
         }
         "rust" => {
             let w = load_weights(task, weights_path, synthetic)?;
@@ -358,21 +359,42 @@ fn serve_listen(service: memdiff::coordinator::Service, addr: &str,
         None => None,
     };
     let runner_for_obs = runner.clone();
-    let front = FrontEnd::bind_shared(service, runner, addr, FrontEndConfig {
+    // the analog health monitor: drift tracking, self-test probes and
+    // the alert engine, ticking on its own background thread.  The same
+    // Arc feeds the wire `health` op, /healthz and the JSONL flush, so
+    // all the export paths agree on the alert state.
+    let health = if cfg.health.enabled {
+        let mon = memdiff::obs::HealthMonitor::new(
+            cfg.health.clone(),
+            Arc::clone(service.registry()),
+            Arc::clone(&service.mode_gate));
+        mon.start();
+        Some(mon)
+    } else {
+        None
+    };
+    let front = FrontEnd::bind_full(service, runner, health.clone(), addr,
+                                    FrontEndConfig {
         max_conns: opt(kv, "max-conns", 64),
         ..FrontEndConfig::default()
     })?;
     let metrics = front.metrics();
     if let Some(maddr) = kv.get("metrics-listen") {
         let bound = spawn_metrics_listener(
-            maddr, Arc::clone(&metrics), runner_for_obs.clone())?;
-        println!("metrics scrape endpoint on http://{bound}/metrics");
+            maddr, Arc::clone(&metrics), runner_for_obs.clone(),
+            health.clone())?;
+        println!("metrics scrape endpoint on http://{bound}/metrics \
+                  (health on /healthz)");
+    }
+    if health.is_some() {
+        println!("health monitor: tick {} ms, probes every {} ms",
+                 cfg.health.tick_ms, cfg.health.probe_interval_ms);
     }
     let flush_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
     let flush_thread = match kv.get("state-dir") {
         Some(dir) if cfg.obs.jsonl_flush_ms > 0 => Some(spawn_jsonl_flush(
             dir, cfg.obs.jsonl_flush_ms, Arc::clone(&metrics),
-            runner_for_obs, Arc::clone(&flush_stop))),
+            runner_for_obs, health.clone(), Arc::clone(&flush_stop))),
         _ => None,
     };
     println!("listening on {}", front.local_addr());
@@ -392,18 +414,24 @@ fn serve_listen(service: memdiff::coordinator::Service, addr: &str,
     if let Some(t) = flush_thread {
         let _ = t.join(); // writes one final line before exiting
     }
+    if let Some(mon) = &health {
+        mon.stop();
+    }
     front.shutdown();
     println!("metrics: {}", metrics.snapshot().report());
     Ok(())
 }
 
-/// `--metrics-listen ADDR`: a minimal plaintext HTTP scrape endpoint —
-/// every request on the socket (whatever the path) is answered with the
-/// Prometheus rendering of the current metrics snapshot.  Runs on a
-/// detached thread for the life of the process.
+/// `--metrics-listen ADDR`: a minimal plaintext HTTP scrape endpoint.
+/// `GET /healthz` answers the liveness contract — `200 ok` while no
+/// alert fires, `503` listing the firing alert names otherwise — and
+/// every other path gets the Prometheus rendering of the current
+/// metrics snapshot.  Runs on a detached thread for the life of the
+/// process.
 fn spawn_metrics_listener(addr: &str,
                           metrics: Arc<memdiff::coordinator::Metrics>,
-                          runner: Option<Arc<memdiff::jobs::JobRunner>>)
+                          runner: Option<Arc<memdiff::jobs::JobRunner>>,
+                          health: Option<Arc<memdiff::obs::HealthMonitor>>)
                           -> anyhow::Result<std::net::SocketAddr> {
     use std::io::{Read, Write};
     let listener = std::net::TcpListener::bind(addr)
@@ -414,11 +442,31 @@ fn spawn_metrics_listener(addr: &str,
         .spawn(move || {
             for stream in listener.incoming() {
                 let Ok(mut stream) = stream else { continue };
-                // drain the request head; the reply ignores path/method
                 let _ = stream.set_read_timeout(
                     Some(std::time::Duration::from_millis(500)));
                 let mut buf = [0u8; 1024];
-                let _ = stream.read(&mut buf);
+                let n = stream.read(&mut buf).unwrap_or(0);
+                let head = String::from_utf8_lossy(&buf[..n]);
+                let path = head.split_whitespace().nth(1).unwrap_or("/");
+                if path == "/healthz" || path.starts_with("/healthz?") {
+                    let (status, body) = match &health {
+                        Some(mon) if !mon.healthy() => (
+                            "503 Service Unavailable",
+                            format!("unhealthy: {}\n",
+                                    mon.firing().join(", ")),
+                        ),
+                        // no monitor = nothing can fire: stay 200 so a
+                        // probe-less deployment is not flagged down
+                        _ => ("200 OK", "ok\n".to_string()),
+                    };
+                    let _ = write!(
+                        stream,
+                        "HTTP/1.0 {}\r\n\
+                         Content-Type: text/plain\r\n\
+                         Content-Length: {}\r\n\r\n{}",
+                        status, body.len(), body);
+                    continue;
+                }
                 if let Some(r) = &runner {
                     let _ = r.gauges(); // refresh the jobs gauges in-band
                 }
@@ -442,6 +490,7 @@ fn spawn_metrics_listener(addr: &str,
 fn spawn_jsonl_flush(dir: &str, period_ms: u64,
                      metrics: Arc<memdiff::coordinator::Metrics>,
                      runner: Option<Arc<memdiff::jobs::JobRunner>>,
+                     health: Option<Arc<memdiff::obs::HealthMonitor>>,
                      stop: Arc<std::sync::atomic::AtomicBool>)
                      -> std::thread::JoinHandle<()> {
     use std::io::Write;
@@ -453,8 +502,13 @@ fn spawn_jsonl_flush(dir: &str, period_ms: u64,
             if let Some(r) = &runner {
                 let _ = r.gauges();
             }
-            let line = memdiff::obs::export::stats_json(
-                &metrics.snapshot()).to_string();
+            let mut j = memdiff::obs::export::stats_json(&metrics.snapshot());
+            if let (Some(mon), memdiff::util::json::Json::Obj(m)) =
+                (&health, &mut j)
+            {
+                m.insert("health".into(), mon.health_json());
+            }
+            let line = j.to_string();
             if let Ok(mut f) = std::fs::OpenOptions::new()
                 .create(true)
                 .append(true)
@@ -536,6 +590,37 @@ fn cmd_client(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> 
                 .ok_or_else(|| anyhow::anyhow!("reply without stats"))?;
             println!("{}", stats.to_string());
         }
+        return Ok(());
+    }
+
+    // health ops: one wire health line (optionally carrying the age or
+    // reprogram maintenance verb), print the monitor state, done
+    if kv.contains_key("health") || kv.contains_key("age-device")
+        || kv.contains_key("reprogram")
+    {
+        use memdiff::serve::protocol::HealthAction;
+        let action = if let Some(s) = kv.get("age-device") {
+            HealthAction::Age {
+                dt_s: s.parse().map_err(
+                    |_| anyhow::anyhow!("--age-device SECONDS"))?,
+            }
+        } else if kv.contains_key("reprogram") {
+            HealthAction::Reprogram
+        } else {
+            HealthAction::Status
+        };
+        writer.write_all(protocol::health_line(0, action).as_bytes())?;
+        writer.write_all(b"\n")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let msg = memdiff::util::json::Json::parse(line.trim())?;
+        anyhow::ensure!(
+            msg.get("status").and_then(|s| s.as_str()) == Some("ok"),
+            "health op failed: {}", line.trim());
+        let health = msg
+            .get("health")
+            .ok_or_else(|| anyhow::anyhow!("reply without health"))?;
+        println!("{}", health.to_string());
         return Ok(());
     }
 

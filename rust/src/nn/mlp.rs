@@ -17,7 +17,8 @@ use super::loader::ScoreWeights;
 use super::{BatchScratch, ScoreNet};
 use crate::analog::activation::relu_diode;
 use crate::clamp_voltage;
-use crate::crossbar::{BankReport, Banking, NoiseModel, ScoreLayer};
+use crate::crossbar::{BankReport, Banking, LayerDrift, NoiseModel, ScoreLayer};
+use crate::device::array::ProgramStats;
 use crate::device::cell::CellParams;
 use crate::exec::{self, lane_chunk_lens, lane_plan, Shards};
 use crate::util::rng::Rng;
@@ -351,11 +352,33 @@ impl AnalogScoreNet {
         )
     }
 
-    /// Age all layers (retention experiments).
+    /// Age all layers (retention experiments / the health monitor's
+    /// retention clock).  Banked layers draw from their own per-bank
+    /// streams; monolithic layers from `rng`.  No-op at `dt_s <= 0`.
     pub fn age(&mut self, dt_s: f64, rng: &mut Rng) {
         self.l1.age(dt_s, rng);
         self.l2.age(dt_s, rng);
         self.l3.age(dt_s, rng);
+    }
+
+    /// Per-layer drift since the last (re)program, with per-bank
+    /// breakdowns on the banked substrate (health monitor input).
+    pub fn drift_report(&self) -> Vec<LayerDrift> {
+        vec![
+            self.l1.drift_report(0),
+            self.l2.drift_report(1),
+            self.l3.drift_report(2),
+        ]
+    }
+
+    /// Write-verify recovery of every layer toward its programmed
+    /// baseline; drift estimators re-zero at the achieved state.  Returns
+    /// the aggregated programming stats (residual-error histogram input).
+    pub fn reprogram(&mut self, tol_ms: f32, rng: &mut Rng) -> ProgramStats {
+        let mut agg = self.l1.reprogram(tol_ms, rng);
+        agg.merge(self.l2.reprogram(tol_ms, rng));
+        agg.merge(self.l3.reprogram(tol_ms, rng));
+        agg
     }
 }
 
@@ -718,6 +741,29 @@ mod tests {
             par.eval_batch(&xs, 0.4, &oh, &mut b, &mut sb, &mut rng);
             assert_eq!(a, b, "batch {batch}");
         }
+    }
+
+    #[test]
+    fn net_drift_report_and_reprogram_lifecycle() {
+        // banked fixture (hidden = 48): all three layers report drift,
+        // aging raises it, reprogram returns residuals and re-zeroes it
+        let w = ScoreWeights::synthetic(2, 48, 3, 33);
+        let mut rng = Rng::new(34);
+        let mut net =
+            AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal);
+        let d0 = net.drift_report();
+        assert_eq!(d0.len(), 3);
+        assert!(d0.iter().all(|l| l.drift.sum_abs_ms == 0.0));
+        net.age(1e12, &mut rng);
+        let d1 = net.drift_report();
+        assert!(d1.iter().all(|l| l.drift.mean_abs_ms() > 1e-4),
+                "every layer must drift");
+        let cells: usize = d1.iter().map(|l| l.drift.cells).sum();
+        assert_eq!(cells, net.n_cells());
+        let ps = net.reprogram(0.0015, &mut rng);
+        assert_eq!(ps.pulses.len() + ps.failures, net.n_cells());
+        assert!(ps.max_error_ms() > 0.0, "write noise leaves residuals");
+        assert!(net.drift_report().iter().all(|l| l.drift.sum_abs_ms == 0.0));
     }
 
     #[test]

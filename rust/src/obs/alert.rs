@@ -1,0 +1,235 @@
+//! Alert engine: threshold rules with latch/hysteresis semantics over
+//! scalar health signals.
+//!
+//! A rule fires when its signal holds **at or above** `threshold` for
+//! `streak` consecutive observations (the streak suppresses one-off
+//! spikes), then **latches**: it stays firing until the signal drops
+//! below `clear_below` (< `threshold`), so a value oscillating around
+//! the threshold can never flap the alert.  Every observation mirrors
+//! the rule's state into the registry as `memdiff_alert{name=...}`
+//! (1 = firing), which the Prometheus exposition and the JSONL flush
+//! pick up with no exporter changes; transitions additionally bump
+//! `memdiff_alert_transitions_total{name,to}`.
+//!
+//! The engine is just the state machine — *what* to observe (drift
+//! magnitudes, probe KL, stuck-cell fractions) and *when* lives in
+//! [`super::health::HealthMonitor`].
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::obs;
+use crate::util::json::Json;
+
+/// One threshold rule (see the module doc for the semantics).
+#[derive(Debug, Clone)]
+pub struct AlertRule {
+    /// Stable alert name (`drift:analog`, `probe:analog:analog_cond`, ...)
+    /// — the `name` label of the exported series.
+    pub name: String,
+    /// Fire when the signal is ≥ this for `streak` observations.
+    pub threshold: f64,
+    /// Once firing, clear only when the signal drops below this
+    /// (hysteresis; must be ≤ `threshold`).
+    pub clear_below: f64,
+    /// Consecutive breaching observations required to latch (≥ 1).
+    pub streak: u32,
+}
+
+impl AlertRule {
+    pub fn new(name: impl Into<String>, threshold: f64, clear_below: f64,
+               streak: u32) -> AlertRule {
+        AlertRule { name: name.into(), threshold, clear_below,
+                    streak: streak.max(1) }
+    }
+}
+
+/// Per-rule latch state.
+#[derive(Debug, Clone, Default)]
+struct AlertState {
+    firing: bool,
+    /// Consecutive breaching observations while not firing.
+    breaches: u32,
+    last_value: f64,
+}
+
+/// Point-in-time view of one alert, for `{"op":"health"}` JSON.
+#[derive(Debug, Clone)]
+pub struct AlertSnapshot {
+    pub name: String,
+    pub firing: bool,
+    pub breaches: u32,
+    pub last_value: f64,
+}
+
+impl AlertSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Json::Str(self.name.clone()));
+        o.insert("firing".into(), Json::Bool(self.firing));
+        o.insert("breaches".into(), Json::Num(self.breaches as f64));
+        o.insert("value".into(), Json::Num(self.last_value));
+        Json::Obj(o)
+    }
+}
+
+/// The alert state machine: named latches driven by `observe` calls.
+#[derive(Default)]
+pub struct AlertEngine {
+    states: Mutex<BTreeMap<String, AlertState>>,
+}
+
+impl AlertEngine {
+    pub fn new() -> AlertEngine {
+        AlertEngine::default()
+    }
+
+    /// Feed one observation of `rule`'s signal; returns whether the
+    /// alert is firing *after* this observation.  Also mirrors the state
+    /// into the `memdiff_alert{name=}` gauge.
+    pub fn observe(&self, rule: &AlertRule, value: f64) -> bool {
+        let mut states = self.states.lock().unwrap_or_else(|e| e.into_inner());
+        let st = states.entry(rule.name.clone()).or_default();
+        st.last_value = value;
+        if st.firing {
+            // latched: only a drop below the clear line releases it —
+            // values in [clear_below, threshold) keep it firing (no flap)
+            if value < rule.clear_below {
+                st.firing = false;
+                st.breaches = 0;
+                Self::record_transition(&rule.name, false);
+            }
+        } else if value >= rule.threshold {
+            st.breaches += 1;
+            if st.breaches >= rule.streak {
+                st.firing = true;
+                st.breaches = 0;
+                Self::record_transition(&rule.name, true);
+            }
+        } else {
+            // sub-threshold observation breaks a building streak
+            st.breaches = 0;
+        }
+        let firing = st.firing;
+        drop(states);
+        obs().registry
+            .gauge("memdiff_alert", &[("name", &rule.name)])
+            .set(if firing { 1.0 } else { 0.0 });
+        firing
+    }
+
+    fn record_transition(name: &str, firing: bool) {
+        obs().registry
+            .counter("memdiff_alert_transitions_total",
+                     &[("name", name), ("to", if firing { "firing" } else { "clear" })])
+            .inc();
+    }
+
+    /// Whether the named alert is currently firing.
+    pub fn is_firing(&self, name: &str) -> bool {
+        self.states.lock().unwrap_or_else(|e| e.into_inner())
+            .get(name).map(|s| s.firing).unwrap_or(false)
+    }
+
+    /// Names of all currently-firing alerts, sorted.
+    pub fn firing(&self) -> Vec<String> {
+        self.states.lock().unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .filter(|(_, s)| s.firing)
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    pub fn any_firing(&self) -> bool {
+        self.states.lock().unwrap_or_else(|e| e.into_inner())
+            .values().any(|s| s.firing)
+    }
+
+    /// Every rule the engine has seen, with its current latch state.
+    pub fn snapshot(&self) -> Vec<AlertSnapshot> {
+        self.states.lock().unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(n, s)| AlertSnapshot {
+                name: n.clone(),
+                firing: s.firing,
+                breaches: s.breaches,
+                last_value: s.last_value,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latches_after_streak_and_holds_through_hysteresis_band() {
+        let e = AlertEngine::new();
+        let r = AlertRule::new("t_alert_latch", 1.0, 0.5, 2);
+        assert!(!e.observe(&r, 1.2), "first breach only starts the streak");
+        assert!(e.observe(&r, 1.1), "second consecutive breach latches");
+        // inside the hysteresis band: stays firing (no flapping)
+        assert!(e.observe(&r, 0.7));
+        assert!(e.observe(&r, 0.99));
+        assert!(e.is_firing("t_alert_latch"));
+        // below the clear line: releases
+        assert!(!e.observe(&r, 0.4));
+        assert!(!e.is_firing("t_alert_latch"));
+        assert_eq!(e.firing(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn sub_threshold_observation_resets_a_building_streak() {
+        let e = AlertEngine::new();
+        let r = AlertRule::new("t_alert_streak", 1.0, 0.5, 3);
+        assert!(!e.observe(&r, 2.0));
+        assert!(!e.observe(&r, 2.0));
+        assert!(!e.observe(&r, 0.1), "dip resets the streak");
+        assert!(!e.observe(&r, 2.0));
+        assert!(!e.observe(&r, 2.0));
+        assert!(e.observe(&r, 2.0), "needs 3 consecutive again");
+    }
+
+    #[test]
+    fn oscillation_around_threshold_never_flaps_a_latched_alert() {
+        let e = AlertEngine::new();
+        let r = AlertRule::new("t_alert_flap", 1.0, 0.5, 1);
+        assert!(e.observe(&r, 1.5));
+        let mut transitions = 0;
+        let mut was = true;
+        // oscillate across the threshold but above the clear line
+        for i in 0..20 {
+            let v = if i % 2 == 0 { 1.3 } else { 0.8 };
+            let now = e.observe(&r, v);
+            if now != was {
+                transitions += 1;
+            }
+            was = now;
+        }
+        assert_eq!(transitions, 0, "hysteresis must absorb the oscillation");
+        assert!(e.is_firing("t_alert_flap"));
+    }
+
+    #[test]
+    fn gauge_mirrors_state_and_snapshot_reports_values() {
+        let e = AlertEngine::new();
+        let r = AlertRule::new("t_alert_gauge", 1.0, 0.5, 1);
+        e.observe(&r, 3.0);
+        assert_eq!(
+            obs().registry.gauge("memdiff_alert", &[("name", "t_alert_gauge")])
+                .get(),
+            1.0);
+        e.observe(&r, 0.0);
+        assert_eq!(
+            obs().registry.gauge("memdiff_alert", &[("name", "t_alert_gauge")])
+                .get(),
+            0.0);
+        let snap = e.snapshot();
+        let s = snap.iter().find(|s| s.name == "t_alert_gauge").unwrap();
+        assert!(!s.firing);
+        assert_eq!(s.last_value, 0.0);
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"firing\":false"), "{j}");
+    }
+}

@@ -34,11 +34,37 @@
 //! The end-to-end budget is **< 3% throughput cost** on the serving
 //! path with obs enabled, tracked as `obs_overhead_pct` in
 //! `BENCH_sampler_throughput.json`.
+//!
+//! ## Health monitoring
+//!
+//! On top of the substrate sits the analog health monitor (the ISSUE-8
+//! tentpole):
+//!
+//! * [`health`] — [`HealthMonitor`]: a background retention clock and
+//!   drift tracker comparing live conductances against the programmed
+//!   baseline (per-backend / per-layer / per-bank `memdiff_drift_*`
+//!   gauges, stuck-cell census, write-verify residual histograms), plus
+//!   the [`DeviceHealth`] trait engines implement to expose
+//!   age / drift-report / reprogram.
+//! * [`probe`] — [`ProbeRunner`]: fixed-seed self-test requests injected
+//!   directly through every routed backend (never through the batcher
+//!   lanes, so serving metrics exclude them) and scored against the
+//!   digital oracle with the paper's KL metric (`memdiff_probe_kl`).
+//! * [`alert`] — [`AlertEngine`]: threshold + hysteresis + streak rules
+//!   that latch named alerts (`memdiff_alert{name=}`), driving
+//!   `/healthz`, `{"op":"health"}`, `memdiff client --health`, and the
+//!   JSONL flush.
 
+pub mod alert;
 pub mod export;
+pub mod health;
+pub mod probe;
 pub mod registry;
 pub mod trace;
 
+pub use alert::{AlertEngine, AlertRule, AlertSnapshot};
+pub use health::{DeviceHealth, HealthConfig, HealthMonitor};
+pub use probe::{ProbeConfig, ProbeResult, ProbeRunner};
 pub use registry::{AtomicHist, Counter, Gauge, Phase, PhaseTimers, Registry};
 pub use trace::{SpanEvent, SpanRing, Stage, TraceId};
 

@@ -39,8 +39,9 @@ use anyhow::Context;
 use crate::coordinator::Service;
 use crate::jobs::JobRunner;
 use crate::obs;
+use crate::obs::health::HealthMonitor;
 use crate::serve::admission::ConnGate;
-use crate::serve::protocol::{self, Status, WireMsg};
+use crate::serve::protocol::{self, HealthAction, Status, WireMsg};
 use crate::serve::ticket::{Notify, Ticket};
 
 /// Front-end tuning.
@@ -85,6 +86,9 @@ struct Shared {
     /// The durable job layer (None unless started with a state dir —
     /// job ops are answered with an error in that case).
     runner: Option<Arc<JobRunner>>,
+    /// The analog health monitor (None when `[health]` is disabled —
+    /// health ops are answered with an error in that case).
+    health: Option<Arc<HealthMonitor>>,
     cfg: FrontEndConfig,
     /// Soft stop: reject new work, finish in-flight.
     draining: AtomicBool,
@@ -125,6 +129,18 @@ impl FrontEnd {
     pub fn bind_shared(service: Arc<Service>, runner: Option<Arc<JobRunner>>,
                        addr: &str, cfg: FrontEndConfig)
                        -> anyhow::Result<FrontEnd> {
+        Self::bind_full(service, runner, None, addr, cfg)
+    }
+
+    /// The fully-wired deployment shape: service + optional durable job
+    /// layer + optional [`HealthMonitor`].  With a monitor the `health`
+    /// op comes alive (status plus the `age`/`reprogram` maintenance
+    /// verbs); the front-end does not start or stop the monitor — its
+    /// lifecycle belongs to the caller.
+    pub fn bind_full(service: Arc<Service>, runner: Option<Arc<JobRunner>>,
+                     health: Option<Arc<HealthMonitor>>, addr: &str,
+                     cfg: FrontEndConfig)
+                     -> anyhow::Result<FrontEnd> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding front-end listener on {addr}"))?;
         listener
@@ -135,6 +151,7 @@ impl FrontEnd {
         let shared = Arc::new(Shared {
             service,
             runner,
+            health,
             cfg,
             draining: AtomicBool::new(false),
             stopped: AtomicBool::new(false),
@@ -425,6 +442,30 @@ fn process_buffered(acc: &mut Vec<u8>, sh: &Shared, notify: &Notify,
                 let prom = obs::export::render_prometheus(&snap);
                 write_line(stream, &protocol::stats_reply_line(
                     client_id, stats, &prom))?;
+            }
+            Ok(WireMsg::Health { client_id, action }) => {
+                let Some(mon) = &sh.health else {
+                    write_line(stream, &protocol::status_line(
+                        client_id, Status::Error,
+                        "no health monitor (enable the [health] config \
+                         section)"))?;
+                    continue;
+                };
+                match action {
+                    HealthAction::Status => {}
+                    HealthAction::Age { dt_s } => {
+                        // apply the drift, then tick so the estimator and
+                        // alert rules see it before the reply renders
+                        mon.age_all(dt_s);
+                        mon.tick();
+                    }
+                    HealthAction::Reprogram => {
+                        mon.reprogram_all();
+                        mon.tick();
+                    }
+                }
+                write_line(stream, &protocol::health_reply_line(
+                    client_id, mon.health_json()))?;
             }
             Ok(WireMsg::JobStatus { client_id, job }) => {
                 let Some(runner) = &sh.runner else {

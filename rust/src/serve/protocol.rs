@@ -82,6 +82,34 @@
 //! `stats` embeds the same JSON the periodic JSONL flush writes plus the
 //! full Prometheus text exposition (also served plainly on
 //! `--metrics-listen`); see [`crate::obs`] for the metric families.
+//!
+//! ## Health op (servers running the analog health monitor)
+//!
+//! ```text
+//! {"op": "health", "id": 3}
+//!   -> {"id": 3, "status": "ok", "op": "health",
+//!       "health": {"healthy": true,
+//!                  "alerts": [{"name": "drift:analog", "firing": false,
+//!                              "breaches": 0, "value": 1.2e-5}],
+//!                  "drift": [{"backend": "analog", "cells": ...,
+//!                             "mean_abs_ms": ..., "max_abs_ms": ...,
+//!                             "stuck": ..., "stuck_pct": ...,
+//!                             "layers": [{"layer": 0, ...,
+//!                                         "banks": [{"bank": "r0c0", ...}]}]}],
+//!                  "probes": [{"backend": ..., "class": ..., "kl": ...,
+//!                              "ok": true, "error": null}],
+//!                  "reprogram": [...], "ticks": ..., "reprograms": ...}}
+//! {"op": "health", "id": 3, "action": "age", "dt_s": 1e9}
+//!   -> same reply shape, after applying the retention drift
+//! {"op": "health", "id": 3, "action": "reprogram"}
+//!   -> same reply shape, after the write-verify reprogram
+//! ```
+//!
+//! `age` and `reprogram` are maintenance verbs (CI uses them to force an
+//! alert and then clear it); a server without the monitor answers every
+//! health op with `status: "error"`.  The same `health` object rides the
+//! JSONL flush, and `/healthz` on `--metrics-listen` answers 200/503
+//! from the `healthy` bit.
 
 use crate::coordinator::request::{GenRequest, GenResponse, SolverChoice, TaskKind};
 use crate::jobs::store::Job;
@@ -151,6 +179,20 @@ pub enum WireMsg {
     /// `{"op": "stats"}` — the full observability snapshot (JSON stats +
     /// Prometheus text) in one reply line.
     Stats { client_id: u64 },
+    /// `{"op": "health"}` — the health monitor's state, optionally after
+    /// a maintenance action.
+    Health { client_id: u64, action: HealthAction },
+}
+
+/// The maintenance verb of a health op.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HealthAction {
+    /// Report only.
+    Status,
+    /// Apply `dt_s` simulated seconds of retention drift first.
+    Age { dt_s: f64 },
+    /// Re-run write-verify programming on every device backend first.
+    Reprogram,
 }
 
 /// A request-line parse failure: the message goes into an
@@ -222,6 +264,23 @@ pub fn parse_line(line: &str) -> Result<WireMsg, WireError> {
         return match op {
             "shutdown" => Ok(WireMsg::Shutdown),
             "stats" => Ok(WireMsg::Stats { client_id }),
+            "health" => {
+                let action = match j.get("action").and_then(|v| v.as_str()) {
+                    None | Some("status") => HealthAction::Status,
+                    Some("age") => HealthAction::Age {
+                        dt_s: j.get("dt_s").and_then(|v| v.as_f64())
+                            .ok_or_else(|| err(
+                                "bad request: health action \"age\" requires \
+                                 dt_s".into()))?,
+                    },
+                    Some("reprogram") => HealthAction::Reprogram,
+                    Some(other) => {
+                        return Err(err(format!(
+                            "bad request: unknown health action {other:?}")));
+                    }
+                };
+                Ok(WireMsg::Health { client_id, action })
+            }
             "enqueue" => Ok(WireMsg::Enqueue {
                 client_id,
                 req: parse_gen(&j, client_id)?,
@@ -534,6 +593,34 @@ pub fn stats_reply_line(client_id: u64, stats: Json, prometheus: &str)
     Json::Obj(m).to_string()
 }
 
+/// Build a `health` line (client side — `memdiff client --health`
+/// and the maintenance verbs `--age-device` / `--reprogram`).
+pub fn health_line(client_id: u64, action: HealthAction) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("op".into(), Json::Str("health".into()));
+    m.insert("id".into(), Json::Num(client_id as f64));
+    match action {
+        HealthAction::Status => {}
+        HealthAction::Age { dt_s } => {
+            m.insert("action".into(), Json::Str("age".into()));
+            m.insert("dt_s".into(), Json::Num(dt_s));
+        }
+        HealthAction::Reprogram => {
+            m.insert("action".into(), Json::Str("reprogram".into()));
+        }
+    }
+    Json::Obj(m).to_string()
+}
+
+/// Reply line for a `health` op: the monitor's full state object
+/// (same shape as the JSONL flush's `health` key).
+pub fn health_reply_line(client_id: u64, health: Json) -> String {
+    let mut m = base_obj(client_id, Status::Ok);
+    m.insert("op".into(), Json::Str("health".into()));
+    m.insert("health".into(), health);
+    Json::Obj(m).to_string()
+}
+
 /// Read and parse one reply line from a buffered stream (the client
 /// side's read loop — shared by `memdiff client`, the front-end bench
 /// scenario and the tests).  EOF is an error: callers use this only
@@ -724,6 +811,52 @@ mod tests {
                     .and_then(|v| v.as_usize()), Some(1));
         assert!(j.get("prometheus").and_then(|v| v.as_str()).unwrap()
                  .contains("memdiff_requests_total"));
+    }
+
+    #[test]
+    fn health_op_roundtrips_all_actions() {
+        let WireMsg::Health { client_id, action } =
+            parse_line(&health_line(9, HealthAction::Status)).unwrap()
+        else { panic!("expected health") };
+        assert_eq!(client_id, 9);
+        assert_eq!(action, HealthAction::Status);
+        // a bare {"op":"health"} is a status query too
+        assert!(matches!(parse_line(r#"{"op":"health"}"#).unwrap(),
+                         WireMsg::Health { action: HealthAction::Status, .. }));
+        let WireMsg::Health { action, .. } =
+            parse_line(&health_line(9, HealthAction::Age { dt_s: 1e9 })).unwrap()
+        else { panic!() };
+        assert_eq!(action, HealthAction::Age { dt_s: 1e9 });
+        let WireMsg::Health { action, .. } =
+            parse_line(&health_line(9, HealthAction::Reprogram)).unwrap()
+        else { panic!() };
+        assert_eq!(action, HealthAction::Reprogram);
+        // age without dt_s and unknown verbs echo the client id back
+        let e = parse_line(r#"{"op":"health","id":5,"action":"age"}"#)
+            .unwrap_err();
+        assert_eq!(e.id, 5);
+        assert!(e.msg.contains("dt_s"), "{}", e.msg);
+        let e = parse_line(r#"{"op":"health","id":5,"action":"explode"}"#)
+            .unwrap_err();
+        assert!(e.msg.contains("unknown health action"), "{}", e.msg);
+    }
+
+    #[test]
+    fn health_reply_line_carries_the_monitor_state() {
+        let health = Json::parse(
+            r#"{"healthy": false,
+                "alerts": [{"name": "drift:analog", "firing": true}]}"#)
+            .unwrap();
+        let line = health_reply_line(9, health);
+        let r = parse_reply(&line).unwrap();
+        assert_eq!((r.id, r.status), (9, Status::Ok));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("op").and_then(|v| v.as_str()), Some("health"));
+        let h = j.get("health").unwrap();
+        assert_eq!(h.get("healthy"), Some(&Json::Bool(false)));
+        assert_eq!(h.get("alerts").and_then(|a| a.as_arr()).and_then(|a| a.first())
+                    .and_then(|a| a.get("name")).and_then(|v| v.as_str()),
+                   Some("drift:analog"));
     }
 
     #[test]

@@ -178,11 +178,7 @@ fn wide_net_programs_with_per_bank_stats() {
 fn service_surfaces_bank_topology_and_reads() {
     let w = ScoreWeights::synthetic(2, 48, 3, 500);
     let net = AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal);
-    let engine = Arc::new(AnalogEngine {
-        net,
-        sched: VpSchedule::default(),
-        substeps: 40,
-    });
+    let engine = Arc::new(AnalogEngine::new(net, VpSchedule::default(), 40));
     let svc = Service::start(
         engine,
         None,

@@ -41,12 +41,12 @@ fn analog_engine_generates_circle() {
     }
     let meta = Meta::load_default().unwrap();
     let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_uncond.json")).unwrap();
-    let engine = Arc::new(AnalogEngine {
-        net: AnalogScoreNet::from_conductances(
+    let engine = Arc::new(AnalogEngine::new(
+        AnalogScoreNet::from_conductances(
             &w, CellParams::default(), NoiseModel::ReadFast),
-        sched: meta.sched,
-        substeps: 1000,
-    });
+        meta.sched,
+        1000,
+    ));
     let svc = Service::start(engine, None, ServiceConfig::default());
     let r = svc
         .generate(TaskKind::Circle, 800, SolverChoice::AnalogSde, 0.0, false)
@@ -111,12 +111,12 @@ fn conditional_generation_separates_classes() {
     let w = ScoreWeights::load(Meta::artifacts_dir().join("weights_cond.json")).unwrap();
     let decoder = Arc::new(PixelDecoder::new(
         DecoderWeights::load(Meta::artifacts_dir().join("vae_decoder.json")).unwrap()));
-    let engine = Arc::new(AnalogEngine {
-        net: AnalogScoreNet::from_conductances(
+    let engine = Arc::new(AnalogEngine::new(
+        AnalogScoreNet::from_conductances(
             &w, CellParams::default(), NoiseModel::ReadFast),
-        sched: meta.sched,
-        substeps: 1000,
-    });
+        meta.sched,
+        1000,
+    ));
     let svc = Service::start(engine, Some(decoder), ServiceConfig::default());
     let mut means = Vec::new();
     for c in 0..3 {

@@ -99,11 +99,11 @@ fn analog_engine(noise: NoiseModel) -> Arc<dyn Engine> {
     } else {
         CellParams::default()
     };
-    Arc::new(AnalogEngine {
-        net: AnalogScoreNet::from_conductances(&weights(), params, noise),
-        sched: VpSchedule::default(),
-        substeps: 30,
-    })
+    Arc::new(AnalogEngine::new(
+        AnalogScoreNet::from_conductances(&weights(), params, noise),
+        VpSchedule::default(),
+        30,
+    ))
 }
 
 fn rust_engine() -> Arc<dyn Engine> {

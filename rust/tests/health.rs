@@ -1,0 +1,263 @@
+//! Health-monitor loopback e2e: the full alert lifecycle driven over a
+//! live TCP server — a healthy report, drift injected through the wire
+//! `age` maintenance verb, the drift alert firing in the `health` reply,
+//! a wire `reprogram` clearing it — plus the serving-metrics exclusion
+//! proof for self-test probes and the monitor-less error contract.
+//!
+//! Runs without AOT artifacts (synthetic weights).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use memdiff::coordinator::batcher::BatcherConfig;
+use memdiff::coordinator::service::{AnalogEngine, Engine, RustDigitalEngine};
+use memdiff::coordinator::{
+    EngineRegistry, Service, ServiceConfig, SolverChoice, SolverFamily,
+    TaskKind,
+};
+use memdiff::crossbar::NoiseModel;
+use memdiff::device::cell::CellParams;
+use memdiff::diffusion::schedule::VpSchedule;
+use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
+use memdiff::obs::{HealthConfig, HealthMonitor};
+use memdiff::serve::protocol::{self, HealthAction, Status};
+use memdiff::serve::{FrontEnd, FrontEndConfig};
+use memdiff::util::json::Json;
+
+fn weights() -> ScoreWeights {
+    ScoreWeights::synthetic(2, 8, 3, 77)
+}
+
+fn analog_engine() -> Arc<dyn Engine> {
+    let params = CellParams { read_noise_frac: 0.0, ..CellParams::default() };
+    Arc::new(AnalogEngine::new(
+        AnalogScoreNet::from_conductances(&weights(), params,
+                                          NoiseModel::Ideal),
+        VpSchedule::default(),
+        30,
+    ))
+}
+
+fn rust_engine() -> Arc<dyn Engine> {
+    Arc::new(RustDigitalEngine {
+        net: DigitalScoreNet::new(weights()),
+        sched: VpSchedule::default(),
+    })
+}
+
+fn svc_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 1,
+        batcher: BatcherConfig {
+            max_batch_samples: 64,
+            linger: Duration::from_millis(1),
+            queue_depth: 0,
+        },
+        seed: 0xF0F0,
+        intra_threads: 1,
+    }
+}
+
+fn routed_service() -> Arc<Service> {
+    let mut reg = EngineRegistry::new();
+    reg.add_backend("analog", analog_engine(), 1).unwrap();
+    reg.add_backend("rust", rust_engine(), 1).unwrap();
+    reg.route_family(SolverFamily::Analog, "analog").unwrap();
+    reg.route_family(SolverFamily::Digital, "rust").unwrap();
+    Arc::new(Service::start_routed(reg, None, svc_cfg()))
+}
+
+/// A monitor over the service's registry, probes on demand only, the
+/// background thread NOT started — the wire handler ticks it, so the
+/// test is deterministic.
+fn monitor_for(service: &Arc<Service>, cfg: HealthConfig)
+               -> Arc<HealthMonitor> {
+    HealthMonitor::new(cfg, Arc::clone(service.registry()),
+                       Arc::clone(&service.mode_gate))
+}
+
+fn send(w: &mut TcpStream, line: &str) {
+    w.write_all(line.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+}
+
+/// Read one raw reply line as JSON (health replies carry more than the
+/// typed [`protocol::WireReply`] surfaces).
+fn recv_json(r: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).expect("reply line parses")
+}
+
+fn health_of(reply: &Json) -> &Json {
+    assert_eq!(reply.get("status").and_then(|s| s.as_str()), Some("ok"),
+               "health op ok: {reply:?}");
+    reply.get("health").expect("health payload")
+}
+
+fn healthy_bit(reply: &Json) -> bool {
+    health_of(reply).get("healthy") == Some(&Json::Bool(true))
+}
+
+fn firing_names(reply: &Json) -> Vec<String> {
+    health_of(reply)
+        .get("alerts").and_then(|a| a.as_arr()).unwrap_or(&[])
+        .iter()
+        .filter(|a| a.get("firing") == Some(&Json::Bool(true)))
+        .filter_map(|a| a.get("name").and_then(|n| n.as_str()))
+        .map(String::from)
+        .collect()
+}
+
+/// The tentpole's acceptance path, over the wire: healthy → `age`
+/// injects a year-scale retention loss and the drift alert fires in the
+/// reply (what `memdiff client --health` prints and what flips /healthz
+/// to 503) → the server keeps serving while unhealthy → `reprogram`
+/// write-verifies the array and the alert clears.
+#[test]
+fn wire_health_lifecycle_drift_fires_and_reprogram_clears() {
+    let service = routed_service();
+    let mon = monitor_for(&service, HealthConfig {
+        probe_interval_ms: 0,
+        ..HealthConfig::default()
+    });
+    let front = FrontEnd::bind_full(
+        Arc::clone(&service), None, Some(Arc::clone(&mon)), "127.0.0.1:0",
+        FrontEndConfig { poll: Duration::from_millis(2),
+                         ..FrontEndConfig::default() })
+        .unwrap();
+    let stream = TcpStream::connect(front.local_addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    // freshly programmed: healthy, nothing firing
+    send(&mut w, &protocol::health_line(1, HealthAction::Status));
+    let reply = recv_json(&mut r);
+    assert!(healthy_bit(&reply), "fresh array is healthy: {reply:?}");
+    assert!(firing_names(&reply).is_empty());
+
+    // inject drift: dt = 1e12 s pushes mean |dG| far past the default
+    // 4e-4 mS threshold, so the drift alert latches on the handler's tick
+    send(&mut w, &protocol::health_line(
+        2, HealthAction::Age { dt_s: 1e12 }));
+    let reply = recv_json(&mut r);
+    assert!(!healthy_bit(&reply), "aged array must alert: {reply:?}");
+    assert!(firing_names(&reply).iter().any(|n| n == "drift:analog"),
+            "drift:analog fires, got {:?}", firing_names(&reply));
+    // the drift report backs the alert with numbers
+    let drift = health_of(&reply).get("drift").and_then(|d| d.as_arr())
+        .expect("drift report");
+    let analog = drift.iter()
+        .find(|b| b.get("backend").and_then(|n| n.as_str()) == Some("analog"))
+        .expect("analog backend drift");
+    assert!(analog.get("mean_abs_ms").and_then(|v| v.as_f64()).unwrap()
+            > 4.0e-4);
+
+    // an unhealthy device still serves (alerting is advisory; routing
+    // away is the operator's call)
+    send(&mut w, &protocol::request_line(
+        3, TaskKind::Circle, 2, SolverChoice::AnalogOde, 0.0, false));
+    let gen = protocol::read_reply(&mut r).unwrap();
+    assert_eq!((gen.id, gen.status), (3, Status::Ok), "{:?}", gen.error);
+    assert_eq!(gen.samples.len(), 4);
+
+    // reprogram: write-verify re-baselines the array, drift drops to 0,
+    // the alert clears through hysteresis in the same reply
+    send(&mut w, &protocol::health_line(4, HealthAction::Reprogram));
+    let reply = recv_json(&mut r);
+    assert!(healthy_bit(&reply), "reprogram heals: {reply:?}");
+    assert!(firing_names(&reply).is_empty());
+    let reprog = health_of(&reply).get("reprogram").and_then(|v| v.as_arr())
+        .expect("reprogram records");
+    assert!(reprog.iter().any(
+        |p| p.get("backend").and_then(|n| n.as_str()) == Some("analog")));
+    assert!(health_of(&reply).get("reprograms").and_then(|v| v.as_f64())
+            .unwrap() >= 1.0);
+
+    // malformed maintenance verbs answer error without killing the conn
+    send(&mut w, r#"{"op":"health","id":5,"action":"warp"}"#);
+    let bad = recv_json(&mut r);
+    assert_eq!(bad.get("status").and_then(|s| s.as_str()), Some("error"));
+    send(&mut w, &protocol::health_line(6, HealthAction::Status));
+    assert!(healthy_bit(&recv_json(&mut r)));
+
+    front.shutdown();
+}
+
+/// Self-test probes ride `Engine::generate` directly, underneath the
+/// batcher — so a probe sweep moves the probe counters but provably
+/// never the serving counters the SLO dashboards watch.
+#[test]
+fn probes_stay_out_of_serving_metrics_on_a_live_server() {
+    let service = routed_service();
+    let mon = monitor_for(&service, HealthConfig {
+        probe_interval_ms: 0,
+        probe_samples: 64,
+        probe_steps: 20,
+        // scoring 64 samples is noisy by design: open budgets keep this
+        // exclusion test independent of the quality gates
+        kl_budget: [100.0; 4],
+        ..HealthConfig::default()
+    });
+    let front = FrontEnd::bind_full(
+        Arc::clone(&service), None, Some(Arc::clone(&mon)), "127.0.0.1:0",
+        FrontEndConfig { poll: Duration::from_millis(2),
+                         ..FrontEndConfig::default() })
+        .unwrap();
+    let metrics = front.metrics();
+    let stream = TcpStream::connect(front.local_addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    // one real request: the serving counters move
+    send(&mut w, &protocol::request_line(
+        1, TaskKind::Circle, 3, SolverChoice::AnalogOde, 0.0, false));
+    assert_eq!(protocol::read_reply(&mut r).unwrap().status, Status::Ok);
+    let before = metrics.snapshot();
+    assert_eq!((before.requests, before.samples), (1, 3));
+
+    // a full probe sweep (every backend, every routed class)
+    mon.probe_now();
+    send(&mut w, &protocol::health_line(2, HealthAction::Status));
+    let reply = recv_json(&mut r);
+    let probes = health_of(&reply).get("probes").and_then(|p| p.as_arr())
+        .expect("probe results");
+    assert!(!probes.is_empty(), "probes ran");
+    assert!(probes.iter().all(
+        |p| p.get("ok") == Some(&Json::Bool(true))), "{probes:?}");
+
+    // ...and the serving counters did not move
+    let after = metrics.snapshot();
+    assert_eq!((after.requests, after.samples), (1, 3),
+               "probe traffic must not count as served load");
+
+    front.shutdown();
+}
+
+/// A server without the monitor answers every health op with a typed
+/// error (and keeps serving) — the same contract job ops have without
+/// `--state-dir`.
+#[test]
+fn health_op_without_monitor_is_a_typed_error() {
+    let service = routed_service();
+    let front = FrontEnd::bind_full(
+        Arc::clone(&service), None, None, "127.0.0.1:0",
+        FrontEndConfig::default())
+        .unwrap();
+    let stream = TcpStream::connect(front.local_addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    send(&mut w, &protocol::health_line(1, HealthAction::Status));
+    let reply = recv_json(&mut r);
+    assert_eq!(reply.get("status").and_then(|s| s.as_str()), Some("error"));
+    assert!(reply.get("error").and_then(|e| e.as_str()).unwrap()
+            .contains("no health monitor"));
+
+    send(&mut w, &protocol::request_line(
+        2, TaskKind::Circle, 1, SolverChoice::AnalogOde, 0.0, false));
+    assert_eq!(protocol::read_reply(&mut r).unwrap().status, Status::Ok);
+    front.shutdown();
+}

@@ -72,11 +72,11 @@ fn analog_engine() -> Arc<dyn Engine> {
     // exported series
     let w = ScoreWeights::synthetic(2, 8, 3, 77);
     let params = CellParams { read_noise_frac: 0.0, ..CellParams::default() };
-    Arc::new(AnalogEngine {
-        net: AnalogScoreNet::from_conductances(&w, params, NoiseModel::Ideal),
-        sched: VpSchedule::default(),
-        substeps: 30,
-    })
+    Arc::new(AnalogEngine::new(
+        AnalogScoreNet::from_conductances(&w, params, NoiseModel::Ideal),
+        VpSchedule::default(),
+        30,
+    ))
 }
 
 fn svc_cfg() -> ServiceConfig {

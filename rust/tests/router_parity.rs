@@ -44,11 +44,11 @@ fn analog_engine(noise: NoiseModel) -> Arc<dyn Engine> {
     } else {
         CellParams::default()
     };
-    Arc::new(AnalogEngine {
-        net: AnalogScoreNet::from_conductances(&weights(), params, noise),
-        sched: sched(),
-        substeps: SUBSTEPS,
-    })
+    Arc::new(AnalogEngine::new(
+        AnalogScoreNet::from_conductances(&weights(), params, noise),
+        sched(),
+        SUBSTEPS,
+    ))
 }
 
 fn rust_engine() -> Arc<dyn Engine> {
@@ -262,6 +262,70 @@ fn mixed_class_shutdown_drains_all_lanes_end_to_end() {
     assert_eq!(answered, expected, "no request dropped on any lane");
 }
 
+/// The ROADMAP's per-class quality gate: on the healthy two-backend
+/// deployment, every routed class's self-test probe must score inside
+/// its `[health]` KL budget against the digital oracle, and the health
+/// monitor built on the same rules must report healthy.
+#[test]
+fn per_class_probe_kl_stays_inside_budget() {
+    use memdiff::coordinator::service::ModeGate;
+    use memdiff::obs::{obs, HealthConfig, HealthMonitor, ProbeConfig,
+                       ProbeRunner};
+
+    // deeper solve than the parity scenarios: the gate scores sample
+    // *quality*, so the analog ODE gets a realistic integration window
+    let params = CellParams { read_noise_frac: 0.0, ..CellParams::default() };
+    let mut reg = EngineRegistry::new();
+    reg.add_backend(
+        "analog",
+        Arc::new(AnalogEngine::new(
+            AnalogScoreNet::from_conductances(&weights(), params,
+                                              NoiseModel::Ideal),
+            sched(),
+            400,
+        )) as Arc<dyn Engine>,
+        1,
+    )
+    .unwrap();
+    reg.add_backend("rust", rust_engine(), 1).unwrap();
+    reg.route_family(SolverFamily::Analog, "analog").unwrap();
+    reg.route_family(SolverFamily::Digital, "rust").unwrap();
+    let reg = Arc::new(reg);
+
+    let hc = HealthConfig::default();
+    let runner = ProbeRunner::new(
+        ProbeConfig { samples: hc.probe_samples, steps: hc.probe_steps,
+                      seed: hc.probe_seed },
+        Arc::clone(&reg));
+    let results = runner.run_all();
+    assert_eq!(results.len(), 4, "every class routed and probed");
+    for r in &results {
+        let kl = r.kl.unwrap_or_else(|| {
+            panic!("{}:{} not scored: {:?}", r.backend, r.class, r.error)
+        });
+        let budget = hc.kl_budget[r.class.index()];
+        assert!(kl < budget,
+                "{}:{} KL {kl:.3} breaches its budget {budget}",
+                r.backend, r.class);
+        // the scorer exported the gauge the alert rules read
+        assert_eq!(
+            obs().registry
+                .gauge("memdiff_probe_kl",
+                       &[("backend", &r.backend), ("class", r.class.name())])
+                .get(),
+            kl);
+    }
+
+    // the monitor over the same deployment agrees: two full probe passes
+    // (the alert streak) latch nothing
+    let mon = HealthMonitor::new(
+        HealthConfig { probe_interval_ms: 0, ..HealthConfig::default() },
+        reg, Arc::new(ModeGate::new()));
+    mon.probe_now();
+    mon.probe_now();
+    assert!(mon.healthy(), "healthy deployment alerted: {:?}", mon.firing());
+}
+
 #[test]
 fn routed_service_with_artifact_weights_if_present() {
     // optional heavier check: when the real exported weights exist, the
@@ -276,12 +340,12 @@ fn routed_service_with_artifact_weights_if_present() {
     let mut reg = EngineRegistry::new();
     reg.add_backend(
         "analog",
-        Arc::new(AnalogEngine {
-            net: AnalogScoreNet::from_conductances(
+        Arc::new(AnalogEngine::new(
+            AnalogScoreNet::from_conductances(
                 &w, CellParams::default(), NoiseModel::ReadFast),
-            sched: sched(),
-            substeps: SUBSTEPS,
-        }) as Arc<dyn Engine>,
+            sched(),
+            SUBSTEPS,
+        )) as Arc<dyn Engine>,
         1,
     )
     .unwrap();
