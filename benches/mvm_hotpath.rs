@@ -5,9 +5,12 @@
 //! plus a bank-grid sweep (monolithic oracle vs `BankedCrossbarLayer` at
 //! 1×1 / 1×2 / 2×2 / 3×3 tile grids, capturing the tiling overhead), a
 //! bank-parallel thread sweep (1/2/4/8-thread `exec::Pool` over a 3×3
-//! grid, `par_*` keys), the fused analog score-net evaluation and one
-//! closed-loop solver sub-step.  Per-MVM nanoseconds land in
-//! `BENCH_mvm.json` so the perf trajectory is tracked across PRs.
+//! grid, `par_*` keys), a SIMD-dispatch × shape sweep (scalar vs the best
+//! detected instruction set on the batched GEMM, `simd_*` keys, plus the
+//! conductance-quantized i8 lane, `quant_*` keys, and the autotuned tile
+//! geometry), the fused analog score-net evaluation and one closed-loop
+//! solver sub-step.  Per-MVM nanoseconds land in `BENCH_mvm.json` so the
+//! perf trajectory is tracked across PRs.
 
 use std::sync::Arc;
 
@@ -19,8 +22,10 @@ use memdiff::device::cell::CellParams;
 use memdiff::exec::{Ctx, ParStrategy, Pool};
 use memdiff::nn::{AnalogScoreNet, BatchScratch, ScoreNet, ScoreWeights};
 use memdiff::util::bench;
+use memdiff::util::qkernel::QuantBank;
 use memdiff::util::rng::Rng;
-use memdiff::util::tensor::Mat;
+use memdiff::util::simd::{self, KernelBackend};
+use memdiff::util::tensor::{self, Mat};
 
 /// Lanes per batched call — the coordinator's coalescing target.
 const B: usize = 64;
@@ -148,6 +153,64 @@ fn main() -> anyhow::Result<()> {
         }
         json.push(("par_3x3_speedup_t4", t1_auto / t4_auto));
         println!("  => 1→4 thread speedup {:.2}x", t1_auto / t4_auto);
+    }
+
+    bench::section("SIMD dispatch x shape sweep: B x dim x dim GEMM + i8 quant lane");
+    // scalar vs the best detected backend on the same batched GEMM the
+    // crossbar hot path runs (order-preserving, so the speedup is free of
+    // numeric drift), plus the conductance-quantized i8 lane on the same
+    // shapes; the autotuned tile geometry those numbers were taken under
+    // is recorded alongside them
+    {
+        let best = simd::active();
+        let (row_block, tile_cols) = simd::tile_info();
+        bench::row(&["dispatch",
+                     &format!("active {best}, available {:?}, tile {row_block}x{tile_cols}",
+                              simd::available().iter().map(|b| b.name())
+                                  .collect::<Vec<_>>())]);
+        json.push(("simd_row_block", row_block as f64));
+        json.push(("simd_tile_cols", tile_cols as f64));
+        const SHAPES: &[(usize, &str, &str, &str, &str)] = &[
+            (32, "1x1", "simd_1x1_ns", "simd_speedup_1x1", "quant_1x1_ns"),
+            (40, "2x2r", "simd_2x2r_ns", "simd_speedup_2x2r", "quant_2x2r_ns"),
+            (64, "2x2", "simd_2x2_ns", "simd_speedup_2x2", "quant_2x2_ns"),
+            (96, "3x3", "simd_3x3_ns", "simd_speedup_3x3", "quant_3x3_ns"),
+        ];
+        for &(dim, label, key_simd, key_speedup, key_quant) in SHAPES {
+            let wmat = Mat::from_fn(dim, dim, |_, _| 0.5 * rng.gaussian_f32());
+            let m = map_layer(&wmat);
+            let a: Vec<f32> = (0..B * dim).map(|_| rng.gaussian_f32()).collect();
+            let mut c = vec![0.0f32; B * dim];
+            let rs = bench::bench(&format!("{label} ({dim}x{dim}) scalar GEMM (B={B})"),
+                                  200, || {
+                tensor::matmul_into_with(KernelBackend::Scalar, &a, wmat.as_slice(),
+                                         &mut c, B, dim, dim);
+                std::hint::black_box(&c);
+            });
+            bench::report(&rs);
+            let rv = bench::bench(&format!("{label} ({dim}x{dim}) {best} GEMM (B={B})"),
+                                  200, || {
+                tensor::matmul_into_with(best, &a, wmat.as_slice(), &mut c,
+                                         B, dim, dim);
+                std::hint::black_box(&c);
+            });
+            bench::report(&rv);
+            let speedup = rs.mean_ns() / rv.mean_ns();
+            json.push((key_simd, rv.mean_ns() / B as f64));
+            json.push((key_speedup, speedup));
+            // i8 quant lane: full quantize -> accumulate -> dequantize cost
+            let qb = QuantBank::from_conductances(&m.g_target);
+            let mut qo = vec![0.0f32; B * dim];
+            let rq = bench::bench(&format!("{label} ({dim}x{dim}) quant i8 (B={B})"),
+                                  200, || {
+                qb.forward_batch(&a, &mut qo, B, m.gain, best);
+                std::hint::black_box(&qo);
+            });
+            bench::report(&rq);
+            json.push((key_quant, rq.mean_ns() / B as f64));
+            println!("  => {label}: {best}/scalar {speedup:.2}x, \
+                      quant/{best} {:.2}x", rv.mean_ns() / rq.mean_ns());
+        }
     }
 
     match Meta::load_default().and_then(|meta| {

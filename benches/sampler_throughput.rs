@@ -13,7 +13,10 @@
 //! cost on the compute hot path, enabled vs disabled (`obs_*` keys,
 //! budgeted at < 3% in `rust/src/obs/`) — and (h) the analog health
 //! monitor's serving-path cost, ticking vs absent (`health_*` keys,
-//! sharing the same < 3% budget).  The results land in
+//! sharing the same < 3% budget) — and (i) the conductance-quantized i8
+//! kernel lane on the same batched digital scenario (`quant_samples_per_s`,
+//! the end-to-end serving throughput of a `kernel = quant` deployment).
+//! The results land in
 //! `BENCH_sampler_throughput.json` so the perf trajectory is tracked
 //! across PRs.
 
@@ -99,6 +102,24 @@ fn main() -> anyhow::Result<()> {
     let digital_speedup = digital_batched / digital_scalar;
     let label = format!("rust digital batched ({steps} steps, B={B})");
     let val = format!("{digital_batched:.0} samples/s  ({digital_speedup:.2}x)");
+    bench::row(&[label.as_str(), val.as_str()]);
+
+    // conductance-quantized i8 lane on the same batched scenario — the
+    // end-to-end throughput a `kernel = quant` deployment serves at
+    let mut qdig = DigitalScoreNet::new(w.clone())
+        .with_exec(memdiff::exec::Ctx::serial());
+    qdig.set_kernel(memdiff::util::KernelMode::Quant);
+    let qsampler = DigitalSampler::new(&qdig, SamplerMode::Sde)
+        .with_schedule(meta.sched)
+        .with_exec(memdiff::exec::Ctx::serial());
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps_batched {
+        std::hint::black_box(qsampler.sample_batched(B, &[], steps, &mut rng));
+    }
+    let quant_sps = (reps_batched * B) as f64 / t0.elapsed().as_secs_f64();
+    let label = format!("rust digital quant i8 ({steps} steps, B={B})");
+    let val = format!("{quant_sps:.0} samples/s  ({:.2}x vs f32 batched)",
+                      quant_sps / digital_batched);
     bench::row(&[label.as_str(), val.as_str()]);
 
     // graceful: a failure here must not abort the bench (the JSON artifact
@@ -505,6 +526,8 @@ fn main() -> anyhow::Result<()> {
         ("digital_scalar_samples_per_s", digital_scalar),
         ("digital_batched_samples_per_s", digital_batched),
         ("digital_batched_speedup", digital_speedup),
+        ("quant_samples_per_s", quant_sps),
+        ("quant_vs_f32_speedup", quant_sps / digital_batched),
         ("analog_scalar_samples_per_s", analog_scalar),
         ("analog_batched_samples_per_s", analog_batched),
         ("analog_batched_speedup", analog_batched / analog_scalar),

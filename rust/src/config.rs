@@ -11,6 +11,8 @@
 //! queue_depth = 512  # per-lane queue bound in samples (0 = unbounded)
 //! threads = 0        # intra-op pool threads (0 = auto / RUST_PALLAS_THREADS)
 //! par = auto         # serial | banks | lanes | auto
+//! kernel = f32       # f32 | quant — MVM kernel lane for every backend
+//!                    # (per-backend <backend>_kernel keys in [deploy] override)
 //!
 //! [solver]
 //! substeps = 2000
@@ -23,6 +25,7 @@
 //! rust_workers = 2
 //! analog_queue = 128   # per-backend lane bound in samples (0 = queue_depth)
 //! rust_weights = w.json  # per-backend weight path (default: standard artifacts)
+//! analog_kernel = quant  # per-backend MVM kernel lane ([service] kernel default)
 //!
 //! [jobs]
 //! max_retries = 4        # retry budget per job (runs at most budget+1 times)
@@ -143,6 +146,9 @@ pub struct Config {
     pub threads: usize,
     /// Bank-parallel strategy for the crossbar/net forward paths.
     pub par: crate::exec::ParStrategy,
+    /// MVM kernel lane every backend defaults to (`f32` | `quant`);
+    /// per-backend `<backend>_kernel` keys in `[deploy]` override it.
+    pub kernel: crate::util::KernelMode,
     pub substeps: usize,
     pub guidance: f32,
     pub seed: u64,
@@ -213,6 +219,7 @@ impl Default for Config {
             queue_depth: 512,
             threads: 0,
             par: crate::exec::ParStrategy::Auto,
+            kernel: crate::util::KernelMode::F32,
             substeps: 2000,
             guidance: 2.0,
             seed: 7,
@@ -242,12 +249,26 @@ impl Config {
                     .parse()
                     .map_err(|e| anyhow!("[service] par = {s:?}: {e}"))?,
             },
+            kernel: match raw.get("service", "kernel") {
+                None => d.kernel,
+                Some(s) => s
+                    .parse()
+                    .map_err(|e| anyhow!("[service] kernel = {s:?}: {e}"))?,
+            },
             substeps: raw.get_parsed("solver", "substeps")?.unwrap_or(d.substeps),
             guidance: raw.get_parsed("solver", "guidance")?.unwrap_or(d.guidance),
             seed: raw.get_parsed("solver", "seed")?.unwrap_or(d.seed),
             artifacts_dir: raw.get("paths", "artifacts").map(String::from),
             deploy: {
                 let mut plan = d.deploy;
+                // [service] kernel seeds every backend's lane; per-backend
+                // <backend>_kernel keys below override it
+                if let Some(s) = raw.get("service", "kernel") {
+                    let k = s
+                        .parse()
+                        .map_err(|e| anyhow!("[service] kernel = {s:?}: {e}"))?;
+                    plan.set_base_kernel(k);
+                }
                 for (k, v) in raw.section_entries("deploy") {
                     plan.set(k, v)?;
                 }
@@ -408,6 +429,35 @@ mod tests {
         assert!(Config::from_raw(&bad).is_err());
         let junk = RawConfig::parse("[deploy]\nteleport = analog\n").unwrap();
         assert!(Config::from_raw(&junk).is_err());
+    }
+
+    #[test]
+    fn kernel_knob_parses_and_seeds_deploy_plan() {
+        use crate::coordinator::deploy::BackendKind;
+        use crate::util::KernelMode;
+        // absent = f32 everywhere
+        let plain = Config::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(plain.kernel, KernelMode::F32);
+        for kind in BackendKind::ALL {
+            assert_eq!(plain.deploy.kernel_for(kind), KernelMode::F32);
+        }
+        // [service] kernel seeds every backend; [deploy] overrides per backend
+        let raw = RawConfig::parse(
+            "[service]\nkernel = quant\n[deploy]\nrust_kernel = f32\n",
+        )
+        .unwrap();
+        let cfg = Config::from_raw(&raw).unwrap();
+        assert_eq!(cfg.kernel, KernelMode::Quant);
+        assert_eq!(cfg.deploy.kernel_for(BackendKind::Analog), KernelMode::Quant);
+        assert_eq!(cfg.deploy.kernel_for(BackendKind::Rust), KernelMode::F32);
+        assert_eq!(cfg.deploy.kernel_for(BackendKind::Hlo), KernelMode::Quant);
+        // i8 is an accepted spelling of the quant lane
+        let i8_raw = RawConfig::parse("[service]\nkernel = i8\n").unwrap();
+        assert_eq!(Config::from_raw(&i8_raw).unwrap().kernel, KernelMode::Quant);
+        let bad = RawConfig::parse("[service]\nkernel = f16\n").unwrap();
+        assert!(Config::from_raw(&bad).is_err());
+        let bad_dep = RawConfig::parse("[deploy]\nanalog_kernel = f64\n").unwrap();
+        assert!(Config::from_raw(&bad_dep).is_err());
     }
 
     #[test]

@@ -33,6 +33,7 @@ use anyhow::anyhow;
 
 use super::request::{RequestClass, SolverFamily};
 use super::service::{Engine, Service, ServiceConfig};
+use crate::util::KernelMode;
 use crate::vae::PixelDecoder;
 
 /// The engine implementations a deployment table can name.
@@ -123,6 +124,11 @@ pub struct DeployPlan {
     /// wide high-accuracy net and a narrow low-latency net can sit
     /// behind different backends of one deployment.
     weights: [Option<String>; 3],
+    /// MVM kernel lane per backend (`<backend>_kernel` keys), indexed by
+    /// [`BackendKind::index`].  Seeded by `[service] kernel`, so one
+    /// deployment can serve the f32 and conductance-quantized lanes side
+    /// by side (e.g. `analog_kernel = quant` with `rust` on f32).
+    kernel: [KernelMode; 3],
 }
 
 impl Default for DeployPlan {
@@ -139,6 +145,7 @@ impl Default for DeployPlan {
             workers: [0; 3],
             queue: [0; 3],
             weights: [None, None, None],
+            kernel: [KernelMode::F32; 3],
         }
     }
 }
@@ -163,6 +170,18 @@ impl DeployPlan {
         self.weights[kind.index()].as_deref()
     }
 
+    /// Configured MVM kernel lane for a backend.
+    pub fn kernel_for(&self, kind: BackendKind) -> KernelMode {
+        self.kernel[kind.index()]
+    }
+
+    /// Seed every backend's kernel lane (the `[service] kernel` default;
+    /// applied before the `[deploy]` section so `<backend>_kernel` keys
+    /// override it).
+    pub fn set_base_kernel(&mut self, kernel: KernelMode) {
+        self.kernel = [kernel; 3];
+    }
+
     /// Apply one `key = value` entry.  Keys:
     ///
     /// * `analog` / `digital` — backend for the whole solver family;
@@ -173,7 +192,9 @@ impl DeployPlan {
     /// * `<backend>_queue` — per-backend lane queue bound in samples
     ///   (0 = the service-wide `[service] queue_depth`);
     /// * `<backend>_weights` — per-backend score-weight path (for `hlo`,
-    ///   an artifacts directory), overriding the factory default.
+    ///   an artifacts directory), overriding the factory default;
+    /// * `<backend>_kernel` — per-backend MVM kernel lane (`f32` |
+    ///   `quant`), overriding the `[service] kernel` default.
     ///
     /// Family compatibility is validated here, at assignment time: an
     /// analog class can only run on the analog engine, a digital class on
@@ -212,6 +233,17 @@ impl DeployPlan {
             self.weights[kind.index()] = Some(path.to_string());
             return Ok(());
         }
+        if let Some(backend) = key.strip_suffix("_kernel") {
+            let kind: BackendKind = backend
+                .parse()
+                .map_err(|e| anyhow!("[deploy] {key}: {e}"))?;
+            let mode: KernelMode = value
+                .trim()
+                .parse()
+                .map_err(|e| anyhow!("[deploy] {key} = {value:?}: {e}"))?;
+            self.kernel[kind.index()] = mode;
+            return Ok(());
+        }
         let kind: BackendKind = value
             .parse()
             .map_err(|e| anyhow!("[deploy] {key} = {value:?}: {e}"))?;
@@ -233,7 +265,7 @@ impl DeployPlan {
                     return Err(anyhow!(
                         "[deploy] unknown key {key:?} (expected analog, digital, \
                          a class name like digital_cond, or <backend>_workers / \
-                         <backend>_queue / <backend>_weights)"
+                         <backend>_queue / <backend>_weights / <backend>_kernel)"
                     ))
                 }
             },
@@ -571,6 +603,12 @@ mod tests {
         assert_eq!(plan.weights_for(BackendKind::Rust),
                    Some("custom/weights_narrow.json"));
         assert_eq!(plan.weights_for(BackendKind::Analog), None);
+        plan.set("analog_kernel", "quant").unwrap();
+        assert_eq!(plan.kernel_for(BackendKind::Analog), KernelMode::Quant);
+        assert_eq!(plan.kernel_for(BackendKind::Rust), KernelMode::F32,
+                   "others untouched");
+        plan.set("analog_kernel", "f32").unwrap();
+        assert_eq!(plan.kernel_for(BackendKind::Analog), KernelMode::F32);
         // family mismatches rejected at assignment time
         assert!(plan.set("analog", "rust").is_err());
         assert!(plan.set("digital", "analog").is_err());
@@ -582,6 +620,20 @@ mod tests {
         assert!(plan.set("gpu_queue", "8").is_err());
         assert!(plan.set("rust_queue", "deep").is_err());
         assert!(plan.set("analog_weights", "  ").is_err());
+        assert!(plan.set("analog_kernel", "f16").is_err());
+        assert!(plan.set("gpu_kernel", "quant").is_err());
+    }
+
+    #[test]
+    fn base_kernel_seeds_then_per_backend_overrides() {
+        let mut plan = DeployPlan::default();
+        plan.set_base_kernel(KernelMode::Quant);
+        for kind in BackendKind::ALL {
+            assert_eq!(plan.kernel_for(kind), KernelMode::Quant);
+        }
+        plan.apply_overrides("rust_kernel=f32").unwrap();
+        assert_eq!(plan.kernel_for(BackendKind::Rust), KernelMode::F32);
+        assert_eq!(plan.kernel_for(BackendKind::Analog), KernelMode::Quant);
     }
 
     #[test]

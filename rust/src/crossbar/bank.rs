@@ -71,7 +71,9 @@ use super::G_FIXED_MS;
 use crate::device::array::{DriftStats, Macro, ProgramStats, MACRO_DIM};
 use crate::device::cell::{Cell, CellParams};
 use crate::exec::{self, lane_chunk_lens, lane_plan, ParStrategy, Shards};
+use crate::util::qkernel::{self, QuantBank};
 use crate::util::rng::Rng;
+use crate::util::simd::{self, KernelMode};
 use crate::util::tensor::{matmul_block_accum, Mat};
 
 /// Write-verify pulse budget per cell (same as the monolithic layer).
@@ -180,6 +182,10 @@ struct Bank {
     /// Drift baseline: the conductances at the last (re)program.  The
     /// health monitor's estimator compares the live tile against this.
     g_target: Mat,
+    /// Conductance-quantized (i8) view of this tile, present only under
+    /// [`KernelMode::Quant`]; rebuilt with `g_local` so it can never go
+    /// stale across aging / reprogramming.
+    q_local: Option<QuantBank>,
     /// Programming summary (reads are tracked separately, lock-free).
     stat: BankStat,
 }
@@ -211,6 +217,9 @@ pub struct BankedCrossbarLayer {
     reads: Vec<AtomicU64>,
     /// Parallel-execution context (strategy + pool handle).
     exec: exec::Ctx,
+    /// MVM kernel lane (`F32` GEMM or conductance-quantized i8); the i8
+    /// lane serves `Ideal` sweeps only and falls back to f32 otherwise.
+    kernel: KernelMode,
 }
 
 /// Per-call execution plan for one forward sweep.
@@ -285,6 +294,7 @@ impl BankedCrossbarLayer {
                     col0: c0,
                     g_local: Mat::zeros(br, bc),
                     g_target,
+                    q_local: None,
                     stat,
                 });
                 streams.push(stream);
@@ -303,6 +313,7 @@ impl BankedCrossbarLayer {
             streams: streams.into_iter().map(Mutex::new).collect(),
             reads: (0..n_banks).map(|_| AtomicU64::new(0)).collect(),
             exec: exec::Ctx::default(),
+            kernel: KernelMode::F32,
         };
         layer.refresh_cache();
         (layer, agg)
@@ -343,6 +354,7 @@ impl BankedCrossbarLayer {
                     col0: c0,
                     g_local: Mat::zeros(br, bc),
                     g_target,
+                    q_local: None,
                     stat: BankStat {
                         tile_row: ti,
                         tile_col: tj,
@@ -368,6 +380,7 @@ impl BankedCrossbarLayer {
             streams: streams.into_iter().map(Mutex::new).collect(),
             reads: (0..n_banks).map(|_| AtomicU64::new(0)).collect(),
             exec: exec::Ctx::default(),
+            kernel: KernelMode::F32,
         };
         layer.refresh_cache();
         layer
@@ -378,6 +391,26 @@ impl BankedCrossbarLayer {
     /// outputs — only wall time changes.
     pub fn set_exec(&mut self, exec: exec::Ctx) {
         self.exec = exec;
+    }
+
+    /// Select the MVM kernel lane.  [`KernelMode::Quant`] builds every
+    /// bank's i8 conductance view immediately (and keeps it fresh through
+    /// [`Self::refresh_cache`]); [`KernelMode::F32`] drops the views.
+    pub fn set_kernel(&mut self, kernel: KernelMode) {
+        self.kernel = kernel;
+        for bank in &mut self.banks {
+            bank.q_local = match kernel {
+                KernelMode::Quant => {
+                    Some(QuantBank::from_conductances(&bank.g_local))
+                }
+                KernelMode::F32 => None,
+            };
+        }
+    }
+
+    /// Active MVM kernel lane.
+    pub fn kernel(&self) -> KernelMode {
+        self.kernel
     }
 
     pub fn shape(&self) -> (usize, usize) {
@@ -403,7 +436,9 @@ impl BankedCrossbarLayer {
         &self.col_gains
     }
 
-    /// Rebuild the per-bank and flattened conductance caches.
+    /// Rebuild the per-bank and flattened conductance caches (and, under
+    /// [`KernelMode::Quant`], each bank's i8 view — the quantized lane can
+    /// never serve stale conductances after aging or reprogramming).
     pub fn refresh_cache(&mut self) {
         for bank in &mut self.banks {
             let (br, bc) = (bank.tile.rows(), bank.tile.cols());
@@ -413,6 +448,9 @@ impl BankedCrossbarLayer {
                     bank.g_local.set(r, c, gv);
                     self.g_cache.set(bank.row0 + r, bank.col0 + c, gv);
                 }
+            }
+            if self.kernel == KernelMode::Quant {
+                bank.q_local = Some(QuantBank::from_conductances(&bank.g_local));
             }
         }
     }
@@ -445,6 +483,18 @@ impl BankedCrossbarLayer {
                          noise: NoiseModel, _rng: &mut Rng) {
         assert_eq!(v_in.len(), batch * self.rows);
         assert_eq!(out.len(), batch * self.cols);
+        // conductance-quantized lane: DAC-quantized inputs against the
+        // per-bank i8 level views, i32 partial sums folded across the tile
+        // column (integer adds — exact, so order and chunking can never
+        // change a bit), TIA epilogue folded into the dequant.  Noisy
+        // modes need per-cell float conductances and stay on f32.
+        if noise == NoiseModel::Ideal && self.kernel == KernelMode::Quant {
+            self.forward_quant_batch(v_in, out, batch);
+            for ctr in &self.reads {
+                ctr.fetch_add(batch as u64, Ordering::Relaxed);
+            }
+            return;
+        }
         out.fill(0.0);
         match self.plan(batch, noise) {
             Plan::Serial => {
@@ -475,6 +525,62 @@ impl BankedCrossbarLayer {
                 for o in chunk.iter_mut() {
                     *o = gain * (*o - neg);
                 }
+            }
+        }
+    }
+
+    /// Quantized `Ideal` sweep: lane-chunk parallel when the exec context
+    /// allows (integer accumulation is exact, so any chunking is bitwise
+    /// identical to serial), serial otherwise.
+    fn forward_quant_batch(&self, v_in: &[f32], out: &mut [f32], batch: usize) {
+        let nt = self.exec.lane_tasks(batch, batch * self.rows * self.cols);
+        if nt > 1 {
+            let (chunk, nt) = lane_plan(batch, nt);
+            let lens = lane_chunk_lens(batch, self.cols, chunk, nt);
+            let shards = Shards::new(out, lens);
+            self.exec.run(nt, &|i| {
+                let oc = shards.take(i);
+                let lanes = oc.len() / self.cols;
+                let lane0 = i * chunk;
+                let vin = &v_in[lane0 * self.rows..(lane0 + lanes) * self.rows];
+                self.quant_lanes(vin, oc, lanes);
+            });
+        } else {
+            self.quant_lanes(v_in, out, batch);
+        }
+    }
+
+    /// Quantized sweep over `lanes` contiguous lanes: quantize each input
+    /// row to DAC codes **once**, fold every bank of a tile column into a
+    /// shared i32 accumulator (ascending tile-row order — irrelevant for
+    /// exactness, kept for symmetry with the f32 path), then dequantize
+    /// with that tile column's TIA gain.  The shared-negative-weight term
+    /// rides the dequant epilogue via the lane's total code sum.
+    fn quant_lanes(&self, v_in: &[f32], out: &mut [f32], lanes: usize) {
+        let backend = simd::active();
+        let mut q = vec![0i8; self.rows];
+        let mut acc = [0i32; MACRO_DIM];
+        debug_assert_eq!(v_in.len(), lanes * self.rows);
+        for (vrow, orow) in v_in
+            .chunks_exact(self.rows)
+            .zip(out.chunks_exact_mut(self.cols))
+        {
+            let sumq = qkernel::quantize_inputs(vrow, &mut q);
+            for tj in 0..self.tile_cols {
+                let bc = self.col_width(tj);
+                let c0 = tj * MACRO_DIM;
+                acc[..bc].fill(0);
+                for ti in 0..self.tile_rows {
+                    let bank = &self.banks[ti * self.tile_cols + tj];
+                    let qb = bank
+                        .q_local
+                        .as_ref()
+                        .expect("quant kernel selected without i8 cache");
+                    qb.accum(&q[bank.row0..bank.row0 + qb.k()], &mut acc[..bc],
+                             backend);
+                }
+                qkernel::dequant_into(&acc[..bc], sumq, self.col_gains[tj],
+                                      &mut orow[c0..c0 + bc]);
             }
         }
     }
@@ -813,6 +919,23 @@ impl ScoreLayer {
         match self {
             ScoreLayer::Mono(l) => l.set_exec(exec),
             ScoreLayer::Banked(l) => l.set_exec(exec),
+        }
+    }
+
+    /// Select the MVM kernel lane on either substrate (the i8 lane serves
+    /// `Ideal` sweeps; noisy modes fall back to f32 transparently).
+    pub fn set_kernel(&mut self, kernel: KernelMode) {
+        match self {
+            ScoreLayer::Mono(l) => l.set_kernel(kernel),
+            ScoreLayer::Banked(l) => l.set_kernel(kernel),
+        }
+    }
+
+    /// Active MVM kernel lane.
+    pub fn kernel(&self) -> KernelMode {
+        match self {
+            ScoreLayer::Mono(l) => l.kernel(),
+            ScoreLayer::Banked(l) => l.kernel(),
         }
     }
 
@@ -1235,5 +1358,155 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn banked_quant_matches_monolithic_quant_bitwise() {
+        // integer partial sums fold across tile rows exactly, so the
+        // banked i8 lane must reproduce the monolithic i8 lane bit for
+        // bit on every grid shape — including ragged edges
+        for (rows, cols) in [(8, 8), (16, 70), (70, 16), (40, 70), (96, 96)] {
+            let w = test_weights(rows, cols, 61 + rows as u64);
+            let m = mapper::map_layer(&w);
+            let mut mono =
+                CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet());
+            mono.set_kernel(KernelMode::Quant);
+            let mut banked = BankedCrossbarLayer::from_conductances(
+                &m.g_target, m.gain, quiet(), 11,
+            );
+            banked.set_kernel(KernelMode::Quant);
+            let batch = 5;
+            let mut rng = Rng::new(62);
+            let vb: Vec<f32> =
+                (0..batch * rows).map(|i| (i as f32 * 0.23).sin()).collect();
+            let mut a = vec![0.0f32; batch * cols];
+            let mut b = vec![0.0f32; batch * cols];
+            mono.forward_batch(&vb, &mut a, batch, NoiseModel::Ideal, &mut rng);
+            banked.forward_batch(&vb, &mut b, batch, NoiseModel::Ideal,
+                                 &mut rng);
+            assert_eq!(a, b, "{rows}x{cols} quant banked vs mono");
+        }
+    }
+
+    #[test]
+    fn banked_quant_is_plan_invariant_and_noisy_modes_fall_back() {
+        use crate::exec::{Ctx, Pool};
+        use std::sync::Arc;
+        let w = test_weights(40, 70, 63);
+        let m = mapper::map_layer(&w);
+        let pool = Arc::new(Pool::new(3));
+        let build = |ctx: Ctx| {
+            let mut l = BankedCrossbarLayer::from_conductances(
+                &m.g_target, m.gain, quiet(), 31,
+            );
+            l.set_kernel(KernelMode::Quant);
+            l.set_exec(ctx);
+            l
+        };
+        let batch = 7;
+        let vb: Vec<f32> =
+            (0..batch * 40).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut rng = Rng::new(64);
+        let mut want = vec![0.0f32; batch * 70];
+        build(Ctx::serial()).forward_batch(&vb, &mut want, batch,
+                                           NoiseModel::Ideal, &mut rng);
+        for strategy in [ParStrategy::Lanes, ParStrategy::Banks, ParStrategy::Auto]
+        {
+            let layer = build(Ctx::with_pool(strategy, pool.clone()));
+            let mut got = vec![0.0f32; batch * 70];
+            layer.forward_batch(&vb, &mut got, batch, NoiseModel::Ideal,
+                                &mut rng);
+            assert_eq!(got, want, "quant lane under {strategy:?}");
+        }
+        // noisy modes ignore the i8 lane: quiet ReadPerCell is the f32
+        // device walk, bitwise equal to the f32 Ideal path, not the
+        // quantized one
+        let layer = build(Ctx::serial());
+        let mut f32_ideal = vec![0.0f32; batch * 70];
+        let f32_layer = BankedCrossbarLayer::from_conductances(
+            &m.g_target, m.gain, quiet(), 31,
+        );
+        f32_layer.forward_batch(&vb, &mut f32_ideal, batch, NoiseModel::Ideal,
+                                &mut rng);
+        let mut walk = vec![0.0f32; batch * 70];
+        layer.forward_batch(&vb, &mut walk, batch, NoiseModel::ReadPerCell,
+                            &mut rng);
+        assert_eq!(walk, f32_ideal, "noisy fallback must stay on f32");
+    }
+
+    #[test]
+    fn banked_quant_error_respects_per_column_gains() {
+        // two tile columns at very different weight scales: the i8 lane
+        // dequantizes each through its own TIA gain, so the error in the
+        // small-scale block must track the *small* gain.  Bound: per
+        // output element, input DAC rounding contributes
+        // gain·(IN_SCALE/2)·Σ_r|g−G_FIXED| and conductance re-snap (tol
+        // < half a level step, so codes round back to their targets)
+        // contributes gain·tol·Σ_r|v̂|.
+        let tol = 0.0005f32;
+        assert!(tol < qkernel::level_step_ms() / 2.0);
+        let mut rng = Rng::new(65);
+        let w = Mat::from_fn(8, 40, |_, c| {
+            let scale: f32 = if c < 32 { 0.05 } else { 2.0 };
+            scale * rng.gaussian_f32()
+        });
+        let (mut layer, _) =
+            BankedCrossbarLayer::program(&w, quiet(), tol, &mut rng);
+        let batch = 4;
+        let vb: Vec<f32> =
+            (0..batch * 8).map(|i| 0.25 + 0.05 * (i % 13) as f32).collect();
+        let mut f32_out = vec![0.0f32; batch * 40];
+        layer.forward_batch(&vb, &mut f32_out, batch, NoiseModel::Ideal,
+                            &mut rng);
+        layer.set_kernel(KernelMode::Quant);
+        let mut q_out = vec![0.0f32; batch * 40];
+        layer.forward_batch(&vb, &mut q_out, batch, NoiseModel::Ideal, &mut rng);
+        let mut q = vec![0i8; 8];
+        for b in 0..batch {
+            let vrow = &vb[b * 8..(b + 1) * 8];
+            qkernel::quantize_inputs(vrow, &mut q);
+            let vhat_abs: f32 =
+                q.iter().map(|&c| (qkernel::IN_SCALE * c as f32).abs()).sum();
+            for c in 0..40 {
+                let gain = layer.col_gains()[c / MACRO_DIM];
+                let g_abs: f32 = (0..8)
+                    .map(|r| (layer.g_cache.get(r, c) - G_FIXED_MS).abs())
+                    .sum();
+                let bound = gain
+                    * ((qkernel::IN_SCALE / 2.0) * g_abs + tol * vhat_abs)
+                    * 1.05
+                    + 1e-5;
+                let err = (q_out[b * 40 + c] - f32_out[b * 40 + c]).abs();
+                assert!(err <= bound,
+                        "lane {b} col {c}: err {err} > bound {bound}");
+            }
+        }
+        // per-column gains really differ, so the bound above is two-scale
+        assert!(layer.col_gains()[0] < 0.2 * layer.col_gains()[1]);
+    }
+
+    #[test]
+    fn banked_quant_cache_follows_age_and_reprogram() {
+        let w = test_weights(40, 40, 67);
+        let mut rng = Rng::new(68);
+        let (mut layer, _) =
+            BankedCrossbarLayer::program(&w, quiet(), 0.0005, &mut rng);
+        layer.set_kernel(KernelMode::Quant);
+        let v: Vec<f32> = (0..40).map(|i| 0.4 + 0.01 * i as f32).collect();
+        let mut fresh = vec![0.0f32; 40];
+        layer.forward(&v, &mut fresh, NoiseModel::Ideal, &mut rng);
+        layer.age(1e12);
+        let mut aged = vec![0.0f32; 40];
+        layer.forward(&v, &mut aged, NoiseModel::Ideal, &mut rng);
+        assert_ne!(fresh, aged, "i8 views must track drifted conductances");
+        layer.reprogram(0.0005);
+        let mut back = vec![0.0f32; 40];
+        layer.forward(&v, &mut back, NoiseModel::Ideal, &mut rng);
+        let worst = fresh
+            .iter()
+            .zip(&back)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(worst < 0.2, "reprogram must pull the i8 lane back: {worst}");
     }
 }

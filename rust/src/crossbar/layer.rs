@@ -41,7 +41,9 @@ use super::G_FIXED_MS;
 use crate::device::array::{DriftStats, Macro, ProgramStats, MACRO_DIM};
 use crate::device::cell::{CellParams, G_HI_MS, G_LO_MS};
 use crate::exec::{self, lane_chunk_lens, lane_plan, Shards};
+use crate::util::qkernel::{self, QuantBank};
 use crate::util::rng::Rng;
+use crate::util::simd::{self, KernelMode};
 use crate::util::tensor::{matmul_into, Mat};
 
 /// A weight matrix deployed on macro tiles.
@@ -71,6 +73,13 @@ pub struct CrossbarLayer {
     /// Parallel-execution context: the noise-free batched GEMM lane-chunks
     /// over the pool (the "too small to bank" scaling axis).
     exec: exec::Ctx,
+    /// Numeric lane: f32 (default) or the conductance-quantized i8 path.
+    /// Quant applies only under `NoiseModel::Ideal` — the noise models are
+    /// conductance-domain f32 and keep their own paths.
+    kernel: KernelMode,
+    /// Level-index cache for the quant lane, rebuilt with `g_cache` on
+    /// every `refresh_cache`.  `Some` iff `kernel == Quant`.
+    q_cache: Option<QuantBank>,
 }
 
 impl CrossbarLayer {
@@ -114,6 +123,8 @@ impl CrossbarLayer {
             read_noise_frac,
             reads: AtomicU64::new(0),
             exec: exec::Ctx::default(),
+            kernel: KernelMode::F32,
+            q_cache: None,
         };
         layer.refresh_cache();
         layer.g_target = layer.g_cache.clone();
@@ -161,6 +172,8 @@ impl CrossbarLayer {
             read_noise_frac,
             reads: AtomicU64::new(0),
             exec: exec::Ctx::default(),
+            kernel: KernelMode::F32,
+            q_cache: None,
         };
         layer.refresh_cache();
         layer.g_target = layer.g_cache.clone();
@@ -171,6 +184,21 @@ impl CrossbarLayer {
     /// bit (only the noise-free batched GEMM forks, over lane chunks).
     pub fn set_exec(&mut self, exec: exec::Ctx) {
         self.exec = exec;
+    }
+
+    /// Select the numeric lane ([`KernelMode::Quant`] builds the level
+    /// cache immediately; switching back to f32 drops it).  Quant only
+    /// changes `Ideal`-mode evaluation.
+    pub fn set_kernel(&mut self, kernel: KernelMode) {
+        self.kernel = kernel;
+        self.q_cache = match kernel {
+            KernelMode::Quant => Some(QuantBank::from_conductances(&self.g_cache)),
+            KernelMode::F32 => None,
+        };
+    }
+
+    pub fn kernel(&self) -> KernelMode {
+        self.kernel
     }
 
     pub fn shape(&self) -> (usize, usize) {
@@ -195,7 +223,9 @@ impl CrossbarLayer {
         self.reads.load(Ordering::Relaxed)
     }
 
-    /// Rebuild the flattened conductance cache from the tiles.
+    /// Rebuild the flattened conductance cache from the tiles (and the
+    /// quant-lane level cache when that lane is active — aging and
+    /// reprogramming route here, so the i8 view can never go stale).
     pub fn refresh_cache(&mut self) {
         for ti in 0..self.tile_rows {
             for tj in 0..self.tile_cols {
@@ -207,6 +237,9 @@ impl CrossbarLayer {
                     }
                 }
             }
+        }
+        if self.kernel == KernelMode::Quant {
+            self.q_cache = Some(QuantBank::from_conductances(&self.g_cache));
         }
     }
 
@@ -255,6 +288,14 @@ impl CrossbarLayer {
         assert_eq!(v_in.len(), batch * self.rows);
         assert_eq!(out.len(), batch * self.cols);
         self.reads.fetch_add(batch as u64, Ordering::Relaxed);
+        if matches!(noise, NoiseModel::Ideal) && self.kernel == KernelMode::Quant {
+            if let Some(qb) = &self.q_cache {
+                // the differential epilogue is folded into the dequant, so
+                // the quant lane returns fully-formed outputs
+                self.forward_quant_batch(qb, v_in, out, batch);
+                return;
+            }
+        }
         match noise {
             // exact device path, tile-major: every cell is read once per
             // call and the draw serves all lanes (the B-lane burst is
@@ -282,6 +323,32 @@ impl CrossbarLayer {
             for o in orow.iter_mut() {
                 *o = self.gain * (*o - neg);
             }
+        }
+    }
+
+    /// Conductance-quantized batched forward: per lane, quantize the
+    /// inputs to DAC codes, run the i8×i8→i32 dot products against the
+    /// level cache, and dequantize with the TIA gain.  Integer
+    /// accumulation makes the result bitwise invariant to both the kernel
+    /// backend and the lane-chunk plan, so the same deterministic
+    /// fork-join as the f32 GEMM applies without further ceremony.
+    fn forward_quant_batch(&self, qb: &QuantBank, v_in: &[f32], out: &mut [f32],
+                           batch: usize) {
+        let _t = crate::obs::phase(crate::obs::Phase::Gemm);
+        let (k, n) = (self.rows, self.cols);
+        let gain = self.gain;
+        let nt = self.exec.lane_tasks(batch, batch * k * n);
+        if nt > 1 {
+            let (chunk, nt) = lane_plan(batch, nt);
+            let shards = Shards::new(out, lane_chunk_lens(batch, n, chunk, nt));
+            self.exec.run(nt, &|i| {
+                let oc = shards.take(i);
+                let lanes = oc.len() / n;
+                let a = &v_in[i * chunk * k..(i * chunk + lanes) * k];
+                quant_lanes(qb, a, oc, lanes, gain);
+            });
+        } else {
+            quant_lanes(qb, v_in, out, batch, gain);
         }
     }
 
@@ -498,6 +565,24 @@ impl CrossbarLayer {
         self.refresh_cache();
         self.g_target = self.g_cache.clone();
         agg
+    }
+}
+
+/// Run the quant lane over `lanes` contiguous input/output rows.  Small
+/// per-task scratch (one i8 row + one i32 accumulator) — amortized over
+/// every lane of the chunk.
+fn quant_lanes(qb: &QuantBank, v_in: &[f32], out: &mut [f32], lanes: usize, gain: f32) {
+    let backend = simd::active();
+    let (k, n) = (qb.k(), qb.n());
+    debug_assert_eq!(v_in.len(), lanes * k);
+    debug_assert_eq!(out.len(), lanes * n);
+    let mut q = vec![0i8; k];
+    let mut acc = vec![0i32; n];
+    for (vrow, orow) in v_in.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        let sumq = qkernel::quantize_inputs(vrow, &mut q);
+        acc.iter_mut().for_each(|a| *a = 0);
+        qb.accum(&q, &mut acc, backend);
+        qkernel::dequant_into(&acc, sumq, gain, orow);
     }
 }
 
@@ -762,5 +847,86 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn quant_lane_error_is_bounded_by_input_lsb() {
+        // level-snapped targets ⇒ zero weight-quantization error, so the
+        // only quant-vs-f32 deviation is the input DAC rounding, which has
+        // the exact per-column bound  gain · (LSB/2) · Σ_r |g_rc − G_FIXED|
+        let w = test_weights(14, 14, 51);
+        let m = super::super::mapper::map_layer(&w);
+        let f32_layer =
+            CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet_params());
+        let mut q_layer =
+            CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet_params());
+        q_layer.set_kernel(KernelMode::Quant);
+        assert_eq!(q_layer.kernel(), KernelMode::Quant);
+        let batch = 6;
+        let mut rng = Rng::new(52);
+        let v: Vec<f32> = (0..batch * 14).map(|_| rng.gaussian_f32()).collect();
+        let mut want = vec![0.0f32; batch * 14];
+        f32_layer.forward_batch(&v, &mut want, batch, NoiseModel::Ideal, &mut rng);
+        let mut got = vec![0.0f32; batch * 14];
+        q_layer.forward_batch(&v, &mut got, batch, NoiseModel::Ideal, &mut rng);
+        let half_lsb = 0.5 * qkernel::IN_SCALE;
+        for c in 0..14 {
+            let bound: f32 = m.gain
+                * half_lsb
+                * (0..14).map(|r| (m.g_target.get(r, c) - G_FIXED_MS).abs()).sum::<f32>();
+            for b in 0..batch {
+                let (g, w) = (got[b * 14 + c], want[b * 14 + c]);
+                assert!((g - w).abs() <= bound * 1.05 + 1e-4,
+                        "lane {b} col {c}: {g} vs {w} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_lane_is_bitwise_chunk_invariant() {
+        use crate::exec::{Ctx, ParStrategy, Pool};
+        use std::sync::Arc;
+        let w = test_weights(14, 14, 53);
+        let m = super::super::mapper::map_layer(&w);
+        let mut serial =
+            CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet_params());
+        serial.set_kernel(KernelMode::Quant);
+        serial.set_exec(Ctx::serial());
+        let mut par =
+            CrossbarLayer::from_conductances(&m.g_target, m.gain, quiet_params());
+        par.set_kernel(KernelMode::Quant);
+        par.set_exec(Ctx::with_pool(ParStrategy::Lanes, Arc::new(Pool::new(4))));
+        let mut rng = Rng::new(54);
+        for batch in [2usize, 4, 7] {
+            let v: Vec<f32> = (0..batch * 14).map(|_| rng.gaussian_f32()).collect();
+            let mut a = vec![0.0f32; batch * 14];
+            let mut b = vec![0.0f32; batch * 14];
+            serial.forward_batch(&v, &mut a, batch, NoiseModel::Ideal, &mut rng);
+            par.forward_batch(&v, &mut b, batch, NoiseModel::Ideal, &mut rng);
+            assert_eq!(a, b, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn quant_cache_follows_age_and_reprogram() {
+        // after aging, the quant lane must see the drifted conductances
+        // (refresh_cache rebuilds the level cache), not the programmed ones
+        let w = test_weights(10, 8, 55);
+        let mut rng = Rng::new(56);
+        let (mut layer, _) = CrossbarLayer::program(&w, quiet_params(), 0.0005, &mut rng);
+        layer.set_kernel(KernelMode::Quant);
+        let v: Vec<f32> = (0..10).map(|i| 0.2 * (i as f32 - 5.0) / 5.0 + 0.1).collect();
+        let mut fresh = vec![0.0f32; 8];
+        layer.forward_batch(&v, &mut fresh, 1, NoiseModel::Ideal, &mut rng);
+        layer.age(1e12, &mut rng);
+        let mut aged = vec![0.0f32; 8];
+        layer.forward_batch(&v, &mut aged, 1, NoiseModel::Ideal, &mut rng);
+        assert_ne!(fresh, aged, "year-scale drift must move quant outputs");
+        layer.reprogram(0.0005, &mut rng);
+        let mut healed = vec![0.0f32; 8];
+        layer.forward_batch(&v, &mut healed, 1, NoiseModel::Ideal, &mut rng);
+        let worst = fresh.iter().zip(&healed).map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(worst < 0.2, "reprogram must pull quant outputs back: {worst}");
     }
 }

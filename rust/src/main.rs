@@ -27,6 +27,7 @@ use memdiff::data::{sample_circle, Meta};
 use memdiff::device::cell::CellParams;
 use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
 use memdiff::runtime::ArtifactStore;
+use memdiff::util::KernelMode;
 use memdiff::util::rng::Rng;
 use memdiff::util::stats;
 use memdiff::vae::{DecoderWeights, PixelDecoder};
@@ -70,7 +71,7 @@ fn usage() -> ! {
          \x20                  [--n 500] [--steps 130] [--engine analog|rust|hlo] [--decode]\n\
          \x20 memdiff serve    [--requests 64] [--workers 4] [--threads N]\n\
          \x20                  [--deploy analog=analog,digital=rust|hlo,rust_workers=N,\n\
-         \x20                   rust_queue=N,rust_weights=PATH,...]\n\
+         \x20                   rust_queue=N,rust_weights=PATH,analog_kernel=f32|quant,...]\n\
          \x20                  [--listen 127.0.0.1:7979] [--queue-depth N] [--max-conns N]\n\
          \x20                  [--state-dir DIR] [--substeps N] [--synthetic]\n\
          \x20                  [--metrics-listen 127.0.0.1:9198]\n\
@@ -124,7 +125,8 @@ fn load_weights(task: &TaskKind, path: Option<&str>, synthetic: bool)
 }
 
 fn build_engine(engine: &str, task: &TaskKind, cfg: &Config,
-                weights_path: Option<&str>, synthetic: bool)
+                weights_path: Option<&str>, synthetic: bool,
+                kernel: KernelMode)
                 -> anyhow::Result<Arc<dyn Engine>> {
     let sched = if synthetic {
         Meta::load_default().map(|m| m.sched).unwrap_or_default()
@@ -132,22 +134,29 @@ fn build_engine(engine: &str, task: &TaskKind, cfg: &Config,
         Meta::load_default()?.sched
     };
     // bank-parallel strategy from config; the pool itself is sized by the
-    // Service at startup (workers vs. intra-op threads)
+    // Service at startup (workers vs. intra-op threads).  The kernel lane
+    // (f32 vs conductance-quantized i8) is per backend, from the deploy
+    // plan; the hlo engine runs fixed AOT artifacts and ignores it.
     let exec = memdiff::exec::Ctx::new(cfg.par);
     Ok(match engine {
         "analog" => {
             let w = load_weights(task, weights_path, synthetic)?;
-            let net = AnalogScoreNet::from_conductances(
+            let mut net = AnalogScoreNet::from_conductances(
                 &w, CellParams::default(), NoiseModel::ReadFast)
                 .with_exec(exec);
+            net.set_kernel(kernel);
+            if kernel == KernelMode::Quant {
+                // the i8 lane serves Ideal sweeps only; a quant deployment
+                // is the deterministic serving mode, not the noisy one
+                net.set_noise_model(NoiseModel::Ideal);
+            }
             Arc::new(AnalogEngine::new(net, sched, cfg.substeps))
         }
         "rust" => {
             let w = load_weights(task, weights_path, synthetic)?;
-            Arc::new(RustDigitalEngine {
-                net: DigitalScoreNet::new(w).with_exec(exec),
-                sched,
-            })
+            let mut net = DigitalScoreNet::new(w).with_exec(exec);
+            net.set_kernel(kernel);
+            Arc::new(RustDigitalEngine { net, sched })
         }
         "hlo" => {
             // a weights override names an artifacts directory here
@@ -178,7 +187,7 @@ fn cmd_generate(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()
     let decode = kv.contains_key("decode");
 
     let engine = build_engine(engine_name, &task, cfg, None,
-                              kv.contains_key("synthetic"))?;
+                              kv.contains_key("synthetic"), cfg.kernel)?;
     let decoder = if decode {
         Some(Arc::new(PixelDecoder::new(DecoderWeights::load(
             Meta::artifacts_dir().join("vae_decoder.json"))?)))
@@ -271,7 +280,8 @@ fn cmd_serve(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> {
     // one engine per backend the plan names; the conditional weights serve
     // both classes of a family (zero one-hot = unconditional)
     let mut factory = |kind: BackendKind, weights: Option<&str>| {
-        build_engine(kind.name(), &TaskKind::Letter(0), &cfg, weights, synthetic)
+        build_engine(kind.name(), &TaskKind::Letter(0), &cfg, weights, synthetic,
+                     plan.kernel_for(kind))
     };
     let service =
         deploy::start_deployed(&plan, &mut factory, decoder, svc_cfg)?;

@@ -17,12 +17,29 @@ use super::loader::ScoreWeights;
 use super::{BatchScratch, ScoreNet};
 use crate::analog::activation::relu_diode;
 use crate::clamp_voltage;
-use crate::crossbar::{BankReport, Banking, LayerDrift, NoiseModel, ScoreLayer};
+use crate::crossbar::{mapper, BankReport, Banking, LayerDrift, NoiseModel, ScoreLayer};
 use crate::device::array::ProgramStats;
 use crate::device::cell::CellParams;
 use crate::exec::{self, lane_chunk_lens, lane_plan, Shards};
+use crate::util::qkernel::QuantBank;
 use crate::util::rng::Rng;
+use crate::util::simd::{self, KernelMode};
 use crate::util::tensor::{matmul_bias_into, scratch_slice, vecmat_bias_into, Mat};
+
+/// One weight matrix of the digital net in conductance-quantized form:
+/// the mapper's 64-level conductance image plus its TIA gain — the same
+/// discretization the analog substrate realizes physically.
+struct QuantLinear {
+    qb: QuantBank,
+    gain: f32,
+}
+
+impl QuantLinear {
+    fn from_weights(w: &Mat) -> Self {
+        let m = mapper::map_layer(w);
+        QuantLinear { qb: QuantBank::from_conductances(&m.g_target), gain: m.gain }
+    }
+}
 
 /// Exact f32 weight-space network — the paper's software baseline and the
 /// semantics the AOT artifacts implement.
@@ -32,12 +49,15 @@ pub struct DigitalScoreNet {
     /// Parallel-execution context: the batched lane chunks lanes over the
     /// pool (the scaling axis for nets too small to bank).
     exec: exec::Ctx,
+    /// Conductance-quantized views of the three weight matrices, present
+    /// only under [`KernelMode::Quant`].
+    q: Option<Box<[QuantLinear; 3]>>,
 }
 
 impl DigitalScoreNet {
     pub fn new(w: ScoreWeights) -> Self {
         let emb = Embedding::new(w.emb_w.clone(), w.cond_proj.clone());
-        DigitalScoreNet { w, emb, exec: exec::Ctx::default() }
+        DigitalScoreNet { w, emb, exec: exec::Ctx::default(), q: None }
     }
 
     pub fn weights(&self) -> &ScoreWeights {
@@ -54,6 +74,58 @@ impl DigitalScoreNet {
         self.set_exec(exec);
         self
     }
+
+    /// Select the MVM kernel lane.  [`KernelMode::Quant`] routes both eval
+    /// lanes through i8 kernels against the mapper's 64-level conductance
+    /// image of each weight matrix — the digital twin of the analog quant
+    /// lane, which is what makes digital-vs-analog quant comparisons
+    /// apples to apples.
+    pub fn set_kernel(&mut self, kernel: KernelMode) {
+        self.q = match kernel {
+            KernelMode::Quant => Some(Box::new([
+                QuantLinear::from_weights(&self.w.w1),
+                QuantLinear::from_weights(&self.w.w2),
+                QuantLinear::from_weights(&self.w.w3),
+            ])),
+            KernelMode::F32 => None,
+        };
+    }
+
+    /// Active MVM kernel lane.
+    pub fn kernel(&self) -> KernelMode {
+        if self.q.is_some() { KernelMode::Quant } else { KernelMode::F32 }
+    }
+
+    /// Shared quantized forward over `lanes` contiguous lanes (both eval
+    /// lanes route here under [`KernelMode::Quant`], so they agree bit for
+    /// bit): i8 MVM per layer, bias + embedding + ReLU + clamp epilogues
+    /// identical to the f32 path.  Serial — the i8 lane is already far
+    /// below the f32 GEMM cost at the paper's net widths.
+    fn quant_eval(&self, ql: &[QuantLinear; 3], xc: &[f32], emb: &[f32],
+                  h1: &mut [f32], h2: &mut [f32], out: &mut [f32],
+                  lanes: usize) {
+        let h = self.w.hidden();
+        let d = self.w.dim();
+        let backend = simd::active();
+        ql[0].qb.forward_batch(xc, h1, lanes, ql[0].gain, backend);
+        for row in h1.chunks_exact_mut(h) {
+            for (v, (&b, &e)) in row.iter_mut().zip(self.w.b1.iter().zip(emb)) {
+                *v = clamp_voltage((*v + b + e).max(0.0));
+            }
+        }
+        ql[1].qb.forward_batch(h1, h2, lanes, ql[1].gain, backend);
+        for row in h2.chunks_exact_mut(h) {
+            for (v, (&b, &e)) in row.iter_mut().zip(self.w.b2.iter().zip(emb)) {
+                *v = clamp_voltage((*v + b + e).max(0.0));
+            }
+        }
+        ql[2].qb.forward_batch(h2, out, lanes, ql[2].gain, backend);
+        for row in out.chunks_exact_mut(d) {
+            for (o, &b) in row.iter_mut().zip(self.w.b3.iter()) {
+                *o += b;
+            }
+        }
+    }
 }
 
 impl ScoreNet for DigitalScoreNet {
@@ -69,6 +141,15 @@ impl ScoreNet for DigitalScoreNet {
         let h = self.w.hidden();
         let d = self.w.dim();
         debug_assert_eq!(x.len(), d);
+        if let Some(ql) = &self.q {
+            let mut emb = vec![0.0f32; h];
+            self.emb.eval(t, onehot, &mut emb);
+            let xc: Vec<f32> = x.iter().map(|&v| clamp_voltage(v)).collect();
+            let mut h1 = vec![0.0f32; h];
+            let mut h2 = vec![0.0f32; h];
+            self.quant_eval(ql, &xc, &emb, &mut h1, &mut h2, out, 1);
+            return;
+        }
         // hot path: stack scratch (no per-eval heap traffic) whenever the
         // network fits the macro width — true for every paper net
         if h <= MAX_HIDDEN && d <= MAX_HIDDEN {
@@ -126,6 +207,17 @@ impl ScoreNet for DigitalScoreNet {
 
         let emb = scratch_slice(&mut scratch.emb, h);
         self.emb.eval(t, onehot, emb);
+
+        if let Some(ql) = &self.q {
+            let xc = scratch_slice(&mut scratch.x, batch * d);
+            for (o, &v) in xc.iter_mut().zip(xs) {
+                *o = clamp_voltage(v);
+            }
+            let h1 = scratch_slice(&mut scratch.h1, batch * h);
+            let h2 = scratch_slice(&mut scratch.h2, batch * h);
+            self.quant_eval(ql, xc, emb, h1, h2, out, batch);
+            return;
+        }
 
         let nt = self
             .exec
@@ -318,6 +410,21 @@ impl AnalogScoreNet {
     pub fn with_exec(mut self, exec: exec::Ctx) -> Self {
         self.set_exec(exec);
         self
+    }
+
+    /// Select the MVM kernel lane on all three crossbar layers.  The i8
+    /// lane serves `Ideal` sweeps only — noisy modes need per-cell float
+    /// conductances and fall back to f32 transparently — and each layer's
+    /// i8 view tracks aging / reprogramming through its conductance cache.
+    pub fn set_kernel(&mut self, kernel: KernelMode) {
+        self.l1.set_kernel(kernel);
+        self.l2.set_kernel(kernel);
+        self.l3.set_kernel(kernel);
+    }
+
+    /// Active MVM kernel lane.
+    pub fn kernel(&self) -> KernelMode {
+        self.l1.kernel()
     }
 
     /// Total programmed cells across the three layers (energy model input).
@@ -764,6 +871,107 @@ mod tests {
         assert_eq!(ps.pulses.len() + ps.failures, net.n_cells());
         assert!(ps.max_error_ms() > 0.0, "write noise leaves residuals");
         assert!(net.drift_report().iter().all(|l| l.drift.sum_abs_ms == 0.0));
+    }
+
+    #[test]
+    fn digital_quant_scalar_matches_batched_bitwise() {
+        let mut net = DigitalScoreNet::new(weights());
+        net.set_kernel(KernelMode::Quant);
+        assert_eq!(net.kernel(), KernelMode::Quant);
+        let mut rng = Rng::new(41);
+        let batch = 6;
+        let xs: Vec<f32> = (0..batch * 2).map(|i| 0.13 * i as f32 - 0.7).collect();
+        let oh = [0.0, 1.0, 0.0];
+        let mut scratch = BatchScratch::new();
+        let mut batched = vec![0.0f32; batch * 2];
+        net.eval_batch(&xs, 0.4, &oh, &mut batched, &mut scratch, &mut rng);
+        let mut scalar = [0.0f32; 2];
+        for b in 0..batch {
+            net.eval(&xs[b * 2..(b + 1) * 2], 0.4, &oh, &mut scalar, &mut rng);
+            assert_eq!(&batched[b * 2..(b + 1) * 2], scalar.as_slice(),
+                       "lane {b}");
+        }
+        // switching back restores the exact f32 lane
+        net.set_kernel(KernelMode::F32);
+        assert_eq!(net.kernel(), KernelMode::F32);
+        let f32_net = DigitalScoreNet::new(weights());
+        let mut a = [0.0f32; 2];
+        let mut b = [0.0f32; 2];
+        net.eval(&xs[..2], 0.4, &oh, &mut a, &mut rng);
+        f32_net.eval(&xs[..2], 0.4, &oh, &mut b, &mut rng);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn digital_quant_tracks_f32_reference() {
+        // the i8 lane sees mapper-quantized weights and DAC-quantized
+        // inputs — a coarse but faithful image of the f32 reference
+        let f32_net = DigitalScoreNet::new(weights());
+        let mut q_net = DigitalScoreNet::new(weights());
+        q_net.set_kernel(KernelMode::Quant);
+        let mut rng = Rng::new(42);
+        let mut fo = [0.0f32; 2];
+        let mut qo = [0.0f32; 2];
+        for i in 0..20 {
+            let x = [0.1 * i as f32 - 1.0, 0.06 * i as f32 - 0.4];
+            let t = i as f32 / 20.0;
+            f32_net.eval(&x, t, &[0.0, 0.0, 0.0], &mut fo, &mut rng);
+            q_net.eval(&x, t, &[0.0, 0.0, 0.0], &mut qo, &mut rng);
+            for k in 0..2 {
+                assert!((fo[k] - qo[k]).abs() < 0.15,
+                        "i={i} k={k}: {} vs {}", fo[k], qo[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn analog_quant_banked_matches_mono_bitwise() {
+        // net-level twin of the layer parity: integer partial sums make
+        // the banked i8 lane bitwise equal to the monolithic i8 oracle
+        let w = ScoreWeights::synthetic(2, 48, 3, 35);
+        let mut banked =
+            AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal);
+        banked.set_kernel(KernelMode::Quant);
+        assert_eq!(banked.kernel(), KernelMode::Quant);
+        let mut mono = AnalogScoreNet::from_conductances_with(
+            &w, quiet(), NoiseModel::Ideal, Banking::ForceMonolithic);
+        mono.set_kernel(KernelMode::Quant);
+        let mut rng = Rng::new(36);
+        let batch = 5;
+        let xs: Vec<f32> =
+            (0..batch * 2).map(|i| 0.17 * i as f32 - 0.5).collect();
+        let mut sa = BatchScratch::new();
+        let mut sb = BatchScratch::new();
+        let mut a = vec![0.0f32; batch * 2];
+        let mut b = vec![0.0f32; batch * 2];
+        banked.eval_batch(&xs, 0.3, &[0.0, 0.0, 0.0], &mut a, &mut sa, &mut rng);
+        mono.eval_batch(&xs, 0.3, &[0.0, 0.0, 0.0], &mut b, &mut sb, &mut rng);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn analog_quant_stays_close_to_f32_ideal() {
+        // tiny_json conductances sit exactly on the 64-level grid, so the
+        // only quant-lane delta is input DAC rounding
+        let w = weights();
+        let f32_net =
+            AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal);
+        let mut q_net =
+            AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal);
+        q_net.set_kernel(KernelMode::Quant);
+        let mut rng = Rng::new(37);
+        let mut fo = [0.0f32; 2];
+        let mut qo = [0.0f32; 2];
+        for i in 0..20 {
+            let x = [0.1 * i as f32 - 1.0, 0.05 * i as f32];
+            let t = i as f32 / 20.0;
+            f32_net.eval(&x, t, &[0.0, 0.0, 0.0], &mut fo, &mut rng);
+            q_net.eval(&x, t, &[0.0, 0.0, 0.0], &mut qo, &mut rng);
+            for k in 0..2 {
+                assert!((fo[k] - qo[k]).abs() < 0.1,
+                        "i={i} k={k}: {} vs {}", fo[k], qo[k]);
+            }
+        }
     }
 
     #[test]

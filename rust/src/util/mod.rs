@@ -9,9 +9,12 @@
 pub mod bench;
 pub mod json;
 pub mod ptest;
+pub mod qkernel;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod tensor;
 
 pub use rng::Rng;
+pub use simd::{KernelBackend, KernelMode};
 pub use tensor::Mat;

@@ -1,0 +1,347 @@
+//! Conductance-quantized i8 MVM lane.
+//!
+//! The 180 nm macro never computes in f32: cells hold one of
+//! [`N_LEVELS`](crate::crossbar::N_LEVELS) discrete conductance states and
+//! the DAC drives quantized read voltages.  This lane makes the simulator
+//! compute the same way — and gets ~4× more weights per cache line plus
+//! i8×i8→i32 SIMD dot products in the bargain:
+//!
+//! * **Weights** are stored as their conductance *level index*
+//!   (`level = round((g − G_LO)/step)` ∈ `0..64`, one byte per cell),
+//!   transposed per tile so each output column's dot product is a
+//!   contiguous byte run.
+//! * **Inputs** are quantized symmetrically to DAC bit-width over the
+//!   voltage clamp window: `q = round(v / IN_SCALE)` with
+//!   `IN_SCALE = V_CLAMP_HI / 127`, so the full clamp range
+//!   `[-2, 4]` maps into i8 without saturation.
+//! * **Accumulation** is exact integer math, so the quant lane is bitwise
+//!   deterministic across every [`KernelBackend`] by construction; all the
+//!   quantization error is introduced at the two `round` sites above.
+//!
+//! Reconstruction folds the differential-pair epilogue into the dequant:
+//! the f32 path computes `gain·(Σ v·g − G_FIXED·Σ v)` per column, which
+//! under quantization becomes
+//!
+//! ```text
+//! out[c] = gain · IN_SCALE · (step · acc[c] + (G_LO − G_FIXED) · Σ q)
+//! acc[c] = Σ_r q[r] · level[r][c]        (i32)
+//! ```
+//!
+//! — the per-tile-column TIA `gain` is exactly the one the f32 path uses,
+//! so the quant lane rides the existing gain machinery unchanged.
+
+use super::simd::KernelBackend;
+use super::tensor::Mat;
+use crate::crossbar::{G_CELL_HI_MS, G_CELL_LO_MS, G_FIXED_MS, N_LEVELS};
+
+/// Input LSB: the DAC window's largest magnitude over the i8 range.
+/// `V_CLAMP_HI = 4.0` dominates `|V_CLAMP_LO| = 2.0`, so `4/127` covers the
+/// whole clamp window with `q ∈ [-64, 127]`.
+pub const IN_SCALE: f32 = crate::V_CLAMP_HI / 127.0;
+
+/// Conductance LSB of the macro's 64 linear states (mS).
+#[inline]
+pub fn level_step_ms() -> f32 {
+    (G_CELL_HI_MS - G_CELL_LO_MS) / (N_LEVELS - 1) as f32
+}
+
+/// Quantize one input row to DAC codes, returning `Σ q` (needed by the
+/// dequant epilogue for both the `G_LO` level offset and the differential
+/// `G_FIXED` column).  Values are clamped defensively — serving inputs are
+/// already voltage-clamped upstream.
+#[inline]
+pub fn quantize_inputs(v: &[f32], q: &mut [i8]) -> i32 {
+    debug_assert_eq!(v.len(), q.len());
+    let inv = 1.0 / IN_SCALE;
+    let mut sum = 0i32;
+    for (qv, &x) in q.iter_mut().zip(v) {
+        let t = (x * inv).round().clamp(-128.0, 127.0) as i32;
+        *qv = t as i8;
+        sum += t;
+    }
+    sum
+}
+
+/// Dequantized differential readout: writes
+/// `out[c] = gain · IN_SCALE · (step·acc[c] + (G_LO − G_FIXED)·sumq)`.
+#[inline]
+pub fn dequant_into(acc: &[i32], sumq: i32, gain: f32, out: &mut [f32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    let step = level_step_ms();
+    let base = (G_CELL_LO_MS - G_FIXED_MS) * sumq as f32;
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = gain * (IN_SCALE * (step * a as f32 + base));
+    }
+}
+
+/// A conductance block captured as level indices, transposed for
+/// contiguous per-column dot products.  Built once at program time (and on
+/// every `refresh_cache` after aging/reprogramming) from the same
+/// conductance cache the f32 path reads.
+#[derive(Clone)]
+pub struct QuantBank {
+    k: usize,
+    n: usize,
+    /// n×k: `levels_t[c*k + r]` = level index of cell (r, c), 0..=63.
+    levels_t: Vec<u8>,
+}
+
+impl QuantBank {
+    /// `g`: k×n conductances in mS.  Programmed targets are already
+    /// level-snapped by the mapper; off-level values (drifted or
+    /// write-verified-within-tolerance cells) round to the nearest level.
+    pub fn from_conductances(g: &Mat) -> Self {
+        let (k, n) = g.shape();
+        let inv = 1.0 / level_step_ms();
+        let max_level = (N_LEVELS - 1) as f32;
+        let mut levels_t = vec![0u8; n * k];
+        for r in 0..k {
+            let row = g.row(r);
+            for (c, &gv) in row.iter().enumerate() {
+                levels_t[c * k + r] =
+                    ((gv - G_CELL_LO_MS) * inv).round().clamp(0.0, max_level) as u8;
+            }
+        }
+        QuantBank { k, n, levels_t }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Bytes held by the level store (bench/report accounting).
+    pub fn bytes(&self) -> usize {
+        self.levels_t.len()
+    }
+
+    /// `acc[c] += Σ_r q[r] · level[r][c]` — integer-exact on every backend,
+    /// so dispatch here is purely a speed choice.
+    pub fn accum(&self, q: &[i8], acc: &mut [i32], backend: KernelBackend) {
+        assert_eq!(q.len(), self.k, "input length vs bank rows");
+        assert_eq!(acc.len(), self.n, "acc length vs bank cols");
+        match backend {
+            KernelBackend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    unsafe { accum_avx2(&self.levels_t, q, acc, self.k) };
+                    return;
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                accum_scalar(&self.levels_t, q, acc, self.k)
+            }
+            KernelBackend::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    unsafe { accum_neon(&self.levels_t, q, acc, self.k) };
+                    return;
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                accum_scalar(&self.levels_t, q, acc, self.k)
+            }
+            KernelBackend::Scalar => accum_scalar(&self.levels_t, q, acc, self.k),
+        }
+    }
+
+    /// One full quantized forward for a batch against this block: quantize
+    /// each lane, integer-accumulate, dequantize with a uniform `gain`.
+    /// Convenience for the monolithic layer and the digital quant net; the
+    /// banked layer drives [`accum`](Self::accum) directly so one input
+    /// quantization is shared across every bank of a lane.
+    pub fn forward_batch(&self, v_in: &[f32], out: &mut [f32], batch: usize,
+                         gain: f32, backend: KernelBackend) {
+        debug_assert_eq!(v_in.len(), batch * self.k);
+        debug_assert_eq!(out.len(), batch * self.n);
+        let mut q = vec![0i8; self.k];
+        let mut acc = vec![0i32; self.n];
+        for (vrow, orow) in v_in.chunks_exact(self.k).zip(out.chunks_exact_mut(self.n)) {
+            let sumq = quantize_inputs(vrow, &mut q);
+            acc.iter_mut().for_each(|a| *a = 0);
+            self.accum(&q, &mut acc, backend);
+            dequant_into(&acc, sumq, gain, orow);
+        }
+    }
+}
+
+fn accum_scalar(levels_t: &[u8], q: &[i8], acc: &mut [i32], k: usize) {
+    for (av, col) in acc.iter_mut().zip(levels_t.chunks_exact(k)) {
+        let mut s = 0i32;
+        for (&lv, &qv) in col.iter().zip(q) {
+            s += (lv as i32) * (qv as i32);
+        }
+        *av += s;
+    }
+}
+
+/// # Safety
+/// AVX2 must be available; `levels_t.len() == acc.len()·k`, `q.len() == k`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn accum_avx2(levels_t: &[u8], q: &[i8], acc: &mut [i32], k: usize) {
+    use std::arch::x86_64::*;
+    let kv = k / 32 * 32;
+    let ones = _mm256_set1_epi16(1);
+    let qp = q.as_ptr();
+    for (c, av) in acc.iter_mut().enumerate() {
+        let col = levels_t.as_ptr().add(c * k);
+        let mut accv = _mm256_setzero_si256();
+        let mut l = 0usize;
+        while l < kv {
+            let lv = _mm256_loadu_si256(col.add(l) as *const __m256i);
+            let qv = _mm256_loadu_si256(qp.add(l) as *const __m256i);
+            // u8×i8 pairwise → i16: |pair sum| ≤ 2·63·128 = 16128 < i16::MAX,
+            // so the saturating maddubs can never actually saturate here
+            let prod = _mm256_maddubs_epi16(lv, qv);
+            accv = _mm256_add_epi32(accv, _mm256_madd_epi16(prod, ones));
+            l += 32;
+        }
+        let hi = _mm256_extracti128_si256::<1>(accv);
+        let lo = _mm256_castsi256_si128(accv);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_srli_si128::<8>(s));
+        let s = _mm_add_epi32(s, _mm_srli_si128::<4>(s));
+        let mut sum = _mm_cvtsi128_si32(s);
+        while l < k {
+            sum += (*col.add(l) as i32) * (*qp.add(l) as i32);
+            l += 1;
+        }
+        *av += sum;
+    }
+}
+
+/// # Safety
+/// `levels_t.len() == acc.len()·k`, `q.len() == k`.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn accum_neon(levels_t: &[u8], q: &[i8], acc: &mut [i32], k: usize) {
+    use std::arch::aarch64::*;
+    let kv = k / 8 * 8;
+    let qp = q.as_ptr();
+    for (c, av) in acc.iter_mut().enumerate() {
+        let col = levels_t.as_ptr().add(c * k);
+        let mut accv = vdupq_n_s32(0);
+        let mut l = 0usize;
+        while l < kv {
+            // u8 levels ≤ 63 widen losslessly into i16
+            let lv = vreinterpretq_s16_u16(vmovl_u8(vld1_u8(col.add(l))));
+            let qv = vmovl_s8(vld1_s8(qp.add(l)));
+            accv = vmlal_s16(accv, vget_low_s16(lv), vget_low_s16(qv));
+            accv = vmlal_s16(accv, vget_high_s16(lv), vget_high_s16(qv));
+            l += 8;
+        }
+        let mut sum = vaddvq_s32(accv);
+        while l < k {
+            sum += (*col.add(l) as i32) * (*qp.add(l) as i32);
+            l += 1;
+        }
+        *av += sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::mapper;
+    use crate::util::simd;
+
+    fn level_grid(k: usize, n: usize, seed: usize) -> Mat {
+        // conductances exactly on levels, spread over the whole window
+        let step = level_step_ms();
+        Mat::from_fn(k, n, |r, c| {
+            let lv = (r * 31 + c * 7 + seed) % N_LEVELS;
+            G_CELL_LO_MS + step * lv as f32
+        })
+    }
+
+    #[test]
+    fn input_quantization_error_is_half_lsb() {
+        let v: Vec<f32> = (0..64)
+            .map(|i| crate::V_CLAMP_LO + (crate::V_CLAMP_HI - crate::V_CLAMP_LO) * i as f32 / 63.0)
+            .collect();
+        let mut q = vec![0i8; v.len()];
+        let sumq = quantize_inputs(&v, &mut q);
+        assert_eq!(sumq, q.iter().map(|&x| x as i32).sum::<i32>());
+        for (&x, &qq) in v.iter().zip(&q) {
+            assert!((x - qq as f32 * IN_SCALE).abs() <= 0.5 * IN_SCALE + 1e-6,
+                    "{x} vs code {qq}");
+        }
+    }
+
+    #[test]
+    fn scalar_accum_matches_naive() {
+        let (k, n) = (37usize, 9);
+        let g = level_grid(k, n, 3);
+        let bank = QuantBank::from_conductances(&g);
+        let q: Vec<i8> = (0..k).map(|i| ((i * 23 % 191) as i32 - 64) as i8).collect();
+        let mut acc = vec![1i32; n]; // nonzero start: accum must add, not overwrite
+        bank.accum(&q, &mut acc, KernelBackend::Scalar);
+        for (c, &got) in acc.iter().enumerate() {
+            let step = level_step_ms();
+            let want: i32 = (0..k)
+                .map(|r| {
+                    let lv = ((g.get(r, c) - G_CELL_LO_MS) / step).round() as i32;
+                    lv * q[r] as i32
+                })
+                .sum();
+            assert_eq!(got, want + 1, "col {c}");
+        }
+    }
+
+    #[test]
+    fn every_backend_is_integer_identical() {
+        // ragged k exercises every SIMD tail
+        for k in [1usize, 7, 8, 31, 32, 33, 64, 97] {
+            let n = 5usize;
+            let g = level_grid(k, n, k);
+            let bank = QuantBank::from_conductances(&g);
+            let q: Vec<i8> = (0..k).map(|i| ((i * 41 % 255) as i32 - 128) as i8).collect();
+            let mut want = vec![0i32; n];
+            bank.accum(&q, &mut want, KernelBackend::Scalar);
+            for b in simd::available() {
+                let mut got = vec![0i32; n];
+                bank.accum(&q, &mut got, b);
+                assert_eq!(got, want, "backend {b} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_matches_f32_epilogue_on_exact_codes() {
+        // inputs exactly on DAC codes + conductances exactly on levels:
+        // the quant lane must agree with the f32 differential readout to
+        // float rounding
+        let (k, n) = (16usize, 6);
+        let g = level_grid(k, n, 1);
+        let bank = QuantBank::from_conductances(&g);
+        let v: Vec<f32> = (0..k).map(|i| (i as i32 - 8) as f32 * IN_SCALE).collect();
+        let gain = 3.7f32;
+        let mut out = vec![0.0f32; n];
+        bank.forward_batch(&v, &mut out, 1, gain, KernelBackend::Scalar);
+        for c in 0..n {
+            let o: f32 = (0..k).map(|r| v[r] * g.get(r, c)).sum();
+            let neg: f32 = G_FIXED_MS * v.iter().sum::<f32>();
+            let want = gain * (o - neg);
+            assert!((out[c] - want).abs() <= 1e-4 * want.abs().max(1.0),
+                    "col {c}: {} vs {want}", out[c]);
+        }
+    }
+
+    #[test]
+    fn mapper_targets_roundtrip_to_levels() {
+        // the mapper's quantized targets must hit level indices exactly
+        let w = Mat::from_fn(12, 10, |r, c| ((r * 10 + c) as f32 * 0.37).sin() * 0.04);
+        let m = mapper::map_layer(&w);
+        let bank = QuantBank::from_conductances(&m.g_target);
+        let step = level_step_ms();
+        for r in 0..12 {
+            for c in 0..10 {
+                let lv = bank.levels_t[c * bank.k + r] as f32;
+                let back = G_CELL_LO_MS + step * lv;
+                assert!((back - m.g_target.get(r, c)).abs() < 1e-6);
+            }
+        }
+    }
+}

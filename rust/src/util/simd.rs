@@ -1,0 +1,704 @@
+//! Runtime kernel dispatch for the MVM hot path.
+//!
+//! Every sampler substep funnels through the GEMM kernels in
+//! [`super::tensor`]; this module picks *which* implementation runs them:
+//!
+//! | backend  | arch      | selected when                                   |
+//! |----------|-----------|-------------------------------------------------|
+//! | `scalar` | any       | always available (the parity oracle)            |
+//! | `avx2`   | `x86_64`  | `is_x86_feature_detected!("avx2")` + `"fma"`    |
+//! | `neon`   | `aarch64` | always (NEON is baseline on aarch64)            |
+//!
+//! Detection runs once and is cached; the result can be forced with
+//! `RUST_PALLAS_KERNEL=scalar|avx2|neon` (an unavailable forced backend
+//! silently falls back to the best detected one, so a config written on an
+//! x86 box still boots on ARM).  Tests and benches can also flip the
+//! process-global backend with [`set_active`] or bypass the global entirely
+//! through the `*_with` entry points in [`super::tensor`].
+//!
+//! ## Bitwise contract
+//!
+//! The f32 kernels here are **order-preserving**: they vectorize over the
+//! output-column axis with separate multiply and add instructions (never a
+//! fused `fmadd`), walk the shared-`k` axis in the same ascending order as
+//! the scalar kernels, and apply the identical zero-skip conditions — so
+//! every output element sees the exact float-op sequence of the scalar
+//! path and `scalar`/`avx2`/`neon` are bitwise interchangeable on all
+//! `Ideal`-mode parity suites.  The one exception is the transposed-B
+//! dot-product kernel (`matmul_tb_into`), which reduces over `k` with FMA
+//! accumulators + a horizontal sum: faster, but a different accumulation
+//! order, and therefore only used where callers compare with a tolerance
+//! (no serving forward path goes through it).
+//!
+//! The column-strip width the SIMD kernels block over is autotuned once at
+//! first use (candidates timed on a representative shape, cached, exposed
+//! via [`tile_info`] and overridable with `RUST_PALLAS_KERNEL_TILE`); the
+//! strip width cannot change any output bit — per-element accumulation
+//! order is strip-invariant — so autotune results may differ across hosts
+//! without breaking determinism.
+
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Env var forcing the process-global kernel backend.
+pub const KERNEL_ENV: &str = "RUST_PALLAS_KERNEL";
+/// Env var forcing the SIMD column-strip width (skips autotune).
+pub const KERNEL_TILE_ENV: &str = "RUST_PALLAS_KERNEL_TILE";
+
+/// Which microkernel implementation services the f32/quant MVM entry points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelBackend {
+    /// Portable 4-row-blocked kernels — always available, the parity oracle.
+    Scalar,
+    /// 8-wide AVX2 (x86_64; FMA used only on the tolerance-tested tb path).
+    Avx2,
+    /// 4-wide NEON (aarch64).
+    Neon,
+}
+
+impl KernelBackend {
+    pub const ALL: [KernelBackend; 3] =
+        [KernelBackend::Scalar, KernelBackend::Avx2, KernelBackend::Neon];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Avx2 => "avx2",
+            KernelBackend::Neon => "neon",
+        }
+    }
+
+    /// Can this backend actually run on the current host?
+    pub fn is_available(self) -> bool {
+        match self {
+            KernelBackend::Scalar => true,
+            KernelBackend::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            KernelBackend::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    fn from_u8(v: u8) -> KernelBackend {
+        match v {
+            1 => KernelBackend::Avx2,
+            2 => KernelBackend::Neon,
+            _ => KernelBackend::Scalar,
+        }
+    }
+}
+
+impl FromStr for KernelBackend {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(KernelBackend::Scalar),
+            "avx2" => Ok(KernelBackend::Avx2),
+            "neon" => Ok(KernelBackend::Neon),
+            other => Err(format!("unknown kernel backend '{other}' (scalar|avx2|neon)")),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Numeric lane served by a score net / crossbar layer: full-precision f32
+/// or the conductance-quantized i8 path ([`super::qkernel`]).  This is the
+/// per-backend `[service] kernel` / `[deploy] <backend>_kernel` knob —
+/// orthogonal to [`KernelBackend`], which picks the instruction set both
+/// lanes run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    #[default]
+    F32,
+    /// Weights snapped to the macro's 64 conductance levels, inputs to DAC
+    /// bit-width, i8×i8→i32 accumulation — active only under
+    /// `NoiseModel::Ideal` (the noise models are conductance-domain f32).
+    Quant,
+}
+
+impl KernelMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelMode::F32 => "f32",
+            KernelMode::Quant => "quant",
+        }
+    }
+}
+
+impl FromStr for KernelMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" => Ok(KernelMode::F32),
+            "quant" | "i8" => Ok(KernelMode::Quant),
+            other => Err(format!("unknown kernel mode '{other}' (f32|quant)")),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+const ACTIVE_UNSET: u8 = u8::MAX;
+static ACTIVE: AtomicU8 = AtomicU8::new(ACTIVE_UNSET);
+
+/// Best backend the host supports.
+pub fn detect() -> KernelBackend {
+    if KernelBackend::Avx2.is_available() {
+        KernelBackend::Avx2
+    } else if KernelBackend::Neon.is_available() {
+        KernelBackend::Neon
+    } else {
+        KernelBackend::Scalar
+    }
+}
+
+fn initial() -> KernelBackend {
+    match std::env::var(KERNEL_ENV) {
+        Ok(s) if !s.trim().is_empty() => match s.parse::<KernelBackend>() {
+            Ok(b) if b.is_available() => b,
+            _ => detect(),
+        },
+        _ => detect(),
+    }
+}
+
+/// The process-global backend every undecorated tensor entry point uses.
+/// Resolved once from `RUST_PALLAS_KERNEL` (falling back to detection);
+/// the resolution race is benign — both sides compute the same value.
+#[inline]
+pub fn active() -> KernelBackend {
+    match ACTIVE.load(Ordering::Relaxed) {
+        ACTIVE_UNSET => {
+            let b = initial();
+            ACTIVE.store(b as u8, Ordering::Relaxed);
+            b
+        }
+        v => KernelBackend::from_u8(v),
+    }
+}
+
+/// Force the process-global backend (test/bench hook — serving code should
+/// use the env var).  Returns `false` (and changes nothing) if the backend
+/// is not available on this host.
+pub fn set_active(b: KernelBackend) -> bool {
+    if !b.is_available() {
+        return false;
+    }
+    ACTIVE.store(b as u8, Ordering::Relaxed);
+    true
+}
+
+/// Every backend that can run on this host (always starts with `Scalar`),
+/// for in-process dispatch-sweep tests and benches.
+pub fn available() -> Vec<KernelBackend> {
+    KernelBackend::ALL
+        .iter()
+        .copied()
+        .filter(|b| b.is_available())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Column-strip autotune
+// ---------------------------------------------------------------------------
+
+/// Row-block depth shared by the scalar and SIMD f32 kernels.
+pub const ROW_BLOCK: usize = 4;
+const TILE_CANDIDATES: [usize; 4] = [32, 64, 128, 256];
+const TILE_DEFAULT: usize = 128;
+
+static COL_TILE: OnceLock<usize> = OnceLock::new();
+
+/// The autotuned column-strip width (elements of `n` the SIMD kernels keep
+/// resident per pass over `k`).  Cached after the first call; affects cache
+/// behaviour only, never results.
+pub fn col_tile() -> usize {
+    *COL_TILE.get_or_init(|| {
+        if let Ok(s) = std::env::var(KERNEL_TILE_ENV) {
+            if let Ok(t) = s.trim().parse::<usize>() {
+                if t >= 8 {
+                    return t;
+                }
+            }
+        }
+        autotune(active())
+    })
+}
+
+/// `(row_block, col_tile)` actually in use — recorded into bench output.
+pub fn tile_info() -> (usize, usize) {
+    (ROW_BLOCK, col_tile())
+}
+
+fn autotune(backend: KernelBackend) -> usize {
+    if backend == KernelBackend::Scalar {
+        return TILE_DEFAULT; // scalar kernel does not strip-mine
+    }
+    // Representative hot shape: a 64-lane batch against a hidden-sized
+    // square panel.  Time each candidate (best of 3 after one warmup) and
+    // keep the fastest; ties go to the smaller strip (less L1 pressure).
+    let (m, k, n) = (64usize, 96, 96);
+    let a: Vec<f32> = (0..m * k).map(|i| ((i % 83) as f32) * 0.011 - 0.4).collect();
+    let b: Vec<f32> = (0..k * n).map(|i| ((i % 67) as f32) * 0.013 - 0.4).collect();
+    let mut c = vec![0.0f32; m * n];
+    let mut best = (f64::INFINITY, TILE_DEFAULT);
+    for &tile in &TILE_CANDIDATES {
+        let mut best_rep = f64::INFINITY;
+        for rep in 0..4 {
+            let t0 = std::time::Instant::now();
+            for _ in 0..4 {
+                run_tiled(backend, &a, &b, &mut c, m, k, n, tile);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            if rep > 0 {
+                best_rep = best_rep.min(dt);
+            }
+        }
+        if best_rep < best.0 {
+            best = (best_rep, tile);
+        }
+    }
+    std::hint::black_box(&c);
+    best.1
+}
+
+fn run_tiled(backend: KernelBackend, a: &[f32], b: &[f32], c: &mut [f32],
+             m: usize, k: usize, n: usize, tile: usize) {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => unsafe { x86::matmul_into(a, b, c, m, k, n, tile) },
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => unsafe { arm::matmul_into(a, b, c, m, k, n, tile) },
+        _ => super::tensor::matmul_into_with(KernelBackend::Scalar, a, b, c, m, k, n),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 f32 kernels (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use std::arch::x86_64::*;
+
+    /// c += a(m×k)·b(k×n), strip-mined over `tile` columns.  Mirrors the
+    /// scalar 4-row-blocked kernel operation for operation — separate
+    /// `mul`+`add` (never `fmadd`), ascending `l`, identical zero-skips —
+    /// so it is bitwise equal to the scalar path.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2 is available and the slice lengths match
+    /// `(m·k, k·n, m·n)`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32],
+                              m: usize, k: usize, n: usize, tile: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let cp = c.as_mut_ptr();
+        let tile = tile.max(8);
+        let mut i = 0usize;
+        while i + 4 <= m {
+            let a0 = ap.add(i * k);
+            let a1 = ap.add((i + 1) * k);
+            let a2 = ap.add((i + 2) * k);
+            let a3 = ap.add((i + 3) * k);
+            let c0 = cp.add(i * n);
+            let c1 = cp.add((i + 1) * n);
+            let c2 = cp.add((i + 2) * n);
+            let c3 = cp.add((i + 3) * n);
+            let mut j0 = 0usize;
+            while j0 < n {
+                let j1 = (j0 + tile).min(n);
+                let jv = j0 + (j1 - j0) / 8 * 8;
+                for l in 0..k {
+                    let v0 = *a0.add(l);
+                    let v1 = *a1.add(l);
+                    let v2 = *a2.add(l);
+                    let v3 = *a3.add(l);
+                    if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                        continue;
+                    }
+                    let brow = bp.add(l * n);
+                    let w0 = _mm256_set1_ps(v0);
+                    let w1 = _mm256_set1_ps(v1);
+                    let w2 = _mm256_set1_ps(v2);
+                    let w3 = _mm256_set1_ps(v3);
+                    let mut j = j0;
+                    while j < jv {
+                        let bv = _mm256_loadu_ps(brow.add(j));
+                        _mm256_storeu_ps(
+                            c0.add(j),
+                            _mm256_add_ps(_mm256_loadu_ps(c0.add(j)), _mm256_mul_ps(w0, bv)),
+                        );
+                        _mm256_storeu_ps(
+                            c1.add(j),
+                            _mm256_add_ps(_mm256_loadu_ps(c1.add(j)), _mm256_mul_ps(w1, bv)),
+                        );
+                        _mm256_storeu_ps(
+                            c2.add(j),
+                            _mm256_add_ps(_mm256_loadu_ps(c2.add(j)), _mm256_mul_ps(w2, bv)),
+                        );
+                        _mm256_storeu_ps(
+                            c3.add(j),
+                            _mm256_add_ps(_mm256_loadu_ps(c3.add(j)), _mm256_mul_ps(w3, bv)),
+                        );
+                        j += 8;
+                    }
+                    while j < j1 {
+                        let bv = *brow.add(j);
+                        *c0.add(j) += v0 * bv;
+                        *c1.add(j) += v1 * bv;
+                        *c2.add(j) += v2 * bv;
+                        *c3.add(j) += v3 * bv;
+                        j += 1;
+                    }
+                }
+                j0 = j1;
+            }
+            i += 4;
+        }
+        let nv = n / 8 * 8;
+        while i < m {
+            let ai = ap.add(i * k);
+            let ci = cp.add(i * n);
+            for l in 0..k {
+                let v = *ai.add(l);
+                if v == 0.0 {
+                    continue;
+                }
+                let brow = bp.add(l * n);
+                let w = _mm256_set1_ps(v);
+                let mut j = 0usize;
+                while j < nv {
+                    _mm256_storeu_ps(
+                        ci.add(j),
+                        _mm256_add_ps(_mm256_loadu_ps(ci.add(j)),
+                                      _mm256_mul_ps(w, _mm256_loadu_ps(brow.add(j)))),
+                    );
+                    j += 8;
+                }
+                while j < n {
+                    *ci.add(j) += v * *brow.add(j);
+                    j += 1;
+                }
+            }
+            i += 1;
+        }
+    }
+
+    /// Bank-sharded strided accumulate (see `tensor::matmul_block_accum`).
+    /// Single-row loop with the scalar kernel's per-element zero-skip;
+    /// order-preserving like `matmul_into` (banks are ≤32 wide, so no
+    /// strip-mining).
+    ///
+    /// # Safety
+    /// AVX2 available; offsets/strides in bounds as asserted by the
+    /// dispatching wrapper.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn matmul_block_accum(a: &[f32], a_stride: usize, a_off: usize,
+                                     b: &[f32], c: &mut [f32], c_stride: usize,
+                                     c_off: usize, m: usize, k: usize, n: usize) {
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let cp = c.as_mut_ptr();
+        let nv = n / 8 * 8;
+        for i in 0..m {
+            let arow = ap.add(i * a_stride + a_off);
+            let crow = cp.add(i * c_stride + c_off);
+            for l in 0..k {
+                let v = *arow.add(l);
+                if v == 0.0 {
+                    continue;
+                }
+                let brow = bp.add(l * n);
+                let w = _mm256_set1_ps(v);
+                let mut j = 0usize;
+                while j < nv {
+                    _mm256_storeu_ps(
+                        crow.add(j),
+                        _mm256_add_ps(_mm256_loadu_ps(crow.add(j)),
+                                      _mm256_mul_ps(w, _mm256_loadu_ps(brow.add(j)))),
+                    );
+                    j += 8;
+                }
+                while j < n {
+                    *crow.add(j) += v * *brow.add(j);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// c = a(m×k)·Bᵀ(n×k) dot-product kernel with FMA accumulators and a
+    /// horizontal reduction — NOT order-preserving (callers compare with a
+    /// tolerance; no serving forward path uses it).
+    ///
+    /// # Safety
+    /// AVX2+FMA available; slice lengths `(m·k, n·k, m·n)`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_tb_into(a: &[f32], bt: &[f32], c: &mut [f32],
+                                 m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(bt.len(), n * k);
+        debug_assert_eq!(c.len(), m * n);
+        let kv = k / 8 * 8;
+        for i in 0..m {
+            let arow = a.as_ptr().add(i * k);
+            let crow = c.as_mut_ptr().add(i * n);
+            for j in 0..n {
+                let brow = bt.as_ptr().add(j * k);
+                let mut acc = _mm256_setzero_ps();
+                let mut l = 0usize;
+                while l < kv {
+                    acc = _mm256_fmadd_ps(_mm256_loadu_ps(arow.add(l)),
+                                          _mm256_loadu_ps(brow.add(l)), acc);
+                    l += 8;
+                }
+                let hi = _mm256_extractf128_ps::<1>(acc);
+                let lo = _mm256_castps256_ps128(acc);
+                let s = _mm_add_ps(lo, hi);
+                let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+                let s = _mm_add_ss(s, _mm_shuffle_ps::<0b01>(s, s));
+                let mut sum = _mm_cvtss_f32(s);
+                while l < k {
+                    sum += *arow.add(l) * *brow.add(l);
+                    l += 1;
+                }
+                *crow.add(j) = sum;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON f32 kernels (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod arm {
+    use std::arch::aarch64::*;
+
+    /// c += a(m×k)·b(k×n); order-preserving NEON mirror of the scalar
+    /// kernel (separate `vmul`+`vadd`, ascending `l`, identical zero-skips).
+    ///
+    /// # Safety
+    /// Slice lengths must match `(m·k, k·n, m·n)`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32],
+                              m: usize, k: usize, n: usize, tile: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let cp = c.as_mut_ptr();
+        let tile = tile.max(4);
+        let mut i = 0usize;
+        while i + 4 <= m {
+            let a0 = ap.add(i * k);
+            let a1 = ap.add((i + 1) * k);
+            let a2 = ap.add((i + 2) * k);
+            let a3 = ap.add((i + 3) * k);
+            let c0 = cp.add(i * n);
+            let c1 = cp.add((i + 1) * n);
+            let c2 = cp.add((i + 2) * n);
+            let c3 = cp.add((i + 3) * n);
+            let mut j0 = 0usize;
+            while j0 < n {
+                let j1 = (j0 + tile).min(n);
+                let jv = j0 + (j1 - j0) / 4 * 4;
+                for l in 0..k {
+                    let v0 = *a0.add(l);
+                    let v1 = *a1.add(l);
+                    let v2 = *a2.add(l);
+                    let v3 = *a3.add(l);
+                    if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                        continue;
+                    }
+                    let brow = bp.add(l * n);
+                    let w0 = vdupq_n_f32(v0);
+                    let w1 = vdupq_n_f32(v1);
+                    let w2 = vdupq_n_f32(v2);
+                    let w3 = vdupq_n_f32(v3);
+                    let mut j = j0;
+                    while j < jv {
+                        let bv = vld1q_f32(brow.add(j));
+                        vst1q_f32(c0.add(j), vaddq_f32(vld1q_f32(c0.add(j)), vmulq_f32(w0, bv)));
+                        vst1q_f32(c1.add(j), vaddq_f32(vld1q_f32(c1.add(j)), vmulq_f32(w1, bv)));
+                        vst1q_f32(c2.add(j), vaddq_f32(vld1q_f32(c2.add(j)), vmulq_f32(w2, bv)));
+                        vst1q_f32(c3.add(j), vaddq_f32(vld1q_f32(c3.add(j)), vmulq_f32(w3, bv)));
+                        j += 4;
+                    }
+                    while j < j1 {
+                        let bv = *brow.add(j);
+                        *c0.add(j) += v0 * bv;
+                        *c1.add(j) += v1 * bv;
+                        *c2.add(j) += v2 * bv;
+                        *c3.add(j) += v3 * bv;
+                        j += 1;
+                    }
+                }
+                j0 = j1;
+            }
+            i += 4;
+        }
+        let nv = n / 4 * 4;
+        while i < m {
+            let ai = ap.add(i * k);
+            let ci = cp.add(i * n);
+            for l in 0..k {
+                let v = *ai.add(l);
+                if v == 0.0 {
+                    continue;
+                }
+                let brow = bp.add(l * n);
+                let w = vdupq_n_f32(v);
+                let mut j = 0usize;
+                while j < nv {
+                    vst1q_f32(ci.add(j),
+                              vaddq_f32(vld1q_f32(ci.add(j)), vmulq_f32(w, vld1q_f32(brow.add(j)))));
+                    j += 4;
+                }
+                while j < n {
+                    *ci.add(j) += v * *brow.add(j);
+                    j += 1;
+                }
+            }
+            i += 1;
+        }
+    }
+
+    /// Bank-sharded strided accumulate; order-preserving (see the AVX2
+    /// twin for the contract).
+    ///
+    /// # Safety
+    /// Offsets/strides in bounds as asserted by the dispatching wrapper.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn matmul_block_accum(a: &[f32], a_stride: usize, a_off: usize,
+                                     b: &[f32], c: &mut [f32], c_stride: usize,
+                                     c_off: usize, m: usize, k: usize, n: usize) {
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let cp = c.as_mut_ptr();
+        let nv = n / 4 * 4;
+        for i in 0..m {
+            let arow = ap.add(i * a_stride + a_off);
+            let crow = cp.add(i * c_stride + c_off);
+            for l in 0..k {
+                let v = *arow.add(l);
+                if v == 0.0 {
+                    continue;
+                }
+                let brow = bp.add(l * n);
+                let w = vdupq_n_f32(v);
+                let mut j = 0usize;
+                while j < nv {
+                    vst1q_f32(crow.add(j),
+                              vaddq_f32(vld1q_f32(crow.add(j)),
+                                        vmulq_f32(w, vld1q_f32(brow.add(j)))));
+                    j += 4;
+                }
+                while j < n {
+                    *crow.add(j) += v * *brow.add(j);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// Transposed-B dot-product kernel with FMA + horizontal reduction —
+    /// NOT order-preserving (tolerance-tested callers only).
+    ///
+    /// # Safety
+    /// Slice lengths `(m·k, n·k, m·n)`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn matmul_tb_into(a: &[f32], bt: &[f32], c: &mut [f32],
+                                 m: usize, k: usize, n: usize) {
+        let kv = k / 4 * 4;
+        for i in 0..m {
+            let arow = a.as_ptr().add(i * k);
+            let crow = c.as_mut_ptr().add(i * n);
+            for j in 0..n {
+                let brow = bt.as_ptr().add(j * k);
+                let mut acc = vdupq_n_f32(0.0);
+                let mut l = 0usize;
+                while l < kv {
+                    acc = vfmaq_f32(acc, vld1q_f32(arow.add(l)), vld1q_f32(brow.add(l)));
+                    l += 4;
+                }
+                let mut sum = vaddvq_f32(acc);
+                while l < k {
+                    sum += *arow.add(l) * *brow.add(l);
+                    l += 1;
+                }
+                *crow.add(j) = sum;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_available() {
+        assert!(KernelBackend::Scalar.is_available());
+        let avail = available();
+        assert_eq!(avail[0], KernelBackend::Scalar);
+        assert!(avail.contains(&detect()));
+    }
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for b in KernelBackend::ALL {
+            assert_eq!(b.name().parse::<KernelBackend>().unwrap(), b);
+        }
+        assert!("pentium".parse::<KernelBackend>().is_err());
+        assert_eq!("f32".parse::<KernelMode>().unwrap(), KernelMode::F32);
+        assert_eq!("quant".parse::<KernelMode>().unwrap(), KernelMode::Quant);
+        assert!("fp8".parse::<KernelMode>().is_err());
+    }
+
+    #[test]
+    fn set_active_refuses_unavailable() {
+        for b in KernelBackend::ALL {
+            if !b.is_available() {
+                assert!(!set_active(b));
+            }
+        }
+        // restore/confirm a real backend is active either way
+        assert!(set_active(detect()));
+        assert!(active().is_available());
+    }
+
+    #[test]
+    fn tile_info_is_sane() {
+        let (rb, ct) = tile_info();
+        assert_eq!(rb, ROW_BLOCK);
+        assert!(ct >= 8, "column strip too small: {ct}");
+    }
+}

@@ -1,4 +1,5 @@
-//! Minimal dense f32 matrix type for the analog simulator.
+//! Minimal dense f32 matrix type + the dispatched MVM kernels for the
+//! analog simulator.
 //!
 //! Row-major, contiguous, no views — the score networks here are 2→14→14→2
 //! and the macros are 32×32, so simplicity and cache behaviour beat
@@ -10,14 +11,32 @@
 //! [`matmul_into`] runs a 4-row-blocked kernel so each weight row loaded
 //! from memory feeds four output lanes, [`matmul_bias_into`] fuses the
 //! per-row bias broadcast, and [`matmul_tb_into`] is the transposed-B
-//! dot-product fast path for tall-k shapes.  All inner loops are iterator
-//! zips — bounds-check-free, so they auto-vectorize.  Per-output-element
-//! accumulation order is identical to the single-vector
-//! [`vecmat_bias_into`] path, which keeps the batched lane bitwise equal to
-//! the scalar lane under `NoiseModel::Ideal` (asserted by the parity
-//! suite).
+//! dot-product fast path for tall-k shapes.
+//!
+//! ## Kernel dispatch
+//!
+//! Each public kernel resolves to a [`KernelBackend`]
+//! (scalar / AVX2 / NEON, see [`super::simd`]) — the undecorated entry
+//! points use the process-global backend ([`simd::active`], forced with
+//! `RUST_PALLAS_KERNEL`), while the `*_with` variants take an explicit
+//! backend for parity sweeps and benches.  Determinism contract:
+//!
+//! | kernel                | cross-backend bitwise? | why                        |
+//! |-----------------------|------------------------|----------------------------|
+//! | `matmul_into`         | yes                    | order-preserving (mul+add) |
+//! | `matmul_bias_into`    | yes                    | delegates to `matmul_into` |
+//! | `matmul_block_accum`  | yes                    | order-preserving (mul+add) |
+//! | `vecmat_bias_into`    | yes (scalar only)      | single-row, never SIMD     |
+//! | `matmul_tb_into`      | **no** (tolerance)     | FMA + horizontal reduction |
+//!
+//! Per-output-element accumulation order on the order-preserving kernels
+//! is identical to the single-vector [`vecmat_bias_into`] path, which
+//! keeps the batched lane bitwise equal to the scalar lane under
+//! `NoiseModel::Ideal` (asserted by the parity suite) on *every* backend.
 
 use std::fmt;
+
+use super::simd::{self, KernelBackend};
 
 /// Row-major dense matrix of f32.
 #[derive(Clone, PartialEq)]
@@ -113,9 +132,31 @@ impl Mat {
         out
     }
 
-    /// Transposed copy.
+    /// Transposed copy.  Cache-blocked: both source rows and destination
+    /// rows stay resident per 32×32 block instead of the naive per-element
+    /// `get` walk that strides the whole destination every row — this sits
+    /// on the [`matmul_tb_into`] setup path.
     pub fn transpose(&self) -> Mat {
-        Mat::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
+        const TB: usize = 32;
+        let (r, c) = (self.rows, self.cols);
+        let mut out = vec![0.0f32; r * c];
+        let mut i0 = 0;
+        while i0 < r {
+            let i1 = (i0 + TB).min(r);
+            let mut j0 = 0;
+            while j0 < c {
+                let j1 = (j0 + TB).min(c);
+                for i in i0..i1 {
+                    let src = &self.data[i * c + j0..i * c + j1];
+                    for (j, &v) in (j0..j1).zip(src) {
+                        out[j * r + i] = v;
+                    }
+                }
+                j0 = j1;
+            }
+            i0 = i1;
+        }
+        Mat { rows: c, cols: r, data: out }
     }
 
     /// Elementwise map (copy).
@@ -145,23 +186,58 @@ impl fmt::Debug for Mat {
 }
 
 /// Inner matmul over raw slices: c += a(m×k) @ b(k×n). `c` must be zeroed by
-/// the caller when a fresh product is wanted.  ikj loop order — streams `b`
-/// and `c` rows sequentially, which is the cache-friendly order for the
-/// small-k regime here.
-///
-/// Rows of `a` are processed in blocks of four, so each `b` row loaded from
-/// memory feeds four output lanes — the GEMM win of the batched execution
-/// lane (B×32 · 32×32 instead of B separate 32-vector MVMs).  The per-row
-/// accumulation order over `l` is unchanged from the single-row kernel, so
-/// each output element sees the identical float-op sequence as
-/// [`vecmat_bias_into`] minus the bias (blocked lanes add exact ±0.0 terms
-/// where the single-row kernel skips, which cannot change any sum).
+/// the caller when a fresh product is wanted.  Dispatches to the
+/// process-global [`KernelBackend`]; see the module docs for the bitwise
+/// contract (this kernel is order-preserving on every backend).
 #[inline]
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_into_with(simd::active(), a, b, c, m, k, n);
+}
+
+/// [`matmul_into`] on an explicit backend (parity sweeps / benches).
+/// An unavailable backend falls back to scalar, which computes the same
+/// bits by the order-preserving contract.
+pub fn matmul_into_with(backend: KernelBackend, a: &[f32], b: &[f32], c: &mut [f32],
+                        m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
     let _t = crate::obs::phase(crate::obs::Phase::Gemm);
+    match backend {
+        KernelBackend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if backend.is_available() {
+                // SAFETY: avx2 confirmed available; lengths asserted above.
+                unsafe { simd::x86::matmul_into(a, b, c, m, k, n, simd::col_tile()) };
+                return;
+            }
+            matmul_into_scalar(a, b, c, m, k, n)
+        }
+        KernelBackend::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                // SAFETY: NEON is baseline on aarch64; lengths asserted above.
+                unsafe { simd::arm::matmul_into(a, b, c, m, k, n, simd::col_tile()) };
+                return;
+            }
+            #[cfg(not(target_arch = "aarch64"))]
+            matmul_into_scalar(a, b, c, m, k, n)
+        }
+        KernelBackend::Scalar => matmul_into_scalar(a, b, c, m, k, n),
+    }
+}
+
+/// The portable 4-row-blocked kernel — the parity oracle every SIMD path
+/// must match bit for bit.  ikj loop order streams `b` and `c` rows
+/// sequentially (the cache-friendly order for the small-k regime here);
+/// rows of `a` are processed in blocks of four so each `b` row loaded from
+/// memory feeds four output lanes.  The per-row accumulation order over `l`
+/// is unchanged from the single-row kernel, so each output element sees the
+/// identical float-op sequence as [`vecmat_bias_into`] minus the bias
+/// (blocked lanes add exact ±0.0 terms where the single-row kernel skips,
+/// which cannot change any sum).  All row walks are pre-split
+/// `chunks_exact` iterators — no per-iteration bounds slicing.
+fn matmul_into_scalar(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     let mut i = 0;
     while i + 4 <= m {
         let a0 = &a[i * k..(i + 1) * k];
@@ -172,12 +248,12 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
         let (c0, rest) = block.split_at_mut(n);
         let (c1, rest) = rest.split_at_mut(n);
         let (c2, c3) = rest.split_at_mut(n);
-        for l in 0..k {
-            let (v0, v1, v2, v3) = (a0[l], a1[l], a2[l], a3[l]);
+        for ((((&v0, &v1), &v2), &v3), brow) in
+            a0.iter().zip(a1).zip(a2).zip(a3).zip(b.chunks_exact(n))
+        {
             if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
                 continue;
             }
-            let brow = &b[l * n..(l + 1) * n];
             for ((((w0, w1), w2), w3), &bv) in c0
                 .iter_mut()
                 .zip(c1.iter_mut())
@@ -193,14 +269,11 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
         }
         i += 4;
     }
-    for i in i..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (l, &aval) in arow.iter().enumerate() {
+    for (arow, crow) in a[i * k..].chunks_exact(k).zip(c[i * n..].chunks_exact_mut(n)) {
+        for (&aval, brow) in arow.iter().zip(b.chunks_exact(n)) {
             if aval == 0.0 {
                 continue;
             }
-            let brow = &b[l * n..(l + 1) * n];
             for (cv, &bv) in crow.iter_mut().zip(brow) {
                 *cv += aval * bv;
             }
@@ -211,10 +284,17 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
 /// c = a(m×k) @ b(k×n) + bias (broadcast over rows), writing into `c`.
 /// The batched counterpart of [`vecmat_bias_into`]: every output row sees
 /// the same bias-then-accumulate float-op order as the single-vector path,
-/// so the two are bitwise interchangeable per lane.
+/// so the two are bitwise interchangeable per lane (on every backend).
 #[inline]
 pub fn matmul_bias_into(a: &[f32], b: &[f32], bias: &[f32], c: &mut [f32],
                         m: usize, k: usize, n: usize) {
+    matmul_bias_into_with(simd::active(), a, b, bias, c, m, k, n);
+}
+
+/// [`matmul_bias_into`] on an explicit backend.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bias_into_with(backend: KernelBackend, a: &[f32], b: &[f32], bias: &[f32],
+                             c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(bias.len(), n);
@@ -222,24 +302,57 @@ pub fn matmul_bias_into(a: &[f32], b: &[f32], bias: &[f32], c: &mut [f32],
     for crow in c.chunks_exact_mut(n) {
         crow.copy_from_slice(bias);
     }
-    matmul_into(a, b, c, m, k, n);
+    matmul_into_with(backend, a, b, c, m, k, n);
 }
 
 /// c = a(m×k) @ B(k×n) where `bt` stores B *transposed* (n×k): dot-product
 /// inner loop.  The fast path when B is reused across many calls with a
 /// tall k — each output element is one contiguous dot product, keeping both
 /// streams sequential.  Overwrites `c` (no accumulate).
+///
+/// **Not order-preserving across backends**: the SIMD paths reduce with
+/// FMA accumulators + a horizontal sum, so compare with a tolerance.  No
+/// serving forward path goes through this kernel.
 #[inline]
 pub fn matmul_tb_into(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_tb_into_with(simd::active(), a, bt, c, m, k, n);
+}
+
+/// [`matmul_tb_into`] on an explicit backend.
+pub fn matmul_tb_into_with(backend: KernelBackend, a: &[f32], bt: &[f32], c: &mut [f32],
+                           m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(bt.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
     let _t = crate::obs::phase(crate::obs::Phase::Gemm);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (j, cv) in crow.iter_mut().enumerate() {
-            let brow = &bt[j * k..(j + 1) * k];
+    match backend {
+        KernelBackend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if backend.is_available() {
+                // SAFETY: avx2+fma confirmed available; lengths asserted.
+                unsafe { simd::x86::matmul_tb_into(a, bt, c, m, k, n) };
+                return;
+            }
+            matmul_tb_into_scalar(a, bt, c, m, k, n)
+        }
+        KernelBackend::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                // SAFETY: NEON is baseline on aarch64; lengths asserted.
+                unsafe { simd::arm::matmul_tb_into(a, bt, c, m, k, n) };
+                return;
+            }
+            #[cfg(not(target_arch = "aarch64"))]
+            matmul_tb_into_scalar(a, bt, c, m, k, n)
+        }
+        KernelBackend::Scalar => matmul_tb_into_scalar(a, bt, c, m, k, n),
+    }
+}
+
+fn matmul_tb_into_scalar(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    let _ = m;
+    for (arow, crow) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+        for (cv, brow) in crow.iter_mut().zip(bt.chunks_exact(k)) {
             let mut acc = 0.0f32;
             for (&av, &bv) in arow.iter().zip(brow) {
                 acc += av * bv;
@@ -259,6 +372,7 @@ pub fn matmul_tb_into(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize, 
 /// fixed output element the accumulation order over the logical rows `r`
 /// is ascending — identical to the monolithic [`matmul_into`] path, which
 /// keeps banked `Ideal` evaluation bitwise equal to the monolithic oracle.
+/// Order-preserving on every backend.
 ///
 /// Zero-valued `a` entries are skipped; with all-positive `b` (conductances)
 /// and accumulators that never go negative-zero, skipping versus adding an
@@ -268,19 +382,62 @@ pub fn matmul_tb_into(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize, 
 pub fn matmul_block_accum(a: &[f32], a_stride: usize, a_off: usize,
                           b: &[f32], c: &mut [f32], c_stride: usize,
                           c_off: usize, m: usize, k: usize, n: usize) {
+    matmul_block_accum_with(simd::active(), a, a_stride, a_off, b, c, c_stride, c_off, m, k, n);
+}
+
+/// [`matmul_block_accum`] on an explicit backend.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_block_accum_with(backend: KernelBackend, a: &[f32], a_stride: usize,
+                               a_off: usize, b: &[f32], c: &mut [f32], c_stride: usize,
+                               c_off: usize, m: usize, k: usize, n: usize) {
     debug_assert!(a_off + k <= a_stride);
     debug_assert!(c_off + n <= c_stride);
     debug_assert!(a.len() >= (m.saturating_sub(1)) * a_stride + a_off + k);
     debug_assert!(c.len() >= (m.saturating_sub(1)) * c_stride + c_off + n);
     debug_assert_eq!(b.len(), k * n);
+    match backend {
+        KernelBackend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if backend.is_available() {
+                // SAFETY: avx2 confirmed available; bounds asserted above.
+                unsafe {
+                    simd::x86::matmul_block_accum(a, a_stride, a_off, b, c, c_stride,
+                                                  c_off, m, k, n)
+                };
+                return;
+            }
+            matmul_block_accum_scalar(a, a_stride, a_off, b, c, c_stride, c_off, m, k, n)
+        }
+        KernelBackend::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                // SAFETY: NEON is baseline on aarch64; bounds asserted above.
+                unsafe {
+                    simd::arm::matmul_block_accum(a, a_stride, a_off, b, c, c_stride,
+                                                  c_off, m, k, n)
+                };
+                return;
+            }
+            #[cfg(not(target_arch = "aarch64"))]
+            matmul_block_accum_scalar(a, a_stride, a_off, b, c, c_stride, c_off, m, k, n)
+        }
+        KernelBackend::Scalar => {
+            matmul_block_accum_scalar(a, a_stride, a_off, b, c, c_stride, c_off, m, k, n)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn matmul_block_accum_scalar(a: &[f32], a_stride: usize, a_off: usize,
+                             b: &[f32], c: &mut [f32], c_stride: usize,
+                             c_off: usize, m: usize, k: usize, n: usize) {
     for i in 0..m {
         let arow = &a[i * a_stride + a_off..i * a_stride + a_off + k];
         let crow = &mut c[i * c_stride + c_off..i * c_stride + c_off + n];
-        for (l, &aval) in arow.iter().enumerate() {
+        for (&aval, brow) in arow.iter().zip(b.chunks_exact(n)) {
             if aval == 0.0 {
                 continue;
             }
-            let brow = &b[l * n..(l + 1) * n];
             for (cv, &bv) in crow.iter_mut().zip(brow) {
                 *cv += aval * bv;
             }
@@ -300,7 +457,9 @@ pub fn scratch_slice(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
     &mut buf[..len]
 }
 
-/// y = x (1×k) @ b (k×n) + bias, writing into y.
+/// y = x (1×k) @ b (k×n) + bias, writing into y.  Always scalar — the
+/// single-vector path is the accumulation-order reference the batched
+/// kernels preserve.
 #[inline]
 pub fn vecmat_bias_into(x: &[f32], b: &[f32], bias: &[f32], y: &mut [f32]) {
     let k = x.len();
@@ -308,11 +467,10 @@ pub fn vecmat_bias_into(x: &[f32], b: &[f32], bias: &[f32], y: &mut [f32]) {
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(bias.len(), n);
     y.copy_from_slice(bias);
-    for (l, &xv) in x.iter().enumerate() {
+    for (&xv, brow) in x.iter().zip(b.chunks_exact(n)) {
         if xv == 0.0 {
             continue;
         }
-        let brow = &b[l * n..(l + 1) * n];
         for (yv, &bv) in y.iter_mut().zip(brow) {
             *yv += xv * bv;
         }
@@ -352,6 +510,21 @@ mod tests {
     fn transpose_roundtrip() {
         let a = Mat::from_fn(3, 5, |r, c| (r * 5 + c) as f32);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn transpose_blocked_matches_naive_on_odd_shapes() {
+        // shapes straddling the 32-block boundary exercise every edge block
+        for (r, c) in [(1usize, 1usize), (7, 33), (33, 7), (32, 32), (40, 65)] {
+            let a = Mat::from_fn(r, c, |i, j| (i * c + j) as f32 * 0.5 - 3.0);
+            let t = a.transpose();
+            assert_eq!(t.shape(), (c, r));
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(t.get(j, i), a.get(i, j), "({i},{j}) of {r}x{c}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -479,6 +652,69 @@ mod tests {
             }
         }
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn every_backend_is_bitwise_on_order_preserving_kernels() {
+        // ragged shapes exercise the 4-row remainder and every SIMD tail
+        for &(m, k, n) in &[(1usize, 3usize, 2usize), (4, 8, 8), (5, 7, 9),
+                            (9, 17, 33), (12, 32, 40), (6, 96, 70)] {
+            let a: Vec<f32> = (0..m * k)
+                .map(|i| if i % 11 == 0 { 0.0 } else { (i as f32 * 0.37).sin() })
+                .collect();
+            let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.11).cos()).collect();
+            let bias: Vec<f32> = (0..n).map(|i| i as f32 * 0.3 - 1.0).collect();
+            let mut want = vec![0.1f32; m * n];
+            matmul_into_with(KernelBackend::Scalar, &a, &b, &mut want, m, k, n);
+            let mut want_bias = vec![0.0f32; m * n];
+            matmul_bias_into_with(KernelBackend::Scalar, &a, &b, &bias, &mut want_bias, m, k, n);
+            for backend in super::simd::available() {
+                let mut got = vec![0.1f32; m * n];
+                matmul_into_with(backend, &a, &b, &mut got, m, k, n);
+                assert_eq!(got, want, "matmul_into {backend} {m}x{k}x{n}");
+                let mut got_bias = vec![0.0f32; m * n];
+                matmul_bias_into_with(backend, &a, &b, &bias, &mut got_bias, m, k, n);
+                assert_eq!(got_bias, want_bias, "matmul_bias_into {backend} {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_backend_is_bitwise_on_block_accum() {
+        let (m, k, n) = (5usize, 39, 23);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.31).sin()).collect();
+        let b: Vec<f32> = (0..k * n)
+            .map(|i| 0.02 + 0.08 * ((i as f32 * 0.17).sin().abs()))
+            .collect();
+        // bank-local copy of b's rows 2..19 × cols 3..14 block
+        let tile: Vec<f32> = (0..17 * 11)
+            .map(|i| b[(2 + i / 11) * n + 3 + i % 11])
+            .collect();
+        let mut want = vec![0.0f32; m * n];
+        matmul_block_accum_with(KernelBackend::Scalar, &a, k, 2, &tile, &mut want,
+                                n, 3, m, 17, 11);
+        for backend in super::simd::available() {
+            let mut got = vec![0.0f32; m * n];
+            matmul_block_accum_with(backend, &a, k, 2, &tile, &mut got, n, 3, m, 17, 11);
+            assert_eq!(got, want, "block_accum {backend}");
+        }
+    }
+
+    #[test]
+    fn tb_path_agrees_across_backends_within_tolerance() {
+        // FMA + horizontal reduction reassociates: tolerance, not bitwise
+        let (m, k, n) = (6usize, 37, 5);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.13).sin()).collect();
+        let bt: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.29).cos()).collect();
+        let mut want = vec![0.0f32; m * n];
+        matmul_tb_into_with(KernelBackend::Scalar, &a, &bt, &mut want, m, k, n);
+        for backend in super::simd::available() {
+            let mut got = vec![0.0f32; m * n];
+            matmul_tb_into_with(backend, &a, &bt, &mut got, m, k, n);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "tb {backend}: {g} vs {w}");
+            }
+        }
     }
 
     #[test]

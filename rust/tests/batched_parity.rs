@@ -4,17 +4,31 @@
 //! (mean/std within estimation tolerance) where it does (`ReadFast`, SDE
 //! Wiener noise with per-lane streams).
 //!
+//! The kernel-dispatch sweep extends the same contract across instruction
+//! sets: every forced [`KernelBackend`] must be bitwise equal to scalar on
+//! the Ideal forward paths (any bank grid, any thread count), and the
+//! conductance-quantized i8 lane must be bitwise invariant to backend /
+//! banking / chunk plan while staying statistically indistinguishable from
+//! the f32 oracle under the `[health]` per-class KL budgets.
+//!
 //! Runs on synthetic weights so it needs no built artifacts.
 
+use std::sync::{Arc, Mutex};
+
 use memdiff::analog::solver::{AnalogSolver, SolverConfig, SolverMode};
+use memdiff::config::{Config, RawConfig};
+use memdiff::coordinator::request::RequestClass;
 use memdiff::crossbar::mapper::map_layer;
-use memdiff::crossbar::NoiseModel;
+use memdiff::crossbar::{Banking, NoiseModel};
 use memdiff::device::cell::CellParams;
 use memdiff::diffusion::sampler::{DigitalSampler, SamplerKind, SamplerMode};
+use memdiff::exec::{Ctx, ParStrategy, Pool};
 use memdiff::nn::{AnalogScoreNet, DigitalScoreNet, ScoreWeights};
 use memdiff::util::rng::Rng;
+use memdiff::util::simd::{self, KernelBackend};
 use memdiff::util::stats;
-use memdiff::util::tensor::Mat;
+use memdiff::util::tensor::{self, Mat};
+use memdiff::util::KernelMode;
 
 /// Paper-shaped synthetic net (2→14→14→2, 3 classes) with conductances
 /// produced by the real mapper, so both realizations deploy consistently.
@@ -143,6 +157,197 @@ fn batched_ode_lanes_are_batch_prefix_stable() {
     let (large, _) = sampler.sample_batched(13, &[0.0, 0.0, 0.0], 24, &mut rng);
     assert_eq!(&small[..], &large[..5 * 2],
                "growing the batch must not disturb earlier lanes");
+}
+
+/// Serializes mutations of the process-global kernel backend.  Forward
+/// paths are order-preserving on every backend, so a concurrently running
+/// non-forcing test cannot observe a numeric difference either way — the
+/// lock only keeps the forcing tests themselves from racing each other.
+static BACKEND_LOCK: Mutex<()> = Mutex::new(());
+
+fn with_backend<R>(b: KernelBackend, f: impl FnOnce() -> R) -> R {
+    let _guard = BACKEND_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = simd::active();
+    assert!(simd::set_active(b), "backend {b} reported available but refused");
+    let r = f();
+    simd::set_active(prev);
+    r
+}
+
+fn exec_for(threads: usize) -> Ctx {
+    if threads <= 1 {
+        Ctx::serial()
+    } else {
+        Ctx::with_pool(ParStrategy::Lanes, Arc::new(Pool::new(threads)))
+    }
+}
+
+fn analog_solve(net: &AnalogScoreNet, n: usize, onehot: &[f32], substeps: usize,
+                seed: u64) -> Vec<f32> {
+    let cfg = SolverConfig::new(SolverMode::Ode).with_substeps(substeps);
+    let mut rng = Rng::new(seed);
+    AnalogSolver::new(net, cfg).solve_batched(n, onehot, &mut rng)
+}
+
+#[test]
+fn kernel_dispatch_matmul_entry_points_bitwise_all_backends() {
+    // The three forward-path GEMM entry points vectorize along the output
+    // column with scalar-identical accumulation order, so every available
+    // backend must reproduce the scalar kernel bit for bit — including
+    // ragged shapes that exercise the SIMD remainder loops.
+    let mut rng = Rng::new(31);
+    for (m, k, n) in [(1usize, 14usize, 14usize), (5, 40, 33), (13, 96, 96), (7, 17, 129)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gaussian_f32()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gaussian_f32()).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let mut c0 = vec![0.0; m * n];
+        let mut cb0 = vec![0.0; m * n];
+        let mut ca0 = vec![0.125; m * n];
+        tensor::matmul_into_with(KernelBackend::Scalar, &a, &b, &mut c0, m, k, n);
+        tensor::matmul_bias_into_with(KernelBackend::Scalar, &a, &b, &bias, &mut cb0, m, k, n);
+        tensor::matmul_block_accum_with(KernelBackend::Scalar, &a, k, 0, &b, &mut ca0,
+                                        n, 0, m, k, n);
+        for backend in simd::available() {
+            if backend == KernelBackend::Scalar {
+                continue;
+            }
+            let mut c = vec![0.0; m * n];
+            let mut cb = vec![0.0; m * n];
+            let mut ca = vec![0.125; m * n];
+            tensor::matmul_into_with(backend, &a, &b, &mut c, m, k, n);
+            tensor::matmul_bias_into_with(backend, &a, &b, &bias, &mut cb, m, k, n);
+            tensor::matmul_block_accum_with(backend, &a, k, 0, &b, &mut ca, n, 0, m, k, n);
+            assert_eq!(c, c0, "matmul_into {backend} ({m}x{k}x{n})");
+            assert_eq!(cb, cb0, "matmul_bias_into {backend} ({m}x{k}x{n})");
+            assert_eq!(ca, ca0, "matmul_block_accum {backend} ({m}x{k}x{n})");
+        }
+    }
+}
+
+#[test]
+fn kernel_dispatch_sweep_ideal_bitwise_across_bank_grids() {
+    // Forced backends through the full analog stack: 1x1 (14 wide), ragged
+    // 2x2 (40 = 32+8) and 3x3 (96 wide) bank grids, monolithic vs banked,
+    // serial vs 4-thread lane chunking — one bitwise answer everywhere.
+    for (hidden, grid) in [(14usize, "1x1"), (40, "2x2-ragged"), (96, "3x3")] {
+        let w = ScoreWeights::synthetic(2, hidden, 3, 100 + hidden as u64);
+        let mut reference: Option<Vec<f32>> = None;
+        for backend in simd::available() {
+            for threads in [1usize, 4] {
+                let out = with_backend(backend, || {
+                    let mut banked = AnalogScoreNet::from_conductances_with(
+                        &w, quiet(), NoiseModel::Ideal, Banking::ForceBanked);
+                    banked.set_exec(exec_for(threads));
+                    let mut mono = AnalogScoreNet::from_conductances_with(
+                        &w, quiet(), NoiseModel::Ideal, Banking::ForceMonolithic);
+                    mono.set_exec(exec_for(threads));
+                    let ob = analog_solve(&banked, 6, &[0.0, 0.0, 0.0], 60, 21);
+                    let om = analog_solve(&mono, 6, &[0.0, 0.0, 0.0], 60, 21);
+                    assert_eq!(ob, om,
+                               "{grid}: mono vs banked, backend {backend} x{threads}");
+                    ob
+                });
+                match &reference {
+                    None => reference = Some(out),
+                    Some(r) => assert_eq!(&out, r,
+                        "{grid}: backend {backend} x{threads} diverges from scalar"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn quant_lane_bitwise_across_backends_threads_and_banking() {
+    // i8 x i8 -> i32 accumulation is exact, so the quantized lane has ONE
+    // answer regardless of instruction set, lane chunking, or how the
+    // matrix is tiled into banks (per-bank partial sums fold losslessly).
+    let w = ScoreWeights::synthetic(2, 40, 3, 77);
+    let mut reference: Option<Vec<f32>> = None;
+    for backend in simd::available() {
+        for threads in [1usize, 4] {
+            for banking in [Banking::ForceBanked, Banking::ForceMonolithic] {
+                let out = with_backend(backend, || {
+                    let mut net = AnalogScoreNet::from_conductances_with(
+                        &w, quiet(), NoiseModel::Ideal, banking);
+                    net.set_kernel(KernelMode::Quant);
+                    net.set_exec(exec_for(threads));
+                    analog_solve(&net, 6, &[0.0, 1.0, 0.0], 60, 23)
+                });
+                match &reference {
+                    None => reference = Some(out),
+                    Some(r) => assert_eq!(&out, r,
+                        "quant lane: backend {backend} x{threads} {banking:?} diverges"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn quant_lane_statistical_parity_and_probe_kl_within_health_budget() {
+    // The quantized lane is a different numeric realization of the same
+    // score field, so sample clouds drawn from it must match the f32
+    // oracle's distribution: mean/std parity per dimension, and the same
+    // per-class probe-KL gate the health monitor applies to live engines,
+    // with budgets parsed from the `[health]` section.
+    let raw = RawConfig::parse(
+        "[health]\nkl_budget_analog_uncond = 1.2\nkl_budget_analog_cond = 1.2\n\
+         kl_budget_digital_uncond = 1.0\nkl_budget_digital_cond = 1.0\n",
+    )
+    .unwrap();
+    let cfg = Config::from_raw(&raw).unwrap();
+
+    for class in RequestClass::ALL.iter() {
+        let budget = cfg.health.kl_budget[class.index()];
+        let (cloud, oracle) = match class.name() {
+            name @ ("digital_uncond" | "digital_cond") => {
+                let cond = name == "digital_cond";
+                let onehot = if cond { [0.0, 1.0, 0.0] } else { [0.0; 3] };
+                let mut qnet = DigitalScoreNet::new(synth_weights(8));
+                qnet.set_kernel(KernelMode::Quant);
+                let onet = DigitalScoreNet::new(synth_weights(8));
+                let mut sq = DigitalSampler::new(&qnet, SamplerMode::Ode);
+                let mut so = DigitalSampler::new(&onet, SamplerMode::Ode);
+                if cond {
+                    sq = sq.with_guidance(2.0);
+                    so = so.with_guidance(2.0);
+                }
+                let mut rng = Rng::new(51);
+                let (cloud, _) = sq.sample_batched(1500, &onehot, 48, &mut rng);
+                let mut rng = Rng::new(52); // different seed: distribution-level
+                let (oracle, _) = so.sample_batched(1500, &onehot, 48, &mut rng);
+                (cloud, oracle)
+            }
+            name => {
+                let cond = name == "analog_cond";
+                let onehot = if cond { [0.0, 1.0, 0.0] } else { [0.0; 3] };
+                let w = synth_weights(9);
+                let mut qnet =
+                    AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal);
+                qnet.set_kernel(KernelMode::Quant);
+                let onet = AnalogScoreNet::from_conductances(&w, quiet(), NoiseModel::Ideal);
+                let cloud = analog_solve(&qnet, 500, &onehot, 120, 53);
+                let oracle = analog_solve(&onet, 500, &onehot, 120, 54);
+                (cloud, oracle)
+            }
+        };
+        // statistical parity: per-dim mean/std within estimation tolerance
+        for k in 0..2 {
+            let xq: Vec<f32> = cloud.iter().skip(k).step_by(2).copied().collect();
+            let xo: Vec<f32> = oracle.iter().skip(k).step_by(2).copied().collect();
+            let (mq, sq) = (stats::mean(&xq), stats::std(&xq));
+            let (mo, so) = (stats::mean(&xo), stats::std(&xo));
+            assert!((mq - mo).abs() < 0.15 * so.max(0.2),
+                    "{}: dim {k} mean {mq} vs {mo}", class.name());
+            assert!((sq - so).abs() / so.max(1e-9) < 0.15,
+                    "{}: dim {k} std {sq} vs {so}", class.name());
+        }
+        // probe-KL gate: same statistic and budgets the health monitor uses
+        let kl = stats::kl_points(&cloud, &oracle, 24, 2.0);
+        assert!(kl.is_finite() && kl < budget,
+                "{}: probe KL {kl:.3} exceeds budget {budget}", class.name());
+    }
 }
 
 #[test]
