@@ -521,6 +521,38 @@ fn main() -> anyhow::Result<()> {
                  &format!("off {health_off_sps:.0} / on {health_on_sps:.0} \
                            samples/s  ({health_overhead_pct:+.2}%)")]);
 
+    bench::section("slo engine overhead (burn-rate ticks vs serving, on vs off)");
+    // two monitors with identical health knobs on an aggressive 20 ms
+    // tick; the only difference is the SLO engine evaluating its
+    // burn-rate windows over the per-class latency histograms each tick
+    // (the hot-path recording itself rides the [obs] switch, measured
+    // above) — the delta is what the ISSUE's <3% budget bounds
+    let slo_mon = |enabled: bool| {
+        memdiff::obs::HealthMonitor::new_full(
+            memdiff::obs::HealthConfig {
+                tick_ms: 20,
+                probe_interval_ms: 0,
+                ..memdiff::obs::HealthConfig::default()
+            },
+            memdiff::obs::SloConfig { enabled, ..Default::default() },
+            Arc::clone(router.registry()),
+            Arc::clone(&router.mode_gate),
+            None,
+        )
+    };
+    let m_off = slo_mon(false);
+    m_off.start();
+    let slo_off_sps = health_load(total_mixed)?;
+    m_off.stop();
+    let m_on = slo_mon(true);
+    m_on.start();
+    let slo_on_sps = health_load(total_mixed)?;
+    m_on.stop();
+    let slo_overhead_pct = 100.0 * (slo_off_sps - slo_on_sps) / slo_off_sps;
+    bench::row(&["slo overhead (routed mixed load)",
+                 &format!("off {slo_off_sps:.0} / on {slo_on_sps:.0} \
+                           samples/s  ({slo_overhead_pct:+.2}%)")]);
+
     bench::write_json("BENCH_sampler_throughput.json", &[
         ("batch_size", B as f64),
         ("digital_scalar_samples_per_s", digital_scalar),
@@ -556,6 +588,9 @@ fn main() -> anyhow::Result<()> {
         ("health_on_samples_per_s", health_on_sps),
         ("health_off_samples_per_s", health_off_sps),
         ("health_overhead_pct", health_overhead_pct),
+        ("slo_on_samples_per_s", slo_on_sps),
+        ("slo_off_samples_per_s", slo_off_sps),
+        ("slo_overhead_pct", slo_overhead_pct),
     ])?;
     Ok(())
 }

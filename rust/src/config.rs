@@ -56,6 +56,18 @@
 //! kl_budget_digital_cond = 1.0
 //! reprogram_on_drift = false  # auto-heal: write-verify on a drift alert
 //! reprogram_tol_ms = 0.0015   # write-verify tolerance (mS)
+//!
+//! [slo]
+//! enabled = true          # master switch for the latency SLO engine
+//! p99_ms_digital = 50     # family shorthand: seeds both digital classes
+//! p99_ms_analog = 200     # family shorthand: seeds both analog classes
+//! p99_ms_digital_cond = 80  # per-class keys win over the family shorthand
+//! target_frac = 0.99      # fraction that must finish inside the objective
+//! fast_window_ms = 60000  # fast burn window (responsiveness)
+//! slow_window_ms = 1800000  # slow burn window (sustained-breach confirm)
+//! burn_threshold = 2.0    # burn rate that latches slo:<backend>:<class>
+//! clear_frac = 0.5        # hysteresis: clear below threshold * clear_frac
+//! streak = 1              # consecutive breaching ticks before the latch
 //! ```
 
 use std::collections::BTreeMap;
@@ -169,6 +181,10 @@ pub struct Config {
     /// thresholds, probe cadence, per-class KL budgets — see
     /// [`crate::obs::health`]).
     pub health: crate::obs::HealthConfig,
+    /// Latency-SLO knobs from the `[slo]` section (per-class p99
+    /// objectives, burn windows, latch thresholds — see
+    /// [`crate::obs::slo`]).
+    pub slo: crate::obs::SloConfig,
 }
 
 /// Typed `[jobs]` section — the config-file surface of
@@ -228,6 +244,7 @@ impl Default for Config {
             jobs: JobsConfig::default(),
             obs: crate::obs::ObsConfig::default(),
             health: crate::obs::HealthConfig::default(),
+            slo: crate::obs::SloConfig::default(),
         }
     }
 }
@@ -355,6 +372,53 @@ impl Config {
                     reprogram_tol_ms: raw
                         .get_parsed("health", "reprogram_tol_ms")?
                         .unwrap_or(h.reprogram_tol_ms),
+                }
+            },
+            slo: {
+                let s = d.slo;
+                let mut p99_ms = s.p99_ms;
+                for (i, class) in
+                    crate::coordinator::request::RequestClass::ALL.iter()
+                        .enumerate()
+                {
+                    // family shorthand seeds both classes of the family;
+                    // a per-class key wins over it
+                    let family = class.name()
+                        .split('_')
+                        .next()
+                        .unwrap_or_default();
+                    let fam_key = format!("p99_ms_{family}");
+                    if let Some(v) = raw.get_parsed("slo", &fam_key)? {
+                        p99_ms[i] = v;
+                    }
+                    let key = format!("p99_ms_{}", class.name());
+                    if let Some(v) = raw.get_parsed("slo", &key)? {
+                        p99_ms[i] = v;
+                    }
+                }
+                crate::obs::SloConfig {
+                    enabled: raw
+                        .get_parsed("slo", "enabled")?
+                        .unwrap_or(s.enabled),
+                    p99_ms,
+                    target_frac: raw
+                        .get_parsed("slo", "target_frac")?
+                        .unwrap_or(s.target_frac),
+                    fast_window_ms: raw
+                        .get_parsed("slo", "fast_window_ms")?
+                        .unwrap_or(s.fast_window_ms),
+                    slow_window_ms: raw
+                        .get_parsed("slo", "slow_window_ms")?
+                        .unwrap_or(s.slow_window_ms),
+                    burn_threshold: raw
+                        .get_parsed("slo", "burn_threshold")?
+                        .unwrap_or(s.burn_threshold),
+                    clear_frac: raw
+                        .get_parsed("slo", "clear_frac")?
+                        .unwrap_or(s.clear_frac),
+                    streak: raw
+                        .get_parsed("slo", "streak")?
+                        .unwrap_or(s.streak),
                 }
             },
         })
@@ -532,6 +596,30 @@ mod tests {
         assert!(plain.health.enabled);
         assert_eq!(plain.health.retention_dt_s, 0.0);
         let bad = RawConfig::parse("[health]\ntick_ms = fast\n").unwrap();
+        assert!(Config::from_raw(&bad).is_err());
+    }
+
+    #[test]
+    fn slo_section_parses_with_defaults() {
+        let raw = RawConfig::parse(
+            "[slo]\np99_ms_digital = 50\np99_ms_digital_cond = 80\n\
+             target_frac = 0.95\nburn_threshold = 4.0\n",
+        )
+        .unwrap();
+        let cfg = Config::from_raw(&raw).unwrap();
+        assert_eq!(cfg.slo.p99_ms[2], 50.0, "family shorthand seeds digital_uncond");
+        assert_eq!(cfg.slo.p99_ms[3], 80.0, "per-class key wins over shorthand");
+        assert_eq!(cfg.slo.target_frac, 0.95);
+        assert_eq!(cfg.slo.burn_threshold, 4.0);
+        let s = crate::obs::SloConfig::default();
+        assert_eq!(cfg.slo.p99_ms[0], s.p99_ms[0], "untouched analog keeps default");
+        assert_eq!(cfg.slo.fast_window_ms, s.fast_window_ms);
+        assert_eq!(cfg.slo.streak, s.streak);
+        assert!(cfg.slo.enabled, "enabled by default");
+        // absent section = all defaults
+        let plain = Config::from_raw(&RawConfig::parse("").unwrap()).unwrap();
+        assert_eq!(plain.slo, s);
+        let bad = RawConfig::parse("[slo]\ntarget_frac = most\n").unwrap();
         assert!(Config::from_raw(&bad).is_err());
     }
 

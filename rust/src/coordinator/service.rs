@@ -508,6 +508,7 @@ impl Service {
                             Ok(r) => r,
                             Err(payload) => {
                                 metrics.record_worker_panic();
+                                obs::flightrec::trigger_global("worker-panic");
                                 let msg = payload
                                     .downcast_ref::<&str>()
                                     .map(|s| s.to_string())
@@ -551,25 +552,45 @@ impl Service {
                         // deliver through this lane's ticket map only —
                         // completions on one backend never contend with
                         // another backend's submit/complete traffic
+                        // end-to-end latency per member (queue wait +
+                        // solve wall) feeds the SLO engine's per-class
+                        // histogram, exemplar-tagged with the trace
+                        let record_latency = |req: &GenRequest,
+                                              wait: &Duration| {
+                            if obs::enabled() {
+                                obs::obs().registry
+                                    .hist(obs::slo::REQUEST_LATENCY_HIST,
+                                          &[("backend", &bname),
+                                            ("class", req.class().name())])
+                                    .record_traced(
+                                        (*wait + wall).as_secs_f64(),
+                                        req.trace.0);
+                            }
+                        };
                         match result {
                             Ok(responses) => {
                                 // run_batch builds responses in request
                                 // order, so zipping recovers each trace
-                                for (resp, req) in responses
+                                for (resp, (req, wait)) in responses
                                     .into_iter()
-                                    .zip(batch.requests.iter())
+                                    .zip(batch.requests.iter()
+                                        .zip(batch.waits.iter()))
                                 {
                                     let id = resp.id;
                                     tickets.complete(b, id, Ok(resp));
+                                    record_latency(req, wait);
                                     obs::span(req.trace, Stage::Deliver,
                                               &bname, req.class().name(),
                                               Duration::ZERO);
                                 }
                             }
                             Err(e) => {
-                                for req in &batch.requests {
+                                for (req, wait) in batch.requests.iter()
+                                    .zip(batch.waits.iter())
+                                {
                                     tickets.complete(b, req.id,
                                                      Err(anyhow!("{e}")));
+                                    record_latency(req, wait);
                                     obs::span(req.trace, Stage::Deliver,
                                               &bname, req.class().name(),
                                               Duration::ZERO);
@@ -696,6 +717,8 @@ impl Service {
                 self.metrics.record_rejected();
                 self.metrics.record_backend_rejected(lane_idx);
                 self.metrics.set_backend_queue(lane_idx, queued_samples);
+                // a sustained shed burst black-boxes the overload
+                obs::flightrec::note_shed();
                 Err(SubmitError::Overloaded {
                     backend: self.registry.backend(lane_idx).name.clone(),
                     queued_samples,

@@ -137,9 +137,10 @@ pub struct Job {
     /// discarded and the job finalized as `Cancelled`.
     pub cancel_requested: bool,
     /// Trace identity: taken from the enqueueing request (so wire spans
-    /// and job attempts correlate), minted fresh on crash replay — trace
-    /// ids are process-local, a restored number could collide with the
-    /// new process's mint counter.
+    /// and job attempts correlate) and restored verbatim on crash replay
+    /// — minted ids carry a per-process epoch in their high bits, so a
+    /// persisted trace can't collide with the new incarnation's mints
+    /// and a job's pre-/post-restart spans join on one id.
     pub trace: crate::obs::TraceId,
 }
 
@@ -597,8 +598,12 @@ fn apply_record(inner: &mut Inner, j: &Json) -> anyhow::Result<()> {
                 error: None,
                 result: None,
                 cancel_requested: false,
-                // replay runs in a new process: fresh trace (see `Job`)
-                trace: crate::obs::TraceId::mint(),
+                // restore the persisted trace so replayed attempts keep
+                // their identity (see `Job`); absent/zero = mint fresh
+                trace: j.get("trace").and_then(|v| v.as_f64())
+                    .map(|v| crate::obs::TraceId(v as u64))
+                    .filter(|t| !t.is_none())
+                    .unwrap_or_else(crate::obs::TraceId::mint),
             };
             inner.jobs.insert(id, job);
             inner.next_id = inner.next_id.max(id + 1);
@@ -730,8 +735,11 @@ fn job_from_json(j: &Json) -> Option<Job> {
         error: j.get("err").and_then(|v| v.as_str()).map(String::from),
         result,
         cancel_requested: matches!(j.get("cancel_requested"), Some(Json::Bool(true))),
-        // snapshot restore = new process: fresh trace (see `Job`)
-        trace: crate::obs::TraceId::mint(),
+        // restore the persisted trace (see `Job`); absent/zero = mint
+        trace: j.get("trace").and_then(|v| v.as_f64())
+            .map(|v| crate::obs::TraceId(v as u64))
+            .filter(|t| !t.is_none())
+            .unwrap_or_else(crate::obs::TraceId::mint),
     })
 }
 
@@ -794,6 +802,29 @@ mod tests {
         // fresh enqueues never collide with replayed ids
         let c = s.enqueue(&req(1), 0, 0, 1000).unwrap();
         assert!(c > a);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trace_identity_survives_reopen_and_checkpoint() {
+        let dir = tmpdir("trace");
+        let t = crate::obs::TraceId::mint();
+        let a;
+        {
+            let s = JobStore::open(&dir).unwrap();
+            let mut r = req(1);
+            r.trace = t;
+            a = s.enqueue(&r, 0, 0, 60_000).unwrap();
+        }
+        {
+            let s = JobStore::open(&dir).unwrap();
+            assert_eq!(s.get(a).unwrap().trace, t,
+                       "log replay keeps the persisted trace");
+            s.checkpoint().unwrap();
+        }
+        let s = JobStore::open(&dir).unwrap();
+        assert_eq!(s.get(a).unwrap().trace, t,
+                   "snapshot restore keeps the persisted trace");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -34,9 +34,13 @@
 //!   tolerance, retry with exponential backoff + jitter, TTL result
 //!   retention, and submit-now/fetch-later wire ops.
 //! * [`obs`] — end-to-end observability: request tracing with per-stage
-//!   spans, a bounded metrics registry exported as Prometheus text and
-//!   JSON (`{"op":"stats"}`, `--metrics-listen`), and hot-path phase
-//!   timers that cost one atomic load when disabled.
+//!   spans and tail-bucket trace exemplars, a bounded metrics registry
+//!   exported as Prometheus text and JSON (`{"op":"stats"}`,
+//!   `--metrics-listen`), hot-path phase timers that cost one atomic
+//!   load when disabled, the analog health monitor + alert engine, a
+//!   burn-rate latency SLO engine over the `[slo]` per-class p99
+//!   objectives, and an incident flight recorder (`{"op":"dump"}`,
+//!   auto-triggered black-box dumps under `--state-dir`).
 //! * [`energy`] — analog-vs-digital latency & energy models behind the
 //!   paper's Fig. 3f/3g/4g/4h comparisons.
 //! * [`util`] — self-contained substrates (PRNG, JSON, tensors, stats,

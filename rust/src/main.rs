@@ -77,7 +77,7 @@ fn usage() -> ! {
          \x20                  [--metrics-listen 127.0.0.1:9198]\n\
          \x20 memdiff client   --connect HOST:PORT [--requests N] [--burst N]\n\
          \x20                  [--expect-overload] [--shutdown]\n\
-         \x20                  [--stats [--prom]]\n\
+         \x20                  [--stats [--prom]] [--dump]\n\
          \x20                  [--health | --age-device SECONDS | --reprogram]\n\
          \x20                  [--enqueue N [--defer-ms N] [--max-retries N] [--ttl-ms N]]\n\
          \x20                  [--fetch ID[,ID...] [--wait-ms N]] [--cancel ID]\n\
@@ -369,22 +369,43 @@ fn serve_listen(service: memdiff::coordinator::Service, addr: &str,
         None => None,
     };
     let runner_for_obs = runner.clone();
+    // the incident flight recorder rides on the durable state dir: the
+    // same Arc serves the wire `dump` op, the health monitor's
+    // alert-latch trigger, and (via install) the global trigger sites
+    // (worker panics, sustained overload sheds)
+    let recorder = match kv.get("state-dir") {
+        Some(dir) => {
+            let rec = Arc::new(memdiff::obs::FlightRecorder::new(
+                dir, Arc::clone(&service.metrics), route_summary.clone())?);
+            memdiff::obs::flightrec::install(Arc::clone(&rec));
+            println!("flight recorder: dumps in {}", rec.dir().display());
+            Some(rec)
+        }
+        None => None,
+    };
     // the analog health monitor: drift tracking, self-test probes and
     // the alert engine, ticking on its own background thread.  The same
     // Arc feeds the wire `health` op, /healthz and the JSONL flush, so
-    // all the export paths agree on the alert state.
+    // all the export paths agree on the alert state.  The SLO engine
+    // rides its tick; a newly-latched alert trips the flight recorder.
     let health = if cfg.health.enabled {
-        let mon = memdiff::obs::HealthMonitor::new(
+        let mon = memdiff::obs::HealthMonitor::new_full(
             cfg.health.clone(),
+            cfg.slo.clone(),
             Arc::clone(service.registry()),
-            Arc::clone(&service.mode_gate));
+            Arc::clone(&service.mode_gate),
+            recorder.clone());
+        if let Some(rec) = &recorder {
+            rec.attach_health(&mon);
+        }
         mon.start();
         Some(mon)
     } else {
         None
     };
-    let front = FrontEnd::bind_full(service, runner, health.clone(), addr,
-                                    FrontEndConfig {
+    let front = FrontEnd::bind_deployment(service, runner, health.clone(),
+                                          recorder, addr,
+                                          FrontEndConfig {
         max_conns: opt(kv, "max-conns", 64),
         ..FrontEndConfig::default()
     })?;
@@ -453,11 +474,36 @@ fn spawn_metrics_listener(addr: &str,
             for stream in listener.incoming() {
                 let Ok(mut stream) = stream else { continue };
                 let _ = stream.set_read_timeout(
-                    Some(std::time::Duration::from_millis(500)));
+                    Some(std::time::Duration::from_millis(100)));
+                // bounded request-line read: keep reading until the line
+                // terminator arrives, a slow-loris peer exhausts the
+                // 500 ms deadline, or the 4 KiB cap trips — a short
+                // first segment no longer truncates the request line
+                let deadline = std::time::Instant::now()
+                    + std::time::Duration::from_millis(500);
+                let mut head = Vec::with_capacity(256);
                 let mut buf = [0u8; 1024];
-                let n = stream.read(&mut buf).unwrap_or(0);
-                let head = String::from_utf8_lossy(&buf[..n]);
-                let path = head.split_whitespace().nth(1).unwrap_or("/");
+                loop {
+                    match stream.read(&mut buf) {
+                        Ok(0) => break,
+                        Ok(n) => {
+                            head.extend_from_slice(&buf[..n]);
+                            if head.contains(&b'\n') || head.len() >= 4096 {
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind()
+                            == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => break, // timeout or reset
+                    }
+                    if std::time::Instant::now() >= deadline {
+                        break;
+                    }
+                }
+                head.truncate(4096);
+                let head = String::from_utf8_lossy(&head);
+                let line = head.lines().next().unwrap_or("");
+                let path = line.split_whitespace().nth(1).unwrap_or("/");
                 if path == "/healthz" || path.starts_with("/healthz?") {
                     let (status, body) = match &health {
                         Some(mon) if !mon.healthy() => (
@@ -599,6 +645,28 @@ fn cmd_client(kv: &HashMap<String, String>, cfg: &Config) -> anyhow::Result<()> 
                 .get("stats")
                 .ok_or_else(|| anyhow::anyhow!("reply without stats"))?;
             println!("{}", stats.to_string());
+        }
+        return Ok(());
+    }
+
+    // --dump: ask the server for a flight-recorder dump (needs a server
+    // started with --state-dir); prints the dump path then the body
+    if kv.contains_key("dump") {
+        writer.write_all(protocol::dump_line(0).as_bytes())?;
+        writer.write_all(b"\n")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let msg = memdiff::util::json::Json::parse(line.trim())?;
+        anyhow::ensure!(
+            msg.get("status").and_then(|s| s.as_str()) == Some("ok"),
+            "dump op failed: {}", line.trim());
+        let path = msg
+            .get("path")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| anyhow::anyhow!("reply without path"))?;
+        println!("dump {path}");
+        if let Some(dump) = msg.get("dump") {
+            println!("{}", dump.to_string());
         }
         return Ok(());
     }

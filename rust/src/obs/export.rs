@@ -64,9 +64,12 @@ fn owned(labels: &[(&str, &str)]) -> Vec<(String, String)> {
 }
 
 /// Render one histogram family series: cumulative buckets at the
-/// non-empty log-bucket edges, then `+Inf`, `_sum`, `_count`.
+/// non-empty log-bucket edges, then `+Inf`, `_sum`, `_count`.  A
+/// non-empty `exemplars` slice (per-bucket `(trace, value)` pairs, 0 =
+/// none) appends OpenMetrics exemplar suffixes —
+/// `# {trace_id="T"} value` — to the bucket lines that retained one.
 fn render_hist(out: &mut String, name: &str, labels: &[(String, String)],
-               buckets: &[u64], sum: f64) {
+               buckets: &[u64], sum: f64, exemplars: &[(u64, f64)]) {
     let mut cum = 0u64;
     for (i, &c) in buckets.iter().enumerate() {
         if c == 0 {
@@ -77,7 +80,14 @@ fn render_hist(out: &mut String, name: &str, labels: &[(String, String)],
         if upper.is_finite() {
             let mut ls = labels.to_vec();
             ls.push(("le".to_string(), format!("{upper:.6e}")));
-            line(out, &format!("{name}_bucket"), &ls, cum as f64);
+            match exemplars.get(i) {
+                Some(&(t, v)) if t != 0 => {
+                    out.push_str(&format!(
+                        "{name}_bucket{} {cum} # {{trace_id=\"{t}\"}} {v}\n",
+                        labels_text(&ls)));
+                }
+                _ => line(out, &format!("{name}_bucket"), &ls, cum as f64),
+            }
         }
     }
     let mut ls = labels.to_vec();
@@ -89,7 +99,7 @@ fn render_hist(out: &mut String, name: &str, labels: &[(String, String)],
 
 fn render_summary_hist(out: &mut String, name: &str,
                        labels: &[(String, String)], s: &Summary) {
-    render_hist(out, name, labels, s.buckets(), s.sum());
+    render_hist(out, name, labels, s.buckets(), s.sum(), &[]);
 }
 
 /// The full Prometheus text exposition: coordinator snapshot + registry
@@ -279,7 +289,7 @@ fn render_registry_hists(out: &mut String, hists: &[(Key, HistSnapshot)]) {
             header(out, name, "histogram", "Registered histogram.");
             last = name;
         }
-        render_hist(out, name, labels, &h.buckets, h.sum);
+        render_hist(out, name, labels, &h.buckets, h.sum, &h.exemplars);
     }
 }
 
@@ -383,6 +393,33 @@ pub fn stats_json(snap: &MetricsSnapshot) -> Json {
             ])
         })
         .collect())));
+
+    // per-class request latency with the p99 exemplar: which request
+    // was the tail, and where its time went (span-ring breakdown)
+    top.push(("class_latency", Json::Arr(reg.hists.iter()
+        .filter(|((name, _), _)| name == super::slo::REQUEST_LATENCY_HIST)
+        .map(|((_, labels), h)| {
+            let get = |k: &str| labels.iter().find(|(lk, _)| lk == k)
+                .map(|(_, v)| v.clone()).unwrap_or_default();
+            let mut fields = vec![
+                ("backend", Json::Str(get("backend"))),
+                ("class", Json::Str(get("class"))),
+                ("count", jnum(h.count as f64)),
+                ("p50_s", jnum(h.p50)),
+                ("p99_s", jnum(h.p99)),
+            ];
+            if let Some((trace, v)) = h.exemplar_at(99.0) {
+                fields.push(("p99_exemplar_trace", jnum(trace as f64)));
+                fields.push(("p99_exemplar_s", jnum(v)));
+                let tl = o.ring.timeline(super::TraceId(trace));
+                fields.push(("p99_exemplar_stages",
+                    Json::Arr(tl.iter().map(|e| jobj(vec![
+                        ("stage", Json::Str(e.stage.name().to_string())),
+                        ("dur_us", jnum(e.dur_us as f64)),
+                    ])).collect())));
+            }
+            jobj(fields)
+        }).collect())));
 
     top.push(("phases", Json::Arr(Phase::ALL.iter().map(|p| {
         let (ns, n) = o.phases.read(*p);
@@ -503,6 +540,53 @@ mod tests {
             assert!(name.starts_with("memdiff_") || name.starts_with("t_"),
                     "unexpected family: {l}");
         }
+    }
+
+    #[test]
+    fn traced_buckets_render_openmetrics_exemplars() {
+        super::super::set_enabled(true);
+        let o = super::super::obs();
+        let t = super::super::TraceId::mint();
+        o.registry
+            .hist(super::super::slo::REQUEST_LATENCY_HIST,
+                  &[("backend", "rust"), ("class", "analog_cond")])
+            .record_traced(0.125, t.0);
+        let text = render_prometheus(&snap_with_traffic());
+        let needle = format!("# {{trace_id=\"{}\"}} 0.125", t.0);
+        assert!(text.contains(&needle), "exemplar suffix missing:\n{text}");
+        // exemplar lines still end in a parseable value
+        for l in text.lines().filter(|l| l.contains("trace_id")) {
+            let (_, val) = l.rsplit_once(' ').unwrap();
+            assert!(val.parse::<f64>().is_ok(), "bad exemplar line: {l}");
+        }
+    }
+
+    #[test]
+    fn stats_json_names_the_p99_exemplar_with_stage_breakdown() {
+        super::super::set_enabled(true);
+        let o = super::super::obs();
+        let t = super::super::TraceId::mint();
+        let h = o.registry.hist(
+            super::super::slo::REQUEST_LATENCY_HIST,
+            &[("backend", "rust"), ("class", "digital_cond")]);
+        for _ in 0..99 {
+            h.record(1e-3);
+        }
+        h.record_traced(2.0, t.0); // the tail request, traced
+        super::super::span(t, super::super::Stage::EngineSolve, "rust",
+                           "digital_cond", Duration::from_millis(1900));
+        let j = stats_json(&snap_with_traffic());
+        let classes = j.get("class_latency").and_then(|v| v.as_arr()).unwrap();
+        let mine = classes.iter().find(|c|
+            c.get("class").and_then(|v| v.as_str()) == Some("digital_cond"))
+            .expect("class entry present");
+        assert_eq!(mine.get("p99_exemplar_trace").and_then(|v| v.as_f64()),
+                   Some(t.0 as f64));
+        let stages =
+            mine.get("p99_exemplar_stages").and_then(|v| v.as_arr()).unwrap();
+        assert!(stages.iter().any(|s|
+            s.get("stage").and_then(|v| v.as_str()) == Some("engine_solve")),
+            "breakdown names the dominant stage");
     }
 
     #[test]

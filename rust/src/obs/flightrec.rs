@@ -1,0 +1,365 @@
+//! Incident flight recorder: an atomically-written black-box dump of
+//! the whole observability surface, captured at the moment something
+//! goes wrong.
+//!
+//! A dump is one JSON file under `<state-dir>/flightrec/` named
+//! `<ts_ms>-<reason>.json`, carrying the full stats object (coordinator
+//! snapshot, per-lane queue/job gauges, registry series with their
+//! trace exemplars, phase timers, recent span-ring timelines), the
+//! health/SLO report when a monitor is attached, the alert states, and
+//! the deployment's config fingerprint — everything an operator needs
+//! to answer "what was the server doing when it broke" after the
+//! process (and its in-memory ring) is long gone.
+//!
+//! Triggers:
+//!
+//! * **alert latch** — the health monitor dumps `alert-<name>` when a
+//!   rule transitions to firing (drift, probe, or `slo:` burn rules);
+//! * **worker panic** — the coordinator's `catch_unwind` arm dumps
+//!   `worker-panic` after containing an engine panic;
+//! * **sustained overload** — [`note_shed`] counts bounded-lane sheds
+//!   and dumps `overload-shed` when a burst overruns
+//!   [`SHED_BURST`] sheds inside [`SHED_WINDOW`];
+//! * **manual** — the `{"op":"dump"}` wire op / `memdiff client --dump`.
+//!
+//! Writes use the same atomic pattern as the job store's checkpoint
+//! (tmp + fsync + rename + dir fsync), a per-reason rate limit keeps a
+//! flapping alert from milling the disk, and a retention cap prunes the
+//! oldest dumps so the directory is bounded.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::coordinator::Metrics;
+use crate::util::json::Json;
+
+use super::health::HealthMonitor;
+use super::registry::Phase;
+
+/// Default retained dump files.
+pub const DEFAULT_CAP: usize = 16;
+/// Default per-reason rate limit.
+pub const DEFAULT_MIN_INTERVAL: Duration = Duration::from_secs(10);
+/// Sheds inside [`SHED_WINDOW`] that count as sustained overload.
+pub const SHED_BURST: u32 = 32;
+/// The overload-shed counting window.
+pub const SHED_WINDOW: Duration = Duration::from_secs(10);
+
+/// The recorder.  Constructed once per `--state-dir` deployment and
+/// shared (`Arc`) between the front-end (`dump` op), the health
+/// monitor (alert-latch trigger), and the global trigger sites.
+pub struct FlightRecorder {
+    dir: PathBuf,
+    cap: usize,
+    min_interval: Duration,
+    metrics: Arc<Metrics>,
+    /// Weak: the monitor holds a strong `Arc<FlightRecorder>` for its
+    /// alert-latch trigger, so a strong pointer back would leak both.
+    health: Mutex<Weak<HealthMonitor>>,
+    /// One-line deployment description, stamped into every dump.
+    fingerprint: String,
+    last_by_reason: Mutex<BTreeMap<String, Instant>>,
+}
+
+fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Reasons become filename components: keep alphanumerics and `-`/`_`,
+/// fold everything else (alert names carry `:`) to `_`.
+fn sanitize(reason: &str) -> String {
+    let mut s: String = reason
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+            c
+        } else {
+            '_'
+        })
+        .collect();
+    s.truncate(64);
+    if s.is_empty() {
+        s.push_str("unknown");
+    }
+    s
+}
+
+impl FlightRecorder {
+    /// Open (creating) `<state_dir>/flightrec` with default limits.
+    pub fn new(state_dir: impl AsRef<Path>, metrics: Arc<Metrics>,
+               fingerprint: String) -> anyhow::Result<FlightRecorder> {
+        Self::with_limits(state_dir, metrics, fingerprint, DEFAULT_CAP,
+                          DEFAULT_MIN_INTERVAL)
+    }
+
+    /// [`Self::new`] with explicit retention cap and per-reason rate
+    /// limit (tests use a tiny cap and a zero interval).
+    pub fn with_limits(state_dir: impl AsRef<Path>, metrics: Arc<Metrics>,
+                       fingerprint: String, cap: usize,
+                       min_interval: Duration)
+                       -> anyhow::Result<FlightRecorder> {
+        let dir = state_dir.as_ref().join("flightrec");
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        Ok(FlightRecorder {
+            dir,
+            cap: cap.max(1),
+            min_interval,
+            metrics,
+            health: Mutex::new(Weak::new()),
+            fingerprint,
+            last_by_reason: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Where dumps land (`<state-dir>/flightrec`).
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Attach the health monitor after construction (the monitor holds
+    /// the recorder, so the back-pointer must be weak).
+    pub fn attach_health(&self, mon: &Arc<HealthMonitor>) {
+        *self.health.lock().unwrap_or_else(|e| e.into_inner()) =
+            Arc::downgrade(mon);
+    }
+
+    /// Rate-limited trigger: dump unless `reason` dumped inside the
+    /// recorder's `min_interval`.  `None` = suppressed (or the write
+    /// failed — a black box must never take the server down with it).
+    pub fn trigger(&self, reason: &str) -> Option<PathBuf> {
+        {
+            let mut last =
+                self.last_by_reason.lock().unwrap_or_else(|e| e.into_inner());
+            let now = Instant::now();
+            if let Some(prev) = last.get(reason) {
+                if now.duration_since(*prev) < self.min_interval {
+                    return None;
+                }
+            }
+            last.insert(reason.to_string(), now);
+        }
+        self.dump(reason).ok()
+    }
+
+    /// Capture and atomically write one dump, pruning to the retention
+    /// cap.  Unconditional — the wire op uses this directly.
+    pub fn dump(&self, reason: &str) -> anyhow::Result<PathBuf> {
+        let body = self.capture(reason).to_string();
+        let name = sanitize(reason);
+        let ts = now_ms();
+        // a same-millisecond dump for the same reason bumps the stamp
+        // instead of clobbering the earlier file
+        let path = (0..1000)
+            .map(|i| self.dir.join(format!("{}-{name}.json", ts + i)))
+            .find(|p| !p.exists())
+            .unwrap_or_else(|| self.dir.join(format!("{ts}-{name}.json")));
+        let tmp = path.with_extension("json.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(body.as_bytes())?;
+            f.write_all(b"\n")?;
+            let _fsync = super::phase(Phase::Fsync);
+            f.sync_data()
+                .with_context(|| format!("fsync {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        #[cfg(unix)]
+        if let Ok(d) = std::fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        self.prune();
+        Ok(path)
+    }
+
+    /// The dump body: reason + fingerprint + alert/health/SLO state +
+    /// the full stats object (which carries the lane gauges, registry
+    /// exemplars, and span-ring timelines).
+    fn capture(&self, reason: &str) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("kind".into(), Json::Str("memdiff_flight_record".into()));
+        m.insert("ts_ms".into(), Json::Num(now_ms() as f64));
+        m.insert("reason".into(), Json::Str(reason.to_string()));
+        m.insert("fingerprint".into(), Json::Str(self.fingerprint.clone()));
+        if let Some(mon) =
+            self.health.lock().unwrap_or_else(|e| e.into_inner()).upgrade()
+        {
+            m.insert("health".into(), mon.health_json());
+            m.insert(
+                "firing".into(),
+                Json::Arr(mon.firing().into_iter().map(Json::Str).collect()),
+            );
+        }
+        m.insert("stats".into(),
+                 super::export::stats_json(&self.metrics.snapshot()));
+        Json::Obj(m)
+    }
+
+    /// Every retained dump path, oldest first.
+    pub fn dumps(&self) -> Vec<PathBuf> {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .map(|e| e.path())
+                    .filter(|p| {
+                        p.extension().and_then(|x| x.to_str()) == Some("json")
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        // <ts_ms>- prefixes sort chronologically as strings (13-digit
+        // millisecond stamps until the year 2286)
+        files.sort();
+        files
+    }
+
+    fn prune(&self) {
+        let files = self.dumps();
+        if files.len() > self.cap {
+            for old in &files[..files.len() - self.cap] {
+                let _ = std::fs::remove_file(old);
+            }
+        }
+    }
+}
+
+/// The process-global recorder, for trigger sites too deep to thread an
+/// `Arc` into (worker panic containment, overload shedding).
+static GLOBAL: OnceLock<Arc<FlightRecorder>> = OnceLock::new();
+
+/// Install the deployment's recorder as the global trigger target
+/// (first install wins; later calls are ignored).
+pub fn install(rec: Arc<FlightRecorder>) {
+    let _ = GLOBAL.set(rec);
+}
+
+/// The installed recorder, if any.
+pub fn global() -> Option<&'static Arc<FlightRecorder>> {
+    GLOBAL.get()
+}
+
+/// Fire-and-forget trigger through the global recorder (no-op when no
+/// `--state-dir` deployment installed one).
+pub fn trigger_global(reason: &str) {
+    if let Some(rec) = GLOBAL.get() {
+        let _ = rec.trigger(reason);
+    }
+}
+
+static SHED: Mutex<Option<(Instant, u32)>> = Mutex::new(None);
+
+/// Count one bounded-lane overload shed; a sustained burst
+/// ([`SHED_BURST`] sheds inside [`SHED_WINDOW`]) triggers an
+/// `overload-shed` dump.  Cheap when no recorder is installed.
+pub fn note_shed() {
+    if GLOBAL.get().is_none() {
+        return;
+    }
+    let fire = {
+        let mut w = SHED.lock().unwrap_or_else(|e| e.into_inner());
+        let now = Instant::now();
+        match &mut *w {
+            Some((t0, n)) if now.duration_since(*t0) <= SHED_WINDOW => {
+                *n += 1;
+                if *n >= SHED_BURST {
+                    *w = None; // reset the window after firing
+                    true
+                } else {
+                    false
+                }
+            }
+            _ => {
+                *w = Some((now, 1));
+                false
+            }
+        }
+    };
+    if fire {
+        trigger_global("overload-shed");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("memdiff_flightrec_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn recorder(dir: &Path, cap: usize, min: Duration) -> FlightRecorder {
+        FlightRecorder::with_limits(
+            dir, Arc::new(Metrics::new()), "test-deployment".into(), cap, min)
+            .unwrap()
+    }
+
+    #[test]
+    fn dump_is_atomic_wellformed_and_reason_tagged() {
+        let dir = tmp("atomic");
+        let rec = recorder(&dir, 8, Duration::ZERO);
+        let path = rec.dump("alert-slo:rust:digital_uncond").unwrap();
+        // reason sanitized into the filename, raw in the body
+        let fname = path.file_name().unwrap().to_str().unwrap();
+        assert!(fname.ends_with("-alert-slo_rust_digital_uncond.json"),
+                "{fname}");
+        let body = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(body.trim()).expect("dump parses as JSON");
+        assert_eq!(j.get("reason").and_then(|r| r.as_str()),
+                   Some("alert-slo:rust:digital_uncond"));
+        assert_eq!(j.get("fingerprint").and_then(|r| r.as_str()),
+                   Some("test-deployment"));
+        assert!(j.get("stats").is_some(), "full stats object embedded");
+        // the atomic write leaves no tmp litter behind
+        let litter: Vec<_> = std::fs::read_dir(rec.dir())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().and_then(|x| x.to_str())
+                        != Some("json"))
+            .collect();
+        assert!(litter.is_empty(), "{litter:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_cap_prunes_oldest() {
+        let dir = tmp("retention");
+        let rec = recorder(&dir, 3, Duration::ZERO);
+        let mut paths = Vec::new();
+        for i in 0..6 {
+            paths.push(rec.dump(&format!("r{i}")).unwrap());
+        }
+        let kept = rec.dumps();
+        assert_eq!(kept.len(), 3, "cap enforced: {kept:?}");
+        for old in &paths[..3] {
+            assert!(!old.exists(), "oldest pruned: {}", old.display());
+        }
+        for new in &paths[3..] {
+            assert!(new.exists(), "newest kept: {}", new.display());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trigger_rate_limits_per_reason() {
+        let dir = tmp("ratelimit");
+        let rec = recorder(&dir, 8, Duration::from_secs(60));
+        assert!(rec.trigger("flappy").is_some(), "first dump goes through");
+        assert!(rec.trigger("flappy").is_none(), "second suppressed");
+        assert!(rec.trigger("different").is_some(),
+                "limit is per reason, not global");
+        assert_eq!(rec.dumps().len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -31,14 +31,17 @@
 //! (residual write error lives in the program-error histogram, not the
 //! drift gauges), so the alert clears on the same tick.
 
+use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::alert::{AlertEngine, AlertRule, AlertSnapshot};
+use super::flightrec::FlightRecorder;
 use super::obs;
 use super::probe::{ProbeConfig, ProbeResult, ProbeRunner};
+use super::slo::{SloConfig, SloEngine};
 use crate::coordinator::deploy::EngineRegistry;
 use crate::coordinator::request::RequestClass;
 use crate::coordinator::service::ModeGate;
@@ -151,6 +154,11 @@ pub struct HealthMonitor {
     gate: Arc<ModeGate>,
     alerts: AlertEngine,
     probes: ProbeRunner,
+    slo: SloEngine,
+    /// Incident recorder: a newly-latched alert dumps `alert-<name>`.
+    recorder: Option<Arc<FlightRecorder>>,
+    /// Alerts firing after the previous tick (for the latch-edge diff).
+    seen_firing: Mutex<BTreeSet<String>>,
     last_drift: Mutex<Vec<BackendDrift>>,
     last_probes: Mutex<Vec<ProbeResult>>,
     last_reprogram: Mutex<Vec<ReprogramRecord>>,
@@ -164,6 +172,15 @@ pub struct HealthMonitor {
 impl HealthMonitor {
     pub fn new(cfg: HealthConfig, registry: Arc<EngineRegistry>,
                gate: Arc<ModeGate>) -> Arc<HealthMonitor> {
+        Self::new_full(cfg, SloConfig::default(), registry, gate, None)
+    }
+
+    /// [`Self::new`] plus the deployment extras: the `[slo]` objectives
+    /// and the flight recorder that captures newly-latched alerts.
+    pub fn new_full(cfg: HealthConfig, slo_cfg: SloConfig,
+                    registry: Arc<EngineRegistry>, gate: Arc<ModeGate>,
+                    recorder: Option<Arc<FlightRecorder>>)
+                    -> Arc<HealthMonitor> {
         let probes = ProbeRunner::new(
             ProbeConfig {
                 samples: cfg.probe_samples,
@@ -171,12 +188,16 @@ impl HealthMonitor {
                 seed: cfg.probe_seed,
             },
             Arc::clone(&registry));
+        let slo = SloEngine::new(slo_cfg, Arc::clone(&registry));
         Arc::new(HealthMonitor {
             cfg,
             registry,
             gate,
             alerts: AlertEngine::new(),
             probes,
+            slo,
+            recorder,
+            seen_firing: Mutex::new(BTreeSet::new()),
             last_drift: Mutex::new(Vec::new()),
             last_probes: Mutex::new(Vec::new()),
             last_reprogram: Mutex::new(Vec::new()),
@@ -216,19 +237,37 @@ impl HealthMonitor {
     }
 
     /// One synchronous monitor pass: retention clock → drift refresh +
-    /// rules → due probes → optional drift-triggered reprogram.
+    /// rules → SLO burn rates → due probes → optional drift-triggered
+    /// reprogram → flight-record any alert that latched this tick.
     pub fn tick(&self) {
         self.ticks.fetch_add(1, Ordering::Relaxed);
         if self.cfg.retention_dt_s > 0.0 {
             self.age_all(self.cfg.retention_dt_s);
         }
         self.refresh_drift();
+        self.slo.tick(&self.alerts);
         if self.cfg.probe_interval_ms > 0 && self.probe_due() {
             self.probe_now();
         }
         if self.cfg.reprogram_on_drift && self.any_drift_alert() {
             self.reprogram_all();
         }
+        self.record_latched_alerts();
+    }
+
+    /// Dump a flight record for every alert that newly latched since the
+    /// previous tick (edge-triggered; the recorder's own per-reason rate
+    /// limit covers a rule flapping across ticks).
+    fn record_latched_alerts(&self) {
+        let Some(rec) = &self.recorder else { return };
+        let firing: BTreeSet<String> =
+            self.alerts.firing().into_iter().collect();
+        let mut seen =
+            self.seen_firing.lock().unwrap_or_else(|e| e.into_inner());
+        for name in firing.difference(&seen) {
+            let _ = rec.trigger(&format!("alert-{name}"));
+        }
+        *seen = firing;
     }
 
     fn probe_due(&self) -> bool {
@@ -404,6 +443,11 @@ impl HealthMonitor {
         &self.alerts
     }
 
+    /// The SLO evaluator (burn-rate state), for direct inspection.
+    pub fn slo(&self) -> &SloEngine {
+        &self.slo
+    }
+
     /// Full health state as JSON (the `{"op":"health"}` payload and the
     /// `"health"` key of the JSONL flush).
     pub fn health_json(&self) -> Json {
@@ -423,6 +467,7 @@ impl HealthMonitor {
             ("probes", Json::Arr(probes.iter().map(probe_json).collect())),
             ("reprogram",
              Json::Arr(reprog.iter().map(reprogram_json).collect())),
+            ("slo", self.slo.status_json()),
             ("ticks", Json::Num(self.ticks.load(Ordering::Relaxed) as f64)),
             ("reprograms",
              Json::Num(self.reprograms.load(Ordering::Relaxed) as f64)),
@@ -738,6 +783,43 @@ mod tests {
         for p in last.iter() {
             assert!(p.ok(), "{}:{} -> {:?}", p.backend, p.class, p.error);
         }
+    }
+
+    #[test]
+    fn latched_alert_writes_a_flight_record() {
+        let dir = std::env::temp_dir().join(
+            format!("memdiff_health_fr_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let rec = Arc::new(FlightRecorder::with_limits(
+            &dir, Arc::new(crate::coordinator::Metrics::new()),
+            "health-test".into(), 8, Duration::ZERO).unwrap());
+        let mut reg = EngineRegistry::new();
+        reg.add_backend("analog", Arc::new(FakeDevice::new()), 1).unwrap();
+        for class in RequestClass::ALL {
+            reg.route_class(class, "analog").unwrap();
+        }
+        let mon = HealthMonitor::new_full(
+            quiet_cfg(), SloConfig::default(), Arc::new(reg),
+            Arc::new(ModeGate::new()), Some(Arc::clone(&rec)));
+        rec.attach_health(&mon);
+
+        mon.tick();
+        assert!(rec.dumps().is_empty(), "healthy tick: no dump");
+
+        mon.age_all(1e12);
+        mon.tick();
+        let dumps = rec.dumps();
+        assert_eq!(dumps.len(), 1, "latch edge dumped once: {dumps:?}");
+        let fname = dumps[0].file_name().unwrap().to_str().unwrap();
+        assert!(fname.contains("alert-drift_analog"), "{fname}");
+        let body = std::fs::read_to_string(&dumps[0]).unwrap();
+        assert!(body.contains("drift:analog"),
+                "dump names the breaching rule");
+
+        mon.tick();
+        assert_eq!(rec.dumps().len(), 1,
+                   "still-firing alert doesn't re-dump every tick");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -54,18 +54,47 @@
 //!   that latch named alerts (`memdiff_alert{name=}`), driving
 //!   `/healthz`, `{"op":"health"}`, `memdiff client --health`, and the
 //!   JSONL flush.
+//!
+//! ## Latency SLOs and incident capture
+//!
+//! The ISSUE-10 tentpole turns the telemetry into operable objectives:
+//!
+//! * [`slo`] — [`SloEngine`]: per-[`RequestClass`] p99 latency
+//!   objectives from the `[slo]` config section, evaluated as
+//!   multi-window burn rates (fast/slow windows over the cumulative
+//!   request-latency histograms) that feed `slo:<backend>:<class>`
+//!   rules into the same [`AlertEngine`], plus the
+//!   `memdiff_slo_budget_remaining{class=}` /
+//!   `memdiff_slo_burn_rate{class=,window=}` gauges.
+//! * **Trace exemplars** — tail histogram buckets retain the most
+//!   recent [`TraceId`] that landed there
+//!   ([`registry::AtomicHist::record_traced`]); the Prometheus
+//!   exposition renders OpenMetrics exemplars and `{"op":"stats"}`
+//!   names the p99 request with its stage breakdown.
+//! * [`flightrec`] — [`FlightRecorder`]: an atomic black-box dump
+//!   (span ring, metrics snapshot, health/SLO state, config
+//!   fingerprint) written to `<state-dir>/flightrec/<ts>-<reason>.json`
+//!   on alert latch, worker panic, or sustained overload shed, with a
+//!   retention cap, the `{"op":"dump"}` wire op, and
+//!   `memdiff client --dump`.
+//!
+//! [`RequestClass`]: crate::coordinator::request::RequestClass
 
 pub mod alert;
 pub mod export;
+pub mod flightrec;
 pub mod health;
 pub mod probe;
 pub mod registry;
+pub mod slo;
 pub mod trace;
 
 pub use alert::{AlertEngine, AlertRule, AlertSnapshot};
+pub use flightrec::FlightRecorder;
 pub use health::{DeviceHealth, HealthConfig, HealthMonitor};
 pub use probe::{ProbeConfig, ProbeResult, ProbeRunner};
 pub use registry::{AtomicHist, Counter, Gauge, Phase, PhaseTimers, Registry};
+pub use slo::{SloConfig, SloEngine};
 pub use trace::{SpanEvent, SpanRing, Stage, TraceId};
 
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -183,7 +212,7 @@ pub fn span(trace: TraceId, stage: Stage, backend: &str, class: &str,
     o.registry
         .hist("memdiff_stage_latency_seconds",
               &[("stage", stage.name()), ("backend", backend), ("class", class)])
-        .record(secs);
+        .record_traced(secs, trace.0);
     if !trace.is_none() {
         let dur_us = dur.as_micros() as u64;
         let now = o.now_us();

@@ -58,6 +58,13 @@ pub struct AtomicHist {
     /// Σ values, accumulated as f64 bits via CAS (contention here is one
     /// batch completion at a time — negligible).
     sum_bits: AtomicU64,
+    /// Per-bucket exemplar: the trace id of the most recent traced
+    /// sample that landed in the bucket (0 = none yet).  Two relaxed
+    /// stores per traced record; a torn trace/value pair across the two
+    /// arrays only mislabels one exemplar, never corrupts the counts.
+    exemplar_trace: Box<[AtomicU64; LOG_BUCKETS]>,
+    /// The exemplar sample's value, as f64 bits.
+    exemplar_bits: Box<[AtomicU64; LOG_BUCKETS]>,
 }
 
 impl AtomicHist {
@@ -66,13 +73,26 @@ impl AtomicHist {
             buckets: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
             count: AtomicU64::new(0),
             sum_bits: AtomicU64::new(0f64.to_bits()),
+            exemplar_trace: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
+            exemplar_bits: Box::new(
+                std::array::from_fn(|_| AtomicU64::new(0f64.to_bits()))),
         }
     }
 
     pub fn record(&self, v: f64) {
+        self.record_traced(v, 0);
+    }
+
+    /// Record `v` and, when `trace` is nonzero, retain it as the
+    /// bucket's exemplar — the answer to "which request was the p99".
+    pub fn record_traced(&self, v: f64, trace: u64) {
         let i = crate::util::stats::log_bucket_index(v);
         self.buckets[i].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
+        if trace != 0 {
+            self.exemplar_bits[i].store(v.to_bits(), Ordering::Relaxed);
+            self.exemplar_trace[i].store(trace, Ordering::Relaxed);
+        }
         let mut cur = self.sum_bits.load(Ordering::Relaxed);
         loop {
             let next = (f64::from_bits(cur) + v).to_bits();
@@ -82,6 +102,15 @@ impl AtomicHist {
                 Err(seen) => cur = seen,
             }
         }
+    }
+
+    /// Per-bucket `(trace, value)` exemplars (trace 0 = none recorded).
+    pub fn exemplars(&self) -> Vec<(u64, f64)> {
+        (0..LOG_BUCKETS)
+            .map(|i| (self.exemplar_trace[i].load(Ordering::Relaxed),
+                      f64::from_bits(
+                          self.exemplar_bits[i].load(Ordering::Relaxed))))
+            .collect()
     }
 
     pub fn count(&self) -> u64 {
@@ -233,6 +262,7 @@ impl Registry {
                 p50: h.percentile(50.0),
                 p90: h.percentile(90.0),
                 p99: h.percentile(99.0),
+                exemplars: h.exemplars(),
             }))
             .collect();
         RegistrySnapshot { counters, gauges, hists }
@@ -253,6 +283,36 @@ pub struct HistSnapshot {
     pub p50: f64,
     pub p90: f64,
     pub p99: f64,
+    /// Per-bucket `(trace, value)` exemplars — trace 0 = none.
+    pub exemplars: Vec<(u64, f64)>,
+}
+
+impl HistSnapshot {
+    /// The exemplar nearest (from above) to the quantile `q`'s bucket:
+    /// the concrete request behind an approximate percentile.  Walks
+    /// from the quantile's bucket upward so a tail exemplar wins when
+    /// the exact bucket never saw a traced sample.
+    pub fn exemplar_at(&self, q: f64) -> Option<(u64, f64)> {
+        let total: u64 = self.buckets.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let rank = ((q / 100.0) * (total as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        let mut at = self.buckets.len() - 1;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen > rank {
+                at = i;
+                break;
+            }
+        }
+        self.exemplars[at..]
+            .iter()
+            .chain(self.exemplars[..at].iter().rev())
+            .find(|(t, _)| *t != 0)
+            .copied()
+    }
 }
 
 #[cfg(test)]
@@ -285,6 +345,46 @@ mod tests {
         assert!((p50 / 0.050 - 1.0).abs() < 0.125, "p50={p50}");
         let p99 = h.percentile(99.0);
         assert!(p99 >= p50);
+    }
+
+    #[test]
+    fn traced_records_keep_bucket_exemplars() {
+        let r = Registry::new();
+        let h = r.hist("memdiff_req_lat", &[("class", "digital_uncond")]);
+        // bulk of fast untraced samples, one slow traced outlier
+        for _ in 0..99 {
+            h.record(1e-3);
+        }
+        h.record_traced(5.0, 0xABCD);
+        let snap = r.snapshot();
+        let (_, hs) = snap
+            .hists
+            .iter()
+            .find(|(k, _)| k.0 == "memdiff_req_lat")
+            .expect("series snapshotted");
+        let (trace, val) = hs.exemplar_at(99.0).expect("tail exemplar");
+        assert_eq!(trace, 0xABCD);
+        assert!((val - 5.0).abs() < 1e-9);
+        // untraced records never install an exemplar
+        let h2 = r.hist("memdiff_untraced", &[]);
+        h2.record(0.5);
+        assert!(h2.exemplars().iter().all(|(t, _)| *t == 0));
+    }
+
+    #[test]
+    fn exemplar_falls_back_when_quantile_bucket_untraced() {
+        let r = Registry::new();
+        let h = r.hist("memdiff_fallback", &[]);
+        // traced sample in a low bucket, untraced mass above it: the
+        // wrap-around walk still surfaces the only traced request
+        h.record_traced(1e-3, 7);
+        for _ in 0..50 {
+            h.record(1.0);
+        }
+        let snap = r.snapshot();
+        let (_, hs) = snap.hists.iter()
+            .find(|(k, _)| k.0 == "memdiff_fallback").unwrap();
+        assert_eq!(hs.exemplar_at(99.0).map(|(t, _)| t), Some(7));
     }
 
     #[test]

@@ -1,0 +1,405 @@
+//! Latency SLO engine: per-class p99 objectives tracked as
+//! multi-window burn rates over the cumulative request-latency
+//! histograms, feeding the shared [`AlertEngine`].
+//!
+//! ## Burn-rate semantics
+//!
+//! An objective says "`target_frac` of `<class>` requests finish inside
+//! `p99_ms_<class>`".  The error budget over any window is therefore
+//! `1 - target_frac` of its traffic; the **burn rate** is how fast the
+//! deployment is spending it:
+//!
+//! ```text
+//! burn(window) = bad_fraction(window) / (1 - target_frac)
+//! ```
+//!
+//! `1.0` means spending exactly the budget; `2.0` means the budget is
+//! gone in half the window.  Following the multi-window pattern, the
+//! alert observes `min(burn_fast, burn_slow)`: the fast window makes
+//! the alert respond quickly and clear quickly, the slow window keeps
+//! one short spike from latching it.  Both windows are computed as
+//! **deltas of the cumulative histogram counters** against a
+//! time-stamped snapshot ring — there is no second recording path on
+//! the hot path, the engine only reads what the delivery loop already
+//! records into `memdiff_request_latency_class_seconds`.
+//!
+//! Rules are named `slo:<backend>:<class>` (e.g. `slo:rust:digital_uncond`)
+//! and run through the same threshold + hysteresis + streak latch as
+//! every other alert, so `/healthz`, `{"op":"health"}`, and
+//! `memdiff_alert{name=}` report SLO breaches with no extra wiring.
+//!
+//! Exported gauges, refreshed every tick:
+//!
+//! * `memdiff_slo_burn_rate{class=,window="fast"|"slow"}`
+//! * `memdiff_slo_budget_remaining{class=}` — the slow window's budget
+//!   left as a fraction (1 = untouched, 0 = exhausted, negative =
+//!   overspent).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::deploy::EngineRegistry;
+use crate::coordinator::request::RequestClass;
+use crate::util::json::Json;
+use crate::util::stats::log_bucket_upper;
+
+use super::alert::{AlertEngine, AlertRule};
+use super::obs;
+
+/// Histogram the delivery loop records end-to-end request latency into
+/// (queue wait + solve wall, seconds) — the series the SLO engine reads.
+pub const REQUEST_LATENCY_HIST: &str = "memdiff_request_latency_class_seconds";
+
+/// The `[slo]` config section.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloConfig {
+    /// Master switch: off = no rules evaluated, no gauges exported.
+    pub enabled: bool,
+    /// Per-class latency objective in milliseconds, indexed by
+    /// [`RequestClass::index`].  The default is deliberately generous
+    /// (30 s) so an unconfigured deployment exports the series without
+    /// ever firing.
+    pub p99_ms: [f64; 4],
+    /// Fraction of requests that must finish inside the objective.
+    pub target_frac: f64,
+    /// Fast burn window (responsiveness; 1 min by default).
+    pub fast_window_ms: u64,
+    /// Slow burn window (sustained-breach confirmation; 30 min).
+    pub slow_window_ms: u64,
+    /// Burn rate that latches the alert (both windows must exceed it).
+    pub burn_threshold: f64,
+    /// Hysteresis: the alert clears below `burn_threshold * clear_frac`.
+    pub clear_frac: f64,
+    /// Consecutive breaching ticks before the alert latches.
+    pub streak: u32,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            enabled: true,
+            p99_ms: [30_000.0; 4],
+            target_frac: 0.99,
+            fast_window_ms: 60_000,
+            slow_window_ms: 1_800_000,
+            burn_threshold: 2.0,
+            clear_frac: 0.5,
+            streak: 1,
+        }
+    }
+}
+
+/// One class's last evaluation — the `"slo"` block of the health report
+/// and the flight recorder's breach context.
+#[derive(Debug, Clone)]
+pub struct SloClassState {
+    pub class: RequestClass,
+    pub backend: String,
+    /// The alert rule this class feeds (`slo:<backend>:<class>`).
+    pub rule: String,
+    pub p99_ms: f64,
+    pub burn_fast: f64,
+    pub burn_slow: f64,
+    pub budget_remaining: f64,
+    /// Cumulative requests / budget breaches since boot.
+    pub total: u64,
+    pub bad: u64,
+    pub firing: bool,
+}
+
+impl SloClassState {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("class".into(), Json::Str(self.class.name().into()));
+        m.insert("backend".into(), Json::Str(self.backend.clone()));
+        m.insert("rule".into(), Json::Str(self.rule.clone()));
+        m.insert("p99_ms".into(), Json::Num(self.p99_ms));
+        m.insert("burn_fast".into(), Json::Num(self.burn_fast));
+        m.insert("burn_slow".into(), Json::Num(self.burn_slow));
+        m.insert("budget_remaining".into(), Json::Num(self.budget_remaining));
+        m.insert("total".into(), Json::Num(self.total as f64));
+        m.insert("bad".into(), Json::Num(self.bad as f64));
+        m.insert("firing".into(), Json::Bool(self.firing));
+        Json::Obj(m)
+    }
+}
+
+/// One time-stamped cumulative reading: (when, total, bad).
+type Reading = (Instant, u64, u64);
+
+/// The SLO evaluator.  Owns no alert state — it feeds whichever
+/// [`AlertEngine`] the caller passes to [`Self::tick`] (the health
+/// monitor's, so every export path agrees).
+pub struct SloEngine {
+    cfg: SloConfig,
+    registry: Arc<EngineRegistry>,
+    /// Per-class snapshot ring, pruned to the slow window.
+    windows: Mutex<[Vec<Reading>; 4]>,
+    /// Last evaluation per class, for the JSON report.
+    last: Mutex<Vec<SloClassState>>,
+}
+
+impl SloEngine {
+    pub fn new(cfg: SloConfig, registry: Arc<EngineRegistry>) -> SloEngine {
+        SloEngine {
+            cfg,
+            registry,
+            windows: Mutex::new(std::array::from_fn(|_| Vec::new())),
+            last: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn config(&self) -> &SloConfig {
+        &self.cfg
+    }
+
+    /// Read one class's cumulative (total, bad) from its latency
+    /// histogram: bad = samples landing in buckets above the budget.
+    fn cumulative(&self, backend: &str, class: RequestClass) -> (u64, u64) {
+        let budget_s = self.cfg.p99_ms[class.index()] / 1e3;
+        let h = obs().registry.hist(
+            REQUEST_LATENCY_HIST,
+            &[("backend", backend), ("class", class.name())]);
+        let buckets = h.buckets();
+        let mut total = 0u64;
+        let mut good = 0u64;
+        for (i, &c) in buckets.iter().enumerate() {
+            total += c;
+            // tolerance keeps a sample exactly on the budget "good"
+            // despite the log-bucket edge falling a hair above it
+            if log_bucket_upper(i) <= budget_s * 1.000_001 {
+                good += c;
+            }
+        }
+        (total, total - good)
+    }
+
+    /// Burn rate over `window`, as a delta against the snapshot ring:
+    /// baseline is the newest reading at least `window` old (or the
+    /// oldest retained).  No traffic in the window = burn 0.
+    fn burn(ring: &[Reading], now: Instant, window: Duration,
+            cur: (u64, u64), target_frac: f64) -> (f64, f64) {
+        let base = ring
+            .iter()
+            .rev()
+            .find(|(t, _, _)| now.duration_since(*t) >= window)
+            .or_else(|| ring.first());
+        let (t0, b0) = match base {
+            Some(&(_, t0, b0)) => (t0, b0),
+            None => (0, 0),
+        };
+        let d_total = cur.0.saturating_sub(t0);
+        let d_bad = cur.1.saturating_sub(b0);
+        if d_total == 0 {
+            return (0.0, 0.0);
+        }
+        let bad_frac = d_bad as f64 / d_total as f64;
+        (bad_frac / (1.0 - target_frac).max(1e-9), bad_frac)
+    }
+
+    /// Evaluate every routed class once: refresh the gauges, feed the
+    /// `slo:` rules into `alerts`, and return the per-class states.
+    /// Call from the health monitor's tick (or directly in tests).
+    pub fn tick(&self, alerts: &AlertEngine) -> Vec<SloClassState> {
+        if !self.cfg.enabled {
+            return Vec::new();
+        }
+        let now = Instant::now();
+        let slow = Duration::from_millis(self.cfg.slow_window_ms.max(1));
+        let fast = Duration::from_millis(self.cfg.fast_window_ms.max(1));
+        let reg = &obs().registry;
+        let mut states = Vec::new();
+        let mut windows =
+            self.windows.lock().unwrap_or_else(|e| e.into_inner());
+        for class in RequestClass::ALL {
+            let Some(bi) = self.registry.backend_index(class) else {
+                continue;
+            };
+            let backend = self.registry.backend(bi).name.clone();
+            let cur = self.cumulative(&backend, class);
+            let ring = &mut windows[class.index()];
+            let (burn_fast, _) =
+                Self::burn(ring, now, fast, cur, self.cfg.target_frac);
+            let (burn_slow, bad_frac_slow) =
+                Self::burn(ring, now, slow, cur, self.cfg.target_frac);
+            ring.push((now, cur.0, cur.1));
+            ring.retain(|(t, _, _)| now.duration_since(*t) <= slow);
+            let budget_remaining =
+                1.0 - bad_frac_slow / (1.0 - self.cfg.target_frac).max(1e-9);
+            reg.gauge("memdiff_slo_burn_rate",
+                      &[("class", class.name()), ("window", "fast")])
+                .set(burn_fast);
+            reg.gauge("memdiff_slo_burn_rate",
+                      &[("class", class.name()), ("window", "slow")])
+                .set(burn_slow);
+            reg.gauge("memdiff_slo_budget_remaining",
+                      &[("class", class.name())])
+                .set(budget_remaining);
+            // multi-window: only a burn sustained across BOTH windows
+            // latches, and the faster decay of min() clears it sooner
+            let rule = AlertRule::new(
+                format!("slo:{}:{}", backend, class.name()),
+                self.cfg.burn_threshold,
+                self.cfg.burn_threshold * self.cfg.clear_frac,
+                self.cfg.streak,
+            );
+            let firing = alerts.observe(&rule, burn_fast.min(burn_slow));
+            states.push(SloClassState {
+                class,
+                backend,
+                rule: rule.name.clone(),
+                p99_ms: self.cfg.p99_ms[class.index()],
+                burn_fast,
+                burn_slow,
+                budget_remaining,
+                total: cur.0,
+                bad: cur.1,
+                firing,
+            });
+        }
+        *self.last.lock().unwrap_or_else(|e| e.into_inner()) =
+            states.clone();
+        states
+    }
+
+    /// The last evaluation, as the health report's `"slo"` array.
+    pub fn status_json(&self) -> Json {
+        Json::Arr(
+            self.last
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .iter()
+                .map(|s| s.to_json())
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SolverFamily;
+    use crate::coordinator::service::Engine;
+    use crate::coordinator::SolverChoice;
+    use crate::util::rng::Rng;
+
+    // the SLO gauges are keyed by class only — serialize tests that set
+    // and assert them on the shared global registry
+    static GAUGE_LOCK: Mutex<()> = Mutex::new(());
+
+    struct NullEngine;
+
+    impl Engine for NullEngine {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn n_classes(&self) -> usize {
+            3
+        }
+        fn generate(&self, _s: SolverChoice, _oh: &[f32], _g: f32,
+                    n: usize, _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+            Ok(vec![0.0; n * 2])
+        }
+    }
+
+    fn registry() -> Arc<EngineRegistry> {
+        let mut reg = EngineRegistry::new();
+        reg.add_backend("rust", Arc::new(NullEngine), 1).unwrap();
+        reg.route_family(SolverFamily::Analog, "rust").unwrap();
+        reg.route_family(SolverFamily::Digital, "rust").unwrap();
+        Arc::new(reg)
+    }
+
+    /// Tight windows so the test drives a full latch → clear cycle in
+    /// tens of milliseconds.
+    fn cfg(p99_ms: f64) -> SloConfig {
+        SloConfig {
+            p99_ms: [p99_ms; 4],
+            target_frac: 0.9,
+            fast_window_ms: 40,
+            slow_window_ms: 120,
+            burn_threshold: 1.0,
+            clear_frac: 0.5,
+            streak: 1,
+            ..SloConfig::default()
+        }
+    }
+
+    fn feed(class: RequestClass, secs: f64, n: usize) {
+        let h = obs().registry.hist(
+            REQUEST_LATENCY_HIST,
+            &[("backend", "rust"), ("class", class.name())]);
+        for _ in 0..n {
+            h.record_traced(secs, crate::obs::TraceId::mint().0);
+        }
+    }
+
+    #[test]
+    fn sustained_breach_latches_and_clears_through_hysteresis() {
+        let _g = GAUGE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        crate::obs::set_enabled(true);
+        let class = RequestClass {
+            family: SolverFamily::Digital,
+            conditional: false,
+        };
+        let slo = SloEngine::new(cfg(1.0), registry());
+        let alerts = AlertEngine::new();
+        let rule = "slo:rust:digital_uncond";
+
+        // healthy traffic: well inside the 1 ms budget
+        feed(class, 1e-4, 50);
+        slo.tick(&alerts);
+        assert!(!alerts.is_firing(rule), "{:?}", alerts.firing());
+
+        // sustained breach: every request blows the budget
+        feed(class, 0.05, 50);
+        std::thread::sleep(Duration::from_millis(5));
+        let states = slo.tick(&alerts);
+        assert!(alerts.is_firing(rule), "burn should latch: {states:?}");
+        let st = states
+            .iter()
+            .find(|s| s.class == class)
+            .expect("digital_uncond evaluated");
+        assert!(st.firing && st.burn_fast > 1.0 && st.burn_slow > 1.0,
+                "{st:?}");
+        assert!(st.budget_remaining < 1.0);
+
+        // load stops; once both windows roll past the breach the burn
+        // decays to 0 and the latch clears through the hysteresis band
+        std::thread::sleep(Duration::from_millis(150));
+        slo.tick(&alerts);
+        std::thread::sleep(Duration::from_millis(10));
+        slo.tick(&alerts);
+        assert!(!alerts.is_firing(rule),
+                "burn 0 after the windows roll: {:?}", alerts.firing());
+    }
+
+    #[test]
+    fn idle_classes_export_gauges_without_firing() {
+        let _g = GAUGE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        crate::obs::set_enabled(true);
+        let slo = SloEngine::new(SloConfig::default(), registry());
+        let alerts = AlertEngine::new();
+        let states = slo.tick(&alerts);
+        assert_eq!(states.len(), 4, "every routed class evaluated");
+        assert!(!alerts.any_firing());
+        for class in RequestClass::ALL {
+            let g = obs().registry.gauge(
+                "memdiff_slo_budget_remaining", &[("class", class.name())]);
+            assert_eq!(g.get(), 1.0, "idle budget untouched for {class}");
+        }
+        // and the report names every rule
+        let j = slo.status_json().to_string();
+        assert!(j.contains("slo:rust:digital_uncond"), "{j}");
+    }
+
+    #[test]
+    fn disabled_engine_is_inert() {
+        let slo = SloEngine::new(
+            SloConfig { enabled: false, ..SloConfig::default() }, registry());
+        let alerts = AlertEngine::new();
+        assert!(slo.tick(&alerts).is_empty());
+        assert!(!alerts.any_firing());
+    }
+}

@@ -9,10 +9,33 @@
 //! and old events are overwritten in place (constant memory).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 /// Process-wide trace-id mint (0 is reserved for "no trace").
 static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// Boot-time process epoch folded into every minted id (the 21 high
+/// bits), so ids minted by different server incarnations never collide
+/// — a job enqueued before a crash keeps its persisted trace through
+/// replay and its pre-/post-restart spans join on one id.
+static EPOCH: OnceLock<u64> = OnceLock::new();
+
+/// 21 epoch bits over a 32-bit counter = 53-bit ids: every id is an
+/// exactly-representable f64 integer, so traces survive the job store's
+/// JSON round-trip (and the stats exposition) bit-for-bit.
+const COUNTER_BITS: u32 = 32;
+const EPOCH_MASK: u64 = (1 << 21) - 1;
+
+fn process_epoch() -> u64 {
+    *EPOCH.get_or_init(|| {
+        // >> 10 ≈ microsecond granularity: coarse clocks whose low nanos
+        // are constant still yield distinct epochs across boots
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| (d.as_nanos() as u64) >> 10)
+            .unwrap_or(1)
+    })
+}
 
 /// Identity of one request across every serving layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -22,9 +45,16 @@ impl TraceId {
     /// The absent trace (internal/synthetic requests that skip ingress).
     pub const NONE: TraceId = TraceId(0);
 
-    /// Mint a fresh process-unique id.
+    /// Mint a fresh id: 21 epoch bits (boot microseconds) over a 32-bit
+    /// process-local counter.  Unique within a process for 2^32 mints;
+    /// across restarts two incarnations collide only if their boot
+    /// instants agree modulo ~2.2 s at microsecond resolution —
+    /// negligible odds for the crash-replay window this guards.
     pub fn mint() -> TraceId {
-        TraceId(NEXT_TRACE.fetch_add(1, Ordering::Relaxed))
+        let counter =
+            NEXT_TRACE.fetch_add(1, Ordering::Relaxed) & ((1 << COUNTER_BITS) - 1);
+        let id = ((process_epoch() & EPOCH_MASK) << COUNTER_BITS) | counter;
+        TraceId(if id == 0 { 1 } else { id })
     }
 
     pub fn is_none(&self) -> bool {
@@ -177,6 +207,18 @@ mod tests {
         assert_ne!(a, b);
         assert!(!a.is_none() && !b.is_none());
         assert!(TraceId::NONE.is_none());
+    }
+
+    #[test]
+    fn mint_folds_a_stable_process_epoch_into_the_high_bits() {
+        let a = TraceId::mint();
+        let b = TraceId::mint();
+        // same incarnation = same epoch bits, distinct counters
+        assert_eq!(a.0 >> COUNTER_BITS, b.0 >> COUNTER_BITS);
+        assert_ne!(a.0 & ((1 << COUNTER_BITS) - 1),
+                   b.0 & ((1 << COUNTER_BITS) - 1));
+        // the epoch is latched once: later mints can't drift
+        assert_eq!(a.0 >> COUNTER_BITS, process_epoch() & EPOCH_MASK);
     }
 
     #[test]

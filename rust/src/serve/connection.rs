@@ -39,6 +39,7 @@ use anyhow::Context;
 use crate::coordinator::Service;
 use crate::jobs::JobRunner;
 use crate::obs;
+use crate::obs::flightrec::FlightRecorder;
 use crate::obs::health::HealthMonitor;
 use crate::serve::admission::ConnGate;
 use crate::serve::protocol::{self, HealthAction, Status, WireMsg};
@@ -89,6 +90,9 @@ struct Shared {
     /// The analog health monitor (None when `[health]` is disabled —
     /// health ops are answered with an error in that case).
     health: Option<Arc<HealthMonitor>>,
+    /// The incident flight recorder (None without a state dir — dump
+    /// ops are answered with an error in that case).
+    recorder: Option<Arc<FlightRecorder>>,
     cfg: FrontEndConfig,
     /// Soft stop: reject new work, finish in-flight.
     draining: AtomicBool,
@@ -141,6 +145,19 @@ impl FrontEnd {
                      health: Option<Arc<HealthMonitor>>, addr: &str,
                      cfg: FrontEndConfig)
                      -> anyhow::Result<FrontEnd> {
+        Self::bind_deployment(service, runner, health, None, addr, cfg)
+    }
+
+    /// [`Self::bind_full`] plus the incident [`FlightRecorder`] — the
+    /// complete `--state-dir` deployment.  With a recorder the `dump`
+    /// op comes alive (`memdiff client --dump`); like the monitor, the
+    /// recorder's lifecycle belongs to the caller.
+    pub fn bind_deployment(service: Arc<Service>,
+                           runner: Option<Arc<JobRunner>>,
+                           health: Option<Arc<HealthMonitor>>,
+                           recorder: Option<Arc<FlightRecorder>>,
+                           addr: &str, cfg: FrontEndConfig)
+                           -> anyhow::Result<FrontEnd> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding front-end listener on {addr}"))?;
         listener
@@ -152,6 +169,7 @@ impl FrontEnd {
             service,
             runner,
             health,
+            recorder,
             cfg,
             draining: AtomicBool::new(false),
             stopped: AtomicBool::new(false),
@@ -466,6 +484,32 @@ fn process_buffered(acc: &mut Vec<u8>, sh: &Shared, notify: &Notify,
                 }
                 write_line(stream, &protocol::health_reply_line(
                     client_id, mon.health_json()))?;
+            }
+            Ok(WireMsg::Dump { client_id }) => {
+                let Some(rec) = &sh.recorder else {
+                    write_line(stream, &protocol::status_line(
+                        client_id, Status::Error,
+                        "no flight recorder (start the server with \
+                         --state-dir)"))?;
+                    continue;
+                };
+                match rec.dump("manual") {
+                    Ok(path) => {
+                        let dump = std::fs::read_to_string(&path)
+                            .ok()
+                            .and_then(|s| {
+                                crate::util::json::Json::parse(s.trim()).ok()
+                            })
+                            .unwrap_or(crate::util::json::Json::Null);
+                        write_line(stream, &protocol::dump_reply_line(
+                            client_id, &path.display().to_string(), dump))?;
+                    }
+                    Err(e) => {
+                        write_line(stream, &protocol::status_line(
+                            client_id, Status::Error,
+                            &format!("dump failed: {e:#}")))?;
+                    }
+                }
             }
             Ok(WireMsg::JobStatus { client_id, job }) => {
                 let Some(runner) = &sh.runner else {

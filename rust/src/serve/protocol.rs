@@ -110,6 +110,22 @@
 //! health op with `status: "error"`.  The same `health` object rides the
 //! JSONL flush, and `/healthz` on `--metrics-listen` answers 200/503
 //! from the `healthy` bit.
+//!
+//! ## Dump op (flight recorder — servers started with `--state-dir`)
+//!
+//! ```text
+//! {"op": "dump", "id": 3}
+//!   -> {"id": 3, "status": "ok", "op": "dump",
+//!       "path": "<state-dir>/flightrec/<ts>-manual.json",
+//!       "dump": {"reason": "manual", "fingerprint": ...,
+//!                "health": {...}, "firing": [...], "stats": {...}}}
+//! ```
+//!
+//! `dump` writes an incident flight record on demand (reason `manual`)
+//! and echoes both the file path and the record itself.  The same
+//! records are written automatically on alert latch, worker panic, and
+//! sustained overload shed — see [`crate::obs::flightrec`].  A server
+//! without a state dir answers `status: "error"`.
 
 use crate::coordinator::request::{GenRequest, GenResponse, SolverChoice, TaskKind};
 use crate::jobs::store::Job;
@@ -182,6 +198,8 @@ pub enum WireMsg {
     /// `{"op": "health"}` — the health monitor's state, optionally after
     /// a maintenance action.
     Health { client_id: u64, action: HealthAction },
+    /// `{"op": "dump"}` — write a flight record now and echo it.
+    Dump { client_id: u64 },
 }
 
 /// The maintenance verb of a health op.
@@ -264,6 +282,7 @@ pub fn parse_line(line: &str) -> Result<WireMsg, WireError> {
         return match op {
             "shutdown" => Ok(WireMsg::Shutdown),
             "stats" => Ok(WireMsg::Stats { client_id }),
+            "dump" => Ok(WireMsg::Dump { client_id }),
             "health" => {
                 let action = match j.get("action").and_then(|v| v.as_str()) {
                     None | Some("status") => HealthAction::Status,
@@ -593,6 +612,24 @@ pub fn stats_reply_line(client_id: u64, stats: Json, prometheus: &str)
     Json::Obj(m).to_string()
 }
 
+/// Build a `dump` line (client side — `memdiff client --dump`).
+pub fn dump_line(client_id: u64) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("op".into(), Json::Str("dump".into()));
+    m.insert("id".into(), Json::Num(client_id as f64));
+    Json::Obj(m).to_string()
+}
+
+/// Reply line for a `dump` op: the written record's path plus the
+/// record itself.
+pub fn dump_reply_line(client_id: u64, path: &str, dump: Json) -> String {
+    let mut m = base_obj(client_id, Status::Ok);
+    m.insert("op".into(), Json::Str("dump".into()));
+    m.insert("path".into(), Json::Str(path.into()));
+    m.insert("dump".into(), dump);
+    Json::Obj(m).to_string()
+}
+
 /// Build a `health` line (client side — `memdiff client --health`
 /// and the maintenance verbs `--age-device` / `--reprogram`).
 pub fn health_line(client_id: u64, action: HealthAction) -> String {
@@ -811,6 +848,27 @@ mod tests {
                     .and_then(|v| v.as_usize()), Some(1));
         assert!(j.get("prometheus").and_then(|v| v.as_str()).unwrap()
                  .contains("memdiff_requests_total"));
+    }
+
+    #[test]
+    fn dump_op_roundtrips() {
+        let WireMsg::Dump { client_id } =
+            parse_line(&dump_line(11)).unwrap()
+        else { panic!("expected dump") };
+        assert_eq!(client_id, 11);
+        let dump = Json::parse(
+            r#"{"reason": "manual", "fingerprint": "d", "stats": {}}"#)
+            .unwrap();
+        let line = dump_reply_line(11, "/var/lib/memdiff/flightrec/1-manual.json",
+                                   dump);
+        let r = parse_reply(&line).unwrap();
+        assert_eq!((r.id, r.status), (11, Status::Ok));
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("op").and_then(|v| v.as_str()), Some("dump"));
+        assert!(j.get("path").and_then(|v| v.as_str()).unwrap()
+                 .ends_with("manual.json"));
+        assert_eq!(j.get("dump").and_then(|d| d.get("reason"))
+                    .and_then(|v| v.as_str()), Some("manual"));
     }
 
     #[test]

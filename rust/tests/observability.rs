@@ -293,6 +293,162 @@ fn stats_op_reports_jobs_gauges() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+// ------------------------- SLO breach -> flight record, over the wire
+
+/// Engine slow enough to blow a 1 ms latency objective on every request.
+struct SlowEngine;
+
+impl Engine for SlowEngine {
+    fn dim(&self) -> usize {
+        2
+    }
+    fn n_classes(&self) -> usize {
+        3
+    }
+    fn generate(&self, _s: SolverChoice, _oh: &[f32], _g: f32, n: usize,
+                _rng: &mut Rng) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(Duration::from_millis(25));
+        Ok(vec![9.0; n * 2])
+    }
+}
+
+/// The SLO acceptance path end to end: a deployment with a 1 ms digital
+/// objective under deliberately slow load latches `slo:<backend>:<class>`
+/// through the health monitor, the latch auto-writes a flight record,
+/// `{"op":"dump"}` returns a dump naming the breaching class with its
+/// p99 exemplar trace, and once the load stops the alert clears back
+/// through the hysteresis band.
+#[test]
+fn slo_breach_latches_dumps_and_clears_over_the_wire() {
+    use memdiff::obs::{FlightRecorder, HealthConfig, HealthMonitor, SloConfig};
+    memdiff::obs::set_enabled(true);
+    let dir = tmp("slo_e2e");
+
+    // distinct backend name so the latency series (and the rule) can't
+    // be touched by the other tests in this binary
+    let mut reg = EngineRegistry::new();
+    reg.add_backend("analog", Arc::new(TagEngine(1.0)), 1).unwrap();
+    reg.add_backend("slowrust", Arc::new(SlowEngine), 1).unwrap();
+    reg.route_family(SolverFamily::Analog, "analog").unwrap();
+    reg.route_family(SolverFamily::Digital, "slowrust").unwrap();
+    let service = Arc::new(Service::start_routed(reg, None, svc_cfg()));
+
+    let rec = Arc::new(FlightRecorder::with_limits(
+        &dir, Arc::clone(&service.metrics), "slo-e2e".into(), 8,
+        Duration::ZERO).unwrap());
+    // 1 ms digital objective, windows tight enough to latch and clear
+    // inside the test; analog classes keep the generous default
+    let mut p99_ms = [30_000.0; 4];
+    p99_ms[2] = 1.0;
+    p99_ms[3] = 1.0;
+    let slo_cfg = SloConfig {
+        p99_ms,
+        target_frac: 0.9,
+        fast_window_ms: 300,
+        slow_window_ms: 900,
+        burn_threshold: 1.0,
+        clear_frac: 0.5,
+        streak: 1,
+        ..SloConfig::default()
+    };
+    // probes on demand only: the monitor tick must evaluate just the
+    // SLO rules here (stub engines would fail a KL probe)
+    let mon = HealthMonitor::new_full(
+        HealthConfig { probe_interval_ms: 0, ..HealthConfig::default() },
+        slo_cfg,
+        Arc::clone(service.registry()),
+        Arc::clone(&service.mode_gate),
+        Some(Arc::clone(&rec)));
+    rec.attach_health(&mon);
+    // no mon.start(): ticking manually keeps the timing deterministic
+    let front = FrontEnd::bind_deployment(
+        service, None, Some(Arc::clone(&mon)), Some(Arc::clone(&rec)),
+        "127.0.0.1:0",
+        FrontEndConfig { poll: Duration::from_millis(2),
+                         ..FrontEndConfig::default() })
+        .unwrap();
+    let stream = TcpStream::connect(front.local_addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    // paced slow load: every digital request blows the 1 ms budget
+    for id in 0..8u64 {
+        send_line(&mut w, &protocol::request_line(
+            id, TaskKind::Circle, 1, SolverChoice::DigitalOde { steps: 4 },
+            0.0, false));
+        let reply = protocol::read_reply(&mut r).unwrap();
+        assert_eq!(reply.status, Status::Ok, "{:?}", reply.error);
+    }
+
+    let rule = "slo:slowrust:digital_uncond";
+    mon.tick();
+    assert!(!mon.healthy(), "sustained breach latches: {:?}", mon.firing());
+    assert!(mon.firing().iter().any(|f| f == rule), "{:?}", mon.firing());
+
+    // the latch auto-wrote a flight record naming the rule
+    let auto = rec.dumps();
+    assert!(
+        auto.iter().any(|p| p
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.contains("alert-slo_slowrust_digital_uncond"))),
+        "alert latch writes a flight record: {auto:?}"
+    );
+
+    // the wire dump op returns the black box: breaching rule in the
+    // firing list, breaching class in the SLO report, and the class's
+    // p99 exemplar trace in the embedded stats
+    send_line(&mut w, &protocol::dump_line(7));
+    let msg = read_json(&mut r);
+    assert_eq!(msg.get("status").and_then(|s| s.as_str()), Some("ok"),
+               "{msg:?}");
+    let path = msg.get("path").and_then(|p| p.as_str()).expect("dump path");
+    assert!(path.ends_with(".json"), "{path}");
+    let dump = msg.get("dump").expect("dump body in the reply");
+    let firing = dump.get("firing").and_then(|f| f.as_arr()).unwrap();
+    assert!(firing.iter().any(|f| f.as_str() == Some(rule)), "{firing:?}");
+    let slo = dump
+        .get("health")
+        .and_then(|h| h.get("slo"))
+        .and_then(|s| s.as_arr())
+        .expect("health report carries the slo block");
+    let breached = slo
+        .iter()
+        .find(|s| s.get("rule").and_then(|r| r.as_str()) == Some(rule))
+        .expect("breaching class in the slo report");
+    assert_eq!(breached.get("firing"), Some(&Json::Bool(true)));
+    let lat = dump
+        .get("stats")
+        .and_then(|s| s.get("class_latency"))
+        .and_then(|l| l.as_arr())
+        .expect("stats carry class latency rows");
+    let row = lat
+        .iter()
+        .find(|l| {
+            l.get("backend").and_then(|b| b.as_str()) == Some("slowrust")
+                && l.get("class").and_then(|c| c.as_str())
+                    == Some("digital_uncond")
+        })
+        .expect("breaching class has a latency row");
+    assert!(
+        row.get("p99_exemplar_trace").and_then(|t| t.as_f64()).unwrap_or(0.0)
+            > 0.0,
+        "the p99 is attributable to a concrete trace: {row:?}"
+    );
+
+    // load stops; once both windows roll past the breach the burn
+    // decays and the latch clears through the hysteresis band
+    std::thread::sleep(Duration::from_millis(1000));
+    mon.tick();
+    std::thread::sleep(Duration::from_millis(30));
+    mon.tick();
+    assert!(mon.healthy(), "alert clears after the windows roll: {:?}",
+            mon.firing());
+
+    front.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 // ------------------------------------ metrics survive an engine panic
 
 /// The poison satellite end to end: a panicking engine fails its own

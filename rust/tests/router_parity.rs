@@ -326,6 +326,60 @@ fn per_class_probe_kl_stays_inside_budget() {
     assert!(mon.healthy(), "healthy deployment alerted: {:?}", mon.firing());
 }
 
+/// The ROADMAP's per-class latency gate, mirroring the per-class KL
+/// gate above: on the healthy two-backend deployment, every routed
+/// class's end-to-end latency (queue wait + solve wall) stays inside
+/// its `[slo]` p99 budget — no `slo:` rule latches and every error
+/// budget is untouched.  The same cumulative counters breach an
+/// absurdly tight budget, so the gate measures rather than
+/// rubber-stamps.
+#[test]
+fn per_class_latency_stays_inside_slo_budget() {
+    use memdiff::obs::{AlertEngine, SloConfig, SloEngine};
+
+    memdiff::obs::set_enabled(true);
+    let svc = routed_service(NoiseModel::Ideal);
+    // the full class cross, paced; the delivery loop records each
+    // request's latency into the per-class histograms the engine reads
+    for (task, solver, n) in scenario(2) {
+        svc.generate(task, n, solver, 2.0, false).unwrap();
+    }
+    let reg = Arc::clone(svc.registry());
+    svc.shutdown();
+
+    // the default budgets (30 s p99): every class inside, nothing fires
+    let slo = SloEngine::new(SloConfig::default(), Arc::clone(&reg));
+    let alerts = AlertEngine::new();
+    let states = slo.tick(&alerts);
+    assert_eq!(states.len(), 4, "every routed class evaluated");
+    for st in &states {
+        assert!(st.total >= 2, "{} saw its scenario traffic: {st:?}",
+                st.class);
+        assert_eq!(st.bad, 0, "{} inside its latency budget: {st:?}",
+                   st.class);
+        assert!(!st.firing && st.budget_remaining >= 1.0 - 1e-9, "{st:?}");
+    }
+    assert!(!alerts.any_firing(), "{:?}", alerts.firing());
+
+    // a 1 ns budget over the same counters: every class breaches and
+    // its slo:<backend>:<class> rule latches
+    let tight = SloEngine::new(
+        SloConfig { p99_ms: [1e-6; 4], target_frac: 0.9,
+                    burn_threshold: 1.0, ..SloConfig::default() },
+        reg);
+    let tight_alerts = AlertEngine::new();
+    let breached = tight.tick(&tight_alerts);
+    for st in &breached {
+        assert!(st.bad > 0 && st.bad <= st.total, "{st:?}");
+        assert!(st.firing, "tight budget must latch {}: {st:?}", st.rule);
+        assert!(tight_alerts.is_firing(&st.rule), "{}", st.rule);
+        let expect_backend =
+            if st.class.family == SolverFamily::Analog { "analog" } else { "rust" };
+        assert_eq!(st.rule,
+                   format!("slo:{expect_backend}:{}", st.class.name()));
+    }
+}
+
 #[test]
 fn routed_service_with_artifact_weights_if_present() {
     // optional heavier check: when the real exported weights exist, the
