@@ -139,8 +139,9 @@ pub struct Job {
     /// Trace identity: taken from the enqueueing request (so wire spans
     /// and job attempts correlate) and restored verbatim on crash replay
     /// — minted ids carry a per-process epoch in their high bits, so a
-    /// persisted trace can't collide with the new incarnation's mints
-    /// and a job's pre-/post-restart spans join on one id.
+    /// persisted trace is vanishingly unlikely to collide with the new
+    /// incarnation's mints (~1 in 2M per restart) and a job's pre-/
+    /// post-restart spans join on one id.
     pub trace: crate::obs::TraceId,
 }
 

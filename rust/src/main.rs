@@ -456,9 +456,12 @@ fn serve_listen(service: memdiff::coordinator::Service, addr: &str,
 /// `--metrics-listen ADDR`: a minimal plaintext HTTP scrape endpoint.
 /// `GET /healthz` answers the liveness contract — `200 ok` while no
 /// alert fires, `503` listing the firing alert names otherwise — and
-/// every other path gets the Prometheus rendering of the current
-/// metrics snapshot.  Runs on a detached thread for the life of the
-/// process.
+/// every other path gets the text rendering of the current metrics
+/// snapshot: classic `text/plain; version=0.0.4` (no exemplars) by
+/// default, or the OpenMetrics flavor — exemplar suffixes plus the
+/// `# EOF` trailer — when the scraper's `Accept` header negotiates
+/// `application/openmetrics-text`.  Runs on a detached thread for the
+/// life of the process.
 fn spawn_metrics_listener(addr: &str,
                           metrics: Arc<memdiff::coordinator::Metrics>,
                           runner: Option<Arc<memdiff::jobs::JobRunner>>,
@@ -475,10 +478,12 @@ fn spawn_metrics_listener(addr: &str,
                 let Ok(mut stream) = stream else { continue };
                 let _ = stream.set_read_timeout(
                     Some(std::time::Duration::from_millis(100)));
-                // bounded request-line read: keep reading until the line
-                // terminator arrives, a slow-loris peer exhausts the
-                // 500 ms deadline, or the 4 KiB cap trips — a short
-                // first segment no longer truncates the request line
+                // bounded request-head read: keep reading until the
+                // blank line ending the headers arrives (the Accept
+                // header decides the exposition flavor), a slow-loris
+                // peer exhausts the 500 ms deadline, or the 4 KiB cap
+                // trips — a short first segment no longer truncates
+                // the request
                 let deadline = std::time::Instant::now()
                     + std::time::Duration::from_millis(500);
                 let mut head = Vec::with_capacity(256);
@@ -488,7 +493,9 @@ fn spawn_metrics_listener(addr: &str,
                         Ok(0) => break,
                         Ok(n) => {
                             head.extend_from_slice(&buf[..n]);
-                            if head.contains(&b'\n') || head.len() >= 4096 {
+                            let done = head.windows(2).any(|w| w == b"\n\n")
+                                || head.windows(4).any(|w| w == b"\r\n\r\n");
+                            if done || head.len() >= 4096 {
                                 break;
                             }
                         }
@@ -504,6 +511,16 @@ fn spawn_metrics_listener(addr: &str,
                 let head = String::from_utf8_lossy(&head);
                 let line = head.lines().next().unwrap_or("");
                 let path = line.split_whitespace().nth(1).unwrap_or("/");
+                // content negotiation: exemplars are syntax errors to the
+                // classic text parser, so they are served only when the
+                // scraper explicitly asks for OpenMetrics
+                let wants_om = head.lines().skip(1).any(|l| {
+                    l.split_once(':').is_some_and(|(k, v)| {
+                        k.trim().eq_ignore_ascii_case("accept")
+                            && v.to_ascii_lowercase()
+                                .contains("application/openmetrics-text")
+                    })
+                });
                 if path == "/healthz" || path.starts_with("/healthz?") {
                     let (status, body) = match &health {
                         Some(mon) if !mon.healthy() => (
@@ -526,14 +543,21 @@ fn spawn_metrics_listener(addr: &str,
                 if let Some(r) = &runner {
                     let _ = r.gauges(); // refresh the jobs gauges in-band
                 }
-                let body = memdiff::obs::export::render_prometheus(
-                    &metrics.snapshot());
+                let snap = metrics.snapshot();
+                let (body, ctype) = if wants_om {
+                    (memdiff::obs::export::render_openmetrics(&snap),
+                     "application/openmetrics-text; version=1.0.0; \
+                      charset=utf-8")
+                } else {
+                    (memdiff::obs::export::render_prometheus(&snap),
+                     "text/plain; version=0.0.4")
+                };
                 let _ = write!(
                     stream,
                     "HTTP/1.0 200 OK\r\n\
-                     Content-Type: text/plain; version=0.0.4\r\n\
+                     Content-Type: {}\r\n\
                      Content-Length: {}\r\n\r\n{}",
-                    body.len(), body);
+                    ctype, body.len(), body);
             }
         })?;
     Ok(bound)

@@ -9,6 +9,15 @@
 //! log-bucket edges ([`crate::util::stats::log_bucket_upper`]); only
 //! non-empty buckets are emitted (cumulativity still holds at every
 //! emitted edge), plus the mandatory `+Inf`, `_sum`, and `_count`.
+//!
+//! Two text flavors share one renderer: [`render_prometheus`] is the
+//! classic `text/plain; version=0.0.4` exposition — no exemplar
+//! suffixes, because the classic parser treats anything after the
+//! value as a timestamp and a `#` there is a parse error — and
+//! [`render_openmetrics`] is the OpenMetrics flavor (exemplars on
+//! traced buckets, counter families without the `_total` sample
+//! suffix, trailing `# EOF`), served only to scrapers that negotiate
+//! `application/openmetrics-text` via `Accept`.
 
 use std::collections::BTreeMap;
 
@@ -55,8 +64,15 @@ fn line(out: &mut String, name: &str, labels: &[(String, String)], v: f64) {
     }
 }
 
-fn header(out: &mut String, name: &str, kind: &str, help: &str) {
-    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+fn header(out: &mut String, om: bool, name: &str, kind: &str, help: &str) {
+    // OpenMetrics names a counter family without the `_total` sample
+    // suffix; the classic text format keeps the full sample name.
+    let family = if om && kind == "counter" {
+        name.strip_suffix("_total").unwrap_or(name)
+    } else {
+        name
+    };
+    out.push_str(&format!("# HELP {family} {help}\n# TYPE {family} {kind}\n"));
 }
 
 fn owned(labels: &[(&str, &str)]) -> Vec<(String, String)> {
@@ -64,12 +80,15 @@ fn owned(labels: &[(&str, &str)]) -> Vec<(String, String)> {
 }
 
 /// Render one histogram family series: cumulative buckets at the
-/// non-empty log-bucket edges, then `+Inf`, `_sum`, `_count`.  A
-/// non-empty `exemplars` slice (per-bucket `(trace, value)` pairs, 0 =
-/// none) appends OpenMetrics exemplar suffixes —
-/// `# {trace_id="T"} value` — to the bucket lines that retained one.
-fn render_hist(out: &mut String, name: &str, labels: &[(String, String)],
-               buckets: &[u64], sum: f64, exemplars: &[(u64, f64)]) {
+/// non-empty log-bucket edges, then `+Inf`, `_sum`, `_count`.  In
+/// OpenMetrics mode (`om`), a non-empty `exemplars` slice (per-bucket
+/// `(trace, value)` pairs, 0 = none) appends exemplar suffixes —
+/// `# {trace_id="T"} value` — to the bucket lines that retained one;
+/// the classic format never carries them (its parser reads anything
+/// after the value as a timestamp, so a `#` there is a parse error).
+fn render_hist(out: &mut String, om: bool, name: &str,
+               labels: &[(String, String)], buckets: &[u64], sum: f64,
+               exemplars: &[(u64, f64)]) {
     let mut cum = 0u64;
     for (i, &c) in buckets.iter().enumerate() {
         if c == 0 {
@@ -81,7 +100,7 @@ fn render_hist(out: &mut String, name: &str, labels: &[(String, String)],
             let mut ls = labels.to_vec();
             ls.push(("le".to_string(), format!("{upper:.6e}")));
             match exemplars.get(i) {
-                Some(&(t, v)) if t != 0 => {
+                Some(&(t, v)) if t != 0 && om => {
                     out.push_str(&format!(
                         "{name}_bucket{} {cum} # {{trace_id=\"{t}\"}} {v}\n",
                         labels_text(&ls)));
@@ -97,85 +116,100 @@ fn render_hist(out: &mut String, name: &str, labels: &[(String, String)],
     line(out, &format!("{name}_count"), labels, cum as f64);
 }
 
-fn render_summary_hist(out: &mut String, name: &str,
+fn render_summary_hist(out: &mut String, om: bool, name: &str,
                        labels: &[(String, String)], s: &Summary) {
-    render_hist(out, name, labels, s.buckets(), s.sum(), &[]);
+    render_hist(out, om, name, labels, s.buckets(), s.sum(), &[]);
 }
 
-/// The full Prometheus text exposition: coordinator snapshot + registry
-/// + phase timers.  This is what `--metrics-listen` scrapes and what
-/// the `stats` wire op embeds.
+/// The classic Prometheus text exposition (`text/plain; version=0.0.4`):
+/// coordinator snapshot + registry + phase timers, with no exemplar
+/// suffixes so any vanilla scraper parses it.  This is what
+/// `--metrics-listen` serves by default and what the `stats` wire op
+/// embeds.
 pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
+    render_exposition(snap, false)
+}
+
+/// The OpenMetrics flavor (`application/openmetrics-text`): same
+/// families, counter families named without the `_total` sample suffix,
+/// exemplar suffixes on traced histogram buckets, and the mandatory
+/// trailing `# EOF`.  Serve it only to scrapers whose `Accept` header
+/// negotiated it.
+pub fn render_openmetrics(snap: &MetricsSnapshot) -> String {
+    render_exposition(snap, true)
+}
+
+fn render_exposition(snap: &MetricsSnapshot, om: bool) -> String {
     let mut out = String::with_capacity(4096);
     let o = obs();
 
-    header(&mut out, "memdiff_requests_total", "counter",
+    header(&mut out, om, "memdiff_requests_total", "counter",
            "Requests served by the coordinator.");
     line(&mut out, "memdiff_requests_total", &[], snap.requests as f64);
-    header(&mut out, "memdiff_samples_total", "counter",
+    header(&mut out, om, "memdiff_samples_total", "counter",
            "Samples generated.");
     line(&mut out, "memdiff_samples_total", &[], snap.samples as f64);
-    header(&mut out, "memdiff_batches_total", "counter",
+    header(&mut out, om, "memdiff_batches_total", "counter",
            "Batches executed.");
     line(&mut out, "memdiff_batches_total", &[], snap.batches as f64);
-    header(&mut out, "memdiff_rejected_total", "counter",
+    header(&mut out, om, "memdiff_rejected_total", "counter",
            "Admission rejects (bounded-lane sheds).");
     line(&mut out, "memdiff_rejected_total", &[], snap.rejected as f64);
-    header(&mut out, "memdiff_worker_panics_total", "counter",
+    header(&mut out, om, "memdiff_worker_panics_total", "counter",
            "Engine panics contained by worker catch_unwind.");
     line(&mut out, "memdiff_worker_panics_total", &[],
          snap.worker_panics as f64);
-    header(&mut out, "memdiff_batch_fill_ratio", "gauge",
+    header(&mut out, om, "memdiff_batch_fill_ratio", "gauge",
            "Mean batch fill (coalesced samples / max batch).");
     line(&mut out, "memdiff_batch_fill_ratio", &[], zero_nan(snap.mean_batch_fill));
 
-    header(&mut out, "memdiff_request_latency_seconds", "histogram",
+    header(&mut out, om, "memdiff_request_latency_seconds", "histogram",
            "Batch wall latency, service-wide.");
-    render_summary_hist(&mut out, "memdiff_request_latency_seconds", &[],
+    render_summary_hist(&mut out, om, "memdiff_request_latency_seconds", &[],
                         &snap.wall_latency);
 
     if !snap.backends.is_empty() {
-        header(&mut out, "memdiff_backend_requests_total", "counter",
+        header(&mut out, om, "memdiff_backend_requests_total", "counter",
                "Requests served per backend.");
         for b in &snap.backends {
             line(&mut out, "memdiff_backend_requests_total",
                  &owned(&[("backend", &b.name)]), b.requests as f64);
         }
-        header(&mut out, "memdiff_backend_samples_total", "counter",
+        header(&mut out, om, "memdiff_backend_samples_total", "counter",
                "Samples generated per backend.");
         for b in &snap.backends {
             line(&mut out, "memdiff_backend_samples_total",
                  &owned(&[("backend", &b.name)]), b.samples as f64);
         }
-        header(&mut out, "memdiff_backend_rejected_total", "counter",
+        header(&mut out, om, "memdiff_backend_rejected_total", "counter",
                "Bounded-lane sheds per backend.");
         for b in &snap.backends {
             line(&mut out, "memdiff_backend_rejected_total",
                  &owned(&[("backend", &b.name)]), b.rejected as f64);
         }
-        header(&mut out, "memdiff_lane_queue_depth", "gauge",
+        header(&mut out, om, "memdiff_lane_queue_depth", "gauge",
                "Samples queued in the backend's lane.");
         for b in &snap.backends {
             line(&mut out, "memdiff_lane_queue_depth",
                  &owned(&[("backend", &b.name)]), b.queue_depth as f64);
         }
-        header(&mut out, "memdiff_hw_energy_joules_total", "counter",
+        header(&mut out, om, "memdiff_hw_energy_joules_total", "counter",
                "Modeled hardware energy served per backend.");
         for b in &snap.backends {
             line(&mut out, "memdiff_hw_energy_joules_total",
                  &owned(&[("backend", &b.name)]), b.hw_energy_j);
         }
-        header(&mut out, "memdiff_backend_latency_seconds", "histogram",
+        header(&mut out, om, "memdiff_backend_latency_seconds", "histogram",
                "Batch wall latency per backend.");
         for b in &snap.backends {
-            render_summary_hist(&mut out, "memdiff_backend_latency_seconds",
+            render_summary_hist(&mut out, om, "memdiff_backend_latency_seconds",
                                 &owned(&[("backend", &b.name)]),
                                 &b.wall_latency);
         }
     }
 
     if !snap.banking.is_empty() {
-        header(&mut out, "memdiff_bank_reads_total", "counter",
+        header(&mut out, om, "memdiff_bank_reads_total", "counter",
                "MVM read sweeps per crossbar layer (and per bank tile).");
         for r in &snap.banking {
             let layer = r.layer.to_string();
@@ -191,19 +225,19 @@ pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
     }
 
     if let Some(p) = &snap.pool {
-        header(&mut out, "memdiff_pool_threads", "gauge",
+        header(&mut out, om, "memdiff_pool_threads", "gauge",
                "Intra-op pool thread count.");
         line(&mut out, "memdiff_pool_threads", &[], p.threads as f64);
-        header(&mut out, "memdiff_pool_scopes_total", "counter",
+        header(&mut out, om, "memdiff_pool_scopes_total", "counter",
                "Fork-join scopes run.");
         line(&mut out, "memdiff_pool_scopes_total", &[], p.scopes_run as f64);
-        header(&mut out, "memdiff_pool_tasks_total", "counter",
+        header(&mut out, om, "memdiff_pool_tasks_total", "counter",
                "Pool tasks run.");
         line(&mut out, "memdiff_pool_tasks_total", &[], p.tasks_run as f64);
     }
 
     if let Some(j) = &snap.jobs {
-        header(&mut out, "memdiff_jobs", "gauge",
+        header(&mut out, om, "memdiff_jobs", "gauge",
                "Durable jobs by lifecycle state.");
         for (state, v) in [("queued", j.queued), ("running", j.running),
                            ("failed", j.failed), ("done", j.done),
@@ -211,18 +245,18 @@ pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
             line(&mut out, "memdiff_jobs", &owned(&[("state", state)]),
                  v as f64);
         }
-        header(&mut out, "memdiff_jobs_enqueued_total", "counter",
+        header(&mut out, om, "memdiff_jobs_enqueued_total", "counter",
                "Jobs durably enqueued.");
         line(&mut out, "memdiff_jobs_enqueued_total", &[],
              j.enqueued_total as f64);
-        header(&mut out, "memdiff_jobs_retries_total", "counter",
+        header(&mut out, om, "memdiff_jobs_retries_total", "counter",
                "Job attempts retried.");
         line(&mut out, "memdiff_jobs_retries_total", &[],
              j.retries_total as f64);
     }
 
     if !snap.degraded.is_empty() {
-        header(&mut out, "memdiff_degraded_routes", "gauge",
+        header(&mut out, om, "memdiff_degraded_routes", "gauge",
                "Classes rerouted off their planned backend at startup.");
         line(&mut out, "memdiff_degraded_routes", &[],
              snap.degraded.len() as f64);
@@ -231,23 +265,26 @@ pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
     // dynamic registry series (per-stage latency histograms and any
     // counters/gauges instrumented sites registered)
     let reg = o.registry.snapshot();
-    render_registry_counters(&mut out, &reg.counters);
-    render_registry_gauges(&mut out, &reg.gauges);
-    render_registry_hists(&mut out, &reg.hists);
+    render_registry_counters(&mut out, om, &reg.counters);
+    render_registry_gauges(&mut out, om, &reg.gauges);
+    render_registry_hists(&mut out, om, &reg.hists);
 
-    header(&mut out, "memdiff_phase_seconds_total", "counter",
+    header(&mut out, om, "memdiff_phase_seconds_total", "counter",
            "Time spent in instrumented hot-path phases.");
     for p in Phase::ALL {
         let (ns, _) = o.phases.read(p);
         line(&mut out, "memdiff_phase_seconds_total",
              &owned(&[("phase", p.name())]), ns as f64 * 1e-9);
     }
-    header(&mut out, "memdiff_phase_invocations_total", "counter",
+    header(&mut out, om, "memdiff_phase_invocations_total", "counter",
            "Invocations of instrumented hot-path phases.");
     for p in Phase::ALL {
         let (_, n) = o.phases.read(p);
         line(&mut out, "memdiff_phase_invocations_total",
              &owned(&[("phase", p.name())]), n as f64);
+    }
+    if om {
+        out.push_str("# EOF\n");
     }
     out
 }
@@ -260,36 +297,38 @@ fn zero_nan(v: f64) -> f64 {
     }
 }
 
-fn render_registry_counters(out: &mut String, counters: &[(Key, u64)]) {
+fn render_registry_counters(out: &mut String, om: bool,
+                            counters: &[(Key, u64)]) {
     let mut last = "";
     for ((name, labels), v) in counters {
         if name != last {
-            header(out, name, "counter", "Registered counter.");
+            header(out, om, name, "counter", "Registered counter.");
             last = name;
         }
         line(out, name, labels, *v as f64);
     }
 }
 
-fn render_registry_gauges(out: &mut String, gauges: &[(Key, f64)]) {
+fn render_registry_gauges(out: &mut String, om: bool, gauges: &[(Key, f64)]) {
     let mut last = "";
     for ((name, labels), v) in gauges {
         if name != last {
-            header(out, name, "gauge", "Registered gauge.");
+            header(out, om, name, "gauge", "Registered gauge.");
             last = name;
         }
         line(out, name, labels, *v);
     }
 }
 
-fn render_registry_hists(out: &mut String, hists: &[(Key, HistSnapshot)]) {
+fn render_registry_hists(out: &mut String, om: bool,
+                         hists: &[(Key, HistSnapshot)]) {
     let mut last = "";
     for ((name, labels), h) in hists {
         if name != last {
-            header(out, name, "histogram", "Registered histogram.");
+            header(out, om, name, "histogram", "Registered histogram.");
             last = name;
         }
-        render_hist(out, name, labels, &h.buckets, h.sum, &h.exemplars);
+        render_hist(out, om, name, labels, &h.buckets, h.sum, &h.exemplars);
     }
 }
 
@@ -496,7 +535,7 @@ mod tests {
             s.record(v);
         }
         let mut out = String::new();
-        render_summary_hist(&mut out, "t_seconds", &[], &s);
+        render_summary_hist(&mut out, false, "t_seconds", &[], &s);
         let mut prev = 0i64;
         let mut last_bucket = 0i64;
         let mut count = -1i64;
@@ -551,7 +590,7 @@ mod tests {
             .hist(super::super::slo::REQUEST_LATENCY_HIST,
                   &[("backend", "rust"), ("class", "analog_cond")])
             .record_traced(0.125, t.0);
-        let text = render_prometheus(&snap_with_traffic());
+        let text = render_openmetrics(&snap_with_traffic());
         let needle = format!("# {{trace_id=\"{}\"}} 0.125", t.0);
         assert!(text.contains(&needle), "exemplar suffix missing:\n{text}");
         // exemplar lines still end in a parseable value
@@ -559,6 +598,29 @@ mod tests {
             let (_, val) = l.rsplit_once(' ').unwrap();
             assert!(val.parse::<f64>().is_ok(), "bad exemplar line: {l}");
         }
+        // OpenMetrics requirements: counter families drop the `_total`
+        // sample suffix, and the exposition ends with the EOF marker
+        assert!(text.contains("# TYPE memdiff_requests counter"), "{text}");
+        assert!(!text.contains("# TYPE memdiff_requests_total counter"));
+        assert!(text.ends_with("# EOF\n"), "missing EOF marker");
+    }
+
+    #[test]
+    fn classic_text_never_carries_exemplar_suffixes() {
+        super::super::set_enabled(true);
+        let o = super::super::obs();
+        let t = super::super::TraceId::mint();
+        o.registry
+            .hist(super::super::slo::REQUEST_LATENCY_HIST,
+                  &[("backend", "rust"), ("class", "analog_uncond")])
+            .record_traced(0.25, t.0);
+        // the classic parser reads anything after the value as a
+        // timestamp: a retained exemplar must not leak a `#` suffix
+        let text = render_prometheus(&snap_with_traffic());
+        assert!(!text.contains("trace_id"), "exemplar leaked:\n{text}");
+        assert!(!text.contains("# EOF"), "EOF is OpenMetrics-only");
+        assert!(text.contains("# TYPE memdiff_requests_total counter"),
+                "classic keeps full counter family names");
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! goes wrong.
 //!
 //! A dump is one JSON file under `<state-dir>/flightrec/` named
-//! `<ts_ms>-<reason>.json`, carrying the full stats object (coordinator
+//! `<ts_ms>-<seq>-<reason>.json` (`seq` is a process-wide atomic
+//! sequence, so concurrent dumps in the same millisecond can never
+//! choose the same path), carrying the full stats object (coordinator
 //! snapshot, per-lane queue/job gauges, registry series with their
 //! trace exemplars, phase timers, recent span-ring timelines), the
 //! health/SLO report when a monitor is attached, the alert states, and
@@ -30,6 +32,7 @@
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, Weak};
 use std::time::{Duration, Instant};
 
@@ -108,6 +111,16 @@ impl FlightRecorder {
         let dir = state_dir.as_ref().join("flightrec");
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating {}", dir.display()))?;
+        // a crash between create and rename can strand a `*.json.tmp`
+        // that dumps()/prune() would never see — sweep it on open
+        if let Ok(rd) = std::fs::read_dir(&dir) {
+            for e in rd.filter_map(|e| e.ok()) {
+                let p = e.path();
+                if p.extension().and_then(|x| x.to_str()) == Some("tmp") {
+                    let _ = std::fs::remove_file(&p);
+                }
+            }
+        }
         Ok(FlightRecorder {
             dir,
             cap: cap.max(1),
@@ -155,12 +168,11 @@ impl FlightRecorder {
         let body = self.capture(reason).to_string();
         let name = sanitize(reason);
         let ts = now_ms();
-        // a same-millisecond dump for the same reason bumps the stamp
-        // instead of clobbering the earlier file
-        let path = (0..1000)
-            .map(|i| self.dir.join(format!("{}-{name}.json", ts + i)))
-            .find(|p| !p.exists())
-            .unwrap_or_else(|| self.dir.join(format!("{ts}-{name}.json")));
+        // the process-wide sequence makes the path (and the tmp name
+        // derived from it) unique without a racy exists() probe, even
+        // for concurrent same-reason dumps in the same millisecond
+        let seq = DUMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = self.dir.join(format!("{ts}-{seq:06}-{name}.json"));
         let tmp = path.with_extension("json.tmp");
         {
             let mut f = std::fs::File::create(&tmp)
@@ -216,8 +228,10 @@ impl FlightRecorder {
                     .collect()
             })
             .unwrap_or_default();
-        // <ts_ms>- prefixes sort chronologically as strings (13-digit
-        // millisecond stamps until the year 2286)
+        // <ts_ms>-<seq>- prefixes sort chronologically as strings
+        // (13-digit millisecond stamps until the year 2286; the
+        // zero-padded sequence breaks same-millisecond ties in write
+        // order)
         files.sort();
         files
     }
@@ -231,6 +245,11 @@ impl FlightRecorder {
         }
     }
 }
+
+/// Process-wide dump sequence: folded into every dump filename so
+/// concurrent dumps (the unratelimited wire op racing a trigger, or
+/// each other) can never pick the same tmp/final path.
+static DUMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// The process-global recorder, for trigger sites too deep to thread an
 /// `Arc` into (worker panic containment, overload shedding).
@@ -348,6 +367,33 @@ mod tests {
         for new in &paths[3..] {
             assert!(new.exists(), "newest kept: {}", new.display());
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn same_millisecond_dumps_get_distinct_paths() {
+        let dir = tmp("seq");
+        let rec = recorder(&dir, 8, Duration::ZERO);
+        // the wire op bypasses the rate limit: back-to-back dumps for
+        // one reason land in the same millisecond and must not clobber
+        let a = rec.dump("manual").unwrap();
+        let b = rec.dump("manual").unwrap();
+        assert_ne!(a, b);
+        assert!(a.exists() && b.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_tmp_litter_is_swept_on_open() {
+        let dir = tmp("tmpsweep");
+        let frdir = dir.join("flightrec");
+        std::fs::create_dir_all(&frdir).unwrap();
+        // a crash between create and rename strands a half-written tmp
+        let stale = frdir.join("123-000000-crash.json.tmp");
+        std::fs::write(&stale, b"{\"trunc").unwrap();
+        let rec = recorder(&dir, 8, Duration::ZERO);
+        assert!(!stale.exists(), "stale tmp swept on open");
+        assert!(rec.dumps().is_empty(), "tmp never counted as a dump");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -291,7 +291,10 @@ impl HistSnapshot {
     /// The exemplar nearest (from above) to the quantile `q`'s bucket:
     /// the concrete request behind an approximate percentile.  Walks
     /// from the quantile's bucket upward so a tail exemplar wins when
-    /// the exact bucket never saw a traced sample.
+    /// the exact bucket never saw a traced sample.  Never reaches
+    /// *below* the quantile bucket — labeling a fast request as the
+    /// p99 would misattribute the tail — so when no bucket at or above
+    /// the quantile holds a traced sample there is no exemplar.
     pub fn exemplar_at(&self, q: f64) -> Option<(u64, f64)> {
         let total: u64 = self.buckets.iter().sum();
         if total == 0 {
@@ -307,11 +310,7 @@ impl HistSnapshot {
                 break;
             }
         }
-        self.exemplars[at..]
-            .iter()
-            .chain(self.exemplars[..at].iter().rev())
-            .find(|(t, _)| *t != 0)
-            .copied()
+        self.exemplars[at..].iter().find(|(t, _)| *t != 0).copied()
     }
 }
 
@@ -372,11 +371,12 @@ mod tests {
     }
 
     #[test]
-    fn exemplar_falls_back_when_quantile_bucket_untraced() {
+    fn exemplar_never_reaches_below_the_quantile_bucket() {
         let r = Registry::new();
         let h = r.hist("memdiff_fallback", &[]);
-        // traced sample in a low bucket, untraced mass above it: the
-        // wrap-around walk still surfaces the only traced request
+        // traced sample in a low bucket, untraced mass above it:
+        // reporting the 1 ms request as "the p99" would mislabel the
+        // tail, so the p99 carries no exemplar at all
         h.record_traced(1e-3, 7);
         for _ in 0..50 {
             h.record(1.0);
@@ -384,7 +384,9 @@ mod tests {
         let snap = r.snapshot();
         let (_, hs) = snap.hists.iter()
             .find(|(k, _)| k.0 == "memdiff_fallback").unwrap();
-        assert_eq!(hs.exemplar_at(99.0).map(|(t, _)| t), Some(7));
+        assert_eq!(hs.exemplar_at(99.0), None);
+        // but the traced request still stands for its own quantile
+        assert_eq!(hs.exemplar_at(0.0).map(|(t, _)| t), Some(7));
     }
 
     #[test]

@@ -23,6 +23,12 @@
 //! the hot path, the engine only reads what the delivery loop already
 //! records into `memdiff_request_latency_class_seconds`.
 //!
+//! Until the ring actually spans a window (the first `slow_window`
+//! after every (re)start), its burn is scaled by the covered fraction
+//! of the window — missing history counts as in-budget traffic — so a
+//! brief spike right after boot cannot impersonate a sustained
+//! slow-window breach and spuriously latch `slo:*` alerts.
+//!
 //! Rules are named `slo:<backend>:<class>` (e.g. `slo:rust:digital_uncond`)
 //! and run through the same threshold + hysteresis + streak latch as
 //! every other alert, so `/healthz`, `{"op":"health"}`, and
@@ -134,6 +140,9 @@ type Reading = (Instant, u64, u64);
 pub struct SloEngine {
     cfg: SloConfig,
     registry: Arc<EngineRegistry>,
+    /// When the engine came up — the coverage floor for burn scaling
+    /// while the snapshot ring is younger than a window.
+    born: Instant,
     /// Per-class snapshot ring, pruned to the slow window.
     windows: Mutex<[Vec<Reading>; 4]>,
     /// Last evaluation per class, for the JSON report.
@@ -145,6 +154,7 @@ impl SloEngine {
         SloEngine {
             cfg,
             registry,
+            born: Instant::now(),
             windows: Mutex::new(std::array::from_fn(|_| Vec::new())),
             last: Mutex::new(Vec::new()),
         }
@@ -176,25 +186,34 @@ impl SloEngine {
     }
 
     /// Burn rate over `window`, as a delta against the snapshot ring:
-    /// baseline is the newest reading at least `window` old (or the
-    /// oldest retained).  No traffic in the window = burn 0.
-    fn burn(ring: &[Reading], now: Instant, window: Duration,
+    /// baseline is the newest reading at least `window` old.  When no
+    /// reading is old enough — the window is not yet established after
+    /// a (re)start — the oldest retained reading (or boot itself)
+    /// serves instead and the burn is scaled by `covered / window`:
+    /// the un-covered remainder counts as in-budget traffic, so a
+    /// short post-boot spike cannot impersonate a sustained breach of
+    /// the full window.  No traffic in the window = burn 0.
+    fn burn(ring: &[Reading], born: Instant, now: Instant, window: Duration,
             cur: (u64, u64), target_frac: f64) -> (f64, f64) {
-        let base = ring
+        let (t0, b0, covered) = match ring
             .iter()
             .rev()
             .find(|(t, _, _)| now.duration_since(*t) >= window)
-            .or_else(|| ring.first());
-        let (t0, b0) = match base {
-            Some(&(_, t0, b0)) => (t0, b0),
-            None => (0, 0),
+        {
+            Some(&(_, t0, b0)) => (t0, b0, window),
+            None => match ring.first() {
+                Some(&(t, t0, b0)) => (t0, b0, now.duration_since(t)),
+                None => (0, 0, now.duration_since(born)),
+            },
         };
         let d_total = cur.0.saturating_sub(t0);
         let d_bad = cur.1.saturating_sub(b0);
         if d_total == 0 {
             return (0.0, 0.0);
         }
-        let bad_frac = d_bad as f64 / d_total as f64;
+        let frac =
+            (covered.as_secs_f64() / window.as_secs_f64()).clamp(0.0, 1.0);
+        let bad_frac = d_bad as f64 / d_total as f64 * frac;
         (bad_frac / (1.0 - target_frac).max(1e-9), bad_frac)
     }
 
@@ -219,10 +238,11 @@ impl SloEngine {
             let backend = self.registry.backend(bi).name.clone();
             let cur = self.cumulative(&backend, class);
             let ring = &mut windows[class.index()];
-            let (burn_fast, _) =
-                Self::burn(ring, now, fast, cur, self.cfg.target_frac);
+            let (burn_fast, _) = Self::burn(ring, self.born, now, fast, cur,
+                                            self.cfg.target_frac);
             let (burn_slow, bad_frac_slow) =
-                Self::burn(ring, now, slow, cur, self.cfg.target_frac);
+                Self::burn(ring, self.born, now, slow, cur,
+                           self.cfg.target_frac);
             ring.push((now, cur.0, cur.1));
             ring.retain(|(t, _, _)| now.duration_since(*t) <= slow);
             let budget_remaining =
@@ -352,9 +372,11 @@ mod tests {
         slo.tick(&alerts);
         assert!(!alerts.is_firing(rule), "{:?}", alerts.firing());
 
-        // sustained breach: every request blows the budget
+        // sustained breach: every request blows the budget; the sleep
+        // covers the whole fast window and half the slow one, so even
+        // the coverage-scaled slow burn clears the threshold
         feed(class, 0.05, 50);
-        std::thread::sleep(Duration::from_millis(5));
+        std::thread::sleep(Duration::from_millis(60));
         let states = slo.tick(&alerts);
         assert!(alerts.is_firing(rule), "burn should latch: {states:?}");
         let st = states
@@ -387,11 +409,55 @@ mod tests {
         for class in RequestClass::ALL {
             let g = obs().registry.gauge(
                 "memdiff_slo_budget_remaining", &[("class", class.name())]);
-            assert_eq!(g.get(), 1.0, "idle budget untouched for {class}");
+            // other tests may have fed the shared global histograms, but
+            // a just-born engine covers ~none of the slow window, so its
+            // scaled spend stays negligible
+            assert!((g.get() - 1.0).abs() < 1e-3,
+                    "idle budget untouched for {class}: {}", g.get());
         }
         // and the report names every rule
         let j = slo.status_json().to_string();
         assert!(j.contains("slo:rust:digital_uncond"), "{j}");
+    }
+
+    #[test]
+    fn boot_spike_is_scaled_by_coverage_and_does_not_latch() {
+        let _g = GAUGE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        crate::obs::set_enabled(true);
+        let class = RequestClass {
+            family: SolverFamily::Digital,
+            conditional: true,
+        };
+        // slow window far wider than the engine's lifetime: a breaching
+        // burst right after boot must not latch, because the un-covered
+        // remainder of the slow window counts as in-budget traffic
+        let slo = SloEngine::new(
+            SloConfig {
+                p99_ms: [1.0; 4],
+                target_frac: 0.9,
+                fast_window_ms: 20,
+                slow_window_ms: 60_000,
+                burn_threshold: 1.0,
+                clear_frac: 0.5,
+                streak: 1,
+                ..SloConfig::default()
+            },
+            registry());
+        let alerts = AlertEngine::new();
+        slo.tick(&alerts); // baseline reading before the spike
+        feed(class, 0.05, 50);
+        std::thread::sleep(Duration::from_millis(25));
+        let states = slo.tick(&alerts);
+        let st = states
+            .iter()
+            .find(|s| s.class == class)
+            .expect("digital_cond evaluated");
+        assert!(st.burn_fast > 1.0,
+                "fast window is fully covered and burns: {st:?}");
+        assert!(st.burn_slow < 1.0,
+                "slow burn scaled by its tiny coverage: {st:?}");
+        assert!(!alerts.is_firing("slo:rust:digital_cond"),
+                "{:?}", alerts.firing());
     }
 
     #[test]

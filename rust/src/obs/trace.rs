@@ -15,9 +15,10 @@ use std::sync::{Mutex, OnceLock};
 static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
 
 /// Boot-time process epoch folded into every minted id (the 21 high
-/// bits), so ids minted by different server incarnations never collide
-/// — a job enqueued before a crash keeps its persisted trace through
-/// replay and its pre-/post-restart spans join on one id.
+/// bits), so ids minted by different server incarnations are
+/// vanishingly unlikely to collide — a job enqueued before a crash
+/// keeps its persisted trace through replay and its pre-/post-restart
+/// spans join on one id.
 static EPOCH: OnceLock<u64> = OnceLock::new();
 
 /// 21 epoch bits over a 32-bit counter = 53-bit ids: every id is an
@@ -28,12 +29,23 @@ const EPOCH_MASK: u64 = (1 << 21) - 1;
 
 fn process_epoch() -> u64 {
     *EPOCH.get_or_init(|| {
-        // >> 10 ≈ microsecond granularity: coarse clocks whose low nanos
-        // are constant still yield distinct epochs across boots
-        std::time::SystemTime::now()
+        // boot nanos xor'd with the pid, run through a splitmix64
+        // finalizer: the 21 retained bits draw on the whole timestamp
+        // AND the process identity, so two incarnations whose boot
+        // instants agree modulo the mask — or whose clock is too coarse
+        // to tell them apart — still land in different epochs almost
+        // surely
+        let nanos = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
-            .map(|d| (d.as_nanos() as u64) >> 10)
-            .unwrap_or(1)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(1);
+        let mut x = nanos ^ ((std::process::id() as u64) << 32);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        x
     })
 }
 
@@ -45,11 +57,12 @@ impl TraceId {
     /// The absent trace (internal/synthetic requests that skip ingress).
     pub const NONE: TraceId = TraceId(0);
 
-    /// Mint a fresh id: 21 epoch bits (boot microseconds) over a 32-bit
-    /// process-local counter.  Unique within a process for 2^32 mints;
-    /// across restarts two incarnations collide only if their boot
-    /// instants agree modulo ~2.2 s at microsecond resolution —
-    /// negligible odds for the crash-replay window this guards.
+    /// Mint a fresh id: 21 epoch bits (boot nanos + pid, mixed) over a
+    /// 32-bit process-local counter.  Unique within a process for 2^32
+    /// mints; across restarts two incarnations collide only when their
+    /// mixed epochs agree in all 21 bits (~1 in 2M per restart, and
+    /// only if the counter ranges also overlap) — vanishingly unlikely
+    /// for the crash-replay window this guards, though not impossible.
     pub fn mint() -> TraceId {
         let counter =
             NEXT_TRACE.fetch_add(1, Ordering::Relaxed) & ((1 << COUNTER_BITS) - 1);

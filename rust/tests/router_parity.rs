@@ -345,7 +345,6 @@ fn per_class_latency_stays_inside_slo_budget() {
         svc.generate(task, n, solver, 2.0, false).unwrap();
     }
     let reg = Arc::clone(svc.registry());
-    svc.shutdown();
 
     // the default budgets (30 s p99): every class inside, nothing fires
     let slo = SloEngine::new(SloConfig::default(), Arc::clone(&reg));
@@ -361,13 +360,24 @@ fn per_class_latency_stays_inside_slo_budget() {
     }
     assert!(!alerts.any_firing(), "{:?}", alerts.firing());
 
-    // a 1 ns budget over the same counters: every class breaches and
-    // its slo:<backend>:<class> rule latches
+    // a 1 ns budget with test-scale windows, watching a replay of the
+    // scenario: the burn only counts traffic the engine observed inside
+    // its windows (a just-born engine scales pre-boot history to
+    // nothing), so the baseline tick comes first, then the breaching
+    // traffic, then a tick after the slow window is fully covered —
+    // every class breaches and its slo:<backend>:<class> rule latches
     let tight = SloEngine::new(
         SloConfig { p99_ms: [1e-6; 4], target_frac: 0.9,
+                    fast_window_ms: 50, slow_window_ms: 200,
                     burn_threshold: 1.0, ..SloConfig::default() },
         reg);
     let tight_alerts = AlertEngine::new();
+    tight.tick(&tight_alerts); // baseline reading before the breach
+    for (task, solver, n) in scenario(2) {
+        svc.generate(task, n, solver, 2.0, false).unwrap();
+    }
+    svc.shutdown();
+    std::thread::sleep(std::time::Duration::from_millis(220));
     let breached = tight.tick(&tight_alerts);
     for st in &breached {
         assert!(st.bad > 0 && st.bad <= st.total, "{st:?}");
